@@ -1,0 +1,34 @@
+//! Collective-operation survey (the paper's Fig 6/7 scenarios): fcollect
+//! and broadcast across work-group sizes and PE counts, with the
+//! host-initiated copy-engine baseline.
+//!
+//! Run: `cargo run --release --example collectives_sweep [npes]`
+
+use rishmem::bench::figures::{fig6, fig7a, fig7b};
+
+fn main() -> anyhow::Result<()> {
+    let npes: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(12);
+
+    let f6 = fig6(npes);
+    println!("{}", f6.render_ascii());
+    // Where does the biggest work-group stop beating the host engine?
+    if let Some(x) = f6.crossover("1024 work-items", "host copy-engine") {
+        println!(
+            "device store path loses to the host engine at {x} elements \
+             (cutover point, paper Fig 6)\n"
+        );
+    } else {
+        println!(
+            "device store path wins everywhere on this sweep — more PEs push \
+             the cutover right (paper: 12 PEs @ 4K elems still favor stores)\n"
+        );
+    }
+
+    println!("{}", fig7a().render_ascii());
+    println!("{}", fig7b().render_ascii());
+    Ok(())
+}

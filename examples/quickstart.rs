@@ -1,0 +1,63 @@
+//! Quickstart: a 12-PE simulated Aurora node doing the OpenSHMEM basics —
+//! symmetric allocation, put/get, atomics, barrier, reduction.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rishmem::{run_npes, Cmp, ReduceOp, TeamId};
+
+fn main() -> anyhow::Result<()> {
+    let npes = 12;
+    println!("== rishmem quickstart: {npes} PEs ==");
+
+    let reports = run_npes(npes, |ctx| {
+        let me = ctx.pe();
+        let n = ctx.npes();
+
+        // --- symmetric allocation (collective) --------------------------
+        let ring_buf = ctx.calloc::<u64>(16);
+        let counter = ctx.calloc::<u64>(1);
+        let flag = ctx.calloc::<u64>(1);
+
+        // --- one-sided put around a ring ---------------------------------
+        let data: Vec<u64> = (0..16).map(|i| (me * 100 + i) as u64).collect();
+        ctx.put(ring_buf, &data, (me + 1) % n);
+        ctx.barrier_all();
+        let left = (me + n - 1) % n;
+        let got = ctx.read_local_vec(ring_buf);
+        assert_eq!(got[7], (left * 100 + 7) as u64);
+
+        // --- atomics: everyone bumps PE 0's counter ----------------------
+        ctx.atomic_add(counter, 1u64, 0);
+        ctx.barrier_all();
+        if me == 0 {
+            assert_eq!(ctx.atomic_fetch(counter, 0), n as u64);
+        }
+
+        // --- point-to-point sync: PE 0 releases everyone ------------------
+        if me == 0 {
+            for pe in 0..n {
+                ctx.atomic_set(flag, 1u64, pe);
+            }
+        }
+        ctx.wait_until(flag, Cmp::Eq, 1u64);
+
+        // --- reduction: sum of squares across the team --------------------
+        let dest = ctx.calloc::<i64>(8);
+        let src = ctx.calloc::<i64>(8);
+        let mine: Vec<i64> = (0..8).map(|i| (me * me + i) as i64).collect();
+        ctx.write_local(src, &mine);
+        ctx.reduce(dest, src, 8, ReduceOp::Sum, TeamId::WORLD);
+        let sums = ctx.read_local_vec(dest);
+
+        // Report modeled device time spent by this PE.
+        (sums[0], ctx.clock.now_ns())
+    })?;
+
+    let expect: i64 = (0..npes as i64).map(|r| r * r).sum();
+    for (pe, (sum, ns)) in reports.iter().enumerate() {
+        assert_eq!(*sum, expect, "pe {pe} reduce mismatch");
+        println!("PE {pe:2}: Σ r² = {sum} | modeled device time {:.1} µs", ns / 1000.0);
+    }
+    println!("quickstart OK — all {npes} PEs agreed on Σ r² = {expect}");
+    Ok(())
+}

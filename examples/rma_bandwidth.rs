@@ -1,0 +1,21 @@
+//! RMA bandwidth survey (the paper's Fig 3 scenario as an application):
+//! sweeps put/get across the three intra-node hardware paths and prints
+//! where the tuned cutover lands.
+//!
+//! Run: `cargo run --release --example rma_bandwidth`
+
+use rishmem::bench::figures::{fig3a, fig3b};
+
+fn main() -> anyhow::Result<()> {
+    for fig in [fig3a(), fig3b()] {
+        println!("{}", fig.render_ascii());
+        if let Some(x) = fig.crossover("ishmem cross-GPU", "ze_peer cross-GPU") {
+            println!(
+                "tuned ishmem falls behind the raw engine at {} (reverse-offload latency), \
+                 as in the paper's Fig 3\n",
+                rishmem::util::fmt_bytes(x as usize)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! The `ze_peer` baseline as a standalone tool (paper §IV [3]): raw
+//! Level-Zero copy-engine bandwidth between device pairs, no SHMEM
+//! library in the path.
+//!
+//! Run: `cargo run --release --example ze_peer`
+
+use rishmem::bench::report::Figure;
+use rishmem::bench::size_sweep;
+use rishmem::bench::zepeer::{zepeer_read_series, zepeer_write_series};
+use rishmem::Topology;
+
+fn main() {
+    let topo = Topology::new(1, 2, 2);
+    let sizes = size_sweep();
+
+    let mut fig = Figure::new(
+        "ze_peer",
+        "ze_peer: copy-engine read/write bandwidth",
+        "msg size",
+        "GB/s",
+    );
+    for (name, target) in [("same-tile", 0usize), ("cross-tile", 1), ("cross-GPU", 2)] {
+        fig.series.push(zepeer_write_series(
+            &topo,
+            0,
+            target,
+            &sizes,
+            &format!("write {name}"),
+        ));
+        fig.series.push(zepeer_read_series(
+            &topo,
+            0,
+            target,
+            &sizes,
+            &format!("read {name}"),
+        ));
+    }
+    println!("{}", fig.render_ascii());
+}

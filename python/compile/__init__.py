@@ -1,0 +1,6 @@
+"""rishmem build-time compile package (L1 Pallas kernels + L2 JAX model).
+
+Nothing in this package is imported at runtime: ``aot.py`` lowers everything
+to HLO text once (``make artifacts``) and the Rust coordinator executes the
+artifacts through PJRT.
+"""

@@ -1,0 +1,142 @@
+"""AOT pipeline: lower every L1 kernel and L2 model entry point to HLO text.
+
+Usage (normally via ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--models tiny,small]
+
+Emits, into --out-dir:
+  reduce_<op>_<dtype>.hlo.txt      pairwise reduce chunk kernels (18 variants)
+  copy_f32.hlo.txt                 collaborative-copy chunk kernel
+  train_step_<cfg>.hlo.txt         (params..., tokens) -> (loss, grads...)
+  eval_loss_<cfg>.hlo.txt          (params..., tokens) -> (loss,)
+  init_params_<cfg>.hlo.txt        (seed,) -> (params...)
+  manifest.json                    the Rust runtime's index of all artifacts
+
+Python runs exactly once; afterwards the Rust binary is self-contained.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+# int64 reduce kernels need x64; model code pins float32/int32 explicitly so
+# this does not change the model ABI.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .hlo import lower_to_hlo_text  # noqa: E402
+from .kernels import reduce as reduce_k  # noqa: E402
+from .kernels.wg_copy import make_wg_copy  # noqa: E402
+from . import model as model_m  # noqa: E402
+
+
+def _write(out_dir: str, name: str, text: str, verbose: bool = True) -> str:
+    fname = f"{name}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    if verbose:
+        print(f"  wrote {fname} ({len(text)} chars)")
+    return fname
+
+
+def emit_reduce(out_dir: str, rows: int, suffix: str) -> dict:
+    entries = []
+    t0 = time.time()
+    for name, fn, args in reduce_k.artifact_entries(rows=rows, suffix=suffix):
+        fname = _write(out_dir, name, lower_to_hlo_text(fn, args), verbose=False)
+        op, dtype = name.split("_")[1], name.split("_")[2]
+        entries.append({"op": op, "dtype": dtype, "file": fname})
+    print(f"  {len(entries)} reduce kernels ({rows}x{reduce_k.CHUNK_COLS})"
+          f" in {time.time() - t0:.2f}s")
+    return {
+        "rows": rows,
+        "cols": reduce_k.CHUNK_COLS,
+        "entries": entries,
+    }
+
+
+def emit_copy(out_dir: str) -> dict:
+    rows, cols = reduce_k.CHUNK_ROWS, reduce_k.CHUNK_COLS
+    fn = make_wg_copy(rows, cols, "f32")
+    spec = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    fname = _write(out_dir, "copy_f32", lower_to_hlo_text(fn, (spec,)))
+    return {"rows": rows, "cols": cols, "dtype": "f32", "file": fname}
+
+
+def emit_model(out_dir: str, cfg_name: str) -> dict:
+    cfg = model_m.CONFIGS[cfg_name]
+    args = model_m.example_args(cfg)
+
+    t0 = time.time()
+    train_file = _write(out_dir, f"train_step_{cfg.name}",
+                        lower_to_hlo_text(model_m.make_train_step(cfg), args))
+    eval_file = _write(out_dir, f"eval_loss_{cfg.name}",
+                       lower_to_hlo_text(model_m.make_eval_loss(cfg), args))
+
+    seed_spec = (jax.ShapeDtypeStruct((), jnp.int32),)
+    init_file = _write(
+        out_dir, f"init_params_{cfg.name}",
+        lower_to_hlo_text(
+            lambda seed: tuple(model_m.init_params(seed, cfg)), seed_spec))
+    print(f"  model {cfg.name}: lowered in {time.time() - t0:.2f}s "
+          f"({model_m.param_count(cfg):,} params)")
+
+    return {
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "param_count": model_m.param_count(cfg),
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in model_m.param_spec(cfg)
+        ],
+        "train_step": train_file,
+        "eval_loss": eval_file,
+        "init": init_file,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small",
+                    help="comma list from {tiny,small,base100m}")
+    ns = ap.parse_args()
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    t0 = time.time()
+
+    print("[aot] reduce kernels")
+    manifest = {
+        "version": 1,
+        "reduce": emit_reduce(ns.out_dir, reduce_k.CHUNK_ROWS, ""),
+        # Wide variant: amortizes PJRT launch overhead for bulk folds
+        # (gradient allreduce) — see EXPERIMENTS.md §Perf.
+        "reduce_wide": emit_reduce(ns.out_dir, reduce_k.WIDE_ROWS, "_wide"),
+    }
+    print("[aot] copy kernel")
+    manifest["copy"] = emit_copy(ns.out_dir)
+
+    manifest["models"] = {}
+    for cfg_name in [c for c in ns.models.split(",") if c]:
+        if cfg_name not in model_m.CONFIGS:
+            print(f"[aot] unknown model config {cfg_name!r}", file=sys.stderr)
+            sys.exit(2)
+        print(f"[aot] model {cfg_name}")
+        manifest["models"][cfg_name] = emit_model(ns.out_dir, cfg_name)
+
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {ns.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

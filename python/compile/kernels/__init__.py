@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for rishmem.
+
+Every kernel here is authored with ``interpret=True`` so that the lowered HLO
+contains plain XLA ops executable by any PJRT backend (the Rust coordinator
+runs the CPU PJRT client; real-TPU Pallas lowering would emit Mosaic
+custom-calls the CPU plugin cannot execute — see DESIGN.md §Hardware-Adaptation).
+
+Kernels:
+  reduce     — elementwise pairwise combine (the compute lane of
+               ishmem_reduce / ishmemx_reduce_work_group)
+  wg_copy    — tiled collaborative copy (the work_group memcpy lanes)
+  fused_mlp  — matmul+bias+GELU fused block used by the L2 transformer
+"""
+
+from . import ref  # noqa: F401
+from .reduce import REDUCE_OPS, REDUCE_DTYPES, make_reduce  # noqa: F401
+from .wg_copy import make_wg_copy  # noqa: F401
+from .fused_mlp import fused_mlp  # noqa: F401

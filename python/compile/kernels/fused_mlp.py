@@ -1,0 +1,112 @@
+"""Pallas fused transformer-MLP kernel: ``gelu(x @ w1 + b1) @ w2 + b2``.
+
+This is the L2 model's compute hot-spot (the MLP is ~2/3 of transformer
+FLOPs).  On real TPU hardware this kernel would tile x into (128, d) MXU
+panels and keep the (d, 4d) weight panel resident in VMEM; here it is
+authored against the same BlockSpec structure but executed with
+``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls).
+
+Autodiff: ``pallas_call`` has no automatic VJP, so the kernel is wrapped in
+``jax.custom_vjp`` with a pure-jnp backward pass.  The forward runs the
+Pallas kernel; the backward is standard XLA.  Tests check both value and
+gradients against the jnp oracle.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import fused_mlp_ref, gelu_tanh_ref
+
+#: Row-tile granularity of the forward grid (token dimension).
+TILE_M = 8
+
+
+def _gelu(x):
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = _gelu(jnp.dot(x, w1_ref[...]) + b1_ref[...])
+    o_ref[...] = jnp.dot(h, w2_ref[...]) + b2_ref[...]
+
+
+@functools.lru_cache(maxsize=None)
+def _make_call(m: int, d: int, h: int, tiled: bool = False):
+    """Pallas call for x:(m,d) w1:(d,h) b1:(1,h) w2:(h,d) b2:(1,d).
+
+    ``tiled=False`` by default: under ``interpret=True`` the gridded
+    BlockSpec schedule lowers to a while-loop of dynamic-update-slices
+    that dominates CPU runtime (EXPERIMENTS.md §Perf iteration 2/4); the
+    whole-block variant fuses. ``tiled=True`` keeps the TPU-shaped
+    (token-tile × resident-weights) schedule and is value-tested too.
+    """
+    out_shape = jax.ShapeDtypeStruct((m, d), jnp.float32)
+    if tiled and m % TILE_M == 0 and m > TILE_M:
+        grid = (m // TILE_M,)
+        return pl.pallas_call(
+            _mlp_kernel,
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TILE_M, d), lambda i: (i, 0)),   # x tile
+                pl.BlockSpec((d, h), lambda i: (0, 0)),        # w1 resident
+                pl.BlockSpec((1, h), lambda i: (0, 0)),        # b1
+                pl.BlockSpec((h, d), lambda i: (0, 0)),        # w2 resident
+                pl.BlockSpec((1, d), lambda i: (0, 0)),        # b2
+            ],
+            out_specs=pl.BlockSpec((TILE_M, d), lambda i: (i, 0)),
+            interpret=True,
+        )
+    return pl.pallas_call(_mlp_kernel, out_shape=out_shape, interpret=True)
+
+
+def _fwd_impl(x, w1, b1, w2, b2):
+    m, d = x.shape
+    h = w1.shape[1]
+    call = _make_call(m, d, h)
+    # Pin f32: the AOT ABI is float32 end-to-end, and a stray f64 operand
+    # (x64 mode is on for the int64 reduce kernels) must not leak in.
+    x, w1, b1, w2, b2 = (jnp.asarray(v, jnp.float32)
+                         for v in (x, w1, b1, w2, b2))
+    return call(x, w1, b1.reshape(1, h), w2, b2.reshape(1, d))
+
+
+@jax.custom_vjp
+def fused_mlp(x, w1, b1, w2, b2):
+    """Fused MLP block; forward = Pallas kernel, backward = jnp VJP."""
+    return _fwd_impl(x, w1, b1, w2, b2)
+
+
+def _fused_mlp_fwd(x, w1, b1, w2, b2):
+    out = _fwd_impl(x, w1, b1, w2, b2)
+    return out, (x, w1, b1, w2, b2)
+
+
+def _fused_mlp_bwd(res, g):
+    x, w1, b1, w2, b2 = res
+    # Recompute the (cheap) activations; standard rematerialized MLP VJP.
+    z = x @ w1 + b1
+    a = gelu_tanh_ref(z)
+    # dGELU/dz for the tanh approximation.
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=z.dtype))
+    t = jnp.tanh(c * (z + 0.044715 * z**3))
+    dgelu = 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * z**2)
+    da = g @ w2.T
+    dz = da * dgelu
+    return (
+        dz @ w1.T,            # dx
+        x.T @ dz,             # dw1
+        dz.sum(axis=0),       # db1
+        a.T @ g,              # dw2
+        g.sum(axis=0),        # db2
+    )
+
+
+fused_mlp.defvjp(_fused_mlp_fwd, _fused_mlp_bwd)
+
+__all__ = ["fused_mlp", "fused_mlp_ref", "TILE_M"]

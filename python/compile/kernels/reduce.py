@@ -1,0 +1,123 @@
+"""Pallas reduction kernel — the compute lane of ``ishmem_reduce``.
+
+Paper §III-G.2 ("Reduction"): Intel SHMEM splits a reduction *by address
+across threads*, each thread issuing vector loads (one local, one remote),
+vector binary ops, and vector stores.  On the TPU-shaped stack the same
+insight maps to a Pallas grid over (8, 128)-aligned tiles: each grid step is
+the analogue of one work-item's vector lane, BlockSpec expresses the
+HBM↔VMEM schedule that SYCL expressed with work-item indexing.
+
+The kernel is a *pairwise* combine ``out = op(a, b)`` over a fixed chunk
+shape; the Rust coordinator folds n-way reductions by chaining chunks
+(acc = op(acc, contribution_pe)) exactly like the paper's per-PE duplicated
+compute.  Fixed shape is an AOT requirement (HLO is static); the runtime
+pads the tail chunk.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import REDUCE_REF
+
+#: Chunk layout shared with the Rust runtime (see artifacts/manifest.json):
+#: 64 x 128 = 8192 elements per kernel invocation, (8,128)-tileable.
+CHUNK_ROWS = 64
+CHUNK_COLS = 128
+CHUNK_ELEMS = CHUNK_ROWS * CHUNK_COLS
+
+#: Wide variant for bulk folds (gradient allreduce): amortizes the PJRT
+#: launch overhead over 8x the elements (§Perf iteration 1 in
+#: EXPERIMENTS.md — the per-chunk launch cost dominated at 64x128).
+WIDE_ROWS = 512
+WIDE_ELEMS = WIDE_ROWS * CHUNK_COLS
+
+#: Tile granularity — the VPU-native (sublane, lane) tile.
+TILE_ROWS = 8
+
+REDUCE_OPS = ("sum", "prod", "min", "max", "and", "or", "xor")
+#: dtype name -> (jnp dtype, supports bitwise)
+REDUCE_DTYPES = {
+    "f32": (jnp.float32, False),
+    "i32": (jnp.int32, True),
+    "i64": (jnp.int64, True),
+}
+BITWISE_OPS = ("and", "or", "xor")
+
+
+def op_supported(op: str, dtype_name: str) -> bool:
+    """OpenSHMEM defines bitwise reductions only for fixed-point types."""
+    if op in BITWISE_OPS:
+        return REDUCE_DTYPES[dtype_name][1]
+    return True
+
+
+def _combine_kernel(a_ref, b_ref, o_ref, *, op: str):
+    o_ref[...] = REDUCE_REF[op](a_ref[...], b_ref[...])
+
+
+@functools.partial(
+    functools.lru_cache(maxsize=None),
+)
+def make_reduce(op: str, dtype_name: str, rows: int = CHUNK_ROWS,
+                cols: int = CHUNK_COLS, tiled: bool = True):
+    """Build ``f(a, b) -> op(a, b)`` over a (rows, cols) chunk.
+
+    ``tiled=True`` runs a grid over (TILE_ROWS, cols) tiles — the
+    work-item-lane schedule.  ``tiled=False`` is the whole-block variant used
+    by tests for odd shapes.
+    """
+    if op not in REDUCE_OPS:
+        raise ValueError(f"unknown reduce op {op!r}")
+    dtype, _ = REDUCE_DTYPES[dtype_name]
+    if not op_supported(op, dtype_name):
+        raise ValueError(f"op {op!r} undefined for dtype {dtype_name!r}")
+
+    out_shape = jax.ShapeDtypeStruct((rows, cols), dtype)
+    kernel = functools.partial(_combine_kernel, op=op)
+
+    if tiled and rows % TILE_ROWS == 0:
+        grid = (rows // TILE_ROWS,)
+        spec = pl.BlockSpec((TILE_ROWS, cols), lambda i: (i, 0))
+        call = pl.pallas_call(
+            kernel,
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=spec,
+            interpret=True,
+        )
+    else:
+        call = pl.pallas_call(kernel, out_shape=out_shape, interpret=True)
+
+    def reduce_fn(a, b):
+        a = jnp.asarray(a, dtype)
+        b = jnp.asarray(b, dtype)
+        return call(a, b)
+
+    reduce_fn.__name__ = f"reduce_{op}_{dtype_name}_{rows}x{cols}"
+    return reduce_fn
+
+
+def artifact_entries(rows: int = CHUNK_ROWS, suffix: str = ""):
+    """(name, fn, example_args) for every AOT reduce artifact.
+
+    NOTE (§Perf iteration 2, EXPERIMENTS.md): the AOT artifacts use the
+    *whole-block* kernel (``tiled=False``). Under ``interpret=True`` the
+    gridded BlockSpec schedule lowers to a while-loop of
+    dynamic-update-slices, which costs O(grid × buffer) on the CPU backend;
+    the whole-block variant fuses into one elementwise op. On a real TPU
+    the tiled variant is the one to compile (VMEM-sized blocks) — both are
+    tested against the oracle.
+    """
+    out = []
+    for op in REDUCE_OPS:
+        for dtype_name, (dtype, _) in REDUCE_DTYPES.items():
+            if not op_supported(op, dtype_name):
+                continue
+            fn = make_reduce(op, dtype_name, rows=rows, tiled=False)
+            spec = jax.ShapeDtypeStruct((rows, CHUNK_COLS), dtype)
+            out.append((f"reduce_{op}_{dtype_name}{suffix}", fn, (spec, spec)))
+    return out

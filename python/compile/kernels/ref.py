@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+These are deliberately written with nothing but ``jax.numpy`` so a bug in the
+Pallas authoring (BlockSpec indexing, tiling, accumulation) cannot be
+replicated in the oracle.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- reduce ----
+
+#: OpenSHMEM 1.5 reduction operators (§9.9.4 of the spec; paper §III-G.2).
+#: Bitwise ops are only defined for fixed-point types.
+REDUCE_REF = {
+    "sum": lambda a, b: a + b,
+    "prod": lambda a, b: a * b,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "xor": lambda a, b: a ^ b,
+}
+
+
+def reduce_ref(op: str, a, b):
+    """Pairwise combine oracle: out[i] = op(a[i], b[i])."""
+    return REDUCE_REF[op](a, b)
+
+
+def reduce_tree_ref(op: str, bufs):
+    """Full n-way reduction oracle (what ishmem_reduce computes across PEs)."""
+    acc = bufs[0]
+    for b in bufs[1:]:
+        acc = REDUCE_REF[op](acc, b)
+    return acc
+
+
+# --------------------------------------------------------------- wg_copy ----
+
+def copy_ref(src):
+    """Collaborative copy oracle — identity."""
+    return jnp.asarray(src)
+
+
+# ------------------------------------------------------------- fused_mlp ----
+
+def gelu_tanh_ref(x):
+    """tanh-approximated GELU (what the kernel implements, exactly)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def fused_mlp_ref(x, w1, b1, w2, b2):
+    """Transformer MLP block oracle: gelu(x @ w1 + b1) @ w2 + b2."""
+    h = gelu_tanh_ref(x @ w1 + b1)
+    return h @ w2 + b2

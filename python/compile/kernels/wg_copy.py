@@ -1,0 +1,54 @@
+"""Pallas collaborative-copy kernel — the ``work_group`` memcpy lanes.
+
+Paper §III-F/§III-G.1: the ``ishmemx_put_work_group`` intra-node path is a
+multi-threaded vectorized memcpy — every work-item of the SYCL work-group
+copies a chunk of the source across the unified address space.  TPU-shaped
+adaptation (DESIGN.md §Hardware-Adaptation): the work-items become a Pallas
+grid; each grid step moves one (tile_rows, cols) tile through VMEM, which is
+the BlockSpec rendering of the HBM↔VMEM schedule the paper wrote with
+work-item indexing.
+
+The AOT artifact (``copy_f32``) is used by the Rust runtime for the
+"XLA-executed copy" ablation (EXPERIMENTS.md §Ablations); the production put
+path is a native memcpy + cost model, because shipping bytes through a PJRT
+roundtrip only adds overhead — exactly the kind of cutover decision the
+paper's §III-B describes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+@functools.lru_cache(maxsize=None)
+def make_wg_copy(rows: int, cols: int, dtype_name: str = "f32",
+                 tile_rows: int = 8):
+    """Build a tiled identity-copy ``f(src) -> src`` over (rows, cols)."""
+    dtype = {"f32": jnp.float32, "i32": jnp.int32, "i64": jnp.int64}[dtype_name]
+    out_shape = jax.ShapeDtypeStruct((rows, cols), dtype)
+
+    if rows % tile_rows == 0:
+        grid = (rows // tile_rows,)
+        spec = pl.BlockSpec((tile_rows, cols), lambda i: (i, 0))
+        call = pl.pallas_call(
+            _copy_kernel,
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[spec],
+            out_specs=spec,
+            interpret=True,
+        )
+    else:
+        call = pl.pallas_call(_copy_kernel, out_shape=out_shape, interpret=True)
+
+    def copy_fn(src):
+        return call(jnp.asarray(src, dtype))
+
+    copy_fn.__name__ = f"wg_copy_{dtype_name}_{rows}x{cols}"
+    return copy_fn

@@ -1,0 +1,211 @@
+"""Layer-2: JAX transformer LM (fwd/bwd) for the rishmem dist-train example.
+
+The paper (Intel SHMEM) is a communication library; the system-prompt e2e
+requirement is a small distributed training run that pushes gradients through
+the library.  This module defines the compute side: a decoder-only
+transformer whose MLP blocks call the L1 Pallas ``fused_mlp`` kernel, plus a
+``train_step`` that returns (loss, grads...).  The Rust coordinator owns the
+data-parallel loop: it executes ``train_step`` via PJRT on every PE, all-
+reduces the gradient arrays with ``ishmem_reduce`` (which itself runs the AOT
+Pallas reduce kernel), and applies SGD.
+
+Everything here is AOT-lowered once by ``aot.py``; Python never runs on the
+training request path.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import fused_mlp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq_len: int
+    batch: int
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+#: tiny — fast pytest config; small — the e2e example config;
+#: base100m — the paper-scale config (AOT-able, too slow to *train* on the
+#: 1-core CI substrate; see EXPERIMENTS.md E12 for the measured run).
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=64, d_model=32, n_heads=2, n_layers=1,
+                        seq_len=16, batch=2),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_heads=4,
+                         n_layers=2, seq_len=64, batch=4),
+    "base100m": ModelConfig("base100m", vocab=32768, d_model=768, n_heads=12,
+                            n_layers=12, seq_len=512, batch=8),
+}
+
+
+# ------------------------------------------------------------- parameters --
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical flat (name, shape) list — the AOT calling convention.
+
+    The Rust runtime reproduces this ordering from artifacts/manifest.json;
+    any change here is a breaking ABI change for the artifacts.
+    """
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        spec += [
+            (p + "ln1_scale", (cfg.d_model,)),
+            (p + "ln1_bias", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_scale", (cfg.d_model,)),
+            (p + "ln2_bias", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "b1", (cfg.d_ff,)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+            (p + "b2", (cfg.d_model,)),
+        ]
+    spec += [
+        ("lnf_scale", (cfg.d_model,)),
+        ("lnf_bias", (cfg.d_model,)),
+    ]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    n = 0
+    for _, shape in param_spec(cfg):
+        c = 1
+        for s in shape:
+            c *= s
+        n += c
+    return n
+
+
+def init_params(seed, cfg: ModelConfig) -> List[jnp.ndarray]:
+    """Deterministic init from an int32 seed scalar (AOT-lowered as-is)."""
+    key = jax.random.PRNGKey(seed)
+    spec = param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    params = []
+    for k, (name, shape) in zip(keys, spec):
+        base = name.split(".")[-1]
+        if base.startswith("ln") or base in ("b1", "b2"):
+            if "scale" in base:
+                params.append(jnp.ones(shape, jnp.float32))
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 0.02 if "emb" in base else (1.0 / jnp.sqrt(fan_in))
+            params.append(std * jax.random.normal(k, shape, jnp.float32))
+    return params
+
+
+def _unflatten(params: List[jnp.ndarray], cfg: ModelConfig):
+    names = [n for n, _ in param_spec(cfg)]
+    return dict(zip(names, params))
+
+
+# ----------------------------------------------------------------- layers --
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(x, wq, wk, wv, wo, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(w):
+        return (x @ w).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(wq), split(wk), split(wv)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ wo
+
+
+def _mlp(x, w1, b1, w2, b2):
+    """MLP block — flattens tokens and calls the Pallas fused kernel."""
+    b, s, d = x.shape
+    out = fused_mlp(x.reshape(b * s, d), w1, b1, w2, b2)
+    return out.reshape(b, s, d)
+
+
+def forward(params: List[jnp.ndarray], tokens, cfg: ModelConfig):
+    """tokens: (batch, seq) int32 -> logits (batch, seq, vocab)."""
+    p = _unflatten(params, cfg)
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :, :]
+    for l in range(cfg.n_layers):
+        q = f"layer{l}."
+        a = _layer_norm(x, p[q + "ln1_scale"], p[q + "ln1_bias"])
+        x = x + _attention(a, p[q + "wq"], p[q + "wk"], p[q + "wv"],
+                           p[q + "wo"], cfg)
+        m = _layer_norm(x, p[q + "ln2_scale"], p[q + "ln2_bias"])
+        x = x + _mlp(m, p[q + "w1"], p[q + "b1"], p[q + "w2"], p[q + "b2"])
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return x @ p["tok_emb"].T  # tied output head
+
+
+def loss_fn(params, tokens, cfg: ModelConfig):
+    """Next-token cross entropy over the shifted sequence."""
+    logits = forward(params, tokens, cfg)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+def make_train_step(cfg: ModelConfig):
+    """(params..., tokens) -> (loss, grads...) — the AOT entry point."""
+
+    def train_step(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(ps, tokens, cfg))(params)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """(params..., tokens) -> (loss,) — AOT'd for held-out eval."""
+
+    def eval_loss(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        return (loss_fn(params, tokens, cfg),)
+
+    return eval_loss
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs matching the train_step calling convention."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_spec(cfg)]
+    specs.append(jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32))
+    return tuple(specs)

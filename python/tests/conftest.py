@@ -1,0 +1,11 @@
+import os
+import sys
+
+import jax
+
+# Kernel tests sweep int64 — enable x64 before anything traces.
+jax.config.update("jax_enable_x64", True)
+
+# Tests may be launched from the repo root or from python/; make the
+# `compile` package importable either way.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,65 @@
+"""AOT pipeline: artifacts lower, parse as HLO text, manifest is consistent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as m
+from compile.hlo import lower_to_hlo_text
+from compile.kernels import reduce as rk
+from compile.kernels.wg_copy import make_wg_copy
+
+
+def test_reduce_artifact_lowers_to_hlo(tmp_path):
+    fn = rk.make_reduce("sum", "f32")
+    spec = jax.ShapeDtypeStruct((rk.CHUNK_ROWS, rk.CHUNK_COLS), jnp.float32)
+    text = lower_to_hlo_text(fn, (spec, spec))
+    assert text.startswith("HloModule")
+    # interpret=True must not leave Mosaic custom-calls behind.
+    assert "custom-call" not in text or "Mosaic" not in text
+
+
+def test_copy_artifact_lowers_to_hlo():
+    fn = make_wg_copy(rk.CHUNK_ROWS, rk.CHUNK_COLS, "f32")
+    spec = jax.ShapeDtypeStruct((rk.CHUNK_ROWS, rk.CHUNK_COLS), jnp.float32)
+    text = lower_to_hlo_text(fn, (spec,))
+    assert text.startswith("HloModule")
+
+
+def test_model_artifacts_lower(tmp_path):
+    cfg = m.CONFIGS["tiny"]
+    entry = aot.emit_model(str(tmp_path), "tiny")
+    for key in ("train_step", "eval_loss", "init"):
+        path = tmp_path / entry[key]
+        assert path.exists()
+        head = path.read_text()[:200]
+        assert head.startswith("HloModule"), head
+    assert entry["param_count"] == m.param_count(cfg)
+    assert len(entry["params"]) == len(m.param_spec(cfg))
+
+
+def test_full_emit_manifest_consistent(tmp_path, monkeypatch):
+    """Run the real CLI entry end-to-end for the tiny model."""
+    monkeypatch.setattr(
+        "sys.argv",
+        ["aot", "--out-dir", str(tmp_path), "--models", "tiny"])
+    aot.main()
+
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    red = manifest["reduce"]
+    assert red["rows"] * red["cols"] == rk.CHUNK_ELEMS
+    # 4 ops x 3 dtypes + 3 bitwise x 2 int dtypes = 18 artifacts
+    assert len(red["entries"]) == 18
+    for e in red["entries"]:
+        assert (tmp_path / e["file"]).exists()
+        assert rk.op_supported(e["op"], e["dtype"])
+    assert (tmp_path / manifest["copy"]["file"]).exists()
+    tiny = manifest["models"]["tiny"]
+    assert (tmp_path / tiny["train_step"]).exists()
+    assert [p["name"] for p in tiny["params"]] == \
+        [n for n, _ in m.param_spec(m.CONFIGS["tiny"])]

@@ -1,0 +1,124 @@
+"""L1 reduce kernel vs pure-jnp oracle (hypothesis sweeps shapes/dtypes/ops)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import reduce as rk
+from compile.kernels.ref import reduce_ref, reduce_tree_ref
+
+ALL_CASES = [
+    (op, dt)
+    for op in rk.REDUCE_OPS
+    for dt in rk.REDUCE_DTYPES
+    if rk.op_supported(op, dt)
+]
+
+
+def _rand(shape, dtype_name, rng):
+    if dtype_name == "f32":
+        # prod overflows explode with wide ranges; keep values near 1.
+        return (0.5 + rng.random(shape)).astype(np.float32)
+    dt = np.int32 if dtype_name == "i32" else np.int64
+    return rng.integers(-100, 100, size=shape).astype(dt)
+
+
+@pytest.mark.parametrize("op,dtype_name", ALL_CASES)
+def test_chunk_matches_ref(op, dtype_name):
+    """Default AOT chunk shape, tiled grid path."""
+    rng = np.random.default_rng(42)
+    a = _rand((rk.CHUNK_ROWS, rk.CHUNK_COLS), dtype_name, rng)
+    b = _rand((rk.CHUNK_ROWS, rk.CHUNK_COLS), dtype_name, rng)
+    fn = rk.make_reduce(op, dtype_name)
+    got = np.asarray(fn(a, b))
+    want = np.asarray(reduce_ref(op, jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    case=st.sampled_from(ALL_CASES),
+    rows_tiles=st.integers(min_value=1, max_value=8),
+    cols=st.sampled_from([128, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tiled_shapes_property(case, rows_tiles, cols, seed):
+    """Property: tiled kernel == oracle for every (8k, 128m) chunk shape."""
+    op, dtype_name = case
+    rows = rk.TILE_ROWS * rows_tiles
+    rng = np.random.default_rng(seed)
+    a = _rand((rows, cols), dtype_name, rng)
+    b = _rand((rows, cols), dtype_name, rng)
+    fn = rk.make_reduce(op, dtype_name, rows=rows, cols=cols)
+    got = np.asarray(fn(a, b))
+    want = np.asarray(reduce_ref(op, jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    case=st.sampled_from(ALL_CASES),
+    rows=st.integers(min_value=1, max_value=23),
+    cols=st.integers(min_value=1, max_value=50),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_whole_block_odd_shapes_property(case, rows, cols, seed):
+    """Property: untiled fallback handles arbitrary (non-tile) shapes."""
+    op, dtype_name = case
+    rng = np.random.default_rng(seed)
+    a = _rand((rows, cols), dtype_name, rng)
+    b = _rand((rows, cols), dtype_name, rng)
+    fn = rk.make_reduce(op, dtype_name, rows=rows, cols=cols, tiled=False)
+    got = np.asarray(fn(a, b))
+    want = np.asarray(reduce_ref(op, jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", ["sum", "min", "max", "xor"])
+def test_nway_fold_matches_tree_ref(op):
+    """Chaining the pairwise kernel reproduces the n-way reduction the Rust
+    coordinator performs across PEs (paper §III-G.2)."""
+    dtype_name = "i64" if op == "xor" else "f32"
+    rng = np.random.default_rng(7)
+    bufs = [_rand((rk.CHUNK_ROWS, rk.CHUNK_COLS), dtype_name, rng)
+            for _ in range(6)]
+    fn = rk.make_reduce(op, dtype_name)
+    acc = bufs[0]
+    for b in bufs[1:]:
+        acc = np.asarray(fn(acc, b))
+    want = np.asarray(reduce_tree_ref(op, [jnp.asarray(b) for b in bufs]))
+    np.testing.assert_allclose(acc, want, rtol=1e-5)
+
+
+def test_bitwise_rejected_for_float():
+    with pytest.raises(ValueError):
+        rk.make_reduce("xor", "f32")
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(ValueError):
+        rk.make_reduce("avg", "f32")
+
+
+@pytest.mark.parametrize("op,dtype_name", ALL_CASES)
+def test_identity_values(op, dtype_name):
+    """op(x, identity) == x — the identity element the Rust runtime uses to
+    pad tail chunks must be absorbed exactly."""
+    ident = {
+        "sum": 0, "prod": 1, "min": None, "max": None,
+        "and": -1, "or": 0, "xor": 0,
+    }[op]
+    if ident is None:
+        # min/max identities are dtype extremes.
+        if dtype_name == "f32":
+            ident = np.inf if op == "min" else -np.inf
+        else:
+            info = np.iinfo(np.int32 if dtype_name == "i32" else np.int64)
+            ident = info.max if op == "min" else info.min
+    rng = np.random.default_rng(3)
+    a = _rand((rk.CHUNK_ROWS, rk.CHUNK_COLS), dtype_name, rng)
+    b = np.full_like(a, ident)
+    fn = rk.make_reduce(op, dtype_name)
+    np.testing.assert_allclose(np.asarray(fn(a, b)), a, rtol=1e-6)

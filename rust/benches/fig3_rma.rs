@@ -1,0 +1,44 @@
+//! Bench E1/E2: regenerates paper Fig 3 (put/get bandwidth, three
+//! hardware paths, vs ze_peer) and asserts the paper-shape invariants.
+//! `cargo bench --bench fig3_rma`
+
+use rishmem::bench::figures::{fig3a, fig3b};
+
+fn main() {
+    for fig in [fig3a(), fig3b()] {
+        println!("{}", fig.render_ascii());
+
+        // Shape invariants from the paper:
+        // 1. ishmem beats ze_peer for small messages (≤2KB) on every path.
+        for path in ["same-tile", "cross-tile", "cross-GPU"] {
+            let ish = fig
+                .series
+                .iter()
+                .find(|s| s.name == format!("ishmem {path}"))
+                .unwrap();
+            let zep = fig
+                .series
+                .iter()
+                .find(|s| s.name == format!("ze_peer {path}"))
+                .unwrap();
+            for &(x, y) in ish.points.iter().filter(|(x, _)| *x <= 2048.0) {
+                let z = zep.y_at(x).unwrap();
+                assert!(y > z, "{}: ishmem {path} {y} !> ze_peer {z} at {x}B", fig.id);
+            }
+            // 2. converge within 15% at 16MB.
+            let (xl, yl) = *ish.points.last().unwrap();
+            let zl = zep.y_at(xl).unwrap();
+            assert!(
+                (yl - zl).abs() / zl < 0.15,
+                "{}: no convergence at {xl}B: {yl} vs {zl}",
+                fig.id
+            );
+        }
+        // 3. locality ordering at large sizes.
+        let big = 1_048_576.0;
+        let y = |n: &str| fig.series.iter().find(|s| s.name == n).unwrap().y_at(big).unwrap();
+        assert!(y("ishmem same-tile") > y("ishmem cross-tile"));
+        assert!(y("ishmem cross-tile") > y("ishmem cross-GPU"));
+        println!("[{}] paper-shape invariants hold\n", fig.id);
+    }
+}

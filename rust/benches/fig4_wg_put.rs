@@ -1,0 +1,44 @@
+//! Bench E3/E4: paper Fig 4 — work_group Put on the store path (a) and
+//! the copy-engine path (b). `cargo bench --bench fig4_wg_put`
+
+use rishmem::bench::figures::{fig4a, fig4b};
+
+fn main() {
+    let a = fig4a();
+    println!("{}", a.render_ascii());
+    // Fig 4(a) shape: more work-items ⇒ more bandwidth, at every size ≥1KB.
+    let names = ["1 work-items", "16 work-items", "128 work-items", "1024 work-items"];
+    for w in names.windows(2) {
+        let lo = a.series.iter().find(|s| s.name == w[0]).unwrap();
+        let hi = a.series.iter().find(|s| s.name == w[1]).unwrap();
+        for &(x, y_lo) in lo.points.iter().filter(|(x, _)| *x >= 1024.0) {
+            let y_hi = hi.y_at(x).unwrap();
+            assert!(
+                y_hi >= y_lo * 0.999,
+                "fig4a: {} ({y_hi}) < {} ({y_lo}) at {x}B",
+                w[1],
+                w[0]
+            );
+        }
+    }
+    println!("[fig4a] work-group scaling invariant holds\n");
+
+    let b = fig4b();
+    println!("{}", b.render_ascii());
+    // Fig 4(b) shape: engine path is work-group invariant — all series
+    // identical (a single leader item posts the offload).
+    let base = &b.series[0];
+    for s in &b.series[1..] {
+        for &(x, y) in &base.points {
+            let y2 = s.y_at(x).unwrap();
+            assert!(
+                (y - y2).abs() / y.max(1e-9) < 1e-6,
+                "fig4b: series diverge at {x}B: {y} vs {y2}"
+            );
+        }
+    }
+    println!(
+        "[fig4b] engine path is work-group invariant \
+         (paper: 'same performance for different number of work-items')"
+    );
+}

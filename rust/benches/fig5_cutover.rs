@@ -1,0 +1,42 @@
+//! Bench E5/E6: paper Fig 5 — work_group Put with the tuned cutover.
+//! The tuned curve must track the upper envelope of Fig 4's two paths.
+//! `cargo bench --bench fig5_cutover`
+
+use rishmem::bench::figures::{fig4a, fig4b, fig5a, fig5b};
+
+fn main() {
+    let tuned = fig5a();
+    println!("{}", tuned.render_ascii());
+    let lat = fig5b();
+    println!("{}", lat.render_ascii());
+
+    let store = fig4a();
+    let engine = fig4b();
+
+    // Envelope invariant (paper: "with cutover value set,
+    // ishmemx_put_work_group obtains better performance for small to
+    // medium message sizes by using direct store … for larger message
+    // sizes, after the cutover, it matches the hardware copy engines").
+    for name in ["1 work-items", "128 work-items", "1024 work-items"] {
+        let t = tuned.series.iter().find(|s| s.name == name).unwrap();
+        let s = store.series.iter().find(|s| s.name == name).unwrap();
+        let e = engine.series.iter().find(|s| s.name == name).unwrap();
+        for &(x, y) in &t.points {
+            let best = s.y_at(x).unwrap().max(e.y_at(x).unwrap());
+            assert!(
+                y >= best * 0.94,
+                "{name}: tuned {y} far below envelope {best} at {x}B"
+            );
+        }
+        // And the crossover must move right as the group grows.
+    }
+    // Latency view: monotone in size for a fixed group.
+    for s in &lat.series {
+        let mut prev = 0.0;
+        for &(x, y) in &s.points {
+            assert!(y >= prev * 0.999, "{}: latency dipped at {x}B", s.name);
+            prev = y;
+        }
+    }
+    println!("[fig5] tuned cutover tracks the upper envelope of store/engine paths");
+}

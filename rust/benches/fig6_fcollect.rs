@@ -1,0 +1,42 @@
+//! Bench E7: paper Fig 6 — fcollect_work_group (device store path) vs the
+//! host-initiated copy engine, for 4/8/12 PEs.
+//! `cargo bench --bench fig6_fcollect`
+
+use rishmem::bench::figures::fig6;
+
+fn main() {
+    let mut crossovers = Vec::new();
+    for npes in [4usize, 8, 12] {
+        let f = fig6(npes);
+        println!("{}", f.render_ascii());
+        // Small elements counts: device stores beat the host engine for
+        // every work-group size (paper: "the kernel-initiated direct store
+        // … performs better … for small to medium number of elements").
+        for s in f.series.iter().filter(|s| s.name.contains("work-items")) {
+            let host = f.series.iter().find(|s| s.name == "host copy-engine").unwrap();
+            for &(x, y) in s.points.iter().filter(|(x, _)| *x <= 256.0) {
+                let h = host.y_at(x).unwrap();
+                assert!(
+                    y > h,
+                    "fig6-{npes}pe: {} {y} !> host {h} at {x} elems",
+                    s.name
+                );
+            }
+        }
+        // Record the 256-work-item crossover (paper compares 4PE vs 12PE).
+        let x = f.crossover("256 work-items", "host copy-engine");
+        crossovers.push((npes, x));
+        println!();
+    }
+    println!("cutover points (256 work-items): {crossovers:?}");
+    // Paper Fig 6: with 4 PEs the crossover is ~4K elems; with 12 PEs, 4K
+    // elems still favors the store path — i.e. the crossover moves right
+    // (or disappears) as npes grows.
+    let x4 = crossovers[0].1.unwrap_or(f64::INFINITY);
+    let x12 = crossovers[2].1.unwrap_or(f64::INFINITY);
+    assert!(
+        x12 >= x4,
+        "crossover should move right with more PEs: 4PE={x4} 12PE={x12}"
+    );
+    println!("[fig6] cutover moves right with PE count, as in the paper");
+}

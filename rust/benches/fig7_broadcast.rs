@@ -1,0 +1,55 @@
+//! Bench E8/E9: paper Fig 7 — tuned fcollect at 12 PEs (a) and broadcast
+//! scaling with PE count at 128 work-items (b).
+//! `cargo bench --bench fig7_broadcast`
+
+use rishmem::bench::figures::{fig7a, fig7b};
+
+fn main() {
+    let a = fig7a();
+    println!("{}", a.render_ascii());
+    // Tuned fcollect must never fall (much) below the host engine — the
+    // adaptive policy switches to it when stores lose (paper Fig 7a).
+    let host = a.series.iter().find(|s| s.name == "host copy-engine").unwrap();
+    for s in a.series.iter().filter(|s| s.name.contains("work-items")) {
+        for &(x, y) in &s.points {
+            let h = host.y_at(x).unwrap();
+            assert!(
+                y >= h * 0.90,
+                "fig7a: tuned {} {y} fell below host engine {h} at {x} elems",
+                s.name
+            );
+        }
+    }
+    println!("[fig7a] tuned cutover keeps fcollect at/above the host-engine line\n");
+
+    let b = fig7b();
+    println!("{}", b.render_ascii());
+    // Paper Fig 7(b): "The performance for 2 PE broadcast stands out as
+    // the two PEs … are using two tiles within the same GPU".
+    let big = *b.series[0].points.last().map(|(x, _)| x).unwrap();
+    let y2 = b.series.iter().find(|s| s.name == "2 PEs").unwrap().y_at(big).unwrap();
+    for s in b.series.iter().filter(|s| s.name != "2 PEs") {
+        let y = s.y_at(big).unwrap();
+        assert!(
+            y2 > y,
+            "fig7b: 2-PE broadcast should stand out: {y2} !> {y} ({})",
+            s.name
+        );
+    }
+    // Uniform scaling beyond 2 PEs: 4..12 PEs within a tight band at the
+    // largest size (per-PE bandwidth limited by the same Xe-Links).
+    let ys: Vec<f64> = b
+        .series
+        .iter()
+        .filter(|s| s.name != "2 PEs")
+        .map(|s| s.y_at(big).unwrap())
+        .collect();
+    let (min, max) = ys
+        .iter()
+        .fold((f64::INFINITY, 0.0f64), |(lo, hi), &y| (lo.min(y), hi.max(y)));
+    assert!(
+        max / min < 3.0,
+        "fig7b: 4–12 PE broadcast spread too wide: {ys:?}"
+    );
+    println!("[fig7b] 2-PE standout + uniform scaling beyond, as in the paper");
+}

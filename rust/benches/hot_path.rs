@@ -1,0 +1,84 @@
+//! Bench: wall-clock cost of the L3 hot paths (the library's own
+//! overhead, independent of the modeled hardware time) — put issue path,
+//! AMO path, sync, and the proxy round trip. This is the profile target
+//! for the §Perf optimization pass.
+//! `cargo bench --bench hot_path`
+
+use rishmem::bench::measure_wall;
+use rishmem::ishmem::{CutoverConfig, CutoverMode};
+use rishmem::{Ishmem, IshmemConfig, ReduceOp, TeamId};
+
+fn main() {
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::mode(CutoverMode::Never),
+        ..IshmemConfig::with_npes(2)
+    };
+    let ish = Ishmem::new(cfg).expect("machine");
+    let results = ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(1 << 20);
+        let word = ctx.calloc::<u64>(1);
+        let red_d = ctx.calloc::<f32>(256);
+        let red_s = ctx.calloc::<f32>(256);
+        ctx.barrier_all();
+        if ctx.pe() != 0 {
+            // PE 1 participates in the collective phases at the end.
+            ctx.barrier_all();
+            for _ in 0..3 {
+                ctx.reduce(red_d, red_s, 256, ReduceOp::Sum, TeamId::WORLD);
+            }
+            for _ in 0..1000 {
+                ctx.sync_all();
+            }
+            return Vec::new();
+        }
+
+        let payload8 = [0u8; 8];
+        let payload4k = vec![0u8; 4096];
+        let mut out = Vec::new();
+
+        let m = measure_wall(|| ctx.put(buf, &payload8, 1));
+        out.push(("put 8B (load/store wall)".to_string(), m.best_ns));
+
+        let m = measure_wall(|| ctx.put(buf, &payload4k, 1));
+        out.push(("put 4KB (load/store wall)".to_string(), m.best_ns));
+
+        let m = measure_wall(|| ctx.p(word, 1u64, 1));
+        out.push(("scalar p (wall)".to_string(), m.best_ns));
+
+        let m = measure_wall(|| ctx.atomic_add(word, 1u64, 1));
+        out.push(("atomic_add (wall)".to_string(), m.best_ns));
+
+        let m = measure_wall(|| {
+            ctx.atomic_fetch_add(word, 1u64, 1);
+        });
+        out.push(("atomic_fetch_add (wall)".to_string(), m.best_ns));
+
+        ctx.barrier_all();
+        // Collectives (fixed plan with PE 1 above).
+        let t0 = std::time::Instant::now();
+        for _ in 0..3 {
+            ctx.reduce(red_d, red_s, 256, ReduceOp::Sum, TeamId::WORLD);
+        }
+        out.push((
+            "reduce 256 f32 (wall, 2 PEs)".to_string(),
+            t0.elapsed().as_nanos() as f64 / 3.0,
+        ));
+        let t0 = std::time::Instant::now();
+        for _ in 0..1000 {
+            ctx.sync_all();
+        }
+        out.push((
+            "sync_all (wall, 2 PEs)".to_string(),
+            t0.elapsed().as_nanos() as f64 / 1000.0,
+        ));
+        out
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+
+    println!("== L3 hot-path wall-clock (library overhead, 1-core box) ==");
+    for (name, ns) in results.into_iter().flatten() {
+        println!("  {name:34} {ns:10.0} ns");
+    }
+    println!("\nmetrics after run:\n{}", snap.report());
+}

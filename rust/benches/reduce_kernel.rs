@@ -1,0 +1,92 @@
+//! Bench: the L1 Pallas reduce kernel through PJRT vs the native fold —
+//! quantifies the kernel-launch overhead behind the
+//! `xla_reduce_min_elems` cutover (an ablation of DESIGN.md E12's
+//! gradient path). `cargo bench --bench reduce_kernel`
+
+use rishmem::bench::measure_wall;
+use rishmem::runtime::{Manifest, XlaRuntime};
+
+fn main() {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = XlaRuntime::load_default().expect("runtime");
+    let chunk = rt.reduce_chunk_elems();
+
+    let a: Vec<f32> = (0..chunk).map(|i| i as f32 * 0.5).collect();
+    let b: Vec<f32> = (0..chunk).map(|i| (chunk - i) as f32).collect();
+    let bytes_a: Vec<u8> = a.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let bytes_b: Vec<u8> = b.iter().flat_map(|x| x.to_le_bytes()).collect();
+
+    // Warm the executable cache so we measure execution, not compilation.
+    let mut acc = bytes_a.clone();
+    rt.reduce_fold_bytes("sum", "f32", &mut acc, &bytes_b).unwrap();
+
+    let m_xla = measure_wall(|| {
+        let mut acc = bytes_a.clone();
+        rt.reduce_fold_bytes("sum", "f32", &mut acc, &bytes_b).unwrap();
+    });
+
+    let m_native = measure_wall(|| {
+        let mut acc = a.clone();
+        for (x, y) in acc.iter_mut().zip(&b) {
+            *x += *y;
+        }
+        std::hint::black_box(&acc);
+    });
+
+    let ns_per_elem_xla = m_xla.best_ns / chunk as f64;
+    let ns_per_elem_nat = m_native.best_ns / chunk as f64;
+    println!("reduce chunk = {chunk} f32 elems");
+    println!(
+        "  XLA/Pallas kernel: {:9.0} ns/chunk  ({:.3} ns/elem)",
+        m_xla.best_ns, ns_per_elem_xla
+    );
+    println!(
+        "  native fold:       {:9.0} ns/chunk  ({:.3} ns/elem)",
+        m_native.best_ns, ns_per_elem_nat
+    );
+    println!(
+        "  launch+copy overhead ratio: {:.1}x — this is why ishmem keeps a \
+         native fast path below xla_reduce_min_elems",
+        m_xla.best_ns / m_native.best_ns
+    );
+
+    // Throughput with the pipeline warm, folding many chunks (the
+    // gradient-allreduce shape from the train harness).
+    let chunks = 16;
+    let m_bulk = measure_wall(|| {
+        let mut acc = bytes_a.clone();
+        for _ in 0..chunks {
+            rt.reduce_fold_bytes("sum", "f32", &mut acc, &bytes_b).unwrap();
+        }
+    });
+    let gbs = (chunks * chunk * 4) as f64 / m_bulk.best_ns;
+    println!("  bulk fold ({chunks} std chunks): {gbs:.3} GB/s through the PJRT service");
+
+    // §Perf iteration 1: the wide chunk amortizes the launch overhead.
+    if let Some(wide) = rt.reduce_wide_elems() {
+        let aw: Vec<u8> = (0..wide)
+            .flat_map(|i| (i as f32 * 0.5).to_le_bytes())
+            .collect();
+        let bw: Vec<u8> = (0..wide)
+            .flat_map(|i| ((wide - i) as f32).to_le_bytes())
+            .collect();
+        let mut acc = aw.clone();
+        rt.reduce_fold_bytes_wide("sum", "f32", &mut acc, &bw).unwrap();
+        let wide_chunks = chunks * chunk / wide; // same total elements
+        let m_wide = measure_wall(|| {
+            let mut acc = aw.clone();
+            for _ in 0..wide_chunks.max(1) {
+                rt.reduce_fold_bytes_wide("sum", "f32", &mut acc, &bw).unwrap();
+            }
+        });
+        let gbs_wide = (wide_chunks.max(1) * wide * 4) as f64 / m_wide.best_ns;
+        println!(
+            "  bulk fold (wide {wide}-elem chunks): {gbs_wide:.3} GB/s  \
+             ({:.1}x over std — §Perf iteration 1)",
+            gbs_wide / gbs
+        );
+    }
+}

@@ -1,0 +1,514 @@
+//! Generators for every evaluation figure in the paper (§IV, Figs 3–7)
+//! plus the §III-D ring-buffer claims. Each returns a [`Figure`] whose
+//! series mirror the paper's legends; `EXPERIMENTS.md` records the
+//! shape comparison.
+
+use std::sync::Arc;
+
+use crate::device::WorkGroup;
+use crate::ishmem::{CutoverConfig, CutoverMode, Ishmem, IshmemConfig};
+use crate::ringbuf::{CompletionPool, Message, Ring, RingOp, COMPLETION_NONE};
+use crate::sim::Topology;
+
+use super::report::{Figure, Series};
+use super::timer::{measure, measure_fixed, measure_wall};
+use super::zepeer;
+use super::{nelem_sweep, size_sweep};
+
+/// Fig 3 targets: (legend, target PE) under a (1 node, 2 GPU, 2 tile)
+/// topology — PE 0 is the initiator.
+const FIG3_TARGETS: [(&str, usize); 3] =
+    [("same-tile", 0), ("cross-tile", 1), ("cross-GPU", 2)];
+
+fn fig3_machine() -> Arc<Ishmem> {
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 40 << 20,
+        ..Default::default()
+    };
+    Ishmem::new(cfg).expect("fig3 machine")
+}
+
+/// Fig 3(a): single-threaded `ishmem_put` bandwidth vs message size for
+/// same-tile / cross-tile / cross-GPU, with the ze_peer write baseline.
+pub fn fig3a() -> Figure {
+    fig3(false)
+}
+
+/// Fig 3(b): `ishmem_get` + ze_peer read baseline.
+pub fn fig3b() -> Figure {
+    fig3(true)
+}
+
+fn fig3(get: bool) -> Figure {
+    let sizes = size_sweep();
+    let (id, title) = if get {
+        ("fig3b", "Intra-node single-threaded Get bandwidth")
+    } else {
+        ("fig3a", "Intra-node single-threaded Put bandwidth")
+    };
+    let mut fig = Figure::new(id, title, "msg size", "GB/s");
+
+    let ish = fig3_machine();
+    let sizes2 = sizes.clone();
+    let results = ish.launch(move |ctx| {
+        let max = *sizes2.iter().max().unwrap();
+        let buf = ctx.calloc::<u8>(max);
+        let mut local = vec![0xA5u8; max];
+        ctx.barrier_all();
+        if ctx.pe() != 0 {
+            return None;
+        }
+        let mut out = Vec::new();
+        for (name, target) in FIG3_TARGETS {
+            let mut series = Series::new(format!("ishmem {name}"));
+            for &size in &sizes2 {
+                let m = if get {
+                    measure(&ctx.clock, || ctx.get(&mut local[..size], buf, target))
+                } else {
+                    measure(&ctx.clock, || ctx.put(buf, &local[..size], target))
+                };
+                series.push(size as f64, m.bandwidth_gbs(size));
+            }
+            out.push(series);
+        }
+        Some(out)
+    });
+    ish.shutdown();
+    fig.series = results.into_iter().flatten().next().expect("pe0 series");
+
+    // ze_peer overlays (engine-only baseline, no library in the path).
+    let topo = Topology::new(1, 2, 2);
+    for (name, target) in FIG3_TARGETS {
+        let s = if get {
+            zepeer::zepeer_read_series(&topo, 0, target, &sizes, &format!("ze_peer {name}"))
+        } else {
+            zepeer::zepeer_write_series(&topo, 0, target, &sizes, &format!("ze_peer {name}"))
+        };
+        fig.series.push(s);
+    }
+    fig
+}
+
+/// Fig 4(a): `ishmemx_put_work_group`, pure store path (cutover=Never),
+/// bandwidth vs size for 1/16/128/1024 work-items, cross-GPU.
+pub fn fig4a() -> Figure {
+    fig4(CutoverMode::Never, "fig4a", "work_group Put, kernel store path")
+}
+
+/// Fig 4(b): same sweep on the copy-engine path (cutover=Always) — the
+/// curves collapse: engine bandwidth is work-group invariant.
+pub fn fig4b() -> Figure {
+    fig4(CutoverMode::Always, "fig4b", "work_group Put, copy-engine path")
+}
+
+fn fig4(mode: CutoverMode, id: &str, title: &str) -> Figure {
+    let sizes = size_sweep();
+    let wgs = [1usize, 16, 128, 1024];
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 40 << 20,
+        cutover: CutoverConfig::mode(mode),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).expect("fig4 machine");
+    let sizes2 = sizes.clone();
+    let results = ish.launch(move |ctx| {
+        let max = *sizes2.iter().max().unwrap();
+        let buf = ctx.calloc::<u8>(max);
+        let local = vec![0x5Au8; max];
+        ctx.barrier_all();
+        if ctx.pe() != 0 {
+            return None;
+        }
+        let mut out = Vec::new();
+        for wg_size in wgs {
+            let wg = WorkGroup::new(wg_size);
+            let mut series = Series::new(format!("{wg_size} work-items"));
+            for &size in &sizes2 {
+                let m = measure(&ctx.clock, || {
+                    ctx.put_work_group(buf, &local[..size], 2, &wg)
+                });
+                series.push(size as f64, m.bandwidth_gbs(size));
+            }
+            out.push(series);
+        }
+        Some(out)
+    });
+    ish.shutdown();
+    let mut fig = Figure::new(id, title, "msg size", "GB/s");
+    fig.series = results.into_iter().flatten().next().unwrap();
+    fig
+}
+
+/// Fig 5(a): work_group Put with the tuned cutover — store bandwidth for
+/// small/medium, engine bandwidth past the (wg-dependent) crossover.
+pub fn fig5a() -> Figure {
+    let mut f = fig4(CutoverMode::Tuned, "fig5a", "work_group Put, tuned cutover");
+    f.y_label = "GB/s".into();
+    f
+}
+
+/// Fig 5(b): same, reported as latency (µs).
+pub fn fig5b() -> Figure {
+    let bw = fig4(CutoverMode::Tuned, "fig5b", "work_group Put latency, tuned cutover");
+    let mut fig = Figure::new("fig5b", bw.title.clone(), "msg size", "µs");
+    for s in bw.series {
+        let mut ls = Series::new(s.name);
+        for (x, gbs) in s.points {
+            // GB/s = bytes/ns ⇒ ns = bytes / GB/s; µs = ns / 1000.
+            ls.push(x, x / gbs / 1000.0);
+        }
+        fig.series.push(ls);
+    }
+    fig
+}
+
+/// Fig 6: `ishmemx_fcollect_work_group` vs element count for 16/64/256/
+/// 1024 work-items at a given PE count, vs the host-initiated copy-engine
+/// baseline (dashed in the paper). `npes` ∈ {4, 8, 12}.
+pub fn fig6(npes: usize) -> Figure {
+    assert!(npes >= 2 && npes <= 12);
+    let wgs = [16usize, 64, 256, 1024];
+    let nelems = nelem_sweep();
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 6, 2),
+        heap_bytes: 32 << 20,
+        cutover: CutoverConfig::mode(CutoverMode::Never), // device store path
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).expect("fig6 machine");
+    let nelems2 = nelems.clone();
+    let results = ish.launch(move |ctx| {
+        let max = *nelems2.iter().max().unwrap();
+        let dest = ctx.calloc::<f32>(max * 12);
+        let src = ctx.calloc::<f32>(max);
+        ctx.barrier_all();
+        if ctx.pe() >= npes {
+            return None; // not a member of the benched team
+        }
+        let team = ctx.team_split_strided(crate::ishmem::TeamId::WORLD, 0, 1, npes);
+        let mut out = Vec::new();
+        for wg_size in wgs {
+            let wg = WorkGroup::new(wg_size);
+            let mut series = Series::new(format!("{wg_size} work-items"));
+            for &n in &nelems2 {
+                let m = measure_fixed(&ctx.clock, 1, 3, || {
+                    ctx.fcollect_work_group(dest, src, n, team, &wg)
+                });
+                series.push(n as f64, m.bandwidth_gbs(n * 4 * (npes - 1)));
+            }
+            out.push(series);
+        }
+        // Host-initiated copy-engine baseline (paper's dashed line).
+        let mut host = Series::new("host copy-engine".to_string());
+        for &n in &nelems2 {
+            let m = measure_fixed(&ctx.clock, 1, 3, || {
+                ctx.host_fcollect(dest, src, n, team)
+            });
+            host.push(n as f64, m.bandwidth_gbs(n * 4 * (npes - 1)));
+        }
+        out.push(host);
+        if ctx.pe() == 0 {
+            Some(out)
+        } else {
+            None
+        }
+    });
+    ish.shutdown();
+    let mut fig = Figure::new(
+        format!("fig6-{npes}pe"),
+        format!("fcollect_work_group, {npes} PEs (store path vs host engine)"),
+        "nelems",
+        "GB/s",
+    );
+    fig.series = results.into_iter().flatten().next().unwrap();
+    fig
+}
+
+/// Fig 7(a): fcollect with the **tuned** cutover at 12 PEs — the adaptive
+/// policy tracks the upper envelope of Fig 6(c).
+pub fn fig7a() -> Figure {
+    let wgs = [16usize, 64, 256, 1024];
+    let nelems = nelem_sweep();
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 6, 2),
+        heap_bytes: 32 << 20,
+        cutover: CutoverConfig::mode(CutoverMode::Tuned),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).expect("fig7a machine");
+    let nelems2 = nelems.clone();
+    let results = ish.launch(move |ctx| {
+        let max = *nelems2.iter().max().unwrap();
+        let dest = ctx.calloc::<f32>(max * 12);
+        let src = ctx.calloc::<f32>(max);
+        ctx.barrier_all();
+        let team = crate::ishmem::TeamId::WORLD;
+        let mut out = Vec::new();
+        for wg_size in wgs {
+            let wg = WorkGroup::new(wg_size);
+            let mut series = Series::new(format!("{wg_size} work-items"));
+            for &n in &nelems2 {
+                let m = measure_fixed(&ctx.clock, 1, 3, || {
+                    ctx.fcollect_work_group(dest, src, n, team, &wg)
+                });
+                series.push(n as f64, m.bandwidth_gbs(n * 4 * 11));
+            }
+            out.push(series);
+        }
+        let mut host = Series::new("host copy-engine".to_string());
+        for &n in &nelems2 {
+            let m = measure_fixed(&ctx.clock, 1, 3, || ctx.host_fcollect(dest, src, n, team));
+            host.push(n as f64, m.bandwidth_gbs(n * 4 * 11));
+        }
+        out.push(host);
+        (ctx.pe() == 0).then_some(out)
+    });
+    ish.shutdown();
+    let mut fig = Figure::new(
+        "fig7a",
+        "fcollect_work_group, 12 PEs, tuned cutover",
+        "nelems",
+        "GB/s",
+    );
+    fig.series = results.into_iter().flatten().next().unwrap();
+    fig
+}
+
+/// Fig 7(b): `ishmemx_broadcast_work_group` with 128 work-items, varying
+/// the PE count 2…12 — 2 PEs stand out (same-GPU cross-tile, no Xe-Link).
+pub fn fig7b() -> Figure {
+    let nelems = nelem_sweep();
+    let pe_counts = [2usize, 4, 6, 8, 10, 12];
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 6, 2),
+        heap_bytes: 32 << 20,
+        cutover: CutoverConfig::mode(CutoverMode::Tuned),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).expect("fig7b machine");
+    let nelems2 = nelems.clone();
+    let results = ish.launch(move |ctx| {
+        let max = *nelems2.iter().max().unwrap();
+        let dest = ctx.calloc::<f32>(max);
+        let src = ctx.calloc::<f32>(max);
+        ctx.barrier_all();
+        let wg = WorkGroup::new(128);
+        let mut out = Vec::new();
+        for &n_pes in &pe_counts {
+            // Every PE must run the split so the mirrored creation
+            // sequence stays aligned; only members then use the team.
+            let team =
+                ctx.team_split_strided(crate::ishmem::TeamId::WORLD, 0, 1, n_pes);
+            if ctx.pe() >= n_pes {
+                continue; // non-members sit this round out
+            }
+            let mut series = Series::new(format!("{n_pes} PEs"));
+            for &n in &nelems2 {
+                let m = measure_fixed(&ctx.clock, 1, 3, || {
+                    ctx.broadcast_work_group(dest, src, n, 0, team, &wg)
+                });
+                // Payload bandwidth (bytes delivered per destination / time):
+                // the paper's per-op view, where the 2-PE same-GPU case
+                // stands out.
+                series.push(n as f64, m.bandwidth_gbs(n * 4));
+            }
+            out.push(series);
+        }
+        (ctx.pe() == 0).then_some(out)
+    });
+    ish.shutdown();
+    let mut fig = Figure::new(
+        "fig7b",
+        "broadcast_work_group, 128 work-items, varying PEs",
+        "nelems",
+        "GB/s",
+    );
+    fig.series = results.into_iter().flatten().next().unwrap();
+    fig
+}
+
+/// §III-D ring claims, measured in *wall clock* on the real lock-free
+/// ring: request throughput vs producer count, plus single-thread RTT.
+pub fn ring_figure() -> Figure {
+    let mut fig = Figure::new(
+        "ring",
+        "reverse-offload ring: real wall-clock throughput & RTT",
+        "producers",
+        "M req/s (throughput) / µs (rtt)",
+    );
+
+    let mut tput = Series::new("M req/s");
+    for producers in [1usize, 2, 4, 8] {
+        let ring = Ring::new(4096);
+        let mut consumer = ring.consumer();
+        const PER: u64 = 50_000;
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let r = Arc::clone(&ring);
+                s.spawn(move || {
+                    for i in 0..PER {
+                        let mut m = Message::nop();
+                        m.src_pe = p as u32;
+                        m.inline_val = i;
+                        r.send(m);
+                    }
+                });
+            }
+            s.spawn(move || {
+                for _ in 0..producers as u64 * PER {
+                    consumer.recv();
+                }
+            });
+        });
+        let rate = producers as f64 * PER as f64 / t0.elapsed().as_secs_f64();
+        tput.push(producers as f64, rate / 1e6);
+    }
+    fig.series.push(tput);
+
+    // Single-thread round trip through a live echo service.
+    let ring = Ring::new(64);
+    let pool = Arc::new(CompletionPool::new(16));
+    let mut consumer = ring.consumer();
+    let pool2 = pool.clone();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let echo = std::thread::spawn(move || {
+        while !stop2.load(std::sync::atomic::Ordering::Acquire) {
+            if let Some(m) = consumer.try_recv() {
+                if m.ring_op() == Some(RingOp::Shutdown) {
+                    return;
+                }
+                if m.completion != COMPLETION_NONE {
+                    pool2.complete(m.completion, m.inline_val);
+                }
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    });
+    let m = measure_wall(|| {
+        let token = pool.alloc();
+        let mut msg = Message::nop();
+        msg.completion = token.index;
+        msg.inline_val = 9;
+        ring.send(msg);
+        assert_eq!(pool.wait(token), 9);
+    });
+    let mut rtt = Series::new("RTT µs");
+    rtt.push(1.0, m.best_ns / 1000.0);
+    fig.series.push(rtt);
+
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    let mut sd = Message::nop();
+    sd.op = RingOp::Shutdown as u8;
+    ring.send(sd);
+    let _ = echo.join();
+    fig
+}
+
+/// Ablation: immediate vs standard command lists on the proxied
+/// (copy-engine) put path — the §III-C design choice ("immediate command
+/// lists for low latency copy operations").
+pub fn ablate_cmdlists() -> Figure {
+    let sizes = size_sweep();
+    let mut fig = Figure::new(
+        "ablate-cl",
+        "ablation: immediate vs standard command lists (engine put path)",
+        "msg size",
+        "GB/s",
+    );
+    for (name, immediate) in [("immediate CL", true), ("standard CL", false)] {
+        let cfg = IshmemConfig {
+            topology: Topology::new(1, 2, 2),
+            heap_bytes: 40 << 20,
+            cutover: CutoverConfig::mode(CutoverMode::Always),
+            use_immediate_cl: immediate,
+            ..Default::default()
+        };
+        let ish = Ishmem::new(cfg).expect("ablate machine");
+        let sizes2 = sizes.clone();
+        let series = ish.launch(move |ctx| {
+            let max = *sizes2.iter().max().unwrap();
+            let buf = ctx.calloc::<u8>(max);
+            let local = vec![1u8; max];
+            ctx.barrier_all();
+            if ctx.pe() != 0 {
+                return None;
+            }
+            let mut s = Series::new(name);
+            for &size in &sizes2 {
+                let m = measure(&ctx.clock, || ctx.put(buf, &local[..size], 2));
+                s.push(size as f64, m.bandwidth_gbs(size));
+            }
+            Some(s)
+        });
+        ish.shutdown();
+        fig.series.push(series.into_iter().flatten().next().unwrap());
+    }
+    fig
+}
+
+/// Ablation: the push (atomic-increment) sync vs a naive pull barrier
+/// (every PE polls every other PE's flag with fetching atomics) — the
+/// §III-G.2 design choice, in modeled time per sync.
+pub fn ablate_sync() -> Figure {
+    let mut fig = Figure::new(
+        "ablate-sync",
+        "ablation: push atomic sync vs pull (fetching) barrier",
+        "npes",
+        "µs per sync",
+    );
+    let mut push = Series::new("push fire-and-forget (ishmem)");
+    let mut pull = Series::new("pull fetching-atomic");
+    for npes in [2usize, 4, 6, 8, 10, 12] {
+        let cfg = IshmemConfig {
+            topology: Topology::new(1, 6, 2),
+            ..Default::default()
+        };
+        let ish = Ishmem::new(cfg).expect("ablate machine");
+        let times = ish.launch(move |ctx| {
+            let team = ctx.team_split_strided(crate::ishmem::TeamId::WORLD, 0, 1, npes);
+            let flags = ctx.calloc::<u64>(12);
+            if ctx.pe() >= npes {
+                return None;
+            }
+            // Push: the shipping implementation.
+            let m_push = measure_fixed(&ctx.clock, 1, 5, || ctx.team_sync(team));
+
+            // Pull: set my flag once, then fetch every member's flag until
+            // seen — each poll is a *fetching* remote atomic (round trip,
+            // not pipelined). Modeled directly from the cost terms.
+            let m_pull = measure_fixed(&ctx.clock, 1, 5, || {
+                ctx.atomic_add(flags.at(ctx.pe()), 1u64, ctx.pe());
+                for peer in 0..npes {
+                    // One fetching atomic per member — a full round trip
+                    // each (optimistic: every flag ready on the first poll).
+                    ctx.atomic_fetch(flags.at(peer), peer);
+                }
+            });
+            (ctx.pe() == 0).then_some((m_push.best_ns, m_pull.best_ns))
+        });
+        ish.shutdown();
+        let (p, q) = times.into_iter().flatten().next().unwrap();
+        push.push(npes as f64, p / 1000.0);
+        pull.push(npes as f64, q / 1000.0);
+    }
+    fig.series.push(push);
+    fig.series.push(pull);
+    fig
+}
+
+/// All paper figures, in order.
+pub fn all_figures() -> Vec<Figure> {
+    let mut v = vec![fig3a(), fig3b(), fig4a(), fig4b(), fig5a(), fig5b()];
+    for npes in [4, 8, 12] {
+        v.push(fig6(npes));
+    }
+    v.push(fig7a());
+    v.push(fig7b());
+    v.push(ring_figure());
+    v
+}

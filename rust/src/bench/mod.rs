@@ -1,0 +1,28 @@
+//! Benchmark harness: regenerates every figure in the paper's evaluation
+//! (§IV, Figs 3–7) plus the §III-D ring claims, using the measurement
+//! methodology the paper describes (warm-up doubling until ≥2 ms, then 10
+//! trials, best time).
+//!
+//! Bandwidth/latency numbers come from the **modeled** PE timeline
+//! (`SimClock`) — the substitute for the paper's SYCL event profiling —
+//! while all data movement underneath is real (DESIGN.md §2). The ring
+//! figure is the exception: the ring is real software, so it is measured
+//! in wall-clock.
+
+pub mod figures;
+pub mod report;
+pub mod timer;
+pub mod zepeer;
+
+pub use report::{Figure, Series};
+pub use timer::{measure, measure_fixed, measure_wall, Measurement};
+
+/// Message-size sweep used by the RMA figures: 8 B … 16 MB, powers of two.
+pub fn size_sweep() -> Vec<usize> {
+    (3..=24).map(|p| 1usize << p).collect()
+}
+
+/// Element-count sweep used by the collective figures: 1 … 256 Ki f32.
+pub fn nelem_sweep() -> Vec<usize> {
+    (0..=18).map(|p| 1usize << p).collect()
+}

@@ -1,0 +1,168 @@
+//! Figure assembly: CSV output + ASCII rendering of the paper-shaped
+//! series (who wins, where the crossovers fall).
+
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    /// (x, y) points; x is message size / nelems / npes, y is GB/s or µs.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn y_at(&self, x: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|(px, _)| (*px - x).abs() < 1e-9)
+            .map(|(_, y)| *y)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub id: String,
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(
+        id: impl Into<String>,
+        title: impl Into<String>,
+        x_label: impl Into<String>,
+        y_label: impl Into<String>,
+    ) -> Self {
+        Figure {
+            id: id.into(),
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# {} — {}\n", self.id, self.title));
+        out.push_str(&format!("{}", self.x_label));
+        for s in &self.series {
+            out.push_str(&format!(",{}", s.name));
+        }
+        out.push('\n');
+        for &(x, _) in &self.series.first().map(|s| s.points.clone()).unwrap_or_default() {
+            out.push_str(&format!("{x}"));
+            for s in &self.series {
+                match s.y_at(x) {
+                    Some(y) => out.push_str(&format!(",{y:.4}")),
+                    None => out.push(','),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render the paper-style rows: one line per x, one column per series.
+    pub fn render_ascii(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {} ==\n", self.id, self.title));
+        let w = self.series.iter().map(|s| s.name.len()).max().unwrap_or(8).max(10);
+        out.push_str(&format!("{:>12} ", self.x_label));
+        for s in &self.series {
+            out.push_str(&format!("{:>w$} ", s.name, w = w));
+        }
+        out.push('\n');
+        let xs: Vec<f64> = self
+            .series
+            .first()
+            .map(|s| s.points.iter().map(|(x, _)| *x).collect())
+            .unwrap_or_default();
+        for x in xs {
+            let xfmt = if x >= 1024.0 && (x as usize).is_power_of_two() {
+                crate::util::fmt_bytes(x as usize)
+            } else {
+                format!("{x}")
+            };
+            out.push_str(&format!("{xfmt:>12} "));
+            for s in &self.series {
+                match s.y_at(x) {
+                    Some(y) => out.push_str(&format!("{:>w$.3} ", y, w = w)),
+                    None => out.push_str(&format!("{:>w$} ", "-", w = w)),
+                }
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!("    (y = {})\n", self.y_label));
+        out
+    }
+
+    pub fn save_csv(&self, dir: impl AsRef<Path>) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let path = dir.as_ref().join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    /// First x where series `a` drops below series `b` (crossover finder
+    /// used by tests and EXPERIMENTS.md tables).
+    pub fn crossover(&self, a: &str, b: &str) -> Option<f64> {
+        let sa = self.series.iter().find(|s| s.name == a)?;
+        let sb = self.series.iter().find(|s| s.name == b)?;
+        for (x, ya) in &sa.points {
+            if let Some(yb) = sb.y_at(*x) {
+                if *ya < yb {
+                    return Some(*x);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Figure {
+        let mut f = Figure::new("t1", "test", "bytes", "GB/s");
+        let mut a = Series::new("store");
+        let mut b = Series::new("engine");
+        for (x, ya, yb) in [(8.0, 1.0, 0.1), (4096.0, 5.0, 4.0), (1e6, 10.0, 24.0)] {
+            a.push(x, ya);
+            b.push(x, yb);
+        }
+        f.series.push(a);
+        f.series.push(b);
+        f
+    }
+
+    #[test]
+    fn csv_has_all_series() {
+        let csv = fig().to_csv();
+        assert!(csv.contains("bytes,store,engine"));
+        assert!(csv.lines().count() >= 5);
+    }
+
+    #[test]
+    fn crossover_found() {
+        assert_eq!(fig().crossover("store", "engine"), Some(1e6));
+        assert_eq!(fig().crossover("engine", "store"), Some(8.0));
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let a = fig().render_ascii();
+        assert!(a.contains("store") && a.contains("engine"));
+    }
+}

@@ -1,0 +1,99 @@
+//! `ze_peer` baseline (paper §IV, [3]): the Level-Zero perf test that
+//! measures raw copy-engine bandwidth between two L0 devices, with no
+//! SHMEM library in the path. Reproduced against our `ze` substrate —
+//! host-initiated immediate-command-list copies, sized like the paper's
+//! read/write benchmarks.
+
+use std::sync::Arc;
+
+use crate::sim::memory::HeapRegistry;
+use crate::sim::{CostModel, CostParams, SimClock, Topology};
+use crate::ze::cmdlist::{CommandQueue, DeviceAddr};
+use crate::ze::ZeDriver;
+
+use super::report::Series;
+use super::timer::measure;
+
+/// ze_peer write (src device → dst device) bandwidth sweep, GB/s.
+pub fn zepeer_write_series(
+    topo: &Topology,
+    src_pe: usize,
+    dst_pe: usize,
+    sizes: &[usize],
+    name: &str,
+) -> Series {
+    run(topo, src_pe, dst_pe, sizes, name, true)
+}
+
+/// ze_peer read (dst pulls from src) — same engine path, reversed.
+pub fn zepeer_read_series(
+    topo: &Topology,
+    src_pe: usize,
+    dst_pe: usize,
+    sizes: &[usize],
+    name: &str,
+) -> Series {
+    run(topo, dst_pe, src_pe, sizes, name, true)
+}
+
+fn run(
+    topo: &Topology,
+    src_pe: usize,
+    dst_pe: usize,
+    sizes: &[usize],
+    name: &str,
+    _host: bool,
+) -> Series {
+    let max = *sizes.iter().max().unwrap_or(&4096);
+    let cost = CostModel::new(topo.clone(), CostParams::default());
+    let heaps = Arc::new(HeapRegistry::new(topo.npes(), max * 2));
+    let driver = ZeDriver::new(heaps, cost);
+    // ze_peer drives *standard* command lists executed on a host command
+    // queue (one engine dispatch per measured copy).
+    let queue = CommandQueue::host();
+    let clock = SimClock::new();
+
+    let mut series = Series::new(name);
+    for &size in sizes {
+        let m = measure(&clock, || {
+            let mut cl = driver.create_command_list(src_pe);
+            cl.append_memory_copy(
+                DeviceAddr { pe: dst_pe, offset: 0 },
+                DeviceAddr { pe: src_pe, offset: max },
+                size,
+                None,
+            );
+            cl.close();
+            cl.execute(&queue, &clock);
+        });
+        series.push(size as f64, m.bandwidth_gbs(size));
+    }
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zepeer_bandwidth_monotone_until_roofline() {
+        let topo = Topology::new(1, 2, 2);
+        let sizes: Vec<usize> = (3..=22).map(|p| 1 << p).collect();
+        let s = zepeer_write_series(&topo, 0, 2, &sizes, "zepeer");
+        // Engine startup dominates small messages; large ones approach the
+        // Xe-Link roofline (25 GB/s).
+        let first = s.points.first().unwrap().1;
+        let last = s.points.last().unwrap().1;
+        assert!(first < 0.1, "8B should be startup-bound: {first}");
+        assert!(last > 20.0, "4MB should approach the link rate: {last}");
+    }
+
+    #[test]
+    fn same_device_faster_than_cross() {
+        let topo = Topology::new(1, 2, 2);
+        let sizes = vec![1 << 20];
+        let same = zepeer_write_series(&topo, 0, 1, &sizes, "tile").points[0].1;
+        let cross = zepeer_write_series(&topo, 0, 2, &sizes, "gpu").points[0].1;
+        assert!(same > cross);
+    }
+}

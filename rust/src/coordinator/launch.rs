@@ -1,0 +1,64 @@
+//! SPMD job launching helpers (the `mpirun`/`oshrun` analogue).
+
+use std::sync::Arc;
+
+use crate::ishmem::{Ishmem, IshmemConfig, PeCtx};
+use crate::runtime::XlaRuntime;
+
+/// Build a machine, optionally attach the PJRT runtime, run `f` SPMD, and
+/// return per-PE results. The one-call entry used by examples and benches.
+pub fn run_spmd<R, F>(config: IshmemConfig, with_runtime: bool, f: F) -> anyhow::Result<Vec<R>>
+where
+    R: Send,
+    F: Fn(&mut PeCtx) -> R + Send + Sync,
+{
+    let ish = Ishmem::new(config)?;
+    if with_runtime {
+        let rt = XlaRuntime::load_default()?;
+        ish.attach_runtime(rt);
+    }
+    let out = ish.launch(f);
+    ish.shutdown();
+    Ok(out)
+}
+
+/// Convenience wrapper: default single-node config with `npes` PEs.
+pub fn run_npes<R, F>(npes: usize, f: F) -> anyhow::Result<Vec<R>>
+where
+    R: Send,
+    F: Fn(&mut PeCtx) -> R + Send + Sync,
+{
+    run_spmd(IshmemConfig::with_npes(npes), false, f)
+}
+
+/// Reusable machine handle for harnesses that launch many phases without
+/// re-creating proxies/heaps each time.
+pub struct Machine {
+    pub ish: Arc<Ishmem>,
+}
+
+impl Machine {
+    pub fn new(config: IshmemConfig) -> anyhow::Result<Machine> {
+        Ok(Machine { ish: Ishmem::new(config)? })
+    }
+
+    pub fn with_runtime(config: IshmemConfig) -> anyhow::Result<Machine> {
+        let m = Machine::new(config)?;
+        m.ish.attach_runtime(XlaRuntime::load_default()?);
+        Ok(m)
+    }
+
+    pub fn launch<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(&mut PeCtx) -> R + Send + Sync,
+    {
+        self.ish.launch(f)
+    }
+}
+
+impl Drop for Machine {
+    fn drop(&mut self) {
+        self.ish.shutdown();
+    }
+}

@@ -1,0 +1,115 @@
+//! Traffic/operation counters, aggregated across PEs and the proxy.
+//!
+//! Every counter is a relaxed atomic — the hot path pays one uncontended
+//! `fetch_add`; snapshots are approximate under concurrency, exact at
+//! quiescence (which is when reports read them).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    // Op counts by API family.
+    pub puts: AtomicU64,
+    pub gets: AtomicU64,
+    pub amos: AtomicU64,
+    pub collectives: AtomicU64,
+    // Bytes by data path (the paper's three regimes).
+    pub bytes_loadstore: AtomicU64,
+    pub bytes_copy_engine: AtomicU64,
+    pub bytes_nic: AtomicU64,
+    // Reverse-offload ring.
+    pub ring_messages: AtomicU64,
+    pub ring_completions: AtomicU64,
+    // XLA kernel invocations (reduce path).
+    pub xla_reduce_calls: AtomicU64,
+    pub xla_reduce_elems: AtomicU64,
+    // Native (non-kernel) reduce fallbacks.
+    pub native_reduce_elems: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> std::sync::Arc<Self> {
+        std::sync::Arc::new(Self::default())
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            amos: self.amos.load(Ordering::Relaxed),
+            collectives: self.collectives.load(Ordering::Relaxed),
+            bytes_loadstore: self.bytes_loadstore.load(Ordering::Relaxed),
+            bytes_copy_engine: self.bytes_copy_engine.load(Ordering::Relaxed),
+            bytes_nic: self.bytes_nic.load(Ordering::Relaxed),
+            ring_messages: self.ring_messages.load(Ordering::Relaxed),
+            ring_completions: self.ring_completions.load(Ordering::Relaxed),
+            xla_reduce_calls: self.xla_reduce_calls.load(Ordering::Relaxed),
+            xla_reduce_elems: self.xla_reduce_elems.load(Ordering::Relaxed),
+            native_reduce_elems: self.native_reduce_elems.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub puts: u64,
+    pub gets: u64,
+    pub amos: u64,
+    pub collectives: u64,
+    pub bytes_loadstore: u64,
+    pub bytes_copy_engine: u64,
+    pub bytes_nic: u64,
+    pub ring_messages: u64,
+    pub ring_completions: u64,
+    pub xla_reduce_calls: u64,
+    pub xla_reduce_elems: u64,
+    pub native_reduce_elems: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_loadstore + self.bytes_copy_engine + self.bytes_nic
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "ops: put={} get={} amo={} coll={}\n\
+             bytes: load/store={} copy-engine={} nic={}\n\
+             ring: msgs={} completions={}\n\
+             reduce: xla-calls={} xla-elems={} native-elems={}",
+            self.puts,
+            self.gets,
+            self.amos,
+            self.collectives,
+            crate::util::fmt_bytes(self.bytes_loadstore as usize),
+            crate::util::fmt_bytes(self.bytes_copy_engine as usize),
+            crate::util::fmt_bytes(self.bytes_nic as usize),
+            self.ring_messages,
+            self.ring_completions,
+            self.xla_reduce_calls,
+            self.xla_reduce_elems,
+            self.native_reduce_elems,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_adds() {
+        let m = Metrics::new();
+        Metrics::add(&m.puts, 3);
+        Metrics::add(&m.bytes_loadstore, 4096);
+        let s = m.snapshot();
+        assert_eq!(s.puts, 3);
+        assert_eq!(s.total_bytes(), 4096);
+        assert!(s.report().contains("put=3"));
+    }
+}

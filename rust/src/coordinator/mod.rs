@@ -1,0 +1,12 @@
+//! L3 coordination: PE launching, metrics, and job orchestration.
+//!
+//! ishmem's execution model is SPMD: `npes` processing elements run the
+//! same program against the symmetric heap. [`launch`] materializes that
+//! model with one OS thread per PE (each owning a [`crate::ishmem::PeCtx`])
+//! and propagates panics; [`metrics`] aggregates per-path traffic counters
+//! the way the real library's stats interface does.
+
+pub mod launch;
+pub mod metrics;
+
+pub use metrics::Metrics;

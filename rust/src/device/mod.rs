@@ -1,0 +1,18 @@
+//! Simulated SYCL device execution (paper §II-A).
+//!
+//! SYCL decomposes a kernel into work-groups of work-items (with sub-groups
+//! as vector lanes). ishmem's `work_group` extension APIs take the calling
+//! group and either (a) spread a copy across all items — the collaborative
+//! multi-threaded vectorized memcpy — or (b) elect the leader item to talk
+//! to the host proxy while the rest wait at a group barrier (§III-G.1).
+//!
+//! On this 1-core substrate work-items are *logical lanes*: the partitioning
+//! arithmetic, leader election and barrier semantics are executed for real
+//! (and unit-tested), while the parallel speedup is charged by the cost
+//! model (`sim::xelink::items_rate_gbs`).
+
+pub mod vecops;
+pub mod workgroup;
+
+pub use vecops::collaborative_copy;
+pub use workgroup::{SubGroup, WorkGroup};

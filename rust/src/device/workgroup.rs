@@ -1,0 +1,121 @@
+//! Work-group / sub-group handles passed to `ishmemx_*_work_group` APIs.
+
+/// A SYCL-like work-group: `size` work-items, fixed sub-group width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkGroup {
+    size: usize,
+    sub_group_size: usize,
+}
+
+impl WorkGroup {
+    /// PVC-like bounds: 1..=1024 items, sub-groups of 16 lanes.
+    pub const MAX_SIZE: usize = 1024;
+    pub const SUB_GROUP_SIZE: usize = 16;
+
+    pub fn new(size: usize) -> Self {
+        assert!(
+            (1..=Self::MAX_SIZE).contains(&size),
+            "work-group size {size} out of range 1..={}",
+            Self::MAX_SIZE
+        );
+        WorkGroup { size, sub_group_size: Self::SUB_GROUP_SIZE }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// The designated leader work-item (paper: proxy calls are restricted
+    /// to a leader thread to avoid NIC/ring contention).
+    pub fn leader(&self) -> usize {
+        0
+    }
+
+    pub fn is_leader(&self, item: usize) -> bool {
+        item == self.leader()
+    }
+
+    pub fn sub_groups(&self) -> usize {
+        self.size.div_ceil(self.sub_group_size)
+    }
+
+    pub fn sub_group_of(&self, item: usize) -> SubGroup {
+        assert!(item < self.size);
+        SubGroup {
+            index: item / self.sub_group_size,
+            size: self
+                .sub_group_size
+                .min(self.size - (item / self.sub_group_size) * self.sub_group_size),
+        }
+    }
+
+    /// Partition `len` bytes across the items: item `i` handles
+    /// `[chunk_range(i, len)]`. Every byte is covered exactly once and
+    /// chunks are contiguous, matching the collaborative-copy layout.
+    pub fn chunk_range(&self, item: usize, len: usize) -> std::ops::Range<usize> {
+        assert!(item < self.size);
+        let per = len / self.size;
+        let rem = len % self.size;
+        // First `rem` items take one extra byte (balanced partition).
+        let start = item * per + item.min(rem);
+        let extra = usize::from(item < rem);
+        start..start + per + extra
+    }
+}
+
+/// A sub-group (vector-lane bundle) view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubGroup {
+    pub index: usize,
+    pub size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn leader_is_item_zero() {
+        let wg = WorkGroup::new(128);
+        assert!(wg.is_leader(0));
+        assert!(!wg.is_leader(1));
+    }
+
+    #[test]
+    fn sub_group_partition() {
+        let wg = WorkGroup::new(40);
+        assert_eq!(wg.sub_groups(), 3);
+        assert_eq!(wg.sub_group_of(0).index, 0);
+        assert_eq!(wg.sub_group_of(16).index, 1);
+        assert_eq!(wg.sub_group_of(39).index, 2);
+        assert_eq!(wg.sub_group_of(39).size, 8); // tail sub-group
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_group_rejected() {
+        WorkGroup::new(2048);
+    }
+
+    #[test]
+    fn chunks_tile_exactly() {
+        prop_check("work-group chunks cover every byte once", 200, |rng| {
+            let size = rng.range(1, WorkGroup::MAX_SIZE as u64) as usize;
+            let len = rng.range(0, 10_000) as usize;
+            let wg = WorkGroup::new(size);
+            let mut covered = 0usize;
+            let mut expected_start = 0usize;
+            for item in 0..size {
+                let r = wg.chunk_range(item, len);
+                assert_eq!(r.start, expected_start, "contiguous chunks");
+                expected_start = r.end;
+                covered += r.len();
+                // Balanced: no chunk differs from another by more than 1.
+                assert!(r.len() <= len / size + 1);
+            }
+            assert_eq!(covered, len);
+            assert_eq!(expected_start, len);
+        });
+    }
+}

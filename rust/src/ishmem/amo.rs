@@ -1,0 +1,327 @@
+//! Atomic memory operations (OpenSHMEM §9.8; paper: device & host AMO
+//! support, no `work_group` variants — "they are scalar operations that
+//! would not benefit from group optimizations").
+//!
+//! Local (load/store-reachable) targets execute real hardware atomics on
+//! the peer heap — the Xe-Link semantics. Inter-node targets reverse-
+//! offload an `Amo` ring message; the proxy executes the op and replies
+//! with the fetched value through the completion pool.
+
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::metrics::Metrics;
+use crate::ringbuf::message::AmoKind;
+use crate::ringbuf::{Message, RingOp};
+use crate::sim::memory::SymHeap;
+use crate::sim::topology::Locality;
+
+use super::types::{AmoElem, TypeTag};
+use super::{PeCtx, SymAddr};
+
+/// Execute an atomic read-modify-write on a heap word, bit-level.
+/// Shared by the device path (here) and the host proxy (proxy.rs).
+pub(crate) fn atomic_rmw_bits(
+    heap: &SymHeap,
+    offset: usize,
+    tag: TypeTag,
+    kind: AmoKind,
+    operand: u64,
+    comparand: u64,
+) -> u64 {
+    match tag.size() {
+        4 => {
+            let a = heap.atomic_u32(offset);
+            let op32 = operand as u32;
+            let cmp32 = comparand as u32;
+            let old = match kind {
+                AmoKind::Set | AmoKind::Swap => a.swap(op32, Ordering::AcqRel),
+                AmoKind::Fetch => a.load(Ordering::Acquire),
+                AmoKind::Add | AmoKind::FetchAdd => add_bits_u32(a, op32, tag),
+                AmoKind::Inc | AmoKind::FetchInc => add_bits_u32(a, one_bits(tag) as u32, tag),
+                AmoKind::And => a.fetch_and(op32, Ordering::AcqRel),
+                AmoKind::Or => a.fetch_or(op32, Ordering::AcqRel),
+                AmoKind::Xor => a.fetch_xor(op32, Ordering::AcqRel),
+                AmoKind::CompareSwap => {
+                    match a.compare_exchange(cmp32, op32, Ordering::AcqRel, Ordering::Acquire) {
+                        Ok(v) | Err(v) => v,
+                    }
+                }
+            };
+            old as u64
+        }
+        8 => {
+            let a = heap.atomic_u64(offset);
+            match kind {
+                AmoKind::Set | AmoKind::Swap => a.swap(operand, Ordering::AcqRel),
+                AmoKind::Fetch => a.load(Ordering::Acquire),
+                AmoKind::Add | AmoKind::FetchAdd => add_bits_u64(a, operand, tag),
+                AmoKind::Inc | AmoKind::FetchInc => add_bits_u64(a, one_bits(tag), tag),
+                AmoKind::And => a.fetch_and(operand, Ordering::AcqRel),
+                AmoKind::Or => a.fetch_or(operand, Ordering::AcqRel),
+                AmoKind::Xor => a.fetch_xor(operand, Ordering::AcqRel),
+                AmoKind::CompareSwap => {
+                    match a.compare_exchange(comparand, operand, Ordering::AcqRel, Ordering::Acquire)
+                    {
+                        Ok(v) | Err(v) => v,
+                    }
+                }
+            }
+        }
+        other => panic!("AMO on {other}-byte type"),
+    }
+}
+
+/// The bit pattern of "1" for inc on this type (1.0 for floats).
+fn one_bits(tag: TypeTag) -> u64 {
+    match tag {
+        TypeTag::F32 => 1.0f32.to_bits() as u64,
+        TypeTag::F64 => 1.0f64.to_bits(),
+        _ => 1,
+    }
+}
+
+/// Integer add is native; float add is a CAS loop over the bit pattern
+/// (exactly how GPU atomics implement FP add on formats without native
+/// support).
+fn add_bits_u32(a: &std::sync::atomic::AtomicU32, operand: u32, tag: TypeTag) -> u32 {
+    if tag == TypeTag::F32 {
+        loop {
+            let cur = a.load(Ordering::Acquire);
+            let next = (f32::from_bits(cur) + f32::from_bits(operand)).to_bits();
+            if a.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return cur;
+            }
+        }
+    } else {
+        a.fetch_add(operand, Ordering::AcqRel)
+    }
+}
+
+fn add_bits_u64(a: &std::sync::atomic::AtomicU64, operand: u64, tag: TypeTag) -> u64 {
+    if tag == TypeTag::F64 {
+        loop {
+            let cur = a.load(Ordering::Acquire);
+            let next = (f64::from_bits(cur) + f64::from_bits(operand)).to_bits();
+            if a.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return cur;
+            }
+        }
+    } else {
+        a.fetch_add(operand, Ordering::AcqRel)
+    }
+}
+
+impl PeCtx {
+    /// Core AMO dispatch. Fetching kinds return the old value.
+    fn amo<T: AmoElem>(
+        &self,
+        addr: SymAddr<T>,
+        pe: usize,
+        kind: AmoKind,
+        operand: T,
+        comparand: T,
+        fetching: bool,
+    ) -> T {
+        assert!(pe < self.npes());
+        Metrics::add(&self.rt.metrics.amos, 1);
+        let loc = self.loc_of(pe);
+        if self.ipc.lookup(pe).is_some() {
+            let old = atomic_rmw_bits(
+                self.rt.heaps.heap(pe),
+                addr.byte_offset(),
+                T::TAG,
+                kind,
+                operand.to_bits(),
+                comparand.to_bits(),
+            );
+            // Fire-and-forget atomics pipeline; fetching ones round-trip.
+            if fetching {
+                self.clock.advance(self.rt.cost.fetch_atomic_ns(loc));
+            } else {
+                self.clock.advance(self.rt.cost.pipelined_atomics_ns(1));
+            }
+            T::from_bits(old)
+        } else {
+            let mut m = Message::nop();
+            m.op = RingOp::Amo as u8;
+            m.dtype = T::TAG as u8;
+            m.flags = kind as u8 as u16;
+            m.pe = pe as u32;
+            m.dst_off = addr.byte_offset() as u64;
+            m.inline_val = operand.to_bits();
+            m.inline_val2 = comparand.to_bits();
+            if fetching {
+                let old = self.proxied_blocking(m);
+                self.clock
+                    .advance(self.rt.cost.fetch_atomic_ns(Locality::Remote));
+                T::from_bits(old)
+            } else {
+                self.proxied_ff(m);
+                self.clock.advance(self.rt.cost.ring_post_ns());
+                T::from_bits(0)
+            }
+        }
+    }
+
+    /// `ishmem_atomic_set`.
+    pub fn atomic_set<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) {
+        self.amo(addr, pe, AmoKind::Set, value, value, false);
+    }
+
+    /// `ishmem_atomic_fetch`.
+    pub fn atomic_fetch<T: AmoElem>(&self, addr: SymAddr<T>, pe: usize) -> T {
+        self.amo(addr, pe, AmoKind::Fetch, T::from_bits(0), T::from_bits(0), true)
+    }
+
+    /// `ishmem_atomic_add` (non-fetching, pipelined fire-and-forget).
+    pub fn atomic_add<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) {
+        self.amo(addr, pe, AmoKind::Add, value, value, false);
+    }
+
+    /// `ishmem_atomic_fetch_add`.
+    pub fn atomic_fetch_add<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) -> T {
+        self.amo(addr, pe, AmoKind::FetchAdd, value, value, true)
+    }
+
+    /// `ishmem_atomic_inc`.
+    pub fn atomic_inc<T: AmoElem>(&self, addr: SymAddr<T>, pe: usize) {
+        self.amo(addr, pe, AmoKind::Inc, T::from_bits(0), T::from_bits(0), false);
+    }
+
+    /// `ishmem_atomic_fetch_inc`.
+    pub fn atomic_fetch_inc<T: AmoElem>(&self, addr: SymAddr<T>, pe: usize) -> T {
+        self.amo(addr, pe, AmoKind::FetchInc, T::from_bits(0), T::from_bits(0), true)
+    }
+
+    /// `ishmem_atomic_swap`.
+    pub fn atomic_swap<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) -> T {
+        self.amo(addr, pe, AmoKind::Swap, value, value, true)
+    }
+
+    /// `ishmem_atomic_compare_swap` — returns the old value.
+    pub fn atomic_compare_swap<T: AmoElem>(
+        &self,
+        addr: SymAddr<T>,
+        cond: T,
+        value: T,
+        pe: usize,
+    ) -> T {
+        self.amo(addr, pe, AmoKind::CompareSwap, value, cond, true)
+    }
+
+    /// `ishmem_atomic_and` (fixed-point only, enforced at the type level
+    /// by calling with integer `T`; floats would be a compile error in the
+    /// real templates — here we assert).
+    pub fn atomic_and<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) {
+        assert!(
+            !matches!(T::TAG, TypeTag::F32 | TypeTag::F64),
+            "bitwise AMO on floating-point type"
+        );
+        self.amo(addr, pe, AmoKind::And, value, value, false);
+    }
+
+    /// `ishmem_atomic_or`.
+    pub fn atomic_or<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) {
+        assert!(!matches!(T::TAG, TypeTag::F32 | TypeTag::F64));
+        self.amo(addr, pe, AmoKind::Or, value, value, false);
+    }
+
+    /// `ishmem_atomic_xor`.
+    pub fn atomic_xor<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) {
+        assert!(!matches!(T::TAG, TypeTag::F32 | TypeTag::F64));
+        self.amo(addr, pe, AmoKind::Xor, value, value, false);
+    }
+
+    /// `ishmem_atomic_fetch_and`.
+    pub fn atomic_fetch_and<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) -> T {
+        assert!(!matches!(T::TAG, TypeTag::F32 | TypeTag::F64));
+        self.amo(addr, pe, AmoKind::And, value, value, true)
+    }
+
+    /// `ishmem_atomic_fetch_or`.
+    pub fn atomic_fetch_or<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) -> T {
+        assert!(!matches!(T::TAG, TypeTag::F32 | TypeTag::F64));
+        self.amo(addr, pe, AmoKind::Or, value, value, true)
+    }
+
+    /// `ishmem_atomic_fetch_xor`.
+    pub fn atomic_fetch_xor<T: AmoElem>(&self, addr: SymAddr<T>, value: T, pe: usize) -> T {
+        assert!(!matches!(T::TAG, TypeTag::F32 | TypeTag::F64));
+        self.amo(addr, pe, AmoKind::Xor, value, value, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::memory::HeapRegistry;
+
+    #[test]
+    fn rmw_bits_i64_ops() {
+        let reg = HeapRegistry::new(1, 4096);
+        let h = reg.heap(0);
+        h.atomic_u64(0).store(10, Ordering::SeqCst);
+        assert_eq!(
+            atomic_rmw_bits(h, 0, TypeTag::I64, AmoKind::FetchAdd, 5, 0),
+            10
+        );
+        assert_eq!(atomic_rmw_bits(h, 0, TypeTag::I64, AmoKind::Fetch, 0, 0), 15);
+        assert_eq!(
+            atomic_rmw_bits(h, 0, TypeTag::I64, AmoKind::CompareSwap, 99, 15),
+            15
+        );
+        assert_eq!(atomic_rmw_bits(h, 0, TypeTag::I64, AmoKind::Fetch, 0, 0), 99);
+        // Failed CAS leaves value untouched and returns current.
+        assert_eq!(
+            atomic_rmw_bits(h, 0, TypeTag::I64, AmoKind::CompareSwap, 1, 15),
+            99
+        );
+    }
+
+    #[test]
+    fn rmw_bits_f32_add_cas_loop() {
+        let reg = HeapRegistry::new(1, 4096);
+        let h = reg.heap(0);
+        h.atomic_u32(0).store(1.5f32.to_bits(), Ordering::SeqCst);
+        let old = atomic_rmw_bits(
+            h,
+            0,
+            TypeTag::F32,
+            AmoKind::FetchAdd,
+            2.25f32.to_bits() as u64,
+            0,
+        );
+        assert_eq!(f32::from_bits(old as u32), 1.5);
+        let now = h.atomic_u32(0).load(Ordering::SeqCst);
+        assert_eq!(f32::from_bits(now), 3.75);
+    }
+
+    #[test]
+    fn rmw_bits_u32_bitwise() {
+        let reg = HeapRegistry::new(1, 4096);
+        let h = reg.heap(0);
+        h.atomic_u32(4).store(0b1100, Ordering::SeqCst);
+        atomic_rmw_bits(h, 4, TypeTag::U32, AmoKind::Xor, 0b1010, 0);
+        assert_eq!(h.atomic_u32(4).load(Ordering::SeqCst), 0b0110);
+        atomic_rmw_bits(h, 4, TypeTag::U32, AmoKind::Or, 0b1001, 0);
+        assert_eq!(h.atomic_u32(4).load(Ordering::SeqCst), 0b1111);
+        atomic_rmw_bits(h, 4, TypeTag::U32, AmoKind::And, 0b0101, 0);
+        assert_eq!(h.atomic_u32(4).load(Ordering::SeqCst), 0b0101);
+    }
+
+    #[test]
+    fn inc_is_typed_one() {
+        let reg = HeapRegistry::new(1, 4096);
+        let h = reg.heap(0);
+        h.atomic_u64(8).store(2.0f64.to_bits(), Ordering::SeqCst);
+        atomic_rmw_bits(h, 8, TypeTag::F64, AmoKind::Inc, 0, 0);
+        assert_eq!(
+            f64::from_bits(h.atomic_u64(8).load(Ordering::SeqCst)),
+            3.0
+        );
+    }
+}

@@ -1,0 +1,699 @@
+//! Collective operations (paper §III-G.2).
+//!
+//! Intra-node algorithms are interconnect-aware, exactly as the paper
+//! describes:
+//!
+//! * **sync**: every PE *pushes* an atomic increment to each member (the
+//!   Xe-Links pipeline fire-and-forget remote atomics), then waits on its
+//!   own cached counter.
+//! * **broadcast / fcollect**: "push" stores — stores are faster than
+//!   loads, and looping destinations innermost load-shares across all the
+//!   Xe-Links.
+//! * **reduce**: split by address across threads, vector load one local +
+//!   one remote block, combine, store — with *every PE duplicating the
+//!   computation* to avoid extra synchronization. The combine lanes run
+//!   the AOT Pallas kernel through PJRT when attached (L1 on the request
+//!   path), with a native fallback for small sizes and uncovered dtypes.
+//!
+//! Inter-node members are reached through the OFI transport (the paper
+//! "relies on OpenSHMEM for inter-node operations").
+//!
+//! The collective cutover (Fig 6/7): the work-item store fan-out competes
+//! with host-initiated copy engines; the decision depends on message size,
+//! work-group size *and* PE count, which falls out of comparing the two
+//! fan-out cost models below.
+
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::metrics::Metrics;
+use crate::device::{collaborative_copy, WorkGroup};
+use crate::sim::topology::Locality;
+use crate::sim::SimClock;
+
+use super::cutover::{CutoverMode, Path};
+use super::heap::{team_sync_offset, MAX_TEAMS, RESERVED_BYTES};
+use super::types::{as_bytes, as_bytes_mut, ReduceElem, ReduceOp};
+use super::{PeCtx, SymAddr, TeamId};
+
+/// Reserved-region base for collect's size-exchange slots (one u64 per
+/// world PE, above the team sync words).
+const COLLECT_BASE: usize = MAX_TEAMS * 16;
+
+impl PeCtx {
+    // ------------------------------------------------------------- sync ----
+
+    /// `ishmem_team_sync` — the "push" synchronization.
+    pub fn team_sync(&self, team: TeamId) {
+        let spec = self.team_spec(team);
+        let tid = team.index();
+        let off = team_sync_offset(tid);
+        let round = {
+            let mut rounds = self.team_rounds.borrow_mut();
+            rounds[tid] += 1;
+            rounds[tid]
+        };
+
+        let mut remote_members = 0usize;
+        for peer in spec.members() {
+            if self.ipc.lookup(peer).is_some() {
+                self.rt
+                    .heaps
+                    .heap(peer)
+                    .atomic_u64(off)
+                    .fetch_add(1, Ordering::AcqRel);
+            } else {
+                let dummy = SimClock::new();
+                self.rt
+                    .transport
+                    .amo_fetch_add_u64(peer, off, 1, &dummy)
+                    .expect("sync atomic");
+                remote_members += 1;
+            }
+        }
+        // Pipelined fire-and-forget atomics + NIC hops for remote members.
+        self.clock
+            .advance(self.rt.cost.pipelined_atomics_ns(spec.size));
+        if remote_members > 0 {
+            self.clock
+                .advance(self.rt.cost.params.nic.latency_ns * remote_members as f64);
+        }
+
+        // Local wait: atomic compare on the GPU cache (paper: the local
+        // wait "can use the local GPU caches effectively").
+        let me = self.rt.heaps.heap(self.pe()).atomic_u64(off);
+        let target = round * spec.size as u64;
+        let mut spins = 0u64;
+        while me.load(Ordering::Acquire) < target {
+            spins += 1;
+            if spins > 64 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        self.clock
+            .advance(self.rt.cost.params.xe.atomic_fetch_ns * 0.2);
+        Metrics::add(&self.rt.metrics.collectives, 1);
+    }
+
+    /// `ishmem_sync_all`.
+    pub fn sync_all(&self) {
+        self.team_sync(TeamId::WORLD);
+    }
+
+    /// `ishmem_barrier_all` — quiet + sync (barrier implies completion of
+    /// all outstanding ops, unlike sync).
+    pub fn barrier_all(&self) {
+        self.quiet();
+        self.sync_all();
+    }
+
+    /// Team barrier.
+    pub fn team_barrier(&self, team: TeamId) {
+        self.quiet();
+        self.team_sync(team);
+    }
+
+    // ------------------------------------------------------ fan-out core ---
+
+    /// Push `len` bytes from my heap (`src_off`) to `dst_off` on `peer`,
+    /// over the chosen path. Data movement is real; cost charged by the
+    /// caller via the fan-out models (so parallel lanes aren't serially
+    /// double-charged).
+    fn push_block(&self, peer: usize, src_off: usize, dst_off: usize, len: usize, wg: &WorkGroup) {
+        if self.ipc.lookup(peer).is_some() {
+            collaborative_copy(&self.rt.heaps, self.pe(), src_off, peer, dst_off, len, wg);
+        } else {
+            let dummy = SimClock::new();
+            self.rt
+                .transport
+                .put(self.pe(), src_off, peer, dst_off, len, &dummy)
+                .expect("collective push");
+            Metrics::add(&self.rt.metrics.bytes_nic, len as u64);
+        }
+    }
+
+    /// Modeled duration of fanning `bytes` to each of `peers` via
+    /// work-item stores: peers grouped per target GPU (one Xe-Link each),
+    /// links run in parallel, work-items split across active links,
+    /// multiple peers behind one link serialize.
+    fn fanout_store_ns(&self, peers: &[usize], bytes: usize, items: usize) -> f64 {
+        if peers.is_empty() || bytes == 0 {
+            return 0.0;
+        }
+        let topo = self.rt.topo();
+        let mut per_link: std::collections::HashMap<usize, (Locality, usize)> =
+            std::collections::HashMap::new();
+        let mut nic_bytes = 0usize;
+        for &peer in peers {
+            if self.ipc.lookup(peer).is_none() {
+                nic_bytes += bytes;
+                continue;
+            }
+            let loc = self.loc_of(peer);
+            let link = topo.global_gpu_of(peer);
+            let e = per_link.entry(link).or_insert((loc, 0));
+            e.1 += bytes;
+        }
+        let active = per_link.len().max(1);
+        let items_per_link = (items / active).max(1);
+        let xe = &self.rt.cost.params.xe;
+        let mut t: f64 = 0.0;
+        for (_link, (loc, link_bytes)) in per_link {
+            t = t.max(xe.loadstore_ns(loc, link_bytes, items_per_link));
+        }
+        if nic_bytes > 0 {
+            t = t.max(self.rt.cost.internode_ns(nic_bytes, true, true));
+        }
+        self.rt.cost.device_issue_ns() + t
+    }
+
+    /// Modeled duration of the same fan-out via copy engines started by a
+    /// single reverse-offload up-call (device-initiated) — engines run in
+    /// parallel up to the per-GPU engine count, links still share.
+    fn fanout_engine_ns(&self, peers: &[usize], bytes: usize) -> f64 {
+        if peers.is_empty() || bytes == 0 {
+            return 0.0;
+        }
+        let ce = &self.rt.cost.params.ce;
+        let xe = &self.rt.cost.params.xe;
+        let mut per_link: std::collections::HashMap<usize, (Locality, usize, usize)> =
+            std::collections::HashMap::new();
+        let mut nic_bytes = 0usize;
+        for &peer in peers {
+            if self.ipc.lookup(peer).is_none() {
+                nic_bytes += bytes;
+                continue;
+            }
+            let loc = self.loc_of(peer);
+            let link = self.rt.topo().global_gpu_of(peer);
+            let e = per_link.entry(link).or_insert((loc, 0, 0));
+            e.1 += bytes;
+            e.2 += 1;
+        }
+        let mut t: f64 = 0.0;
+        for (_link, (loc, link_bytes, transfers)) in per_link {
+            // Startup overlaps across engines; transfers on one link share
+            // its bandwidth.
+            let startups = transfers.div_ceil(ce.engines_per_gpu) as f64;
+            t = t.max(
+                startups * ce.startup_immediate_ns
+                    + link_bytes as f64 / ce.path_bw_gbs(xe, loc),
+            );
+        }
+        if nic_bytes > 0 {
+            t = t.max(self.rt.cost.internode_ns(nic_bytes, true, false));
+        }
+        self.rt.cost.ring_rtt_ns() + t
+    }
+
+    /// Collective cutover decision (paper Fig 6: depends on nelems,
+    /// work-items, and npes).
+    fn decide_fanout(&self, peers: &[usize], bytes: usize, items: usize) -> Path {
+        match self.rt.config.cutover.mode {
+            CutoverMode::Never => Path::LoadStore,
+            CutoverMode::Always => Path::CopyEngine,
+            CutoverMode::Tuned => {
+                if let Some(t) = self.rt.config.cutover.fixed_threshold {
+                    return if bytes < t { Path::LoadStore } else { Path::CopyEngine };
+                }
+                if self.fanout_store_ns(peers, bytes, items)
+                    <= self.fanout_engine_ns(peers, bytes)
+                {
+                    Path::LoadStore
+                } else {
+                    Path::CopyEngine
+                }
+            }
+        }
+    }
+
+    /// Execute + charge a fan-out of my `src_off` block to `dst_off` on
+    /// each peer. Returns the path taken (reports/tests).
+    pub(crate) fn fanout(
+        &self,
+        peers: &[usize],
+        src_off: usize,
+        dst_off: usize,
+        bytes: usize,
+        items: usize,
+    ) -> Path {
+        let path = self.decide_fanout(peers, bytes, items);
+        let wg = WorkGroup::new(items.max(1).min(WorkGroup::MAX_SIZE));
+        for &peer in peers {
+            self.push_block(peer, src_off, dst_off, bytes, &wg);
+        }
+        match path {
+            Path::LoadStore => {
+                self.clock.advance(self.fanout_store_ns(peers, bytes, items));
+                Metrics::add(
+                    &self.rt.metrics.bytes_loadstore,
+                    (bytes * peers.len()) as u64,
+                );
+            }
+            Path::CopyEngine => {
+                self.clock.advance(self.fanout_engine_ns(peers, bytes));
+                Metrics::add(
+                    &self.rt.metrics.bytes_copy_engine,
+                    (bytes * peers.len()) as u64,
+                );
+            }
+        }
+        path
+    }
+
+    // -------------------------------------------------------- broadcast ----
+
+    /// `ishmem_broadcast` (single calling thread).
+    pub fn broadcast<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        root: usize,
+        team: TeamId,
+    ) {
+        self.broadcast_items(dest, src, nelems, root, team, 1);
+    }
+
+    /// Shared impl; `items` = cooperating work-items (work_group variant).
+    pub(crate) fn broadcast_items<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        root: usize,
+        team: TeamId,
+        items: usize,
+    ) {
+        assert!(nelems <= dest.len() && nelems <= src.len());
+        let spec = self.team_spec(team);
+        let bytes = nelems * std::mem::size_of::<T>();
+        Metrics::add(&self.rt.metrics.collectives, 1);
+        if self.team_my_pe(team) == root {
+            // Push to every other member; self dest gets a local copy.
+            let peers: Vec<usize> =
+                spec.members().filter(|&p| p != self.pe()).collect();
+            self.rt.heaps.copy(
+                self.pe(),
+                src.byte_offset(),
+                self.pe(),
+                dest.byte_offset(),
+                bytes,
+            );
+            self.fanout(&peers, src.byte_offset(), dest.byte_offset(), bytes, items);
+        }
+        self.team_sync(team);
+    }
+
+    // ---------------------------------------------------------- fcollect ---
+
+    /// `ishmem_fcollect` — fixed-size allgather: my `nelems` block lands at
+    /// team-rank offset in every member's `dest`.
+    pub fn fcollect<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        team: TeamId,
+    ) {
+        self.fcollect_items(dest, src, nelems, team, 1);
+    }
+
+    pub(crate) fn fcollect_items<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        team: TeamId,
+        items: usize,
+    ) {
+        let spec = self.team_spec(team);
+        assert!(nelems <= src.len());
+        assert!(spec.size * nelems <= dest.len(), "fcollect dest too small");
+        let bytes = nelems * std::mem::size_of::<T>();
+        let my_rank = self.team_my_pe(team);
+        Metrics::add(&self.rt.metrics.collectives, 1);
+
+        let dst_off = dest.byte_offset() + my_rank * bytes;
+        self.rt
+            .heaps
+            .copy(self.pe(), src.byte_offset(), self.pe(), dst_off, bytes);
+        let peers: Vec<usize> = spec.members().filter(|&p| p != self.pe()).collect();
+        self.fanout(&peers, src.byte_offset(), dst_off, bytes, items);
+        self.team_sync(team);
+    }
+
+    /// Host-initiated fcollect — the Fig 6 dashed baseline: the host
+    /// starts one copy-engine transfer per destination (no ring, PCIe
+    /// doorbell per transfer).
+    pub fn host_fcollect<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        team: TeamId,
+    ) {
+        let spec = self.team_spec(team);
+        let bytes = nelems * std::mem::size_of::<T>();
+        let my_rank = self.team_my_pe(team);
+        Metrics::add(&self.rt.metrics.collectives, 1);
+        let dst_off = dest.byte_offset() + my_rank * bytes;
+        // The host enqueues one copy per destination and the engines run
+        // them concurrently (up to engines_per_gpu), so the modeled time
+        // is doorbells (serial) + the slowest link's startup+transfer —
+        // not a serial sum.
+        let mut per_link: std::collections::HashMap<usize, (Locality, usize, usize)> =
+            std::collections::HashMap::new();
+        let mut doorbells = 0usize;
+        for peer in spec.members() {
+            if peer == self.pe() {
+                self.rt
+                    .heaps
+                    .copy(self.pe(), src.byte_offset(), self.pe(), dst_off, bytes);
+                continue;
+            }
+            if self.ipc.lookup(peer).is_some() {
+                let loc = self.loc_of(peer);
+                self.rt
+                    .heaps
+                    .copy(self.pe(), src.byte_offset(), peer, dst_off, bytes);
+                let link = self.rt.topo().global_gpu_of(peer);
+                let e = per_link.entry(link).or_insert((loc, 0, 0));
+                e.1 += bytes;
+                e.2 += 1;
+                doorbells += 1;
+                Metrics::add(&self.rt.metrics.bytes_copy_engine, bytes as u64);
+            } else {
+                self.rt
+                    .transport
+                    .put(self.pe(), src.byte_offset(), peer, dst_off, bytes, &self.clock)
+                    .expect("host_fcollect transport");
+                Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
+            }
+        }
+        let ce = &self.rt.cost.params.ce;
+        let xe = &self.rt.cost.params.xe;
+        let mut engine_time: f64 = 0.0;
+        for (_link, (loc, link_bytes, transfers)) in per_link {
+            let startups = transfers.div_ceil(ce.engines_per_gpu) as f64;
+            engine_time = engine_time.max(
+                startups * ce.startup_immediate_ns + link_bytes as f64 / ce.path_bw_gbs(xe, loc),
+            );
+        }
+        self.clock.advance(
+            self.rt.cost.params.overhead.host_issue_ns
+                + ce.host_doorbell_ns * doorbells as f64
+                + engine_time,
+        );
+        self.team_sync(team);
+    }
+
+    // ------------------------------------------------------------ collect --
+
+    /// `ishmem_collect` — variable-size allgather. Exchanges block sizes
+    /// through the reserved-region slots, then pushes data at the computed
+    /// offsets.
+    pub fn collect<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        my_nelems: usize,
+        team: TeamId,
+    ) {
+        self.collect_items(dest, src, my_nelems, team, 1)
+    }
+
+    pub(crate) fn collect_items<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        my_nelems: usize,
+        team: TeamId,
+        items: usize,
+    ) {
+        let spec = self.team_spec(team);
+        assert!(my_nelems <= src.len());
+        assert!(
+            COLLECT_BASE + self.npes() * 8 <= RESERVED_BYTES,
+            "too many PEs for collect size-exchange region"
+        );
+        Metrics::add(&self.rt.metrics.collectives, 1);
+
+        // Phase 1: publish my size into every member's slot[my_world_pe].
+        for peer in spec.members() {
+            let slot = COLLECT_BASE + self.pe() * 8;
+            if self.ipc.lookup(peer).is_some() {
+                self.rt
+                    .heaps
+                    .heap(peer)
+                    .atomic_u64(slot)
+                    .store(my_nelems as u64, Ordering::Release);
+            } else {
+                let dummy = SimClock::new();
+                let bytes = (my_nelems as u64).to_le_bytes();
+                self.rt
+                    .transport
+                    .put_from_ptr(bytes.as_ptr() as u64, peer, slot, 8, &dummy)
+                    .expect("collect size publish");
+            }
+        }
+        self.clock
+            .advance(self.rt.cost.pipelined_atomics_ns(spec.size));
+        self.team_sync(team);
+
+        // Phase 2: compute my element offset = sum of lower ranks' sizes.
+        let my_rank = spec.rank_of(self.pe()).expect("not a member");
+        let mut offset_elems = 0usize;
+        let mut total = 0usize;
+        for (rank, peer) in spec.members().enumerate() {
+            let sz = self
+                .rt
+                .heaps
+                .heap(self.pe())
+                .atomic_u64(COLLECT_BASE + peer * 8)
+                .load(Ordering::Acquire) as usize;
+            if rank < my_rank {
+                offset_elems += sz;
+            }
+            total += sz;
+        }
+        assert!(total <= dest.len(), "collect dest too small for {total} elems");
+
+        // Phase 3: push my block everywhere.
+        let esz = std::mem::size_of::<T>();
+        let bytes = my_nelems * esz;
+        let dst_off = dest.byte_offset() + offset_elems * esz;
+        self.rt
+            .heaps
+            .copy(self.pe(), src.byte_offset(), self.pe(), dst_off, bytes);
+        let peers: Vec<usize> = spec.members().filter(|&p| p != self.pe()).collect();
+        self.fanout(&peers, src.byte_offset(), dst_off, bytes, items);
+        self.team_sync(team);
+    }
+
+    // ----------------------------------------------------------- alltoall --
+
+    /// `ishmem_alltoall` — block `j` of my `src` lands in member `j`'s
+    /// `dest` at my team-rank offset.
+    pub fn alltoall<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        team: TeamId,
+    ) {
+        self.alltoall_items(dest, src, nelems, team, 1)
+    }
+
+    pub(crate) fn alltoall_items<T: super::ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        team: TeamId,
+        items: usize,
+    ) {
+        let spec = self.team_spec(team);
+        assert!(spec.size * nelems <= src.len());
+        assert!(spec.size * nelems <= dest.len());
+        let esz = std::mem::size_of::<T>();
+        let bytes = nelems * esz;
+        let my_rank = self.team_my_pe(team);
+        Metrics::add(&self.rt.metrics.collectives, 1);
+
+        let wg = WorkGroup::new(1);
+        let mut store_bytes = 0u64;
+        for (j, peer) in spec.members().enumerate() {
+            let s_off = src.byte_offset() + j * bytes;
+            let d_off = dest.byte_offset() + my_rank * bytes;
+            if peer == self.pe() {
+                self.rt.heaps.copy(self.pe(), s_off, self.pe(), d_off, bytes);
+            } else {
+                self.push_block(peer, s_off, d_off, bytes, &wg);
+                store_bytes += bytes as u64;
+            }
+        }
+        let peers: Vec<usize> = spec.members().filter(|&p| p != self.pe()).collect();
+        self.clock.advance(self.fanout_store_ns(&peers, bytes, 1));
+        Metrics::add(&self.rt.metrics.bytes_loadstore, store_bytes);
+        self.team_sync(team);
+    }
+
+    // ------------------------------------------------------------- reduce --
+
+    /// `ishmem_reduce` family (sum/prod/min/max/and/or/xor via `op`).
+    pub fn reduce<T: ReduceElem>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        op: ReduceOp,
+        team: TeamId,
+    ) {
+        self.reduce_items(dest, src, nelems, op, team, 1);
+    }
+
+    pub(crate) fn reduce_items<T: ReduceElem>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        op: ReduceOp,
+        team: TeamId,
+        items: usize,
+    ) {
+        assert!(T::supports(op), "op {op:?} undefined for this dtype");
+        assert!(nelems <= src.len() && nelems <= dest.len());
+        let spec = self.team_spec(team);
+        let esz = std::mem::size_of::<T>();
+        let bytes = nelems * esz;
+        Metrics::add(&self.rt.metrics.collectives, 1);
+
+        // Inputs must be globally ready before anyone reads them.
+        self.team_sync(team);
+
+        // Gather + fold, duplicated on every PE (paper §III-G.2).
+        let mut acc = vec![T::from_zeroed(); nelems];
+        self.rt
+            .heaps
+            .heap(self.pe())
+            .read(src.byte_offset(), as_bytes_mut(&mut acc));
+        let mut tmp = vec![T::from_zeroed(); nelems];
+        let mut gathered: f64 = 0.0;
+        for peer in spec.members() {
+            if peer == self.pe() {
+                continue;
+            }
+            if self.ipc.lookup(peer).is_some() {
+                self.rt
+                    .heaps
+                    .heap(peer)
+                    .read(src.byte_offset(), as_bytes_mut(&mut tmp));
+                gathered += self
+                    .rt
+                    .cost
+                    .params
+                    .xe
+                    .loadstore_ns(self.loc_of(peer), bytes, items);
+            } else {
+                let dummy = SimClock::new();
+                self.rt
+                    .transport
+                    .get_to_ptr(
+                        peer,
+                        src.byte_offset(),
+                        tmp.as_mut_ptr() as u64,
+                        bytes,
+                        &dummy,
+                    )
+                    .expect("reduce gather");
+                gathered += self.rt.cost.internode_ns(bytes, true, true);
+            }
+            self.fold(op, &mut acc, &tmp);
+        }
+        // Loads from distinct peers pipeline across links; approximate
+        // with the max of per-peer times plus a per-peer issue charge.
+        let members = spec.size.saturating_sub(1) as f64;
+        self.clock
+            .advance(self.rt.cost.device_issue_ns() * members + gathered.max(0.0) / members.max(1.0) + self.reduce_compute_ns(bytes, spec.size));
+
+        // In-place reductions (dest == src, spec-legal) must not clobber a
+        // source block a slower peer is still gathering: wait for everyone
+        // to finish gathering before writing results.
+        self.team_sync(team);
+        self.rt
+            .heaps
+            .heap(self.pe())
+            .write(dest.byte_offset(), as_bytes(&acc));
+        self.team_sync(team);
+    }
+
+    /// Elementwise fold of `other` into `acc` — the compute lane.
+    ///
+    /// Full (64, 128) chunks go through the AOT Pallas reduce kernel via
+    /// PJRT when a runtime is attached, the dtype is covered and the size
+    /// clears the launch threshold; everything else folds natively.
+    pub(crate) fn fold<T: ReduceElem>(&self, op: ReduceOp, acc: &mut [T], other: &[T]) {
+        debug_assert_eq!(acc.len(), other.len());
+        let rt = self.rt.runtime();
+        let use_xla = rt.is_some()
+            && T::TAG.kernel_dtype().is_some()
+            && acc.len() >= self.rt.config.xla_reduce_min_elems;
+
+        let mut start = 0usize;
+        if use_xla {
+            let xla = rt.as_ref().unwrap();
+            let dtype = T::TAG.kernel_dtype().unwrap();
+            // §Perf iterations 1–2 (EXPERIMENTS.md): wide (512×128) chunks
+            // were tried for launch amortization and measured *slower* on
+            // the CPU PJRT backend (intra-op task slicing overhead grows
+            // with rows on a 1-core pool: 15.7 vs 9.0 ns/elem), so the
+            // fold deliberately sticks to standard chunks. The wide
+            // artifacts remain available (`reduce_fold_bytes_wide`) as the
+            // recorded ablation and for multi-core backends.
+            let chunk = xla.reduce_chunk_elems();
+            while acc.len() - start >= chunk {
+                let r = start..start + chunk;
+                xla.reduce_fold_bytes(
+                    op.kernel_name(),
+                    dtype,
+                    as_bytes_mut(&mut acc[r.clone()]),
+                    as_bytes(&other[r]),
+                )
+                .expect("XLA reduce kernel");
+                start += chunk;
+                Metrics::add(&self.rt.metrics.xla_reduce_calls, 1);
+                Metrics::add(&self.rt.metrics.xla_reduce_elems, chunk as u64);
+            }
+        }
+        for i in start..acc.len() {
+            acc[i] = T::combine(op, acc[i], other[i]);
+        }
+        if start < acc.len() {
+            Metrics::add(
+                &self.rt.metrics.native_reduce_elems,
+                (acc.len() - start) as u64,
+            );
+        }
+    }
+
+    /// Modeled compute time of the duplicated reduction (vector ALU bound,
+    /// roughly HBM-rate for one load + one op + one store per element).
+    fn reduce_compute_ns(&self, bytes: usize, team_size: usize) -> f64 {
+        let passes = team_size.saturating_sub(1) as f64;
+        bytes as f64 * passes / (self.rt.cost.params.xe.hbm_bw_gbs / 2.0)
+    }
+}
+
+/// Zero-init helper for gather buffers (all ShmemTypes are POD).
+pub(crate) trait FromZeroed: Sized {
+    fn from_zeroed() -> Self;
+}
+
+impl<T: super::ShmemType> FromZeroed for T {
+    fn from_zeroed() -> T {
+        // SAFETY: ShmemType contract — all-zero bytes are a valid value.
+        unsafe { std::mem::zeroed() }
+    }
+}

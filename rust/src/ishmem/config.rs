@@ -1,0 +1,86 @@
+//! Runtime configuration (env-tunable in real ishmem; struct-tunable here).
+
+use crate::sim::cost::CostParams;
+use crate::sim::Topology;
+
+use super::cutover::CutoverConfig;
+
+#[derive(Clone, Debug)]
+pub struct IshmemConfig {
+    pub topology: Topology,
+    /// Per-PE device symmetric heap size, bytes.
+    pub heap_bytes: usize,
+    /// Host symmetric heap (SOS side), bytes.
+    pub host_heap_bytes: usize,
+    pub cutover: CutoverConfig,
+    pub cost: CostParams,
+    /// Reverse-offload ring capacity (messages, power of two).
+    pub ring_capacity: usize,
+    /// Completion pool per node.
+    pub completion_slots: usize,
+    /// Use immediate command lists in the proxy (paper §III-C low-latency).
+    pub use_immediate_cl: bool,
+    /// Strict FI_HMEM: inter-node traffic to unregistered heaps errors out
+    /// instead of bouncing (failure injection).
+    pub strict_hmem: bool,
+    /// Elements below this never go through the XLA reduce kernel (kernel
+    /// launch dominates); above, the AOT Pallas kernel path is used when
+    /// the dtype is covered and a runtime is attached.
+    pub xla_reduce_min_elems: usize,
+}
+
+impl Default for IshmemConfig {
+    fn default() -> Self {
+        IshmemConfig {
+            topology: Topology::default(),
+            heap_bytes: 8 << 20,
+            host_heap_bytes: 1 << 20,
+            cutover: CutoverConfig::default(),
+            cost: CostParams::default(),
+            ring_capacity: 4096,
+            completion_slots: 1024,
+            use_immediate_cl: true,
+            strict_hmem: false,
+            xla_reduce_min_elems: 1024,
+        }
+    }
+}
+
+impl IshmemConfig {
+    /// Convenience: single-node config with `npes` PEs (must fit the
+    /// default 6-GPU × 2-tile node).
+    pub fn with_npes(npes: usize) -> Self {
+        IshmemConfig {
+            topology: Topology::single_node_for(npes),
+            ..Default::default()
+        }
+    }
+
+    pub fn npes(&self) -> usize {
+        self.topology.npes()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.ring_capacity.is_power_of_two(), "ring capacity must be 2^k");
+        anyhow::ensure!(self.heap_bytes >= super::heap::RESERVED_BYTES * 2,
+            "heap too small for internal sync region");
+        anyhow::ensure!(self.completion_slots > 0, "need completion slots");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        IshmemConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_ring_capacity_rejected() {
+        let cfg = IshmemConfig { ring_capacity: 1000, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+}

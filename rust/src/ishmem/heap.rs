@@ -1,0 +1,204 @@
+//! Device-resident symmetric heap management (paper §III-E).
+//!
+//! The layout invariant of a PGAS symmetric heap: every PE performs the
+//! same sequence of collective allocations, so an object lives at the same
+//! offset in every PE's heap and a remote address is computed as
+//! `local_offset + remote_heap_base` (the paper's `ishmem_long_p` recipe).
+//!
+//! The first `RESERVED_BYTES` of every heap belong to the runtime: team
+//! sync counters for the "push" collectives (§III-G.2), signal words, and
+//! the internal scratch slot. User allocations start above.
+
+use std::marker::PhantomData;
+
+use super::types::ShmemType;
+
+/// Bytes reserved at the bottom of every heap for runtime structures.
+pub const RESERVED_BYTES: usize = 64 * 1024;
+
+/// Max teams (each gets one sync word + one op-sequence word per PE).
+pub const MAX_TEAMS: usize = 256;
+
+/// Offset of team `t`'s sync counter within the reserved region.
+pub fn team_sync_offset(team: usize) -> usize {
+    assert!(team < MAX_TEAMS);
+    team * 16
+}
+
+/// Offset of team `t`'s broadcast/collect arrival counter.
+pub fn team_arrive_offset(team: usize) -> usize {
+    assert!(team < MAX_TEAMS);
+    team * 16 + 8
+}
+
+/// A typed symmetric address: the same offset is valid on every PE.
+///
+/// This is the moral equivalent of the pointer returned by
+/// `ishmem_malloc`; indexing yields element addresses, `slice` yields
+/// sub-buffers. It is `Copy` and can be freely shared across PE closures.
+pub struct SymAddr<T: ShmemType> {
+    offset: usize,
+    len: usize,
+    _t: PhantomData<T>,
+}
+
+impl<T: ShmemType> Clone for SymAddr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: ShmemType> Copy for SymAddr<T> {}
+
+impl<T: ShmemType> std::fmt::Debug for SymAddr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SymAddr<{}>({}+{})", std::any::type_name::<T>(), self.offset, self.len)
+    }
+}
+
+impl<T: ShmemType> SymAddr<T> {
+    pub(crate) fn new(offset: usize, len: usize) -> Self {
+        SymAddr { offset, len, _t: PhantomData }
+    }
+
+    pub fn byte_offset(&self) -> usize {
+        self.offset
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len * std::mem::size_of::<T>()
+    }
+
+    /// Address of element `i` (bounds-checked).
+    pub fn at(&self, i: usize) -> SymAddr<T> {
+        assert!(i < self.len, "index {i} out of {}", self.len);
+        SymAddr::new(self.offset + i * std::mem::size_of::<T>(), self.len - i)
+    }
+
+    /// Sub-buffer `[start, start+len)`.
+    pub fn slice(&self, start: usize, len: usize) -> SymAddr<T> {
+        assert!(start + len <= self.len, "slice {start}+{len} out of {}", self.len);
+        SymAddr::new(self.offset + start * std::mem::size_of::<T>(), len)
+    }
+}
+
+/// Mirrored bump allocator: each PE runs an identical instance, so
+/// identical collective allocation sequences produce identical offsets
+/// (the symmetric-heap contract; divergence is detected by the debug
+/// cross-check in `PeCtx::malloc`).
+#[derive(Debug)]
+pub struct SymAllocator {
+    cursor: usize,
+    limit: usize,
+    allocs: usize,
+}
+
+impl SymAllocator {
+    pub fn new(heap_bytes: usize) -> Self {
+        SymAllocator { cursor: RESERVED_BYTES, limit: heap_bytes, allocs: 0 }
+    }
+
+    /// Allocate `len` elements of `T`, 128-byte aligned like the real
+    /// device allocator.
+    pub fn alloc<T: ShmemType>(&mut self, len: usize) -> SymAddr<T> {
+        let bytes = len * std::mem::size_of::<T>();
+        let start = crate::util::round_up(self.cursor, 128);
+        let end = start + bytes;
+        assert!(
+            end <= self.limit,
+            "symmetric heap exhausted: need {bytes} at {start}, heap {}",
+            self.limit
+        );
+        self.cursor = end;
+        self.allocs += 1;
+        SymAddr::new(start, len)
+    }
+
+    /// Allocation count — used to cross-check symmetry across PEs.
+    pub fn alloc_seq(&self) -> usize {
+        self.allocs
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.cursor - RESERVED_BYTES
+    }
+
+    /// Reset all user allocations (between benchmark phases; mirrors
+    /// tearing down and re-running an OpenSHMEM job).
+    pub fn reset(&mut self) {
+        self.cursor = RESERVED_BYTES;
+        self.allocs = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn reserved_region_untouchable() {
+        let mut a = SymAllocator::new(1 << 20);
+        let addr = a.alloc::<u64>(10);
+        assert!(addr.byte_offset() >= RESERVED_BYTES);
+    }
+
+    #[test]
+    fn alignment_is_128() {
+        let mut a = SymAllocator::new(1 << 20);
+        for _ in 0..10 {
+            let addr = a.alloc::<u8>(3);
+            assert_eq!(addr.byte_offset() % 128, 0);
+        }
+    }
+
+    #[test]
+    fn mirrored_instances_agree() {
+        prop_check("mirrored allocators yield identical offsets", 50, |rng| {
+            let mut a = SymAllocator::new(1 << 20);
+            let mut b = SymAllocator::new(1 << 20);
+            for _ in 0..20 {
+                let n = rng.range(1, 500) as usize;
+                assert_eq!(
+                    a.alloc::<f32>(n).byte_offset(),
+                    b.alloc::<f32>(n).byte_offset()
+                );
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn exhaustion_panics() {
+        let mut a = SymAllocator::new(RESERVED_BYTES + 1024);
+        a.alloc::<u8>(4096);
+    }
+
+    #[test]
+    fn symaddr_indexing() {
+        let mut a = SymAllocator::new(1 << 20);
+        let addr = a.alloc::<u64>(16);
+        assert_eq!(addr.at(2).byte_offset(), addr.byte_offset() + 16);
+        assert_eq!(addr.slice(4, 8).len(), 8);
+        assert_eq!(addr.byte_len(), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn symaddr_oob_index() {
+        let mut a = SymAllocator::new(1 << 20);
+        a.alloc::<u32>(4).at(4);
+    }
+
+    #[test]
+    fn team_slots_fit_reserved_region() {
+        assert!(team_arrive_offset(MAX_TEAMS - 1) + 8 <= RESERVED_BYTES);
+    }
+}

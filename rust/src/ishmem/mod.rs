@@ -1,0 +1,343 @@
+//! The ishmem library core — the paper's primary contribution.
+//!
+//! [`Ishmem`] is the job-wide runtime (heaps, rings, proxies, teams,
+//! cutover); [`PeCtx`] is one processing element's handle, carrying the
+//! device-initiated API surface:
+//!
+//! | paper API                         | here                              |
+//! |-----------------------------------|-----------------------------------|
+//! | `ishmem_put/get/p/g/iput/iget`    | `PeCtx::{put,get,p,g,iput,iget}`  |
+//! | `ishmem_put_nbi/get_nbi`          | `PeCtx::{put_nbi,get_nbi}`        |
+//! | `ishmem_atomic_*`                 | `PeCtx::atomic_*`                 |
+//! | `ishmem_put_signal`, wait         | `PeCtx::{put_signal,signal_*}`    |
+//! | `ishmem_fence/quiet`              | `PeCtx::{fence,quiet}`            |
+//! | `ishmem_wait_until/test`          | `PeCtx::{wait_until,test}`        |
+//! | `ishmem_team_*`                   | `PeCtx::team_*`, [`TeamId`]       |
+//! | `ishmem_barrier/sync/broadcast/…` | `PeCtx::{barrier_all,team_sync,…}`|
+//! | `ishmemx_*_work_group`            | `PeCtx::*_work_group`             |
+//!
+//! Host-initiated variants (`ishmem_*` called from host code) are the
+//! `host_*` methods; they skip the ring and drive the Level-Zero command
+//! lists / OFI transport directly, like the paper's host path.
+
+pub mod amo;
+pub mod collectives;
+pub mod config;
+pub mod cutover;
+pub mod heap;
+pub mod order;
+pub mod proxy;
+pub mod rma;
+pub mod signal;
+pub mod sync;
+pub mod teams;
+pub mod types;
+pub mod workgroup;
+
+pub use config::IshmemConfig;
+pub use cutover::{CutoverConfig, CutoverMode, Path};
+pub use heap::{SymAddr, SymAllocator};
+pub use sync::Cmp;
+pub use teams::TeamId;
+pub use types::{AmoElem, ReduceElem, ReduceOp, ShmemType, TypeTag};
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::coordinator::metrics::Metrics;
+use crate::ringbuf::{CompletionPool, Message, Ring, RingOp};
+use crate::runtime::XlaRuntime;
+use crate::sim::{CostModel, HeapRegistry, SimClock, Topology};
+use crate::sos::heap::{ExternalHeapKind, SosHeaps, ThreadLevel};
+use crate::sos::pmi::PmiWorld;
+use crate::sos::transport::OfiTransport;
+use crate::ze::{IpcTable, ZeDriver};
+
+/// Job-wide runtime state (one per "machine").
+pub struct Ishmem {
+    pub config: IshmemConfig,
+    pub cost: Arc<CostModel>,
+    pub heaps: Arc<HeapRegistry>,
+    pub transport: Arc<OfiTransport>,
+    pub metrics: Arc<Metrics>,
+    #[allow(dead_code)] // held so host-initiated paths can mint command lists
+    pub(crate) driver: ZeDriver,
+    /// One reverse-offload ring + completion pool per node.
+    pub(crate) rings: Vec<Arc<Ring>>,
+    pub(crate) completions: Vec<Arc<CompletionPool>>,
+    pmi: Arc<PmiWorld>,
+    proxies: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    shutdown: AtomicBool,
+    /// User teams (ids ≥ 2); WORLD=0 and SHARED=1 are implicit.
+    pub(crate) teams: RwLock<Vec<teams::TeamSpec>>,
+    pub(crate) team_index: Mutex<HashMap<teams::TeamKey, usize>>,
+    /// AOT kernel runtime (PJRT); optional — reductions fall back to the
+    /// native combine when absent.
+    pub(crate) xla: RwLock<Option<Arc<XlaRuntime>>>,
+}
+
+impl Ishmem {
+    pub fn new(config: IshmemConfig) -> anyhow::Result<Arc<Self>> {
+        config.validate()?;
+        let topo = config.topology.clone();
+        let npes = topo.npes();
+        let cost = CostModel::new(topo.clone(), config.cost.clone());
+        let heaps = Arc::new(HeapRegistry::new(npes, config.heap_bytes));
+        let transport = Arc::new({
+            let mut t = OfiTransport::new(heaps.clone(), cost.clone());
+            t.strict_hmem = config.strict_hmem;
+            t
+        });
+        let driver = ZeDriver::new(heaps.clone(), cost.clone());
+        let metrics = Metrics::new();
+
+        let mut rings = Vec::new();
+        let mut completions = Vec::new();
+        let mut proxies = Vec::new();
+        for node in 0..topo.nodes {
+            let ring = Ring::new(config.ring_capacity);
+            let pool = Arc::new(CompletionPool::new(config.completion_slots));
+            let consumer = ring.consumer();
+            proxies.push(proxy::spawn_proxy(
+                node,
+                consumer,
+                proxy::ProxyShared {
+                    heaps: heaps.clone(),
+                    transport: transport.clone(),
+                    driver: driver.clone(),
+                    completions: pool.clone(),
+                    metrics: metrics.clone(),
+                    use_immediate_cl: config.use_immediate_cl,
+                },
+            ));
+            rings.push(ring);
+            completions.push(pool);
+        }
+
+        Ok(Arc::new(Ishmem {
+            pmi: PmiWorld::new(npes),
+            cost,
+            heaps,
+            transport,
+            metrics,
+            driver,
+            rings,
+            completions,
+            proxies: Mutex::new(proxies),
+            shutdown: AtomicBool::new(false),
+            teams: RwLock::new(Vec::new()),
+            team_index: Mutex::new(HashMap::new()),
+            xla: RwLock::new(None),
+            config,
+        }))
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.cost.topo
+    }
+
+    pub fn npes(&self) -> usize {
+        self.topo().npes()
+    }
+
+    /// Attach the PJRT runtime so reductions run the AOT Pallas kernel.
+    pub fn attach_runtime(&self, rt: Arc<XlaRuntime>) {
+        *self.xla.write().unwrap() = Some(rt);
+    }
+
+    pub fn runtime(&self) -> Option<Arc<XlaRuntime>> {
+        self.xla.read().unwrap().clone()
+    }
+
+    /// Run `f` SPMD on every PE (one thread each); returns per-PE results
+    /// in PE order. Panics in any PE propagate after all threads unwind.
+    pub fn launch<R, F>(self: &Arc<Self>, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(&mut PeCtx) -> R + Send + Sync,
+    {
+        let npes = self.npes();
+        // Quiesce internal sync state between launches: team counters and
+        // collect slots live in the reserved region and restart at zero.
+        for pe in 0..npes {
+            let zeros = vec![0u8; heap::RESERVED_BYTES];
+            self.heaps.heap(pe).write(0, &zeros);
+        }
+        // Reset per-launch team registry (user teams don't outlive a job).
+        self.teams.write().unwrap().clear();
+        self.team_index.lock().unwrap().clear();
+
+        let results: Vec<Mutex<Option<R>>> = (0..npes).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for pe in 0..npes {
+                let me = Arc::clone(self);
+                let fref = &f;
+                let slot = &results[pe];
+                handles.push(s.spawn(move || {
+                    let mut ctx = me.make_ctx(pe);
+                    let r = fref(&mut ctx);
+                    *slot.lock().unwrap() = Some(r);
+                }));
+            }
+            for h in handles {
+                if let Err(e) = h.join() {
+                    std::panic::resume_unwind(e);
+                }
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("PE produced no result"))
+            .collect()
+    }
+
+    /// `ishmem_init` for one PE: SOS dual-phase init (preinit → external
+    /// heap create → postinit), NIC registration, IPC table build.
+    fn make_ctx(self: &Arc<Self>, pe: usize) -> PeCtx {
+        let pmi = self.pmi.handle(pe);
+        let mut sos = SosHeaps::new(pmi, self.heaps.clone(), self.config.host_heap_bytes);
+        sos.preinit_thread(ThreadLevel::Multiple)
+            .expect("SOS preinit");
+        sos.heap_create(ExternalHeapKind::Ze, pe, self.config.heap_bytes)
+            .expect("external heap create");
+        sos.postinit().expect("SOS postinit");
+        self.transport.register_heap(pe);
+
+        let ipc = IpcTable::build(pe, self.topo(), self.config.heap_bytes);
+        PeCtx {
+            pe,
+            rt: Arc::clone(self),
+            clock: SimClock::new(),
+            ipc,
+            alloc: RefCell::new(SymAllocator::new(self.config.heap_bytes)),
+            team_rounds: RefCell::new(vec![0u64; heap::MAX_TEAMS]),
+            nbi_horizon_ns: Cell::new(0.0),
+            outstanding_proxy_nbi: Cell::new(0),
+            team_seq: RefCell::new(HashMap::new()),
+            sos: RefCell::new(sos),
+        }
+    }
+
+    /// Stop proxy threads. Called by `Drop`; idempotent.
+    pub fn shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for ring in &self.rings {
+            let mut m = Message::nop();
+            m.op = RingOp::Shutdown as u8;
+            ring.send(m);
+        }
+        for h in self.proxies.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Ishmem {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One processing element's context (owned by its PE thread; `!Sync`).
+pub struct PeCtx {
+    pe: usize,
+    pub(crate) rt: Arc<Ishmem>,
+    /// Modeled device timeline of this PE (µ-benchmark instrument).
+    pub clock: SimClock,
+    pub(crate) ipc: IpcTable,
+    pub(crate) alloc: RefCell<SymAllocator>,
+    /// Per-team sync round counters (push-barrier generations).
+    pub(crate) team_rounds: RefCell<Vec<u64>>,
+    /// Modeled completion horizon of outstanding nbi transfers.
+    pub(crate) nbi_horizon_ns: Cell<f64>,
+    /// Count of proxied nbi ops whose ring completion is outstanding.
+    pub(crate) outstanding_proxy_nbi: Cell<u64>,
+    /// Per-parent team-creation sequence numbers (mirrored across PEs).
+    pub(crate) team_seq: RefCell<HashMap<usize, usize>>,
+    #[allow(dead_code)] // held for the lifetime contract (finalize order)
+    pub(crate) sos: RefCell<SosHeaps>,
+}
+
+impl PeCtx {
+    /// `ishmem_my_pe`.
+    pub fn pe(&self) -> usize {
+        self.pe
+    }
+
+    /// `ishmem_n_pes`.
+    pub fn npes(&self) -> usize {
+        self.rt.npes()
+    }
+
+    pub fn topo(&self) -> &Topology {
+        self.rt.topo()
+    }
+
+    pub(crate) fn node(&self) -> usize {
+        self.rt.topo().node_of(self.pe)
+    }
+
+    pub(crate) fn ring(&self) -> &Arc<Ring> {
+        &self.rt.rings[self.node()]
+    }
+
+    pub(crate) fn completions(&self) -> &Arc<CompletionPool> {
+        &self.rt.completions[self.node()]
+    }
+
+    /// `ishmem_ptr` analogue: is `pe`'s heap reachable by direct
+    /// load/store from this PE (IPC-mapped)? `false` means every access
+    /// reverse-offloads through the proxy.
+    pub fn pe_accessible(&self, pe: usize) -> bool {
+        self.ipc.lookup(pe).is_some()
+    }
+
+    /// `ishmem_malloc` — collective symmetric allocation (synchronizing,
+    /// like the spec requires: the buffer is usable by remote PEs on
+    /// return).
+    pub fn malloc<T: ShmemType>(&self, len: usize) -> SymAddr<T> {
+        let addr = self.alloc.borrow_mut().alloc::<T>(len);
+        self.barrier_all();
+        addr
+    }
+
+    /// `ishmem_calloc` — also zero-fills the local instance.
+    pub fn calloc<T: ShmemType>(&self, len: usize) -> SymAddr<T> {
+        let addr = self.alloc.borrow_mut().alloc::<T>(len);
+        let zeros = vec![0u8; addr.byte_len()];
+        self.rt.heaps.heap(self.pe).write(addr.byte_offset(), &zeros);
+        self.barrier_all();
+        addr
+    }
+
+    /// Write the *local* instance of a symmetric object (host-style
+    /// initialization; not a communication op).
+    pub fn write_local<T: ShmemType>(&self, addr: SymAddr<T>, data: &[T]) {
+        assert!(data.len() <= addr.len());
+        self.rt
+            .heaps
+            .heap(self.pe)
+            .write(addr.byte_offset(), types::as_bytes(data));
+    }
+
+    /// Read the *local* instance of a symmetric object.
+    pub fn read_local<T: ShmemType>(&self, addr: SymAddr<T>, out: &mut [T]) {
+        assert!(out.len() <= addr.len());
+        self.rt
+            .heaps
+            .heap(self.pe)
+            .read(addr.byte_offset(), types::as_bytes_mut(out));
+    }
+
+    /// Convenience: read the whole local instance into a Vec.
+    pub fn read_local_vec<T: ShmemType + Default>(&self, addr: SymAddr<T>) -> Vec<T> {
+        let mut v = vec![T::default(); addr.len()];
+        self.read_local(addr, &mut v);
+        v
+    }
+}

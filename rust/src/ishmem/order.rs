@@ -1,0 +1,49 @@
+//! Memory ordering: `ishmem_fence` / `ishmem_quiet` (OpenSHMEM §9.11).
+//!
+//! Our data movement is eager (see rma.rs), so the *correctness* side of
+//! fence/quiet is trivially satisfied; what these calls do is (a) collapse
+//! the modeled nbi completion horizon into the PE timeline, and (b) flush
+//! the proxy pipeline when proxied fire-and-forget messages (scalar p,
+//! non-fetching AMOs to remote PEs) may still be in flight.
+
+use crate::ringbuf::{Message, RingOp};
+
+use super::rma::PROXY_OK;
+use super::PeCtx;
+
+impl PeCtx {
+    /// `ishmem_fence` — order prior puts before later puts (per-PE).
+    /// Eager movement already provides this; charge the instruction cost.
+    pub fn fence(&self) {
+        self.clock.advance(20.0);
+    }
+
+    /// `ishmem_quiet` — complete all outstanding operations by this PE.
+    pub fn quiet(&self) {
+        // (a) modeled nbi horizon.
+        let horizon = self.nbi_horizon_ns.get();
+        let now = self.clock.now_ns();
+        if horizon > now {
+            self.clock.advance(horizon - now);
+        }
+        self.nbi_horizon_ns.set(0.0);
+
+        // (b) drain the proxy: one Quiet round trip if anything was posted
+        // fire-and-forget since the last quiet. The ring is FIFO per
+        // consumer, so one completed Quiet proves all earlier messages of
+        // this PE were serviced.
+        if self.outstanding_proxy_nbi.replace(0) > 0 {
+            let mut m = Message::nop();
+            m.op = RingOp::Quiet as u8;
+            let status = self.proxied_blocking(m);
+            assert_eq!(status, PROXY_OK, "quiet proxy flush failed");
+            self.clock.advance(self.rt.cost.ring_rtt_ns());
+        }
+    }
+
+    /// Track a fire-and-forget proxy post (internal; makes quiet() flush).
+    pub(crate) fn note_proxy_ff(&self) {
+        self.outstanding_proxy_nbi
+            .set(self.outstanding_proxy_nbi.get() + 1);
+    }
+}

@@ -1,0 +1,231 @@
+//! The host proxy thread (paper Fig 2 circle 3, §III-C/D).
+//!
+//! One proxy per node services that node's reverse-offload ring: it pops
+//! 64-byte messages, executes them — Level-Zero copy engines for
+//! intra-node transfers, the OFI transport for inter-node, heap atomics
+//! for AMOs — and posts replies into the completion pool. A single
+//! host thread sustains the whole node (the paper: >20 M req/s with one
+//! CPU-side thread), so correctness never depends on proxy parallelism.
+
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::ringbuf::{CompletionPool, Message, RingConsumer, RingOp, COMPLETION_NONE};
+use crate::sim::{HeapRegistry, SimClock};
+use crate::sos::transport::OfiTransport;
+use crate::ze::cmdlist::DeviceAddr;
+use crate::ze::ZeDriver;
+
+use super::amo::atomic_rmw_bits;
+use super::rma::{FLAG_RAW_PTR, PROXY_ERR_UNREGISTERED, PROXY_OK};
+use super::types::TypeTag;
+
+pub(crate) struct ProxyShared {
+    pub heaps: Arc<HeapRegistry>,
+    pub transport: Arc<OfiTransport>,
+    pub driver: ZeDriver,
+    pub completions: Arc<CompletionPool>,
+    pub metrics: Arc<Metrics>,
+    #[allow(dead_code)] // proxy currently always uses immediate CLs
+    pub use_immediate_cl: bool,
+}
+
+pub(crate) fn spawn_proxy(
+    node: usize,
+    mut consumer: RingConsumer,
+    shared: ProxyShared,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("ishmem-proxy-{node}"))
+        .spawn(move || proxy_loop(&mut consumer, &shared))
+        .expect("spawn proxy")
+}
+
+fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
+    // Engine dispatches are timed on a proxy-local clock; the *initiator*
+    // charges its own modeled wait (ring RTT + engine time), this clock
+    // only keeps the EngineQueue occupancy honest.
+    let proxy_clock = SimClock::new();
+    loop {
+        let msg = consumer.recv();
+        match msg.ring_op() {
+            Some(RingOp::Shutdown) => return,
+            Some(op) => service(op, &msg, sh, &proxy_clock),
+            None => panic!("proxy received malformed message op={}", msg.op),
+        }
+    }
+}
+
+fn complete(sh: &ProxyShared, msg: &Message, value: u64) {
+    if msg.completion != COMPLETION_NONE {
+        sh.completions.complete(msg.completion, value);
+        Metrics::add(&sh.metrics.ring_completions, 1);
+    }
+}
+
+fn is_local(sh: &ProxyShared, a: usize, b: usize) -> bool {
+    sh.driver.cost.topo.node_of(a) == sh.driver.cost.topo.node_of(b)
+}
+
+fn service(op: RingOp, msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
+    let pe = msg.pe as usize;
+    let src_pe = msg.src_pe as usize;
+    let len = msg.len as usize;
+    let raw = msg.flags & FLAG_RAW_PTR != 0;
+
+    match op {
+        RingOp::Nop => complete(sh, msg, PROXY_OK),
+
+        RingOp::Put => {
+            if is_local(sh, src_pe, pe) {
+                // Intra-node: copy-engine path via L0 immediate CL.
+                if raw {
+                    // Private-source put: stage straight into the peer heap
+                    // (the engine reads mapped device memory either way).
+                    // SAFETY: blocking initiator keeps the pointer alive.
+                    let src =
+                        unsafe { std::slice::from_raw_parts(msg.src_off as *const u8, len) };
+                    sh.heaps.heap(pe).write(msg.dst_off as usize, src);
+                    proxy_clock.advance(1.0);
+                } else {
+                    let icl = sh.driver.create_immediate_command_list(src_pe);
+                    icl.append_memory_copy(
+                        DeviceAddr { pe, offset: msg.dst_off as usize },
+                        DeviceAddr { pe: src_pe, offset: msg.src_off as usize },
+                        len,
+                        None,
+                        proxy_clock,
+                    );
+                }
+                complete(sh, msg, PROXY_OK);
+            } else {
+                let dummy = SimClock::new();
+                let r = if raw {
+                    sh.transport
+                        .put_from_ptr(msg.src_off, pe, msg.dst_off as usize, len, &dummy)
+                } else {
+                    sh.transport.put(
+                        src_pe,
+                        msg.src_off as usize,
+                        pe,
+                        msg.dst_off as usize,
+                        len,
+                        &dummy,
+                    )
+                };
+                complete(
+                    sh,
+                    msg,
+                    if r.is_ok() { PROXY_OK } else { PROXY_ERR_UNREGISTERED },
+                );
+            }
+        }
+
+        RingOp::Get => {
+            if is_local(sh, src_pe, pe) {
+                if raw {
+                    // SAFETY: blocking initiator keeps the pointer alive.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(msg.dst_off as *mut u8, len)
+                    };
+                    sh.heaps.heap(pe).read(msg.src_off as usize, dst);
+                    proxy_clock.advance(1.0);
+                } else {
+                    let icl = sh.driver.create_immediate_command_list(src_pe);
+                    icl.append_memory_copy(
+                        DeviceAddr { pe: src_pe, offset: msg.dst_off as usize },
+                        DeviceAddr { pe, offset: msg.src_off as usize },
+                        len,
+                        None,
+                        proxy_clock,
+                    );
+                }
+                complete(sh, msg, PROXY_OK);
+            } else {
+                let dummy = SimClock::new();
+                let r = if raw {
+                    sh.transport
+                        .get_to_ptr(pe, msg.src_off as usize, msg.dst_off, len, &dummy)
+                } else {
+                    sh.transport.get(
+                        pe,
+                        msg.src_off as usize,
+                        src_pe,
+                        msg.dst_off as usize,
+                        len,
+                        &dummy,
+                    )
+                };
+                complete(
+                    sh,
+                    msg,
+                    if r.is_ok() { PROXY_OK } else { PROXY_ERR_UNREGISTERED },
+                );
+            }
+        }
+
+        RingOp::PutInline => {
+            let bytes = msg.inline_val.to_le_bytes();
+            sh.heaps
+                .heap(pe)
+                .write(msg.dst_off as usize, &bytes[..len]);
+            complete(sh, msg, PROXY_OK);
+        }
+
+        RingOp::Amo => {
+            let tag = TypeTag::from_u8(msg.dtype).expect("bad AMO dtype");
+            let kind = msg.amo_kind().expect("bad AMO kind");
+            let old = atomic_rmw_bits(
+                sh.heaps.heap(pe),
+                msg.dst_off as usize,
+                tag,
+                kind,
+                msg.inline_val,
+                msg.inline_val2,
+            );
+            complete(sh, msg, old);
+        }
+
+        RingOp::PutSignal => {
+            // Payload …
+            // SAFETY: blocking initiator keeps the pointer alive.
+            let src = unsafe { std::slice::from_raw_parts(msg.src_off as *const u8, len) };
+            let dummy = SimClock::new();
+            let ok = if is_local(sh, src_pe, pe) {
+                sh.heaps.heap(pe).write(msg.dst_off as usize, src);
+                true
+            } else {
+                sh.transport
+                    .put_from_ptr(msg.src_off, pe, msg.dst_off as usize, len, &dummy)
+                    .is_ok()
+            };
+            if !ok {
+                complete(sh, msg, PROXY_ERR_UNREGISTERED);
+                return;
+            }
+            // … then the signal (flags bit 0: 1 = add, 0 = set).
+            let kind = if msg.flags & 1 != 0 {
+                crate::ringbuf::message::AmoKind::Add
+            } else {
+                crate::ringbuf::message::AmoKind::Set
+            };
+            atomic_rmw_bits(
+                sh.heaps.heap(pe),
+                msg.inline_val2 as usize,
+                TypeTag::U64,
+                kind,
+                msg.inline_val,
+                0,
+            );
+            complete(sh, msg, PROXY_OK);
+        }
+
+        RingOp::Quiet | RingOp::Barrier => {
+            // Ring FIFO order means every prior message of every PE on this
+            // node is already serviced when we get here.
+            complete(sh, msg, PROXY_OK);
+        }
+
+        RingOp::Shutdown => unreachable!("handled by caller"),
+    }
+}

@@ -1,0 +1,73 @@
+//! Signaling operations: `ishmem_put_signal[_nbi]`, `ishmem_signal_fetch`,
+//! `ishmemx_signal_wait_until` (OpenSHMEM §9.8.3/§9.9).
+//!
+//! A put-with-signal delivers the payload, *then* updates a signal word on
+//! the target with set/add semantics — the ordering is the API's whole
+//! point (the target spins on the signal and may then read the payload).
+
+use crate::ringbuf::{Message, RingOp};
+
+use super::rma::{FLAG_RAW_PTR, PROXY_OK};
+use super::sync::Cmp;
+use super::types::ShmemType;
+use super::{PeCtx, SymAddr};
+
+/// Signal update operators (SHMEM_SIGNAL_SET / SHMEM_SIGNAL_ADD).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SignalOp {
+    Set,
+    Add,
+}
+
+impl PeCtx {
+    /// `ishmem_put_signal` — blocking put + signal update on PE `pe`.
+    pub fn put_signal<T: ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: &[T],
+        sig: SymAddr<u64>,
+        signal: u64,
+        sig_op: SignalOp,
+        pe: usize,
+    ) {
+        let bytes = std::mem::size_of_val(src);
+        if self.ipc.lookup(pe).is_some() {
+            // Payload first (blocking put orders it), then the signal store.
+            self.put(dest, src, pe);
+            match sig_op {
+                SignalOp::Set => self.atomic_set::<u64>(sig, signal, pe),
+                SignalOp::Add => self.atomic_add::<u64>(sig, signal, pe),
+            }
+        } else {
+            // Single proxied message carries payload ptr + signal update so
+            // the proxy can order them on the wire (put; fence; signal).
+            let mut m = Message::nop();
+            m.op = RingOp::PutSignal as u8;
+            m.flags = FLAG_RAW_PTR
+                | if sig_op == SignalOp::Add { 1 } else { 0 };
+            m.pe = pe as u32;
+            m.dst_off = dest.byte_offset() as u64;
+            m.src_off = src.as_ptr() as u64;
+            m.len = bytes as u64;
+            m.inline_val = signal;
+            m.inline_val2 = sig.byte_offset() as u64;
+            let status = self.proxied_blocking(m);
+            assert_eq!(status, PROXY_OK, "put_signal failed");
+            let registered = self.rt.transport.is_registered(pe);
+            self.clock
+                .advance(self.rt.cost.internode_ns(bytes + 8, registered, true));
+        }
+    }
+
+    /// `ishmem_signal_fetch` — read the local signal word.
+    pub fn signal_fetch(&self, sig: SymAddr<u64>) -> u64 {
+        self.atomic_fetch::<u64>(sig, self.pe())
+    }
+
+    /// `ishmemx_signal_wait_until`.
+    pub fn signal_wait_until(&self, sig: SymAddr<u64>, cmp: Cmp, value: u64) -> u64 {
+        self.wait_until::<u64>(sig, cmp, value);
+        self.signal_fetch(sig)
+    }
+
+}

@@ -1,0 +1,105 @@
+//! Point-to-point synchronization: `ishmem_wait_until` / `ishmem_test`
+//! (OpenSHMEM §9.10; paper Table of device APIs).
+//!
+//! Waits spin on the *local* heap word with an atomic compare — the paper
+//! notes this uses the GPU caches effectively (the remote side's pipelined
+//! atomic stores invalidate the line on arrival).
+
+use std::sync::atomic::Ordering;
+
+use super::types::{AmoElem, TypeTag};
+use super::{PeCtx, SymAddr};
+
+/// Comparison operators for wait/test (SHMEM_CMP_*).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Eq,
+    Ne,
+    Gt,
+    Ge,
+    Lt,
+    Le,
+}
+
+impl Cmp {
+    fn eval_bits(self, tag: TypeTag, lhs: u64, rhs: u64) -> bool {
+        // Compare in the value domain, not the bit domain (signed/float!).
+        match tag {
+            TypeTag::F32 => self.eval(f32::from_bits(lhs as u32), f32::from_bits(rhs as u32)),
+            TypeTag::F64 => self.eval(f64::from_bits(lhs), f64::from_bits(rhs)),
+            TypeTag::I32 => self.eval(lhs as u32 as i32, rhs as u32 as i32),
+            TypeTag::I64 => self.eval(lhs as i64, rhs as i64),
+            _ => self.eval(lhs, rhs),
+        }
+    }
+
+    fn eval<T: PartialOrd>(self, a: T, b: T) -> bool {
+        match self {
+            Cmp::Eq => a == b,
+            Cmp::Ne => a != b,
+            Cmp::Gt => a > b,
+            Cmp::Ge => a >= b,
+            Cmp::Lt => a < b,
+            Cmp::Le => a <= b,
+        }
+    }
+}
+
+impl PeCtx {
+    #[inline]
+    fn load_bits<T: AmoElem>(&self, addr: SymAddr<T>) -> u64 {
+        let heap = self.rt.heaps.heap(self.pe());
+        match std::mem::size_of::<T>() {
+            4 => heap.atomic_u32(addr.byte_offset()).load(Ordering::Acquire) as u64,
+            8 => heap.atomic_u64(addr.byte_offset()).load(Ordering::Acquire),
+            _ => unreachable!("AmoElem is 4 or 8 bytes"),
+        }
+    }
+
+    /// `ishmem_wait_until(ivar, cmp, value)` — block until the local
+    /// symmetric variable satisfies the comparison.
+    pub fn wait_until<T: AmoElem>(&self, addr: SymAddr<T>, cmp: Cmp, value: T) {
+        let rhs = value.to_bits();
+        let mut spins = 0u64;
+        while !cmp.eval_bits(T::TAG, self.load_bits(addr), rhs) {
+            spins += 1;
+            if spins > 64 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        // Modeled cost: local cached poll loop — charge one cache-resident
+        // compare-exchange-ish latency, not wall spins.
+        self.clock
+            .advance(self.rt.cost.params.xe.atomic_fetch_ns * 0.2);
+    }
+
+    /// `ishmem_test` — non-blocking probe of the condition.
+    pub fn test<T: AmoElem>(&self, addr: SymAddr<T>, cmp: Cmp, value: T) -> bool {
+        let r = cmp.eval_bits(T::TAG, self.load_bits(addr), value.to_bits());
+        self.clock
+            .advance(self.rt.cost.params.xe.atomic_fetch_ns * 0.2);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmp_value_domain() {
+        assert!(Cmp::Gt.eval_bits(TypeTag::I64, (-1i64) as u64, (-2i64) as u64));
+        // Same bits compared unsigned: u64::MAX is huge, not negative.
+        assert!(Cmp::Gt.eval_bits(TypeTag::U64, (-1i64) as u64, 5));
+        assert!(Cmp::Lt.eval_bits(TypeTag::I64, (-1i64) as u64, 5));
+        assert!(Cmp::Lt.eval_bits(
+            TypeTag::F32,
+            (-0.5f32).to_bits() as u64,
+            0.25f32.to_bits() as u64
+        ));
+        assert!(Cmp::Ne.eval_bits(TypeTag::I32, 1, 2));
+        assert!(Cmp::Le.eval_bits(TypeTag::U32, 3, 3));
+    }
+}

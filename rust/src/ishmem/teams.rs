@@ -1,0 +1,183 @@
+//! Teams: subsets of PEs for collective scoping (OpenSHMEM §9.4; the
+//! paper's collectives are "aligned with the OpenSHMEM 1.5 teams API").
+//!
+//! `TeamId::WORLD` is every PE; `TeamId::SHARED` is the caller's
+//! load/store domain (the node — ISHMEM_TEAM_SHARED, paper §III-G.2);
+//! user teams come from `team_split_strided`. Creation is collective and
+//! mirrored: every member computes the same key and the first arrival
+//! registers the spec, so ids agree without a global barrier.
+
+use super::{PeCtx, SymAddr};
+
+/// A team handle (plain id, freely copyable across PE closures).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TeamId(pub(crate) usize);
+
+impl TeamId {
+    /// All PEs (`ISHMEM_TEAM_WORLD`).
+    pub const WORLD: TeamId = TeamId(0);
+    /// The caller's shared-memory domain (`ISHMEM_TEAM_SHARED`).
+    pub const SHARED: TeamId = TeamId(1);
+
+    pub(crate) fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Strided team specification over world ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TeamSpec {
+    pub start: usize,
+    pub stride: usize,
+    pub size: usize,
+}
+
+impl TeamSpec {
+    pub fn members(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.size).map(move |i| self.start + i * self.stride)
+    }
+
+    pub fn contains(&self, pe: usize) -> bool {
+        pe >= self.start
+            && (pe - self.start) % self.stride == 0
+            && (pe - self.start) / self.stride < self.size
+    }
+
+    /// Team rank of world-PE `pe`.
+    pub fn rank_of(&self, pe: usize) -> Option<usize> {
+        self.contains(pe).then(|| (pe - self.start) / self.stride)
+    }
+}
+
+/// Key identifying one collective team-creation call site (mirrored
+/// sequence number per parent keeps repeated identical splits distinct).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TeamKey {
+    pub parent: usize,
+    pub spec: TeamSpec,
+    pub seq: usize,
+}
+
+impl PeCtx {
+    /// Resolve a team id into its world-rank spec (SHARED depends on the
+    /// calling PE's node).
+    pub(crate) fn team_spec(&self, team: TeamId) -> TeamSpec {
+        match team {
+            TeamId::WORLD => TeamSpec { start: 0, stride: 1, size: self.npes() },
+            TeamId::SHARED => {
+                let peers = self.topo().node_peers(self.pe());
+                TeamSpec { start: peers.start, stride: 1, size: peers.len() }
+            }
+            TeamId(id) => {
+                let teams = self.rt.teams.read().unwrap();
+                *teams
+                    .get(id - 2)
+                    .unwrap_or_else(|| panic!("unknown team id {id}"))
+            }
+        }
+    }
+
+    /// `ishmem_team_my_pe` — my rank within `team` (panics if not a member,
+    /// mirroring the spec's undefined behaviour as a loud failure).
+    pub fn team_my_pe(&self, team: TeamId) -> usize {
+        self.team_spec(team)
+            .rank_of(self.pe())
+            .unwrap_or_else(|| panic!("PE {} is not in team {team:?}", self.pe()))
+    }
+
+    /// `ishmem_team_n_pes`.
+    pub fn team_n_pes(&self, team: TeamId) -> usize {
+        self.team_spec(team).size
+    }
+
+    /// `ishmem_team_translate_pe` — translate my `src_pe` rank in
+    /// `src_team` to the rank in `dst_team` (None if not a member).
+    pub fn team_translate_pe(
+        &self,
+        src_team: TeamId,
+        src_pe: usize,
+        dst_team: TeamId,
+    ) -> Option<usize> {
+        let src = self.team_spec(src_team);
+        if src_pe >= src.size {
+            return None;
+        }
+        let world = src.start + src_pe * src.stride;
+        self.team_spec(dst_team).rank_of(world)
+    }
+
+    /// `ishmem_team_split_strided` — collective among the parent team's
+    /// members; every member passes identical (start, stride, size) in
+    /// *parent ranks*. Returns the new team (same id on every member).
+    pub fn team_split_strided(
+        &self,
+        parent: TeamId,
+        start: usize,
+        stride: usize,
+        size: usize,
+    ) -> TeamId {
+        assert!(stride >= 1 && size >= 1);
+        let pspec = self.team_spec(parent);
+        assert!(
+            start + (size - 1) * stride < pspec.size,
+            "split exceeds parent team"
+        );
+        // Translate parent-rank stride into world-rank stride.
+        let spec = TeamSpec {
+            start: pspec.start + start * pspec.stride,
+            stride: stride * pspec.stride,
+            size,
+        };
+        // Mirrored per-parent sequence number.
+        let seq = {
+            let mut seqs = self.team_seq.borrow_mut();
+            let c = seqs.entry(parent.index()).or_insert(0);
+            let s = *c;
+            *c += 1;
+            s
+        };
+        let key = TeamKey { parent: parent.index(), spec, seq };
+
+        let mut index = self.rt.team_index.lock().unwrap();
+        if let Some(&id) = index.get(&key) {
+            return TeamId(id);
+        }
+        let mut teams = self.rt.teams.write().unwrap();
+        let id = teams.len() + 2;
+        assert!(id < super::heap::MAX_TEAMS, "team limit exceeded");
+        teams.push(spec);
+        index.insert(key, id);
+        TeamId(id)
+    }
+
+    /// Members of `team` as world PEs (allocation-light helper).
+    pub fn team_members(&self, team: TeamId) -> Vec<usize> {
+        self.team_spec(team).members().collect()
+    }
+
+    /// Symmetric address of my block within a team-indexed buffer
+    /// (`dest` is `nelems * team_size` long; block `rank` is mine).
+    pub fn team_block<T: super::ShmemType>(
+        &self,
+        team: TeamId,
+        dest: SymAddr<T>,
+        nelems: usize,
+    ) -> SymAddr<T> {
+        let rank = self.team_my_pe(team);
+        dest.slice(rank * nelems, nelems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_membership() {
+        let s = TeamSpec { start: 2, stride: 3, size: 4 }; // {2,5,8,11}
+        assert!(s.contains(2) && s.contains(11));
+        assert!(!s.contains(3) && !s.contains(14));
+        assert_eq!(s.rank_of(8), Some(2));
+        assert_eq!(s.members().collect::<Vec<_>>(), vec![2, 5, 8, 11]);
+    }
+}

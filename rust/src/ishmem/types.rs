@@ -1,0 +1,273 @@
+//! Typed API surface: the Rust rendering of ishmem's C++ function templates
+//! (the paper: "a complete set of C++ function templates that supersede the
+//! C11 Generic routines in the current OpenSHMEM specification").
+//!
+//! `ShmemType` is implemented for every OpenSHMEM standard RMA type; the
+//! reduction/AMO subsets are narrowed by `ReduceElem` / `AmoElem` exactly
+//! like the spec's type tables (bitwise ops: fixed-point only; AMOs: 32/64
+//! bit).
+
+/// Tag used for ring-message dispatch and AOT kernel selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum TypeTag {
+    I8 = 0,
+    I16 = 1,
+    I32 = 2,
+    I64 = 3,
+    U8 = 4,
+    U16 = 5,
+    U32 = 6,
+    U64 = 7,
+    F32 = 8,
+    F64 = 9,
+}
+
+impl TypeTag {
+    pub fn from_u8(v: u8) -> Option<TypeTag> {
+        Some(match v {
+            0 => TypeTag::I8,
+            1 => TypeTag::I16,
+            2 => TypeTag::I32,
+            3 => TypeTag::I64,
+            4 => TypeTag::U8,
+            5 => TypeTag::U16,
+            6 => TypeTag::U32,
+            7 => TypeTag::U64,
+            8 => TypeTag::F32,
+            9 => TypeTag::F64,
+            _ => return None,
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            TypeTag::I8 | TypeTag::U8 => 1,
+            TypeTag::I16 | TypeTag::U16 => 2,
+            TypeTag::I32 | TypeTag::U32 | TypeTag::F32 => 4,
+            TypeTag::I64 | TypeTag::U64 | TypeTag::F64 => 8,
+        }
+    }
+
+    /// AOT reduce-kernel dtype name, if the L1 kernel family covers it.
+    pub fn kernel_dtype(self) -> Option<&'static str> {
+        match self {
+            TypeTag::F32 => Some("f32"),
+            TypeTag::I32 => Some("i32"),
+            TypeTag::I64 => Some("i64"),
+            _ => None,
+        }
+    }
+}
+
+/// Element type usable with RMA/collective data movement.
+///
+/// # Safety
+/// Implementors must be plain-old-data: every bit pattern valid, no padding
+/// (we reinterpret heap bytes as `Self`).
+pub unsafe trait ShmemType: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
+    const TAG: TypeTag;
+}
+
+macro_rules! shmem_type {
+    ($($t:ty => $tag:expr),* $(,)?) => {
+        $(unsafe impl ShmemType for $t { const TAG: TypeTag = $tag; })*
+    };
+}
+
+shmem_type! {
+    i8 => TypeTag::I8,
+    i16 => TypeTag::I16,
+    i32 => TypeTag::I32,
+    i64 => TypeTag::I64,
+    u8 => TypeTag::U8,
+    u16 => TypeTag::U16,
+    u32 => TypeTag::U32,
+    u64 => TypeTag::U64,
+    f32 => TypeTag::F32,
+    f64 => TypeTag::F64,
+}
+
+/// Reinterpret a typed slice as bytes (PODs only, via `ShmemType`).
+pub fn as_bytes<T: ShmemType>(v: &[T]) -> &[u8] {
+    // SAFETY: T is POD (ShmemType contract), lifetimes preserved.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// Reinterpret a typed mutable slice as bytes.
+pub fn as_bytes_mut<T: ShmemType>(v: &mut [T]) -> &mut [u8] {
+    // SAFETY: T is POD; every byte pattern is a valid T.
+    unsafe {
+        std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, std::mem::size_of_val(v))
+    }
+}
+
+/// OpenSHMEM reduction operators (spec §9.9.4, paper §III-G.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceOp {
+    Sum,
+    Prod,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+}
+
+impl ReduceOp {
+    pub fn kernel_name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Prod => "prod",
+            ReduceOp::Min => "min",
+            ReduceOp::Max => "max",
+            ReduceOp::And => "and",
+            ReduceOp::Or => "or",
+            ReduceOp::Xor => "xor",
+        }
+    }
+
+    pub fn is_bitwise(self) -> bool {
+        matches!(self, ReduceOp::And | ReduceOp::Or | ReduceOp::Xor)
+    }
+}
+
+/// Types that participate in reductions, with a native combine used as the
+/// small-size fast path and as the oracle for the XLA kernel path.
+pub trait ReduceElem: ShmemType {
+    /// Whether `op` is defined for this type (bitwise ⇒ fixed-point only).
+    fn supports(op: ReduceOp) -> bool;
+    fn combine(op: ReduceOp, a: Self, b: Self) -> Self;
+}
+
+macro_rules! reduce_int {
+    ($($t:ty),*) => {$(
+        impl ReduceElem for $t {
+            fn supports(_op: ReduceOp) -> bool { true }
+            fn combine(op: ReduceOp, a: Self, b: Self) -> Self {
+                match op {
+                    ReduceOp::Sum => a.wrapping_add(b),
+                    ReduceOp::Prod => a.wrapping_mul(b),
+                    ReduceOp::Min => a.min(b),
+                    ReduceOp::Max => a.max(b),
+                    ReduceOp::And => a & b,
+                    ReduceOp::Or => a | b,
+                    ReduceOp::Xor => a ^ b,
+                }
+            }
+        }
+    )*};
+}
+
+reduce_int!(i8, i16, i32, i64, u8, u16, u32, u64);
+
+macro_rules! reduce_float {
+    ($($t:ty),*) => {$(
+        impl ReduceElem for $t {
+            fn supports(op: ReduceOp) -> bool { !op.is_bitwise() }
+            fn combine(op: ReduceOp, a: Self, b: Self) -> Self {
+                match op {
+                    ReduceOp::Sum => a + b,
+                    ReduceOp::Prod => a * b,
+                    ReduceOp::Min => a.min(b),
+                    ReduceOp::Max => a.max(b),
+                    _ => panic!("bitwise reduction on floating-point type"),
+                }
+            }
+        }
+    )*};
+}
+
+reduce_float!(f32, f64);
+
+/// Types usable with atomic memory operations (32/64-bit words).
+///
+/// # Safety
+/// `Self` must be exactly 4 or 8 bytes and bit-convertible to u32/u64.
+pub unsafe trait AmoElem: ShmemType {
+    fn to_bits(self) -> u64;
+    fn from_bits(bits: u64) -> Self;
+}
+
+macro_rules! amo_elem {
+    ($($t:ty),*) => {$(
+        unsafe impl AmoElem for $t {
+            fn to_bits(self) -> u64 { self as u64 }
+            fn from_bits(bits: u64) -> Self { bits as $t }
+        }
+    )*};
+}
+
+amo_elem!(i32, i64, u32, u64);
+
+unsafe impl AmoElem for f32 {
+    fn to_bits(self) -> u64 {
+        self.to_bits() as u64
+    }
+    fn from_bits(bits: u64) -> Self {
+        f32::from_bits(bits as u32)
+    }
+}
+
+unsafe impl AmoElem for f64 {
+    fn to_bits(self) -> u64 {
+        self.to_bits()
+    }
+    fn from_bits(bits: u64) -> Self {
+        f64::from_bits(bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip_and_size() {
+        for (t, sz) in [
+            (TypeTag::I8, 1),
+            (TypeTag::U16, 2),
+            (TypeTag::F32, 4),
+            (TypeTag::F64, 8),
+        ] {
+            assert_eq!(TypeTag::from_u8(t as u8), Some(t));
+            assert_eq!(t.size(), sz);
+        }
+    }
+
+    #[test]
+    fn kernel_dtypes_match_artifacts() {
+        assert_eq!(TypeTag::F32.kernel_dtype(), Some("f32"));
+        assert_eq!(TypeTag::I64.kernel_dtype(), Some("i64"));
+        assert_eq!(TypeTag::F64.kernel_dtype(), None);
+    }
+
+    #[test]
+    fn as_bytes_roundtrip() {
+        let v: Vec<u32> = vec![1, 2, 0xDEADBEEF];
+        let b = as_bytes(&v);
+        assert_eq!(b.len(), 12);
+        assert_eq!(&b[8..12], &0xDEADBEEFu32.to_le_bytes());
+    }
+
+    #[test]
+    fn float_bitwise_unsupported() {
+        assert!(!<f32 as ReduceElem>::supports(ReduceOp::Xor));
+        assert!(<i32 as ReduceElem>::supports(ReduceOp::Xor));
+    }
+
+    #[test]
+    fn combine_semantics() {
+        assert_eq!(i32::combine(ReduceOp::Min, -3, 4), -3);
+        assert_eq!(u8::combine(ReduceOp::Sum, 250, 10), 4); // wrapping
+        assert_eq!(i64::combine(ReduceOp::Xor, 0b1100, 0b1010), 0b0110);
+        assert_eq!(f32::combine(ReduceOp::Max, 1.5, -2.0), 1.5);
+    }
+
+    #[test]
+    fn amo_bits_roundtrip() {
+        assert_eq!(<f32 as AmoElem>::from_bits(AmoElem::to_bits(1.25f32)), 1.25);
+        assert_eq!(<i64 as AmoElem>::from_bits((-5i64) as u64), -5);
+        assert_eq!(<u32 as AmoElem>::from_bits(7), 7u32);
+    }
+}

@@ -1,0 +1,163 @@
+//! `ishmemx_*_work_group` — the paper's proposed device extension APIs
+//! (§III-F): thread-collaborative variants where every work-item of a SYCL
+//! work-group participates in one communication operation.
+//!
+//! * RMA: intra-node transfers become a multi-threaded vectorized memcpy
+//!   (bandwidth scales with the work-group, Fig 4a); reverse-offloaded
+//!   transfers elect the leader item to post one ring message while the
+//!   group barriers (engine bandwidth is work-group-invariant, Fig 4b).
+//! * Collectives: fan-outs load-share the work-items across Xe-Links.
+//! * AMOs have **no** work_group variants (scalar ops don't benefit —
+//!   paper §III-F), and none are provided here.
+
+use crate::device::WorkGroup;
+
+use super::types::{ReduceElem, ReduceOp, ShmemType};
+use super::{PeCtx, SymAddr, TeamId};
+
+impl PeCtx {
+    /// `ishmemx_put_work_group`.
+    pub fn put_work_group<T: ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: &[T],
+        pe: usize,
+        wg: &WorkGroup,
+    ) {
+        // Inter-node / engine paths: group barrier to validate the source
+        // buffer, leader posts; modeled in put_items via the items count.
+        self.charge_group_entry(wg, pe);
+        self.put_items(dest, src, pe, wg.size());
+    }
+
+    /// `ishmemx_get_work_group`.
+    pub fn get_work_group<T: ShmemType>(
+        &self,
+        dest: &mut [T],
+        src: SymAddr<T>,
+        pe: usize,
+        wg: &WorkGroup,
+    ) {
+        self.charge_group_entry(wg, pe);
+        self.get_items(dest, src, pe, wg.size());
+    }
+
+    /// `ishmemx_put_nbi_work_group`.
+    pub fn put_nbi_work_group<T: ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: &[T],
+        pe: usize,
+        wg: &WorkGroup,
+    ) {
+        self.charge_group_entry(wg, pe);
+        self.put_nbi_items(dest, src, pe, wg.size());
+    }
+
+    /// `ishmemx_get_nbi_work_group`.
+    pub fn get_nbi_work_group<T: ShmemType>(
+        &self,
+        dest: &mut [T],
+        src: SymAddr<T>,
+        pe: usize,
+        wg: &WorkGroup,
+    ) {
+        self.charge_group_entry(wg, pe);
+        self.get_nbi_items(dest, src, pe, wg.size());
+    }
+
+    /// `ishmemx_broadcast_work_group`.
+    pub fn broadcast_work_group<T: ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        root: usize,
+        team: TeamId,
+        wg: &WorkGroup,
+    ) {
+        self.broadcast_items(dest, src, nelems, root, team, wg.size());
+    }
+
+    /// `ishmemx_fcollect_work_group`.
+    pub fn fcollect_work_group<T: ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        team: TeamId,
+        wg: &WorkGroup,
+    ) {
+        self.fcollect_items(dest, src, nelems, team, wg.size());
+    }
+
+    /// `ishmemx_alltoall_work_group`.
+    pub fn alltoall_work_group<T: ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        team: TeamId,
+        wg: &WorkGroup,
+    ) {
+        self.alltoall_items(dest, src, nelems, team, wg.size());
+    }
+
+    /// `ishmemx_collect_work_group`.
+    pub fn collect_work_group<T: ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        my_nelems: usize,
+        team: TeamId,
+        wg: &WorkGroup,
+    ) {
+        self.collect_items(dest, src, my_nelems, team, wg.size());
+    }
+
+    /// `ishmemx_reduce_work_group`.
+    pub fn reduce_work_group<T: ReduceElem>(
+        &self,
+        dest: SymAddr<T>,
+        src: SymAddr<T>,
+        nelems: usize,
+        op: ReduceOp,
+        team: TeamId,
+        wg: &WorkGroup,
+    ) {
+        self.reduce_items(dest, src, nelems, op, team, wg.size());
+    }
+
+    /// `ishmemx_barrier_all_work_group` — the group barriers, the leader
+    /// runs the barrier, the group re-converges.
+    pub fn barrier_all_work_group(&self, wg: &WorkGroup) {
+        self.clock.advance(self.rt.cost.group_barrier_ns());
+        self.barrier_all();
+        self.clock.advance(self.rt.cost.group_barrier_ns());
+        let _ = wg.leader();
+    }
+
+    /// `ishmemx_sync_all_work_group`.
+    pub fn sync_all_work_group(&self, wg: &WorkGroup) {
+        self.clock.advance(self.rt.cost.group_barrier_ns());
+        self.sync_all();
+        self.clock.advance(self.rt.cost.group_barrier_ns());
+        let _ = wg.leader();
+    }
+
+    /// `ishmemx_team_sync_work_group`.
+    pub fn team_sync_work_group(&self, team: TeamId, wg: &WorkGroup) {
+        self.clock.advance(self.rt.cost.group_barrier_ns());
+        self.team_sync(team);
+        self.clock.advance(self.rt.cost.group_barrier_ns());
+        let _ = wg.leader();
+    }
+
+    /// Group-entry cost: inter-node (or any proxied) group ops barrier the
+    /// group so the leader sees a valid source buffer (paper §III-G.1).
+    fn charge_group_entry(&self, wg: &WorkGroup, pe: usize) {
+        if wg.size() > 1 && self.ipc.lookup(pe).is_none() {
+            self.clock.advance(self.rt.cost.group_barrier_ns());
+        }
+    }
+}

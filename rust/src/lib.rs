@@ -1,0 +1,39 @@
+//! # rishmem — Intel® SHMEM reproduced as a Rust + JAX + Pallas stack
+//!
+//! A research reproduction of *"Intel® SHMEM: GPU-initiated OpenSHMEM using
+//! SYCL"* (Brooks et al., 2024) as a three-layer system:
+//!
+//! * **L3 (this crate)** — the ishmem library itself: device/host-initiated
+//!   RMA, AMOs, signaling, collectives, teams, `work_group` extensions, the
+//!   cutover policy, the lock-free reverse-offload ring, and the host proxy
+//!   — running against a simulated Aurora-class node (real shared-memory
+//!   data movement + an analytic hardware cost model, see [`sim`]).
+//! * **L2** — a JAX transformer (`python/compile/model.py`) AOT-lowered to
+//!   HLO text; the dist-train example drives data-parallel training whose
+//!   gradient allreduce flows through `ishmem_reduce`.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the reduction
+//!   compute lanes and the collaborative copy, executed from the Rust
+//!   request path through PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the system inventory and the paper↔module map, and
+//! `EXPERIMENTS.md` for the reproduced figures.
+
+pub mod bench;
+pub mod coordinator;
+pub mod device;
+pub mod ishmem;
+pub mod train;
+pub mod ringbuf;
+pub mod runtime;
+pub mod sim;
+pub mod sos;
+pub mod util;
+pub mod ze;
+
+pub use coordinator::launch::{run_npes, run_spmd, Machine};
+pub use device::WorkGroup;
+pub use ishmem::{
+    Cmp, CutoverConfig, CutoverMode, Ishmem, IshmemConfig, PeCtx, ReduceOp, SymAddr, TeamId,
+};
+pub use runtime::{HostTensor, XlaRuntime};
+pub use sim::{Locality, Topology};

@@ -1,0 +1,212 @@
+//! `rishmem` CLI — launcher for figures, training, baselines and info.
+//!
+//! (Hand-rolled argument parsing: the offline vendor set has no `clap`.)
+
+use std::collections::HashMap;
+
+use rishmem::bench::{figures, Figure};
+use rishmem::train::{train_data_parallel, TrainConfig};
+
+const USAGE: &str = "\
+rishmem — Intel® SHMEM reproduction (Rust + JAX/Pallas via PJRT)
+
+USAGE:
+  rishmem figure <ID> [--out DIR]     regenerate a paper figure
+        IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig6-4pe fig6-8pe
+             fig6-12pe fig7a fig7b ring ablate-cl ablate-sync all
+  rishmem train [--model M] [--pes N] [--steps S] [--lr F] [--seed K]
+                                      data-parallel training (e2e driver)
+  rishmem ze-peer                     raw Level-Zero copy-engine baseline
+  rishmem quickstart                  12-PE smoke demo (put/get/reduce)
+  rishmem info                        machine/topology/cost-model summary
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("figure") => cmd_figure(&args[1..]),
+        Some("train") => cmd_train(&args[1..]),
+        Some("ze-peer") => cmd_zepeer(),
+        Some("quickstart") => cmd_quickstart(),
+        Some("info") => cmd_info(),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown command {other:?}\n{USAGE}")),
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e:#}");
+            1
+        },
+        |()| 0,
+    );
+    std::process::exit(code);
+}
+
+fn flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut kv = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = it.next().cloned().unwrap_or_default();
+            kv.insert(key.to_string(), val);
+        } else {
+            pos.push(a.clone());
+        }
+    }
+    (pos, kv)
+}
+
+fn emit(fig: &Figure, out_dir: Option<&str>) -> anyhow::Result<()> {
+    println!("{}", fig.render_ascii());
+    if let Some(dir) = out_dir {
+        let p = fig.save_csv(dir)?;
+        println!("  wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
+    let (pos, kv) = flags(args);
+    let id = pos
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("figure: missing ID\n{USAGE}"))?;
+    let out = kv.get("out").map(|s| s.as_str());
+
+    let figs: Vec<Figure> = match id.as_str() {
+        "fig3a" => vec![figures::fig3a()],
+        "fig3b" => vec![figures::fig3b()],
+        "fig4a" => vec![figures::fig4a()],
+        "fig4b" => vec![figures::fig4b()],
+        "fig5a" => vec![figures::fig5a()],
+        "fig5b" => vec![figures::fig5b()],
+        "fig6-4pe" => vec![figures::fig6(4)],
+        "fig6-8pe" => vec![figures::fig6(8)],
+        "fig6-12pe" => vec![figures::fig6(12)],
+        "fig7a" => vec![figures::fig7a()],
+        "fig7b" => vec![figures::fig7b()],
+        "ring" => vec![figures::ring_figure()],
+        "ablate-cl" => vec![figures::ablate_cmdlists()],
+        "ablate-sync" => vec![figures::ablate_sync()],
+        "all" => figures::all_figures(),
+        other => anyhow::bail!("unknown figure id {other:?}"),
+    };
+    for f in &figs {
+        emit(f, out)?;
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let (_, kv) = flags(args);
+    let mut cfg = TrainConfig::default();
+    if let Some(m) = kv.get("model") {
+        cfg.model = m.clone();
+    }
+    if let Some(v) = kv.get("pes") {
+        cfg.pes = v.parse()?;
+    }
+    if let Some(v) = kv.get("steps") {
+        cfg.steps = v.parse()?;
+    }
+    if let Some(v) = kv.get("lr") {
+        cfg.lr = v.parse()?;
+    }
+    if let Some(v) = kv.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    if let Some(v) = kv.get("log-every") {
+        cfg.log_every = v.parse()?;
+    }
+    println!(
+        "training {} | {} PEs | {} steps | lr {}",
+        cfg.model, cfg.pes, cfg.steps, cfg.lr
+    );
+    let r = train_data_parallel(&cfg)?;
+    println!(
+        "\ndone: loss {:.4} -> {:.4} | {} params | {} tok/step | {:.1}s wall | {} XLA reduce-kernel calls",
+        r.first_loss, r.final_loss, r.param_count, r.tokens_per_step, r.wall_seconds,
+        r.xla_reduce_calls
+    );
+    println!("loss curve:");
+    for (s, l) in &r.losses {
+        println!("  step {s:5}  {l:.4}");
+    }
+    for (s, l) in &r.eval_losses {
+        println!("  eval {s:5}  {l:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_zepeer() -> anyhow::Result<()> {
+    use rishmem::bench::zepeer::zepeer_write_series;
+    use rishmem::Topology;
+    let topo = Topology::new(1, 2, 2);
+    let sizes = rishmem::bench::size_sweep();
+    let mut fig = Figure::new("ze_peer", "ze_peer copy-engine baseline", "msg size", "GB/s");
+    for (name, target) in [("same-tile", 1usize), ("cross-GPU", 2)] {
+        fig.series
+            .push(zepeer_write_series(&topo, 0, target, &sizes, name));
+    }
+    emit(&fig, None)
+}
+
+fn cmd_quickstart() -> anyhow::Result<()> {
+    use rishmem::{run_npes, ReduceOp, TeamId};
+    println!("launching 12 PEs on a simulated Aurora node…");
+    let sums = run_npes(12, |ctx| {
+        let buf = ctx.calloc::<i64>(12);
+        ctx.p(buf.at(ctx.pe()), ctx.pe() as i64, (ctx.pe() + 1) % 12);
+        ctx.barrier_all();
+        let dest = ctx.calloc::<i64>(1);
+        let src = ctx.calloc::<i64>(1);
+        ctx.write_local(src, &[ctx.pe() as i64]);
+        ctx.reduce(dest, src, 1, ReduceOp::Sum, TeamId::WORLD);
+        ctx.read_local_vec(dest)[0]
+    })?;
+    println!("sum over PE ranks on every PE: {sums:?} (expect 66s)");
+    anyhow::ensure!(sums.iter().all(|&s| s == 66));
+    println!("quickstart OK");
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    use rishmem::sim::cost::CostParams;
+    let p = CostParams::default();
+    println!("rishmem — simulated node (Borealis/Aurora-like)");
+    println!("  topology: 6 GPUs × 2 tiles = 12 PEs, fully-connected Xe-Link");
+    println!(
+        "  Xe-Link: {} GB/s/link | MDFI {} GB/s | HBM {} GB/s",
+        p.xe.link_bw_gbs, p.xe.mdfi_bw_gbs, p.xe.hbm_bw_gbs
+    );
+    println!(
+        "  per-work-item store rate: {} GB/s (local {})",
+        p.xe.per_item_rate_gbs, p.xe.per_item_local_rate_gbs
+    );
+    println!(
+        "  copy engine: startup {} ns (immediate) / {} ns (standard)",
+        p.ce.startup_immediate_ns, p.ce.startup_standard_ns
+    );
+    println!(
+        "  ring RTT: {} ns | NIC: {} GB/s, {} ns",
+        p.pcie.ring_rtt_ns, p.nic.bw_gbs, p.nic.latency_ns
+    );
+    println!(
+        "  artifacts: {}",
+        rishmem::runtime::Manifest::default_dir().display()
+    );
+    match rishmem::runtime::Manifest::load(rishmem::runtime::Manifest::default_dir()) {
+        Ok(m) => {
+            println!(
+                "  reduce kernels: {} | models: {:?}",
+                m.reduce_files.len(),
+                m.models.keys().collect::<Vec<_>>()
+            );
+        }
+        Err(_) => println!("  (artifacts not built — run `make artifacts`)"),
+    }
+    Ok(())
+}

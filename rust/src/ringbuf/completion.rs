@@ -1,0 +1,249 @@
+//! Completion pool: out-of-order reply slots (paper §III-D: "Completions
+//! are independently allocated to permit out of order replies").
+//!
+//! A GPU thread that needs a reply (blocking put/get, fetching AMO)
+//! allocates a completion slot *before* posting its ring message, embeds
+//! the slot index in the message, and spins on the slot — so replies can
+//! land in any order while waiters never interfere with each other.
+//!
+//! Allocation is a lock-free Treiber stack of free indices with an ABA tag.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Sentinel: "no completion requested" (fire-and-forget message).
+pub const COMPLETION_NONE: u32 = u32::MAX;
+
+const STATE_FREE: u32 = 0;
+const STATE_PENDING: u32 = 1;
+const STATE_DONE: u32 = 2;
+
+struct CompletionSlot {
+    state: AtomicU32,
+    /// Fetch-result payload (AMO old value, etc.).
+    value: AtomicU64,
+    /// Next free index (Treiber stack link).
+    next: AtomicU32,
+}
+
+pub struct CompletionPool {
+    slots: Box<[CompletionSlot]>,
+    /// Stack head: (tag << 32) | index, index == u32::MAX ⇒ empty.
+    head: AtomicU64,
+}
+
+/// A claimed completion slot. Must be waited or cancelled exactly once.
+#[derive(Debug, PartialEq, Eq)]
+pub struct CompletionToken {
+    pub index: u32,
+}
+
+impl CompletionPool {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0 && capacity < u32::MAX as usize);
+        let slots = (0..capacity)
+            .map(|i| CompletionSlot {
+                state: AtomicU32::new(STATE_FREE),
+                value: AtomicU64::new(0),
+                next: AtomicU32::new(if i + 1 < capacity {
+                    (i + 1) as u32
+                } else {
+                    u32::MAX
+                }),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        CompletionPool { slots, head: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn pack(tag: u32, idx: u32) -> u64 {
+        ((tag as u64) << 32) | idx as u64
+    }
+
+    fn unpack(v: u64) -> (u32, u32) {
+        ((v >> 32) as u32, v as u32)
+    }
+
+    /// Claim a slot; spins (yielding) if the pool is exhausted — bounded
+    /// outstanding-request flow control, off the fast path.
+    pub fn alloc(&self) -> CompletionToken {
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let (tag, idx) = Self::unpack(head);
+            if idx == u32::MAX {
+                std::thread::yield_now();
+                continue;
+            }
+            let next = self.slots[idx as usize].next.load(Ordering::Relaxed);
+            let new_head = Self::pack(tag.wrapping_add(1), next);
+            if self
+                .head
+                .compare_exchange_weak(head, new_head, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                let slot = &self.slots[idx as usize];
+                slot.value.store(0, Ordering::Relaxed);
+                slot.state.store(STATE_PENDING, Ordering::Release);
+                return CompletionToken { index: idx };
+            }
+        }
+    }
+
+    fn free(&self, idx: u32) {
+        let slot = &self.slots[idx as usize];
+        slot.state.store(STATE_FREE, Ordering::Relaxed);
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let (tag, old_idx) = Self::unpack(head);
+            slot.next.store(old_idx, Ordering::Relaxed);
+            let new_head = Self::pack(tag.wrapping_add(1), idx);
+            if self
+                .head
+                .compare_exchange_weak(head, new_head, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    /// Host side: post the reply into slot `idx`.
+    pub fn complete(&self, idx: u32, value: u64) {
+        assert_ne!(idx, COMPLETION_NONE);
+        let slot = &self.slots[idx as usize];
+        debug_assert_eq!(slot.state.load(Ordering::Acquire), STATE_PENDING);
+        slot.value.store(value, Ordering::Relaxed);
+        slot.state.store(STATE_DONE, Ordering::Release);
+    }
+
+    /// Device side: spin until the reply arrives, return its payload, and
+    /// recycle the slot.
+    pub fn wait(&self, token: CompletionToken) -> u64 {
+        let slot = &self.slots[token.index as usize];
+        let mut spins = 0u32;
+        while slot.state.load(Ordering::Acquire) != STATE_DONE {
+            spins += 1;
+            if spins > 128 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let v = slot.value.load(Ordering::Relaxed);
+        self.free(token.index);
+        v
+    }
+
+    /// Poll without blocking; returns the payload if done.
+    pub fn try_wait(&self, token: &CompletionToken) -> Option<u64> {
+        let slot = &self.slots[token.index as usize];
+        if slot.state.load(Ordering::Acquire) == STATE_DONE {
+            Some(slot.value.load(Ordering::Relaxed))
+        } else {
+            None
+        }
+    }
+
+    /// Consume a token previously confirmed done via `try_wait`.
+    pub fn finish(&self, token: CompletionToken) -> u64 {
+        let v = self.slots[token.index as usize].value.load(Ordering::Relaxed);
+        self.free(token.index);
+        v
+    }
+
+    /// Number of free slots (stats / flow-control tests).
+    pub fn free_count(&self) -> usize {
+        let mut n = 0;
+        let (_, mut idx) = Self::unpack(self.head.load(Ordering::Acquire));
+        while idx != u32::MAX {
+            n += 1;
+            idx = self.slots[idx as usize].next.load(Ordering::Relaxed);
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn alloc_complete_wait_roundtrip() {
+        let pool = CompletionPool::new(4);
+        let t = pool.alloc();
+        let idx = t.index;
+        pool.complete(idx, 1234);
+        assert_eq!(pool.wait(t), 1234);
+        assert_eq!(pool.free_count(), 4);
+    }
+
+    #[test]
+    fn out_of_order_completion() {
+        let pool = CompletionPool::new(8);
+        let t1 = pool.alloc();
+        let t2 = pool.alloc();
+        let t3 = pool.alloc();
+        pool.complete(t3.index, 3);
+        pool.complete(t1.index, 1);
+        pool.complete(t2.index, 2);
+        assert_eq!(pool.wait(t2), 2);
+        assert_eq!(pool.wait(t3), 3);
+        assert_eq!(pool.wait(t1), 1);
+    }
+
+    #[test]
+    fn try_wait_then_finish() {
+        let pool = CompletionPool::new(2);
+        let t = pool.alloc();
+        assert_eq!(pool.try_wait(&t), None);
+        pool.complete(t.index, 9);
+        assert_eq!(pool.try_wait(&t), Some(9));
+        assert_eq!(pool.finish(t), 9);
+    }
+
+    #[test]
+    fn pool_exhaustion_blocks_until_free() {
+        let pool = Arc::new(CompletionPool::new(2));
+        let a = pool.alloc();
+        let b = pool.alloc();
+        assert_eq!(pool.free_count(), 0);
+        let p = pool.clone();
+        let waiter = std::thread::spawn(move || {
+            // This alloc must block until one slot frees.
+            let t = p.alloc();
+            p.complete(t.index, 7);
+            p.wait(t)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.complete(a.index, 1);
+        assert_eq!(pool.wait(a), 1);
+        assert_eq!(waiter.join().unwrap(), 7);
+        pool.complete(b.index, 2);
+        assert_eq!(pool.wait(b), 2);
+        assert_eq!(pool.free_count(), 2);
+    }
+
+    #[test]
+    fn concurrent_alloc_free_stress() {
+        let pool = Arc::new(CompletionPool::new(16));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    let t = p.alloc();
+                    p.complete(t.index, i);
+                    assert_eq!(p.wait(t), i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.free_count(), 16);
+    }
+}

@@ -1,0 +1,174 @@
+//! Fixed 64-byte ring messages (paper §III-D: "Messages are fixed size
+//! (64 bytes)" — one cache line, one bus operation to transmit).
+
+/// Operation encoded in a ring message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RingOp {
+    /// No-op (used by flow-control probes and tests).
+    Nop = 0,
+    /// Contiguous put: copy `len` bytes src_off(initiator) → dst_off(pe).
+    Put = 1,
+    /// Contiguous get: copy `len` bytes src_off(pe) → dst_off(initiator).
+    Get = 2,
+    /// Scalar put of `inline_val` (≤8 bytes ride inside the message).
+    PutInline = 3,
+    /// Atomic memory op on the target word; result via completion.
+    Amo = 4,
+    /// Memory-ordering flush of this PE's outstanding proxied ops.
+    Quiet = 5,
+    /// Put + signal update (paper: signaling ops).
+    PutSignal = 6,
+    /// Team barrier hand-off (inter-node phase of barriers).
+    Barrier = 7,
+    /// Proxy shutdown (host side only).
+    Shutdown = 255,
+}
+
+impl RingOp {
+    pub fn from_u8(v: u8) -> Option<RingOp> {
+        Some(match v {
+            0 => RingOp::Nop,
+            1 => RingOp::Put,
+            2 => RingOp::Get,
+            3 => RingOp::PutInline,
+            4 => RingOp::Amo,
+            5 => RingOp::Quiet,
+            6 => RingOp::PutSignal,
+            7 => RingOp::Barrier,
+            255 => RingOp::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// AMO sub-opcode carried in `flags` low byte for `RingOp::Amo`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum AmoKind {
+    Set = 0,
+    Fetch = 1,
+    Add = 2,
+    FetchAdd = 3,
+    CompareSwap = 4,
+    And = 5,
+    Or = 6,
+    Xor = 7,
+    Swap = 8,
+    Inc = 9,
+    FetchInc = 10,
+}
+
+impl AmoKind {
+    pub fn from_u8(v: u8) -> Option<AmoKind> {
+        Some(match v {
+            0 => AmoKind::Set,
+            1 => AmoKind::Fetch,
+            2 => AmoKind::Add,
+            3 => AmoKind::FetchAdd,
+            4 => AmoKind::CompareSwap,
+            5 => AmoKind::And,
+            6 => AmoKind::Or,
+            7 => AmoKind::Xor,
+            8 => AmoKind::Swap,
+            9 => AmoKind::Inc,
+            10 => AmoKind::FetchInc,
+            _ => return None,
+        })
+    }
+}
+
+pub const MSG_SIZE: usize = 64;
+
+/// One ring message. `#[repr(C)]` + size assertion pin the 64-byte wire
+/// format; the whole struct is POD and copied by value into the ring slot.
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct Message {
+    pub op: u8,
+    /// dtype tag (ishmem::types::TypeTag) for AMO width dispatch.
+    pub dtype: u8,
+    /// op-specific flags; for AMO the low byte is `AmoKind`.
+    pub flags: u16,
+    /// Initiating PE (the proxy serves a whole node).
+    pub src_pe: u32,
+    /// Target PE.
+    pub pe: u32,
+    /// Completion slot index, or `COMPLETION_NONE` for fire-and-forget.
+    pub completion: u32,
+    pub dst_off: u64,
+    pub src_off: u64,
+    pub len: u64,
+    /// Inline scalar (PutInline, AMO operand) .
+    pub inline_val: u64,
+    /// Second operand (CompareSwap comparand; PutSignal signal offset).
+    pub inline_val2: u64,
+    /// Pad to exactly one cache line (64 B wire format).
+    pub _pad: u64,
+}
+
+const _: () = assert!(std::mem::size_of::<Message>() == MSG_SIZE);
+
+impl Message {
+    pub fn nop() -> Self {
+        Message {
+            op: RingOp::Nop as u8,
+            dtype: 0,
+            flags: 0,
+            src_pe: 0,
+            pe: 0,
+            completion: super::COMPLETION_NONE,
+            dst_off: 0,
+            src_off: 0,
+            len: 0,
+            inline_val: 0,
+            inline_val2: 0,
+            _pad: 0,
+        }
+    }
+
+    pub fn ring_op(&self) -> Option<RingOp> {
+        RingOp::from_u8(self.op)
+    }
+
+    pub fn amo_kind(&self) -> Option<AmoKind> {
+        AmoKind::from_u8((self.flags & 0xFF) as u8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_is_one_cache_line() {
+        assert_eq!(std::mem::size_of::<Message>(), 64);
+        assert_eq!(std::mem::align_of::<Message>() % 8, 0);
+    }
+
+    #[test]
+    fn op_roundtrip() {
+        for op in [
+            RingOp::Nop,
+            RingOp::Put,
+            RingOp::Get,
+            RingOp::PutInline,
+            RingOp::Amo,
+            RingOp::Quiet,
+            RingOp::PutSignal,
+            RingOp::Barrier,
+            RingOp::Shutdown,
+        ] {
+            assert_eq!(RingOp::from_u8(op as u8), Some(op));
+        }
+        assert_eq!(RingOp::from_u8(99), None);
+    }
+
+    #[test]
+    fn amo_kind_roundtrip() {
+        for k in 0..=10u8 {
+            assert_eq!(AmoKind::from_u8(k).map(|x| x as u8), Some(k));
+        }
+        assert_eq!(AmoKind::from_u8(11), None);
+    }
+}

@@ -1,0 +1,22 @@
+//! Reverse-offload queue: lock-free GPU→CPU message ring (paper §III-D).
+//!
+//! When a device-initiated operation needs host assistance (inter-node
+//! transfer, copy-engine start), the GPU thread composes a fixed 64-byte
+//! request, allocates a transmit slot with a *single atomic fetch-add*
+//! (fast arbitration among thousands of threads), and stores the message.
+//! Completions live in an independently allocated pool so replies can land
+//! out of order. The GPU end needs no progress thread; flow control is off
+//! the critical path.
+//!
+//! This is the one paper contribution that is pure concurrent software, so
+//! it is implemented *for real* (actual lock-free ring, actual threads) and
+//! stress-tested against the paper's claims (~5 µs RTT modeled, >20 M req/s
+//! arbitration — see benches/ring_buffer.rs and tests/stress_ring.rs).
+
+pub mod completion;
+pub mod message;
+pub mod ring;
+
+pub use completion::{CompletionPool, CompletionToken, COMPLETION_NONE};
+pub use message::{Message, RingOp, MSG_SIZE};
+pub use ring::{Ring, RingConsumer};

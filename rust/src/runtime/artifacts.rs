@@ -1,0 +1,198 @@
+//! `artifacts/manifest.json` parsing: the index of every AOT-lowered HLO
+//! module emitted by `python/compile/aot.py` (the L1/L2 → L3 ABI).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub reduce_rows: usize,
+    pub reduce_cols: usize,
+    /// (op, dtype) → artifact file name.
+    pub reduce_files: HashMap<(String, String), String>,
+    /// Wide-chunk variant (launch-overhead amortization); empty when the
+    /// artifacts predate it.
+    pub reduce_wide_rows: usize,
+    pub reduce_wide_files: HashMap<(String, String), String>,
+    pub copy_file: String,
+    pub models: HashMap<String, ModelManifest>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    /// Canonical flat (name, shape) parameter order — the calling
+    /// convention of `train_step` / `eval_loss` / `init_params`.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub train_step_file: String,
+    pub eval_loss_file: String,
+    pub init_file: String,
+}
+
+impl ModelManifest {
+    pub fn param_elems(&self, i: usize) -> usize {
+        self.params[i].1.iter().product()
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let need = |j: &Json, k: &str| -> Result<Json> {
+            j.get(k).cloned().ok_or_else(|| anyhow!("manifest missing key {k:?}"))
+        };
+        let need_usize = |j: &Json, k: &str| -> Result<usize> {
+            need(j, k)?.as_usize().ok_or_else(|| anyhow!("key {k:?} not a usize"))
+        };
+        let need_str = |j: &Json, k: &str| -> Result<String> {
+            Ok(need(j, k)?
+                .as_str()
+                .ok_or_else(|| anyhow!("key {k:?} not a string"))?
+                .to_string())
+        };
+
+        let red = need(&v, "reduce")?;
+        let mut reduce_files = HashMap::new();
+        for e in need(&red, "entries")?.as_arr().unwrap_or(&[]) {
+            reduce_files.insert(
+                (need_str(e, "op")?, need_str(e, "dtype")?),
+                need_str(e, "file")?,
+            );
+        }
+        let mut reduce_wide_files = HashMap::new();
+        let mut reduce_wide_rows = 0;
+        if let Some(wide) = v.get("reduce_wide") {
+            reduce_wide_rows = need_usize(wide, "rows")?;
+            for e in need(wide, "entries")?.as_arr().unwrap_or(&[]) {
+                reduce_wide_files.insert(
+                    (need_str(e, "op")?, need_str(e, "dtype")?),
+                    need_str(e, "file")?,
+                );
+            }
+        }
+
+        let copy = need(&v, "copy")?;
+
+        let mut models = HashMap::new();
+        if let Some(obj) = v.get("models").and_then(|m| m.as_obj()) {
+            for (name, m) in obj {
+                let mut params = Vec::new();
+                for p in need(m, "params")?.as_arr().unwrap_or(&[]) {
+                    let shape = need(p, "shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                        .collect::<Result<Vec<_>>>()?;
+                    params.push((need_str(p, "name")?, shape));
+                }
+                models.insert(
+                    name.clone(),
+                    ModelManifest {
+                        name: name.clone(),
+                        vocab: need_usize(m, "vocab")?,
+                        d_model: need_usize(m, "d_model")?,
+                        n_heads: need_usize(m, "n_heads")?,
+                        n_layers: need_usize(m, "n_layers")?,
+                        seq_len: need_usize(m, "seq_len")?,
+                        batch: need_usize(m, "batch")?,
+                        param_count: need_usize(m, "param_count")?,
+                        params,
+                        train_step_file: need_str(m, "train_step")?,
+                        eval_loss_file: need_str(m, "eval_loss")?,
+                        init_file: need_str(m, "init")?,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            reduce_rows: need_usize(&red, "rows")?,
+            reduce_cols: need_usize(&red, "cols")?,
+            reduce_files,
+            reduce_wide_rows,
+            reduce_wide_files,
+            copy_file: need_str(&copy, "file")?,
+            models,
+            dir,
+        })
+    }
+
+    pub fn reduce_chunk_elems(&self) -> usize {
+        self.reduce_rows * self.reduce_cols
+    }
+
+    pub fn reduce_file(&self, op: &str, dtype: &str) -> Option<PathBuf> {
+        self.reduce_files
+            .get(&(op.to_string(), dtype.to_string()))
+            .map(|f| self.dir.join(f))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (re-run aot with --models)"))
+    }
+
+    /// Default artifacts directory: `$RISHMEM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("RISHMEM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("rishmem-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,
+                "reduce":{"rows":64,"cols":128,
+                  "entries":[{"op":"sum","dtype":"f32","file":"reduce_sum_f32.hlo.txt"}]},
+                "copy":{"rows":64,"cols":128,"dtype":"f32","file":"copy_f32.hlo.txt"},
+                "models":{"tiny":{"vocab":64,"d_model":32,"n_heads":2,"n_layers":1,
+                  "seq_len":16,"batch":2,"param_count":100,
+                  "params":[{"name":"tok_emb","shape":[64,32]}],
+                  "train_step":"t.hlo.txt","eval_loss":"e.hlo.txt","init":"i.hlo.txt"}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.reduce_chunk_elems(), 8192);
+        assert!(m.reduce_file("sum", "f32").is_some());
+        assert!(m.reduce_file("xor", "f32").is_none());
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.params[0].0, "tok_emb");
+        assert_eq!(tiny.param_elems(0), 2048);
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

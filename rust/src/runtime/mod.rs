@@ -1,0 +1,375 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the CPU
+//! PJRT client via the `xla` crate.
+//!
+//! The crate's `PjRtClient` is `Rc`-based (not `Send`), so the runtime runs
+//! a dedicated **service thread** that owns the client and the compiled-
+//! executable cache; PE threads submit [`HostTensor`] requests over an
+//! mpsc channel and block on a reply channel. On a GPU system this thread
+//! is the moral equivalent of the device's compute queue.
+//!
+//! Artifacts are HLO **text** (`HloModuleProto::from_text_file`); see
+//! DESIGN.md — serialized jax≥0.5 protos are rejected by xla_extension
+//! 0.5.1, text round-trips.
+
+pub mod artifacts;
+
+pub use artifacts::{Manifest, ModelManifest};
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Element type of a [`HostTensor`] (the subset our artifacts use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I64,
+}
+
+impl DType {
+    fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::I64 => xla::ElementType::S64,
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I64 => 8,
+        }
+    }
+
+    pub fn from_kernel_name(name: &str) -> Option<DType> {
+        match name {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            "i64" => Some(DType::I64),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side tensor: raw little-endian bytes + dims + dtype. The wire
+/// format between PE threads and the PJRT service thread.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn new(dtype: DType, dims: Vec<usize>, bytes: Vec<u8>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>() * dtype.size(), bytes.len());
+        HostTensor { dtype, dims, bytes }
+    }
+
+    pub fn from_f32(dims: Vec<usize>, v: &[f32]) -> Self {
+        let mut bytes = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        HostTensor::new(DType::F32, dims, bytes)
+    }
+
+    pub fn from_i32(dims: Vec<usize>, v: &[i32]) -> Self {
+        let mut bytes = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        HostTensor::new(DType::I32, dims, bytes)
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::new(DType::I32, vec![], v.to_le_bytes().to_vec())
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        assert_eq!(self.dtype, DType::F32);
+        f32::from_le_bytes(self.bytes[..4].try_into().unwrap())
+    }
+}
+
+enum Request {
+    /// Execute artifact `file` with `args`; reply with the flattened
+    /// output tuple.
+    Execute {
+        file: String,
+        args: Vec<HostTensor>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    /// Warm the executable cache (compile without running).
+    Precompile {
+        file: String,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the PJRT service thread. Cheap to share (`Arc`).
+pub struct XlaRuntime {
+    manifest: Manifest,
+    tx: Mutex<mpsc::Sender<Request>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl XlaRuntime {
+    /// Load `artifacts/` (or `$RISHMEM_ARTIFACTS`) and start the service.
+    pub fn load_default() -> Result<std::sync::Arc<Self>> {
+        Self::load(Manifest::default_dir())
+    }
+
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<std::sync::Arc<Self>> {
+        // §Perf iteration 3 (EXPERIMENTS.md): the Eigen intra-op pool adds
+        // ~12% dispatch overhead per kernel launch on this 1-core box;
+        // disable it unless the user set their own XLA_FLAGS.
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
+        }
+        let manifest = Manifest::load(dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let base = manifest.dir.clone();
+        // Probe the client on the service thread; surface startup errors.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_loop(base, rx, ready_tx))
+            .context("spawning PJRT service thread")?;
+        ready_rx
+            .recv()
+            .context("PJRT service thread died during startup")??;
+        Ok(std::sync::Arc::new(XlaRuntime {
+            manifest,
+            tx: Mutex::new(tx),
+            worker: Mutex::new(Some(worker)),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn reduce_chunk_elems(&self) -> usize {
+        self.manifest.reduce_chunk_elems()
+    }
+
+    fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| anyhow!("PJRT service thread is gone"))
+    }
+
+    /// Execute an artifact by file name (relative to the artifacts dir).
+    pub fn execute(&self, file: &str, args: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Request::Execute { file: file.to_string(), args, reply })?;
+        rx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+
+    /// Pre-compile an artifact (hot-path warmup).
+    pub fn precompile(&self, file: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Request::Precompile { file: file.to_string(), reply })?;
+        rx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+
+    /// Wide-chunk element count, if the artifacts provide one.
+    pub fn reduce_wide_elems(&self) -> Option<usize> {
+        (self.manifest.reduce_wide_rows > 0)
+            .then(|| self.manifest.reduce_wide_rows * self.manifest.reduce_cols)
+    }
+
+    /// One pairwise reduce-kernel fold: `acc = op(acc, other)` over one
+    /// (rows × cols) chunk of `dtype`. Bytes in, bytes out.
+    pub fn reduce_fold_bytes(
+        &self,
+        op: &str,
+        dtype: &str,
+        acc: &mut [u8],
+        other: &[u8],
+    ) -> Result<()> {
+        self.fold_family(op, dtype, acc, other, false)
+    }
+
+    /// Same fold over one *wide* chunk (launch-amortized bulk path).
+    pub fn reduce_fold_bytes_wide(
+        &self,
+        op: &str,
+        dtype: &str,
+        acc: &mut [u8],
+        other: &[u8],
+    ) -> Result<()> {
+        self.fold_family(op, dtype, acc, other, true)
+    }
+
+    fn fold_family(
+        &self,
+        op: &str,
+        dtype: &str,
+        acc: &mut [u8],
+        other: &[u8],
+        wide: bool,
+    ) -> Result<()> {
+        let dt = DType::from_kernel_name(dtype)
+            .ok_or_else(|| anyhow!("dtype {dtype:?} has no reduce kernel"))?;
+        let (rows, files) = if wide {
+            anyhow::ensure!(self.manifest.reduce_wide_rows > 0, "no wide reduce artifacts");
+            (self.manifest.reduce_wide_rows, &self.manifest.reduce_wide_files)
+        } else {
+            (self.manifest.reduce_rows, &self.manifest.reduce_files)
+        };
+        let dims = vec![rows, self.manifest.reduce_cols];
+        let expect = dims.iter().product::<usize>() * dt.size();
+        anyhow::ensure!(
+            acc.len() == expect && other.len() == expect,
+            "reduce fold wants exactly one chunk ({expect} bytes), got {}/{}",
+            acc.len(),
+            other.len()
+        );
+        let file = files
+            .get(&(op.to_string(), dtype.to_string()))
+            .ok_or_else(|| anyhow!("no reduce artifact for ({op}, {dtype})"))?
+            .clone();
+        let out = self.execute(
+            &file,
+            vec![
+                HostTensor::new(dt, dims.clone(), acc.to_vec()),
+                HostTensor::new(dt, dims, other.to_vec()),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 1, "reduce kernel returned {} outputs", out.len());
+        acc.copy_from_slice(&out[0].bytes);
+        Ok(())
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.submit(Request::Shutdown);
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for XlaRuntime {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------- worker ---
+
+fn service_loop(
+    base: std::path::PathBuf,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PJRT CPU client: {e}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => return,
+            Request::Precompile { file, reply } => {
+                let r = get_exec(&client, &base, &mut cache, &file).map(|_| ());
+                let _ = reply.send(r);
+            }
+            Request::Execute { file, args, reply } => {
+                let r = (|| -> Result<Vec<HostTensor>> {
+                    let exec = get_exec(&client, &base, &mut cache, &file)?;
+                    let literals: Vec<xla::Literal> = args
+                        .iter()
+                        .map(|t| {
+                            xla::Literal::create_from_shape_and_untyped_data(
+                                t.dtype.element_type(),
+                                &t.dims,
+                                &t.bytes,
+                            )
+                            .map_err(|e| anyhow!("literal: {e}"))
+                        })
+                        .collect::<Result<_>>()?;
+                    let bufs = exec
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| anyhow!("execute {file}: {e}"))?;
+                    let result = bufs[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("fetch result: {e}"))?;
+                    // aot.py lowers with return_tuple=True: always a tuple.
+                    let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+                    parts.into_iter().map(literal_to_tensor).collect()
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn get_exec<'c>(
+    client: &xla::PjRtClient,
+    base: &std::path::Path,
+    cache: &'c mut HashMap<String, xla::PjRtLoadedExecutable>,
+    file: &str,
+) -> Result<&'c xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(file) {
+        let path = base.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exec = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {file}: {e}"))?;
+        cache.insert(file.to_string(), exec);
+    }
+    Ok(cache.get(file).unwrap())
+}
+
+fn literal_to_tensor(lit: xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let (dtype, bytes) = match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("f32: {e}"))?;
+            (DType::F32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("i32: {e}"))?;
+            (DType::I32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        xla::ElementType::S64 => {
+            let v = lit.to_vec::<i64>().map_err(|e| anyhow!("i64: {e}"))?;
+            (DType::I64, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    };
+    Ok(HostTensor { dtype, dims, bytes })
+}

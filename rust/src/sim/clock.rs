@@ -1,0 +1,86 @@
+//! Virtual time accounting.
+//!
+//! Every modeled hardware action charges nanoseconds to a `SimClock`. Each
+//! PE thread owns one clock; the figure harness reads `elapsed_ns` around an
+//! operation to compute modeled bandwidth/latency exactly the way the
+//! paper's SYCL profiling (`enable_profiling`) reads event timestamps.
+//!
+//! Clocks are plain accumulators (no global ordering): OpenSHMEM one-sided
+//! semantics mean the initiator pays the cost of an operation, and the
+//! paper's micro-benchmarks are all initiator-timed.
+
+use std::cell::Cell;
+
+#[derive(Debug, Default)]
+pub struct SimClock {
+    ns: Cell<f64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { ns: Cell::new(0.0) }
+    }
+
+    /// Charge `ns` nanoseconds of modeled time.
+    #[inline]
+    pub fn advance(&self, ns: f64) {
+        debug_assert!(ns >= 0.0, "negative time charge: {ns}");
+        self.ns.set(self.ns.get() + ns);
+    }
+
+    #[inline]
+    pub fn now_ns(&self) -> f64 {
+        self.ns.get()
+    }
+
+    pub fn reset(&self) {
+        self.ns.set(0.0);
+    }
+
+    /// Elapsed time of `f` on this clock.
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> (R, f64) {
+        let t0 = self.now_ns();
+        let r = f();
+        (r, self.now_ns() - t0)
+    }
+}
+
+/// GB/s from bytes moved in `ns` modeled nanoseconds.
+pub fn gib_per_s(bytes: usize, ns: f64) -> f64 {
+    if ns <= 0.0 {
+        return f64::INFINITY;
+    }
+    bytes as f64 / ns // bytes/ns == GB/s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let c = SimClock::new();
+        c.advance(10.0);
+        c.advance(5.5);
+        assert!((c.now_ns() - 15.5).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c.now_ns(), 0.0);
+    }
+
+    #[test]
+    fn times_closures() {
+        let c = SimClock::new();
+        let (v, dt) = c.time(|| {
+            c.advance(42.0);
+            "ok"
+        });
+        assert_eq!(v, "ok");
+        assert!((dt - 42.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_units() {
+        // 1 GiB-ish: 1e9 bytes in 1e9 ns (1 s) = 1 GB/s.
+        assert!((gib_per_s(1_000_000_000, 1e9) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,163 @@
+//! GPU copy-engine model (paper §III-B, §III-C).
+//!
+//! PVC blitter engines run Xe-Links at full speed while compute cores stay
+//! busy — but pay a startup latency per transfer. ishmem's cutover strategy
+//! exists precisely because of this trade-off: organic load/store wins for
+//! small messages, engines win for big ones (Fig 3–5).
+//!
+//! The model: `startup + doorbell + bytes / path_bw`. Engines are a per-GPU
+//! resource; concurrent users of one GPU's engines queue (modeled by an
+//! occupancy counter so collectives that fan out N transfers see
+//! serialization on the shared engine).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::topology::Locality;
+use super::xelink::XeLinkParams;
+
+#[derive(Clone, Debug)]
+pub struct CopyEngineParams {
+    /// Engine startup latency with an *immediate* command list, ns.
+    pub startup_immediate_ns: f64,
+    /// Engine startup latency with a standard command list, ns
+    /// (paper §III-C: ishmem supports both; immediate is the low-latency one).
+    pub startup_standard_ns: f64,
+    /// Extra host-side doorbell cost when the host proxy starts the engine
+    /// (PCIe write + arbitration), ns.
+    pub host_doorbell_ns: f64,
+    /// Number of main copy engines per GPU.
+    pub engines_per_gpu: usize,
+}
+
+impl Default for CopyEngineParams {
+    fn default() -> Self {
+        CopyEngineParams {
+            startup_immediate_ns: 3_200.0,
+            startup_standard_ns: 5_500.0,
+            host_doorbell_ns: 900.0,
+            engines_per_gpu: 8,
+        }
+    }
+}
+
+impl CopyEngineParams {
+    /// Copy-engine path bandwidth — engines drive the same links as
+    /// load/store but sustain the full rate (plus faster same-tile blits).
+    pub fn path_bw_gbs(&self, xe: &XeLinkParams, loc: Locality) -> f64 {
+        match loc {
+            Locality::SameTile => xe.hbm_bw_gbs / 2.0,
+            Locality::SameGpu => xe.mdfi_bw_gbs,
+            Locality::SameNode => xe.link_bw_gbs,
+            Locality::Remote => 0.0,
+        }
+    }
+
+    /// Modeled duration of one engine transfer (ns).
+    pub fn transfer_ns(
+        &self,
+        xe: &XeLinkParams,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        host_initiated: bool,
+    ) -> f64 {
+        assert!(loc != Locality::Remote, "engines cannot cross nodes");
+        let mut t = if immediate_cl {
+            self.startup_immediate_ns
+        } else {
+            self.startup_standard_ns
+        };
+        if host_initiated {
+            t += self.host_doorbell_ns;
+        }
+        t + bytes as f64 / self.path_bw_gbs(xe, loc)
+    }
+}
+
+/// Per-GPU engine occupancy: transfers queued beyond `engines_per_gpu`
+/// serialize. Tracked with a simple in-flight counter — enough to model the
+/// contention shape (fcollect fanning out N copies on one GPU).
+#[derive(Debug)]
+pub struct EngineQueue {
+    in_flight: AtomicU64,
+    engines: u64,
+}
+
+impl EngineQueue {
+    pub fn new(engines: usize) -> Self {
+        EngineQueue { in_flight: AtomicU64::new(0), engines: engines.max(1) as u64 }
+    }
+
+    /// Charge factor for a new transfer: 1.0 while engines are free, then
+    /// proportional queueing delay.
+    pub fn begin(&self) -> f64 {
+        let q = self.in_flight.fetch_add(1, Ordering::AcqRel);
+        if q < self.engines {
+            1.0
+        } else {
+            (q + 1) as f64 / self.engines as f64
+        }
+    }
+
+    pub fn end(&self) {
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_dominates_small_messages() {
+        let ce = CopyEngineParams::default();
+        let xe = XeLinkParams::default();
+        let t = ce.transfer_ns(&xe, Locality::SameNode, 8, true, false);
+        assert!(t >= ce.startup_immediate_ns);
+        // Effectively all startup:
+        assert!((t - ce.startup_immediate_ns) < 10.0);
+    }
+
+    #[test]
+    fn immediate_cl_faster_than_standard() {
+        let ce = CopyEngineParams::default();
+        let xe = XeLinkParams::default();
+        let ti = ce.transfer_ns(&xe, Locality::SameGpu, 4096, true, false);
+        let ts = ce.transfer_ns(&xe, Locality::SameGpu, 4096, false, false);
+        assert!(ti < ts);
+    }
+
+    #[test]
+    fn engine_beats_loadstore_for_large_only() {
+        // The Fig 3 crossover: single-thread load/store wins below ~4KB,
+        // engine wins above.
+        let ce = CopyEngineParams::default();
+        let xe = XeLinkParams::default();
+        let small = 1024;
+        let large = 1 << 20;
+        assert!(
+            xe.loadstore_ns(Locality::SameNode, small, 1)
+                < ce.transfer_ns(&xe, Locality::SameNode, small, true, false)
+        );
+        assert!(
+            xe.loadstore_ns(Locality::SameNode, large, 1)
+                > ce.transfer_ns(&xe, Locality::SameNode, large, true, false)
+        );
+    }
+
+    #[test]
+    fn queue_serializes_past_engine_count() {
+        let q = EngineQueue::new(2);
+        assert_eq!(q.begin(), 1.0);
+        assert_eq!(q.begin(), 1.0);
+        assert!(q.begin() > 1.0);
+        q.end();
+        q.end();
+        q.end();
+        assert_eq!(q.in_flight(), 0);
+    }
+}

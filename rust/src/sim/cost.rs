@@ -1,0 +1,201 @@
+//! Unified cost model: one façade over the per-component hardware models.
+//!
+//! Everything that charges modeled time goes through here, so calibration
+//! lives in exactly one place (DESIGN.md §6) and ablations can swap params
+//! wholesale.
+
+use std::sync::Arc;
+
+use super::copyengine::{CopyEngineParams, EngineQueue};
+use super::nic::NicParams;
+use super::pcie::PcieParams;
+use super::topology::{Locality, Topology};
+use super::xelink::XeLinkParams;
+
+#[derive(Clone, Debug, Default)]
+pub struct CostParams {
+    pub xe: XeLinkParams,
+    pub ce: CopyEngineParams,
+    pub pcie: PcieParams,
+    pub nic: NicParams,
+    pub overhead: OverheadParams,
+}
+
+#[derive(Clone, Debug)]
+pub struct OverheadParams {
+    /// Device-side issue overhead of any ishmem op: load the GPU-resident
+    /// info block, the local-PE table lookup, pointer arithmetic
+    /// (paper §III-G.1's five-step `ishmem_long_p` recipe).
+    pub device_issue_ns: f64,
+    /// Host-side issue overhead of a host-initiated op.
+    pub host_issue_ns: f64,
+    /// SYCL work-group barrier, ns (used by work_group inter-node ops to
+    /// validate input buffers before the leader posts the proxy call).
+    pub group_barrier_ns: f64,
+    /// Kernel-launch overhead for host-initiated device work, ns.
+    pub kernel_launch_ns: f64,
+}
+
+impl Default for OverheadParams {
+    fn default() -> Self {
+        OverheadParams {
+            device_issue_ns: 250.0,
+            host_issue_ns: 120.0,
+            group_barrier_ns: 400.0,
+            kernel_launch_ns: 8_000.0,
+        }
+    }
+}
+
+/// Shared, thread-safe cost model (one per launched machine).
+#[derive(Debug)]
+pub struct CostModel {
+    pub params: CostParams,
+    pub topo: Topology,
+    /// Per-GPU copy-engine occupancy (global GPU index).
+    engine_queues: Vec<EngineQueue>,
+}
+
+impl CostModel {
+    pub fn new(topo: Topology, params: CostParams) -> Arc<Self> {
+        let gpus = topo.nodes * topo.gpus_per_node;
+        Arc::new(CostModel {
+            engine_queues: (0..gpus)
+                .map(|_| EngineQueue::new(params.ce.engines_per_gpu))
+                .collect(),
+            params,
+            topo,
+        })
+    }
+
+    pub fn locality(&self, from: usize, to: usize) -> Locality {
+        self.topo.classify(from, to)
+    }
+
+    // ----------------------------------------------------------- paths ----
+
+    /// Device-initiated load/store transfer by `items` work-items.
+    pub fn loadstore_ns(&self, loc: Locality, bytes: usize, items: usize) -> f64 {
+        self.params.overhead.device_issue_ns
+            + self.params.xe.loadstore_ns(loc, bytes, items)
+    }
+
+    /// Copy-engine transfer. `host_initiated` adds the PCIe doorbell;
+    /// `via_ring` adds the reverse-offload round trip (device-initiated
+    /// large ops go: GPU → ring → proxy → engine, paper Fig 2 circle 3).
+    pub fn copy_engine_ns(
+        &self,
+        src_gpu: usize,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        host_initiated: bool,
+        via_ring: bool,
+    ) -> f64 {
+        let q = &self.engine_queues[src_gpu];
+        let factor = q.begin();
+        let base = self
+            .params
+            .ce
+            .transfer_ns(&self.params.xe, loc, bytes, immediate_cl, host_initiated);
+        q.end();
+        let ring = if via_ring {
+            self.params.pcie.ring_round_trip_ns()
+        } else {
+            0.0
+        };
+        ring + base * factor
+    }
+
+    /// Inter-node transfer: ring hand-off + host proxy + NIC RDMA.
+    pub fn internode_ns(&self, bytes: usize, registered_heap: bool, via_ring: bool) -> f64 {
+        let ring = if via_ring {
+            self.params.pcie.ring_round_trip_ns()
+        } else {
+            0.0
+        };
+        let wire = if registered_heap {
+            self.params.nic.rdma_ns(bytes)
+        } else {
+            self.params.nic.bounce_ns(bytes)
+        };
+        ring + self.params.overhead.host_issue_ns + wire
+    }
+
+    /// Pipelined remote atomics (push sync/broadcast primitives).
+    pub fn pipelined_atomics_ns(&self, n: usize) -> f64 {
+        self.params.xe.pipelined_atomics_ns(n)
+    }
+
+    /// One fetching atomic (AMO with a result).
+    pub fn fetch_atomic_ns(&self, loc: Locality) -> f64 {
+        match loc {
+            Locality::SameTile => self.params.xe.atomic_fetch_ns * 0.2,
+            Locality::SameGpu => self.params.xe.atomic_fetch_ns * 0.6,
+            Locality::SameNode => self.params.xe.atomic_fetch_ns,
+            Locality::Remote => {
+                self.params.pcie.ring_round_trip_ns() + self.params.nic.latency_ns * 2.0
+            }
+        }
+    }
+
+    pub fn device_issue_ns(&self) -> f64 {
+        self.params.overhead.device_issue_ns
+    }
+
+    pub fn group_barrier_ns(&self) -> f64 {
+        self.params.overhead.group_barrier_ns
+    }
+
+    pub fn ring_post_ns(&self) -> f64 {
+        self.params.pcie.ring_post_ns()
+    }
+
+    pub fn ring_rtt_ns(&self) -> f64 {
+        self.params.pcie.ring_round_trip_ns()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> Arc<CostModel> {
+        CostModel::new(Topology::default(), CostParams::default())
+    }
+
+    #[test]
+    fn fig3_crossover_shape() {
+        // Paper Fig 3: load/store wins up to ~4KB, engine path wins for
+        // large messages; both converge at the link roofline.
+        let m = model();
+        let loc = Locality::SameNode;
+        let small = m.loadstore_ns(loc, 2048, 1);
+        let small_ce = m.copy_engine_ns(0, loc, 2048, true, false, true);
+        assert!(small < small_ce, "{small} !< {small_ce}");
+
+        let big = m.loadstore_ns(loc, 8 << 20, 1);
+        let big_ce = m.copy_engine_ns(0, loc, 8 << 20, true, false, true);
+        assert!(big_ce < big, "{big_ce} !< {big}");
+    }
+
+    #[test]
+    fn internode_registration_matters() {
+        let m = model();
+        assert!(m.internode_ns(1 << 20, true, true) < m.internode_ns(1 << 20, false, true));
+    }
+
+    #[test]
+    fn fetch_atomic_cost_grows_with_distance() {
+        let m = model();
+        assert!(
+            m.fetch_atomic_ns(Locality::SameTile) < m.fetch_atomic_ns(Locality::SameGpu)
+        );
+        assert!(
+            m.fetch_atomic_ns(Locality::SameGpu) < m.fetch_atomic_ns(Locality::SameNode)
+        );
+        assert!(
+            m.fetch_atomic_ns(Locality::SameNode) < m.fetch_atomic_ns(Locality::Remote)
+        );
+    }
+}

@@ -1,0 +1,263 @@
+//! Simulated device memory: real bytes behind the modeled hardware.
+//!
+//! Each PE owns one `SymHeap` — the stand-in for its GPU tile's HBM — and
+//! the `HeapRegistry` is the stand-in for the node-wide unified address
+//! space that Xe-Link + Level-Zero IPC mappings provide (paper §III-G.1:
+//! "Intel SHMEM sets up memory mapping from every GPU to the symmetric
+//! heaps of every other GPU on the local node").
+//!
+//! Remote stores are real `memcpy`s between heap regions and remote AMOs
+//! are real hardware atomics, so every correctness property is exercised on
+//! actual shared memory while the cost model charges virtual time.
+//!
+//! # Memory model
+//! OpenSHMEM makes unsynchronized conflicting access a *user* error; the
+//! library itself only needs (a) plain byte copies for RMA and (b)
+//! sequentially-consistent atomics for AMO/signal/sync words. We mirror
+//! that: RMA uses raw `copy_nonoverlapping` (treating the heap as untyped
+//! bytes), AMOs go through `AtomicU32`/`AtomicU64` references constructed
+//! over properly aligned heap words.
+
+use std::sync::atomic::{AtomicU32, AtomicU64};
+
+/// One PE's symmetric heap (device-resident, paper §III-E).
+#[derive(Debug)]
+pub struct SymHeap {
+    ptr: *mut u8,
+    len: usize,
+    layout: std::alloc::Layout,
+}
+
+// SAFETY: all cross-thread access goes through raw copies/atomics with
+// OpenSHMEM's "races are user bugs" contract; the allocation itself is
+// plain heap memory that outlives every PE thread (owned by the registry).
+unsafe impl Send for SymHeap {}
+unsafe impl Sync for SymHeap {}
+
+impl SymHeap {
+    /// Allocate a zeroed heap of `len` bytes, 128-byte aligned (vector-lane
+    /// alignment; also guarantees atomic word alignment everywhere).
+    pub fn new(len: usize) -> Self {
+        assert!(len > 0);
+        let layout = std::alloc::Layout::from_size_align(len, 128).unwrap();
+        // SAFETY: layout has non-zero size.
+        let ptr = unsafe { std::alloc::alloc_zeroed(layout) };
+        assert!(!ptr.is_null(), "heap allocation failed");
+        SymHeap { ptr, len, layout }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn base_ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    #[inline]
+    fn check(&self, offset: usize, len: usize) {
+        assert!(
+            offset.checked_add(len).is_some_and(|end| end <= self.len),
+            "symmetric heap access out of bounds: off={offset} len={len} heap={}",
+            self.len
+        );
+    }
+
+    /// Copy bytes in from a local buffer (a "store" into this heap).
+    #[inline]
+    pub fn write(&self, offset: usize, src: &[u8]) {
+        self.check(offset, src.len());
+        // SAFETY: bounds checked; src is a distinct allocation.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(offset), src.len());
+        }
+    }
+
+    /// Copy bytes out into a local buffer (a "load" from this heap).
+    #[inline]
+    pub fn read(&self, offset: usize, dst: &mut [u8]) {
+        self.check(offset, dst.len());
+        // SAFETY: bounds checked; dst is a distinct allocation.
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.ptr.add(offset), dst.as_mut_ptr(), dst.len());
+        }
+    }
+
+    /// Raw pointer to `offset` (for heap-to-heap copies).
+    #[inline]
+    pub fn at(&self, offset: usize, len: usize) -> *mut u8 {
+        self.check(offset, len);
+        // SAFETY: bounds checked.
+        unsafe { self.ptr.add(offset) }
+    }
+
+    /// Atomic view of an aligned u64 heap word.
+    #[inline]
+    pub fn atomic_u64(&self, offset: usize) -> &AtomicU64 {
+        self.check(offset, 8);
+        assert_eq!(offset % 8, 0, "unaligned atomic access at {offset}");
+        // SAFETY: aligned, in-bounds, and AtomicU64 has the same layout as u64.
+        unsafe { &*(self.ptr.add(offset) as *const AtomicU64) }
+    }
+
+    /// Atomic view of an aligned u32 heap word.
+    #[inline]
+    pub fn atomic_u32(&self, offset: usize) -> &AtomicU32 {
+        self.check(offset, 4);
+        assert_eq!(offset % 4, 0, "unaligned atomic access at {offset}");
+        // SAFETY: as above.
+        unsafe { &*(self.ptr.add(offset) as *const AtomicU32) }
+    }
+}
+
+impl Drop for SymHeap {
+    fn drop(&mut self) {
+        // SAFETY: allocated with the stored layout in `new`.
+        unsafe { std::alloc::dealloc(self.ptr, self.layout) };
+    }
+}
+
+/// All PEs' heaps — the node-wide "unified address space".
+///
+/// The *symmetry invariant*: every heap has identical size and every
+/// symmetric allocation resolves to the same offset on every PE. The
+/// allocator enforcing that invariant lives in `ishmem::heap`; this type
+/// only provides the mapped windows.
+#[derive(Debug)]
+pub struct HeapRegistry {
+    heaps: Vec<SymHeap>,
+}
+
+impl HeapRegistry {
+    pub fn new(npes: usize, heap_bytes: usize) -> Self {
+        HeapRegistry {
+            heaps: (0..npes).map(|_| SymHeap::new(heap_bytes)).collect(),
+        }
+    }
+
+    pub fn npes(&self) -> usize {
+        self.heaps.len()
+    }
+
+    pub fn heap(&self, pe: usize) -> &SymHeap {
+        &self.heaps[pe]
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.heaps.first().map_or(0, |h| h.len())
+    }
+
+    /// Heap-to-heap copy — the data plane of every put/get/collective.
+    pub fn copy(
+        &self,
+        src_pe: usize,
+        src_off: usize,
+        dst_pe: usize,
+        dst_off: usize,
+        len: usize,
+    ) {
+        if len == 0 {
+            return;
+        }
+        let src = self.heaps[src_pe].at(src_off, len);
+        let dst = self.heaps[dst_pe].at(dst_off, len);
+        if src_pe == dst_pe {
+            // Same heap: ranges may overlap (self-put of adjacent buffers).
+            // SAFETY: bounds checked by `at`.
+            unsafe { std::ptr::copy(src, dst, len) };
+        } else {
+            // SAFETY: distinct allocations cannot overlap.
+            unsafe { std::ptr::copy_nonoverlapping(src, dst, len) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn zeroed_on_allocation() {
+        let h = SymHeap::new(4096);
+        let mut buf = vec![0xAAu8; 4096];
+        h.read(0, &mut buf);
+        assert!(buf.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let h = SymHeap::new(1024);
+        let data: Vec<u8> = (0..=255).collect();
+        h.write(100, &data);
+        let mut out = vec![0u8; 256];
+        h.read(100, &mut out);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_write_panics() {
+        let h = SymHeap::new(64);
+        h.write(60, &[0u8; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unaligned")]
+    fn unaligned_atomic_panics() {
+        let h = SymHeap::new(64);
+        h.atomic_u64(3);
+    }
+
+    #[test]
+    fn atomics_are_live_views() {
+        let h = SymHeap::new(64);
+        h.atomic_u64(8).store(0xDEADBEEF, Ordering::SeqCst);
+        let mut out = [0u8; 8];
+        h.read(8, &mut out);
+        assert_eq!(u64::from_le_bytes(out), 0xDEADBEEF);
+    }
+
+    #[test]
+    fn registry_cross_pe_copy() {
+        let reg = HeapRegistry::new(4, 4096);
+        let payload = vec![7u8; 512];
+        reg.heap(1).write(0, &payload);
+        reg.copy(1, 0, 3, 1024, 512);
+        let mut out = vec![0u8; 512];
+        reg.heap(3).read(1024, &mut out);
+        assert_eq!(out, payload);
+    }
+
+    #[test]
+    fn registry_self_overlapping_copy() {
+        let reg = HeapRegistry::new(1, 1024);
+        reg.heap(0).write(0, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        reg.copy(0, 0, 0, 4, 8); // overlapping forward copy
+        let mut out = vec![0u8; 12];
+        reg.heap(0).read(0, &mut out);
+        assert_eq!(out, [1, 2, 3, 4, 1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn concurrent_atomic_increments() {
+        let reg = std::sync::Arc::new(HeapRegistry::new(1, 64));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let r = reg.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    r.heap(0).atomic_u64(0).fetch_add(1, Ordering::AcqRel);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.heap(0).atomic_u64(0).load(Ordering::SeqCst), 4000);
+    }
+}

@@ -1,0 +1,26 @@
+//! Hardware substrate: a parametric model of an Aurora-class compute node.
+//!
+//! The paper's testbed (Borealis) is 2× SPR CPUs + 6× PVC GPUs (2 tiles
+//! each), fully connected by Xe-Link, with 8 Slingshot NICs. None of that
+//! hardware exists here, so this module provides the *substitute substrate*
+//! (DESIGN.md §2): real shared-memory data movement (each PE owns a real
+//! heap region; remote stores are real `memcpy`/atomics — the moral
+//! equivalent of the paper's unified GPU address space), plus an analytic
+//! **cost model** that assigns every transfer a modeled duration from
+//! first-order hardware constants (link bandwidth, per-thread store rate,
+//! copy-engine startup, ring RTT). Bandwidth figures are computed from the
+//! modeled durations; correctness is always checked on the real bytes.
+
+pub mod clock;
+pub mod copyengine;
+pub mod cost;
+pub mod memory;
+pub mod nic;
+pub mod pcie;
+pub mod topology;
+pub mod xelink;
+
+pub use clock::SimClock;
+pub use cost::{CostModel, CostParams};
+pub use memory::{HeapRegistry, SymHeap};
+pub use topology::{Locality, PeId, Topology};

@@ -1,0 +1,67 @@
+//! Slingshot-class NIC model for inter-node (scale-out) traffic
+//! (paper §III-A: 8 Slingshot 11 NICs per node; §III-C: the host proxy
+//! hands GPU-initiated inter-node ops to the host OpenSHMEM library, which
+//! RDMAs directly into device memory via FI_HMEM registration).
+
+#[derive(Clone, Debug)]
+pub struct NicParams {
+    /// Per-NIC injection bandwidth, GB/s (Slingshot 11 ≈ 200 Gb/s).
+    pub bw_gbs: f64,
+    /// End-to-end small-message latency, ns.
+    pub latency_ns: f64,
+    /// Extra latency when the target buffer is GPU memory without dmabuf
+    /// peer-mapping (bounce through host) — exercised by failure-injection
+    /// tests only; FI_HMEM-registered heaps skip it.
+    pub bounce_penalty_ns: f64,
+    /// NICs per node (traffic stripes across them).
+    pub nics_per_node: usize,
+}
+
+impl Default for NicParams {
+    fn default() -> Self {
+        NicParams {
+            bw_gbs: 23.0,
+            latency_ns: 1_800.0,
+            bounce_penalty_ns: 6_000.0,
+            nics_per_node: 8,
+        }
+    }
+}
+
+impl NicParams {
+    /// RDMA put/get of `bytes` into a registered (FI_HMEM) heap, ns.
+    pub fn rdma_ns(&self, bytes: usize) -> f64 {
+        self.latency_ns + bytes as f64 / self.bw_gbs
+    }
+
+    /// Same transfer when the heap is NOT registered for device RDMA:
+    /// staged through host memory.
+    pub fn bounce_ns(&self, bytes: usize) -> f64 {
+        self.rdma_ns(bytes) + self.bounce_penalty_ns + bytes as f64 / self.bw_gbs
+    }
+
+    /// Aggregate node injection bandwidth with all NICs striped.
+    pub fn node_bw_gbs(&self) -> f64 {
+        self.bw_gbs * self.nics_per_node as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registered_beats_bounce() {
+        let n = NicParams::default();
+        assert!(n.rdma_ns(1 << 20) < n.bounce_ns(1 << 20));
+    }
+
+    #[test]
+    fn nic_slower_than_xelink_latency() {
+        // Scale-out latency must exceed scale-up store latency, or the
+        // proxy cutover logic would be meaningless.
+        let n = NicParams::default();
+        let xe = super::super::xelink::XeLinkParams::default();
+        assert!(n.latency_ns > xe.store_latency_ns);
+    }
+}

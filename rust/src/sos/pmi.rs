@@ -1,0 +1,145 @@
+//! PMI: the process-management interface (paper §III-E, [18]).
+//!
+//! SOS's dual-phase init uses PMI as "a key-value store for publishing and
+//! retrieving all relevant addresses and information". Here: a shared map
+//! with fence/barrier semantics — PEs publish their heap handles during
+//! preinit and read everyone else's before postinit.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// World-level PMI state shared by all PEs of a job.
+pub struct PmiWorld {
+    npes: usize,
+    kv: Mutex<HashMap<String, String>>,
+    barrier: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    count: usize,
+    generation: u64,
+}
+
+impl PmiWorld {
+    pub fn new(npes: usize) -> Arc<Self> {
+        assert!(npes > 0);
+        Arc::new(PmiWorld {
+            npes,
+            kv: Mutex::new(HashMap::new()),
+            barrier: Mutex::new(BarrierState { count: 0, generation: 0 }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn npes(&self) -> usize {
+        self.npes
+    }
+
+    pub fn handle(self: &Arc<Self>, pe: usize) -> PmiHandle {
+        assert!(pe < self.npes);
+        PmiHandle { world: Arc::clone(self), pe }
+    }
+}
+
+/// Per-PE PMI handle.
+#[derive(Clone)]
+pub struct PmiHandle {
+    world: Arc<PmiWorld>,
+    pe: usize,
+}
+
+impl PmiHandle {
+    pub fn pe(&self) -> usize {
+        self.pe
+    }
+
+    pub fn npes(&self) -> usize {
+        self.world.npes
+    }
+
+    /// Publish a key (namespaced by PE to mirror PMI_KVS_Put usage).
+    pub fn put(&self, key: &str, value: impl Into<String>) {
+        let k = format!("pe{}:{}", self.pe, key);
+        self.world.kv.lock().unwrap().insert(k, value.into());
+    }
+
+    /// Read a key published by `pe`. `None` until the owner fences.
+    pub fn get(&self, pe: usize, key: &str) -> Option<String> {
+        let k = format!("pe{pe}:{key}");
+        self.world.kv.lock().unwrap().get(&k).cloned()
+    }
+
+    /// PMI barrier (also the KV fence — all prior puts are visible to all
+    /// PEs after everyone returns).
+    pub fn barrier(&self) {
+        let mut st = self.world.barrier.lock().unwrap();
+        let gen = st.generation;
+        st.count += 1;
+        if st.count == self.world.npes {
+            st.count = 0;
+            st.generation += 1;
+            self.world.cv.notify_all();
+        } else {
+            while st.generation == gen {
+                st = self.world.cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_publish_and_read() {
+        let w = PmiWorld::new(2);
+        let h0 = w.handle(0);
+        let h1 = w.handle(1);
+        h0.put("heap", "0xdead");
+        assert_eq!(h1.get(0, "heap").as_deref(), Some("0xdead"));
+        assert_eq!(h1.get(1, "heap"), None);
+    }
+
+    #[test]
+    fn barrier_synchronizes_publishes() {
+        let w = PmiWorld::new(4);
+        let mut handles = vec![];
+        for pe in 0..4 {
+            let h = w.handle(pe);
+            handles.push(std::thread::spawn(move || {
+                h.put("addr", format!("addr-of-{pe}"));
+                h.barrier();
+                // After the barrier every peer's key must be visible.
+                for other in 0..4 {
+                    assert_eq!(
+                        h.get(other, "addr").as_deref(),
+                        Some(format!("addr-of-{other}").as_str())
+                    );
+                }
+                h.barrier();
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn barrier_reusable_across_generations() {
+        let w = PmiWorld::new(3);
+        let mut handles = vec![];
+        for pe in 0..3 {
+            let h = w.handle(pe);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    h.barrier();
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Synthetic training corpus: a deterministic, *learnable* token stream.
+//!
+//! Pure-uniform tokens have ln(V) irreducible loss — useless for an
+//! end-to-end "loss goes down" signal. This stream instead draws from a
+//! seeded order-1 Markov chain with skewed transitions, so a model can
+//! learn real structure while every PE reproduces its own shard
+//! deterministically (shard = (seed, pe)).
+
+use crate::util::rng::Rng;
+
+pub struct TokenStream {
+    vocab: usize,
+    rng: Rng,
+    state: usize,
+    /// Per-state transition "hot" targets (skewed mass).
+    hot: Vec<usize>,
+}
+
+impl TokenStream {
+    pub fn new(vocab: usize, seed: u64, pe: usize) -> Self {
+        assert!(vocab >= 4);
+        // The chain structure depends only on `seed` (shared across PEs);
+        // the sampling noise depends on the shard.
+        let mut structure_rng = Rng::new(seed);
+        let hot = (0..vocab)
+            .map(|_| structure_rng.below(vocab as u64) as usize)
+            .collect();
+        TokenStream {
+            vocab,
+            rng: Rng::new(seed ^ 0x9E37_79B9 ^ ((pe as u64) << 32)),
+            state: 0,
+            hot,
+        }
+    }
+
+    /// Next token: 75% follow the hot edge, 25% uniform noise.
+    pub fn next_token(&mut self) -> i32 {
+        let t = if self.rng.f64() < 0.75 {
+            self.hot[self.state]
+        } else {
+            self.rng.below(self.vocab as u64) as usize
+        };
+        self.state = t;
+        t as i32
+    }
+
+    /// Fill one (batch, seq) token matrix, flattened row-major.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        (0..batch * seq).map(|_| self.next_token()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_shard() {
+        let mut a = TokenStream::new(64, 9, 3);
+        let mut b = TokenStream::new(64, 9, 3);
+        let mut c = TokenStream::new(64, 9, 4);
+        let (ba, bb, bc) = (a.batch(2, 16), b.batch(2, 16), c.batch(2, 16));
+        assert_eq!(ba, bb);
+        assert_ne!(ba, bc, "different PEs must see different shards");
+    }
+
+    #[test]
+    fn tokens_in_range_and_structured() {
+        let mut s = TokenStream::new(32, 1, 0);
+        let toks = s.batch(4, 64);
+        assert!(toks.iter().all(|&t| (0..32).contains(&t)));
+        // Structure check: bigram repetition above uniform chance.
+        let mut follows = std::collections::HashMap::new();
+        for w in toks.windows(2) {
+            *follows.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+        let max_bigram = follows.values().max().copied().unwrap_or(0);
+        assert!(max_bigram >= 3, "stream looks uniform");
+    }
+}

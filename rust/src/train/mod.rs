@@ -1,0 +1,15 @@
+//! Data-parallel training harness — the end-to-end driver composing all
+//! three layers (DESIGN.md E12):
+//!
+//!   L2 transformer `train_step` (AOT HLO) runs per PE through PJRT →
+//!   per-tensor gradients land in a symmetric buffer → `ishmem_reduce`
+//!   all-reduces them across PEs (running the L1 Pallas reduce kernel on
+//!   full chunks) → each PE applies an identical SGD update.
+//!
+//! Python never runs; the artifacts are the only Python residue.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::TokenStream;
+pub use trainer::{train_data_parallel, TrainConfig, TrainReport};

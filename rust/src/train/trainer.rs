@@ -1,0 +1,193 @@
+//! The data-parallel trainer (e2e driver, DESIGN.md E12).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::ishmem::heap::RESERVED_BYTES;
+use crate::ishmem::{Ishmem, IshmemConfig, PeCtx, ReduceOp, TeamId};
+use crate::runtime::{HostTensor, ModelManifest, XlaRuntime};
+use crate::train::data::TokenStream;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model config name from the manifest ("tiny", "small", …).
+    pub model: String,
+    /// Data-parallel degree (PEs).
+    pub pes: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Evaluate held-out loss every N steps (0 = never).
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "small".into(),
+            pes: 4,
+            steps: 100,
+            lr: 0.25,
+            seed: 42,
+            log_every: 10,
+            eval_every: 25,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<(usize, f32)>,
+    pub eval_losses: Vec<(usize, f32)>,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub tokens_per_step: usize,
+    pub wall_seconds: f64,
+    pub param_count: usize,
+    pub xla_reduce_calls: u64,
+}
+
+/// Run data-parallel training; returns PE 0's report.
+pub fn train_data_parallel(cfg: &TrainConfig) -> Result<TrainReport> {
+    let rt = XlaRuntime::load_default().context("loading artifacts")?;
+    let model = rt.manifest().model(&cfg.model)?.clone();
+
+    // Symmetric heap must fit grads + loss cell (params live host-side).
+    let grad_bytes = model.param_count * 4;
+    let ish_cfg = IshmemConfig {
+        heap_bytes: RESERVED_BYTES + grad_bytes + (1 << 20),
+        ..IshmemConfig::with_npes(cfg.pes)
+    };
+    let ish = Ishmem::new(ish_cfg)?;
+    ish.attach_runtime(rt.clone());
+
+    let t0 = std::time::Instant::now();
+    let cfg2 = cfg.clone();
+    let model2 = model.clone();
+    let rt2 = rt.clone();
+    let mut reports = ish.launch(move |ctx| train_pe(ctx, &cfg2, &model2, &rt2));
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+
+    let mut report = reports.swap_remove(0)?;
+    report.wall_seconds = wall;
+    report.xla_reduce_calls = snap.xla_reduce_calls;
+    Ok(report)
+}
+
+fn train_pe(
+    ctx: &mut PeCtx,
+    cfg: &TrainConfig,
+    model: &ModelManifest,
+    rt: &Arc<XlaRuntime>,
+) -> Result<TrainReport> {
+    let npes = ctx.npes();
+    let p = model.param_count;
+
+    // ---- parameters: identical init everywhere (same seed through the
+    // AOT init_params HLO — deterministic on the CPU backend).
+    let mut params: Vec<HostTensor> = rt
+        .execute(&model.init_file, vec![HostTensor::scalar_i32(cfg.seed as i32)])
+        .context("init_params")?;
+
+    // ---- symmetric buffers: flat gradient vector + per-PE loss cell.
+    let grads_sym = ctx.calloc::<f32>(p);
+    let loss_sym = ctx.calloc::<f32>(npes);
+
+    let mut stream = TokenStream::new(model.vocab, cfg.seed, ctx.pe());
+    // Held-out eval: same corpus *structure* (same Markov chain), disjoint
+    // sampling shard — measures generalization within the language rather
+    // than loss on a different language.
+    let mut eval_stream = TokenStream::new(model.vocab, cfg.seed, 10_000 + ctx.pe());
+
+    let mut losses = Vec::new();
+    let mut eval_losses = Vec::new();
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+
+    for step in 0..cfg.steps {
+        // L2 compute: loss + grads on my shard.
+        let tokens = stream.batch(model.batch, model.seq_len);
+        let mut args = params.clone();
+        args.push(HostTensor::from_i32(
+            vec![model.batch, model.seq_len],
+            &tokens,
+        ));
+        let out = rt
+            .execute(&model.train_step_file, args)
+            .with_context(|| format!("train_step at step {step}"))?;
+        let my_loss = out[0].scalar_f32();
+        anyhow::ensure!(my_loss.is_finite(), "loss diverged at step {step}");
+
+        // Flatten grads into the symmetric buffer.
+        let mut flat = Vec::with_capacity(p);
+        for g in &out[1..] {
+            flat.extend_from_slice(&g.to_f32());
+        }
+        debug_assert_eq!(flat.len(), p);
+        ctx.write_local(grads_sym, &flat);
+
+        // Gradient allreduce THROUGH ishmem (runs the Pallas kernel), plus
+        // the loss mean for logging.
+        ctx.reduce(grads_sym, grads_sym, p, ReduceOp::Sum, TeamId::WORLD);
+        ctx.p(loss_sym.at(ctx.pe()), my_loss, 0);
+        let reduced = ctx.read_local_vec(grads_sym);
+
+        // SGD: identical update on every PE (grads now identical).
+        let scale = cfg.lr / npes as f32;
+        let mut off = 0usize;
+        for t in params.iter_mut() {
+            let n = t.elems();
+            let mut vals = t.to_f32();
+            for (v, g) in vals.iter_mut().zip(&reduced[off..off + n]) {
+                *v -= scale * g;
+            }
+            *t = HostTensor::from_f32(t.dims.clone(), &vals);
+            off += n;
+        }
+
+        // Mean loss across PEs (PE 0 gathered everyone's loss cells).
+        ctx.barrier_all();
+        let mean_loss = if ctx.pe() == 0 {
+            let cells = ctx.read_local_vec(loss_sym);
+            cells.iter().sum::<f32>() / npes as f32
+        } else {
+            my_loss
+        };
+        if step == 0 {
+            first_loss = mean_loss;
+        }
+        last_loss = mean_loss;
+        if ctx.pe() == 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            losses.push((step, mean_loss));
+            eprintln!("[train pe0] step {step:4}  loss {mean_loss:.4}");
+        }
+
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 && ctx.pe() == 0 {
+            let toks = eval_stream.batch(model.batch, model.seq_len);
+            let mut args = params.clone();
+            args.push(HostTensor::from_i32(
+                vec![model.batch, model.seq_len],
+                &toks,
+            ));
+            let ev = rt.execute(&model.eval_loss_file, args)?[0].scalar_f32();
+            eval_losses.push((step + 1, ev));
+            eprintln!("[train pe0] step {:4}  eval-loss {ev:.4}", step + 1);
+        }
+        ctx.barrier_all();
+    }
+
+    Ok(TrainReport {
+        losses,
+        eval_losses,
+        first_loss,
+        final_loss: last_loss,
+        tokens_per_step: model.batch * model.seq_len * npes,
+        wall_seconds: 0.0,
+        param_count: p,
+        xla_reduce_calls: 0,
+    })
+}

@@ -1,0 +1,54 @@
+//! Tiny property-test driver (the offline vendor set has no `proptest`).
+//!
+//! `prop_check(name, cases, |rng| ...)` runs a closure over `cases`
+//! deterministic seeds; a failure panics with the seed so the exact case can
+//! be replayed with `prop_replay`. Shrinking is intentionally out of scope —
+//! generators here draw small sizes to begin with.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` deterministic seeds; panic with the failing seed.
+pub fn prop_check<F: Fn(&mut Rng)>(name: &str, cases: u64, f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing seed printed by `prop_check`.
+pub fn prop_replay<F: Fn(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("u64 below bound", 50, |rng| {
+            let b = rng.range(1, 1000);
+            assert!(rng.below(b) < b);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn reports_failure_seed() {
+        prop_check("always fails eventually", 10, |rng| {
+            assert!(rng.f64() < 0.5, "drew a large value");
+        });
+    }
+}

@@ -1,0 +1,85 @@
+//! Level-Zero IPC: cross-PE mapping of peer symmetric heaps
+//! (paper §III-C: "Intel SHMEM can directly leverage the Level Zero
+//! inter-process communication (IPC) interfaces without invoking a host
+//! operation").
+//!
+//! During init every PE publishes an IPC handle for its heap; every other
+//! local PE opens it to obtain a direct window. ishmem's per-op "is the
+//! target PE local?" table (§III-C) is built from this.
+
+use crate::sim::topology::Topology;
+
+/// An exportable handle to one PE's symmetric heap region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IpcHandle {
+    pub owner_pe: usize,
+    pub bytes: usize,
+}
+
+/// An opened mapping: the local view of a peer heap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IpcMapping {
+    pub owner_pe: usize,
+    pub bytes: usize,
+}
+
+/// Per-PE table of opened peer mappings — the stashed array every GPU RMA
+/// op consults first (paper §III-C: "loads from a stashed array to
+/// determine whether the target PE is local").
+#[derive(Debug)]
+pub struct IpcTable {
+    /// `local[pe]` is `Some(mapping)` iff `pe` is reachable by load/store.
+    local: Vec<Option<IpcMapping>>,
+}
+
+impl IpcTable {
+    /// Build the table for `me` on `topo`: all same-node PEs are mapped.
+    pub fn build(me: usize, topo: &Topology, heap_bytes: usize) -> Self {
+        let mut local = vec![None; topo.npes()];
+        for pe in topo.node_peers(me) {
+            let handle = IpcHandle { owner_pe: pe, bytes: heap_bytes };
+            local[pe] = Some(Self::open(handle));
+        }
+        IpcTable { local }
+    }
+
+    fn open(handle: IpcHandle) -> IpcMapping {
+        IpcMapping { owner_pe: handle.owner_pe, bytes: handle.bytes }
+    }
+
+    /// The hot-path lookup: `Some` means direct load/store is possible.
+    #[inline]
+    pub fn lookup(&self, pe: usize) -> Option<&IpcMapping> {
+        self.local.get(pe).and_then(|m| m.as_ref())
+    }
+
+    pub fn local_count(&self) -> usize {
+        self.local.iter().filter(|m| m.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_all_local() {
+        let topo = Topology::default();
+        let t = IpcTable::build(0, &topo, 4096);
+        assert_eq!(t.local_count(), 12);
+        assert!(t.lookup(11).is_some());
+    }
+
+    #[test]
+    fn cross_node_not_mapped() {
+        let topo = Topology::new(2, 6, 2);
+        let t = IpcTable::build(0, &topo, 4096);
+        assert_eq!(t.local_count(), 12);
+        assert!(t.lookup(12).is_none());
+        assert!(t.lookup(23).is_none());
+
+        let t2 = IpcTable::build(13, &topo, 4096);
+        assert!(t2.lookup(0).is_none());
+        assert!(t2.lookup(12).is_some());
+    }
+}

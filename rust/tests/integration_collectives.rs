@@ -1,0 +1,324 @@
+//! Integration: collectives (sync/barrier/broadcast/fcollect/collect/
+//! alltoall/reduce) across the simulated node with real threads.
+
+use rishmem::ishmem::{CutoverConfig, CutoverMode};
+use rishmem::{run_npes, run_spmd, IshmemConfig, ReduceOp, TeamId, Topology, WorkGroup};
+
+#[test]
+fn sync_all_is_a_real_barrier() {
+    // Flag protocol: nobody may pass sync until everyone stored its flag.
+    let ok = run_npes(12, |ctx| {
+        let flags = ctx.calloc::<u64>(12);
+        ctx.p(flags.at(ctx.pe()), 1u64, (ctx.pe() + 5) % 12);
+        ctx.barrier_all();
+        // After the barrier every remote flag deposit must be visible.
+        let mine = ctx.read_local_vec(flags);
+        mine[(ctx.pe() + 12 - 5) % 12] == 1
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn repeated_syncs_do_not_deadlock_or_leak_rounds() {
+    let rounds = run_npes(6, |ctx| {
+        for _ in 0..50 {
+            ctx.sync_all();
+        }
+        50
+    })
+    .unwrap();
+    assert_eq!(rounds.len(), 6);
+}
+
+#[test]
+fn broadcast_from_each_root() {
+    let ok = run_npes(6, |ctx| {
+        let dest = ctx.calloc::<i64>(300);
+        let src = ctx.calloc::<i64>(300);
+        let mut all_ok = true;
+        for root in 0..ctx.npes() {
+            let data: Vec<i64> = (0..300).map(|i| (root * 10_000 + i) as i64).collect();
+            if ctx.pe() == root {
+                ctx.write_local(src, &data);
+            }
+            ctx.barrier_all();
+            ctx.broadcast(dest, src, 300, root, TeamId::WORLD);
+            all_ok &= ctx.read_local_vec(dest) == data;
+        }
+        all_ok
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn broadcast_work_group_matches() {
+    let ok = run_npes(12, |ctx| {
+        let dest = ctx.calloc::<f32>(2048);
+        let src = ctx.calloc::<f32>(2048);
+        let data: Vec<f32> = (0..2048).map(|i| i as f32).collect();
+        if ctx.pe() == 3 {
+            ctx.write_local(src, &data);
+        }
+        ctx.barrier_all();
+        let wg = WorkGroup::new(128);
+        ctx.broadcast_work_group(dest, src, 2048, 3, TeamId::WORLD, &wg);
+        ctx.read_local_vec(dest) == data
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn fcollect_gathers_in_rank_order() {
+    let n = 12;
+    let per = 64usize;
+    let ok = run_npes(n, |ctx| {
+        let dest = ctx.calloc::<u32>(per * n);
+        let src = ctx.calloc::<u32>(per);
+        let mine: Vec<u32> = (0..per).map(|i| (ctx.pe() * 1000 + i) as u32).collect();
+        ctx.write_local(src, &mine);
+        ctx.barrier_all();
+        ctx.fcollect(dest, src, per, TeamId::WORLD);
+        let all = ctx.read_local_vec(dest);
+        (0..n).all(|r| (0..per).all(|i| all[r * per + i] == (r * 1000 + i) as u32))
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn fcollect_correct_under_all_cutover_modes() {
+    for mode in [CutoverMode::Never, CutoverMode::Always, CutoverMode::Tuned] {
+        let cfg = IshmemConfig {
+            cutover: CutoverConfig::mode(mode),
+            ..IshmemConfig::with_npes(8)
+        };
+        let ok = run_spmd(cfg, false, |ctx| {
+            let n = ctx.npes();
+            let dest = ctx.calloc::<u64>(512 * n);
+            let src = ctx.calloc::<u64>(512);
+            let mine = vec![ctx.pe() as u64; 512];
+            ctx.write_local(src, &mine);
+            ctx.barrier_all();
+            let wg = WorkGroup::new(256);
+            ctx.fcollect_work_group(dest, src, 512, TeamId::WORLD, &wg);
+            let all = ctx.read_local_vec(dest);
+            (0..n).all(|r| (0..512).all(|i| all[r * 512 + i] == r as u64))
+        })
+        .unwrap();
+        assert!(ok.iter().all(|&b| b), "fcollect corrupt under {mode:?}");
+    }
+}
+
+#[test]
+fn host_fcollect_matches_device_fcollect() {
+    let ok = run_npes(4, |ctx| {
+        let n = ctx.npes();
+        let d1 = ctx.calloc::<u32>(128 * n);
+        let d2 = ctx.calloc::<u32>(128 * n);
+        let src = ctx.calloc::<u32>(128);
+        let mine: Vec<u32> = (0..128).map(|i| (ctx.pe() * 7 + i) as u32).collect();
+        ctx.write_local(src, &mine);
+        ctx.barrier_all();
+        ctx.fcollect(d1, src, 128, TeamId::WORLD);
+        ctx.host_fcollect(d2, src, 128, TeamId::WORLD);
+        ctx.read_local_vec(d1) == ctx.read_local_vec(d2)
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn collect_variable_sizes() {
+    let ok = run_npes(6, |ctx| {
+        // PE r contributes r+1 elements.
+        let my_n = ctx.pe() + 1;
+        let total: usize = (1..=ctx.npes()).sum();
+        let dest = ctx.calloc::<i32>(total);
+        let src = ctx.calloc::<i32>(ctx.npes());
+        let mine = vec![ctx.pe() as i32; my_n];
+        ctx.write_local(src, &mine);
+        ctx.barrier_all();
+        ctx.collect(dest, src, my_n, TeamId::WORLD);
+        let all = ctx.read_local_vec(dest);
+        let mut off = 0;
+        (0..ctx.npes()).all(|r| {
+            let good = (0..r + 1).all(|i| all[off + i] == r as i32);
+            off += r + 1;
+            good
+        })
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn alltoall_transposes_blocks() {
+    let n = 6;
+    let per = 32;
+    let ok = run_npes(n, |ctx| {
+        let dest = ctx.calloc::<u64>(per * n);
+        let src = ctx.calloc::<u64>(per * n);
+        // Block j carries value my_pe*100 + j.
+        let mine: Vec<u64> = (0..per * n)
+            .map(|i| (ctx.pe() * 100 + i / per) as u64)
+            .collect();
+        ctx.write_local(src, &mine);
+        ctx.barrier_all();
+        ctx.alltoall(dest, src, per, TeamId::WORLD);
+        let all = ctx.read_local_vec(dest);
+        // Block r of my dest came from PE r's block my_pe.
+        (0..n).all(|r| (0..per).all(|i| all[r * per + i] == (r * 100 + ctx.pe()) as u64))
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn alltoall_and_collect_work_group_match_scalar() {
+    let ok = run_npes(6, |ctx| {
+        let n = ctx.npes();
+        let per = 48;
+        let d1 = ctx.calloc::<u32>(per * n);
+        let d2 = ctx.calloc::<u32>(per * n);
+        let src = ctx.calloc::<u32>(per * n);
+        let mine: Vec<u32> = (0..per * n).map(|i| (ctx.pe() * 31 + i) as u32).collect();
+        ctx.write_local(src, &mine);
+        ctx.barrier_all();
+        let wg = WorkGroup::new(64);
+        ctx.alltoall(d1, src, per, TeamId::WORLD);
+        ctx.alltoall_work_group(d2, src, per, TeamId::WORLD, &wg);
+        let a2a_ok = ctx.read_local_vec(d1) == ctx.read_local_vec(d2);
+
+        let c1 = ctx.calloc::<u32>(per * n);
+        let c2 = ctx.calloc::<u32>(per * n);
+        ctx.collect(c1, src, per, TeamId::WORLD);
+        ctx.collect_work_group(c2, src, per, TeamId::WORLD, &wg);
+        a2a_ok && ctx.read_local_vec(c1) == ctx.read_local_vec(c2)
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn reduce_sum_f32_native() {
+    let n = 12;
+    let ok = run_npes(n, |ctx| {
+        let dest = ctx.calloc::<f32>(500);
+        let src = ctx.calloc::<f32>(500);
+        let mine: Vec<f32> = (0..500).map(|i| (ctx.pe() + 1) as f32 * 0.5 + i as f32).collect();
+        ctx.write_local(src, &mine);
+        ctx.reduce(dest, src, 500, ReduceOp::Sum, TeamId::WORLD);
+        let got = ctx.read_local_vec(dest);
+        // sum over r of (r+1)*0.5 + i = 0.5*n(n+1)/2 + n*i
+        let base = 0.5 * (n * (n + 1) / 2) as f32;
+        got.iter()
+            .enumerate()
+            .all(|(i, &v)| (v - (base + (n * i) as f32)).abs() < 1e-3)
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn reduce_all_ops_integer() {
+    let ok = run_npes(4, |ctx| {
+        let n = ctx.npes() as i64;
+        let dest = ctx.calloc::<i64>(64);
+        let src = ctx.calloc::<i64>(64);
+        let mine: Vec<i64> = (0..64).map(|i| (ctx.pe() as i64 + 2) * (i as i64 + 1)).collect();
+        ctx.write_local(src, &mine);
+        let mut all_ok = true;
+        for op in [
+            ReduceOp::Sum,
+            ReduceOp::Prod,
+            ReduceOp::Min,
+            ReduceOp::Max,
+            ReduceOp::And,
+            ReduceOp::Or,
+            ReduceOp::Xor,
+        ] {
+            ctx.reduce(dest, src, 64, op, TeamId::WORLD);
+            let got = ctx.read_local_vec(dest);
+            let want: Vec<i64> = (0..64)
+                .map(|i| {
+                    let vals = (0..n).map(|r| (r + 2) * (i as i64 + 1));
+                    match op {
+                        ReduceOp::Sum => vals.sum(),
+                        ReduceOp::Prod => vals.product(),
+                        ReduceOp::Min => vals.min().unwrap(),
+                        ReduceOp::Max => vals.max().unwrap(),
+                        ReduceOp::And => vals.fold(-1i64, |a, b| a & b),
+                        ReduceOp::Or => vals.fold(0i64, |a, b| a | b),
+                        ReduceOp::Xor => vals.fold(0i64, |a, b| a ^ b),
+                    }
+                })
+                .collect();
+            all_ok &= got == want;
+        }
+        all_ok
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn team_scoped_collectives() {
+    // Split world into even/odd teams; reduce within each.
+    let sums = run_npes(8, |ctx| {
+        let parity = ctx.pe() % 2;
+        let team = ctx.team_split_strided(TeamId::WORLD, parity, 2, 4);
+        let dest = ctx.calloc::<i32>(16);
+        let src = ctx.calloc::<i32>(16);
+        ctx.write_local(src, &vec![ctx.pe() as i32; 16]);
+        ctx.reduce(dest, src, 16, ReduceOp::Sum, team);
+        ctx.barrier_all();
+        ctx.read_local_vec(dest)[0]
+    })
+    .unwrap();
+    // evens: 0+2+4+6 = 12; odds: 1+3+5+7 = 16.
+    for (pe, s) in sums.iter().enumerate() {
+        assert_eq!(*s, if pe % 2 == 0 { 12 } else { 16 }, "pe {pe}");
+    }
+}
+
+#[test]
+fn shared_team_is_node_scoped() {
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 3, 2),
+        ..Default::default()
+    };
+    let sums = run_spmd(cfg, false, |ctx| {
+        let dest = ctx.calloc::<u64>(4);
+        let src = ctx.calloc::<u64>(4);
+        ctx.write_local(src, &[1u64; 4]);
+        ctx.reduce(dest, src, 4, ReduceOp::Sum, TeamId::SHARED);
+        ctx.barrier_all();
+        ctx.read_local_vec(dest)[0]
+    })
+    .unwrap();
+    // Each node has 6 PEs; every PE contributed 1 within its node.
+    assert!(sums.iter().all(|&s| s == 6), "{sums:?}");
+}
+
+#[test]
+fn internode_world_collectives() {
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        ..Default::default()
+    };
+    let ok = run_spmd(cfg, false, |ctx| {
+        let n = ctx.npes();
+        let dest = ctx.calloc::<u32>(16 * n);
+        let src = ctx.calloc::<u32>(16);
+        ctx.write_local(src, &vec![ctx.pe() as u32; 16]);
+        ctx.barrier_all();
+        ctx.fcollect(dest, src, 16, TeamId::WORLD);
+        let all = ctx.read_local_vec(dest);
+        (0..n).all(|r| (0..16).all(|i| all[r * 16 + i] == r as u32))
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}

@@ -1,0 +1,357 @@
+//! Integration: device/host RMA, AMOs, signals, ordering across a full
+//! simulated node (12 PEs, real threads, real proxy).
+
+use rishmem::ishmem::signal::SignalOp;
+use rishmem::ishmem::{CutoverConfig, CutoverMode};
+use rishmem::{run_npes, run_spmd, Cmp, IshmemConfig, Topology, WorkGroup};
+
+#[test]
+fn ring_exchange_put() {
+    // Every PE puts its rank-stamped buffer to its right neighbour.
+    let n = 12;
+    let ok = run_npes(n, |ctx| {
+        let buf = ctx.calloc::<u64>(256);
+        let me = ctx.pe() as u64;
+        let data: Vec<u64> = (0..256).map(|i| me * 1000 + i).collect();
+        let right = (ctx.pe() + 1) % ctx.npes();
+        ctx.put(buf, &data, right);
+        ctx.barrier_all();
+        let left = (ctx.pe() + ctx.npes() - 1) % ctx.npes();
+        let got = ctx.read_local_vec(buf);
+        got.iter()
+            .enumerate()
+            .all(|(i, &v)| v == (left as u64) * 1000 + i as u64)
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b), "ring exchange corrupted: {ok:?}");
+}
+
+#[test]
+fn get_reads_remote() {
+    let ok = run_npes(4, |ctx| {
+        let buf = ctx.malloc::<i32>(64);
+        let mine: Vec<i32> = (0..64).map(|i| (ctx.pe() * 100 + i) as i32).collect();
+        ctx.write_local(buf, &mine);
+        ctx.barrier_all();
+        let mut out = vec![0i32; 64];
+        let target = (ctx.pe() + 2) % ctx.npes();
+        ctx.get(&mut out, buf, target);
+        out.iter()
+            .enumerate()
+            .all(|(i, &v)| v == (target * 100 + i) as i32)
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn put_correct_on_every_path() {
+    // Force each cutover mode; bytes must land identically.
+    for mode in [CutoverMode::Never, CutoverMode::Always, CutoverMode::Tuned] {
+        let cfg = IshmemConfig {
+            cutover: CutoverConfig::mode(mode),
+            ..IshmemConfig::with_npes(6)
+        };
+        let ok = run_spmd(cfg, false, |ctx| {
+            let buf = ctx.calloc::<u8>(100_000);
+            let payload = vec![ctx.pe() as u8 + 1; 100_000];
+            let target = (ctx.pe() + 3) % ctx.npes();
+            ctx.put(buf, &payload, target);
+            ctx.barrier_all();
+            let src = (ctx.pe() + ctx.npes() - 3) % ctx.npes();
+            ctx.read_local_vec(buf).iter().all(|&b| b == src as u8 + 1)
+        })
+        .unwrap();
+        assert!(ok.iter().all(|&b| b), "mode {mode:?} corrupted data");
+    }
+}
+
+#[test]
+fn work_group_put_matches_scalar_put() {
+    let ok = run_npes(4, |ctx| {
+        let a = ctx.calloc::<f32>(4096);
+        let b = ctx.calloc::<f32>(4096);
+        let data: Vec<f32> = (0..4096).map(|i| i as f32 * 0.5).collect();
+        let t = (ctx.pe() + 1) % ctx.npes();
+        ctx.put(a, &data, t);
+        let wg = WorkGroup::new(128);
+        ctx.put_work_group(b, &data, t, &wg);
+        ctx.barrier_all();
+        ctx.read_local_vec(a) == ctx.read_local_vec(b)
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn scalar_p_and_g() {
+    let ok = run_npes(12, |ctx| {
+        let cell = ctx.calloc::<i64>(12);
+        // Everyone deposits its rank into slot[my_pe] on PE 0.
+        ctx.p(cell.at(ctx.pe()), ctx.pe() as i64 * 7, 0);
+        ctx.barrier_all();
+        if ctx.pe() == 1 {
+            (0..12).all(|i| ctx.g(cell.at(i), 0) == i as i64 * 7)
+        } else {
+            true
+        }
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn nbi_completes_at_quiet() {
+    let ok = run_npes(4, |ctx| {
+        let buf = ctx.calloc::<u32>(4096);
+        let data = vec![0xABCD_u32; 4096];
+        let t = (ctx.pe() + 1) % ctx.npes();
+        ctx.put_nbi(buf, &data, t);
+        let before = ctx.clock.now_ns();
+        ctx.quiet();
+        let after = ctx.clock.now_ns();
+        ctx.barrier_all();
+        // quiet() must absorb the modeled transfer time.
+        let all_there = ctx.read_local_vec(buf).iter().all(|&v| v == 0xABCD);
+        all_there && after > before
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn iput_iget_strided() {
+    let ok = run_npes(2, |ctx| {
+        let buf = ctx.calloc::<i32>(64);
+        let src: Vec<i32> = (0..32).collect();
+        // Every 2nd src element to every 4th dest slot on the peer.
+        ctx.iput(buf, &src, 4, 2, 8, 1 - ctx.pe());
+        ctx.barrier_all();
+        let local = ctx.read_local_vec(buf);
+        let spread_ok = (0..8).all(|i| local[i * 4] == (i * 2) as i32);
+
+        let mut back = vec![0i32; 16];
+        ctx.iget(&mut back, buf, 2, 4, 8, 1 - ctx.pe());
+        let gather_ok = (0..8).all(|i| back[i * 2] == (i * 2) as i32);
+        spread_ok && gather_ok
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn amo_fetch_add_is_linearizable() {
+    let n = 8;
+    let total = run_npes(n, |ctx| {
+        let counter = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        let mut sum = 0u64;
+        for _ in 0..100 {
+            sum += ctx.atomic_fetch_add(counter, 1u64, 0);
+        }
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            ctx.atomic_fetch(counter, 0)
+        } else {
+            sum // unused
+        }
+    })
+    .unwrap();
+    assert_eq!(total[0], (n * 100) as u64);
+}
+
+#[test]
+fn amo_compare_swap_elects_one_winner() {
+    let winners = run_npes(12, |ctx| {
+        let lock = ctx.calloc::<i64>(1);
+        ctx.barrier_all();
+        let won = ctx.atomic_compare_swap(lock, 0i64, ctx.pe() as i64 + 1, 0) == 0;
+        ctx.barrier_all();
+        won
+    })
+    .unwrap();
+    assert_eq!(winners.iter().filter(|&&w| w).count(), 1);
+}
+
+#[test]
+fn put_signal_orders_payload_before_signal() {
+    let ok = run_npes(2, |ctx| {
+        let data = ctx.calloc::<u64>(512);
+        let sig = ctx.calloc::<u64>(1);
+        if ctx.pe() == 0 {
+            let payload = vec![42u64; 512];
+            ctx.put_signal(data, &payload, sig, 1, SignalOp::Set, 1);
+            ctx.barrier_all();
+            true
+        } else {
+            ctx.signal_wait_until(sig, Cmp::Eq, 1);
+            // Signal observed ⇒ payload must be fully visible.
+            let good = ctx.read_local_vec(data).iter().all(|&v| v == 42);
+            ctx.barrier_all();
+            good
+        }
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn wait_until_sees_remote_atomic() {
+    let ok = run_npes(2, |ctx| {
+        let flag = ctx.calloc::<u64>(1);
+        if ctx.pe() == 0 {
+            ctx.atomic_add(flag, 5u64, 1);
+            ctx.barrier_all();
+            true
+        } else {
+            ctx.wait_until(flag, Cmp::Ge, 5u64);
+            ctx.barrier_all();
+            ctx.atomic_fetch(flag, 1) == 5
+        }
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn internode_put_via_proxy() {
+    // 2 nodes × 2 GPUs × 2 tiles: PE 0 → PE 7 crosses the NIC.
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        ..Default::default()
+    };
+    let ok = run_spmd(cfg, false, |ctx| {
+        let buf = ctx.calloc::<u32>(1024);
+        if ctx.pe() == 0 {
+            let data: Vec<u32> = (0..1024).collect();
+            ctx.put(buf, &data, 7);
+        }
+        ctx.barrier_all();
+        if ctx.pe() == 7 {
+            ctx.read_local_vec(buf)
+                .iter()
+                .enumerate()
+                .all(|(i, &v)| v == i as u32)
+        } else {
+            true
+        }
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn internode_amo_and_scalar_p() {
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        ..Default::default()
+    };
+    let vals = run_spmd(cfg, false, |ctx| {
+        let c = ctx.calloc::<u64>(1);
+        let s = ctx.calloc::<i32>(1);
+        ctx.barrier_all();
+        // Everyone bumps PE 6's counter across (possibly) the NIC.
+        ctx.atomic_add(c, 1u64, 6);
+        if ctx.pe() == 0 {
+            ctx.p(s, -99i32, 6); // inline scalar via ring
+        }
+        ctx.barrier_all();
+        if ctx.pe() == 6 {
+            (ctx.atomic_fetch(c, 6), ctx.g(s, 6))
+        } else {
+            (0, 0)
+        }
+    })
+    .unwrap();
+    assert_eq!(vals[6], (8, -99));
+}
+
+#[test]
+fn fetching_bitwise_amos() {
+    let ok = run_npes(2, |ctx| {
+        let w = ctx.calloc::<u64>(1);
+        if ctx.pe() == 0 {
+            ctx.atomic_set(w, 0b1100u64, 1);
+            ctx.barrier_all();
+            let old = ctx.atomic_fetch_and(w, 0b1010u64, 1);
+            let old2 = ctx.atomic_fetch_or(w, 0b0001u64, 1);
+            let old3 = ctx.atomic_fetch_xor(w, 0b1111u64, 1);
+            ctx.barrier_all();
+            old == 0b1100 && old2 == 0b1000 && old3 == 0b1001
+        } else {
+            ctx.barrier_all();
+            ctx.barrier_all();
+            ctx.atomic_fetch(w, 1) == 0b0110
+        }
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn pe_accessible_matches_topology() {
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        ..Default::default()
+    };
+    let ok = run_spmd(cfg, false, |ctx| {
+        let my_node = ctx.pe() / 4;
+        (0..ctx.npes()).all(|pe| ctx.pe_accessible(pe) == (pe / 4 == my_node))
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn host_put_get_roundtrip() {
+    let ok = run_npes(4, |ctx| {
+        let buf = ctx.calloc::<f64>(512);
+        let data: Vec<f64> = (0..512).map(|i| i as f64 / 3.0).collect();
+        ctx.host_put(buf, &data, (ctx.pe() + 1) % 4);
+        ctx.barrier_all();
+        let mut back = vec![0f64; 512];
+        ctx.host_get(&mut back, buf, (ctx.pe() + 1) % 4);
+        back == data
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn clock_charges_reflect_paths() {
+    // A copy-engine put must charge at least ring RTT + startup; a
+    // load/store put of 64 bytes charges far less.
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::mode(CutoverMode::Always),
+        ..IshmemConfig::with_npes(3)
+    };
+    let t_engine = run_spmd(cfg, false, |ctx| {
+        let buf = ctx.calloc::<u8>(4096);
+        let t0 = ctx.clock.now_ns();
+        if ctx.pe() == 0 {
+            ctx.put(buf, &[7u8; 4096], 2);
+        }
+        let dt = ctx.clock.now_ns() - t0;
+        ctx.barrier_all();
+        dt
+    })
+    .unwrap()[0];
+    assert!(t_engine >= 5_000.0, "engine path charged only {t_engine}ns");
+
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::mode(CutoverMode::Never),
+        ..IshmemConfig::with_npes(3)
+    };
+    let t_store = run_spmd(cfg, false, |ctx| {
+        let buf = ctx.calloc::<u8>(4096);
+        let t0 = ctx.clock.now_ns();
+        if ctx.pe() == 0 {
+            ctx.put(buf, &[7u8; 64], 2);
+        }
+        let dt = ctx.clock.now_ns() - t0;
+        ctx.barrier_all();
+        dt
+    })
+    .unwrap()[0];
+    assert!(t_store < t_engine, "{t_store} !< {t_engine}");
+}

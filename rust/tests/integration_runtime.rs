@@ -1,0 +1,211 @@
+//! Integration: PJRT runtime executing the AOT Pallas artifacts, and the
+//! ishmem reduce path running the L1 kernel on the request path.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so unit CI
+//! can run without Python).
+
+use rishmem::ishmem::heap::RESERVED_BYTES;
+use rishmem::runtime::{DType, HostTensor, Manifest, XlaRuntime};
+use rishmem::{run_spmd, IshmemConfig, ReduceOp, TeamId};
+
+fn artifacts_ready() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn reduce_kernel_matches_native() {
+    require_artifacts!();
+    let rt = XlaRuntime::load_default().unwrap();
+    let chunk = rt.reduce_chunk_elems();
+    assert_eq!(chunk, 8192);
+
+    // f32 sum
+    let a: Vec<f32> = (0..chunk).map(|i| i as f32 * 0.25).collect();
+    let b: Vec<f32> = (0..chunk).map(|i| (chunk - i) as f32).collect();
+    let mut acc: Vec<u8> = a.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let other: Vec<u8> = b.iter().flat_map(|x| x.to_le_bytes()).collect();
+    rt.reduce_fold_bytes("sum", "f32", &mut acc, &other).unwrap();
+    let got: Vec<f32> = acc
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    for i in 0..chunk {
+        assert!((got[i] - (a[i] + b[i])).abs() < 1e-4, "i={i}");
+    }
+
+    // i64 xor
+    let a: Vec<i64> = (0..chunk as i64).map(|i| i * 7919).collect();
+    let b: Vec<i64> = (0..chunk as i64).map(|i| i ^ 0x5A5A).collect();
+    let mut acc: Vec<u8> = a.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let other: Vec<u8> = b.iter().flat_map(|x| x.to_le_bytes()).collect();
+    rt.reduce_fold_bytes("xor", "i64", &mut acc, &other).unwrap();
+    let got: Vec<i64> = acc
+        .chunks_exact(8)
+        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    for i in 0..chunk {
+        assert_eq!(got[i], a[i] ^ b[i], "i={i}");
+    }
+}
+
+#[test]
+fn reduce_kernel_rejects_bad_shapes() {
+    require_artifacts!();
+    let rt = XlaRuntime::load_default().unwrap();
+    let mut acc = vec![0u8; 64];
+    let other = vec![0u8; 64];
+    assert!(rt.reduce_fold_bytes("sum", "f32", &mut acc, &other).is_err());
+    let mut acc = vec![0u8; 8192 * 4];
+    let other = vec![0u8; 8192 * 4];
+    assert!(rt.reduce_fold_bytes("sum", "f64", &mut acc, &other).is_err());
+    assert!(rt.reduce_fold_bytes("nope", "f32", &mut acc, &other).is_err());
+}
+
+#[test]
+fn copy_kernel_is_identity() {
+    require_artifacts!();
+    let rt = XlaRuntime::load_default().unwrap();
+    let file = rt.manifest().copy_file.clone();
+    let data: Vec<f32> = (0..8192).map(|i| (i as f32).sin()).collect();
+    let out = rt
+        .execute(&file, vec![HostTensor::from_f32(vec![64, 128], &data)])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![64, 128]);
+    assert_eq!(out[0].to_f32(), data);
+}
+
+#[test]
+fn model_init_and_train_step_execute() {
+    require_artifacts!();
+    let rt = XlaRuntime::load_default().unwrap();
+    let m = rt.manifest().model("tiny").unwrap().clone();
+
+    // init_params(seed) -> params tuple
+    let params = rt
+        .execute(&m.init_file, vec![HostTensor::scalar_i32(7)])
+        .unwrap();
+    assert_eq!(params.len(), m.params.len());
+    for (p, (name, shape)) in params.iter().zip(&m.params) {
+        assert_eq!(&p.dims, shape, "shape mismatch for {name}");
+        assert_eq!(p.dtype, DType::F32);
+    }
+    // Determinism.
+    let params2 = rt
+        .execute(&m.init_file, vec![HostTensor::scalar_i32(7)])
+        .unwrap();
+    assert_eq!(params[0].bytes, params2[0].bytes);
+
+    // train_step(params..., tokens) -> (loss, grads...)
+    let tokens: Vec<i32> = (0..m.batch * m.seq_len)
+        .map(|i| (i * 13 % m.vocab) as i32)
+        .collect();
+    let mut args = params.clone();
+    args.push(HostTensor::from_i32(vec![m.batch, m.seq_len], &tokens));
+    let out = rt.execute(&m.train_step_file, args.clone()).unwrap();
+    assert_eq!(out.len(), 1 + m.params.len());
+    let loss = out[0].scalar_f32();
+    assert!(loss.is_finite() && loss > 0.0, "loss = {loss}");
+    // Initial loss ≈ ln(vocab) for a fresh model.
+    let expect = (m.vocab as f32).ln();
+    assert!((loss - expect).abs() < 1.0, "loss {loss} vs ln(V) {expect}");
+    // Grads shaped like params and not all zero.
+    let mut any_nonzero = false;
+    for (g, (name, shape)) in out[1..].iter().zip(&m.params) {
+        assert_eq!(&g.dims, shape, "grad shape for {name}");
+        any_nonzero |= g.to_f32().iter().any(|&x| x != 0.0);
+    }
+    assert!(any_nonzero);
+
+    // eval_loss agrees with train_step's loss on the same batch.
+    let ev = rt.execute(&m.eval_loss_file, args).unwrap();
+    assert!((ev[0].scalar_f32() - loss).abs() < 1e-4);
+}
+
+#[test]
+fn ishmem_reduce_uses_xla_kernel() {
+    require_artifacts!();
+    // Large f32 reduce must route through the AOT kernel (metrics prove it)
+    // and agree with the native result.
+    let cfg = IshmemConfig {
+        heap_bytes: RESERVED_BYTES + (1 << 22),
+        xla_reduce_min_elems: 1024,
+        ..IshmemConfig::with_npes(4)
+    };
+    let npes = 4;
+    let elems = 3 * 8192 + 100; // 3 kernel chunks + native tail
+    let ish = rishmem::Ishmem::new(cfg).unwrap();
+    ish.attach_runtime(XlaRuntime::load_default().unwrap());
+    let ok = ish.launch(|ctx| {
+        let dest = ctx.calloc::<f32>(elems);
+        let src = ctx.calloc::<f32>(elems);
+        let mine: Vec<f32> = (0..elems)
+            .map(|i| (ctx.pe() + 1) as f32 + (i % 97) as f32)
+            .collect();
+        ctx.write_local(src, &mine);
+        ctx.reduce(dest, src, elems, ReduceOp::Sum, TeamId::WORLD);
+        let got = ctx.read_local_vec(dest);
+        (0..elems).all(|i| {
+            let want: f32 = (0..npes).map(|r| (r + 1) as f32 + (i % 97) as f32).sum();
+            (got[i] - want).abs() < 1e-3
+        })
+    });
+    assert!(ok.iter().all(|&b| b));
+    let snap = ish.metrics.snapshot();
+    assert!(
+        snap.xla_reduce_calls >= (npes as u64) * 3,
+        "XLA kernel not used: {snap:?}"
+    );
+    assert!(snap.native_reduce_elems > 0, "tail should fold natively");
+    ish.shutdown();
+}
+
+#[test]
+fn reduce_identical_with_and_without_kernel() {
+    require_artifacts!();
+    let elems = 2 * 8192;
+    let run = |attach: bool| -> Vec<i32> {
+        let cfg = IshmemConfig {
+            heap_bytes: RESERVED_BYTES + (1 << 22),
+            ..IshmemConfig::with_npes(3)
+        };
+        let ish = rishmem::Ishmem::new(cfg).unwrap();
+        if attach {
+            ish.attach_runtime(XlaRuntime::load_default().unwrap());
+        }
+        let out = ish.launch(|ctx| {
+            let dest = ctx.calloc::<i32>(elems);
+            let src = ctx.calloc::<i32>(elems);
+            let mine: Vec<i32> = (0..elems as i32).map(|i| i * (ctx.pe() as i32 + 1)).collect();
+            ctx.write_local(src, &mine);
+            ctx.reduce(dest, src, elems, ReduceOp::Max, TeamId::WORLD);
+            ctx.read_local_vec(dest)
+        });
+        ish.shutdown();
+        out[0].clone()
+    };
+    assert_eq!(run(true), run(false));
+}
+
+#[test]
+fn run_spmd_with_runtime_flag() {
+    require_artifacts!();
+    let ok = run_spmd(IshmemConfig::with_npes(2), true, |ctx| {
+        let dest = ctx.calloc::<f32>(9000);
+        let src = ctx.calloc::<f32>(9000);
+        ctx.write_local(src, &vec![1.5f32; 9000]);
+        ctx.reduce(dest, src, 9000, ReduceOp::Sum, TeamId::WORLD);
+        ctx.read_local_vec(dest).iter().all(|&v| (v - 3.0).abs() < 1e-5)
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}

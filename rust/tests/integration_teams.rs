@@ -1,0 +1,102 @@
+//! Integration: teams API semantics (split, translate, ranks).
+
+use rishmem::{run_npes, run_spmd, IshmemConfig, TeamId, Topology};
+
+#[test]
+fn world_and_shared_basics() {
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 3, 2),
+        ..Default::default()
+    };
+    let info = run_spmd(cfg, false, |ctx| {
+        (
+            ctx.team_my_pe(TeamId::WORLD),
+            ctx.team_n_pes(TeamId::WORLD),
+            ctx.team_my_pe(TeamId::SHARED),
+            ctx.team_n_pes(TeamId::SHARED),
+        )
+    })
+    .unwrap();
+    for (pe, (wr, wn, sr, sn)) in info.iter().enumerate() {
+        assert_eq!(*wr, pe);
+        assert_eq!(*wn, 12);
+        assert_eq!(*sr, pe % 6);
+        assert_eq!(*sn, 6);
+    }
+}
+
+#[test]
+fn split_strided_ids_agree_across_members() {
+    let ids = run_npes(8, |ctx| {
+        let evens = ctx.team_split_strided(TeamId::WORLD, 0, 2, 4);
+        let odds = ctx.team_split_strided(TeamId::WORLD, 1, 2, 4);
+        ctx.barrier_all();
+        (evens, odds)
+    })
+    .unwrap();
+    let (e0, o0) = ids[0];
+    assert_ne!(e0, o0);
+    for (e, o) in &ids {
+        assert_eq!(*e, e0, "even team id differs between PEs");
+        assert_eq!(*o, o0);
+    }
+}
+
+#[test]
+fn nested_split() {
+    // Split world {0..8} into evens {0,2,4,6}, then evens' first half {0,4}.
+    let ranks = run_npes(8, |ctx| {
+        let evens = ctx.team_split_strided(TeamId::WORLD, 0, 2, 4);
+        let pair = ctx.team_split_strided(evens, 0, 2, 2);
+        ctx.barrier_all();
+        if ctx.pe() % 4 == 0 {
+            Some((ctx.team_my_pe(pair), ctx.team_n_pes(pair)))
+        } else {
+            None
+        }
+    })
+    .unwrap();
+    assert_eq!(ranks[0], Some((0, 2)));
+    assert_eq!(ranks[4], Some((1, 2)));
+    assert_eq!(ranks[2], None);
+}
+
+#[test]
+fn translate_pe_between_teams() {
+    let t = run_npes(8, |ctx| {
+        let evens = ctx.team_split_strided(TeamId::WORLD, 0, 2, 4);
+        ctx.barrier_all();
+        // Even-team rank 3 is world PE 6.
+        (
+            ctx.team_translate_pe(evens, 3, TeamId::WORLD),
+            ctx.team_translate_pe(TeamId::WORLD, 6, evens),
+            ctx.team_translate_pe(TeamId::WORLD, 5, evens), // odd PE: None
+        )
+    })
+    .unwrap();
+    for r in &t {
+        assert_eq!(*r, (Some(6), Some(3), None));
+    }
+}
+
+#[test]
+fn team_sync_only_blocks_members() {
+    // The odd team syncs 100 times while evens do nothing — must not hang.
+    let ok = run_npes(6, |ctx| {
+        if ctx.pe() % 2 == 1 {
+            let odds = ctx.team_split_strided(TeamId::WORLD, 1, 2, 3);
+            for _ in 0..100 {
+                ctx.team_sync(odds);
+            }
+        } else {
+            // Evens must also create their (unused) team so the creation
+            // sequence stays mirrored? — No: split is collective over the
+            // PARENT team per spec; our impl only requires members to
+            // call. Evens skip entirely.
+        }
+        ctx.barrier_all();
+        true
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}

@@ -1,0 +1,211 @@
+//! Property tests over coordinator invariants: routing (locality
+//! classification), symmetric-heap symmetry, cutover monotonicity,
+//! work-group partitioning, team algebra, and RMA roundtrips with random
+//! shapes — driven by the deterministic prop harness (seeds printed on
+//! failure).
+
+use rishmem::ishmem::cutover::{CutoverConfig, CutoverMode, Path};
+use rishmem::ishmem::heap::SymAllocator;
+use rishmem::sim::cost::{CostModel, CostParams};
+use rishmem::util::prop::prop_check;
+use rishmem::{run_npes, Locality, ReduceOp, TeamId, Topology};
+
+#[test]
+fn prop_locality_classification_consistent() {
+    prop_check("locality is symmetric and node-consistent", 200, |rng| {
+        let nodes = rng.range(1, 3) as usize;
+        let gpus = rng.range(1, 8) as usize;
+        let tiles = rng.range(1, 2) as usize;
+        let t = Topology::new(nodes, gpus, tiles);
+        let a = rng.below(t.npes() as u64) as usize;
+        let b = rng.below(t.npes() as u64) as usize;
+        let ab = t.classify(a, b);
+        let ba = t.classify(b, a);
+        assert_eq!(ab, ba, "locality must be symmetric");
+        match ab {
+            Locality::Remote => assert_ne!(t.node_of(a), t.node_of(b)),
+            Locality::SameNode => {
+                assert_eq!(t.node_of(a), t.node_of(b));
+                assert_ne!(t.gpu_of(a), t.gpu_of(b));
+            }
+            Locality::SameGpu => {
+                assert_eq!(t.global_gpu_of(a), t.global_gpu_of(b));
+                assert_ne!(t.tile_of(a), t.tile_of(b));
+            }
+            Locality::SameTile => assert_eq!(a, b),
+        }
+    });
+}
+
+#[test]
+fn prop_symmetric_allocators_never_diverge() {
+    prop_check("mirrored allocation sequences agree", 100, |rng| {
+        let heap = 1 << 22;
+        let mut mirrors: Vec<SymAllocator> = (0..4).map(|_| SymAllocator::new(heap)).collect();
+        for _ in 0..rng.range(1, 30) {
+            let n = rng.range(1, 2000) as usize;
+            let offs: Vec<usize> = mirrors
+                .iter_mut()
+                .map(|a| match n % 3 {
+                    0 => a.alloc::<u8>(n).byte_offset(),
+                    1 => a.alloc::<f32>(n).byte_offset(),
+                    _ => a.alloc::<u64>(n).byte_offset(),
+                })
+                .collect();
+            assert!(offs.windows(2).all(|w| w[0] == w[1]), "{offs:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_cutover_monotone_in_size() {
+    // Once the tuned policy picks the engine at size S, it must also pick
+    // it for every larger size (same locality/work-group).
+    prop_check("cutover is monotone in message size", 100, |rng| {
+        let cost = CostModel::new(Topology::default(), CostParams::default());
+        let cfg = CutoverConfig::mode(CutoverMode::Tuned);
+        let items = 1usize << rng.range(0, 10);
+        let loc = *[Locality::SameTile, Locality::SameGpu, Locality::SameNode]
+            .iter()
+            .nth(rng.below(3) as usize)
+            .unwrap();
+        let mut engine_seen = false;
+        for p in 3..26 {
+            match cfg.decide(&cost, loc, 1usize << p, items) {
+                Path::CopyEngine => engine_seen = true,
+                Path::LoadStore => {
+                    assert!(!engine_seen, "flip-flop at 2^{p} items={items} {loc:?}")
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_team_split_algebra() {
+    prop_check("team ranks round-trip through world", 60, |rng| {
+        let npes = (rng.range(2, 6) * 2) as usize; // even, 4..12
+        let start = rng.below((npes / 2) as u64) as usize;
+        let stride = rng.range(1, 2) as usize;
+        let max_size = (npes - start).div_ceil(stride);
+        let size = rng.range(1, max_size as u64) as usize;
+
+        let specs = run_npes(npes, move |ctx| {
+            let team = ctx.team_split_strided(TeamId::WORLD, start, stride, size);
+            ctx.barrier_all();
+            let member = (ctx.pe() >= start)
+                && (ctx.pe() - start) % stride == 0
+                && (ctx.pe() - start) / stride < size;
+            let rank = member.then(|| ctx.team_my_pe(team));
+            // translate back to world
+            let world = rank.map(|r| {
+                ctx.team_translate_pe(team, r, TeamId::WORLD).unwrap()
+            });
+            (member, rank, world, ctx.team_n_pes(team))
+        })
+        .unwrap();
+        for (pe, (member, rank, world, n)) in specs.iter().enumerate() {
+            assert_eq!(*n, size);
+            if *member {
+                assert_eq!(rank.unwrap(), (pe - start) / stride);
+                assert_eq!(world.unwrap(), pe);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rma_roundtrip_random_shapes() {
+    prop_check("put→get roundtrips arbitrary buffers", 25, |rng| {
+        let npes = (rng.range(1, 4) * 2) as usize;
+        let len = rng.range(1, 20_000) as usize;
+        let seed = rng.next_u64();
+        let ok = run_npes(npes, move |ctx| {
+            let buf = ctx.calloc::<u8>(len);
+            let mut payload = vec![0u8; len];
+            let mut r = rishmem::util::rng::Rng::new(seed ^ ctx.pe() as u64);
+            r.fill_bytes(&mut payload);
+            let t = (ctx.pe() + 1) % ctx.npes();
+            ctx.put(buf, &payload, t);
+            ctx.barrier_all();
+            let mut back = vec![0u8; len];
+            ctx.get(&mut back, buf, t);
+            // What I wrote to t is what I read back from t.
+            back == payload
+        })
+        .unwrap();
+        assert!(ok.iter().all(|&b| b));
+    });
+}
+
+#[test]
+fn prop_reduce_matches_scalar_model() {
+    prop_check("reduce equals per-element fold", 12, |rng| {
+        let npes = rng.range(2, 6) as usize;
+        let n = rng.range(1, 3000) as usize;
+        let op = *[
+            ReduceOp::Sum,
+            ReduceOp::Min,
+            ReduceOp::Max,
+            ReduceOp::And,
+            ReduceOp::Or,
+            ReduceOp::Xor,
+        ]
+        .iter()
+        .nth(rng.below(6) as usize)
+        .unwrap();
+        let seed = rng.next_u64();
+        let results = run_npes(npes, move |ctx| {
+            let dest = ctx.calloc::<i64>(n);
+            let src = ctx.calloc::<i64>(n);
+            let mut r = rishmem::util::rng::Rng::new(seed ^ (ctx.pe() as u64) << 17);
+            let mine: Vec<i64> = (0..n).map(|_| r.range(0, 1000) as i64).collect();
+            ctx.write_local(src, &mine);
+            ctx.reduce(dest, src, n, op, TeamId::WORLD);
+            (mine, ctx.read_local_vec(dest))
+        })
+        .unwrap();
+        // Oracle: fold the per-PE inputs.
+        let inputs: Vec<&Vec<i64>> = results.iter().map(|(m, _)| m).collect();
+        for i in 0..n {
+            let mut want = inputs[0][i];
+            for m in &inputs[1..] {
+                want = match op {
+                    ReduceOp::Sum => want.wrapping_add(m[i]),
+                    ReduceOp::Prod => want.wrapping_mul(m[i]),
+                    ReduceOp::Min => want.min(m[i]),
+                    ReduceOp::Max => want.max(m[i]),
+                    ReduceOp::And => want & m[i],
+                    ReduceOp::Or => want | m[i],
+                    ReduceOp::Xor => want ^ m[i],
+                };
+            }
+            for (pe, (_, got)) in results.iter().enumerate() {
+                assert_eq!(got[i], want, "pe={pe} elem={i} op={op:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fcollect_permutation_safety() {
+    // fcollect output is identical on every PE and is exactly the
+    // concatenation of inputs in rank order — for random sizes/teams.
+    prop_check("fcollect is a rank-ordered concat", 15, |rng| {
+        let npes = (rng.range(1, 6) * 2) as usize;
+        let per = rng.range(1, 400) as usize;
+        let ok = run_npes(npes, move |ctx| {
+            let n = ctx.npes();
+            let dest = ctx.calloc::<u64>(per * n);
+            let src = ctx.calloc::<u64>(per);
+            let mine: Vec<u64> = (0..per).map(|i| ((ctx.pe() << 20) + i) as u64).collect();
+            ctx.write_local(src, &mine);
+            ctx.barrier_all();
+            ctx.fcollect(dest, src, per, TeamId::WORLD);
+            let all = ctx.read_local_vec(dest);
+            (0..n).all(|r| (0..per).all(|i| all[r * per + i] == ((r << 20) + i) as u64))
+        })
+        .unwrap();
+        assert!(ok.iter().all(|&b| b));
+    });
+}

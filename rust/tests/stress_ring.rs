@@ -1,0 +1,146 @@
+//! Stress: the reverse-offload ring + completion pool under heavy real
+//! concurrency, and the paper's §III-D claims in wall-clock terms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use rishmem::ringbuf::{CompletionPool, Message, Ring, RingOp, COMPLETION_NONE};
+
+#[test]
+fn sustained_multiproducer_throughput() {
+    // The paper claims >20M req/s on real HW with a single service thread;
+    // on this 1-core CI box we only assert sustained six-figure throughput
+    // and zero loss. (benches/ring_buffer.rs reports the actual rate.)
+    const PRODUCERS: usize = 4;
+    const PER: u64 = 25_000;
+    let ring = Ring::new(1024);
+    let mut consumer = ring.consumer();
+    let done = Arc::new(AtomicU64::new(0));
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for p in 0..PRODUCERS {
+            let r = Arc::clone(&ring);
+            s.spawn(move || {
+                for i in 0..PER {
+                    let mut m = Message::nop();
+                    m.src_pe = p as u32;
+                    m.inline_val = i;
+                    r.send(m);
+                }
+            });
+        }
+        let d = done.clone();
+        s.spawn(move || {
+            let mut counts = [0u64; PRODUCERS];
+            for _ in 0..(PRODUCERS as u64 * PER) {
+                let m = consumer.recv();
+                counts[m.src_pe as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == PER), "{counts:?}");
+            d.store(1, Ordering::Release);
+        });
+    });
+    let dt = t0.elapsed();
+    assert_eq!(done.load(Ordering::Acquire), 1);
+    let rate = (PRODUCERS as f64 * PER as f64) / dt.as_secs_f64();
+    eprintln!("ring throughput: {:.2} M msg/s", rate / 1e6);
+    assert!(rate > 100_000.0, "ring too slow: {rate}/s");
+}
+
+#[test]
+fn blocking_roundtrips_with_out_of_order_completions() {
+    // Producers issue fetching requests; a slow server completes them in
+    // reversed batches. Every waiter must get *its* value.
+    let ring = Ring::new(256);
+    let pool = Arc::new(CompletionPool::new(64));
+    let mut consumer = ring.consumer();
+    const THREADS: usize = 6;
+    const PER: u64 = 2_000;
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let r = Arc::clone(&ring);
+            let p = pool.clone();
+            s.spawn(move || {
+                for i in 0..PER {
+                    let token = p.alloc();
+                    let mut m = Message::nop();
+                    m.op = RingOp::Amo as u8;
+                    m.completion = token.index;
+                    m.inline_val = (t as u64) << 32 | i;
+                    r.send(m);
+                    assert_eq!(p.wait(token), ((t as u64) << 32 | i) + 1);
+                }
+            });
+        }
+        let p = pool.clone();
+        s.spawn(move || {
+            let mut served = 0;
+            let mut batch = Vec::with_capacity(32);
+            while served < THREADS as u64 * PER {
+                batch.clear();
+                let n = consumer.recv_batch(&mut batch, 32);
+                // Complete in reverse order to force OOO delivery.
+                for m in batch.iter().rev() {
+                    if m.completion != COMPLETION_NONE {
+                        p.complete(m.completion, m.inline_val + 1);
+                    }
+                }
+                served += n as u64;
+                if n == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+    });
+    assert_eq!(pool.free_count(), 64);
+}
+
+#[test]
+fn ring_survives_full_backpressure() {
+    // Tiny ring, bursty producers: flow control must kick in without loss.
+    let ring = Ring::new(4);
+    let mut consumer = ring.consumer();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let r = Arc::clone(&ring);
+            s.spawn(move || {
+                for _ in 0..500 {
+                    r.send(Message::nop());
+                }
+            });
+        }
+        s.spawn(move || {
+            for _ in 0..8 * 500 {
+                consumer.recv();
+            }
+            assert!(consumer.try_recv().is_none());
+        });
+    });
+}
+
+#[test]
+fn proxy_shutdown_is_clean_under_load() {
+    // Spin up a full machine, hammer proxied ops, and drop it — shutdown
+    // must join the proxy without hanging or losing completions.
+    use rishmem::ishmem::{CutoverConfig, CutoverMode};
+    use rishmem::IshmemConfig;
+    for _ in 0..3 {
+        let cfg = IshmemConfig {
+            cutover: CutoverConfig::mode(CutoverMode::Always),
+            ..IshmemConfig::with_npes(4)
+        };
+        let ish = rishmem::Ishmem::new(cfg).unwrap();
+        let ok = ish.launch(|ctx| {
+            let buf = ctx.calloc::<u64>(512);
+            for i in 0..20u64 {
+                ctx.put(buf, &vec![i; 512], (ctx.pe() + 1) % 4);
+            }
+            ctx.barrier_all();
+            ctx.read_local_vec(buf)[0] == 19
+        });
+        assert!(ok.iter().all(|&b| b));
+        ish.shutdown();
+    }
+}
