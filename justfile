@@ -1,0 +1,21 @@
+# Developer entry points (`just --list`). The make-style targets mirror
+# the ROADMAP's tier-1 verify command.
+
+# Tier-1 verify: build + full test suite.
+verify:
+    cargo build --release
+    cargo test -q
+
+# Paper-figure benches (plain binaries, no libtest harness).
+bench:
+    cargo bench --bench fig5_cutover
+    cargo bench --bench fig3_rma
+    cargo bench --bench hot_path
+
+# Formatting gate (no writes).
+fmt-check:
+    cargo fmt --all -- --check
+
+# Regenerate every paper figure via the CLI.
+figures:
+    cargo run --release -- figure all

@@ -1,8 +1,10 @@
-//! Bench E5/E6: paper Fig 5 — work_group Put with the tuned cutover.
-//! The tuned curve must track the upper envelope of Fig 4's two paths.
+//! Bench E5/E6: paper Fig 5 — work_group Put with the cutover, under both
+//! the `Tuned` (model-argmin) and `Adaptive` (online-learned) modes.
+//! The tuned curve must track the upper envelope of Fig 4's two paths,
+//! and the adaptive curve must track the tuned one after warm-up.
 //! `cargo bench --bench fig5_cutover`
 
-use rishmem::bench::figures::{fig4a, fig4b, fig5a, fig5b};
+use rishmem::bench::figures::{adaptive_cutover_report, fig4a, fig4b, fig5_adaptive, fig5a, fig5b};
 
 fn main() {
     let tuned = fig5a();
@@ -39,4 +41,24 @@ fn main() {
         }
     }
     println!("[fig5] tuned cutover tracks the upper envelope of store/engine paths");
+
+    // Same sweep under the adaptive cutover: the measurement warm-up is
+    // the online warm-up, so the adaptive curve must track the tuned one.
+    let adaptive = fig5_adaptive();
+    println!("{}", adaptive.render_ascii());
+    for t in &tuned.series {
+        let a = adaptive.series.iter().find(|s| s.name == t.name).unwrap();
+        for &(x, y) in &a.points {
+            let ty = t.y_at(x).unwrap();
+            assert!(
+                y >= ty * 0.9,
+                "{}: adaptive {y} far below tuned {ty} at {x}B",
+                t.name
+            );
+        }
+    }
+    println!("[fig5] adaptive cutover converged to the tuned envelope");
+
+    // Fig 5 comparison table: learned crossovers vs the tuned model's.
+    println!("{}", adaptive_cutover_report());
 }

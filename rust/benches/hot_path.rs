@@ -5,12 +5,12 @@
 //! `cargo bench --bench hot_path`
 
 use rishmem::bench::measure_wall;
-use rishmem::ishmem::{CutoverConfig, CutoverMode};
+use rishmem::ishmem::CutoverConfig;
 use rishmem::{Ishmem, IshmemConfig, ReduceOp, TeamId};
 
 fn main() {
     let cfg = IshmemConfig {
-        cutover: CutoverConfig::mode(CutoverMode::Never),
+        cutover: CutoverConfig::never(),
         ..IshmemConfig::with_npes(2)
     };
     let ish = Ishmem::new(cfg).expect("machine");

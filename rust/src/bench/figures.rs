@@ -6,7 +6,7 @@
 use std::sync::Arc;
 
 use crate::device::WorkGroup;
-use crate::ishmem::{CutoverConfig, CutoverMode, Ishmem, IshmemConfig};
+use crate::ishmem::{CutoverConfig, Ishmem, IshmemConfig};
 use crate::ringbuf::{CompletionPool, Message, Ring, RingOp, COMPLETION_NONE};
 use crate::sim::Topology;
 
@@ -93,22 +93,22 @@ fn fig3(get: bool) -> Figure {
 /// Fig 4(a): `ishmemx_put_work_group`, pure store path (cutover=Never),
 /// bandwidth vs size for 1/16/128/1024 work-items, cross-GPU.
 pub fn fig4a() -> Figure {
-    fig4(CutoverMode::Never, "fig4a", "work_group Put, kernel store path")
+    fig4(CutoverConfig::never(), "fig4a", "work_group Put, kernel store path")
 }
 
 /// Fig 4(b): same sweep on the copy-engine path (cutover=Always) — the
 /// curves collapse: engine bandwidth is work-group invariant.
 pub fn fig4b() -> Figure {
-    fig4(CutoverMode::Always, "fig4b", "work_group Put, copy-engine path")
+    fig4(CutoverConfig::always(), "fig4b", "work_group Put, copy-engine path")
 }
 
-fn fig4(mode: CutoverMode, id: &str, title: &str) -> Figure {
+fn fig4(cutover: CutoverConfig, id: &str, title: &str) -> Figure {
     let sizes = size_sweep();
     let wgs = [1usize, 16, 128, 1024];
     let cfg = IshmemConfig {
         topology: Topology::new(1, 2, 2),
         heap_bytes: 40 << 20,
-        cutover: CutoverConfig::mode(mode),
+        cutover,
         ..Default::default()
     };
     let ish = Ishmem::new(cfg).expect("fig4 machine");
@@ -144,14 +144,65 @@ fn fig4(mode: CutoverMode, id: &str, title: &str) -> Figure {
 /// Fig 5(a): work_group Put with the tuned cutover — store bandwidth for
 /// small/medium, engine bandwidth past the (wg-dependent) crossover.
 pub fn fig5a() -> Figure {
-    let mut f = fig4(CutoverMode::Tuned, "fig5a", "work_group Put, tuned cutover");
+    let mut f = fig4(CutoverConfig::tuned(), "fig5a", "work_group Put, tuned cutover");
     f.y_label = "GB/s".into();
     f
 }
 
+/// Fig 5(a) under the adaptive cutover mode: same sweep with the online
+/// learned thresholds. The measurement warm-up doubles as the adaptive
+/// warm-up, so the curve should track the tuned envelope once the table
+/// converges (compare with [`adaptive_cutover_report`]).
+pub fn fig5_adaptive() -> Figure {
+    let mut f = fig4(
+        CutoverConfig::adaptive(),
+        "fig5a-adaptive",
+        "work_group Put, adaptive cutover",
+    );
+    f.y_label = "GB/s".into();
+    f
+}
+
+/// Learned-vs-modeled crossover table: run an Adaptive machine through the
+/// Fig 5 sweep, then dump the engine's learned table next to the `Tuned`
+/// model's crossovers (the Fig 5 comparison the paper tunes by hand).
+pub fn adaptive_cutover_report() -> String {
+    let sizes = size_sweep();
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 40 << 20,
+        cutover: CutoverConfig::adaptive(),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).expect("adaptive machine");
+    let sizes2 = sizes.clone();
+    ish.launch(move |ctx| {
+        let max = *sizes2.iter().max().unwrap();
+        let buf = ctx.calloc::<u8>(max);
+        let local = vec![0x3Cu8; max];
+        ctx.barrier_all();
+        if ctx.pe() != 0 {
+            return;
+        }
+        // Warm-up sweep: several passes per (size, work-items) bucket so
+        // the EMAs see both the store and engine regimes.
+        for wg_size in [1usize, 16, 128, 1024] {
+            let wg = WorkGroup::new(wg_size);
+            for &size in &sizes2 {
+                for _ in 0..4 {
+                    ctx.put_work_group(buf, &local[..size], 2, &wg);
+                }
+            }
+        }
+    });
+    let report = ish.xfer.adaptive_report();
+    ish.shutdown();
+    report
+}
+
 /// Fig 5(b): same, reported as latency (µs).
 pub fn fig5b() -> Figure {
-    let bw = fig4(CutoverMode::Tuned, "fig5b", "work_group Put latency, tuned cutover");
+    let bw = fig4(CutoverConfig::tuned(), "fig5b", "work_group Put latency, tuned cutover");
     let mut fig = Figure::new("fig5b", bw.title.clone(), "msg size", "µs");
     for s in bw.series {
         let mut ls = Series::new(s.name);
@@ -174,7 +225,7 @@ pub fn fig6(npes: usize) -> Figure {
     let cfg = IshmemConfig {
         topology: Topology::new(1, 6, 2),
         heap_bytes: 32 << 20,
-        cutover: CutoverConfig::mode(CutoverMode::Never), // device store path
+        cutover: CutoverConfig::never(), // device store path
         ..Default::default()
     };
     let ish = Ishmem::new(cfg).expect("fig6 machine");
@@ -234,7 +285,7 @@ pub fn fig7a() -> Figure {
     let cfg = IshmemConfig {
         topology: Topology::new(1, 6, 2),
         heap_bytes: 32 << 20,
-        cutover: CutoverConfig::mode(CutoverMode::Tuned),
+        cutover: CutoverConfig::tuned(),
         ..Default::default()
     };
     let ish = Ishmem::new(cfg).expect("fig7a machine");
@@ -284,7 +335,7 @@ pub fn fig7b() -> Figure {
     let cfg = IshmemConfig {
         topology: Topology::new(1, 6, 2),
         heap_bytes: 32 << 20,
-        cutover: CutoverConfig::mode(CutoverMode::Tuned),
+        cutover: CutoverConfig::tuned(),
         ..Default::default()
     };
     let ish = Ishmem::new(cfg).expect("fig7b machine");
@@ -424,7 +475,7 @@ pub fn ablate_cmdlists() -> Figure {
         let cfg = IshmemConfig {
             topology: Topology::new(1, 2, 2),
             heap_bytes: 40 << 20,
-            cutover: CutoverConfig::mode(CutoverMode::Always),
+            cutover: CutoverConfig::always(),
             use_immediate_cl: immediate,
             ..Default::default()
         };
@@ -503,7 +554,7 @@ pub fn ablate_sync() -> Figure {
 
 /// All paper figures, in order.
 pub fn all_figures() -> Vec<Figure> {
-    let mut v = vec![fig3a(), fig3b(), fig4a(), fig4b(), fig5a(), fig5b()];
+    let mut v = vec![fig3a(), fig3b(), fig4a(), fig4b(), fig5a(), fig5b(), fig5_adaptive()];
     for npes in [4, 8, 12] {
         v.push(fig6(npes));
     }

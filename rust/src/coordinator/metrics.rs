@@ -17,6 +17,12 @@ pub struct Metrics {
     pub bytes_loadstore: AtomicU64,
     pub bytes_copy_engine: AtomicU64,
     pub bytes_nic: AtomicU64,
+    // Transfer-plan engine: route decisions by executor, and online
+    // adaptive-table refinements (adaptive-cutover feedback).
+    pub xfer_plans_loadstore: AtomicU64,
+    pub xfer_plans_copy_engine: AtomicU64,
+    pub xfer_plans_nic: AtomicU64,
+    pub adaptive_updates: AtomicU64,
     // Reverse-offload ring.
     pub ring_messages: AtomicU64,
     pub ring_completions: AtomicU64,
@@ -46,6 +52,10 @@ impl Metrics {
             bytes_loadstore: self.bytes_loadstore.load(Ordering::Relaxed),
             bytes_copy_engine: self.bytes_copy_engine.load(Ordering::Relaxed),
             bytes_nic: self.bytes_nic.load(Ordering::Relaxed),
+            xfer_plans_loadstore: self.xfer_plans_loadstore.load(Ordering::Relaxed),
+            xfer_plans_copy_engine: self.xfer_plans_copy_engine.load(Ordering::Relaxed),
+            xfer_plans_nic: self.xfer_plans_nic.load(Ordering::Relaxed),
+            adaptive_updates: self.adaptive_updates.load(Ordering::Relaxed),
             ring_messages: self.ring_messages.load(Ordering::Relaxed),
             ring_completions: self.ring_completions.load(Ordering::Relaxed),
             xla_reduce_calls: self.xla_reduce_calls.load(Ordering::Relaxed),
@@ -64,6 +74,10 @@ pub struct MetricsSnapshot {
     pub bytes_loadstore: u64,
     pub bytes_copy_engine: u64,
     pub bytes_nic: u64,
+    pub xfer_plans_loadstore: u64,
+    pub xfer_plans_copy_engine: u64,
+    pub xfer_plans_nic: u64,
+    pub adaptive_updates: u64,
     pub ring_messages: u64,
     pub ring_completions: u64,
     pub xla_reduce_calls: u64,
@@ -76,10 +90,15 @@ impl MetricsSnapshot {
         self.bytes_loadstore + self.bytes_copy_engine + self.bytes_nic
     }
 
+    pub fn total_xfer_plans(&self) -> u64 {
+        self.xfer_plans_loadstore + self.xfer_plans_copy_engine + self.xfer_plans_nic
+    }
+
     pub fn report(&self) -> String {
         format!(
             "ops: put={} get={} amo={} coll={}\n\
              bytes: load/store={} copy-engine={} nic={}\n\
+             plans: load/store={} copy-engine={} nic={} adaptive-updates={}\n\
              ring: msgs={} completions={}\n\
              reduce: xla-calls={} xla-elems={} native-elems={}",
             self.puts,
@@ -89,6 +108,10 @@ impl MetricsSnapshot {
             crate::util::fmt_bytes(self.bytes_loadstore as usize),
             crate::util::fmt_bytes(self.bytes_copy_engine as usize),
             crate::util::fmt_bytes(self.bytes_nic as usize),
+            self.xfer_plans_loadstore,
+            self.xfer_plans_copy_engine,
+            self.xfer_plans_nic,
+            self.adaptive_updates,
             self.ring_messages,
             self.ring_completions,
             self.xla_reduce_calls,
@@ -111,5 +134,18 @@ mod tests {
         assert_eq!(s.puts, 3);
         assert_eq!(s.total_bytes(), 4096);
         assert!(s.report().contains("put=3"));
+    }
+
+    #[test]
+    fn plan_counters_aggregate() {
+        let m = Metrics::new();
+        Metrics::add(&m.xfer_plans_loadstore, 2);
+        Metrics::add(&m.xfer_plans_copy_engine, 1);
+        Metrics::add(&m.xfer_plans_nic, 4);
+        Metrics::add(&m.adaptive_updates, 5);
+        let s = m.snapshot();
+        assert_eq!(s.total_xfer_plans(), 7);
+        assert_eq!(s.adaptive_updates, 5);
+        assert!(s.report().contains("adaptive-updates=5"));
     }
 }

@@ -4,16 +4,16 @@
 //!
 //! Local (load/store-reachable) targets execute real hardware atomics on
 //! the peer heap — the Xe-Link semantics. Inter-node targets reverse-
-//! offload an `Amo` ring message; the proxy executes the op and replies
-//! with the fetched value through the completion pool.
+//! offload an `Amo` ring message through the xfer executor
+//! ([`crate::xfer::exec`], the single composer of ring messages); the
+//! proxy executes the op and replies with the fetched value through the
+//! completion pool.
 
 use std::sync::atomic::Ordering;
 
 use crate::coordinator::metrics::Metrics;
 use crate::ringbuf::message::AmoKind;
-use crate::ringbuf::{Message, RingOp};
 use crate::sim::memory::SymHeap;
-use crate::sim::topology::Locality;
 
 use super::types::{AmoElem, TypeTag};
 use super::{PeCtx, SymAddr};
@@ -146,24 +146,16 @@ impl PeCtx {
             }
             T::from_bits(old)
         } else {
-            let mut m = Message::nop();
-            m.op = RingOp::Amo as u8;
-            m.dtype = T::TAG as u8;
-            m.flags = kind as u8 as u16;
-            m.pe = pe as u32;
-            m.dst_off = addr.byte_offset() as u64;
-            m.inline_val = operand.to_bits();
-            m.inline_val2 = comparand.to_bits();
-            if fetching {
-                let old = self.proxied_blocking(m);
-                self.clock
-                    .advance(self.rt.cost.fetch_atomic_ns(Locality::Remote));
-                T::from_bits(old)
-            } else {
-                self.proxied_ff(m);
-                self.clock.advance(self.rt.cost.ring_post_ns());
-                T::from_bits(0)
-            }
+            let old = self.proxied_amo(
+                pe,
+                addr.byte_offset(),
+                T::TAG as u8,
+                kind,
+                operand.to_bits(),
+                comparand.to_bits(),
+                fetching,
+            );
+            T::from_bits(old)
         }
     }
 

@@ -20,8 +20,10 @@
 //!
 //! The collective cutover (Fig 6/7): the work-item store fan-out competes
 //! with host-initiated copy engines; the decision depends on message size,
-//! work-group size *and* PE count, which falls out of comparing the two
-//! fan-out cost models below.
+//! work-group size *and* PE count. All of it flows through the unified
+//! transfer-plan engine: this module digests the member list into a
+//! [`FanoutShape`] (it owns the IPC table) and the planner
+//! ([`crate::xfer::plan::XferEngine::plan_fanout`]) picks the path.
 
 use std::sync::atomic::Ordering;
 
@@ -29,8 +31,9 @@ use crate::coordinator::metrics::Metrics;
 use crate::device::{collaborative_copy, WorkGroup};
 use crate::sim::topology::Locality;
 use crate::sim::SimClock;
+use crate::xfer::plan::{FanoutShape, Route};
 
-use super::cutover::{CutoverMode, Path};
+use super::cutover::Path;
 use super::heap::{team_sync_offset, MAX_TEAMS, RESERVED_BYTES};
 use super::types::{as_bytes, as_bytes_mut, ReduceElem, ReduceOp};
 use super::{PeCtx, SymAddr, TeamId};
@@ -133,103 +136,42 @@ impl PeCtx {
         }
     }
 
-    /// Modeled duration of fanning `bytes` to each of `peers` via
-    /// work-item stores: peers grouped per target GPU (one Xe-Link each),
-    /// links run in parallel, work-items split across active links,
-    /// multiple peers behind one link serialize.
-    fn fanout_store_ns(&self, peers: &[usize], bytes: usize, items: usize) -> f64 {
-        if peers.is_empty() || bytes == 0 {
-            return 0.0;
-        }
+    /// Digest a member list into the planner's [`FanoutShape`]: peers
+    /// grouped per target GPU (one Xe-Link each), with NIC spill-over for
+    /// unreachable members. This is the only fan-out knowledge that lives
+    /// outside the planner — it needs the IPC table, which is per-PE.
+    pub(crate) fn fanout_shape(&self, peers: &[usize], bytes: usize) -> FanoutShape {
         let topo = self.rt.topo();
-        let mut per_link: std::collections::HashMap<usize, (Locality, usize)> =
-            std::collections::HashMap::new();
-        let mut nic_bytes = 0usize;
-        for &peer in peers {
-            if self.ipc.lookup(peer).is_none() {
-                nic_bytes += bytes;
-                continue;
-            }
-            let loc = self.loc_of(peer);
-            let link = topo.global_gpu_of(peer);
-            let e = per_link.entry(link).or_insert((loc, 0));
-            e.1 += bytes;
-        }
-        let active = per_link.len().max(1);
-        let items_per_link = (items / active).max(1);
-        let xe = &self.rt.cost.params.xe;
-        let mut t: f64 = 0.0;
-        for (_link, (loc, link_bytes)) in per_link {
-            t = t.max(xe.loadstore_ns(loc, link_bytes, items_per_link));
-        }
-        if nic_bytes > 0 {
-            t = t.max(self.rt.cost.internode_ns(nic_bytes, true, true));
-        }
-        self.rt.cost.device_issue_ns() + t
-    }
-
-    /// Modeled duration of the same fan-out via copy engines started by a
-    /// single reverse-offload up-call (device-initiated) — engines run in
-    /// parallel up to the per-GPU engine count, links still share.
-    fn fanout_engine_ns(&self, peers: &[usize], bytes: usize) -> f64 {
-        if peers.is_empty() || bytes == 0 {
-            return 0.0;
-        }
-        let ce = &self.rt.cost.params.ce;
-        let xe = &self.rt.cost.params.xe;
         let mut per_link: std::collections::HashMap<usize, (Locality, usize, usize)> =
             std::collections::HashMap::new();
         let mut nic_bytes = 0usize;
+        let mut rep_loc = Locality::SameTile;
         for &peer in peers {
             if self.ipc.lookup(peer).is_none() {
                 nic_bytes += bytes;
                 continue;
             }
             let loc = self.loc_of(peer);
-            let link = self.rt.topo().global_gpu_of(peer);
+            if loc as u8 > rep_loc as u8 {
+                rep_loc = loc;
+            }
+            let link = topo.global_gpu_of(peer);
             let e = per_link.entry(link).or_insert((loc, 0, 0));
             e.1 += bytes;
             e.2 += 1;
         }
-        let mut t: f64 = 0.0;
-        for (_link, (loc, link_bytes, transfers)) in per_link {
-            // Startup overlaps across engines; transfers on one link share
-            // its bandwidth.
-            let startups = transfers.div_ceil(ce.engines_per_gpu) as f64;
-            t = t.max(
-                startups * ce.startup_immediate_ns
-                    + link_bytes as f64 / ce.path_bw_gbs(xe, loc),
-            );
-        }
-        if nic_bytes > 0 {
-            t = t.max(self.rt.cost.internode_ns(nic_bytes, true, false));
-        }
-        self.rt.cost.ring_rtt_ns() + t
-    }
-
-    /// Collective cutover decision (paper Fig 6: depends on nelems,
-    /// work-items, and npes).
-    fn decide_fanout(&self, peers: &[usize], bytes: usize, items: usize) -> Path {
-        match self.rt.config.cutover.mode {
-            CutoverMode::Never => Path::LoadStore,
-            CutoverMode::Always => Path::CopyEngine,
-            CutoverMode::Tuned => {
-                if let Some(t) = self.rt.config.cutover.fixed_threshold {
-                    return if bytes < t { Path::LoadStore } else { Path::CopyEngine };
-                }
-                if self.fanout_store_ns(peers, bytes, items)
-                    <= self.fanout_engine_ns(peers, bytes)
-                {
-                    Path::LoadStore
-                } else {
-                    Path::CopyEngine
-                }
-            }
+        FanoutShape {
+            per_link: per_link.into_values().collect(),
+            nic_bytes,
+            npeers: peers.len(),
+            loc: rep_loc,
         }
     }
 
     /// Execute + charge a fan-out of my `src_off` block to `dst_off` on
-    /// each peer. Returns the path taken (reports/tests).
+    /// each peer, over the path planned by the xfer engine (paper Fig 6:
+    /// the decision depends on nelems, work-items, and npes). Returns the
+    /// path taken (reports/tests).
     pub(crate) fn fanout(
         &self,
         peers: &[usize],
@@ -238,28 +180,31 @@ impl PeCtx {
         bytes: usize,
         items: usize,
     ) -> Path {
-        let path = self.decide_fanout(peers, bytes, items);
+        if peers.is_empty() || bytes == 0 {
+            return Path::LoadStore;
+        }
+        let shape = self.fanout_shape(peers, bytes);
+        let plan = self.rt.xfer.plan_fanout(&shape, bytes, items);
         let wg = WorkGroup::new(items.max(1).min(WorkGroup::MAX_SIZE));
         for &peer in peers {
             self.push_block(peer, src_off, dst_off, bytes, &wg);
         }
-        match path {
-            Path::LoadStore => {
-                self.clock.advance(self.fanout_store_ns(peers, bytes, items));
-                Metrics::add(
-                    &self.rt.metrics.bytes_loadstore,
-                    (bytes * peers.len()) as u64,
-                );
+        self.clock.advance(plan.modeled_ns);
+        self.rt.xfer.record(&plan, plan.modeled_ns);
+        let local_bytes = (bytes * peers.len()).saturating_sub(shape.nic_bytes) as u64;
+        match plan.route {
+            Route::LoadStore => {
+                Metrics::add(&self.rt.metrics.bytes_loadstore, local_bytes);
+                Path::LoadStore
             }
-            Path::CopyEngine => {
-                self.clock.advance(self.fanout_engine_ns(peers, bytes));
-                Metrics::add(
-                    &self.rt.metrics.bytes_copy_engine,
-                    (bytes * peers.len()) as u64,
-                );
+            Route::CopyEngine => {
+                Metrics::add(&self.rt.metrics.bytes_copy_engine, local_bytes);
+                Path::CopyEngine
             }
+            // push_block already routes unreachable members over OFI and
+            // counts their bytes_nic; the fan-out itself never plans Nic.
+            Route::Nic => unreachable!("plan_fanout only routes LoadStore/CopyEngine"),
         }
-        path
     }
 
     // -------------------------------------------------------- broadcast ----
@@ -535,7 +480,9 @@ impl PeCtx {
             }
         }
         let peers: Vec<usize> = spec.members().filter(|&p| p != self.pe()).collect();
-        self.clock.advance(self.fanout_store_ns(&peers, bytes, 1));
+        let shape = self.fanout_shape(&peers, bytes);
+        self.clock
+            .advance(self.rt.xfer.fanout_store_ns(&shape, 1));
         Metrics::add(&self.rt.metrics.bytes_loadstore, store_bytes);
         self.team_sync(team);
     }

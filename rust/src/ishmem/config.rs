@@ -65,6 +65,10 @@ impl IshmemConfig {
         anyhow::ensure!(self.heap_bytes >= super::heap::RESERVED_BYTES * 2,
             "heap too small for internal sync region");
         anyhow::ensure!(self.completion_slots > 0, "need completion slots");
+        anyhow::ensure!(
+            self.cutover.ema_alpha > 0.0 && self.cutover.ema_alpha <= 1.0,
+            "cutover.ema_alpha must be in (0, 1]"
+        );
         Ok(())
     }
 }

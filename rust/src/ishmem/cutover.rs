@@ -7,12 +7,17 @@
 //! is dependent on the data size and on the number of active GPU
 //! work-items." — and, for collectives, on the number of PEs (Fig 6).
 //!
-//! Three modes mirror the artifact's evaluation patches exactly:
-//! `Never` (= ishmem_cutover_never.patch, store path only),
-//! `Always` (= ishmem_cutover_always.patch, engine path only), and
-//! `Tuned` (= ishmem_cutover_current.patch, the adaptive policy). `Tuned`
+//! Four modes: `Never` (= ishmem_cutover_never.patch, store path only),
+//! `Always` (= ishmem_cutover_always.patch, engine path only), `Tuned`
+//! (= ishmem_cutover_current.patch, the shipping model-argmin policy —
 //! evaluates the same first-order cost terms the paper tuned against, so
-//! the crossover moves with work-group size and PE count as in Fig 5–7.
+//! the crossover moves with work-group size and PE count as in Fig 5–7),
+//! and `Adaptive`, which seeds from `Tuned` and then learns
+//! per-(locality, size-bucket, work-items-bucket) thresholds online from
+//! observed costs (see [`crate::xfer::adaptive`]).
+//!
+//! This module holds the *policy type* only; every actual path decision is
+//! made by the single planner in [`crate::xfer::plan::XferEngine`].
 
 use crate::sim::cost::CostModel;
 use crate::sim::topology::Locality;
@@ -23,8 +28,11 @@ pub enum CutoverMode {
     Never,
     /// Always reverse-offload to the copy engines.
     Always,
-    /// Adaptive: model-estimated best path (the shipping policy).
+    /// Model-estimated best path (the shipping policy).
     Tuned,
+    /// Online-adaptive: seeded by `Tuned`, refined by EMAs of observed
+    /// costs per (locality, size, work-items) bucket.
+    Adaptive,
 }
 
 /// Which data path a device-initiated transfer takes.
@@ -42,26 +50,65 @@ pub struct CutoverConfig {
     /// Optional hard threshold override (bytes): below ⇒ LoadStore,
     /// at/above ⇒ CopyEngine. Mirrors ishmem's env-var tuning knob.
     pub fixed_threshold: Option<usize>,
+    /// EMA weight of one observation in `Adaptive` mode (0 < α ≤ 1).
+    pub ema_alpha: f64,
 }
 
 impl Default for CutoverConfig {
     fn default() -> Self {
-        CutoverConfig { mode: CutoverMode::Tuned, fixed_threshold: None }
+        CutoverConfig {
+            mode: CutoverMode::Tuned,
+            fixed_threshold: None,
+            ema_alpha: 0.25,
+        }
     }
 }
 
 impl CutoverConfig {
     pub fn mode(mode: CutoverMode) -> Self {
-        CutoverConfig { mode, fixed_threshold: None }
+        CutoverConfig { mode, ..Default::default() }
+    }
+
+    /// Store path only (the artifact's `cutover_never` patch).
+    pub fn never() -> Self {
+        Self::mode(CutoverMode::Never)
+    }
+
+    /// Engine path only (the artifact's `cutover_always` patch).
+    pub fn always() -> Self {
+        Self::mode(CutoverMode::Always)
+    }
+
+    /// The shipping model-argmin policy.
+    pub fn tuned() -> Self {
+        Self::mode(CutoverMode::Tuned)
+    }
+
+    /// Online-adaptive thresholds (seeded by `Tuned`).
+    pub fn adaptive() -> Self {
+        Self::mode(CutoverMode::Adaptive)
+    }
+
+    /// Hard byte-threshold override on top of the current mode.
+    pub fn with_threshold(mut self, bytes: usize) -> Self {
+        self.fixed_threshold = Some(bytes);
+        self
     }
 
     /// Decide the path for a device-initiated transfer of `bytes` to a
     /// `loc`-distant PE, issued by `items` cooperating work-items.
+    ///
+    /// This is the *model-only, immediate-CL reference* decision used by
+    /// policy-level tests: `Adaptive` answers like `Tuned` here (its
+    /// seed), and the engine startup constant is the immediate-CL one.
+    /// The live decision — including the learned table and the configured
+    /// command-list flavour — is made by the planner
+    /// ([`crate::xfer::plan::XferEngine`]).
     pub fn decide(&self, cost: &CostModel, loc: Locality, bytes: usize, items: usize) -> Path {
         match self.mode {
             CutoverMode::Never => Path::LoadStore,
             CutoverMode::Always => Path::CopyEngine,
-            CutoverMode::Tuned => {
+            CutoverMode::Tuned | CutoverMode::Adaptive => {
                 if let Some(t) = self.fixed_threshold {
                     return if bytes < t { Path::LoadStore } else { Path::CopyEngine };
                 }
@@ -69,8 +116,7 @@ impl CutoverConfig {
                 // store path scales with work-items; the engine path pays
                 // ring RTT + startup but runs at full link speed.
                 let ls = cost.loadstore_ns(loc, bytes, items);
-                let ce = cost.ring_rtt_ns()
-                    + cost.params.ce.transfer_ns(&cost.params.xe, loc, bytes, true, false);
+                let ce = cost.p2p_engine_estimate_ns(loc, bytes, true);
                 if ls <= ce {
                     Path::LoadStore
                 } else {
@@ -103,8 +149,8 @@ mod tests {
     #[test]
     fn never_and_always_are_absolute() {
         let c = cost();
-        let never = CutoverConfig::mode(CutoverMode::Never);
-        let always = CutoverConfig::mode(CutoverMode::Always);
+        let never = CutoverConfig::never();
+        let always = CutoverConfig::always();
         for bytes in [8usize, 1 << 12, 1 << 24] {
             assert_eq!(never.decide(&c, Locality::SameNode, bytes, 1), Path::LoadStore);
             assert_eq!(always.decide(&c, Locality::SameNode, bytes, 1), Path::CopyEngine);
@@ -123,6 +169,21 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_seed_equals_tuned_model() {
+        let c = cost();
+        let tuned = CutoverConfig::tuned();
+        let adaptive = CutoverConfig::adaptive();
+        for p in 3..26 {
+            for items in [1usize, 64, 1024] {
+                assert_eq!(
+                    tuned.decide(&c, Locality::SameNode, 1 << p, items),
+                    adaptive.decide(&c, Locality::SameNode, 1 << p, items),
+                );
+            }
+        }
+    }
+
+    #[test]
     fn crossover_moves_right_with_work_items() {
         // Fig 4a/5: more work-items keep the store path competitive longer,
         // so the cutover point grows with the work-group size.
@@ -136,7 +197,7 @@ mod tests {
     #[test]
     fn fixed_threshold_override() {
         let c = cost();
-        let cfg = CutoverConfig { mode: CutoverMode::Tuned, fixed_threshold: Some(4096) };
+        let cfg = CutoverConfig::tuned().with_threshold(4096);
         assert_eq!(cfg.decide(&c, Locality::SameNode, 4095, 1), Path::LoadStore);
         assert_eq!(cfg.decide(&c, Locality::SameNode, 4096, 1), Path::CopyEngine);
     }

@@ -15,6 +15,13 @@
 //! | `ishmem_team_*`                   | `PeCtx::team_*`, [`TeamId`]       |
 //! | `ishmem_barrier/sync/broadcast/…` | `PeCtx::{barrier_all,team_sync,…}`|
 //! | `ishmemx_*_work_group`            | `PeCtx::*_work_group`             |
+//! | cutover / path selection (§III-B) | [`crate::xfer::plan::XferEngine`] |
+//! | reverse-offload wire ops (§III-D) | [`crate::xfer::exec`]             |
+//! | nbi / fire-and-forget completion  | [`crate::xfer::track`]            |
+//!
+//! Every device-initiated transfer above plans through the single
+//! [`crate::xfer`] engine (plan → execute → complete); this module holds
+//! the API surface, teams, sync and heap management.
 //!
 //! Host-initiated variants (`ishmem_*` called from host code) are the
 //! `host_*` methods; they skip the ring and drive the Level-Zero command
@@ -41,7 +48,7 @@ pub use sync::Cmp;
 pub use teams::TeamId;
 pub use types::{AmoElem, ReduceElem, ReduceOp, ShmemType, TypeTag};
 
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -53,6 +60,7 @@ use crate::sim::{CostModel, HeapRegistry, SimClock, Topology};
 use crate::sos::heap::{ExternalHeapKind, SosHeaps, ThreadLevel};
 use crate::sos::pmi::PmiWorld;
 use crate::sos::transport::OfiTransport;
+use crate::xfer::{CompletionTracker, XferEngine};
 use crate::ze::{IpcTable, ZeDriver};
 
 /// Job-wide runtime state (one per "machine").
@@ -62,6 +70,9 @@ pub struct Ishmem {
     pub heaps: Arc<HeapRegistry>,
     pub transport: Arc<OfiTransport>,
     pub metrics: Arc<Metrics>,
+    /// The unified transfer-plan engine: every device-initiated path
+    /// decision (RMA, signals, collectives) flows through here.
+    pub xfer: XferEngine,
     #[allow(dead_code)] // held so host-initiated paths can mint command lists
     pub(crate) driver: ZeDriver,
     /// One reverse-offload ring + completion pool per node.
@@ -116,8 +127,16 @@ impl Ishmem {
             completions.push(pool);
         }
 
+        let xfer = XferEngine::new(
+            cost.clone(),
+            config.cutover.clone(),
+            config.use_immediate_cl,
+            metrics.clone(),
+        );
+
         Ok(Arc::new(Ishmem {
             pmi: PmiWorld::new(npes),
+            xfer,
             cost,
             heaps,
             transport,
@@ -214,8 +233,7 @@ impl Ishmem {
             ipc,
             alloc: RefCell::new(SymAllocator::new(self.config.heap_bytes)),
             team_rounds: RefCell::new(vec![0u64; heap::MAX_TEAMS]),
-            nbi_horizon_ns: Cell::new(0.0),
-            outstanding_proxy_nbi: Cell::new(0),
+            track: CompletionTracker::new(),
             team_seq: RefCell::new(HashMap::new()),
             sos: RefCell::new(sos),
         }
@@ -253,10 +271,9 @@ pub struct PeCtx {
     pub(crate) alloc: RefCell<SymAllocator>,
     /// Per-team sync round counters (push-barrier generations).
     pub(crate) team_rounds: RefCell<Vec<u64>>,
-    /// Modeled completion horizon of outstanding nbi transfers.
-    pub(crate) nbi_horizon_ns: Cell<f64>,
-    /// Count of proxied nbi ops whose ring completion is outstanding.
-    pub(crate) outstanding_proxy_nbi: Cell<u64>,
+    /// Unified blocking/NBI completion state (xfer "complete" stage):
+    /// modeled nbi horizon + outstanding fire-and-forget proxy posts.
+    pub(crate) track: CompletionTracker,
     /// Per-parent team-creation sequence numbers (mirrored across PEs).
     pub(crate) team_seq: RefCell<HashMap<usize, usize>>,
     #[allow(dead_code)] // held for the lifetime contract (finalize order)

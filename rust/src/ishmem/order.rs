@@ -4,11 +4,14 @@
 //! fence/quiet is trivially satisfied; what these calls do is (a) collapse
 //! the modeled nbi completion horizon into the PE timeline, and (b) flush
 //! the proxy pipeline when proxied fire-and-forget messages (scalar p,
-//! non-fetching AMOs to remote PEs) may still be in flight.
+//! non-fetching AMOs to remote PEs) may still be in flight. Both pieces of
+//! outstanding state live in the xfer completion tracker
+//! ([`crate::xfer::track::CompletionTracker`]) — the "complete" stage of
+//! the unified plan→execute→complete flow.
 
 use crate::ringbuf::{Message, RingOp};
+use crate::xfer::exec::PROXY_OK;
 
-use super::rma::PROXY_OK;
 use super::PeCtx;
 
 impl PeCtx {
@@ -21,29 +24,22 @@ impl PeCtx {
     /// `ishmem_quiet` — complete all outstanding operations by this PE.
     pub fn quiet(&self) {
         // (a) modeled nbi horizon.
-        let horizon = self.nbi_horizon_ns.get();
+        let horizon = self.track.take_horizon_ns();
         let now = self.clock.now_ns();
         if horizon > now {
             self.clock.advance(horizon - now);
         }
-        self.nbi_horizon_ns.set(0.0);
 
         // (b) drain the proxy: one Quiet round trip if anything was posted
         // fire-and-forget since the last quiet. The ring is FIFO per
         // consumer, so one completed Quiet proves all earlier messages of
         // this PE were serviced.
-        if self.outstanding_proxy_nbi.replace(0) > 0 {
+        if self.track.take_fire_and_forget() > 0 {
             let mut m = Message::nop();
             m.op = RingOp::Quiet as u8;
             let status = self.proxied_blocking(m);
             assert_eq!(status, PROXY_OK, "quiet proxy flush failed");
             self.clock.advance(self.rt.cost.ring_rtt_ns());
         }
-    }
-
-    /// Track a fire-and-forget proxy post (internal; makes quiet() flush).
-    pub(crate) fn note_proxy_ff(&self) {
-        self.outstanding_proxy_nbi
-            .set(self.outstanding_proxy_nbi.get() + 1);
     }
 }

@@ -13,11 +13,11 @@ use crate::coordinator::metrics::Metrics;
 use crate::ringbuf::{CompletionPool, Message, RingConsumer, RingOp, COMPLETION_NONE};
 use crate::sim::{HeapRegistry, SimClock};
 use crate::sos::transport::OfiTransport;
-use crate::ze::cmdlist::DeviceAddr;
+use crate::xfer::exec::{FLAG_RAW_PTR, PROXY_ERR_UNREGISTERED, PROXY_OK};
+use crate::ze::cmdlist::{CommandQueue, DeviceAddr};
 use crate::ze::ZeDriver;
 
 use super::amo::atomic_rmw_bits;
-use super::rma::{FLAG_RAW_PTR, PROXY_ERR_UNREGISTERED, PROXY_OK};
 use super::types::TypeTag;
 
 pub(crate) struct ProxyShared {
@@ -26,8 +26,44 @@ pub(crate) struct ProxyShared {
     pub driver: ZeDriver,
     pub completions: Arc<CompletionPool>,
     pub metrics: Arc<Metrics>,
-    #[allow(dead_code)] // proxy currently always uses immediate CLs
+    /// §III-C: immediate command lists (low-latency append-executes) vs
+    /// standard lists (batched append → close → execute on a queue).
     pub use_immediate_cl: bool,
+}
+
+/// Dispatch one intra-node engine copy on the configured command-list
+/// flavour (the `use_immediate_cl` knob, paper §III-C). Serves
+/// heap-offset (non-raw) Put/Get messages; today every device-initiated
+/// RMA ships the raw-pointer shape instead (see `xfer::exec`), which
+/// takes the staged-write branch + `raw_engine_charge` below.
+fn engine_copy(sh: &ProxyShared, src_pe: usize, dst: DeviceAddr, src: DeviceAddr, len: usize, clock: &SimClock) {
+    if sh.use_immediate_cl {
+        let icl = sh.driver.create_immediate_command_list(src_pe);
+        icl.append_memory_copy(dst, src, len, None, clock);
+    } else {
+        let mut cl = sh.driver.create_command_list(src_pe);
+        cl.append_memory_copy(dst, src, len, None);
+        cl.close();
+        cl.execute(&CommandQueue::default(), clock);
+    }
+}
+
+/// Raw-pointer transfers (private initiator buffer → peer heap) can't go
+/// through a `DeviceAddr` command list; the bytes are staged directly, but
+/// the copy still runs on the initiator GPU's engines: charge the engine
+/// time on the configured command-list flavour so the immediate-vs-
+/// standard startup difference stays honest (§III-C). Pure transfer time
+/// only — the *initiator* registers this transfer's EngineQueue occupancy
+/// when it charges its own modeled wait, so registering here too would
+/// double-count one logical transfer against the queue.
+fn raw_engine_charge(sh: &ProxyShared, src_pe: usize, dst_pe: usize, len: usize, clock: &SimClock) {
+    let cost = &sh.driver.cost;
+    let loc = cost.locality(src_pe, dst_pe);
+    clock.advance(
+        cost.params
+            .ce
+            .transfer_ns(&cost.params.xe, loc, len, sh.use_immediate_cl, false),
+    );
 }
 
 pub(crate) fn spawn_proxy(
@@ -86,14 +122,14 @@ fn service(op: RingOp, msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) 
                     let src =
                         unsafe { std::slice::from_raw_parts(msg.src_off as *const u8, len) };
                     sh.heaps.heap(pe).write(msg.dst_off as usize, src);
-                    proxy_clock.advance(1.0);
+                    raw_engine_charge(sh, src_pe, pe, len, proxy_clock);
                 } else {
-                    let icl = sh.driver.create_immediate_command_list(src_pe);
-                    icl.append_memory_copy(
+                    engine_copy(
+                        sh,
+                        src_pe,
                         DeviceAddr { pe, offset: msg.dst_off as usize },
                         DeviceAddr { pe: src_pe, offset: msg.src_off as usize },
                         len,
-                        None,
                         proxy_clock,
                     );
                 }
@@ -129,14 +165,14 @@ fn service(op: RingOp, msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) 
                         std::slice::from_raw_parts_mut(msg.dst_off as *mut u8, len)
                     };
                     sh.heaps.heap(pe).read(msg.src_off as usize, dst);
-                    proxy_clock.advance(1.0);
+                    raw_engine_charge(sh, src_pe, pe, len, proxy_clock);
                 } else {
-                    let icl = sh.driver.create_immediate_command_list(src_pe);
-                    icl.append_memory_copy(
+                    engine_copy(
+                        sh,
+                        src_pe,
                         DeviceAddr { pe: src_pe, offset: msg.dst_off as usize },
                         DeviceAddr { pe, offset: msg.src_off as usize },
                         len,
-                        None,
                         proxy_clock,
                     );
                 }

@@ -2,72 +2,20 @@
 //!
 //! Device-initiated path per `ishmem_long_p`'s recipe: load the GPU info
 //! block, look up whether the target PE is load/store-reachable (IPC
-//! table), translate `dest` into the peer heap, then either store directly
-//! or compose a reverse-offload message for the host proxy. The cutover
-//! policy (§III-B) picks between organic load/store and the copy engines
-//! for reachable targets; unreachable (inter-node) targets always take the
-//! proxy + OFI path.
+//! table), translate `dest` into the peer heap — then hand the request to
+//! the unified transfer-plan engine ([`crate::xfer`]): the planner picks
+//! organic load/store, reverse-offload → copy engine, or inter-node
+//! proxy → OFI (§III-B cutover), and the matching executor moves the bytes,
+//! charges the cost model, and tracks blocking/NBI completion. This module
+//! holds only the API surface and its argument checking.
 
 use crate::coordinator::metrics::Metrics;
-use crate::ringbuf::{Message, RingOp, COMPLETION_NONE};
-use crate::sim::topology::Locality;
-use crate::sim::SimClock;
+use crate::xfer::plan::OpKind;
 
-use super::cutover::Path;
 use super::types::{as_bytes, as_bytes_mut, ShmemType};
 use super::{PeCtx, SymAddr};
 
-/// Message flag: `src_off`/`dst_off` is a raw in-process pointer (the
-/// initiator's private buffer), not a symmetric-heap offset.
-pub(crate) const FLAG_RAW_PTR: u16 = 1 << 8;
-
-/// Completion payloads for non-fetching proxied ops.
-pub(crate) const PROXY_OK: u64 = 0;
-pub(crate) const PROXY_ERR_UNREGISTERED: u64 = 1;
-
 impl PeCtx {
-    // ------------------------------------------------------------ helpers --
-
-    #[inline]
-    pub(crate) fn loc_of(&self, pe: usize) -> Locality {
-        self.rt.cost.locality(self.pe(), pe)
-    }
-
-    #[inline]
-    pub(crate) fn my_gpu(&self) -> usize {
-        self.rt.topo().global_gpu_of(self.pe())
-    }
-
-    /// Post a ring message and block for its completion payload.
-    pub(crate) fn proxied_blocking(&self, mut msg: Message) -> u64 {
-        let pool = self.completions().clone();
-        let token = pool.alloc();
-        msg.completion = token.index;
-        msg.src_pe = self.pe() as u32;
-        Metrics::add(&self.rt.metrics.ring_messages, 1);
-        self.ring().send(msg);
-        pool.wait(token)
-    }
-
-    /// Post a fire-and-forget ring message.
-    pub(crate) fn proxied_ff(&self, mut msg: Message) {
-        msg.completion = COMPLETION_NONE;
-        msg.src_pe = self.pe() as u32;
-        Metrics::add(&self.rt.metrics.ring_messages, 1);
-        self.note_proxy_ff();
-        self.ring().send(msg);
-    }
-
-    fn check_proxy_status(&self, status: u64, what: &str, pe: usize) {
-        match status {
-            PROXY_OK => {}
-            PROXY_ERR_UNREGISTERED => panic!(
-                "{what} to PE {pe} failed: target heap not FI_HMEM-registered (strict mode)"
-            ),
-            other => panic!("{what} to PE {pe} failed: proxy status {other}"),
-        }
-    }
-
     // --------------------------------------------------- blocking put/get --
 
     /// `ishmem_put` — blocking contiguous put of `src` into the symmetric
@@ -97,56 +45,8 @@ impl PeCtx {
         if bytes == 0 {
             return;
         }
-        let loc = self.loc_of(pe);
-
-        if self.ipc.lookup(pe).is_none() {
-            // Inter-node: reverse offload to the host proxy → OFI.
-            let mut m = Message::nop();
-            m.op = RingOp::Put as u8;
-            m.flags = FLAG_RAW_PTR;
-            m.pe = pe as u32;
-            m.dst_off = dest.byte_offset() as u64;
-            m.src_off = src.as_ptr() as u64;
-            m.len = bytes as u64;
-            let status = self.proxied_blocking(m);
-            self.check_proxy_status(status, "put", pe);
-            let registered = self.rt.transport.is_registered(pe);
-            self.clock
-                .advance(self.rt.cost.internode_ns(bytes, registered, true));
-            Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
-            return;
-        }
-
-        match self.rt.config.cutover.decide(&self.rt.cost, loc, bytes, items) {
-            Path::LoadStore => {
-                self.rt
-                    .heaps
-                    .heap(pe)
-                    .write(dest.byte_offset(), as_bytes(src));
-                self.clock.advance(self.rt.cost.loadstore_ns(loc, bytes, items));
-                Metrics::add(&self.rt.metrics.bytes_loadstore, bytes as u64);
-            }
-            Path::CopyEngine => {
-                let mut m = Message::nop();
-                m.op = RingOp::Put as u8;
-                m.flags = FLAG_RAW_PTR;
-                m.pe = pe as u32;
-                m.dst_off = dest.byte_offset() as u64;
-                m.src_off = src.as_ptr() as u64;
-                m.len = bytes as u64;
-                let status = self.proxied_blocking(m);
-                self.check_proxy_status(status, "put", pe);
-                self.clock.advance(self.rt.cost.copy_engine_ns(
-                    self.my_gpu(),
-                    loc,
-                    bytes,
-                    self.rt.config.use_immediate_cl,
-                    false,
-                    true,
-                ));
-                Metrics::add(&self.rt.metrics.bytes_copy_engine, bytes as u64);
-            }
-        }
+        let plan = self.plan_to(OpKind::Put, pe, bytes, items);
+        self.exec_put(&plan, pe, dest.byte_offset(), as_bytes(src));
     }
 
     pub(crate) fn get_items<T: ShmemType>(
@@ -163,55 +63,8 @@ impl PeCtx {
         if bytes == 0 {
             return;
         }
-        let loc = self.loc_of(pe);
-
-        if self.ipc.lookup(pe).is_none() {
-            let mut m = Message::nop();
-            m.op = RingOp::Get as u8;
-            m.flags = FLAG_RAW_PTR;
-            m.pe = pe as u32;
-            m.src_off = src.byte_offset() as u64;
-            m.dst_off = dest.as_mut_ptr() as u64;
-            m.len = bytes as u64;
-            let status = self.proxied_blocking(m);
-            self.check_proxy_status(status, "get", pe);
-            let registered = self.rt.transport.is_registered(pe);
-            self.clock
-                .advance(self.rt.cost.internode_ns(bytes, registered, true));
-            Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
-            return;
-        }
-
-        match self.rt.config.cutover.decide(&self.rt.cost, loc, bytes, items) {
-            Path::LoadStore => {
-                self.rt
-                    .heaps
-                    .heap(pe)
-                    .read(src.byte_offset(), as_bytes_mut(dest));
-                self.clock.advance(self.rt.cost.loadstore_ns(loc, bytes, items));
-                Metrics::add(&self.rt.metrics.bytes_loadstore, bytes as u64);
-            }
-            Path::CopyEngine => {
-                let mut m = Message::nop();
-                m.op = RingOp::Get as u8;
-                m.flags = FLAG_RAW_PTR;
-                m.pe = pe as u32;
-                m.src_off = src.byte_offset() as u64;
-                m.dst_off = dest.as_mut_ptr() as u64;
-                m.len = bytes as u64;
-                let status = self.proxied_blocking(m);
-                self.check_proxy_status(status, "get", pe);
-                self.clock.advance(self.rt.cost.copy_engine_ns(
-                    self.my_gpu(),
-                    loc,
-                    bytes,
-                    self.rt.config.use_immediate_cl,
-                    false,
-                    true,
-                ));
-                Metrics::add(&self.rt.metrics.bytes_copy_engine, bytes as u64);
-            }
-        }
+        let plan = self.plan_to(OpKind::Get, pe, bytes, items);
+        self.exec_get(&plan, pe, src.byte_offset(), as_bytes_mut(dest));
     }
 
     // ------------------------------------------------------------ scalars --
@@ -221,7 +74,8 @@ impl PeCtx {
         Metrics::add(&self.rt.metrics.puts, 1);
         let bytes = std::mem::size_of::<T>();
         if self.ipc.lookup(pe).is_some() {
-            // Steps of §III-G.1: table lookup → translate → store.
+            // Steps of §III-G.1: table lookup → translate → store. A scalar
+            // is always below any cutover point: straight store path.
             let loc = self.loc_of(pe);
             self.rt
                 .heaps
@@ -230,20 +84,16 @@ impl PeCtx {
             self.clock.advance(self.rt.cost.loadstore_ns(loc, bytes, 1));
             Metrics::add(&self.rt.metrics.bytes_loadstore, bytes as u64);
         } else {
-            // Scalar rides inside the 64-byte message (PutInline):
-            // locally complete as soon as the message is posted.
-            let mut m = Message::nop();
-            m.op = RingOp::PutInline as u8;
-            m.dtype = T::TAG as u8;
-            m.pe = pe as u32;
-            m.dst_off = dest.byte_offset() as u64;
-            m.len = bytes as u64;
+            // Scalar rides inside the 64-byte message (PutInline).
             let mut raw = [0u8; 8];
             raw[..bytes].copy_from_slice(as_bytes(std::slice::from_ref(&value)));
-            m.inline_val = u64::from_le_bytes(raw);
-            self.proxied_ff(m);
-            self.clock.advance(self.rt.cost.ring_post_ns());
-            Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
+            self.proxied_put_inline(
+                pe,
+                dest.byte_offset(),
+                T::TAG as u8,
+                bytes,
+                u64::from_le_bytes(raw),
+            );
         }
     }
 
@@ -259,8 +109,8 @@ impl PeCtx {
     /// `ishmem_put_nbi`. Data movement is performed eagerly (Rust borrow
     /// safety: the source buffer may be reused on return, which is
     /// *stronger* than the spec's contract); the *modeled* completion is
-    /// deferred to `quiet`, so overlap behaves like real nbi in the
-    /// figures. See DESIGN.md §7.
+    /// deferred to `quiet` through the xfer completion tracker, so overlap
+    /// behaves like real nbi in the figures. See DESIGN.md §7.
     pub fn put_nbi<T: ShmemType>(&self, dest: SymAddr<T>, src: &[T], pe: usize) {
         self.put_nbi_items(dest, src, pe, 1)
     }
@@ -282,52 +132,8 @@ impl PeCtx {
         if bytes == 0 {
             return;
         }
-        let loc = self.loc_of(pe);
-        let issue = self.rt.cost.ring_post_ns();
-
-        // Eager movement.
-        if self.ipc.lookup(pe).is_some() {
-            self.rt
-                .heaps
-                .heap(pe)
-                .write(dest.byte_offset(), as_bytes(src));
-        } else {
-            let dummy = SimClock::new();
-            self.rt
-                .transport
-                .put_from_ptr(src.as_ptr() as u64, pe, dest.byte_offset(), bytes, &dummy)
-                .expect("put_nbi transport");
-            Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
-        }
-
-        // Deferred modeled completion.
-        let full = if self.ipc.lookup(pe).is_some() {
-            match self.rt.config.cutover.decide(&self.rt.cost, loc, bytes, items) {
-                Path::LoadStore => {
-                    Metrics::add(&self.rt.metrics.bytes_loadstore, bytes as u64);
-                    self.rt.cost.loadstore_ns(loc, bytes, items)
-                }
-                Path::CopyEngine => {
-                    Metrics::add(&self.rt.metrics.bytes_copy_engine, bytes as u64);
-                    self.rt.cost.copy_engine_ns(
-                        self.my_gpu(),
-                        loc,
-                        bytes,
-                        self.rt.config.use_immediate_cl,
-                        false,
-                        true,
-                    )
-                }
-            }
-        } else {
-            self.rt
-                .cost
-                .internode_ns(bytes, self.rt.transport.is_registered(pe), true)
-        };
-        self.clock.advance(issue);
-        let done_at = self.clock.now_ns() + (full - issue).max(0.0);
-        self.nbi_horizon_ns
-            .set(self.nbi_horizon_ns.get().max(done_at));
+        let plan = self.plan_to(OpKind::Put, pe, bytes, items);
+        self.exec_put_nbi(&plan, pe, dest.byte_offset(), as_bytes(src));
     }
 
     pub(crate) fn get_nbi_items<T: ShmemType>(
@@ -343,35 +149,8 @@ impl PeCtx {
         if bytes == 0 {
             return;
         }
-        let loc = self.loc_of(pe);
-        let issue = self.rt.cost.ring_post_ns();
-
-        if self.ipc.lookup(pe).is_some() {
-            self.rt
-                .heaps
-                .heap(pe)
-                .read(src.byte_offset(), as_bytes_mut(dest));
-        } else {
-            let dummy = SimClock::new();
-            self.rt
-                .transport
-                .get_to_ptr(pe, src.byte_offset(), dest.as_mut_ptr() as u64, bytes, &dummy)
-                .expect("get_nbi transport");
-            Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
-        }
-
-        let full = if self.ipc.lookup(pe).is_some() {
-            Metrics::add(&self.rt.metrics.bytes_loadstore, bytes as u64);
-            self.rt.cost.loadstore_ns(loc, bytes, items)
-        } else {
-            self.rt
-                .cost
-                .internode_ns(bytes, self.rt.transport.is_registered(pe), true)
-        };
-        self.clock.advance(issue);
-        let done_at = self.clock.now_ns() + (full - issue).max(0.0);
-        self.nbi_horizon_ns
-            .set(self.nbi_horizon_ns.get().max(done_at));
+        let plan = self.plan_to(OpKind::Get, pe, bytes, items);
+        self.exec_get_nbi(&plan, pe, src.byte_offset(), as_bytes_mut(dest));
     }
 
     // ------------------------------------------------------------ strided --
@@ -445,7 +224,8 @@ impl PeCtx {
 
     /// Host-initiated put (`ishmem_put` from host code): drives the copy
     /// engine through a Level-Zero immediate command list, or OFI for
-    /// remote targets — no reverse-offload ring involved.
+    /// remote targets — no reverse-offload ring involved, so it bypasses
+    /// the device planner (the paper's host path).
     pub fn host_put<T: ShmemType>(&self, dest: SymAddr<T>, src: &[T], pe: usize) {
         assert!(src.len() <= dest.len());
         let bytes = std::mem::size_of_val(src);

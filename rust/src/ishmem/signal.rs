@@ -4,12 +4,16 @@
 //! A put-with-signal delivers the payload, *then* updates a signal word on
 //! the target with set/add semantics — the ordering is the API's whole
 //! point (the target spins on the signal and may then read the payload).
+//! The transfer itself plans through the unified xfer engine: reachable
+//! targets put via the planned path then update the signal word; remote
+//! targets ship one `PutSignal` ring message through the xfer executor so
+//! the proxy can order payload and signal on the wire.
 
-use crate::ringbuf::{Message, RingOp};
+use crate::coordinator::metrics::Metrics;
+use crate::xfer::plan::{OpKind, Route};
 
-use super::rma::{FLAG_RAW_PTR, PROXY_OK};
 use super::sync::Cmp;
-use super::types::ShmemType;
+use super::types::{as_bytes, ShmemType};
 use super::{PeCtx, SymAddr};
 
 /// Signal update operators (SHMEM_SIGNAL_SET / SHMEM_SIGNAL_ADD).
@@ -30,32 +34,29 @@ impl PeCtx {
         sig_op: SignalOp,
         pe: usize,
     ) {
+        assert!(src.len() <= dest.len(), "put_signal overflows destination");
+        assert!(pe < self.npes(), "PE {pe} out of range");
         let bytes = std::mem::size_of_val(src);
-        if self.ipc.lookup(pe).is_some() {
-            // Payload first (blocking put orders it), then the signal store.
-            self.put(dest, src, pe);
+        Metrics::add(&self.rt.metrics.puts, 1);
+        let plan = self.plan_to(OpKind::PutSignal, pe, bytes, 1);
+        if plan.route == Route::Nic {
+            self.exec_put_signal_remote(
+                &plan,
+                pe,
+                dest.byte_offset(),
+                as_bytes(src),
+                sig.byte_offset(),
+                signal,
+                sig_op == SignalOp::Add,
+            );
+        } else {
+            // Payload first over the planned path (blocking put orders
+            // it), then the signal store.
+            self.exec_put(&plan, pe, dest.byte_offset(), as_bytes(src));
             match sig_op {
                 SignalOp::Set => self.atomic_set::<u64>(sig, signal, pe),
                 SignalOp::Add => self.atomic_add::<u64>(sig, signal, pe),
             }
-        } else {
-            // Single proxied message carries payload ptr + signal update so
-            // the proxy can order them on the wire (put; fence; signal).
-            let mut m = Message::nop();
-            m.op = RingOp::PutSignal as u8;
-            m.flags = FLAG_RAW_PTR
-                | if sig_op == SignalOp::Add { 1 } else { 0 };
-            m.pe = pe as u32;
-            m.dst_off = dest.byte_offset() as u64;
-            m.src_off = src.as_ptr() as u64;
-            m.len = bytes as u64;
-            m.inline_val = signal;
-            m.inline_val2 = sig.byte_offset() as u64;
-            let status = self.proxied_blocking(m);
-            assert_eq!(status, PROXY_OK, "put_signal failed");
-            let registered = self.rt.transport.is_registered(pe);
-            self.clock
-                .advance(self.rt.cost.internode_ns(bytes + 8, registered, true));
         }
     }
 
@@ -69,5 +70,4 @@ impl PeCtx {
         self.wait_until::<u64>(sig, cmp, value);
         self.signal_fetch(sig)
     }
-
 }

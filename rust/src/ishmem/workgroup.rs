@@ -9,6 +9,11 @@
 //! * Collectives: fan-outs load-share the work-items across Xe-Links.
 //! * AMOs have **no** work_group variants (scalar ops don't benefit —
 //!   paper §III-F), and none are provided here.
+//!
+//! Every variant delegates to the scalar `*_items` implementation with the
+//! group size as the cooperating work-item count, so the unified planner
+//! ([`crate::xfer::plan::XferEngine`]) sees the work-group dimension of the
+//! cutover (Fig 5: the crossover moves right as items grow).
 
 use crate::device::WorkGroup;
 

@@ -5,7 +5,9 @@
 //!
 //! * **L3 (this crate)** — the ishmem library itself: device/host-initiated
 //!   RMA, AMOs, signaling, collectives, teams, `work_group` extensions, the
-//!   cutover policy, the lock-free reverse-offload ring, and the host proxy
+//!   unified transfer-plan engine ([`xfer`]: cutover policy incl. the
+//!   online-adaptive mode, executors, completion tracking), the lock-free
+//!   reverse-offload ring, and the host proxy
 //!   — running against a simulated Aurora-class node (real shared-memory
 //!   data movement + an analytic hardware cost model, see [`sim`]).
 //! * **L2** — a JAX transformer (`python/compile/model.py`) AOT-lowered to
@@ -28,6 +30,7 @@ pub mod runtime;
 pub mod sim;
 pub mod sos;
 pub mod util;
+pub mod xfer;
 pub mod ze;
 
 pub use coordinator::launch::{run_npes, run_spmd, Machine};
@@ -37,3 +40,4 @@ pub use ishmem::{
 };
 pub use runtime::{HostTensor, XlaRuntime};
 pub use sim::{Locality, Topology};
+pub use xfer::{Route, TransferPlan, XferEngine};

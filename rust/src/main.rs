@@ -12,8 +12,9 @@ rishmem — Intel® SHMEM reproduction (Rust + JAX/Pallas via PJRT)
 
 USAGE:
   rishmem figure <ID> [--out DIR]     regenerate a paper figure
-        IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig6-4pe fig6-8pe
-             fig6-12pe fig7a fig7b ring ablate-cl ablate-sync all
+        IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig5-adaptive
+             fig6-4pe fig6-8pe fig6-12pe fig7a fig7b ring
+             ablate-cl ablate-sync cutover-table all
   rishmem train [--model M] [--pes N] [--steps S] [--lr F] [--seed K]
                                       data-parallel training (e2e driver)
   rishmem ze-peer                     raw Level-Zero copy-engine baseline
@@ -83,6 +84,11 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "fig4b" => vec![figures::fig4b()],
         "fig5a" => vec![figures::fig5a()],
         "fig5b" => vec![figures::fig5b()],
+        "fig5-adaptive" => vec![figures::fig5_adaptive()],
+        "cutover-table" => {
+            println!("{}", figures::adaptive_cutover_report());
+            return Ok(());
+        }
         "fig6-4pe" => vec![figures::fig6(4)],
         "fig6-8pe" => vec![figures::fig6(8)],
         "fig6-12pe" => vec![figures::fig6(12)],

@@ -10,8 +10,16 @@
 //! Artifacts are HLO **text** (`HloModuleProto::from_text_file`); see
 //! DESIGN.md — serialized jax≥0.5 protos are rejected by xla_extension
 //! 0.5.1, text round-trips.
+//!
+//! In the hermetic offline build the native binding crate is replaced by
+//! [`xla_stub`] (identical call surface, client startup fails
+//! descriptively); reductions then use the native fold. Swap the alias
+//! below for the real `xla` crate to enable PJRT.
 
 pub mod artifacts;
+mod xla_stub;
+
+use xla_stub as xla;
 
 pub use artifacts::{Manifest, ModelManifest};
 

@@ -1,0 +1,130 @@
+//! Offline stub of the `xla` crate surface used by [`super`] (PJRT CPU
+//! client bindings, a.k.a. `xla-rs` over `xla_extension`).
+//!
+//! The real crate links the native XLA/PJRT C++ runtime, which is not
+//! available in the hermetic build environment. This stub keeps the
+//! service-thread code compiling with identical call shapes;
+//! [`PjRtClient::cpu`] fails with a descriptive error, which
+//! `XlaRuntime::load` surfaces at startup — so reductions transparently
+//! use the native fold (the `ishmem` request path never requires PJRT; it
+//! is an acceleration, see `ishmem/collectives.rs::fold`).
+//!
+//! To use the real backend, replace the `use xla_stub as xla;` alias in
+//! `runtime/mod.rs` with the external `xla` crate dependency.
+
+use std::fmt;
+
+/// Error type mirroring the binding crate's (Display-able, opaque).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT backend not available: offline build uses the xla stub \
+         (rust/src/runtime/xla_stub.rs); native reduce fold is used instead"
+            .to_string(),
+    )
+}
+
+/// XLA element types (subset + spares to mirror the real enum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    U64,
+    F32,
+    F64,
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _bytes: &[u8],
+    ) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}

@@ -107,6 +107,19 @@ impl CostModel {
         ring + base * factor
     }
 
+    /// Planning *estimate* of the device-initiated engine path: ring
+    /// round trip + one engine transfer at full link speed, no queueing.
+    /// The single copy of the cutover decision's engine-side formula —
+    /// shared by the xfer planner (configured CL flavour) and the
+    /// policy-level reference in `ishmem::cutover` (immediate CL).
+    pub fn p2p_engine_estimate_ns(&self, loc: Locality, bytes: usize, immediate_cl: bool) -> f64 {
+        self.ring_rtt_ns()
+            + self
+                .params
+                .ce
+                .transfer_ns(&self.params.xe, loc, bytes, immediate_cl, false)
+    }
+
     /// Inter-node transfer: ring hand-off + host proxy + NIC RDMA.
     pub fn internode_ns(&self, bytes: usize, registered_heap: bool, via_ring: bool) -> f64 {
         let ring = if via_ring {

@@ -71,13 +71,24 @@ pub enum ThreadLevel {
     Multiple,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum HeapError {
-    #[error("dual-phase init violation: {0}")]
     Phase(&'static str),
-    #[error("external heap bounds exceed device heap: {got} > {max}")]
     Bounds { got: usize, max: usize },
 }
+
+impl std::fmt::Display for HeapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HeapError::Phase(what) => write!(f, "dual-phase init violation: {what}"),
+            HeapError::Bounds { got, max } => {
+                write!(f, "external heap bounds exceed device heap: {got} > {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HeapError {}
 
 impl SosHeaps {
     pub fn new(pmi: PmiHandle, device_heaps: Arc<HeapRegistry>, host_heap_bytes: usize) -> Self {

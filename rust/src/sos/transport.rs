@@ -16,11 +16,23 @@ use std::sync::Arc;
 use crate::sim::memory::HeapRegistry;
 use crate::sim::{CostModel, SimClock};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TransportError {
-    #[error("target PE {0} heap not registered for FI_HMEM and strict mode is on")]
     Unregistered(usize),
 }
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Unregistered(pe) => write!(
+                f,
+                "target PE {pe} heap not registered for FI_HMEM and strict mode is on"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 /// Node-level transport endpoint (one per host proxy).
 pub struct OfiTransport {

@@ -1,0 +1,252 @@
+//! Online-adaptive cutover state (`CutoverMode::Adaptive`).
+//!
+//! The `Tuned` policy (paper §IV) picks the path whose *first-order model*
+//! is cheaper. `Adaptive` keeps that model as the seed but learns from the
+//! transfers it actually executes: per (locality, size-bucket,
+//! work-items-bucket) cell it maintains an exponential moving average of
+//! the observed cost of each path and picks the argmin of the EMAs. Cells
+//! are seeded with the model estimates on first touch, so cold decisions
+//! equal `Tuned` and warm decisions converge back to `Tuned` whenever the
+//! model matches reality — while drifting hardware (or a mis-calibrated
+//! model) moves the learned crossover without a re-tune.
+//!
+//! Buckets are power-of-two: sizes and work-item counts are binned by
+//! `log2`, mirroring how the paper sweeps both axes (Figs 4–6).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::ishmem::cutover::Path;
+use crate::sim::topology::Locality;
+
+/// One learned-threshold cell key: (locality, log2 size, log2 items),
+/// split by op class — fan-out observations measure a whole one-to-many
+/// push and must not poison the point-to-point cells of the same size.
+/// Fan-out cells additionally carry a log2 peer-count bucket: the whole-
+/// push cost scales with the fan-out width (paper Fig 6's third axis),
+/// so differently-sized fan-outs must not alias into one EMA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    pub loc: Locality,
+    pub size_pow2: u8,
+    pub items_pow2: u8,
+    /// true = collective fan-out cell, false = point-to-point cell.
+    pub fanout: bool,
+    /// log2 destination-peer bucket (0 for point-to-point).
+    pub peers_pow2: u8,
+}
+
+impl BucketKey {
+    /// Point-to-point cell (put/get/put-signal).
+    pub fn p2p(loc: Locality, bytes: usize, items: usize) -> Self {
+        BucketKey {
+            loc,
+            size_pow2: log2_bucket(bytes),
+            items_pow2: log2_bucket(items),
+            fanout: false,
+            peers_pow2: 0,
+        }
+    }
+
+    /// Collective fan-out cell (per-peer byte size, destination count).
+    pub fn fanout(loc: Locality, bytes: usize, items: usize, npeers: usize) -> Self {
+        BucketKey {
+            fanout: true,
+            peers_pow2: log2_bucket(npeers),
+            ..Self::p2p(loc, bytes, items)
+        }
+    }
+}
+
+/// Power-of-two bucket index of `v` (0 for 0/1).
+fn log2_bucket(v: usize) -> u8 {
+    if v <= 1 {
+        0
+    } else {
+        (usize::BITS - 1 - v.leading_zeros()) as u8
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct CellState {
+    /// EMA cost estimate per path: [LoadStore, CopyEngine], ns.
+    ema_ns: [f64; 2],
+    /// Observation count per path.
+    samples: [u64; 2],
+}
+
+fn path_index(path: Path) -> usize {
+    match path {
+        Path::LoadStore => 0,
+        Path::CopyEngine => 1,
+    }
+}
+
+/// The one argmin rule every reader of a cell applies (ties → LoadStore,
+/// matching the `Tuned` policy). Changing tie-breaks or adding hysteresis
+/// happens here and nowhere else.
+pub(crate) fn argmin_path(loadstore_ns: f64, copy_engine_ns: f64) -> Path {
+    if loadstore_ns <= copy_engine_ns {
+        Path::LoadStore
+    } else {
+        Path::CopyEngine
+    }
+}
+
+/// A snapshot row of the learned table (reports / benches).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveCell {
+    pub key: BucketKey,
+    pub ema_loadstore_ns: f64,
+    pub ema_copy_engine_ns: f64,
+    pub samples_loadstore: u64,
+    pub samples_copy_engine: u64,
+}
+
+impl AdaptiveCell {
+    pub fn choice(&self) -> Path {
+        argmin_path(self.ema_loadstore_ns, self.ema_copy_engine_ns)
+    }
+}
+
+/// Learned per-bucket path costs, shared by every PE of a machine.
+#[derive(Debug)]
+pub struct AdaptiveTable {
+    cells: Mutex<HashMap<BucketKey, CellState>>,
+    /// EMA weight of a new observation (0 < alpha ≤ 1).
+    alpha: f64,
+}
+
+impl AdaptiveTable {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EMA alpha out of (0, 1]");
+        AdaptiveTable { cells: Mutex::new(HashMap::new()), alpha }
+    }
+
+    /// Decide a path for `key`, seeding the cell from the model estimates
+    /// (`seed_loadstore_ns`, `seed_copy_engine_ns`) on first touch.
+    pub fn decide(&self, key: BucketKey, seed_loadstore_ns: f64, seed_copy_engine_ns: f64) -> Path {
+        let mut cells = self.cells.lock().unwrap();
+        let cell = cells.entry(key).or_insert(CellState {
+            ema_ns: [seed_loadstore_ns, seed_copy_engine_ns],
+            samples: [0, 0],
+        });
+        argmin_path(cell.ema_ns[0], cell.ema_ns[1])
+    }
+
+    /// Feed back the observed (modeled) cost of an executed transfer.
+    /// Returns whether a cell was actually refined (observations for
+    /// never-decided cells are dropped — there is no seed to refine).
+    pub fn observe(&self, key: BucketKey, path: Path, observed_ns: f64) -> bool {
+        let mut cells = self.cells.lock().unwrap();
+        if let Some(cell) = cells.get_mut(&key) {
+            let i = path_index(path);
+            cell.ema_ns[i] = (1.0 - self.alpha) * cell.ema_ns[i] + self.alpha * observed_ns;
+            cell.samples[i] += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Read a cell's current choice without creating/seeding it.
+    pub fn peek(&self, key: BucketKey) -> Option<Path> {
+        let cells = self.cells.lock().unwrap();
+        cells.get(&key).map(|c| argmin_path(c.ema_ns[0], c.ema_ns[1]))
+    }
+
+    /// Number of learned cells.
+    pub fn len(&self) -> usize {
+        self.cells.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the whole table, sorted by (class, loc, peers, items,
+    /// size).
+    pub fn snapshot(&self) -> Vec<AdaptiveCell> {
+        let cells = self.cells.lock().unwrap();
+        let mut v: Vec<AdaptiveCell> = cells
+            .iter()
+            .map(|(k, c)| AdaptiveCell {
+                key: *k,
+                ema_loadstore_ns: c.ema_ns[0],
+                ema_copy_engine_ns: c.ema_ns[1],
+                samples_loadstore: c.samples[0],
+                samples_copy_engine: c.samples[1],
+            })
+            .collect();
+        v.sort_by_key(|c| {
+            (
+                c.key.fanout,
+                c.key.loc as u8,
+                c.key.peers_pow2,
+                c.key.items_pow2,
+                c.key.size_pow2,
+            )
+        });
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2() {
+        assert_eq!(log2_bucket(0), 0);
+        assert_eq!(log2_bucket(1), 0);
+        assert_eq!(log2_bucket(2), 1);
+        assert_eq!(log2_bucket(3), 1);
+        assert_eq!(log2_bucket(4096), 12);
+        assert_eq!(log2_bucket(4097), 12);
+    }
+
+    #[test]
+    fn seed_decides_like_argmin_then_ema_learns() {
+        let t = AdaptiveTable::new(0.5);
+        let k = BucketKey::p2p(Locality::SameNode, 4096, 16);
+        // Seed says load/store is cheaper.
+        assert_eq!(t.decide(k, 100.0, 200.0), Path::LoadStore);
+        // Observations say the store path is actually much slower.
+        for _ in 0..16 {
+            t.observe(k, Path::LoadStore, 1000.0);
+        }
+        assert_eq!(t.peek(k), Some(Path::CopyEngine));
+        // Re-seeding an existing cell does not reset what was learned.
+        assert_eq!(t.decide(k, 100.0, 200.0), Path::CopyEngine);
+    }
+
+    #[test]
+    fn observe_without_cell_is_noop() {
+        let t = AdaptiveTable::new(0.25);
+        let k = BucketKey::p2p(Locality::SameGpu, 64, 1);
+        assert!(!t.observe(k, Path::CopyEngine, 5.0));
+        assert_eq!(t.peek(k), None);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn fanout_cells_are_disjoint_from_p2p_and_by_width() {
+        let t = AdaptiveTable::new(0.5);
+        let p2p = BucketKey::p2p(Locality::SameNode, 4096, 16);
+        let fan2 = BucketKey::fanout(Locality::SameNode, 4096, 16, 2);
+        let fan12 = BucketKey::fanout(Locality::SameNode, 4096, 16, 12);
+        assert_ne!(p2p, fan2);
+        assert_ne!(fan2, fan12);
+        // A huge whole-push observation on the wide fan-out must not
+        // flip the narrow fan-out's (or the p2p) decision.
+        t.decide(p2p, 100.0, 200.0);
+        t.decide(fan2, 100.0, 200.0);
+        t.decide(fan12, 100.0, 200.0);
+        for _ in 0..16 {
+            assert!(t.observe(fan12, Path::LoadStore, 10_000.0));
+        }
+        assert_eq!(t.peek(p2p), Some(Path::LoadStore));
+        assert_eq!(t.peek(fan2), Some(Path::LoadStore));
+        assert_eq!(t.peek(fan12), Some(Path::CopyEngine));
+    }
+}

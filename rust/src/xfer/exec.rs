@@ -1,0 +1,370 @@
+//! Executors: carry out a [`TransferPlan`] (plan→**execute**→complete).
+//!
+//! One executor per [`Route`]:
+//! * `LoadStore` — direct stores/loads into the peer heap (the real bytes
+//!   move through the shared-memory substrate), charged at the Xe-Link
+//!   work-item store rate (§III-B);
+//! * `CopyEngine` — reverse offload: compose a 64-byte ring message
+//!   (§III-D), block on the proxy's completion, charge ring RTT + engine
+//!   time with queue-aware occupancy (§III-C);
+//! * `Nic` — same ring hand-off, but the proxy forwards to the OFI
+//!   transport (inter-node, §III-D).
+//!
+//! This module is also the **only** place that composes reverse-offload
+//! ring messages for RMA/AMO/signal ops — the per-op copies that used to
+//! live in `rma.rs`, `amo.rs` and `signal.rs` are gone. Executors feed
+//! observed (modeled) durations back to the planner so
+//! `CutoverMode::Adaptive` learns online.
+
+use crate::coordinator::metrics::Metrics;
+use crate::ishmem::PeCtx;
+use crate::ringbuf::message::AmoKind;
+use crate::ringbuf::{Message, RingOp, COMPLETION_NONE};
+use crate::sim::topology::Locality;
+use crate::sim::SimClock;
+
+use super::plan::{OpKind, Route, TransferPlan};
+
+/// Message flag: `src_off`/`dst_off` is a raw in-process pointer (the
+/// initiator's private buffer), not a symmetric-heap offset.
+pub(crate) const FLAG_RAW_PTR: u16 = 1 << 8;
+
+/// Completion payloads for non-fetching proxied ops.
+pub(crate) const PROXY_OK: u64 = 0;
+pub(crate) const PROXY_ERR_UNREGISTERED: u64 = 1;
+
+/// Compose a reverse-offload RMA ring message (the one wire format all
+/// put/get/put-signal traffic shares).
+pub(crate) fn rma_message(
+    op: RingOp,
+    pe: usize,
+    dst_off: u64,
+    src_off: u64,
+    len: usize,
+) -> Message {
+    let mut m = Message::nop();
+    m.op = op as u8;
+    m.flags = FLAG_RAW_PTR;
+    m.pe = pe as u32;
+    m.dst_off = dst_off;
+    m.src_off = src_off;
+    m.len = len as u64;
+    m
+}
+
+impl PeCtx {
+    // ----------------------------------------------------------- planning --
+
+    /// Plan a point-to-point transfer to `pe`: IPC-table reachability
+    /// lookup (§III-G.1 step 2) + locality classification, then the
+    /// engine's path decision.
+    pub(crate) fn plan_to(&self, kind: OpKind, pe: usize, bytes: usize, items: usize) -> TransferPlan {
+        let reachable = self.ipc.lookup(pe).is_some();
+        let loc = self.loc_of(pe);
+        self.rt.xfer.plan_p2p(kind, reachable, loc, bytes, items)
+    }
+
+    // ----------------------------------------------------- ring plumbing --
+
+    /// Post a ring message and block for its completion payload.
+    pub(crate) fn proxied_blocking(&self, mut msg: Message) -> u64 {
+        let pool = self.completions().clone();
+        let token = pool.alloc();
+        msg.completion = token.index;
+        msg.src_pe = self.pe() as u32;
+        Metrics::add(&self.rt.metrics.ring_messages, 1);
+        self.ring().send(msg);
+        pool.wait(token)
+    }
+
+    /// Post a fire-and-forget ring message (tracked so `quiet` flushes it).
+    pub(crate) fn proxied_ff(&self, mut msg: Message) {
+        msg.completion = COMPLETION_NONE;
+        msg.src_pe = self.pe() as u32;
+        Metrics::add(&self.rt.metrics.ring_messages, 1);
+        self.track.note_fire_and_forget();
+        self.ring().send(msg);
+    }
+
+    pub(crate) fn check_proxy_status(&self, status: u64, what: &str, pe: usize) {
+        match status {
+            PROXY_OK => {}
+            PROXY_ERR_UNREGISTERED => panic!(
+                "{what} to PE {pe} failed: target heap not FI_HMEM-registered (strict mode)"
+            ),
+            other => panic!("{what} to PE {pe} failed: proxy status {other}"),
+        }
+    }
+
+    // -------------------------------------------------- context helpers --
+
+    #[inline]
+    pub(crate) fn loc_of(&self, pe: usize) -> Locality {
+        self.rt.cost.locality(self.pe(), pe)
+    }
+
+    #[inline]
+    pub(crate) fn my_gpu(&self) -> usize {
+        self.rt.topo().global_gpu_of(self.pe())
+    }
+
+    /// Queue-aware modeled duration of this plan's engine execution.
+    fn engine_exec_ns(&self, plan: &TransferPlan) -> f64 {
+        self.rt.cost.copy_engine_ns(
+            self.my_gpu(),
+            plan.loc,
+            plan.bytes,
+            self.rt.xfer.immediate_cl,
+            false,
+            true,
+        )
+    }
+
+    fn nic_exec_ns(&self, pe: usize, bytes: usize) -> f64 {
+        let registered = self.rt.transport.is_registered(pe);
+        self.rt.cost.internode_ns(bytes, registered, true)
+    }
+
+    // ------------------------------------------------- blocking executors --
+
+    /// Shared tail of the proxied blocking routes: compose the one RMA
+    /// wire message, block on the proxy, then charge + count by route.
+    fn exec_proxied_blocking(
+        &self,
+        plan: &TransferPlan,
+        op: RingOp,
+        what: &str,
+        pe: usize,
+        dst_off: u64,
+        src_off: u64,
+    ) {
+        let m = rma_message(op, pe, dst_off, src_off, plan.bytes);
+        let status = self.proxied_blocking(m);
+        self.check_proxy_status(status, what, pe);
+        match plan.route {
+            Route::CopyEngine => {
+                let ns = self.engine_exec_ns(plan);
+                self.clock.advance(ns);
+                self.rt.xfer.record(plan, ns);
+                Metrics::add(&self.rt.metrics.bytes_copy_engine, plan.bytes as u64);
+            }
+            Route::Nic => {
+                self.clock.advance(self.nic_exec_ns(pe, plan.bytes));
+                Metrics::add(&self.rt.metrics.bytes_nic, plan.bytes as u64);
+            }
+            Route::LoadStore => unreachable!("load/store never posts a ring message"),
+        }
+    }
+
+    /// Execute a planned blocking put of `src` into `pe`'s heap at
+    /// `dst_off`.
+    pub(crate) fn exec_put(&self, plan: &TransferPlan, pe: usize, dst_off: usize, src: &[u8]) {
+        match plan.route {
+            Route::LoadStore => {
+                self.rt.heaps.heap(pe).write(dst_off, src);
+                self.clock.advance(plan.modeled_ns);
+                self.rt.xfer.record(plan, plan.modeled_ns);
+                Metrics::add(&self.rt.metrics.bytes_loadstore, plan.bytes as u64);
+            }
+            Route::CopyEngine | Route::Nic => self.exec_proxied_blocking(
+                plan,
+                RingOp::Put,
+                "put",
+                pe,
+                dst_off as u64,
+                src.as_ptr() as u64,
+            ),
+        }
+    }
+
+    /// Execute a planned blocking get from `pe`'s heap at `src_off`.
+    pub(crate) fn exec_get(
+        &self,
+        plan: &TransferPlan,
+        pe: usize,
+        src_off: usize,
+        dst: &mut [u8],
+    ) {
+        match plan.route {
+            Route::LoadStore => {
+                self.rt.heaps.heap(pe).read(src_off, dst);
+                self.clock.advance(plan.modeled_ns);
+                self.rt.xfer.record(plan, plan.modeled_ns);
+                Metrics::add(&self.rt.metrics.bytes_loadstore, plan.bytes as u64);
+            }
+            Route::CopyEngine | Route::Nic => self.exec_proxied_blocking(
+                plan,
+                RingOp::Get,
+                "get",
+                pe,
+                dst.as_mut_ptr() as u64,
+                src_off as u64,
+            ),
+        }
+    }
+
+    // ---------------------------------------------------- NBI executors --
+
+    /// Execute a planned non-blocking put: data moves eagerly (Rust borrow
+    /// safety — stronger than the spec's contract), the *modeled*
+    /// completion defers to the tracker and collapses at `quiet`.
+    pub(crate) fn exec_put_nbi(&self, plan: &TransferPlan, pe: usize, dst_off: usize, src: &[u8]) {
+        let issue = self.rt.cost.ring_post_ns();
+        let full = match plan.route {
+            Route::LoadStore => {
+                self.rt.heaps.heap(pe).write(dst_off, src);
+                Metrics::add(&self.rt.metrics.bytes_loadstore, plan.bytes as u64);
+                self.rt.xfer.record(plan, plan.modeled_ns);
+                plan.modeled_ns
+            }
+            Route::CopyEngine => {
+                // Eager movement; the modeled engine transfer completes at
+                // the horizon.
+                self.rt.heaps.heap(pe).write(dst_off, src);
+                Metrics::add(&self.rt.metrics.bytes_copy_engine, plan.bytes as u64);
+                let ns = self.engine_exec_ns(plan);
+                self.rt.xfer.record(plan, ns);
+                ns
+            }
+            Route::Nic => {
+                let dummy = SimClock::new();
+                self.rt
+                    .transport
+                    .put_from_ptr(src.as_ptr() as u64, pe, dst_off, plan.bytes, &dummy)
+                    .expect("put_nbi transport");
+                Metrics::add(&self.rt.metrics.bytes_nic, plan.bytes as u64);
+                self.nic_exec_ns(pe, plan.bytes)
+            }
+        };
+        self.clock.advance(issue);
+        let done_at = self.clock.now_ns() + (full - issue).max(0.0);
+        self.track.defer(done_at);
+    }
+
+    /// Execute a planned non-blocking get (eager movement, deferred model).
+    pub(crate) fn exec_get_nbi(
+        &self,
+        plan: &TransferPlan,
+        pe: usize,
+        src_off: usize,
+        dst: &mut [u8],
+    ) {
+        let issue = self.rt.cost.ring_post_ns();
+        let full = match plan.route {
+            Route::LoadStore => {
+                self.rt.heaps.heap(pe).read(src_off, dst);
+                Metrics::add(&self.rt.metrics.bytes_loadstore, plan.bytes as u64);
+                self.rt.xfer.record(plan, plan.modeled_ns);
+                plan.modeled_ns
+            }
+            Route::CopyEngine => {
+                self.rt.heaps.heap(pe).read(src_off, dst);
+                Metrics::add(&self.rt.metrics.bytes_copy_engine, plan.bytes as u64);
+                let ns = self.engine_exec_ns(plan);
+                self.rt.xfer.record(plan, ns);
+                ns
+            }
+            Route::Nic => {
+                let dummy = SimClock::new();
+                self.rt
+                    .transport
+                    .get_to_ptr(pe, src_off, dst.as_mut_ptr() as u64, plan.bytes, &dummy)
+                    .expect("get_nbi transport");
+                Metrics::add(&self.rt.metrics.bytes_nic, plan.bytes as u64);
+                self.nic_exec_ns(pe, plan.bytes)
+            }
+        };
+        self.clock.advance(issue);
+        let done_at = self.clock.now_ns() + (full - issue).max(0.0);
+        self.track.defer(done_at);
+    }
+
+    // ------------------------------------------------ signal executor ----
+
+    /// Execute a planned remote put-with-signal: one proxied message
+    /// carries payload pointer + signal update so the proxy orders them on
+    /// the wire (put; fence; signal) — paper §9.8.3 semantics.
+    pub(crate) fn exec_put_signal_remote(
+        &self,
+        plan: &TransferPlan,
+        pe: usize,
+        dst_off: usize,
+        src: &[u8],
+        sig_off: usize,
+        signal: u64,
+        sig_add: bool,
+    ) {
+        let mut m = rma_message(
+            RingOp::PutSignal,
+            pe,
+            dst_off as u64,
+            src.as_ptr() as u64,
+            plan.bytes,
+        );
+        m.flags |= if sig_add { 1 } else { 0 };
+        m.inline_val = signal;
+        m.inline_val2 = sig_off as u64;
+        let status = self.proxied_blocking(m);
+        self.check_proxy_status(status, "put_signal", pe);
+        // Payload + 8-byte signal word cross the wire.
+        self.clock.advance(self.nic_exec_ns(pe, plan.bytes + 8));
+        Metrics::add(&self.rt.metrics.bytes_nic, plan.bytes as u64 + 8);
+    }
+
+    // ------------------------------------------------- AMO / inline ops --
+
+    /// Proxied atomic: compose the `Amo` ring message, execute remotely,
+    /// and charge the fetch round trip or the fire-and-forget post.
+    /// Returns the fetched old value (0 for non-fetching kinds).
+    pub(crate) fn proxied_amo(
+        &self,
+        pe: usize,
+        dst_off: usize,
+        dtype: u8,
+        kind: AmoKind,
+        operand: u64,
+        comparand: u64,
+        fetching: bool,
+    ) -> u64 {
+        let mut m = Message::nop();
+        m.op = RingOp::Amo as u8;
+        m.dtype = dtype;
+        m.flags = kind as u8 as u16;
+        m.pe = pe as u32;
+        m.dst_off = dst_off as u64;
+        m.inline_val = operand;
+        m.inline_val2 = comparand;
+        if fetching {
+            let old = self.proxied_blocking(m);
+            self.clock
+                .advance(self.rt.cost.fetch_atomic_ns(Locality::Remote));
+            old
+        } else {
+            self.proxied_ff(m);
+            self.clock.advance(self.rt.cost.ring_post_ns());
+            0
+        }
+    }
+
+    /// Proxied inline scalar put (≤ 8 bytes ride inside the message):
+    /// locally complete as soon as the message is posted.
+    pub(crate) fn proxied_put_inline(
+        &self,
+        pe: usize,
+        dst_off: usize,
+        dtype: u8,
+        len: usize,
+        raw: u64,
+    ) {
+        let mut m = Message::nop();
+        m.op = RingOp::PutInline as u8;
+        m.dtype = dtype;
+        m.pe = pe as u32;
+        m.dst_off = dst_off as u64;
+        m.len = len as u64;
+        m.inline_val = raw;
+        self.proxied_ff(m);
+        self.clock.advance(self.rt.cost.ring_post_ns());
+        Metrics::add(&self.rt.metrics.bytes_nic, len as u64);
+    }
+}

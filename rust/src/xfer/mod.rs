@@ -1,0 +1,45 @@
+//! The unified transfer-plan engine — one owner for the whole
+//! device-initiated data path (paper §III-B/C/D, §IV).
+//!
+//! Before this subsystem existed, the plan→execute→complete flow was
+//! duplicated per API family: `ishmem/cutover.rs` decided point-to-point
+//! paths, `ishmem/collectives.rs` re-derived the same mode/threshold
+//! branching for fan-outs, and each of `rma.rs`/`amo.rs`/`signal.rs`
+//! composed its own ring messages and charged the cost model by hand. Now
+//! every device-initiated operation flows through exactly one pipeline:
+//!
+//! 1. **Plan** ([`plan::XferEngine`]) — classify the request (op kind,
+//!    locality, bytes, cooperating work-items), model the candidate paths,
+//!    and pick a [`plan::Route`]:
+//!    * `LoadStore` — organic GPU load/store over Xe-Link (§III-B),
+//!    * `CopyEngine` — reverse offload → host proxy → blitter engines
+//!      (§III-C, Fig 2 circle 3),
+//!    * `Nic` — inter-node proxy → OFI transport (§III-D).
+//!    The decision honours [`crate::ishmem::CutoverMode`]: `Never`/`Always`
+//!    pin a path (the artifact's evaluation patches), `Tuned` is the
+//!    shipping model-argmin policy (§IV, Fig 5–7), and `Adaptive` learns
+//!    per-(locality, size-bucket, work-items-bucket) thresholds online
+//!    ([`adaptive::AdaptiveTable`]): seeded from the `Tuned` model,
+//!    refined by exponential moving averages of observed costs.
+//! 2. **Execute** ([`exec`]) — one executor per route, including the single
+//!    place that composes reverse-offload ring messages (64-byte wire
+//!    format, §III-D).
+//! 3. **Complete** ([`track::CompletionTracker`]) — unified blocking/NBI
+//!    completion state per PE: the modeled completion horizon of
+//!    outstanding non-blocking transfers plus the count of fire-and-forget
+//!    proxied messages that `ishmem_quiet` must flush.
+//!
+//! Paper map: plan ↔ §III-B cutover tuning + Fig 5 crossovers; execute ↔
+//! §III-C command lists / §III-D ring + proxy; complete ↔ §9.11 ordering
+//! semantics (`fence`/`quiet`). Fig 5's tuned crossover can be compared
+//! against the learned table through
+//! [`plan::XferEngine::adaptive_report`] and the `fig5_cutover` bench.
+
+pub mod adaptive;
+pub mod exec;
+pub mod plan;
+pub mod track;
+
+pub use adaptive::{AdaptiveCell, AdaptiveTable, BucketKey};
+pub use plan::{FanoutShape, OpKind, Route, TransferPlan, XferEngine};
+pub use track::CompletionTracker;

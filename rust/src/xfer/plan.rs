@@ -1,0 +1,463 @@
+//! The planner: one `TransferPlan` per device-initiated operation.
+//!
+//! `XferEngine` is the single place that models candidate paths and picks
+//! a route, for point-to-point RMA/signals (paper Fig 3–5) *and* for
+//! collective fan-outs (Fig 6–7, where the decision also depends on the
+//! PE count via the fan-out shape). Executors (`exec.rs`) then charge the
+//! queue-aware actual costs and feed them back via [`XferEngine::record`]
+//! so `CutoverMode::Adaptive` learns online.
+
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::ishmem::cutover::{CutoverConfig, CutoverMode, Path};
+use crate::sim::topology::Locality;
+use crate::sim::CostModel;
+
+use super::adaptive::{argmin_path, AdaptiveCell, AdaptiveTable, BucketKey};
+
+/// What kind of operation a plan describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Contiguous put (blocking or NBI).
+    Put,
+    /// Contiguous get (blocking or NBI).
+    Get,
+    /// Put + signal-word update.
+    PutSignal,
+    /// Collective one-to-many push (broadcast/fcollect/collect lanes).
+    Fanout,
+}
+
+/// The executor a plan is bound to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Organic load/store by the calling work-item(s) (§III-B).
+    LoadStore,
+    /// Reverse offload → host proxy → copy engines (§III-C).
+    CopyEngine,
+    /// Inter-node: reverse offload → host proxy → OFI/NIC (§III-D).
+    Nic,
+}
+
+impl Route {
+    /// The intra-node cutover path this route corresponds to (Nic has
+    /// none: unreachable targets never had a path choice).
+    pub fn as_path(self) -> Option<Path> {
+        match self {
+            Route::LoadStore => Some(Path::LoadStore),
+            Route::CopyEngine => Some(Path::CopyEngine),
+            Route::Nic => None,
+        }
+    }
+}
+
+/// A planned device-initiated transfer: everything the executor and the
+/// completion tracker need, plus the modeled costs that justified the
+/// choice (kept for adaptive feedback and reports).
+#[derive(Clone, Copy, Debug)]
+pub struct TransferPlan {
+    pub kind: OpKind,
+    pub loc: Locality,
+    pub bytes: usize,
+    /// Cooperating work-items (1 for scalar-thread APIs).
+    pub items: usize,
+    /// Destination peers (1 for point-to-point, fan-out width for
+    /// collectives — Fig 6's third cutover axis).
+    pub peers: usize,
+    pub route: Route,
+    /// Modeled cost of the chosen route, ns (pure model — executors may
+    /// charge a queue-aware refinement and `record` the difference).
+    pub modeled_ns: f64,
+    /// Modeled cost of the rejected intra-node path, ns (None on `Nic`:
+    /// there was no alternative).
+    pub alt_ns: Option<f64>,
+}
+
+impl TransferPlan {
+    /// Bucket key for the adaptive table (fan-outs learn in their own
+    /// cells — their observations cover a whole one-to-many push).
+    pub fn bucket(&self) -> BucketKey {
+        match self.kind {
+            OpKind::Fanout => BucketKey::fanout(self.loc, self.bytes, self.items, self.peers),
+            _ => BucketKey::p2p(self.loc, self.bytes, self.items),
+        }
+    }
+}
+
+/// Shape of a collective fan-out, pre-digested by the caller (who owns the
+/// IPC table): per-destination-link load plus NIC spill-over.
+#[derive(Clone, Debug)]
+pub struct FanoutShape {
+    /// Per destination GPU link: (locality, total bytes, transfer count).
+    pub per_link: Vec<(Locality, usize, usize)>,
+    /// Bytes bound for unreachable (inter-node) members.
+    pub nic_bytes: usize,
+    /// Total number of destination peers.
+    pub npeers: usize,
+    /// Representative locality for the adaptive bucket (the most distant
+    /// reachable member; `SameNode` when links are in play).
+    pub loc: Locality,
+}
+
+impl FanoutShape {
+    /// Total bytes this fan-out moves (all links + NIC spill-over).
+    pub fn total_bytes(&self) -> usize {
+        self.per_link.iter().map(|&(_, b, _)| b).sum::<usize>() + self.nic_bytes
+    }
+}
+
+impl Default for FanoutShape {
+    fn default() -> Self {
+        FanoutShape {
+            per_link: Vec::new(),
+            nic_bytes: 0,
+            npeers: 0,
+            loc: Locality::SameNode,
+        }
+    }
+}
+
+/// The unified transfer-plan engine: one per machine, shared by all PEs.
+#[derive(Debug)]
+pub struct XferEngine {
+    pub cost: Arc<CostModel>,
+    pub cutover: CutoverConfig,
+    /// Whether device-initiated engine transfers use immediate command
+    /// lists (§III-C) — affects the modeled startup constant.
+    pub immediate_cl: bool,
+    adaptive: AdaptiveTable,
+    metrics: Arc<Metrics>,
+}
+
+impl XferEngine {
+    pub fn new(
+        cost: Arc<CostModel>,
+        cutover: CutoverConfig,
+        immediate_cl: bool,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let alpha = cutover.ema_alpha;
+        XferEngine {
+            cost,
+            cutover,
+            immediate_cl,
+            adaptive: AdaptiveTable::new(alpha),
+            metrics,
+        }
+    }
+
+    // ------------------------------------------------------ p2p planning --
+
+    /// Model the point-to-point load/store path (pure estimate).
+    pub fn est_loadstore_ns(&self, loc: Locality, bytes: usize, items: usize) -> f64 {
+        self.cost.loadstore_ns(loc, bytes, items)
+    }
+
+    /// Model the point-to-point engine path: ring round trip + one engine
+    /// transfer at full link speed (pure estimate, no queueing). The
+    /// formula itself lives on [`CostModel::p2p_engine_estimate_ns`] —
+    /// shared with the policy-level reference in `cutover.rs`.
+    pub fn est_copy_engine_ns(&self, loc: Locality, bytes: usize) -> f64 {
+        self.cost.p2p_engine_estimate_ns(loc, bytes, self.immediate_cl)
+    }
+
+    /// Model the inter-node path (registered-heap RDMA estimate).
+    pub fn est_nic_ns(&self, bytes: usize) -> f64 {
+        self.cost.internode_ns(bytes, true, true)
+    }
+
+    /// Plan a point-to-point transfer of `bytes` to a `loc`-distant PE by
+    /// `items` cooperating work-items. `reachable` is the IPC-table verdict
+    /// (§III-G.1 step 2): unreachable targets always route to the NIC.
+    pub fn plan_p2p(
+        &self,
+        kind: OpKind,
+        reachable: bool,
+        loc: Locality,
+        bytes: usize,
+        items: usize,
+    ) -> TransferPlan {
+        if !reachable {
+            let plan = TransferPlan {
+                kind,
+                loc: Locality::Remote,
+                bytes,
+                items,
+                peers: 1,
+                route: Route::Nic,
+                modeled_ns: self.est_nic_ns(bytes),
+                alt_ns: None,
+            };
+            self.count_plan(plan.route);
+            return plan;
+        }
+        let ls = self.est_loadstore_ns(loc, bytes, items);
+        let ce = self.est_copy_engine_ns(loc, bytes);
+        let path = self.decide(BucketKey::p2p(loc, bytes, items), bytes, ls, ce);
+        let plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce);
+        self.count_plan(plan.route);
+        plan
+    }
+
+    // -------------------------------------------------- fan-out planning --
+
+    /// Modeled duration of fanning `shape` out via work-item stores: links
+    /// run in parallel, work-items split across active links, multiple
+    /// peers behind one link serialize (paper Fig 6 discussion).
+    pub fn fanout_store_ns(&self, shape: &FanoutShape, items: usize) -> f64 {
+        if shape.npeers == 0 || shape.total_bytes() == 0 {
+            return 0.0;
+        }
+        let active = shape.per_link.len().max(1);
+        let items_per_link = (items / active).max(1);
+        let xe = &self.cost.params.xe;
+        let mut t: f64 = 0.0;
+        for &(loc, link_bytes, _) in &shape.per_link {
+            t = t.max(xe.loadstore_ns(loc, link_bytes, items_per_link));
+        }
+        if shape.nic_bytes > 0 {
+            t = t.max(self.cost.internode_ns(shape.nic_bytes, true, true));
+        }
+        self.cost.device_issue_ns() + t
+    }
+
+    /// Modeled duration of the same fan-out via copy engines started by a
+    /// single reverse-offload up-call: engines run in parallel up to the
+    /// per-GPU engine count, links still share bandwidth.
+    pub fn fanout_engine_ns(&self, shape: &FanoutShape) -> f64 {
+        if shape.npeers == 0 || shape.total_bytes() == 0 {
+            return 0.0;
+        }
+        let ce = &self.cost.params.ce;
+        let xe = &self.cost.params.xe;
+        let mut t: f64 = 0.0;
+        for &(loc, link_bytes, transfers) in &shape.per_link {
+            // Startup overlaps across engines; transfers on one link share
+            // its bandwidth.
+            let startups = transfers.div_ceil(ce.engines_per_gpu) as f64;
+            t = t.max(
+                startups * ce.startup_immediate_ns + link_bytes as f64 / ce.path_bw_gbs(xe, loc),
+            );
+        }
+        if shape.nic_bytes > 0 {
+            t = t.max(self.cost.internode_ns(shape.nic_bytes, true, false));
+        }
+        self.cost.ring_rtt_ns() + t
+    }
+
+    /// Plan a collective fan-out of `bytes` per peer by `items` work-items
+    /// (paper Fig 6: the decision depends on nelems, work-items *and* the
+    /// PE count — all captured by the shape).
+    pub fn plan_fanout(&self, shape: &FanoutShape, bytes: usize, items: usize) -> TransferPlan {
+        let ls = self.fanout_store_ns(shape, items);
+        let ce = self.fanout_engine_ns(shape);
+        let key = BucketKey::fanout(shape.loc, bytes, items, shape.npeers);
+        let path = self.decide(key, bytes, ls, ce);
+        let plan = self.bind(OpKind::Fanout, shape.loc, bytes, items, shape.npeers, path, ls, ce);
+        self.count_plan(plan.route);
+        plan
+    }
+
+    // ---------------------------------------------------------- feedback --
+
+    /// Feed back the observed (modeled, queue-aware) duration of an
+    /// executed plan. Under `Adaptive` this refines the learned table;
+    /// the metric counts only observations that actually refined a cell
+    /// (a fixed-threshold override never seeds cells, for example).
+    pub fn record(&self, plan: &TransferPlan, observed_ns: f64) {
+        if self.cutover.mode != CutoverMode::Adaptive {
+            return;
+        }
+        if let Some(path) = plan.route.as_path() {
+            if self.adaptive.observe(plan.bucket(), path, observed_ns) {
+                Metrics::add(&self.metrics.adaptive_updates, 1);
+            }
+        }
+    }
+
+    /// The learned table (reports / benches / tests).
+    pub fn adaptive_snapshot(&self) -> Vec<AdaptiveCell> {
+        self.adaptive.snapshot()
+    }
+
+    /// Learned point-to-point crossover size for (loc, items): smallest
+    /// power-of-two size the engine routes to the copy engines. Falls back
+    /// to model seeds for untouched cells — i.e. cold cells answer like
+    /// `Tuned`'s [`CutoverConfig::crossover_bytes`].
+    pub fn learned_crossover_bytes(&self, loc: Locality, items: usize) -> Option<usize> {
+        (3..28).map(|p| 1usize << p).find(|&b| {
+            let key = BucketKey::p2p(loc, b, items);
+            let path = self.adaptive.peek(key).unwrap_or_else(|| {
+                argmin_path(
+                    self.est_loadstore_ns(loc, b, items),
+                    self.est_copy_engine_ns(loc, b),
+                )
+            });
+            path == Path::CopyEngine
+        })
+    }
+
+    /// The `Tuned` model's point-to-point crossover, computed from this
+    /// engine's own estimates (honours `immediate_cl`) — the reference
+    /// column the learned table is compared against. This is the single
+    /// model formula; `CutoverConfig::crossover_bytes` remains only as
+    /// the immediate-CL reference used by policy-level tests.
+    pub fn model_crossover_bytes(&self, loc: Locality, items: usize) -> Option<usize> {
+        (3..28).map(|p| 1usize << p).find(|&b| {
+            argmin_path(
+                self.est_loadstore_ns(loc, b, items),
+                self.est_copy_engine_ns(loc, b),
+            ) == Path::CopyEngine
+        })
+    }
+
+    /// Human-readable learned-vs-modeled crossover table (bench report).
+    pub fn adaptive_report(&self) -> String {
+        let mut out = String::from(
+            "adaptive cutover: learned vs modeled crossover (bytes)\n\
+             locality    items   learned     tuned-model\n",
+        );
+        for loc in [Locality::SameTile, Locality::SameGpu, Locality::SameNode] {
+            for items in [1usize, 16, 128, 1024] {
+                let learned = self.learned_crossover_bytes(loc, items);
+                let tuned = self.model_crossover_bytes(loc, items);
+                out.push_str(&format!(
+                    "{:<11} {:<7} {:<11} {:<11}\n",
+                    format!("{loc:?}"),
+                    items,
+                    learned.map_or("-".into(), |b| b.to_string()),
+                    tuned.map_or("-".into(), |b| b.to_string()),
+                ));
+            }
+        }
+        let cells = self.adaptive.len();
+        out.push_str(&format!("learned cells: {cells}\n"));
+        out
+    }
+
+    // ---------------------------------------------------------- internals --
+
+    /// Mode dispatch over pre-computed path estimates. This is the single
+    /// cutover branch point for the whole library.
+    fn decide(&self, key: BucketKey, bytes: usize, ls_ns: f64, ce_ns: f64) -> Path {
+        match self.cutover.mode {
+            CutoverMode::Never => Path::LoadStore,
+            CutoverMode::Always => Path::CopyEngine,
+            CutoverMode::Tuned => {
+                if let Some(t) = self.cutover.fixed_threshold {
+                    return if bytes < t { Path::LoadStore } else { Path::CopyEngine };
+                }
+                argmin_path(ls_ns, ce_ns)
+            }
+            CutoverMode::Adaptive => {
+                if let Some(t) = self.cutover.fixed_threshold {
+                    return if bytes < t { Path::LoadStore } else { Path::CopyEngine };
+                }
+                self.adaptive.decide(key, ls_ns, ce_ns)
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn bind(
+        &self,
+        kind: OpKind,
+        loc: Locality,
+        bytes: usize,
+        items: usize,
+        peers: usize,
+        path: Path,
+        ls_ns: f64,
+        ce_ns: f64,
+    ) -> TransferPlan {
+        let (route, modeled, alt) = match path {
+            Path::LoadStore => (Route::LoadStore, ls_ns, ce_ns),
+            Path::CopyEngine => (Route::CopyEngine, ce_ns, ls_ns),
+        };
+        TransferPlan {
+            kind,
+            loc,
+            bytes,
+            items,
+            peers,
+            route,
+            modeled_ns: modeled,
+            alt_ns: Some(alt),
+        }
+    }
+
+    fn count_plan(&self, route: Route) {
+        let counter = match route {
+            Route::LoadStore => &self.metrics.xfer_plans_loadstore,
+            Route::CopyEngine => &self.metrics.xfer_plans_copy_engine,
+            Route::Nic => &self.metrics.xfer_plans_nic,
+        };
+        Metrics::add(counter, 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{CostParams, Topology};
+
+    fn engine(cfg: CutoverConfig) -> XferEngine {
+        let cost = CostModel::new(Topology::default(), CostParams::default());
+        XferEngine::new(cost, cfg, true, Metrics::new())
+    }
+
+    #[test]
+    fn tuned_plan_picks_argmin_and_keeps_alternative() {
+        let e = engine(CutoverConfig::tuned());
+        for bytes in [64usize, 4096, 1 << 20] {
+            let p = e.plan_p2p(OpKind::Put, true, Locality::SameNode, bytes, 1);
+            let alt = p.alt_ns.unwrap();
+            assert!(
+                p.modeled_ns <= alt,
+                "{bytes}B: chosen {} !<= alt {alt}",
+                p.modeled_ns
+            );
+        }
+    }
+
+    #[test]
+    fn unreachable_always_routes_nic() {
+        let e = engine(CutoverConfig::never());
+        let p = e.plan_p2p(OpKind::Put, false, Locality::Remote, 8, 1);
+        assert_eq!(p.route, Route::Nic);
+        assert!(p.alt_ns.is_none());
+    }
+
+    #[test]
+    fn adaptive_seeds_like_tuned() {
+        let tuned = engine(CutoverConfig::tuned());
+        let adap = engine(CutoverConfig::adaptive());
+        for p in 3..24 {
+            let bytes = 1usize << p;
+            for items in [1usize, 128] {
+                let a = adap.plan_p2p(OpKind::Put, true, Locality::SameNode, bytes, items);
+                let t = tuned.plan_p2p(OpKind::Put, true, Locality::SameNode, bytes, items);
+                assert_eq!(a.route, t.route, "cold adaptive diverged at {bytes}B/{items}wi");
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_plan_scales_with_shape() {
+        let e = engine(CutoverConfig::tuned());
+        let shape = FanoutShape {
+            per_link: vec![(Locality::SameNode, 4 << 20, 1), (Locality::SameNode, 4 << 20, 1)],
+            nic_bytes: 0,
+            npeers: 2,
+            loc: Locality::SameNode,
+        };
+        // Huge per-peer payload with one work-item: engines must win.
+        let p = e.plan_fanout(&shape, 4 << 20, 1);
+        assert_eq!(p.route, Route::CopyEngine);
+        // Empty fan-out costs nothing.
+        let empty = FanoutShape::default();
+        assert_eq!(e.fanout_store_ns(&empty, 4), 0.0);
+        assert_eq!(e.fanout_engine_ns(&empty), 0.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Unified completion tracking for one PE (plan→execute→**complete**).
+//!
+//! Replaces the ad-hoc `nbi_horizon_ns` / `outstanding_proxy_nbi` cells
+//! that used to live directly on `PeCtx`. Two kinds of outstanding state
+//! exist on the device-initiated path:
+//!
+//! * a **modeled completion horizon**: non-blocking transfers move data
+//!   eagerly (Rust borrow safety) but their modeled duration completes
+//!   later — `ishmem_quiet` collapses the horizon into the PE timeline;
+//! * a **fire-and-forget proxy count**: scalar `p`, non-fetching remote
+//!   AMOs and other posted-without-completion ring messages that `quiet`
+//!   must flush with one ring round trip (FIFO order makes one `Quiet`
+//!   message prove all earlier ones were serviced, paper §III-D).
+//!
+//! The tracker is per-PE (`!Sync` like `PeCtx` itself), so plain `Cell`s
+//! suffice.
+
+use std::cell::Cell;
+
+/// Per-PE outstanding-completion state for the xfer engine.
+#[derive(Debug, Default)]
+pub struct CompletionTracker {
+    /// Modeled device-timeline instant when every outstanding non-blocking
+    /// transfer is complete.
+    horizon_ns: Cell<f64>,
+    /// Number of fire-and-forget proxied messages since the last flush.
+    outstanding_ff: Cell<u64>,
+}
+
+impl CompletionTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that an NBI transfer's modeled completion lands at `done_at`
+    /// on the PE timeline.
+    pub fn defer(&self, done_at_ns: f64) {
+        self.horizon_ns.set(self.horizon_ns.get().max(done_at_ns));
+    }
+
+    /// Current modeled completion horizon (0 when nothing is outstanding).
+    pub fn horizon_ns(&self) -> f64 {
+        self.horizon_ns.get()
+    }
+
+    /// Collapse the horizon (quiet): returns it and resets to zero.
+    pub fn take_horizon_ns(&self) -> f64 {
+        self.horizon_ns.replace(0.0)
+    }
+
+    /// Record one fire-and-forget proxied message.
+    pub fn note_fire_and_forget(&self) {
+        self.outstanding_ff.set(self.outstanding_ff.get() + 1);
+    }
+
+    /// Take the fire-and-forget count (quiet flush), resetting it.
+    pub fn take_fire_and_forget(&self) -> u64 {
+        self.outstanding_ff.replace(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn horizon_is_max_and_resets() {
+        let t = CompletionTracker::new();
+        assert_eq!(t.horizon_ns(), 0.0);
+        t.defer(100.0);
+        t.defer(50.0);
+        assert_eq!(t.horizon_ns(), 100.0);
+        assert_eq!(t.take_horizon_ns(), 100.0);
+        assert_eq!(t.horizon_ns(), 0.0);
+    }
+
+    #[test]
+    fn fire_and_forget_counts_and_drains() {
+        let t = CompletionTracker::new();
+        t.note_fire_and_forget();
+        t.note_fire_and_forget();
+        assert_eq!(t.take_fire_and_forget(), 2);
+        assert_eq!(t.take_fire_and_forget(), 0);
+    }
+}

@@ -1,7 +1,7 @@
 //! Integration: collectives (sync/barrier/broadcast/fcollect/collect/
 //! alltoall/reduce) across the simulated node with real threads.
 
-use rishmem::ishmem::{CutoverConfig, CutoverMode};
+use rishmem::ishmem::CutoverConfig;
 use rishmem::{run_npes, run_spmd, IshmemConfig, ReduceOp, TeamId, Topology, WorkGroup};
 
 #[test]
@@ -90,9 +90,14 @@ fn fcollect_gathers_in_rank_order() {
 
 #[test]
 fn fcollect_correct_under_all_cutover_modes() {
-    for mode in [CutoverMode::Never, CutoverMode::Always, CutoverMode::Tuned] {
+    for mode in [
+        CutoverConfig::never(),
+        CutoverConfig::always(),
+        CutoverConfig::tuned(),
+        CutoverConfig::adaptive(),
+    ] {
         let cfg = IshmemConfig {
-            cutover: CutoverConfig::mode(mode),
+            cutover: mode.clone(),
             ..IshmemConfig::with_npes(8)
         };
         let ok = run_spmd(cfg, false, |ctx| {

@@ -2,7 +2,7 @@
 //! simulated node (12 PEs, real threads, real proxy).
 
 use rishmem::ishmem::signal::SignalOp;
-use rishmem::ishmem::{CutoverConfig, CutoverMode};
+use rishmem::ishmem::CutoverConfig;
 use rishmem::{run_npes, run_spmd, Cmp, IshmemConfig, Topology, WorkGroup};
 
 #[test]
@@ -47,9 +47,14 @@ fn get_reads_remote() {
 #[test]
 fn put_correct_on_every_path() {
     // Force each cutover mode; bytes must land identically.
-    for mode in [CutoverMode::Never, CutoverMode::Always, CutoverMode::Tuned] {
+    for mode in [
+        CutoverConfig::never(),
+        CutoverConfig::always(),
+        CutoverConfig::tuned(),
+        CutoverConfig::adaptive(),
+    ] {
         let cfg = IshmemConfig {
-            cutover: CutoverConfig::mode(mode),
+            cutover: mode.clone(),
             ..IshmemConfig::with_npes(6)
         };
         let ok = run_spmd(cfg, false, |ctx| {
@@ -322,7 +327,7 @@ fn clock_charges_reflect_paths() {
     // A copy-engine put must charge at least ring RTT + startup; a
     // load/store put of 64 bytes charges far less.
     let cfg = IshmemConfig {
-        cutover: CutoverConfig::mode(CutoverMode::Always),
+        cutover: CutoverConfig::always(),
         ..IshmemConfig::with_npes(3)
     };
     let t_engine = run_spmd(cfg, false, |ctx| {
@@ -339,7 +344,7 @@ fn clock_charges_reflect_paths() {
     assert!(t_engine >= 5_000.0, "engine path charged only {t_engine}ns");
 
     let cfg = IshmemConfig {
-        cutover: CutoverConfig::mode(CutoverMode::Never),
+        cutover: CutoverConfig::never(),
         ..IshmemConfig::with_npes(3)
     };
     let t_store = run_spmd(cfg, false, |ctx| {

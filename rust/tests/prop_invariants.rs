@@ -4,10 +4,12 @@
 //! shapes — driven by the deterministic prop harness (seeds printed on
 //! failure).
 
-use rishmem::ishmem::cutover::{CutoverConfig, CutoverMode, Path};
+use rishmem::coordinator::metrics::Metrics;
+use rishmem::ishmem::cutover::{CutoverConfig, Path};
 use rishmem::ishmem::heap::SymAllocator;
 use rishmem::sim::cost::{CostModel, CostParams};
 use rishmem::util::prop::prop_check;
+use rishmem::xfer::{OpKind, Route, XferEngine};
 use rishmem::{run_npes, Locality, ReduceOp, TeamId, Topology};
 
 #[test]
@@ -63,7 +65,7 @@ fn prop_cutover_monotone_in_size() {
     // it for every larger size (same locality/work-group).
     prop_check("cutover is monotone in message size", 100, |rng| {
         let cost = CostModel::new(Topology::default(), CostParams::default());
-        let cfg = CutoverConfig::mode(CutoverMode::Tuned);
+        let cfg = CutoverConfig::tuned();
         let items = 1usize << rng.range(0, 10);
         let loc = *[Locality::SameTile, Locality::SameGpu, Locality::SameNode]
             .iter()
@@ -78,6 +80,98 @@ fn prop_cutover_monotone_in_size() {
                 }
             }
         }
+    });
+}
+
+/// Probe grid shared by the planner properties: every locality × sizes
+/// 8 B..16 MB × work-item buckets — the axes of paper Figs 4–6.
+fn planner_probe_grid() -> Vec<(Locality, usize, usize)> {
+    let mut grid = Vec::new();
+    for loc in [Locality::SameTile, Locality::SameGpu, Locality::SameNode] {
+        for p in 3..=24usize {
+            for items in [1usize, 16, 128, 1024] {
+                grid.push((loc, 1usize << p, items));
+            }
+        }
+    }
+    grid
+}
+
+#[test]
+fn prop_planner_tuned_picks_argmin_of_modeled_paths() {
+    // For every mode=Tuned probe point, the planner must choose the path
+    // whose modeled cost is the smaller of the two, and carry both costs
+    // on the plan (modeled_ns = chosen, alt_ns = rejected).
+    let cost = CostModel::new(Topology::default(), CostParams::default());
+    let engine = XferEngine::new(cost, CutoverConfig::tuned(), true, Metrics::new());
+    for (loc, bytes, items) in planner_probe_grid() {
+        let plan = engine.plan_p2p(OpKind::Put, true, loc, bytes, items);
+        let alt = plan.alt_ns.expect("reachable plan keeps the alternative");
+        assert!(
+            plan.modeled_ns <= alt,
+            "{loc:?}/{bytes}B/{items}wi: chosen {} !<= rejected {alt}",
+            plan.modeled_ns
+        );
+        let ls = engine.est_loadstore_ns(loc, bytes, items);
+        let ce = engine.est_copy_engine_ns(loc, bytes);
+        let want = if ls <= ce { Route::LoadStore } else { Route::CopyEngine };
+        assert_eq!(plan.route, want, "{loc:?}/{bytes}B/{items}wi");
+    }
+}
+
+#[test]
+fn prop_adaptive_converges_to_tuned_after_warmup() {
+    // The adaptive cutover is seeded by the Tuned model and refined by
+    // EMAs of observed costs. In the simulator observations *are* the
+    // modeled costs, so after a warm-up sweep the adaptive decisions must
+    // match Tuned on ≥ 90% of probe points (acceptance bar; exact match
+    // expected) — for any EMA weight.
+    prop_check("adaptive converges to tuned", 8, |rng| {
+        let cost = CostModel::new(Topology::default(), CostParams::default());
+        let tuned = XferEngine::new(
+            cost.clone(),
+            CutoverConfig::tuned(),
+            true,
+            Metrics::new(),
+        );
+        let mut acfg = CutoverConfig::adaptive();
+        acfg.ema_alpha = 0.05 + 0.95 * rng.f64();
+        let metrics = Metrics::new();
+        let adaptive = XferEngine::new(cost, acfg, true, metrics.clone());
+
+        let grid = planner_probe_grid();
+        // Warm-up sweep: plan + feed back the observed (modeled) cost,
+        // several rounds so the EMA settles regardless of alpha.
+        for _ in 0..3 {
+            for &(loc, bytes, items) in &grid {
+                let plan = adaptive.plan_p2p(OpKind::Put, true, loc, bytes, items);
+                adaptive.record(&plan, plan.modeled_ns);
+            }
+        }
+        assert!(
+            metrics.snapshot().adaptive_updates > 0,
+            "warm-up produced no adaptive feedback"
+        );
+
+        let mut agree = 0usize;
+        for &(loc, bytes, items) in &grid {
+            let a = adaptive.plan_p2p(OpKind::Put, true, loc, bytes, items);
+            let t = tuned.plan_p2p(OpKind::Put, true, loc, bytes, items);
+            if a.route == t.route {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree * 10 >= grid.len() * 9,
+            "adaptive agrees with tuned on only {agree}/{} probe points",
+            grid.len()
+        );
+
+        // The learned crossover must exist and match the model's for a
+        // representative curve (Fig 5, single work-item, cross-GPU).
+        let learned = adaptive.learned_crossover_bytes(Locality::SameNode, 1);
+        let modeled = adaptive.model_crossover_bytes(Locality::SameNode, 1);
+        assert_eq!(learned, modeled, "learned crossover diverged from model");
     });
 }
 

@@ -124,11 +124,11 @@ fn ring_survives_full_backpressure() {
 fn proxy_shutdown_is_clean_under_load() {
     // Spin up a full machine, hammer proxied ops, and drop it — shutdown
     // must join the proxy without hanging or losing completions.
-    use rishmem::ishmem::{CutoverConfig, CutoverMode};
+    use rishmem::ishmem::CutoverConfig;
     use rishmem::IshmemConfig;
     for _ in 0..3 {
         let cfg = IshmemConfig {
-            cutover: CutoverConfig::mode(CutoverMode::Always),
+            cutover: CutoverConfig::always(),
             ..IshmemConfig::with_npes(4)
         };
         let ish = rishmem::Ishmem::new(cfg).unwrap();
