@@ -9,8 +9,16 @@ verify:
 # Paper-figure benches (plain binaries, no libtest harness).
 bench:
     cargo bench --bench fig5_cutover
+    cargo bench --bench fig_batch
     cargo bench --bench fig3_rma
     cargo bench --bench hot_path
+
+# CI smoke: the cutover + batched-submission benches on tiny sweeps
+# (RISHMEM_SMOKE shrinks the size/nelem grids), so the figure benches
+# and their embedded assertions can't bit-rot.
+bench-smoke:
+    RISHMEM_SMOKE=1 cargo bench --bench fig5_cutover
+    RISHMEM_SMOKE=1 cargo bench --bench fig_batch
 
 # Formatting gate (no writes).
 fmt-check:

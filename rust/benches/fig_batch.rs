@@ -1,0 +1,48 @@
+//! Bench: batched command-stream submission (one ring doorbell per
+//! plan-group) vs per-op submission. The acceptance bar: per-op proxy
+//! overhead for batched small puts must be at least 3× lower than
+//! per-op submission at batch depth ≥ 8.
+//! `cargo bench --bench fig_batch` (`RISHMEM_SMOKE=1` shrinks nothing —
+//! this bench is already tiny).
+
+use rishmem::bench::figures::fig_batch;
+
+fn main() {
+    let fig = fig_batch();
+    println!("{}", fig.render_ascii());
+
+    let overhead = fig
+        .series
+        .iter()
+        .find(|s| s.name == "per-op submission overhead")
+        .expect("overhead series");
+    let at = |d: f64| {
+        overhead
+            .points
+            .iter()
+            .find(|&&(x, _)| x == d)
+            .map(|&(_, y)| y)
+            .unwrap_or_else(|| panic!("no point at depth {d}"))
+    };
+
+    let per_op = at(1.0);
+    for depth in [8.0, 16.0, 32.0] {
+        let batched = at(depth);
+        println!(
+            "[fig_batch] depth {depth:>2}: {batched:8.1} ns/op vs per-op {per_op:8.1} ns/op \
+             ({:.1}x lower)",
+            per_op / batched
+        );
+        assert!(
+            batched * 3.0 <= per_op,
+            "depth {depth}: batched overhead {batched} ns/op not 3x below per-op {per_op} ns/op"
+        );
+    }
+    // Deeper batches must never cost more per op than shallower ones.
+    let mut prev = f64::INFINITY;
+    for &(x, y) in &overhead.points {
+        assert!(y <= prev * 1.001, "per-op overhead rose at depth {x}");
+        prev = y;
+    }
+    println!("[fig_batch] batched submission amortizes the ring doorbell as designed");
+}

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use crate::device::WorkGroup;
 use crate::ishmem::{CutoverConfig, Ishmem, IshmemConfig};
 use crate::ringbuf::{CompletionPool, Message, Ring, RingOp, COMPLETION_NONE};
-use crate::sim::Topology;
+use crate::sim::{Locality, Topology};
 
 use super::report::{Figure, Series};
 use super::timer::{measure, measure_fixed, measure_wall};
@@ -195,9 +195,74 @@ pub fn adaptive_cutover_report() -> String {
             }
         }
     });
-    let report = ish.xfer.adaptive_report();
+    let report = format!(
+        "{}\n{}",
+        ish.xfer.adaptive_report(),
+        ish.xfer.occupancy_crossover_report()
+    );
     ish.shutdown();
     report
+}
+
+/// Batched-submission figure: per-op submission overhead (everything the
+/// initiator pays on top of the engine transfer itself — staging, the
+/// descriptor write, the amortized doorbell and drain round trip) versus
+/// batch depth, for small copy-engine puts. One plan-group of `d` NBI
+/// puts is flushed by one `Batch` doorbell and drained by one `quiet`;
+/// depth 1 reproduces per-op submission. A second series reports ring
+/// messages per op (the doorbell amortization itself).
+pub fn fig_batch() -> Figure {
+    const PUT_BYTES: usize = 512;
+    let depths = [1usize, 2, 4, 8, 16, 32];
+    let mut fig = Figure::new(
+        "fig-batch",
+        "batched command streams: per-op submission overhead vs batch depth",
+        "batch depth",
+        "ns/op",
+    );
+    let mut overhead = Series::new("per-op submission overhead");
+    let mut msgs = Series::new("batch doorbells per op (x1000)");
+    for &d in &depths {
+        let cfg = IshmemConfig {
+            topology: Topology::new(1, 2, 2),
+            // Pin the engine route so the overhead comparison is
+            // apples-to-apples at every depth.
+            cutover: CutoverConfig::always(),
+            max_batch_depth: d,
+            ..Default::default()
+        };
+        let ish = Ishmem::new(cfg).expect("fig_batch machine");
+        let engine_est = ish.xfer.est_copy_engine_ns(Locality::SameNode, PUT_BYTES);
+        let trials = 5usize;
+        let warmup = 1usize;
+        let best_ns = ish.launch(move |ctx| {
+            let buf = ctx.calloc::<u8>(PUT_BYTES * 32);
+            ctx.barrier_all();
+            if ctx.pe() != 0 {
+                return None;
+            }
+            let data = vec![0x7Bu8; PUT_BYTES];
+            // One plan-group per trial: d small NBI puts + the quiet that
+            // drains the batch.
+            let m = measure_fixed(&ctx.clock, warmup, trials, || {
+                for i in 0..d {
+                    ctx.put_nbi(buf.slice(i * PUT_BYTES, PUT_BYTES), &data, 2);
+                }
+                ctx.quiet();
+            });
+            Some(m.best_ns)
+        });
+        let snap = ish.metrics.snapshot();
+        ish.shutdown();
+        let best = best_ns.into_iter().flatten().next().expect("pe0 measurement");
+        overhead.push(d as f64, (best - engine_est).max(0.0) / d as f64);
+        // Batch doorbells per op over the whole run (warmup + trials).
+        let ops = ((warmup + trials) * d) as f64;
+        msgs.push(d as f64, snap.xfer_batches as f64 / ops * 1000.0);
+    }
+    fig.series.push(overhead);
+    fig.series.push(msgs);
+    fig
 }
 
 /// Fig 5(b): same, reported as latency (µs).
@@ -552,7 +617,7 @@ pub fn ablate_sync() -> Figure {
     fig
 }
 
-/// All paper figures, in order.
+/// All paper figures, in order, plus the batched-submission figure.
 pub fn all_figures() -> Vec<Figure> {
     let mut v = vec![fig3a(), fig3b(), fig4a(), fig4b(), fig5a(), fig5b(), fig5_adaptive()];
     for npes in [4, 8, 12] {
@@ -561,5 +626,6 @@ pub fn all_figures() -> Vec<Figure> {
     v.push(fig7a());
     v.push(fig7b());
     v.push(ring_figure());
+    v.push(fig_batch());
     v
 }

@@ -17,12 +17,22 @@ pub mod zepeer;
 pub use report::{Figure, Series};
 pub use timer::{measure, measure_fixed, measure_wall, Measurement};
 
-/// Message-size sweep used by the RMA figures: 8 B … 16 MB, powers of two.
-pub fn size_sweep() -> Vec<usize> {
-    (3..=24).map(|p| 1usize << p).collect()
+/// CI smoke mode (`RISHMEM_SMOKE=1`): shrink the sweeps so the bench
+/// binaries finish in seconds while still crossing every cutover point.
+pub fn smoke() -> bool {
+    std::env::var("RISHMEM_SMOKE").is_ok_and(|v| v != "0")
 }
 
-/// Element-count sweep used by the collective figures: 1 … 256 Ki f32.
+/// Message-size sweep used by the RMA figures: 8 B … 16 MB, powers of two
+/// (8 B … 1 MB under `RISHMEM_SMOKE`).
+pub fn size_sweep() -> Vec<usize> {
+    let max_pow = if smoke() { 20 } else { 24 };
+    (3..=max_pow).map(|p| 1usize << p).collect()
+}
+
+/// Element-count sweep used by the collective figures: 1 … 256 Ki f32
+/// (… 16 Ki under `RISHMEM_SMOKE`).
 pub fn nelem_sweep() -> Vec<usize> {
-    (0..=18).map(|p| 1usize << p).collect()
+    let max_pow = if smoke() { 14 } else { 18 };
+    (0..=max_pow).map(|p| 1usize << p).collect()
 }

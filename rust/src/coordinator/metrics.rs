@@ -6,6 +6,35 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::sim::topology::Locality;
+
+/// Data-path index into the per-(path, locality) byte table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PathIdx {
+    LoadStore = 0,
+    CopyEngine = 1,
+    Nic = 2,
+}
+
+/// Proxy service-time op families (per-op service histograms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceOp {
+    Put = 0,
+    Get = 1,
+    Amo = 2,
+    Other = 3,
+}
+
+/// Batch-depth histogram buckets: depth 1, 2, 3–4, 5–8, 9–16, ≥17.
+pub const BATCH_DEPTH_BUCKETS: usize = 6;
+/// Proxy service-time histogram: log2-ns buckets, 2^4 ns … ≥2^19 ns.
+pub const SERVICE_NS_BUCKETS: usize = 16;
+const SERVICE_NS_SHIFT: u32 = 4;
+/// Number of op families tracked by the proxy service metrics.
+pub const SERVICE_OPS: usize = 4;
+/// Number of locality classes (mirrors `sim::topology::Locality`).
+pub const LOCALITIES: usize = 4;
+
 #[derive(Debug, Default)]
 pub struct Metrics {
     // Op counts by API family.
@@ -17,6 +46,9 @@ pub struct Metrics {
     pub bytes_loadstore: AtomicU64,
     pub bytes_copy_engine: AtomicU64,
     pub bytes_nic: AtomicU64,
+    // Bytes by (data path, locality): the per-locality breakdown of the
+    // three counters above, filled by the same call sites.
+    pub bytes_by_path_loc: [[AtomicU64; LOCALITIES]; 3],
     // Transfer-plan engine: route decisions by executor, and online
     // adaptive-table refinements (adaptive-cutover feedback).
     pub xfer_plans_loadstore: AtomicU64,
@@ -26,11 +58,39 @@ pub struct Metrics {
     // Reverse-offload ring.
     pub ring_messages: AtomicU64,
     pub ring_completions: AtomicU64,
+    // Batched command streams: one `RingOp::Batch` doorbell per
+    // plan-group; depth distribution of the serviced batches.
+    pub xfer_batches: AtomicU64,
+    pub xfer_batch_entries: AtomicU64,
+    pub xfer_batch_depth_hist: [AtomicU64; BATCH_DEPTH_BUCKETS],
+    // Proxy-side service time (wall clock) per op family: sums + counts
+    // for averages, log2-ns histograms for the shape.
+    pub proxy_service_ns: [AtomicU64; SERVICE_OPS],
+    pub proxy_service_ops: [AtomicU64; SERVICE_OPS],
+    pub proxy_service_hist: [[AtomicU64; SERVICE_NS_BUCKETS]; SERVICE_OPS],
     // XLA kernel invocations (reduce path).
     pub xla_reduce_calls: AtomicU64,
     pub xla_reduce_elems: AtomicU64,
     // Native (non-kernel) reduce fallbacks.
     pub native_reduce_elems: AtomicU64,
+}
+
+/// Bucket index for a serviced batch of `depth` entries.
+pub fn batch_depth_bucket(depth: usize) -> usize {
+    match depth {
+        0 | 1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        _ => 5,
+    }
+}
+
+/// Log2 bucket index for a service time of `ns` nanoseconds.
+pub fn service_ns_bucket(ns: u64) -> usize {
+    let log2 = 64 - u64::leading_zeros(ns.max(1)) as u32 - 1;
+    (log2.saturating_sub(SERVICE_NS_SHIFT) as usize).min(SERVICE_NS_BUCKETS - 1)
 }
 
 impl Metrics {
@@ -43,24 +103,66 @@ impl Metrics {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Count `bytes` on a data path *and* its locality row.
+    pub fn add_path_bytes(&self, path: PathIdx, loc: Locality, bytes: u64) {
+        let total = match path {
+            PathIdx::LoadStore => &self.bytes_loadstore,
+            PathIdx::CopyEngine => &self.bytes_copy_engine,
+            PathIdx::Nic => &self.bytes_nic,
+        };
+        Self::add(total, bytes);
+        Self::add(&self.bytes_by_path_loc[path as usize][loc as usize], bytes);
+    }
+
+    /// Record one serviced batch of `entries` descriptors.
+    pub fn add_batch(&self, entries: usize) {
+        Self::add(&self.xfer_batches, 1);
+        Self::add(&self.xfer_batch_entries, entries as u64);
+        Self::add(&self.xfer_batch_depth_hist[batch_depth_bucket(entries)], 1);
+    }
+
+    /// Record one proxy service of `op` taking `ns` wall-clock nanoseconds.
+    pub fn add_service(&self, op: ServiceOp, ns: u64) {
+        let i = op as usize;
+        Self::add(&self.proxy_service_ns[i], ns);
+        Self::add(&self.proxy_service_ops[i], 1);
+        Self::add(&self.proxy_service_hist[i][service_ns_bucket(ns)], 1);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
+        fn load(c: &AtomicU64) -> u64 {
+            c.load(Ordering::Relaxed)
+        }
         MetricsSnapshot {
-            puts: self.puts.load(Ordering::Relaxed),
-            gets: self.gets.load(Ordering::Relaxed),
-            amos: self.amos.load(Ordering::Relaxed),
-            collectives: self.collectives.load(Ordering::Relaxed),
-            bytes_loadstore: self.bytes_loadstore.load(Ordering::Relaxed),
-            bytes_copy_engine: self.bytes_copy_engine.load(Ordering::Relaxed),
-            bytes_nic: self.bytes_nic.load(Ordering::Relaxed),
-            xfer_plans_loadstore: self.xfer_plans_loadstore.load(Ordering::Relaxed),
-            xfer_plans_copy_engine: self.xfer_plans_copy_engine.load(Ordering::Relaxed),
-            xfer_plans_nic: self.xfer_plans_nic.load(Ordering::Relaxed),
-            adaptive_updates: self.adaptive_updates.load(Ordering::Relaxed),
-            ring_messages: self.ring_messages.load(Ordering::Relaxed),
-            ring_completions: self.ring_completions.load(Ordering::Relaxed),
-            xla_reduce_calls: self.xla_reduce_calls.load(Ordering::Relaxed),
-            xla_reduce_elems: self.xla_reduce_elems.load(Ordering::Relaxed),
-            native_reduce_elems: self.native_reduce_elems.load(Ordering::Relaxed),
+            puts: load(&self.puts),
+            gets: load(&self.gets),
+            amos: load(&self.amos),
+            collectives: load(&self.collectives),
+            bytes_loadstore: load(&self.bytes_loadstore),
+            bytes_copy_engine: load(&self.bytes_copy_engine),
+            bytes_nic: load(&self.bytes_nic),
+            bytes_by_path_loc: std::array::from_fn(|p| {
+                std::array::from_fn(|l| load(&self.bytes_by_path_loc[p][l]))
+            }),
+            xfer_plans_loadstore: load(&self.xfer_plans_loadstore),
+            xfer_plans_copy_engine: load(&self.xfer_plans_copy_engine),
+            xfer_plans_nic: load(&self.xfer_plans_nic),
+            adaptive_updates: load(&self.adaptive_updates),
+            ring_messages: load(&self.ring_messages),
+            ring_completions: load(&self.ring_completions),
+            xfer_batches: load(&self.xfer_batches),
+            xfer_batch_entries: load(&self.xfer_batch_entries),
+            xfer_batch_depth_hist: std::array::from_fn(|i| {
+                load(&self.xfer_batch_depth_hist[i])
+            }),
+            proxy_service_ns: std::array::from_fn(|i| load(&self.proxy_service_ns[i])),
+            proxy_service_ops: std::array::from_fn(|i| load(&self.proxy_service_ops[i])),
+            proxy_service_hist: std::array::from_fn(|o| {
+                std::array::from_fn(|b| load(&self.proxy_service_hist[o][b]))
+            }),
+            xla_reduce_calls: load(&self.xla_reduce_calls),
+            xla_reduce_elems: load(&self.xla_reduce_elems),
+            native_reduce_elems: load(&self.native_reduce_elems),
         }
     }
 }
@@ -74,12 +176,19 @@ pub struct MetricsSnapshot {
     pub bytes_loadstore: u64,
     pub bytes_copy_engine: u64,
     pub bytes_nic: u64,
+    pub bytes_by_path_loc: [[u64; LOCALITIES]; 3],
     pub xfer_plans_loadstore: u64,
     pub xfer_plans_copy_engine: u64,
     pub xfer_plans_nic: u64,
     pub adaptive_updates: u64,
     pub ring_messages: u64,
     pub ring_completions: u64,
+    pub xfer_batches: u64,
+    pub xfer_batch_entries: u64,
+    pub xfer_batch_depth_hist: [u64; BATCH_DEPTH_BUCKETS],
+    pub proxy_service_ns: [u64; SERVICE_OPS],
+    pub proxy_service_ops: [u64; SERVICE_OPS],
+    pub proxy_service_hist: [[u64; SERVICE_NS_BUCKETS]; SERVICE_OPS],
     pub xla_reduce_calls: u64,
     pub xla_reduce_elems: u64,
     pub native_reduce_elems: u64,
@@ -94,12 +203,54 @@ impl MetricsSnapshot {
         self.xfer_plans_loadstore + self.xfer_plans_copy_engine + self.xfer_plans_nic
     }
 
+    /// Bytes moved on `path` to `loc`-distant targets.
+    pub fn path_loc_bytes(&self, path: PathIdx, loc: Locality) -> u64 {
+        self.bytes_by_path_loc[path as usize][loc as usize]
+    }
+
+    /// Per-locality total for `path` (sum over localities — equals the
+    /// flat per-path counter when every call site reports its locality).
+    pub fn path_bytes_sum(&self, path: PathIdx) -> u64 {
+        self.bytes_by_path_loc[path as usize].iter().sum()
+    }
+
+    /// Mean serviced batch depth (0 when no batch was serviced).
+    pub fn mean_batch_depth(&self) -> f64 {
+        if self.xfer_batches == 0 {
+            0.0
+        } else {
+            self.xfer_batch_entries as f64 / self.xfer_batches as f64
+        }
+    }
+
+    /// Mean proxy service time for `op`, ns (0 when none serviced).
+    pub fn mean_service_ns(&self, op: ServiceOp) -> f64 {
+        let i = op as usize;
+        if self.proxy_service_ops[i] == 0 {
+            0.0
+        } else {
+            self.proxy_service_ns[i] as f64 / self.proxy_service_ops[i] as f64
+        }
+    }
+
     pub fn report(&self) -> String {
+        let loc_row = |p: PathIdx| {
+            let r = &self.bytes_by_path_loc[p as usize];
+            format!(
+                "tile={} gpu={} node={} remote={}",
+                crate::util::fmt_bytes(r[0] as usize),
+                crate::util::fmt_bytes(r[1] as usize),
+                crate::util::fmt_bytes(r[2] as usize),
+                crate::util::fmt_bytes(r[3] as usize),
+            )
+        };
         format!(
             "ops: put={} get={} amo={} coll={}\n\
              bytes: load/store={} copy-engine={} nic={}\n\
+             bytes by locality: load/store [{}] | copy-engine [{}] | nic [{}]\n\
              plans: load/store={} copy-engine={} nic={} adaptive-updates={}\n\
-             ring: msgs={} completions={}\n\
+             ring: msgs={} completions={} batches={} batch-entries={} mean-depth={:.2}\n\
+             proxy service ns (mean): put={:.0} get={:.0} amo={:.0} other={:.0}\n\
              reduce: xla-calls={} xla-elems={} native-elems={}",
             self.puts,
             self.gets,
@@ -108,12 +259,22 @@ impl MetricsSnapshot {
             crate::util::fmt_bytes(self.bytes_loadstore as usize),
             crate::util::fmt_bytes(self.bytes_copy_engine as usize),
             crate::util::fmt_bytes(self.bytes_nic as usize),
+            loc_row(PathIdx::LoadStore),
+            loc_row(PathIdx::CopyEngine),
+            loc_row(PathIdx::Nic),
             self.xfer_plans_loadstore,
             self.xfer_plans_copy_engine,
             self.xfer_plans_nic,
             self.adaptive_updates,
             self.ring_messages,
             self.ring_completions,
+            self.xfer_batches,
+            self.xfer_batch_entries,
+            self.mean_batch_depth(),
+            self.mean_service_ns(ServiceOp::Put),
+            self.mean_service_ns(ServiceOp::Get),
+            self.mean_service_ns(ServiceOp::Amo),
+            self.mean_service_ns(ServiceOp::Other),
             self.xla_reduce_calls,
             self.xla_reduce_elems,
             self.native_reduce_elems,
@@ -147,5 +308,59 @@ mod tests {
         assert_eq!(s.total_xfer_plans(), 7);
         assert_eq!(s.adaptive_updates, 5);
         assert!(s.report().contains("adaptive-updates=5"));
+    }
+
+    #[test]
+    fn path_loc_bytes_split_and_sum() {
+        let m = Metrics::new();
+        m.add_path_bytes(PathIdx::CopyEngine, Locality::SameNode, 1000);
+        m.add_path_bytes(PathIdx::CopyEngine, Locality::SameGpu, 24);
+        m.add_path_bytes(PathIdx::Nic, Locality::Remote, 512);
+        let s = m.snapshot();
+        assert_eq!(s.bytes_copy_engine, 1024);
+        assert_eq!(s.path_loc_bytes(PathIdx::CopyEngine, Locality::SameNode), 1000);
+        assert_eq!(s.path_bytes_sum(PathIdx::CopyEngine), 1024);
+        assert_eq!(s.path_loc_bytes(PathIdx::Nic, Locality::Remote), 512);
+        assert_eq!(s.path_bytes_sum(PathIdx::LoadStore), 0);
+    }
+
+    #[test]
+    fn batch_depth_histogram_buckets() {
+        assert_eq!(batch_depth_bucket(1), 0);
+        assert_eq!(batch_depth_bucket(2), 1);
+        assert_eq!(batch_depth_bucket(4), 2);
+        assert_eq!(batch_depth_bucket(8), 3);
+        assert_eq!(batch_depth_bucket(16), 4);
+        assert_eq!(batch_depth_bucket(100), 5);
+        let m = Metrics::new();
+        m.add_batch(1);
+        m.add_batch(8);
+        m.add_batch(8);
+        let s = m.snapshot();
+        assert_eq!(s.xfer_batches, 3);
+        assert_eq!(s.xfer_batch_entries, 17);
+        assert_eq!(s.xfer_batch_depth_hist[0], 1);
+        assert_eq!(s.xfer_batch_depth_hist[3], 2);
+        assert_eq!(s.xfer_batch_depth_hist.iter().sum::<u64>(), s.xfer_batches);
+        assert!((s.mean_batch_depth() - 17.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn service_time_histogram() {
+        assert_eq!(service_ns_bucket(0), 0);
+        assert_eq!(service_ns_bucket(16), 0);
+        assert_eq!(service_ns_bucket(32), 1);
+        assert_eq!(service_ns_bucket(u64::MAX), SERVICE_NS_BUCKETS - 1);
+        let m = Metrics::new();
+        m.add_service(ServiceOp::Put, 100);
+        m.add_service(ServiceOp::Put, 300);
+        m.add_service(ServiceOp::Amo, 50);
+        let s = m.snapshot();
+        assert_eq!(s.proxy_service_ops[ServiceOp::Put as usize], 2);
+        assert_eq!(s.proxy_service_ns[ServiceOp::Put as usize], 400);
+        assert_eq!(s.mean_service_ns(ServiceOp::Put), 200.0);
+        assert_eq!(s.mean_service_ns(ServiceOp::Get), 0.0);
+        let hist_total: u64 = s.proxy_service_hist.iter().flatten().sum();
+        assert_eq!(hist_total, 3);
     }
 }

@@ -27,7 +27,7 @@
 
 use std::sync::atomic::Ordering;
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, PathIdx};
 use crate::device::{collaborative_copy, WorkGroup};
 use crate::sim::topology::Locality;
 use crate::sim::SimClock;
@@ -132,7 +132,9 @@ impl PeCtx {
                 .transport
                 .put(self.pe(), src_off, peer, dst_off, len, &dummy)
                 .expect("collective push");
-            Metrics::add(&self.rt.metrics.bytes_nic, len as u64);
+            self.rt
+                .metrics
+                .add_path_bytes(PathIdx::Nic, Locality::Remote, len as u64);
         }
     }
 
@@ -186,24 +188,57 @@ impl PeCtx {
         let shape = self.fanout_shape(peers, bytes);
         let plan = self.rt.xfer.plan_fanout(&shape, bytes, items);
         let wg = WorkGroup::new(items.max(1).min(WorkGroup::MAX_SIZE));
-        for &peer in peers {
-            self.push_block(peer, src_off, dst_off, bytes, &wg);
-        }
-        self.clock.advance(plan.modeled_ns);
-        self.rt.xfer.record(&plan, plan.modeled_ns);
-        let local_bytes = (bytes * peers.len()).saturating_sub(shape.nic_bytes) as u64;
         match plan.route {
             Route::LoadStore => {
-                Metrics::add(&self.rt.metrics.bytes_loadstore, local_bytes);
-                Path::LoadStore
+                for &peer in peers {
+                    if self.ipc.lookup(peer).is_some() {
+                        self.rt.metrics.add_path_bytes(
+                            PathIdx::LoadStore,
+                            self.loc_of(peer),
+                            bytes as u64,
+                        );
+                    }
+                    // Reachable: collaborative work-item stores;
+                    // unreachable: OFI (counted inside push_block).
+                    self.push_block(peer, src_off, dst_off, bytes, &wg);
+                }
             }
             Route::CopyEngine => {
-                Metrics::add(&self.rt.metrics.bytes_copy_engine, local_bytes);
-                Path::CopyEngine
+                // One batched doorbell for the whole plan-group: every
+                // reachable peer becomes a heap-offset Put descriptor
+                // (source is my user heap — no staging copy needed) that
+                // the proxy runs on a real `DeviceAddr` command list;
+                // the blocking flush returns once all entries executed,
+                // so the usual fan-out → team_sync ordering holds.
+                let std_cl = !self.rt.xfer.cl_immediate_for(bytes);
+                for &peer in peers {
+                    if self.ipc.lookup(peer).is_some() {
+                        let desc = crate::ringbuf::BatchDescriptor::put(
+                            peer, dst_off, src_off, bytes,
+                        )
+                        .with_standard_cl(std_cl);
+                        self.stream_append(desc, 0);
+                        self.rt.metrics.add_path_bytes(
+                            PathIdx::CopyEngine,
+                            self.loc_of(peer),
+                            bytes as u64,
+                        );
+                    } else {
+                        self.push_block(peer, src_off, dst_off, bytes, &wg);
+                    }
+                }
+                self.stream_flush_blocking();
             }
             // push_block already routes unreachable members over OFI and
             // counts their bytes_nic; the fan-out itself never plans Nic.
             Route::Nic => unreachable!("plan_fanout only routes LoadStore/CopyEngine"),
+        }
+        self.clock.advance(plan.modeled_ns);
+        self.rt.xfer.record(&plan, plan.modeled_ns);
+        match plan.route {
+            Route::LoadStore => Path::LoadStore,
+            Route::CopyEngine => Path::CopyEngine,
+            Route::Nic => unreachable!(),
         }
     }
 
@@ -328,13 +363,17 @@ impl PeCtx {
                 e.1 += bytes;
                 e.2 += 1;
                 doorbells += 1;
-                Metrics::add(&self.rt.metrics.bytes_copy_engine, bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::CopyEngine, loc, bytes as u64);
             } else {
                 self.rt
                     .transport
                     .put(self.pe(), src.byte_offset(), peer, dst_off, bytes, &self.clock)
                     .expect("host_fcollect transport");
-                Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::Nic, Locality::Remote, bytes as u64);
             }
         }
         let ce = &self.rt.cost.params.ce;
@@ -468,22 +507,26 @@ impl PeCtx {
         Metrics::add(&self.rt.metrics.collectives, 1);
 
         let wg = WorkGroup::new(1);
-        let mut store_bytes = 0u64;
         for (j, peer) in spec.members().enumerate() {
             let s_off = src.byte_offset() + j * bytes;
             let d_off = dest.byte_offset() + my_rank * bytes;
             if peer == self.pe() {
                 self.rt.heaps.copy(self.pe(), s_off, self.pe(), d_off, bytes);
             } else {
+                if self.ipc.lookup(peer).is_some() {
+                    self.rt.metrics.add_path_bytes(
+                        PathIdx::LoadStore,
+                        self.loc_of(peer),
+                        bytes as u64,
+                    );
+                }
                 self.push_block(peer, s_off, d_off, bytes, &wg);
-                store_bytes += bytes as u64;
             }
         }
         let peers: Vec<usize> = spec.members().filter(|&p| p != self.pe()).collect();
         let shape = self.fanout_shape(&peers, bytes);
         self.clock
             .advance(self.rt.xfer.fanout_store_ns(&shape, 1));
-        Metrics::add(&self.rt.metrics.bytes_loadstore, store_bytes);
         self.team_sync(team);
     }
 

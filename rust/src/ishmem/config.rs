@@ -19,7 +19,21 @@ pub struct IshmemConfig {
     /// Completion pool per node.
     pub completion_slots: usize,
     /// Use immediate command lists in the proxy (paper §III-C low-latency).
+    /// Acts as the enable bit for the per-op CL policy below; false forces
+    /// standard lists everywhere (the ablation knob).
     pub use_immediate_cl: bool,
+    /// Per-op command-list policy boundary (§III-C): batched descriptors
+    /// at or below this size run on immediate command lists, larger ones
+    /// on standard lists (append → close → execute).
+    pub cl_immediate_max_bytes: usize,
+    /// Staging slab carved from the top of each PE's device heap: holds
+    /// batched payloads (raw-pointer transfers become heap-offset
+    /// transfers) and batch descriptor blocks. Payloads that cannot fit
+    /// fall back to the one-message-per-op raw-pointer path.
+    pub staging_slab_bytes: usize,
+    /// Maximum descriptors per batched ring message (one `Batch` doorbell
+    /// per plan-group); 1 reproduces per-op submission.
+    pub max_batch_depth: usize,
     /// Strict FI_HMEM: inter-node traffic to unregistered heaps errors out
     /// instead of bouncing (failure injection).
     pub strict_hmem: bool,
@@ -40,6 +54,9 @@ impl Default for IshmemConfig {
             ring_capacity: 4096,
             completion_slots: 1024,
             use_immediate_cl: true,
+            cl_immediate_max_bytes: 64 << 10,
+            staging_slab_bytes: 2 << 20,
+            max_batch_depth: 16,
             strict_hmem: false,
             xla_reduce_min_elems: 1024,
         }
@@ -62,9 +79,17 @@ impl IshmemConfig {
 
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.ring_capacity.is_power_of_two(), "ring capacity must be 2^k");
-        anyhow::ensure!(self.heap_bytes >= super::heap::RESERVED_BYTES * 2,
-            "heap too small for internal sync region");
+        anyhow::ensure!(
+            self.heap_bytes >= super::heap::RESERVED_BYTES * 2 + self.staging_slab_bytes,
+            "heap too small for internal sync region + staging slab"
+        );
         anyhow::ensure!(self.completion_slots > 0, "need completion slots");
+        anyhow::ensure!(self.max_batch_depth >= 1, "batch depth must be at least 1");
+        anyhow::ensure!(
+            self.staging_slab_bytes
+                >= (self.max_batch_depth + 1) * crate::ringbuf::DESC_SIZE + 1024,
+            "staging slab too small for one full descriptor block"
+        );
         anyhow::ensure!(
             self.cutover.ema_alpha > 0.0 && self.cutover.ema_alpha <= 1.0,
             "cutover.ema_alpha must be in (0, 1]"
@@ -86,5 +111,18 @@ mod tests {
     fn bad_ring_capacity_rejected() {
         let cfg = IshmemConfig { ring_capacity: 1000, ..Default::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn batch_knobs_validated() {
+        let cfg = IshmemConfig { max_batch_depth: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = IshmemConfig { staging_slab_bytes: 64, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        // A slab that eats the whole heap leaves no room for user data.
+        let cfg = IshmemConfig { staging_slab_bytes: 8 << 20, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = IshmemConfig { max_batch_depth: 1, ..Default::default() };
+        assert!(cfg.validate().is_ok());
     }
 }

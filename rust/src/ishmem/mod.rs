@@ -57,10 +57,10 @@ use crate::coordinator::metrics::Metrics;
 use crate::ringbuf::{CompletionPool, Message, Ring, RingOp};
 use crate::runtime::XlaRuntime;
 use crate::sim::{CostModel, HeapRegistry, SimClock, Topology};
-use crate::sos::heap::{ExternalHeapKind, SosHeaps, ThreadLevel};
+use crate::sos::heap::{ExternalHeapKind, SosHeaps, StagingSlab, ThreadLevel};
 use crate::sos::pmi::PmiWorld;
 use crate::sos::transport::OfiTransport;
-use crate::xfer::{CompletionTracker, XferEngine};
+use crate::xfer::{CmdStream, CompletionTracker, XferEngine};
 use crate::ze::{IpcTable, ZeDriver};
 
 /// Job-wide runtime state (one per "machine").
@@ -127,12 +127,16 @@ impl Ishmem {
             completions.push(pool);
         }
 
-        let xfer = XferEngine::new(
+        let mut xfer = XferEngine::new(
             cost.clone(),
             config.cutover.clone(),
             config.use_immediate_cl,
             metrics.clone(),
         );
+        // Per-op command-list policy (§III-C): descriptors above this size
+        // ask the proxy for standard lists; the planner's estimates use
+        // the same boundary so decisions and charges agree.
+        xfer.cl_immediate_max_bytes = config.cl_immediate_max_bytes;
 
         Ok(Arc::new(Ishmem {
             pmi: PmiWorld::new(npes),
@@ -198,6 +202,12 @@ impl Ishmem {
                 handles.push(s.spawn(move || {
                     let mut ctx = me.make_ctx(pe);
                     let r = fref(&mut ctx);
+                    // Retire any batches the closure left pending or in
+                    // flight and return any reserved engine-queue backlog:
+                    // completion slots, slab claims and backlog live in
+                    // shared machine state and must not leak into the
+                    // next launch once this PE's context is dropped.
+                    ctx.drain_outstanding();
                     *slot.lock().unwrap() = Some(r);
                 }));
             }
@@ -226,14 +236,19 @@ impl Ishmem {
         self.transport.register_heap(pe);
 
         let ipc = IpcTable::build(pe, self.topo(), self.config.heap_bytes);
+        // The top `staging_slab_bytes` of the heap belong to the batched
+        // submission path; user allocations stop below the slab.
+        let user_heap_bytes = self.config.heap_bytes - self.config.staging_slab_bytes;
         PeCtx {
             pe,
             rt: Arc::clone(self),
             clock: SimClock::new(),
             ipc,
-            alloc: RefCell::new(SymAllocator::new(self.config.heap_bytes)),
+            alloc: RefCell::new(SymAllocator::new(user_heap_bytes)),
             team_rounds: RefCell::new(vec![0u64; heap::MAX_TEAMS]),
             track: CompletionTracker::new(),
+            slab: StagingSlab::new(user_heap_bytes, self.config.staging_slab_bytes),
+            stream: CmdStream::new(self.config.max_batch_depth),
             team_seq: RefCell::new(HashMap::new()),
             sos: RefCell::new(sos),
         }
@@ -272,8 +287,15 @@ pub struct PeCtx {
     /// Per-team sync round counters (push-barrier generations).
     pub(crate) team_rounds: RefCell<Vec<u64>>,
     /// Unified blocking/NBI completion state (xfer "complete" stage):
-    /// modeled nbi horizon + outstanding fire-and-forget proxy posts.
+    /// modeled nbi horizon + outstanding fire-and-forget proxy posts +
+    /// reserved engine-queue backlog bytes.
     pub(crate) track: CompletionTracker,
+    /// Staging slab: the runtime-owned top of this PE's device heap,
+    /// holding batched payloads and descriptor blocks (`xfer::stream`).
+    pub(crate) slab: StagingSlab,
+    /// The per-initiator batched command stream: one `RingOp::Batch`
+    /// doorbell per plan-group instead of one message per op.
+    pub(crate) stream: CmdStream,
     /// Per-parent team-creation sequence numbers (mirrored across PEs).
     pub(crate) team_seq: RefCell<HashMap<usize, usize>>,
     #[allow(dead_code)] // held for the lifetime contract (finalize order)

@@ -1,13 +1,14 @@
 //! Memory ordering: `ishmem_fence` / `ishmem_quiet` (OpenSHMEM §9.11).
 //!
-//! Our data movement is eager (see rma.rs), so the *correctness* side of
-//! fence/quiet is trivially satisfied; what these calls do is (a) collapse
-//! the modeled nbi completion horizon into the PE timeline, and (b) flush
-//! the proxy pipeline when proxied fire-and-forget messages (scalar p,
-//! non-fetching AMOs to remote PEs) may still be in flight. Both pieces of
-//! outstanding state live in the xfer completion tracker
-//! ([`crate::xfer::track::CompletionTracker`]) — the "complete" stage of
-//! the unified plan→execute→complete flow.
+//! Batched submission makes ordering real work: proxied entries sit in
+//! the pending command stream (and in in-flight batches) until a flush,
+//! so `fence`/`quiet` must push the stream out and retire it. On top of
+//! that, `quiet` (a) collapses the modeled nbi completion horizon into
+//! the PE timeline, (b) releases this PE's reserved engine-queue backlog,
+//! and (c) flushes the proxy pipeline when fire-and-forget messages
+//! (scalar `p`, non-fetching remote AMOs) may still be in flight. The
+//! outstanding state lives in the xfer completion tracker and the
+//! command stream ([`crate::xfer::track`], [`crate::xfer::stream`]).
 
 use crate::ringbuf::{Message, RingOp};
 use crate::xfer::exec::PROXY_OK;
@@ -16,21 +17,36 @@ use super::PeCtx;
 
 impl PeCtx {
     /// `ishmem_fence` — order prior puts before later puts (per-PE).
-    /// Eager movement already provides this; charge the instruction cost.
+    /// Pending batched entries must be delivered before any later direct
+    /// store can overtake them: drain the command stream, then charge the
+    /// fence instruction.
     pub fn fence(&self) {
+        if self.stream_quiet_drain() {
+            self.clock.advance(self.rt.cost.ring_rtt_ns());
+        }
         self.clock.advance(20.0);
     }
 
     /// `ishmem_quiet` — complete all outstanding operations by this PE.
     pub fn quiet(&self) {
-        // (a) modeled nbi horizon.
+        // (a) push out the pending plan-group, retire every batch in
+        // flight (wall-clock wait on the batch completions; slab claims
+        // return to the arena), and release this PE's reserved
+        // engine-queue backlog.
+        let drained_batches = self.drain_outstanding();
+
+        // (b) modeled nbi horizon.
         let horizon = self.track.take_horizon_ns();
         let now = self.clock.now_ns();
         if horizon > now {
             self.clock.advance(horizon - now);
         }
+        // One round trip proves the drained batches were serviced.
+        if drained_batches {
+            self.clock.advance(self.rt.cost.ring_rtt_ns());
+        }
 
-        // (b) drain the proxy: one Quiet round trip if anything was posted
+        // (c) drain the proxy: one Quiet round trip if anything was posted
         // fire-and-forget since the last quiet. The ring is FIFO per
         // consumer, so one completed Quiet proves all earlier messages of
         // this PE were serviced.

@@ -6,15 +6,28 @@
 //! for AMOs — and posts replies into the completion pool. A single
 //! host thread sustains the whole node (the paper: >20 M req/s with one
 //! CPU-side thread), so correctness never depends on proxy parallelism.
+//!
+//! `RingOp::Batch` is the batched-submission doorbell: the proxy reads a
+//! descriptor block out of the initiator's staging slab and dispatches
+//! each entry under its own command-list policy (§III-C) — immediate
+//! lists for latency-critical entries, and one *staged standard command
+//! list per batch* (append → close → execute) for the rest. Because
+//! batched payloads are staged into the symmetric heap, every batched
+//! entry is heap-offset shaped and runs on real `DeviceAddr` command
+//! lists; the raw-pointer staging branch below survives only for
+//! oversized fallback messages.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use crate::coordinator::metrics::Metrics;
-use crate::ringbuf::{CompletionPool, Message, RingConsumer, RingOp, COMPLETION_NONE};
+use crate::coordinator::metrics::{Metrics, ServiceOp};
+use crate::ringbuf::{
+    BatchDescriptor, CompletionPool, Message, RingConsumer, RingOp, COMPLETION_NONE, DESC_SIZE,
+};
 use crate::sim::{HeapRegistry, SimClock};
 use crate::sos::transport::OfiTransport;
 use crate::xfer::exec::{FLAG_RAW_PTR, PROXY_ERR_UNREGISTERED, PROXY_OK};
-use crate::ze::cmdlist::{CommandQueue, DeviceAddr};
+use crate::ze::cmdlist::{CommandList, CommandQueue, DeviceAddr};
 use crate::ze::ZeDriver;
 
 use super::amo::atomic_rmw_bits;
@@ -28,16 +41,24 @@ pub(crate) struct ProxyShared {
     pub metrics: Arc<Metrics>,
     /// §III-C: immediate command lists (low-latency append-executes) vs
     /// standard lists (batched append → close → execute on a queue).
+    /// Batched descriptors carry their own per-op choice; this global
+    /// knob governs the raw-pointer fallback path and acts as the enable
+    /// bit for immediate lists.
     pub use_immediate_cl: bool,
 }
 
-/// Dispatch one intra-node engine copy on the configured command-list
-/// flavour (the `use_immediate_cl` knob, paper §III-C). Serves
-/// heap-offset (non-raw) Put/Get messages; today every device-initiated
-/// RMA ships the raw-pointer shape instead (see `xfer::exec`), which
-/// takes the staged-write branch + `raw_engine_charge` below.
-fn engine_copy(sh: &ProxyShared, src_pe: usize, dst: DeviceAddr, src: DeviceAddr, len: usize, clock: &SimClock) {
-    if sh.use_immediate_cl {
+/// Dispatch one intra-node engine copy on the requested command-list
+/// flavour (per-op CL policy, paper §III-C).
+fn engine_copy(
+    sh: &ProxyShared,
+    src_pe: usize,
+    dst: DeviceAddr,
+    src: DeviceAddr,
+    len: usize,
+    immediate: bool,
+    clock: &SimClock,
+) {
+    if immediate {
         let icl = sh.driver.create_immediate_command_list(src_pe);
         icl.append_memory_copy(dst, src, len, None, clock);
     } else {
@@ -77,6 +98,16 @@ pub(crate) fn spawn_proxy(
         .expect("spawn proxy")
 }
 
+/// Service-time family of a top-level ring op.
+fn service_family(op: RingOp) -> ServiceOp {
+    match op {
+        RingOp::Put | RingOp::PutInline | RingOp::PutSignal => ServiceOp::Put,
+        RingOp::Get => ServiceOp::Get,
+        RingOp::Amo => ServiceOp::Amo,
+        _ => ServiceOp::Other,
+    }
+}
+
 fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
     // Engine dispatches are timed on a proxy-local clock; the *initiator*
     // charges its own modeled wait (ring RTT + engine time), this clock
@@ -86,7 +117,14 @@ fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
         let msg = consumer.recv();
         match msg.ring_op() {
             Some(RingOp::Shutdown) => return,
-            Some(op) => service(op, &msg, sh, &proxy_clock),
+            // Batches record per-entry service times inside the arm.
+            Some(RingOp::Batch) => service_batch(&msg, sh, &proxy_clock),
+            Some(op) => {
+                let t0 = Instant::now();
+                service(op, &msg, sh, &proxy_clock);
+                sh.metrics
+                    .add_service(service_family(op), t0.elapsed().as_nanos() as u64);
+            }
             None => panic!("proxy received malformed message op={}", msg.op),
         }
     }
@@ -103,6 +141,122 @@ fn is_local(sh: &ProxyShared, a: usize, b: usize) -> bool {
     sh.driver.cost.topo.node_of(a) == sh.driver.cost.topo.node_of(b)
 }
 
+// --------------------------------------------------- batch service loop ---
+
+/// Service one `Batch` doorbell: decode the descriptor block from the
+/// initiator's staging slab and dispatch every entry. Standard-CL entries
+/// accumulate on one staged command list per batch, executed once after
+/// the scan (append → close → execute); immediate entries run inline.
+/// One completion retires the whole plan-group.
+fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
+    let src_pe = msg.src_pe as usize;
+    let n = msg.len as usize;
+    let mut block = vec![0u8; n * DESC_SIZE];
+    sh.heaps.heap(src_pe).read(msg.dst_off as usize, &mut block);
+    let descs = BatchDescriptor::decode_block(&block, n)
+        .unwrap_or_else(|| panic!("corrupt batch descriptor block from PE {src_pe}"));
+    sh.metrics.add_batch(n);
+
+    let mut status = PROXY_OK;
+    let mut staged_cl: Option<CommandList> = None;
+    for d in &descs {
+        let t0 = Instant::now();
+        let op = d.ring_op().expect("validated by decode_block");
+        if !dispatch_batch_entry(sh, src_pe, d, op, &mut staged_cl, proxy_clock) {
+            status = PROXY_ERR_UNREGISTERED;
+        }
+        sh.metrics
+            .add_service(service_family(op), t0.elapsed().as_nanos() as u64);
+    }
+    if let Some(mut cl) = staged_cl {
+        let t0 = Instant::now();
+        cl.close();
+        cl.execute(&CommandQueue::default(), proxy_clock);
+        sh.metrics
+            .add_service(ServiceOp::Other, t0.elapsed().as_nanos() as u64);
+    }
+    complete(sh, msg, status);
+}
+
+/// Dispatch one batch entry; returns false on a transport failure (the
+/// whole batch completes with an error status).
+fn dispatch_batch_entry(
+    sh: &ProxyShared,
+    src_pe: usize,
+    d: &BatchDescriptor,
+    op: RingOp,
+    staged_cl: &mut Option<CommandList>,
+    proxy_clock: &SimClock,
+) -> bool {
+    let pe = d.pe as usize;
+    let len = d.len as usize;
+    match op {
+        RingOp::Put => {
+            if is_local(sh, src_pe, pe) {
+                let dst = DeviceAddr { pe, offset: d.dst_off as usize };
+                let src = DeviceAddr { pe: src_pe, offset: d.src_off as usize };
+                if d.standard_cl() {
+                    staged_cl
+                        .get_or_insert_with(|| sh.driver.create_command_list(src_pe))
+                        .append_memory_copy(dst, src, len, None);
+                } else {
+                    engine_copy(sh, src_pe, dst, src, len, true, proxy_clock);
+                }
+                true
+            } else {
+                let dummy = SimClock::new();
+                sh.transport
+                    .put(src_pe, d.src_off as usize, pe, d.dst_off as usize, len, &dummy)
+                    .is_ok()
+            }
+        }
+        RingOp::Get => {
+            if is_local(sh, src_pe, pe) {
+                // Result lands in the initiator's staging slab.
+                let dst = DeviceAddr { pe: src_pe, offset: d.dst_off as usize };
+                let src = DeviceAddr { pe, offset: d.src_off as usize };
+                if d.standard_cl() {
+                    staged_cl
+                        .get_or_insert_with(|| sh.driver.create_command_list(src_pe))
+                        .append_memory_copy(dst, src, len, None);
+                } else {
+                    engine_copy(sh, src_pe, dst, src, len, true, proxy_clock);
+                }
+                true
+            } else {
+                let dummy = SimClock::new();
+                sh.transport
+                    .get(pe, d.src_off as usize, src_pe, d.dst_off as usize, len, &dummy)
+                    .is_ok()
+            }
+        }
+        RingOp::PutInline => {
+            let bytes = d.inline_val.to_le_bytes();
+            sh.heaps.heap(pe).write(d.dst_off as usize, &bytes[..len]);
+            true
+        }
+        RingOp::Amo => {
+            // Non-fetching only: a fetching AMO gates its caller and ships
+            // its own message; a batched result would have nowhere to go.
+            // The kind rides in the descriptor's low flag byte, mirroring
+            // `Message::amo_kind`.
+            let tag = TypeTag::from_u8(d.dtype).expect("bad batched AMO dtype");
+            let kind = crate::ringbuf::message::AmoKind::from_u8((d.flags & 0xFF) as u8)
+                .expect("bad batched AMO kind");
+            atomic_rmw_bits(
+                sh.heaps.heap(pe),
+                d.dst_off as usize,
+                tag,
+                kind,
+                d.inline_val,
+                d.inline_val2,
+            );
+            true
+        }
+        other => panic!("op {other:?} is not batchable"),
+    }
+}
+
 fn service(op: RingOp, msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     let pe = msg.pe as usize;
     let src_pe = msg.src_pe as usize;
@@ -114,10 +268,11 @@ fn service(op: RingOp, msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) 
 
         RingOp::Put => {
             if is_local(sh, src_pe, pe) {
-                // Intra-node: copy-engine path via L0 immediate CL.
+                // Intra-node: copy-engine path.
                 if raw {
-                    // Private-source put: stage straight into the peer heap
-                    // (the engine reads mapped device memory either way).
+                    // Oversized fallback: private-source put staged
+                    // straight into the peer heap (the engine reads
+                    // mapped device memory either way).
                     // SAFETY: blocking initiator keeps the pointer alive.
                     let src =
                         unsafe { std::slice::from_raw_parts(msg.src_off as *const u8, len) };
@@ -130,6 +285,7 @@ fn service(op: RingOp, msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) 
                         DeviceAddr { pe, offset: msg.dst_off as usize },
                         DeviceAddr { pe: src_pe, offset: msg.src_off as usize },
                         len,
+                        sh.use_immediate_cl,
                         proxy_clock,
                     );
                 }
@@ -173,6 +329,7 @@ fn service(op: RingOp, msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) 
                         DeviceAddr { pe: src_pe, offset: msg.dst_off as usize },
                         DeviceAddr { pe, offset: msg.src_off as usize },
                         len,
+                        sh.use_immediate_cl,
                         proxy_clock,
                     );
                 }
@@ -262,6 +419,7 @@ fn service(op: RingOp, msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) 
             complete(sh, msg, PROXY_OK);
         }
 
+        RingOp::Batch => unreachable!("handled by proxy_loop"),
         RingOp::Shutdown => unreachable!("handled by caller"),
     }
 }

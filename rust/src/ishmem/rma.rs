@@ -9,7 +9,8 @@
 //! charges the cost model, and tracks blocking/NBI completion. This module
 //! holds only the API surface and its argument checking.
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, PathIdx};
+use crate::sim::topology::Locality;
 use crate::xfer::plan::OpKind;
 
 use super::types::{as_bytes, as_bytes_mut, ShmemType};
@@ -82,7 +83,9 @@ impl PeCtx {
                 .heap(pe)
                 .write(dest.byte_offset(), as_bytes(std::slice::from_ref(&value)));
             self.clock.advance(self.rt.cost.loadstore_ns(loc, bytes, 1));
-            Metrics::add(&self.rt.metrics.bytes_loadstore, bytes as u64);
+            self.rt
+                .metrics
+                .add_path_bytes(PathIdx::LoadStore, loc, bytes as u64);
         } else {
             // Scalar rides inside the 64-byte message (PutInline).
             let mut raw = [0u8; 8];
@@ -187,7 +190,9 @@ impl PeCtx {
             assert!(self.ipc.lookup(pe).is_some(), "iput requires load/store reach");
             self.clock
                 .advance(self.rt.cost.loadstore_ns(loc, bytes, 1) * 1.2);
-            Metrics::add(&self.rt.metrics.bytes_loadstore, bytes as u64);
+            self.rt
+                .metrics
+                .add_path_bytes(PathIdx::LoadStore, loc, bytes as u64);
         }
     }
 
@@ -216,7 +221,9 @@ impl PeCtx {
             assert!(self.ipc.lookup(pe).is_some(), "iget requires load/store reach");
             self.clock
                 .advance(self.rt.cost.loadstore_ns(loc, bytes, 1) * 1.2);
-            Metrics::add(&self.rt.metrics.bytes_loadstore, bytes as u64);
+            self.rt
+                .metrics
+                .add_path_bytes(PathIdx::LoadStore, loc, bytes as u64);
         }
     }
 
@@ -249,13 +256,17 @@ impl PeCtx {
                 true,
                 false,
             ));
-            Metrics::add(&self.rt.metrics.bytes_copy_engine, bytes as u64);
+            self.rt
+                .metrics
+                .add_path_bytes(PathIdx::CopyEngine, loc, bytes as u64);
         } else {
             self.rt
                 .transport
                 .put_from_ptr(src.as_ptr() as u64, pe, dest.byte_offset(), bytes, &self.clock)
                 .expect("host_put transport");
-            Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
+            self.rt
+                .metrics
+                .add_path_bytes(PathIdx::Nic, Locality::Remote, bytes as u64);
         }
     }
 
@@ -283,13 +294,17 @@ impl PeCtx {
                 true,
                 false,
             ));
-            Metrics::add(&self.rt.metrics.bytes_copy_engine, bytes as u64);
+            self.rt
+                .metrics
+                .add_path_bytes(PathIdx::CopyEngine, loc, bytes as u64);
         } else {
             self.rt
                 .transport
                 .get_to_ptr(pe, src.byte_offset(), dest.as_mut_ptr() as u64, bytes, &self.clock)
                 .expect("host_get transport");
-            Metrics::add(&self.rt.metrics.bytes_nic, bytes as u64);
+            self.rt
+                .metrics
+                .add_path_bytes(PathIdx::Nic, Locality::Remote, bytes as u64);
         }
     }
 }

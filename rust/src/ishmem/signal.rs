@@ -5,9 +5,12 @@
 //! the target with set/add semantics — the ordering is the API's whole
 //! point (the target spins on the signal and may then read the payload).
 //! The transfer itself plans through the unified xfer engine: reachable
-//! targets put via the planned path then update the signal word; remote
-//! targets ship one `PutSignal` ring message through the xfer executor so
-//! the proxy can order payload and signal on the wire.
+//! targets put via the planned path (a blocking batched flush on the
+//! engine route) then update the signal word; remote targets ship one
+//! `PutSignal` ring message through the xfer executor so the proxy can
+//! order payload and signal on the wire. `PutSignal` is its own ordering
+//! fence, so it never batches — posting it flushes the pending command
+//! stream first (per-PE FIFO).
 
 use crate::coordinator::metrics::Metrics;
 use crate::xfer::plan::{OpKind, Route};

@@ -4,8 +4,10 @@
 //!
 //! * RMA: intra-node transfers become a multi-threaded vectorized memcpy
 //!   (bandwidth scales with the work-group, Fig 4a); reverse-offloaded
-//!   transfers elect the leader item to post one ring message while the
-//!   group barriers (engine bandwidth is work-group-invariant, Fig 4b).
+//!   transfers elect the leader item to append a descriptor to the
+//!   initiator's batched command stream ([`crate::xfer::stream`]) while
+//!   the group barriers — the whole plan-group rides one `Batch`
+//!   doorbell (engine bandwidth is work-group-invariant, Fig 4b).
 //! * Collectives: fan-outs load-share the work-items across Xe-Links.
 //! * AMOs have **no** work_group variants (scalar ops don't benefit —
 //!   paper §III-F), and none are provided here.

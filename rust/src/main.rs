@@ -13,7 +13,7 @@ rishmem — Intel® SHMEM reproduction (Rust + JAX/Pallas via PJRT)
 USAGE:
   rishmem figure <ID> [--out DIR]     regenerate a paper figure
         IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig5-adaptive
-             fig6-4pe fig6-8pe fig6-12pe fig7a fig7b ring
+             fig6-4pe fig6-8pe fig6-12pe fig7a fig7b ring fig-batch
              ablate-cl ablate-sync cutover-table all
   rishmem train [--model M] [--pes N] [--steps S] [--lr F] [--seed K]
                                       data-parallel training (e2e driver)
@@ -95,6 +95,7 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "fig7a" => vec![figures::fig7a()],
         "fig7b" => vec![figures::fig7b()],
         "ring" => vec![figures::ring_figure()],
+        "fig-batch" => vec![figures::fig_batch()],
         "ablate-cl" => vec![figures::ablate_cmdlists()],
         "ablate-sync" => vec![figures::ablate_sync()],
         "all" => figures::all_figures(),

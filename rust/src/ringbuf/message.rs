@@ -21,6 +21,11 @@ pub enum RingOp {
     PutSignal = 6,
     /// Team barrier hand-off (inter-node phase of barriers).
     Barrier = 7,
+    /// Batched submission: one doorbell for a whole plan-group. `dst_off`
+    /// is the byte offset of a descriptor block in the *initiator's*
+    /// symmetric heap (staging slab), `len` is the entry count; see
+    /// [`crate::ringbuf::batch::BatchDescriptor`].
+    Batch = 8,
     /// Proxy shutdown (host side only).
     Shutdown = 255,
 }
@@ -36,6 +41,7 @@ impl RingOp {
             5 => RingOp::Quiet,
             6 => RingOp::PutSignal,
             7 => RingOp::Barrier,
+            8 => RingOp::Batch,
             255 => RingOp::Shutdown,
             _ => return None,
         })
@@ -157,6 +163,7 @@ mod tests {
             RingOp::Quiet,
             RingOp::PutSignal,
             RingOp::Barrier,
+            RingOp::Batch,
             RingOp::Shutdown,
         ] {
             assert_eq!(RingOp::from_u8(op as u8), Some(op));

@@ -13,10 +13,12 @@
 //! stress-tested against the paper's claims (~5 µs RTT modeled, >20 M req/s
 //! arbitration — see benches/ring_buffer.rs and tests/stress_ring.rs).
 
+pub mod batch;
 pub mod completion;
 pub mod message;
 pub mod ring;
 
+pub use batch::{BatchDescriptor, DESC_SIZE};
 pub use completion::{CompletionPool, CompletionToken, COMPLETION_NONE};
 pub use message::{Message, RingOp, MSG_SIZE};
 pub use ring::{Ring, RingConsumer};

@@ -76,16 +76,25 @@ impl CopyEngineParams {
 
 /// Per-GPU engine occupancy: transfers queued beyond `engines_per_gpu`
 /// serialize. Tracked with a simple in-flight counter — enough to model the
-/// contention shape (fcollect fanning out N copies on one GPU).
+/// contention shape (fcollect fanning out N copies on one GPU) — plus an
+/// outstanding-bytes backlog that the planner folds into its engine-path
+/// estimate, so cutover decisions shift while the queue is loaded.
 #[derive(Debug)]
 pub struct EngineQueue {
     in_flight: AtomicU64,
+    /// Bytes of copy-engine work accepted but not yet modeled complete
+    /// (blocking ops hold their bytes for the call; NBI ops until quiet).
+    queued_bytes: AtomicU64,
     engines: u64,
 }
 
 impl EngineQueue {
     pub fn new(engines: usize) -> Self {
-        EngineQueue { in_flight: AtomicU64::new(0), engines: engines.max(1) as u64 }
+        EngineQueue {
+            in_flight: AtomicU64::new(0),
+            queued_bytes: AtomicU64::new(0),
+            engines: engines.max(1) as u64,
+        }
     }
 
     /// Charge factor for a new transfer: 1.0 while engines are free, then
@@ -105,6 +114,22 @@ impl EngineQueue {
 
     pub fn in_flight(&self) -> u64 {
         self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Register `bytes` of accepted-but-incomplete engine work.
+    pub fn reserve_bytes(&self, bytes: u64) {
+        self.queued_bytes.fetch_add(bytes, Ordering::AcqRel);
+    }
+
+    /// Retire previously reserved engine work.
+    pub fn release_bytes(&self, bytes: u64) {
+        let prev = self.queued_bytes.fetch_sub(bytes, Ordering::AcqRel);
+        debug_assert!(prev >= bytes, "engine backlog underflow: {prev} - {bytes}");
+    }
+
+    /// Current byte backlog on this GPU's engines.
+    pub fn queued_bytes(&self) -> u64 {
+        self.queued_bytes.load(Ordering::Acquire)
     }
 }
 
@@ -159,5 +184,17 @@ mod tests {
         q.end();
         q.end();
         assert_eq!(q.in_flight(), 0);
+    }
+
+    #[test]
+    fn byte_backlog_tracks_reserve_release() {
+        let q = EngineQueue::new(4);
+        assert_eq!(q.queued_bytes(), 0);
+        q.reserve_bytes(1 << 20);
+        q.reserve_bytes(4096);
+        assert_eq!(q.queued_bytes(), (1 << 20) + 4096);
+        q.release_bytes(4096);
+        q.release_bytes(1 << 20);
+        assert_eq!(q.queued_bytes(), 0);
     }
 }

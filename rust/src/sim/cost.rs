@@ -120,6 +120,47 @@ impl CostModel {
                 .transfer_ns(&self.params.xe, loc, bytes, immediate_cl, false)
     }
 
+    /// Occupancy-aware engine estimate: the pure estimate plus the time to
+    /// drain `backlog_bytes` already queued on the source GPU's engines at
+    /// the path bandwidth. This is what makes cutover decisions shift
+    /// under load — a loaded engine queue makes the store path win at
+    /// sizes where an idle queue would pick the engines.
+    pub fn p2p_engine_estimate_loaded_ns(
+        &self,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        backlog_bytes: u64,
+    ) -> f64 {
+        let bw = self.params.ce.path_bw_gbs(&self.params.xe, loc);
+        let drain = if bw > 0.0 { backlog_bytes as f64 / bw } else { 0.0 };
+        self.p2p_engine_estimate_ns(loc, bytes, immediate_cl) + drain
+    }
+
+    // --------------------------------------------- engine-queue backlog ----
+
+    /// Register accepted-but-incomplete engine work on `gpu`.
+    pub fn engine_reserve(&self, gpu: usize, bytes: u64) {
+        self.engine_queues[gpu].reserve_bytes(bytes);
+    }
+
+    /// Retire engine work previously registered with [`Self::engine_reserve`].
+    pub fn engine_release(&self, gpu: usize, bytes: u64) {
+        self.engine_queues[gpu].release_bytes(bytes);
+    }
+
+    /// Current copy-engine byte backlog on `gpu`.
+    pub fn engine_backlog_bytes(&self, gpu: usize) -> u64 {
+        self.engine_queues[gpu].queued_bytes()
+    }
+
+    /// Device-side cost of staging `bytes` through the symmetric-heap
+    /// staging slab (an HBM-local copy by the issuing work-items; latency
+    /// hides in pipelining, so pure bandwidth).
+    pub fn staging_copy_ns(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.params.xe.hbm_bw_gbs
+    }
+
     /// Inter-node transfer: ring hand-off + host proxy + NIC RDMA.
     pub fn internode_ns(&self, bytes: usize, registered_heap: bool, via_ring: bool) -> f64 {
         let ring = if via_ring {
@@ -190,6 +231,21 @@ mod tests {
         let big = m.loadstore_ns(loc, 8 << 20, 1);
         let big_ce = m.copy_engine_ns(0, loc, 8 << 20, true, false, true);
         assert!(big_ce < big, "{big_ce} !< {big}");
+    }
+
+    #[test]
+    fn loaded_estimate_grows_with_backlog() {
+        let m = model();
+        let loc = Locality::SameNode;
+        let idle = m.p2p_engine_estimate_loaded_ns(loc, 4096, true, 0);
+        assert_eq!(idle, m.p2p_engine_estimate_ns(loc, 4096, true));
+        let loaded = m.p2p_engine_estimate_loaded_ns(loc, 4096, true, 64 << 20);
+        assert!(loaded > idle * 2.0, "{loaded} !> {idle}*2");
+        // Live backlog flows through reserve/release.
+        m.engine_reserve(0, 4096);
+        assert_eq!(m.engine_backlog_bytes(0), 4096);
+        m.engine_release(0, 4096);
+        assert_eq!(m.engine_backlog_bytes(0), 0);
     }
 
     #[test]

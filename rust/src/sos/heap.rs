@@ -14,10 +14,82 @@
 //! state machine is enforced — calling out of order is an error, matching
 //! SOS's dual-phase initialization contract.
 
+use std::cell::Cell;
 use std::sync::Arc;
 
 use super::pmi::PmiHandle;
 use crate::sim::memory::HeapRegistry;
+
+/// Per-PE staging slab: a runtime-owned region at the *top* of the device
+/// symmetric heap, used by the batched submission path (`xfer::stream`):
+///
+/// * descriptor blocks for `RingOp::Batch` messages live here, so the
+///   proxy reads them straight out of the initiator's heap;
+/// * raw-pointer payloads (private initiator buffers) are copied through
+///   the slab, which turns every batched transfer into a heap-offset
+///   transfer — the shape that executes on real `DeviceAddr` command
+///   lists (paper §III-C) instead of the raw-pointer staging fallback.
+///
+/// Allocation is a bump arena with allocation-count reclamation: batches
+/// retire in ring-FIFO order and `release` one claim per `try_alloc`;
+/// once nothing is outstanding the cursor rewinds to the base, so the
+/// arena never fragments. The slab is per-PE state (like `PeCtx` itself,
+/// `!Sync`), so plain `Cell`s suffice.
+#[derive(Debug)]
+pub struct StagingSlab {
+    base: usize,
+    bytes: usize,
+    cursor: Cell<usize>,
+    live_allocs: Cell<usize>,
+}
+
+impl StagingSlab {
+    /// A slab covering `[base, base + bytes)` of the owning PE's heap.
+    pub fn new(base: usize, bytes: usize) -> Self {
+        StagingSlab { base, bytes, cursor: Cell::new(0), live_allocs: Cell::new(0) }
+    }
+
+    /// Total slab capacity, bytes.
+    pub fn capacity(&self) -> usize {
+        self.bytes
+    }
+
+    /// Bytes still allocatable before a drain is needed.
+    pub fn available(&self) -> usize {
+        self.bytes - self.cursor.get()
+    }
+
+    /// Number of claims not yet released (pending + in-flight batches).
+    pub fn outstanding(&self) -> usize {
+        self.live_allocs.get()
+    }
+
+    /// Claim `len` bytes (64-byte aligned); returns the heap byte offset,
+    /// or `None` when the slab cannot fit the request until outstanding
+    /// batches retire (caller drains and retries, or falls back to the
+    /// raw-pointer path for oversized payloads).
+    pub fn try_alloc(&self, len: usize) -> Option<usize> {
+        let start = crate::util::round_up(self.cursor.get(), 64);
+        let end = start.checked_add(len)?;
+        if end > self.bytes {
+            return None;
+        }
+        self.cursor.set(end);
+        self.live_allocs.set(self.live_allocs.get() + 1);
+        Some(self.base + start)
+    }
+
+    /// Release one claim from a retired batch. When nothing remains
+    /// outstanding the cursor rewinds to the base.
+    pub fn release(&self) {
+        let live = self.live_allocs.get();
+        assert!(live > 0, "staging slab release without a live claim");
+        self.live_allocs.set(live - 1);
+        if live == 1 {
+            self.cursor.set(0);
+        }
+    }
+}
 
 /// Memory kind constants for `shmemx_heap_create` (paper lists ZE + CUDA).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -241,5 +313,32 @@ mod tests {
         h.preinit().unwrap();
         h.postinit().unwrap();
         assert!(!h.device_heap_registered());
+    }
+
+    #[test]
+    fn staging_slab_bump_and_rewind() {
+        let slab = StagingSlab::new(1 << 20, 4096);
+        let a = slab.try_alloc(100).unwrap();
+        assert_eq!(a, 1 << 20);
+        let b = slab.try_alloc(100).unwrap();
+        // 64-byte aligned, above the first claim.
+        assert_eq!(b % 64, 0);
+        assert!(b >= a + 100);
+        assert_eq!(slab.outstanding(), 2);
+        // Exhaustion: a claim that cannot fit fails without side effects.
+        assert!(slab.try_alloc(4096).is_none());
+        assert_eq!(slab.outstanding(), 2);
+        // Full release rewinds the cursor: the arena is reusable.
+        slab.release();
+        slab.release();
+        assert_eq!(slab.outstanding(), 0);
+        assert_eq!(slab.try_alloc(4096).unwrap(), 1 << 20);
+        slab.release();
+    }
+
+    #[test]
+    #[should_panic(expected = "without a live claim")]
+    fn staging_slab_release_underflow_panics() {
+        StagingSlab::new(0, 64).release();
     }
 }

@@ -54,11 +54,13 @@ pub fn train_data_parallel(cfg: &TrainConfig) -> Result<TrainReport> {
     let rt = XlaRuntime::load_default().context("loading artifacts")?;
     let model = rt.manifest().model(&cfg.model)?.clone();
 
-    // Symmetric heap must fit grads + loss cell (params live host-side).
+    // Symmetric heap must fit grads + loss cell (params live host-side),
+    // plus the staging slab the runtime carves from the heap top.
     let grad_bytes = model.param_count * 4;
+    let base = IshmemConfig::with_npes(cfg.pes);
     let ish_cfg = IshmemConfig {
-        heap_bytes: RESERVED_BYTES + grad_bytes + (1 << 20),
-        ..IshmemConfig::with_npes(cfg.pes)
+        heap_bytes: RESERVED_BYTES + grad_bytes + (1 << 20) + base.staging_slab_bytes,
+        ..base
     };
     let ish = Ishmem::new(ish_cfg)?;
     ish.attach_runtime(rt.clone());

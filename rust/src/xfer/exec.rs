@@ -4,22 +4,26 @@
 //! * `LoadStore` — direct stores/loads into the peer heap (the real bytes
 //!   move through the shared-memory substrate), charged at the Xe-Link
 //!   work-item store rate (§III-B);
-//! * `CopyEngine` — reverse offload: compose a 64-byte ring message
-//!   (§III-D), block on the proxy's completion, charge ring RTT + engine
-//!   time with queue-aware occupancy (§III-C);
-//! * `Nic` — same ring hand-off, but the proxy forwards to the OFI
-//!   transport (inter-node, §III-D).
+//! * `CopyEngine` — reverse offload through the batched command stream
+//!   ([`super::stream`]): the payload is staged into the symmetric-heap
+//!   slab, a descriptor joins the current plan-group, and one
+//!   `RingOp::Batch` doorbell submits the group; the proxy runs each
+//!   entry on a real `DeviceAddr` command list (immediate or standard,
+//!   per descriptor — §III-C);
+//! * `Nic` — same stream, but the proxy forwards staged entries to the
+//!   OFI transport (inter-node, §III-D).
 //!
-//! This module is also the **only** place that composes reverse-offload
-//! ring messages for RMA/AMO/signal ops — the per-op copies that used to
-//! live in `rma.rs`, `amo.rs` and `signal.rs` are gone. Executors feed
-//! observed (modeled) durations back to the planner so
-//! `CutoverMode::Adaptive` learns online.
+//! Payloads too large for the staging slab fall back to the original
+//! one-message-per-op raw-pointer path (`FLAG_RAW_PTR`), which this
+//! module still composes. Executors feed observed (modeled) durations
+//! back to the planner so `CutoverMode::Adaptive` learns online, and
+//! reserve/release the per-GPU engine-queue byte backlog that makes the
+//! planner occupancy-aware.
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, PathIdx};
 use crate::ishmem::PeCtx;
 use crate::ringbuf::message::AmoKind;
-use crate::ringbuf::{Message, RingOp, COMPLETION_NONE};
+use crate::ringbuf::{BatchDescriptor, Message, RingOp, COMPLETION_NONE};
 use crate::sim::topology::Locality;
 use crate::sim::SimClock;
 
@@ -33,8 +37,8 @@ pub(crate) const FLAG_RAW_PTR: u16 = 1 << 8;
 pub(crate) const PROXY_OK: u64 = 0;
 pub(crate) const PROXY_ERR_UNREGISTERED: u64 = 1;
 
-/// Compose a reverse-offload RMA ring message (the one wire format all
-/// put/get/put-signal traffic shares).
+/// Compose a reverse-offload RMA ring message (the raw-pointer fallback
+/// wire format shared by oversized put/get traffic).
 pub(crate) fn rma_message(
     op: RingOp,
     pe: usize,
@@ -57,17 +61,22 @@ impl PeCtx {
 
     /// Plan a point-to-point transfer to `pe`: IPC-table reachability
     /// lookup (§III-G.1 step 2) + locality classification, then the
-    /// engine's path decision.
+    /// engine's path decision — occupancy-aware via this PE's GPU.
     pub(crate) fn plan_to(&self, kind: OpKind, pe: usize, bytes: usize, items: usize) -> TransferPlan {
         let reachable = self.ipc.lookup(pe).is_some();
         let loc = self.loc_of(pe);
-        self.rt.xfer.plan_p2p(kind, reachable, loc, bytes, items)
+        self.rt
+            .xfer
+            .plan_p2p_from(Some(self.my_gpu()), kind, reachable, loc, bytes, items)
     }
 
     // ----------------------------------------------------- ring plumbing --
 
-    /// Post a ring message and block for its completion payload.
+    /// Post a ring message and block for its completion payload. Flushes
+    /// the pending command stream first: a directly-posted message must
+    /// not overtake entries appended before it (per-PE FIFO).
     pub(crate) fn proxied_blocking(&self, mut msg: Message) -> u64 {
+        self.stream_flush_ff();
         let pool = self.completions().clone();
         let token = pool.alloc();
         msg.completion = token.index;
@@ -77,8 +86,10 @@ impl PeCtx {
         pool.wait(token)
     }
 
-    /// Post a fire-and-forget ring message (tracked so `quiet` flushes it).
+    /// Post a fire-and-forget ring message (tracked so `quiet` flushes
+    /// it). Flushes the pending command stream first (FIFO, as above).
     pub(crate) fn proxied_ff(&self, mut msg: Message) {
+        self.stream_flush_ff();
         msg.completion = COMPLETION_NONE;
         msg.src_pe = self.pe() as u32;
         Metrics::add(&self.rt.metrics.ring_messages, 1);
@@ -108,13 +119,20 @@ impl PeCtx {
         self.rt.topo().global_gpu_of(self.pe())
     }
 
+    /// The command-list flavour this transfer's descriptor requests
+    /// (per-op CL policy, §III-C).
+    #[inline]
+    fn standard_cl_for(&self, bytes: usize) -> bool {
+        !self.rt.xfer.cl_immediate_for(bytes)
+    }
+
     /// Queue-aware modeled duration of this plan's engine execution.
     fn engine_exec_ns(&self, plan: &TransferPlan) -> f64 {
         self.rt.cost.copy_engine_ns(
             self.my_gpu(),
             plan.loc,
             plan.bytes,
-            self.rt.xfer.immediate_cl,
+            self.rt.xfer.cl_immediate_for(plan.bytes),
             false,
             true,
         )
@@ -127,8 +145,57 @@ impl PeCtx {
 
     // ------------------------------------------------- blocking executors --
 
-    /// Shared tail of the proxied blocking routes: compose the one RMA
-    /// wire message, block on the proxy, then charge + count by route.
+    /// Charge + count a completed proxied route (shared by the batched
+    /// and raw-fallback blocking paths).
+    fn charge_proxied_blocking(&self, plan: &TransferPlan, pe: usize) {
+        match plan.route {
+            Route::CopyEngine => {
+                let ns = self.engine_exec_ns(plan);
+                self.clock.advance(ns);
+                self.rt.xfer.record(plan, ns);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
+            }
+            Route::Nic => {
+                self.clock.advance(self.nic_exec_ns(pe, plan.bytes));
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::Nic, Locality::Remote, plan.bytes as u64);
+            }
+            Route::LoadStore => unreachable!("load/store never posts a ring message"),
+        }
+    }
+
+    /// Shared choreography of the staged blocking routes: append the
+    /// descriptor, hold the engine-queue reservation across the blocking
+    /// flush (so concurrent planners see the backlog), run the caller's
+    /// post-flush step (e.g. copying a get result out of the slab), then
+    /// charge + count by route. The reserve/release pairing lives only
+    /// here.
+    fn exec_staged_blocking(
+        &self,
+        plan: &TransferPlan,
+        pe: usize,
+        desc: BatchDescriptor,
+        after_flush: impl FnOnce(&Self),
+    ) {
+        self.stream_append(desc, 1);
+        let reserve = plan.route == Route::CopyEngine;
+        if reserve {
+            self.rt.cost.engine_reserve(self.my_gpu(), plan.bytes as u64);
+        }
+        self.stream_flush_blocking();
+        after_flush(self);
+        self.charge_proxied_blocking(plan, pe);
+        if reserve {
+            self.rt.cost.engine_release(self.my_gpu(), plan.bytes as u64);
+        }
+    }
+
+    /// Raw-pointer fallback for payloads the staging slab cannot hold:
+    /// compose the one RMA wire message, block on the proxy, then charge
+    /// + count by route.
     fn exec_proxied_blocking(
         &self,
         plan: &TransferPlan,
@@ -141,19 +208,7 @@ impl PeCtx {
         let m = rma_message(op, pe, dst_off, src_off, plan.bytes);
         let status = self.proxied_blocking(m);
         self.check_proxy_status(status, what, pe);
-        match plan.route {
-            Route::CopyEngine => {
-                let ns = self.engine_exec_ns(plan);
-                self.clock.advance(ns);
-                self.rt.xfer.record(plan, ns);
-                Metrics::add(&self.rt.metrics.bytes_copy_engine, plan.bytes as u64);
-            }
-            Route::Nic => {
-                self.clock.advance(self.nic_exec_ns(pe, plan.bytes));
-                Metrics::add(&self.rt.metrics.bytes_nic, plan.bytes as u64);
-            }
-            Route::LoadStore => unreachable!("load/store never posts a ring message"),
-        }
+        self.charge_proxied_blocking(plan, pe);
     }
 
     /// Execute a planned blocking put of `src` into `pe`'s heap at
@@ -164,16 +219,25 @@ impl PeCtx {
                 self.rt.heaps.heap(pe).write(dst_off, src);
                 self.clock.advance(plan.modeled_ns);
                 self.rt.xfer.record(plan, plan.modeled_ns);
-                Metrics::add(&self.rt.metrics.bytes_loadstore, plan.bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::LoadStore, plan.loc, plan.bytes as u64);
             }
-            Route::CopyEngine | Route::Nic => self.exec_proxied_blocking(
-                plan,
-                RingOp::Put,
-                "put",
-                pe,
-                dst_off as u64,
-                src.as_ptr() as u64,
-            ),
+            Route::CopyEngine | Route::Nic => match self.stream_stage_payload(src) {
+                Some(src_off) => {
+                    let desc = BatchDescriptor::put(pe, dst_off, src_off, plan.bytes)
+                        .with_standard_cl(self.standard_cl_for(plan.bytes));
+                    self.exec_staged_blocking(plan, pe, desc, |_| {});
+                }
+                None => self.exec_proxied_blocking(
+                    plan,
+                    RingOp::Put,
+                    "put",
+                    pe,
+                    dst_off as u64,
+                    src.as_ptr() as u64,
+                ),
+            },
         }
     }
 
@@ -190,38 +254,102 @@ impl PeCtx {
                 self.rt.heaps.heap(pe).read(src_off, dst);
                 self.clock.advance(plan.modeled_ns);
                 self.rt.xfer.record(plan, plan.modeled_ns);
-                Metrics::add(&self.rt.metrics.bytes_loadstore, plan.bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::LoadStore, plan.loc, plan.bytes as u64);
             }
-            Route::CopyEngine | Route::Nic => self.exec_proxied_blocking(
-                plan,
-                RingOp::Get,
-                "get",
-                pe,
-                dst.as_mut_ptr() as u64,
-                src_off as u64,
-            ),
+            Route::CopyEngine | Route::Nic => match self.stream_slab_alloc(plan.bytes) {
+                Some(slab_off) => {
+                    let desc = BatchDescriptor::get(pe, slab_off, src_off, plan.bytes)
+                        .with_standard_cl(self.standard_cl_for(plan.bytes));
+                    self.exec_staged_blocking(plan, pe, desc, |s| {
+                        // The proxy landed the result in the slab; copy it
+                        // out. The claim was just released, but nothing
+                        // can reuse the arena before this single-threaded
+                        // PE reads it.
+                        s.rt.heaps.heap(s.pe()).read(slab_off, dst);
+                        s.clock.advance(s.rt.cost.staging_copy_ns(plan.bytes));
+                    });
+                }
+                None => self.exec_proxied_blocking(
+                    plan,
+                    RingOp::Get,
+                    "get",
+                    pe,
+                    dst.as_mut_ptr() as u64,
+                    src_off as u64,
+                ),
+            },
         }
     }
 
     // ---------------------------------------------------- NBI executors --
 
-    /// Execute a planned non-blocking put: data moves eagerly (Rust borrow
-    /// safety — stronger than the spec's contract), the *modeled*
-    /// completion defers to the tracker and collapses at `quiet`.
+    /// Execute a planned non-blocking put. Batched routes stage the
+    /// payload into the slab (so the source buffer may be reused on
+    /// return) and defer real delivery to the proxy's batch service; the
+    /// modeled completion defers to the tracker and collapses at `quiet`.
     pub(crate) fn exec_put_nbi(&self, plan: &TransferPlan, pe: usize, dst_off: usize, src: &[u8]) {
+        match plan.route {
+            Route::LoadStore => {
+                let issue = self.rt.cost.ring_post_ns();
+                self.rt.heaps.heap(pe).write(dst_off, src);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::LoadStore, plan.loc, plan.bytes as u64);
+                self.rt.xfer.record(plan, plan.modeled_ns);
+                self.clock.advance(issue);
+                let done_at = self.clock.now_ns() + (plan.modeled_ns - issue).max(0.0);
+                self.track.defer(done_at);
+            }
+            Route::CopyEngine | Route::Nic => match self.stream_stage_payload(src) {
+                Some(src_off) => {
+                    let desc = BatchDescriptor::put(pe, dst_off, src_off, plan.bytes)
+                        .with_standard_cl(self.standard_cl_for(plan.bytes));
+                    self.stream_append(desc, 1);
+                    let full = match plan.route {
+                        Route::CopyEngine => {
+                            // Backlog stays reserved until quiet collapses
+                            // the horizon — the planner sees it meanwhile.
+                            self.rt.cost.engine_reserve(self.my_gpu(), plan.bytes as u64);
+                            self.track.note_engine_bytes(plan.bytes as u64);
+                            let ns = self.engine_exec_ns(plan);
+                            self.rt.xfer.record(plan, ns);
+                            self.rt.metrics.add_path_bytes(
+                                PathIdx::CopyEngine,
+                                plan.loc,
+                                plan.bytes as u64,
+                            );
+                            ns
+                        }
+                        Route::Nic => {
+                            self.rt.metrics.add_path_bytes(
+                                PathIdx::Nic,
+                                Locality::Remote,
+                                plan.bytes as u64,
+                            );
+                            self.nic_exec_ns(pe, plan.bytes)
+                        }
+                        Route::LoadStore => unreachable!(),
+                    };
+                    self.track.defer(self.clock.now_ns() + full);
+                }
+                None => self.exec_put_nbi_oversized(plan, pe, dst_off, src),
+            },
+        }
+    }
+
+    /// Oversized-NBI-put fallback: eager movement (the slab cannot hold
+    /// the payload), modeled completion at the horizon — the pre-batching
+    /// behavior.
+    fn exec_put_nbi_oversized(&self, plan: &TransferPlan, pe: usize, dst_off: usize, src: &[u8]) {
         let issue = self.rt.cost.ring_post_ns();
         let full = match plan.route {
-            Route::LoadStore => {
-                self.rt.heaps.heap(pe).write(dst_off, src);
-                Metrics::add(&self.rt.metrics.bytes_loadstore, plan.bytes as u64);
-                self.rt.xfer.record(plan, plan.modeled_ns);
-                plan.modeled_ns
-            }
             Route::CopyEngine => {
-                // Eager movement; the modeled engine transfer completes at
-                // the horizon.
                 self.rt.heaps.heap(pe).write(dst_off, src);
-                Metrics::add(&self.rt.metrics.bytes_copy_engine, plan.bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
                 let ns = self.engine_exec_ns(plan);
                 self.rt.xfer.record(plan, ns);
                 ns
@@ -232,16 +360,22 @@ impl PeCtx {
                     .transport
                     .put_from_ptr(src.as_ptr() as u64, pe, dst_off, plan.bytes, &dummy)
                     .expect("put_nbi transport");
-                Metrics::add(&self.rt.metrics.bytes_nic, plan.bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::Nic, Locality::Remote, plan.bytes as u64);
                 self.nic_exec_ns(pe, plan.bytes)
             }
+            Route::LoadStore => unreachable!("handled by exec_put_nbi"),
         };
         self.clock.advance(issue);
         let done_at = self.clock.now_ns() + (full - issue).max(0.0);
         self.track.defer(done_at);
     }
 
-    /// Execute a planned non-blocking get (eager movement, deferred model).
+    /// Execute a planned non-blocking get. Gets stay eager on every route:
+    /// the destination borrow ends when this call returns, so deferring
+    /// real movement to the proxy (as batched puts do) would dangle it.
+    /// Only the *modeled* completion defers to the tracker.
     pub(crate) fn exec_get_nbi(
         &self,
         plan: &TransferPlan,
@@ -253,13 +387,17 @@ impl PeCtx {
         let full = match plan.route {
             Route::LoadStore => {
                 self.rt.heaps.heap(pe).read(src_off, dst);
-                Metrics::add(&self.rt.metrics.bytes_loadstore, plan.bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::LoadStore, plan.loc, plan.bytes as u64);
                 self.rt.xfer.record(plan, plan.modeled_ns);
                 plan.modeled_ns
             }
             Route::CopyEngine => {
                 self.rt.heaps.heap(pe).read(src_off, dst);
-                Metrics::add(&self.rt.metrics.bytes_copy_engine, plan.bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
                 let ns = self.engine_exec_ns(plan);
                 self.rt.xfer.record(plan, ns);
                 ns
@@ -270,7 +408,9 @@ impl PeCtx {
                     .transport
                     .get_to_ptr(pe, src_off, dst.as_mut_ptr() as u64, plan.bytes, &dummy)
                     .expect("get_nbi transport");
-                Metrics::add(&self.rt.metrics.bytes_nic, plan.bytes as u64);
+                self.rt
+                    .metrics
+                    .add_path_bytes(PathIdx::Nic, Locality::Remote, plan.bytes as u64);
                 self.nic_exec_ns(pe, plan.bytes)
             }
         };
@@ -283,7 +423,9 @@ impl PeCtx {
 
     /// Execute a planned remote put-with-signal: one proxied message
     /// carries payload pointer + signal update so the proxy orders them on
-    /// the wire (put; fence; signal) — paper §9.8.3 semantics.
+    /// the wire (put; fence; signal) — paper §9.8.3 semantics. Cannot
+    /// batch (it is its own ordering fence); `proxied_blocking` flushes
+    /// the pending stream first.
     pub(crate) fn exec_put_signal_remote(
         &self,
         plan: &TransferPlan,
@@ -308,13 +450,17 @@ impl PeCtx {
         self.check_proxy_status(status, "put_signal", pe);
         // Payload + 8-byte signal word cross the wire.
         self.clock.advance(self.nic_exec_ns(pe, plan.bytes + 8));
-        Metrics::add(&self.rt.metrics.bytes_nic, plan.bytes as u64 + 8);
+        self.rt
+            .metrics
+            .add_path_bytes(PathIdx::Nic, Locality::Remote, plan.bytes as u64 + 8);
     }
 
     // ------------------------------------------------- AMO / inline ops --
 
     /// Proxied atomic: compose the `Amo` ring message, execute remotely,
     /// and charge the fetch round trip or the fire-and-forget post.
+    /// Fetching AMOs cannot batch (the result gates the caller), so both
+    /// shapes ship their own message — behind a pending-stream flush.
     /// Returns the fetched old value (0 for non-fetching kinds).
     pub(crate) fn proxied_amo(
         &self,
@@ -365,6 +511,8 @@ impl PeCtx {
         m.inline_val = raw;
         self.proxied_ff(m);
         self.clock.advance(self.rt.cost.ring_post_ns());
-        Metrics::add(&self.rt.metrics.bytes_nic, len as u64);
+        self.rt
+            .metrics
+            .add_path_bytes(PathIdx::Nic, Locality::Remote, len as u64);
     }
 }

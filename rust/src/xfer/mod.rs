@@ -21,9 +21,14 @@
 //!    per-(locality, size-bucket, work-items-bucket) thresholds online
 //!    ([`adaptive::AdaptiveTable`]): seeded from the `Tuned` model,
 //!    refined by exponential moving averages of observed costs.
-//! 2. **Execute** ([`exec`]) — one executor per route, including the single
-//!    place that composes reverse-offload ring messages (64-byte wire
-//!    format, §III-D).
+//! 2. **Execute** ([`exec`]) — one executor per route. Proxied routes no
+//!    longer pay one ring message per op: executors append descriptors to
+//!    the per-initiator command stream ([`stream::CmdStream`]), payloads
+//!    are staged through the symmetric-heap staging slab, and one
+//!    `RingOp::Batch` doorbell submits the whole plan-group (descriptor
+//!    wire format in [`crate::ringbuf::batch`]). The raw-pointer
+//!    one-message-per-op path survives only as the oversized-payload
+//!    fallback.
 //! 3. **Complete** ([`track::CompletionTracker`]) — unified blocking/NBI
 //!    completion state per PE: the modeled completion horizon of
 //!    outstanding non-blocking transfers plus the count of fire-and-forget
@@ -38,8 +43,10 @@
 pub mod adaptive;
 pub mod exec;
 pub mod plan;
+pub mod stream;
 pub mod track;
 
 pub use adaptive::{AdaptiveCell, AdaptiveTable, BucketKey};
 pub use plan::{FanoutShape, OpKind, Route, TransferPlan, XferEngine};
+pub use stream::CmdStream;
 pub use track::CompletionTracker;

@@ -123,9 +123,16 @@ impl Default for FanoutShape {
 pub struct XferEngine {
     pub cost: Arc<CostModel>,
     pub cutover: CutoverConfig,
-    /// Whether device-initiated engine transfers use immediate command
-    /// lists (§III-C) — affects the modeled startup constant.
+    /// Whether device-initiated engine transfers may use immediate command
+    /// lists (§III-C) — affects the modeled startup constant. With the
+    /// per-op CL policy below this is the *enable* bit: false forces
+    /// standard lists everywhere (the ablation knob).
     pub immediate_cl: bool,
+    /// Per-op command-list policy (§III-C): batched descriptors at or
+    /// below this size use an immediate list (low latency), larger ones a
+    /// standard list (append → close → execute). `usize::MAX` reproduces
+    /// the old global-immediate behavior.
+    pub cl_immediate_max_bytes: usize,
     adaptive: AdaptiveTable,
     metrics: Arc<Metrics>,
 }
@@ -142,12 +149,21 @@ impl XferEngine {
             cost,
             cutover,
             immediate_cl,
+            cl_immediate_max_bytes: usize::MAX,
             adaptive: AdaptiveTable::new(alpha),
             metrics,
         }
     }
 
     // ------------------------------------------------------ p2p planning --
+
+    /// Per-op command-list choice for a `bytes`-sized engine transfer —
+    /// the single policy point shared by the planner's estimates and the
+    /// executors' descriptor flags (so modeled decisions and charges use
+    /// the same startup constant).
+    pub fn cl_immediate_for(&self, bytes: usize) -> bool {
+        self.immediate_cl && bytes <= self.cl_immediate_max_bytes
+    }
 
     /// Model the point-to-point load/store path (pure estimate).
     pub fn est_loadstore_ns(&self, loc: Locality, bytes: usize, items: usize) -> f64 {
@@ -159,7 +175,24 @@ impl XferEngine {
     /// formula itself lives on [`CostModel::p2p_engine_estimate_ns`] —
     /// shared with the policy-level reference in `cutover.rs`.
     pub fn est_copy_engine_ns(&self, loc: Locality, bytes: usize) -> f64 {
-        self.cost.p2p_engine_estimate_ns(loc, bytes, self.immediate_cl)
+        self.cost
+            .p2p_engine_estimate_ns(loc, bytes, self.cl_immediate_for(bytes))
+    }
+
+    /// Occupancy-aware engine estimate: folds the source GPU's live
+    /// copy-engine byte backlog into the pure estimate, so planning shifts
+    /// toward load/store while the engine queue is loaded. `None` (no
+    /// known source GPU — policy probes, tests) degrades to the pure
+    /// estimate.
+    pub fn est_copy_engine_loaded_ns(
+        &self,
+        src_gpu: Option<usize>,
+        loc: Locality,
+        bytes: usize,
+    ) -> f64 {
+        let backlog = src_gpu.map_or(0, |g| self.cost.engine_backlog_bytes(g));
+        self.cost
+            .p2p_engine_estimate_loaded_ns(loc, bytes, self.cl_immediate_for(bytes), backlog)
     }
 
     /// Model the inter-node path (registered-heap RDMA estimate).
@@ -170,8 +203,25 @@ impl XferEngine {
     /// Plan a point-to-point transfer of `bytes` to a `loc`-distant PE by
     /// `items` cooperating work-items. `reachable` is the IPC-table verdict
     /// (§III-G.1 step 2): unreachable targets always route to the NIC.
+    /// Occupancy-blind (no source GPU known) — the live path uses
+    /// [`Self::plan_p2p_from`].
     pub fn plan_p2p(
         &self,
+        kind: OpKind,
+        reachable: bool,
+        loc: Locality,
+        bytes: usize,
+        items: usize,
+    ) -> TransferPlan {
+        self.plan_p2p_from(None, kind, reachable, loc, bytes, items)
+    }
+
+    /// Plan a point-to-point transfer issued from `src_gpu` (global GPU
+    /// index): the engine-path estimate folds that GPU's live engine-queue
+    /// byte backlog, so cutover decisions shift under load.
+    pub fn plan_p2p_from(
+        &self,
+        src_gpu: Option<usize>,
         kind: OpKind,
         reachable: bool,
         loc: Locality,
@@ -193,7 +243,7 @@ impl XferEngine {
             return plan;
         }
         let ls = self.est_loadstore_ns(loc, bytes, items);
-        let ce = self.est_copy_engine_ns(loc, bytes);
+        let ce = self.est_copy_engine_loaded_ns(src_gpu, loc, bytes);
         let path = self.decide(BucketKey::p2p(loc, bytes, items), bytes, ls, ce);
         let plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce);
         self.count_plan(plan.route);
@@ -310,6 +360,69 @@ impl XferEngine {
                 self.est_copy_engine_ns(loc, b),
             ) == Path::CopyEngine
         })
+    }
+
+    /// The model crossover when the source GPU's engines already hold
+    /// `backlog_bytes` of queued work: the engine path pays the backlog
+    /// drain, so the crossover moves right (or disappears) under load.
+    pub fn model_crossover_bytes_loaded(
+        &self,
+        loc: Locality,
+        items: usize,
+        backlog_bytes: u64,
+    ) -> Option<usize> {
+        (3..28).map(|p| 1usize << p).find(|&b| {
+            argmin_path(
+                self.est_loadstore_ns(loc, b, items),
+                self.cost.p2p_engine_estimate_loaded_ns(
+                    loc,
+                    b,
+                    self.cl_immediate_for(b),
+                    backlog_bytes,
+                ),
+            ) == Path::CopyEngine
+        })
+    }
+
+    /// Occupancy view of the cutover table: modeled crossovers at a few
+    /// engine-queue backlog levels (`figure cutover-table` appendix; the
+    /// acceptance check that planning is engine-queue aware).
+    pub fn occupancy_crossover_report(&self) -> String {
+        let backlogs: [(u64, &str); 4] = [
+            (0, "idle"),
+            (1 << 20, "1MiB"),
+            (8 << 20, "8MiB"),
+            (64 << 20, "64MiB"),
+        ];
+        let mut out = String::from(
+            "occupancy-aware cutover: modeled crossover (bytes) vs engine backlog\n",
+        );
+        out.push_str("locality    items  ");
+        for &(_, label) in &backlogs {
+            out.push_str(&format!(" {label:<11}"));
+        }
+        out.push('\n');
+        for loc in [Locality::SameTile, Locality::SameGpu, Locality::SameNode] {
+            for items in [1usize, 16, 128, 1024] {
+                let cells: Vec<String> = backlogs
+                    .iter()
+                    .map(|&(b, _)| {
+                        self.model_crossover_bytes_loaded(loc, items, b)
+                            .map_or("-".into(), |x| x.to_string())
+                    })
+                    .collect();
+                out.push_str(&format!(
+                    "{:<11} {:<7} {:<11} {:<11} {:<11} {:<11}\n",
+                    format!("{loc:?}"),
+                    items,
+                    cells[0],
+                    cells[1],
+                    cells[2],
+                    cells[3],
+                ));
+            }
+        }
+        out
     }
 
     /// Human-readable learned-vs-modeled crossover table (bench report).
@@ -441,6 +554,42 @@ mod tests {
                 assert_eq!(a.route, t.route, "cold adaptive diverged at {bytes}B/{items}wi");
             }
         }
+    }
+
+    #[test]
+    fn backlog_shifts_crossover_right() {
+        let e = engine(CutoverConfig::tuned());
+        let idle = e.model_crossover_bytes(Locality::SameNode, 1);
+        let loaded = e.model_crossover_bytes_loaded(Locality::SameNode, 1, 64 << 20);
+        assert_eq!(idle, e.model_crossover_bytes_loaded(Locality::SameNode, 1, 0));
+        match (idle, loaded) {
+            // A loaded queue must move the crossover strictly right (or
+            // off the probed range entirely).
+            (Some(i), Some(l)) => assert!(l > i, "loaded {l} !> idle {i}"),
+            (Some(_), None) => {}
+            other => panic!("unexpected crossovers {other:?}"),
+        }
+        // Live backlog feeds the same shift through plan_p2p_from.
+        let bytes = idle.unwrap();
+        e.cost.engine_reserve(0, 64 << 20);
+        let p = e.plan_p2p_from(Some(0), OpKind::Put, true, Locality::SameNode, bytes, 1);
+        assert_eq!(p.route, Route::LoadStore, "loaded queue kept engine route");
+        e.cost.engine_release(0, 64 << 20);
+        let p = e.plan_p2p_from(Some(0), OpKind::Put, true, Locality::SameNode, bytes, 1);
+        assert_eq!(p.route, Route::CopyEngine, "idle queue lost engine route");
+    }
+
+    #[test]
+    fn per_op_cl_policy_switches_startup_constant() {
+        let mut e = engine(CutoverConfig::tuned());
+        let loc = Locality::SameNode;
+        let all_imm = e.est_copy_engine_ns(loc, 1 << 20);
+        e.cl_immediate_max_bytes = 64 << 10;
+        let std_cl = e.est_copy_engine_ns(loc, 1 << 20);
+        let small = e.est_copy_engine_ns(loc, 4 << 10);
+        assert!(std_cl > all_imm, "standard CL must charge the larger startup");
+        assert!(e.cl_immediate_for(4 << 10) && !e.cl_immediate_for(1 << 20));
+        assert_eq!(small, e.cost.p2p_engine_estimate_ns(loc, 4 << 10, true));
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Batched command streams: one ring doorbell per plan-group.
+//!
+//! The reverse-offload path used to pay one 64-byte ring message and one
+//! proxy service *per device-initiated op* (§III-D) — which dominates
+//! latency exactly in the small-message regime the copy-engine route is
+//! supposed to win. A [`CmdStream`] amortizes that: executors append
+//! [`TransferPlan`]-shaped entries as [`BatchDescriptor`]s, payloads are
+//! staged through the PE's symmetric-heap [`StagingSlab`] (turning
+//! raw-pointer transfers into heap-offset transfers that run on real
+//! `DeviceAddr` command lists), and the stream flushes as a single
+//! `RingOp::Batch` message pointing at a descriptor block in the slab.
+//!
+//! Flush triggers:
+//! * **capacity** — pending depth reaches `max_batch_depth` (fire-and-
+//!   forget flush; the batch completion is tracked so `quiet` can drain);
+//! * **blocking completion** — a blocking op appends its own entry and
+//!   flushes synchronously (which also pushes out any pending NBI
+//!   entries, preserving per-PE FIFO order);
+//! * **non-batchable op** — anything that still ships its own ring
+//!   message (fetching AMOs, put-signal, quiet itself) flushes the
+//!   pending stream first so the ring stays FIFO-consistent.
+//!
+//! Slab reclamation is batch-granular: every payload stage and every
+//! descriptor block is one slab claim; when a batch's completion arrives
+//! the claims are released and the arena rewinds once idle.
+//!
+//! [`TransferPlan`]: super::plan::TransferPlan
+//! [`BatchDescriptor`]: crate::ringbuf::BatchDescriptor
+//! [`StagingSlab`]: crate::sos::heap::StagingSlab
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+
+use crate::coordinator::metrics::Metrics;
+use crate::ishmem::PeCtx;
+use crate::ringbuf::{BatchDescriptor, CompletionToken, Message, RingOp, DESC_SIZE};
+
+use super::exec::{PROXY_ERR_UNREGISTERED, PROXY_OK};
+
+/// Pending (not yet flushed) batch entry: the wire descriptor plus the
+/// number of staging-slab claims its payload holds.
+#[derive(Debug)]
+struct PendingEntry {
+    desc: BatchDescriptor,
+    slab_claims: usize,
+}
+
+/// A posted-but-unretired batch: its completion token and the slab claims
+/// (entries + descriptor block) to release when it completes.
+#[derive(Debug)]
+struct InflightBatch {
+    token: CompletionToken,
+    slab_claims: usize,
+}
+
+/// Per-(initiator, work-group) command stream. `PeCtx` is `!Sync` and all
+/// work-group variants funnel through their leader's `PeCtx`, so plain
+/// interior mutability suffices.
+#[derive(Debug)]
+pub struct CmdStream {
+    max_depth: usize,
+    pending: RefCell<Vec<PendingEntry>>,
+    inflight: RefCell<VecDeque<InflightBatch>>,
+}
+
+impl CmdStream {
+    pub fn new(max_depth: usize) -> Self {
+        assert!(max_depth >= 1, "batch depth must be at least 1");
+        CmdStream {
+            max_depth,
+            pending: RefCell::new(Vec::new()),
+            inflight: RefCell::new(VecDeque::new()),
+        }
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.borrow().len()
+    }
+
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.borrow().len()
+    }
+}
+
+impl PeCtx {
+    // ------------------------------------------------------ slab staging --
+
+    /// Claim `len` slab bytes for a payload or a get-result, retiring
+    /// finished (and, if needed, pending) batches to make room. `None`
+    /// means the payload cannot fit the slab at all — the caller falls
+    /// back to the raw-pointer path.
+    pub(crate) fn stream_slab_alloc(&self, len: usize) -> Option<usize> {
+        // Every payload claim preserves enough headroom that a descriptor
+        // block for a full batch can always be written at flush time.
+        let headroom = (self.stream.max_depth() + 1) * DESC_SIZE + 192;
+        let need = len.checked_add(64 + headroom)?;
+        if need > self.slab.capacity() {
+            // Can never fit, even empty: take the raw-pointer fallback
+            // without stalling on in-flight batches or force-flushing the
+            // pending plan-group (the fallback's own ring post flushes
+            // pending for FIFO).
+            return None;
+        }
+        if self.slab.available() < need {
+            self.stream_drain_inflight();
+            if self.slab.available() < need && self.stream.pending_len() > 0 {
+                self.stream_flush_ff();
+                self.stream_drain_inflight();
+            }
+        }
+        if self.slab.available() < need {
+            return None;
+        }
+        self.slab.try_alloc(len)
+    }
+
+    /// Stage a private (raw-pointer) payload into the slab: after this
+    /// copy the transfer is heap-offset shaped and can execute on real
+    /// `DeviceAddr` command lists. Charges the HBM-local staging copy.
+    pub(crate) fn stream_stage_payload(&self, src: &[u8]) -> Option<usize> {
+        let off = self.stream_slab_alloc(src.len())?;
+        self.rt.heaps.heap(self.pe()).write(off, src);
+        self.clock.advance(self.rt.cost.staging_copy_ns(src.len()));
+        Some(off)
+    }
+
+    // ----------------------------------------------------------- append ---
+
+    /// Append a descriptor to the stream (`slab_claims` = claims its
+    /// payload holds; 0 for entries whose source already lives in the
+    /// user heap). Charges the descriptor write; flushes fire-and-forget
+    /// when the plan-group reaches capacity.
+    pub(crate) fn stream_append(&self, desc: BatchDescriptor, slab_claims: usize) {
+        self.clock.advance(self.rt.cost.staging_copy_ns(DESC_SIZE));
+        let depth = {
+            let mut pending = self.stream.pending.borrow_mut();
+            pending.push(PendingEntry { desc, slab_claims });
+            pending.len()
+        };
+        if depth >= self.stream.max_depth() {
+            self.stream_flush_ff();
+        }
+    }
+
+    // ----------------------------------------------------------- flushes --
+
+    /// Write the pending descriptors into a slab block and post the one
+    /// `Batch` doorbell. Returns the completion token and the batch's
+    /// total slab claims; `None` when nothing is pending.
+    fn stream_post_batch(&self) -> Option<(CompletionToken, usize)> {
+        let entries: Vec<PendingEntry> = {
+            let mut pending = self.stream.pending.borrow_mut();
+            if pending.is_empty() {
+                return None;
+            }
+            pending.drain(..).collect()
+        };
+        let n = entries.len();
+        let block_len = n * DESC_SIZE;
+        let block_off = match self.slab.try_alloc(block_len) {
+            Some(off) => off,
+            None => {
+                // Slab pinned by in-flight batches: retire them (FIFO —
+                // always safe) and retry; the headroom invariant makes
+                // this allocation infallible afterwards.
+                self.stream_drain_inflight();
+                self.slab
+                    .try_alloc(block_len)
+                    .expect("staging slab cannot hold a descriptor block")
+            }
+        };
+        let descs: Vec<BatchDescriptor> = entries.iter().map(|e| e.desc).collect();
+        self.rt
+            .heaps
+            .heap(self.pe())
+            .write(block_off, &BatchDescriptor::encode_block(&descs));
+        let claims: usize = entries.iter().map(|e| e.slab_claims).sum::<usize>() + 1;
+
+        let pool = self.completions().clone();
+        let token = pool.alloc();
+        let mut m = Message::nop();
+        m.op = RingOp::Batch as u8;
+        m.src_pe = self.pe() as u32;
+        m.dst_off = block_off as u64;
+        m.len = n as u64;
+        m.completion = token.index;
+        Metrics::add(&self.rt.metrics.ring_messages, 1);
+        self.ring().send(m);
+        Some((token, claims))
+    }
+
+    /// Fire-and-forget flush: one doorbell for the pending plan-group;
+    /// completion is tracked in-flight so `quiet` (or a later capacity
+    /// squeeze) retires it. Charges one ring post for the whole group.
+    pub(crate) fn stream_flush_ff(&self) {
+        if let Some((token, slab_claims)) = self.stream_post_batch() {
+            self.stream
+                .inflight
+                .borrow_mut()
+                .push_back(InflightBatch { token, slab_claims });
+            self.clock.advance(self.rt.cost.ring_post_ns());
+        }
+    }
+
+    /// A batch completion carries one status for the whole plan-group;
+    /// decode the failure like `check_proxy_status` does for single ops.
+    /// (NBI entries surface here at the next flush/quiet/fence — later
+    /// than the offending op, the price of fire-and-forget batching.)
+    fn check_batch_status(&self, status: u64) {
+        match status {
+            PROXY_OK => {}
+            PROXY_ERR_UNREGISTERED => panic!(
+                "batched submission failed: a target heap in the plan-group is not \
+                 FI_HMEM-registered (strict mode)"
+            ),
+            other => panic!("batched submission failed: proxy status {other}"),
+        }
+    }
+
+    /// Blocking flush: retire everything in flight, post the pending
+    /// plan-group, and wait for its completion. The ring is FIFO per
+    /// node, so on return every earlier entry of this PE is serviced.
+    /// Callers charge the modeled route cost themselves.
+    pub(crate) fn stream_flush_blocking(&self) {
+        self.stream_drain_inflight();
+        if let Some((token, slab_claims)) = self.stream_post_batch() {
+            let status = self.completions().wait(token);
+            self.check_batch_status(status);
+            for _ in 0..slab_claims {
+                self.slab.release();
+            }
+        }
+    }
+
+    /// Wait out all in-flight batches and release their slab claims.
+    /// Returns how many batches were retired (no modeled charge here —
+    /// `quiet` charges one ring round trip for the drain).
+    pub(crate) fn stream_drain_inflight(&self) -> usize {
+        let mut drained = 0;
+        loop {
+            let batch = match self.stream.inflight.borrow_mut().pop_front() {
+                Some(b) => b,
+                None => break,
+            };
+            let status = self.completions().wait(batch.token);
+            self.check_batch_status(status);
+            for _ in 0..batch.slab_claims {
+                self.slab.release();
+            }
+            drained += 1;
+        }
+        drained
+    }
+
+    /// `quiet`/`fence` entry point: push out the pending plan-group and
+    /// retire every batch in flight. Returns whether anything was
+    /// outstanding (the caller charges the drain round trip if so).
+    pub(crate) fn stream_quiet_drain(&self) -> bool {
+        self.stream_flush_ff();
+        self.stream_drain_inflight() > 0
+    }
+
+    /// Retire every outstanding batch *and* return this PE's reserved
+    /// engine-queue backlog to the shared `CostModel`. The cleanup half
+    /// of `quiet` (no modeled charges) — shared with launch exit so
+    /// per-PE state can never leak into the machine across launches.
+    pub(crate) fn drain_outstanding(&self) -> bool {
+        let drained = self.stream_quiet_drain();
+        let engine_bytes = self.track.take_engine_bytes();
+        if engine_bytes > 0 {
+            self.rt.cost.engine_release(self.my_gpu(), engine_bytes);
+        }
+        drained
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_state_starts_empty() {
+        let s = CmdStream::new(16);
+        assert_eq!(s.max_depth(), 16);
+        assert_eq!(s.pending_len(), 0);
+        assert_eq!(s.inflight_len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn zero_depth_rejected() {
+        CmdStream::new(0);
+    }
+}

@@ -25,6 +25,10 @@ pub struct CompletionTracker {
     horizon_ns: Cell<f64>,
     /// Number of fire-and-forget proxied messages since the last flush.
     outstanding_ff: Cell<u64>,
+    /// Copy-engine bytes this PE has reserved on its GPU's engine queue
+    /// for still-outstanding NBI transfers (released at `quiet`, when the
+    /// horizon collapses). Feeds the planner's occupancy-aware estimate.
+    engine_bytes: Cell<u64>,
 }
 
 impl CompletionTracker {
@@ -57,6 +61,17 @@ impl CompletionTracker {
     pub fn take_fire_and_forget(&self) -> u64 {
         self.outstanding_ff.replace(0)
     }
+
+    /// Record `bytes` of engine-queue backlog reserved for an NBI transfer.
+    pub fn note_engine_bytes(&self, bytes: u64) {
+        self.engine_bytes.set(self.engine_bytes.get() + bytes);
+    }
+
+    /// Take the reserved engine-backlog bytes (quiet releases them on the
+    /// owning GPU's queue), resetting to zero.
+    pub fn take_engine_bytes(&self) -> u64 {
+        self.engine_bytes.replace(0)
+    }
 }
 
 #[cfg(test)]
@@ -81,5 +96,14 @@ mod tests {
         t.note_fire_and_forget();
         assert_eq!(t.take_fire_and_forget(), 2);
         assert_eq!(t.take_fire_and_forget(), 0);
+    }
+
+    #[test]
+    fn engine_bytes_accumulate_and_drain() {
+        let t = CompletionTracker::new();
+        t.note_engine_bytes(4096);
+        t.note_engine_bytes(100);
+        assert_eq!(t.take_engine_bytes(), 4196);
+        assert_eq!(t.take_engine_bytes(), 0);
     }
 }

@@ -1,10 +1,12 @@
 //! Integration: per-path traffic counters and transfer-plan counters are
 //! populated by real traffic on every route (load/store, copy-engine,
-//! NIC), and the adaptive table records feedback under
-//! the adaptive cutover mode.
+//! NIC), with per-locality byte breakdowns; the adaptive table records
+//! feedback under the adaptive cutover mode; and batched submission
+//! populates the batch-depth and proxy service-time metrics.
 
+use rishmem::coordinator::metrics::{PathIdx, ServiceOp};
 use rishmem::ishmem::CutoverConfig;
-use rishmem::{Ishmem, IshmemConfig, Topology};
+use rishmem::{Ishmem, IshmemConfig, Locality, Topology};
 
 #[test]
 fn per_path_byte_counters_populated() {
@@ -34,6 +36,25 @@ fn per_path_byte_counters_populated() {
     assert!(snap.bytes_copy_engine >= 1 << 20, "copy-engine bytes: {snap:?}");
     assert!(snap.bytes_nic >= 512, "nic bytes: {snap:?}");
 
+    // Per-locality breakdown: PE 0 → PE 2 is same-node (cross-GPU), the
+    // cross-node put is remote — and each per-path total must equal its
+    // locality rows' sum (every call site reports a locality).
+    assert!(
+        snap.path_loc_bytes(PathIdx::LoadStore, Locality::SameNode) >= 64,
+        "{snap:?}"
+    );
+    assert!(
+        snap.path_loc_bytes(PathIdx::CopyEngine, Locality::SameNode) >= 1 << 20,
+        "{snap:?}"
+    );
+    assert!(
+        snap.path_loc_bytes(PathIdx::Nic, Locality::Remote) >= 512,
+        "{snap:?}"
+    );
+    assert_eq!(snap.path_bytes_sum(PathIdx::LoadStore), snap.bytes_loadstore);
+    assert_eq!(snap.path_bytes_sum(PathIdx::CopyEngine), snap.bytes_copy_engine);
+    assert_eq!(snap.path_bytes_sum(PathIdx::Nic), snap.bytes_nic);
+
     // Every route was planned through the xfer engine.
     assert!(snap.xfer_plans_loadstore >= 1, "{snap:?}");
     assert!(snap.xfer_plans_copy_engine >= 1, "{snap:?}");
@@ -44,6 +65,57 @@ fn per_path_byte_counters_populated() {
     );
     // Tuned mode performs no online refinement.
     assert_eq!(snap.adaptive_updates, 0, "{snap:?}");
+}
+
+#[test]
+fn batch_and_service_metrics_populated() {
+    // 8 NBI puts at depth 4 → two full batches; a blocking put → one
+    // depth-1 batch. Engine route pinned so everything batches.
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::always(),
+        max_batch_depth: 4,
+        ..IshmemConfig::with_npes(4)
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(16 << 10);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            let data = vec![0x11u8; 1024];
+            for i in 0..8 {
+                ctx.put_nbi(buf.slice(i * 1024, 1024), &data, 2);
+            }
+            ctx.quiet();
+            ctx.put(buf, &data, 2);
+        }
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+
+    assert!(snap.xfer_batches >= 3, "batches: {snap:?}");
+    assert!(snap.xfer_batch_entries >= 9, "batch entries: {snap:?}");
+    // The depth histogram accounts for every serviced batch, and the two
+    // capacity flushes land in the 3–4 bucket.
+    assert_eq!(
+        snap.xfer_batch_depth_hist.iter().sum::<u64>(),
+        snap.xfer_batches,
+        "{snap:?}"
+    );
+    assert!(snap.xfer_batch_depth_hist[2] >= 2, "depth-4 bucket: {snap:?}");
+    assert!(snap.mean_batch_depth() >= 1.0, "{snap:?}");
+
+    // Proxy service-time metrics: every batched entry is one serviced
+    // put; histogram entries match the op counts.
+    let put_ops = snap.proxy_service_ops[ServiceOp::Put as usize];
+    assert!(put_ops >= 9, "proxy put services: {snap:?}");
+    let hist_total: u64 = snap.proxy_service_hist.iter().flatten().sum();
+    let ops_total: u64 = snap.proxy_service_ops.iter().sum();
+    assert_eq!(hist_total, ops_total, "{snap:?}");
+
+    // Batched ring traffic: 3 doorbells carried 9 ops — far fewer
+    // messages than ops.
+    assert!(snap.ring_messages < 9 + snap.xfer_batches, "{snap:?}");
 }
 
 #[test]

@@ -3,7 +3,7 @@
 
 use rishmem::ishmem::signal::SignalOp;
 use rishmem::ishmem::CutoverConfig;
-use rishmem::{run_npes, run_spmd, Cmp, IshmemConfig, Topology, WorkGroup};
+use rishmem::{run_npes, run_spmd, Cmp, Ishmem, IshmemConfig, Topology, WorkGroup};
 
 #[test]
 fn ring_exchange_put() {
@@ -122,6 +122,126 @@ fn nbi_completes_at_quiet() {
     })
     .unwrap();
     assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn blocking_put_flushes_pending_stream() {
+    // An NBI entry sits in the pending command stream (depth 16 ≫ 2)
+    // until a blocking op joins the plan-group and flushes it — after the
+    // blocking put returns, *both* transfers must be delivered, no quiet.
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::always(),
+        max_batch_depth: 16,
+        ..IshmemConfig::with_npes(4)
+    };
+    let ok = run_spmd(cfg, false, |ctx| {
+        let a = ctx.calloc::<u32>(1024);
+        let b = ctx.calloc::<u32>(1024);
+        let flag = ctx.calloc::<u64>(1);
+        if ctx.pe() == 0 {
+            ctx.put_nbi(a, &vec![0xAAAA_u32; 1024], 1);
+            ctx.put(b, &vec![0xBBBB_u32; 1024], 1);
+            ctx.atomic_set(flag, 1u64, 1);
+            ctx.barrier_all();
+            true
+        } else if ctx.pe() == 1 {
+            ctx.wait_until(flag, Cmp::Eq, 1u64);
+            let good = ctx.read_local_vec(a).iter().all(|&v| v == 0xAAAA)
+                && ctx.read_local_vec(b).iter().all(|&v| v == 0xBBBB);
+            ctx.barrier_all();
+            good
+        } else {
+            ctx.barrier_all();
+            true
+        }
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b), "blocking flush left NBI data undelivered");
+}
+
+#[test]
+fn quiet_drains_pending_batches() {
+    // Five NBI puts below the capacity trigger: nothing is delivered
+    // until quiet pushes the plan-group out and drains it.
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::always(),
+        max_batch_depth: 16,
+        ..IshmemConfig::with_npes(4)
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let ok = ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(5 * 2048);
+        let flag = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            let data = vec![0x5Au8; 2048];
+            for i in 0..5 {
+                ctx.put_nbi(buf.slice(i * 2048, 2048), &data, 3);
+            }
+            ctx.quiet();
+            ctx.atomic_set(flag, 1u64, 3);
+            ctx.barrier_all();
+            true
+        } else if ctx.pe() == 3 {
+            ctx.wait_until(flag, Cmp::Eq, 1u64);
+            let good = ctx.read_local_vec(buf).iter().all(|&v| v == 0x5A);
+            ctx.barrier_all();
+            good
+        } else {
+            ctx.barrier_all();
+            true
+        }
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert!(ok.iter().all(|&b| b), "quiet left batched data undelivered");
+    // All five puts rode quiet-flushed doorbells, not per-op messages.
+    assert!(snap.xfer_batches >= 1, "{snap:?}");
+    assert!(snap.xfer_batch_entries >= 5, "{snap:?}");
+}
+
+#[test]
+fn nbi_completes_across_batch_boundary() {
+    // Ten NBI puts at depth 4: two capacity flushes mid-stream, two
+    // entries left pending — quiet must complete every one of them via
+    // the tracker, and the modeled horizon must move the clock.
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::always(),
+        max_batch_depth: 4,
+        ..IshmemConfig::with_npes(4)
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let ok = ish.launch(|ctx| {
+        let buf = ctx.calloc::<u32>(10 * 512);
+        ctx.barrier_all();
+        let quiet_ok = if ctx.pe() == 0 {
+            let data: Vec<u32> = (0..512).collect();
+            for i in 0..10 {
+                ctx.put_nbi(buf.slice(i * 512, 512), &data, 2);
+            }
+            let before = ctx.clock.now_ns();
+            ctx.quiet();
+            let after = ctx.clock.now_ns();
+            after > before
+        } else {
+            true
+        };
+        ctx.barrier_all();
+        let data_ok = if ctx.pe() == 2 {
+            let got = ctx.read_local_vec(buf);
+            (0..10).all(|i| (0..512).all(|j| got[i * 512 + j] == j as u32))
+        } else {
+            true
+        };
+        quiet_ok && data_ok
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert!(ok.iter().all(|&b| b), "NBI data lost across a batch boundary");
+    assert!(
+        snap.xfer_batches >= 3,
+        "expected 2 capacity flushes + 1 quiet flush: {snap:?}"
+    );
 }
 
 #[test]

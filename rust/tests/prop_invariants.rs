@@ -7,10 +7,71 @@
 use rishmem::coordinator::metrics::Metrics;
 use rishmem::ishmem::cutover::{CutoverConfig, Path};
 use rishmem::ishmem::heap::SymAllocator;
+use rishmem::ringbuf::{BatchDescriptor, RingOp, DESC_SIZE};
 use rishmem::sim::cost::{CostModel, CostParams};
 use rishmem::util::prop::prop_check;
 use rishmem::xfer::{OpKind, Route, XferEngine};
 use rishmem::{run_npes, Locality, ReduceOp, TeamId, Topology};
+
+/// Every `RingOp`, including the batched-submission doorbell.
+const ALL_RING_OPS: [RingOp; 10] = [
+    RingOp::Nop,
+    RingOp::Put,
+    RingOp::Get,
+    RingOp::PutInline,
+    RingOp::Amo,
+    RingOp::Quiet,
+    RingOp::PutSignal,
+    RingOp::Barrier,
+    RingOp::Batch,
+    RingOp::Shutdown,
+];
+
+#[test]
+fn prop_ring_op_codec_exhaustive() {
+    // Exhaustive over the whole byte domain: every encodable op value
+    // decodes back to itself, every other value is rejected — so a codec
+    // drift (added op, renumbered op) can never silently mis-dispatch.
+    for v in 0..=255u8 {
+        match ALL_RING_OPS.iter().find(|&&op| op as u8 == v) {
+            Some(&op) => assert_eq!(RingOp::from_u8(v), Some(op), "op byte {v}"),
+            None => assert_eq!(RingOp::from_u8(v), None, "op byte {v} must be rejected"),
+        }
+    }
+}
+
+#[test]
+fn prop_batch_descriptor_roundtrip() {
+    prop_check("batch descriptors round-trip through the slab codec", 200, |rng| {
+        let n = rng.range(1, 32) as usize;
+        let descs: Vec<BatchDescriptor> = (0..n)
+            .map(|_| BatchDescriptor {
+                // Any RingOp byte is encodable (the stream only emits
+                // Put/Get/PutInline/Amo, but the codec must not care).
+                op: ALL_RING_OPS[rng.below(ALL_RING_OPS.len() as u64) as usize] as u8,
+                dtype: rng.below(256) as u8,
+                flags: rng.below(1 << 16) as u16,
+                pe: rng.next_u64() as u32,
+                dst_off: rng.next_u64(),
+                src_off: rng.next_u64(),
+                len: rng.next_u64(),
+                inline_val: rng.next_u64(),
+                inline_val2: rng.next_u64(),
+            })
+            .collect();
+        for d in &descs {
+            assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(*d));
+        }
+        let block = BatchDescriptor::encode_block(&descs);
+        assert_eq!(block.len(), n * DESC_SIZE);
+        assert_eq!(BatchDescriptor::decode_block(&block, n), Some(descs));
+        // A corrupt op byte poisons exactly its block decode.
+        let mut bad = block.clone();
+        let victim = rng.below(n as u64) as usize;
+        bad[victim * DESC_SIZE] = 99;
+        assert_eq!(BatchDescriptor::decode_block(&bad, n), None);
+    });
+}
 
 #[test]
 fn prop_locality_classification_consistent() {
