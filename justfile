@@ -10,15 +10,17 @@ verify:
 bench:
     cargo bench --bench fig5_cutover
     cargo bench --bench fig_batch
+    cargo bench --bench fig_stripe
     cargo bench --bench fig3_rma
     cargo bench --bench hot_path
 
-# CI smoke: the cutover + batched-submission benches on tiny sweeps
-# (RISHMEM_SMOKE shrinks the size/nelem grids), so the figure benches
-# and their embedded assertions can't bit-rot.
+# CI smoke: the cutover + batched-submission + striped-pipeline benches
+# on tiny sweeps (RISHMEM_SMOKE shrinks the size/nelem grids), so the
+# figure benches and their embedded assertions can't bit-rot.
 bench-smoke:
     RISHMEM_SMOKE=1 cargo bench --bench fig5_cutover
     RISHMEM_SMOKE=1 cargo bench --bench fig_batch
+    RISHMEM_SMOKE=1 cargo bench --bench fig_stripe
 
 # Formatting gate (no writes).
 fmt-check:

@@ -1,0 +1,46 @@
+//! Bench: multi-engine striped transfers (ISSUE 3). Large same-node puts
+//! pipeline chunked slabs across 4+ copy engines; the acceptance bar is
+//! ≥2× modeled throughput vs the same machine pinned to a single engine,
+//! for every ≥1 MiB point.
+//! `cargo bench --bench fig_stripe` (`RISHMEM_SMOKE=1` shrinks the sweep).
+
+use rishmem::bench::figures::fig_stripe;
+
+fn main() {
+    let fig = fig_stripe();
+    println!("{}", fig.render_ascii());
+
+    let single = fig
+        .series
+        .iter()
+        .find(|s| s.name == "single-engine")
+        .expect("single-engine series");
+    let striped = fig
+        .series
+        .iter()
+        .find(|s| s.name == "striped")
+        .expect("striped series");
+
+    for &(x, y) in &striped.points {
+        let base = single.y_at(x).expect("matching single-engine point");
+        println!(
+            "[fig_stripe] {x:>10.0} B: striped {y:6.2} GB/s vs single-engine {base:6.2} GB/s \
+             ({:.1}x)",
+            y / base
+        );
+        if x >= (1 << 20) as f64 {
+            assert!(
+                y >= base * 2.0,
+                "striping under 2x at {x}B: {y} vs {base} GB/s"
+            );
+        }
+    }
+    // The striped pipeline must approach the engine-path roofline (the
+    // 25 GB/s Xe-Link), not just beat a slow baseline.
+    let (_, best) = *striped.points.last().unwrap();
+    assert!(
+        best > 15.0,
+        "striped large-put bandwidth {best} GB/s nowhere near the link roofline"
+    );
+    println!("[fig_stripe] striped chunk pipeline sustains >=2x single-engine throughput");
+}

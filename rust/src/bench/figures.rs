@@ -24,6 +24,10 @@ fn fig3_machine() -> Arc<Ishmem> {
     let cfg = IshmemConfig {
         topology: Topology::new(1, 2, 2),
         heap_bytes: 40 << 20,
+        // Deep slab: the striped pipeline double-buffers 4 MiB chunks, so
+        // a 16 MiB put runs one startup per engine (the ze_peer
+        // convergence regime).
+        staging_slab_bytes: 9 << 20,
         ..Default::default()
     };
     Ishmem::new(cfg).expect("fig3 machine")
@@ -108,6 +112,7 @@ fn fig4(cutover: CutoverConfig, id: &str, title: &str) -> Figure {
     let cfg = IshmemConfig {
         topology: Topology::new(1, 2, 2),
         heap_bytes: 40 << 20,
+        staging_slab_bytes: 9 << 20,
         cutover,
         ..Default::default()
     };
@@ -171,6 +176,7 @@ pub fn adaptive_cutover_report() -> String {
     let cfg = IshmemConfig {
         topology: Topology::new(1, 2, 2),
         heap_bytes: 40 << 20,
+        staging_slab_bytes: 9 << 20,
         cutover: CutoverConfig::adaptive(),
         ..Default::default()
     };
@@ -262,6 +268,64 @@ pub fn fig_batch() -> Figure {
     }
     fig.series.push(overhead);
     fig.series.push(msgs);
+    fig
+}
+
+/// Striped-pipeline figure (ISSUE 3): large same-node put bandwidth,
+/// striped chunk pipeline vs the same machine pinned to one engine
+/// (`stripe_max_engines = 1`). A single blitter sustains only
+/// `single_engine_frac` of the link; striping chunks across 4+ engines
+/// recovers the roofline — the acceptance bar is ≥2× at ≥1 MiB.
+pub fn fig_stripe() -> Figure {
+    let sizes: Vec<usize> = if super::smoke() {
+        vec![1 << 20, 2 << 20]
+    } else {
+        vec![1 << 20, 2 << 20, 4 << 20, 8 << 20]
+    };
+    let mut fig = Figure::new(
+        "fig-stripe",
+        "striped chunk pipeline: large same-node puts, striped vs single-engine",
+        "msg size",
+        "GB/s",
+    );
+    for (name, width) in [("single-engine", 1usize), ("striped", 4)] {
+        let mut cost = crate::sim::cost::CostParams::default();
+        cost.ce.stripe_max_engines = width;
+        let cfg = IshmemConfig {
+            topology: Topology::new(1, 2, 2),
+            heap_bytes: 48 << 20,
+            // Pin the engine route: the comparison is engine vs engine.
+            cutover: CutoverConfig::always(),
+            cost,
+            ..Default::default()
+        };
+        let ish = Ishmem::new(cfg).expect("fig_stripe machine");
+        let sizes2 = sizes.clone();
+        let series = ish.launch(move |ctx| {
+            let max = *sizes2.iter().max().unwrap();
+            let buf = ctx.calloc::<u8>(max);
+            let local = vec![0xEEu8; max];
+            ctx.barrier_all();
+            if ctx.pe() != 0 {
+                return None;
+            }
+            let mut s = Series::new(name);
+            for &size in &sizes2 {
+                let m = measure(&ctx.clock, || ctx.put(buf, &local[..size], 2));
+                s.push(size as f64, m.bandwidth_gbs(size));
+            }
+            Some(s)
+        });
+        let snap = ish.metrics.snapshot();
+        ish.shutdown();
+        fig.series.push(series.into_iter().flatten().next().unwrap());
+        if width > 1 {
+            assert!(
+                snap.stripe_transfers > 0,
+                "striped machine never chunked: {snap:?}"
+            );
+        }
+    }
     fig
 }
 
@@ -627,5 +691,6 @@ pub fn all_figures() -> Vec<Figure> {
     v.push(fig7b());
     v.push(ring_figure());
     v.push(fig_batch());
+    v.push(fig_stripe());
     v
 }

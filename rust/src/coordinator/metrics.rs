@@ -26,7 +26,11 @@ pub enum ServiceOp {
 }
 
 /// Batch-depth histogram buckets: depth 1, 2, 3–4, 5–8, 9–16, ≥17.
+/// (Shared shape with the chunks-per-transfer histogram.)
 pub const BATCH_DEPTH_BUCKETS: usize = 6;
+/// Per-engine metric slots (engine index within the source GPU; indices
+/// past the table clamp into the last slot).
+pub const ENGINE_SLOTS: usize = 8;
 /// Proxy service-time histogram: log2-ns buckets, 2^4 ns … ≥2^19 ns.
 pub const SERVICE_NS_BUCKETS: usize = 16;
 const SERVICE_NS_SHIFT: u32 = 4;
@@ -63,6 +67,15 @@ pub struct Metrics {
     pub xfer_batches: AtomicU64,
     pub xfer_batch_entries: AtomicU64,
     pub xfer_batch_depth_hist: [AtomicU64; BATCH_DEPTH_BUCKETS],
+    // Striped chunk pipeline: chunked transfers, their chunk count, and
+    // the chunks-per-transfer distribution (same buckets as batch depth).
+    pub stripe_transfers: AtomicU64,
+    pub stripe_chunks: AtomicU64,
+    pub stripe_chunk_hist: [AtomicU64; BATCH_DEPTH_BUCKETS],
+    // Proxy-side per-engine dispatch tables (engine slot on the source
+    // GPU): bytes moved and entries dispatched per engine.
+    pub engine_bytes: [AtomicU64; ENGINE_SLOTS],
+    pub engine_ops: [AtomicU64; ENGINE_SLOTS],
     // Proxy-side service time (wall clock) per op family: sums + counts
     // for averages, log2-ns histograms for the shape.
     pub proxy_service_ns: [AtomicU64; SERVICE_OPS],
@@ -121,6 +134,21 @@ impl Metrics {
         Self::add(&self.xfer_batch_depth_hist[batch_depth_bucket(entries)], 1);
     }
 
+    /// Record one striped transfer of `chunks` chunks.
+    pub fn add_stripe(&self, chunks: usize) {
+        Self::add(&self.stripe_transfers, 1);
+        Self::add(&self.stripe_chunks, chunks as u64);
+        Self::add(&self.stripe_chunk_hist[batch_depth_bucket(chunks)], 1);
+    }
+
+    /// Record one proxy engine dispatch of `bytes` on engine slot
+    /// `engine` (indices past the table clamp into the last slot).
+    pub fn add_engine_dispatch(&self, engine: usize, bytes: u64) {
+        let i = engine.min(ENGINE_SLOTS - 1);
+        Self::add(&self.engine_bytes[i], bytes);
+        Self::add(&self.engine_ops[i], 1);
+    }
+
     /// Record one proxy service of `op` taking `ns` wall-clock nanoseconds.
     pub fn add_service(&self, op: ServiceOp, ns: u64) {
         let i = op as usize;
@@ -155,6 +183,11 @@ impl Metrics {
             xfer_batch_depth_hist: std::array::from_fn(|i| {
                 load(&self.xfer_batch_depth_hist[i])
             }),
+            stripe_transfers: load(&self.stripe_transfers),
+            stripe_chunks: load(&self.stripe_chunks),
+            stripe_chunk_hist: std::array::from_fn(|i| load(&self.stripe_chunk_hist[i])),
+            engine_bytes: std::array::from_fn(|i| load(&self.engine_bytes[i])),
+            engine_ops: std::array::from_fn(|i| load(&self.engine_ops[i])),
             proxy_service_ns: std::array::from_fn(|i| load(&self.proxy_service_ns[i])),
             proxy_service_ops: std::array::from_fn(|i| load(&self.proxy_service_ops[i])),
             proxy_service_hist: std::array::from_fn(|o| {
@@ -186,6 +219,11 @@ pub struct MetricsSnapshot {
     pub xfer_batches: u64,
     pub xfer_batch_entries: u64,
     pub xfer_batch_depth_hist: [u64; BATCH_DEPTH_BUCKETS],
+    pub stripe_transfers: u64,
+    pub stripe_chunks: u64,
+    pub stripe_chunk_hist: [u64; BATCH_DEPTH_BUCKETS],
+    pub engine_bytes: [u64; ENGINE_SLOTS],
+    pub engine_ops: [u64; ENGINE_SLOTS],
     pub proxy_service_ns: [u64; SERVICE_OPS],
     pub proxy_service_ops: [u64; SERVICE_OPS],
     pub proxy_service_hist: [[u64; SERVICE_NS_BUCKETS]; SERVICE_OPS],
@@ -223,6 +261,15 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Mean chunks per striped transfer (0 when nothing striped).
+    pub fn mean_chunks_per_transfer(&self) -> f64 {
+        if self.stripe_transfers == 0 {
+            0.0
+        } else {
+            self.stripe_chunks as f64 / self.stripe_transfers as f64
+        }
+    }
+
     /// Mean proxy service time for `op`, ns (0 when none serviced).
     pub fn mean_service_ns(&self, op: ServiceOp) -> f64 {
         let i = op as usize;
@@ -231,6 +278,63 @@ impl MetricsSnapshot {
         } else {
             self.proxy_service_ns[i] as f64 / self.proxy_service_ops[i] as f64
         }
+    }
+
+    /// Serialize the whole snapshot as one JSON object (dashboard
+    /// scraping: `rishmem metrics --json`). Counters are exact — every
+    /// value fits f64's 2^53 integer range long before the counters
+    /// saturate a run.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        fn n(v: u64) -> Json {
+            Json::Num(v as f64)
+        }
+        fn arr(v: &[u64]) -> Json {
+            Json::Arr(v.iter().map(|&x| n(x)).collect())
+        }
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        let mut put = |k: &str, v: Json| o.insert(k.to_string(), v);
+        put("puts", n(self.puts));
+        put("gets", n(self.gets));
+        put("amos", n(self.amos));
+        put("collectives", n(self.collectives));
+        put("bytes_loadstore", n(self.bytes_loadstore));
+        put("bytes_copy_engine", n(self.bytes_copy_engine));
+        put("bytes_nic", n(self.bytes_nic));
+        let mut by_loc: BTreeMap<String, Json> = BTreeMap::new();
+        for (name, path) in [
+            ("loadstore", PathIdx::LoadStore),
+            ("copy_engine", PathIdx::CopyEngine),
+            ("nic", PathIdx::Nic),
+        ] {
+            by_loc.insert(name.to_string(), arr(&self.bytes_by_path_loc[path as usize]));
+        }
+        put("bytes_by_path_loc", Json::Obj(by_loc));
+        put("xfer_plans_loadstore", n(self.xfer_plans_loadstore));
+        put("xfer_plans_copy_engine", n(self.xfer_plans_copy_engine));
+        put("xfer_plans_nic", n(self.xfer_plans_nic));
+        put("adaptive_updates", n(self.adaptive_updates));
+        put("ring_messages", n(self.ring_messages));
+        put("ring_completions", n(self.ring_completions));
+        put("xfer_batches", n(self.xfer_batches));
+        put("xfer_batch_entries", n(self.xfer_batch_entries));
+        put("xfer_batch_depth_hist", arr(&self.xfer_batch_depth_hist));
+        put("stripe_transfers", n(self.stripe_transfers));
+        put("stripe_chunks", n(self.stripe_chunks));
+        put("stripe_chunk_hist", arr(&self.stripe_chunk_hist));
+        put("engine_bytes", arr(&self.engine_bytes));
+        put("engine_ops", arr(&self.engine_ops));
+        put("proxy_service_ns", arr(&self.proxy_service_ns));
+        put("proxy_service_ops", arr(&self.proxy_service_ops));
+        put(
+            "proxy_service_hist",
+            Json::Arr(self.proxy_service_hist.iter().map(|row| arr(row)).collect()),
+        );
+        put("xla_reduce_calls", n(self.xla_reduce_calls));
+        put("xla_reduce_elems", n(self.xla_reduce_elems));
+        put("native_reduce_elems", n(self.native_reduce_elems));
+        Json::Obj(o).to_string()
     }
 
     pub fn report(&self) -> String {
@@ -250,6 +354,8 @@ impl MetricsSnapshot {
              bytes by locality: load/store [{}] | copy-engine [{}] | nic [{}]\n\
              plans: load/store={} copy-engine={} nic={} adaptive-updates={}\n\
              ring: msgs={} completions={} batches={} batch-entries={} mean-depth={:.2}\n\
+             stripes: transfers={} chunks={} mean-chunks={:.2}\n\
+             engine bytes: [{}]\n\
              proxy service ns (mean): put={:.0} get={:.0} amo={:.0} other={:.0}\n\
              reduce: xla-calls={} xla-elems={} native-elems={}",
             self.puts,
@@ -271,6 +377,14 @@ impl MetricsSnapshot {
             self.xfer_batches,
             self.xfer_batch_entries,
             self.mean_batch_depth(),
+            self.stripe_transfers,
+            self.stripe_chunks,
+            self.mean_chunks_per_transfer(),
+            self.engine_bytes
+                .iter()
+                .map(|&b| crate::util::fmt_bytes(b as usize))
+                .collect::<Vec<_>>()
+                .join(" "),
             self.mean_service_ns(ServiceOp::Put),
             self.mean_service_ns(ServiceOp::Get),
             self.mean_service_ns(ServiceOp::Amo),
@@ -343,6 +457,48 @@ mod tests {
         assert_eq!(s.xfer_batch_depth_hist[3], 2);
         assert_eq!(s.xfer_batch_depth_hist.iter().sum::<u64>(), s.xfer_batches);
         assert!((s.mean_batch_depth() - 17.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stripe_and_engine_tables() {
+        let m = Metrics::new();
+        m.add_stripe(1);
+        m.add_stripe(9);
+        m.add_engine_dispatch(0, 1024);
+        m.add_engine_dispatch(3, 2048);
+        m.add_engine_dispatch(3, 2048);
+        m.add_engine_dispatch(999, 8); // clamps into the last slot
+        let s = m.snapshot();
+        assert_eq!(s.stripe_transfers, 2);
+        assert_eq!(s.stripe_chunks, 10);
+        assert_eq!(s.stripe_chunk_hist.iter().sum::<u64>(), s.stripe_transfers);
+        assert!((s.mean_chunks_per_transfer() - 5.0).abs() < 1e-9);
+        assert_eq!(s.engine_bytes[0], 1024);
+        assert_eq!(s.engine_bytes[3], 4096);
+        assert_eq!(s.engine_ops[3], 2);
+        assert_eq!(s.engine_bytes[ENGINE_SLOTS - 1], 8);
+        assert!(s.report().contains("mean-chunks=5.00"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_and_mirrors_counters() {
+        let m = Metrics::new();
+        Metrics::add(&m.puts, 7);
+        m.add_stripe(4);
+        m.add_engine_dispatch(2, 512);
+        m.add_service(ServiceOp::Get, 99);
+        let s = m.snapshot();
+        let j = crate::util::json::Json::parse(&s.to_json()).expect("snapshot JSON parses");
+        assert_eq!(j.get("puts").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("stripe_chunks").unwrap().as_usize(), Some(4));
+        let eng = j.get("engine_bytes").unwrap().as_arr().unwrap();
+        assert_eq!(eng.len(), ENGINE_SLOTS);
+        assert_eq!(eng[2].as_usize(), Some(512));
+        assert_eq!(
+            j.get("proxy_service_ops").unwrap().idx(ServiceOp::Get as usize).unwrap().as_usize(),
+            Some(1)
+        );
+        assert!(j.get("bytes_by_path_loc").unwrap().get("nic").is_some());
     }
 
     #[test]

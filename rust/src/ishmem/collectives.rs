@@ -205,24 +205,56 @@ impl PeCtx {
             }
             Route::CopyEngine => {
                 // One batched doorbell for the whole plan-group: every
-                // reachable peer becomes a heap-offset Put descriptor
+                // reachable peer becomes heap-offset Put descriptors
                 // (source is my user heap — no staging copy needed) that
-                // the proxy runs on a real `DeviceAddr` command list;
-                // the blocking flush returns once all entries executed,
-                // so the usual fan-out → team_sync ordering holds.
-                let std_cl = !self.rt.xfer.cl_immediate_for(bytes);
+                // the proxy runs on real `DeviceAddr` command lists. Large
+                // per-peer blocks are stripe-aware: chunks carry ids and
+                // least-loaded-engine hints so each link's fan-out spreads
+                // over its GPU's engines. The blocking flush returns once
+                // all entries executed, so the usual fan-out → team_sync
+                // ordering holds.
+                let gpu = self.my_gpu();
+                // Hints cycle over *all* engines (lightest first): the
+                // fan-out model charges the link at the aggregate
+                // engines_per_gpu rate, so dispatch must spread that wide
+                // too — per-transfer stripe width only sets chunk sizes.
+                let all_engines = self.rt.cost.params.ce.engines_per_gpu.max(1);
+                let engines = self.rt.cost.engine_pick(gpu, all_engines);
+                // One lane counter across the whole fan-out, so peers
+                // don't all pile their first chunk on the same engine.
+                let mut lane = 0usize;
                 for &peer in peers {
                     if self.ipc.lookup(peer).is_some() {
-                        let desc = crate::ringbuf::BatchDescriptor::put(
-                            peer, dst_off, src_off, bytes,
-                        )
-                        .with_standard_cl(std_cl);
-                        self.stream_append(desc, 0);
-                        self.rt.metrics.add_path_bytes(
-                            PathIdx::CopyEngine,
-                            self.loc_of(peer),
-                            bytes as u64,
+                        let loc = self.loc_of(peer);
+                        let (chunk, _width) = self.rt.cost.stripe_for(
+                            loc,
+                            bytes,
+                            usize::MAX,
+                            self.rt.xfer.cl_immediate_boundary(),
                         );
+                        let total = bytes.div_ceil(chunk.max(1));
+                        let std_cl = !self.rt.xfer.cl_immediate_for(chunk.min(bytes));
+                        for (idx, off, len, _eng) in
+                            crate::xfer::exec::chunk_iter(bytes, chunk, &engines)
+                        {
+                            let eng = engines[lane % engines.len()];
+                            lane += 1;
+                            let desc = crate::ringbuf::BatchDescriptor::put(
+                                peer,
+                                dst_off + off,
+                                src_off + off,
+                                len,
+                            )
+                            .with_standard_cl(std_cl)
+                            .with_chunk(idx as u32, total as u32, eng as u8);
+                            self.stream_append(desc, 0);
+                        }
+                        if total > 1 {
+                            self.rt.metrics.add_stripe(total);
+                        }
+                        self.rt
+                            .metrics
+                            .add_path_bytes(PathIdx::CopyEngine, loc, bytes as u64);
                     } else {
                         self.push_block(peer, src_off, dst_off, bytes, &wg);
                     }
@@ -382,7 +414,8 @@ impl PeCtx {
         for (_link, (loc, link_bytes, transfers)) in per_link {
             let startups = transfers.div_ceil(ce.engines_per_gpu) as f64;
             engine_time = engine_time.max(
-                startups * ce.startup_immediate_ns + link_bytes as f64 / ce.path_bw_gbs(xe, loc),
+                startups * ce.startup_immediate_ns
+                    + link_bytes as f64 / ce.striped_bw_gbs(xe, loc, ce.engines_per_gpu),
             );
         }
         self.clock.advance(

@@ -28,8 +28,11 @@ pub struct IshmemConfig {
     pub cl_immediate_max_bytes: usize,
     /// Staging slab carved from the top of each PE's device heap: holds
     /// batched payloads (raw-pointer transfers become heap-offset
-    /// transfers) and batch descriptor blocks. Payloads that cannot fit
-    /// fall back to the one-message-per-op raw-pointer path.
+    /// transfers) and batch descriptor blocks. Oversized payloads chunk
+    /// *through* the slab (striped chunk pipeline; see
+    /// `cost.ce.stripe_max_engines` / `cost.ce.chunk_min_bytes` for the
+    /// striping knobs) — the raw-pointer fallback engages only when a
+    /// single chunk cannot fit an empty slab.
     pub staging_slab_bytes: usize,
     /// Maximum descriptors per batched ring message (one `Batch` doorbell
     /// per plan-group); 1 reproduces per-op submission.
@@ -94,7 +97,34 @@ impl IshmemConfig {
             self.cutover.ema_alpha > 0.0 && self.cutover.ema_alpha <= 1.0,
             "cutover.ema_alpha must be in (0, 1]"
         );
+        anyhow::ensure!(
+            (0.0..=0.5).contains(&self.cutover.explore_eps),
+            "cutover.explore_eps must be in [0, 0.5]"
+        );
+        anyhow::ensure!(
+            self.cost.ce.stripe_max_engines >= 1,
+            "cost.ce.stripe_max_engines must be at least 1"
+        );
+        anyhow::ensure!(
+            self.cost.ce.chunk_min_bytes >= 1024,
+            "cost.ce.chunk_min_bytes below 1KB cannot amortize an engine startup"
+        );
+        anyhow::ensure!(
+            self.cost.ce.single_engine_frac > 0.0 && self.cost.ce.single_engine_frac <= 1.0,
+            "cost.ce.single_engine_frac must be in (0, 1]"
+        );
         Ok(())
+    }
+
+    /// Largest chunk the striped pipeline can double-buffer through the
+    /// staging slab (two chunks in flight + the stream's per-claim
+    /// headroom + alignment slack for both claims). Below
+    /// `chunk_min_bytes` the chunk pipeline disables itself and oversized
+    /// payloads take the raw-pointer fallback.
+    pub fn chunk_max_bytes(&self) -> usize {
+        let headroom =
+            crate::xfer::stream::slab_headroom_bytes(self.max_batch_depth) + 2 * 64;
+        self.staging_slab_bytes.saturating_sub(headroom) / 2
     }
 }
 
@@ -111,6 +141,26 @@ mod tests {
     fn bad_ring_capacity_rejected() {
         let cfg = IshmemConfig { ring_capacity: 1000, ..Default::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn stripe_knobs_validated() {
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.ce.stripe_max_engines = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.ce.chunk_min_bytes = 64;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.ce.single_engine_frac = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.cutover.explore_eps = 0.9;
+        assert!(cfg.validate().is_err());
+        // Default slab double-buffers roughly 1 MiB chunks.
+        let cfg = IshmemConfig::default();
+        let cap = cfg.chunk_max_bytes();
+        assert!(cap > 1000 << 10 && cap <= 1 << 20, "chunk cap {cap}");
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub struct CutoverConfig {
     pub fixed_threshold: Option<usize>,
     /// EMA weight of one observation in `Adaptive` mode (0 < α ≤ 1).
     pub ema_alpha: f64,
+    /// ε-exploration rate in `Adaptive` mode: with this probability a
+    /// decision takes the losing path, keeping both EMAs fresh so a
+    /// mis-seeded bucket can recover (0 = greedy, the default — benches
+    /// that want recovery opt in via [`Self::with_exploration`]).
+    pub explore_eps: f64,
 }
 
 impl Default for CutoverConfig {
@@ -60,6 +65,7 @@ impl Default for CutoverConfig {
             mode: CutoverMode::Tuned,
             fixed_threshold: None,
             ema_alpha: 0.25,
+            explore_eps: 0.0,
         }
     }
 }
@@ -92,6 +98,13 @@ impl CutoverConfig {
     /// Hard byte-threshold override on top of the current mode.
     pub fn with_threshold(mut self, bytes: usize) -> Self {
         self.fixed_threshold = Some(bytes);
+        self
+    }
+
+    /// ε-exploration on top of `Adaptive` (clamped to [0, 0.5] by the
+    /// learned table).
+    pub fn with_exploration(mut self, eps: f64) -> Self {
+        self.explore_eps = eps;
         self
     }
 

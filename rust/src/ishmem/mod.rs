@@ -137,6 +137,10 @@ impl Ishmem {
         // ask the proxy for standard lists; the planner's estimates use
         // the same boundary so decisions and charges agree.
         xfer.cl_immediate_max_bytes = config.cl_immediate_max_bytes;
+        // Striped chunk pipeline: the stripe planner's chunk cap is what
+        // the staging slab can double-buffer, so modeled stripes and the
+        // executor's slicing agree.
+        xfer.chunk_max_bytes = config.chunk_max_bytes();
 
         Ok(Arc::new(Ishmem {
             pmi: PmiWorld::new(npes),
@@ -334,6 +338,14 @@ impl PeCtx {
     /// reverse-offloads through the proxy.
     pub fn pe_accessible(&self, pe: usize) -> bool {
         self.ipc.lookup(pe).is_some()
+    }
+
+    /// Chunks of striped non-blocking transfers whose single aggregated
+    /// completion is still outstanding on this PE (drains to 0 at
+    /// `quiet`) — the observability hook for the per-chunk→one-token
+    /// aggregation in [`crate::xfer::track`].
+    pub fn outstanding_chunk_count(&self) -> u64 {
+        self.track.outstanding_chunks()
     }
 
     /// `ishmem_malloc` — collective symmetric allocation (synchronizing,

@@ -11,12 +11,17 @@
 //! descriptor block out of the initiator's staging slab and dispatches
 //! each entry under its own command-list policy (§III-C) — immediate
 //! lists for latency-critical entries, and one *staged standard command
-//! list per batch* (append → close → execute) for the rest. Because
-//! batched payloads are staged into the symmetric heap, every batched
-//! entry is heap-offset shaped and runs on real `DeviceAddr` command
-//! lists; the raw-pointer staging branch below survives only for
-//! oversized fallback messages.
+//! list per engine per batch* (append → close → execute) for the rest:
+//! striped chunks carry an engine hint assigned initiator-side from the
+//! least-loaded engine queues, and the proxy round-robins them onto the
+//! matching per-engine lists so a large transfer's chunks genuinely run
+//! on different blitters. Because batched payloads are staged into the
+//! symmetric heap, every batched entry is heap-offset shaped and runs on
+//! real `DeviceAddr` command lists; the raw-pointer staging branch below
+//! survives only for payloads whose single chunk cannot fit an empty
+//! slab.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -145,9 +150,12 @@ fn is_local(sh: &ProxyShared, a: usize, b: usize) -> bool {
 
 /// Service one `Batch` doorbell: decode the descriptor block from the
 /// initiator's staging slab and dispatch every entry. Standard-CL entries
-/// accumulate on one staged command list per batch, executed once after
-/// the scan (append → close → execute); immediate entries run inline.
-/// One completion retires the whole plan-group.
+/// accumulate on one staged command list *per engine hint* (striped
+/// chunks land on their assigned engines; un-chunked entries on engine
+/// 0's list), each executed once after the scan (append → close →
+/// execute); immediate entries run inline. One completion retires the
+/// whole plan-group — per-chunk completions aggregate into that single
+/// token on the initiator side.
 fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     let src_pe = msg.src_pe as usize;
     let n = msg.len as usize;
@@ -158,23 +166,30 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     sh.metrics.add_batch(n);
 
     let mut status = PROXY_OK;
-    let mut staged_cl: Option<CommandList> = None;
+    let mut staged_cls: BTreeMap<usize, CommandList> = BTreeMap::new();
     for d in &descs {
         let t0 = Instant::now();
         let op = d.ring_op().expect("validated by decode_block");
-        if !dispatch_batch_entry(sh, src_pe, d, op, &mut staged_cl, proxy_clock) {
+        if !dispatch_batch_entry(sh, src_pe, d, op, &mut staged_cls, proxy_clock) {
             status = PROXY_ERR_UNREGISTERED;
         }
         sh.metrics
             .add_service(service_family(op), t0.elapsed().as_nanos() as u64);
     }
-    if let Some(mut cl) = staged_cl {
+    // The per-engine lists run on *different* blitters concurrently:
+    // execute each on its own scratch clock and advance the proxy clock
+    // by the slowest engine's time, not the sum.
+    let mut slowest = 0.0f64;
+    for (_engine, mut cl) in staged_cls {
         let t0 = Instant::now();
         cl.close();
-        cl.execute(&CommandQueue::default(), proxy_clock);
+        let scratch = SimClock::new();
+        cl.execute(&CommandQueue::default(), &scratch);
+        slowest = slowest.max(scratch.now_ns());
         sh.metrics
             .add_service(ServiceOp::Other, t0.elapsed().as_nanos() as u64);
     }
+    proxy_clock.advance(slowest);
     complete(sh, msg, status);
 }
 
@@ -185,7 +200,7 @@ fn dispatch_batch_entry(
     src_pe: usize,
     d: &BatchDescriptor,
     op: RingOp,
-    staged_cl: &mut Option<CommandList>,
+    staged_cls: &mut BTreeMap<usize, CommandList>,
     proxy_clock: &SimClock,
 ) -> bool {
     let pe = d.pe as usize;
@@ -195,9 +210,11 @@ fn dispatch_batch_entry(
             if is_local(sh, src_pe, pe) {
                 let dst = DeviceAddr { pe, offset: d.dst_off as usize };
                 let src = DeviceAddr { pe: src_pe, offset: d.src_off as usize };
+                sh.metrics.add_engine_dispatch(d.engine_hint(), len as u64);
                 if d.standard_cl() {
-                    staged_cl
-                        .get_or_insert_with(|| sh.driver.create_command_list(src_pe))
+                    staged_cls
+                        .entry(d.engine_hint())
+                        .or_insert_with(|| sh.driver.create_command_list(src_pe))
                         .append_memory_copy(dst, src, len, None);
                 } else {
                     engine_copy(sh, src_pe, dst, src, len, true, proxy_clock);
@@ -215,9 +232,11 @@ fn dispatch_batch_entry(
                 // Result lands in the initiator's staging slab.
                 let dst = DeviceAddr { pe: src_pe, offset: d.dst_off as usize };
                 let src = DeviceAddr { pe, offset: d.src_off as usize };
+                sh.metrics.add_engine_dispatch(d.engine_hint(), len as u64);
                 if d.standard_cl() {
-                    staged_cl
-                        .get_or_insert_with(|| sh.driver.create_command_list(src_pe))
+                    staged_cls
+                        .entry(d.engine_hint())
+                        .or_insert_with(|| sh.driver.create_command_list(src_pe))
                         .append_memory_copy(dst, src, len, None);
                 } else {
                     engine_copy(sh, src_pe, dst, src, len, true, proxy_clock);

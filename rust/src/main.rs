@@ -14,7 +14,10 @@ USAGE:
   rishmem figure <ID> [--out DIR]     regenerate a paper figure
         IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig5-adaptive
              fig6-4pe fig6-8pe fig6-12pe fig7a fig7b ring fig-batch
-             ablate-cl ablate-sync cutover-table all
+             fig-stripe ablate-cl ablate-sync cutover-table all
+  rishmem metrics [--json] [--pes N]  run a representative workload and
+                                      dump the metrics snapshot (text or
+                                      JSON for dashboard scraping)
   rishmem train [--model M] [--pes N] [--steps S] [--lr F] [--seed K]
                                       data-parallel training (e2e driver)
   rishmem ze-peer                     raw Level-Zero copy-engine baseline
@@ -26,6 +29,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("figure") => cmd_figure(&args[1..]),
+        Some("metrics") => cmd_metrics(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
         Some("ze-peer") => cmd_zepeer(),
         Some("quickstart") => cmd_quickstart(),
@@ -52,7 +56,12 @@ fn flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         if let Some(key) = a.strip_prefix("--") {
-            let val = it.next().cloned().unwrap_or_default();
+            // Boolean flags (e.g. --json) must not swallow a following
+            // flag as their value.
+            let val = match it.peek() {
+                Some(next) if !next.starts_with("--") => it.next().cloned().unwrap(),
+                _ => String::new(),
+            };
             kv.insert(key.to_string(), val);
         } else {
             pos.push(a.clone());
@@ -96,6 +105,7 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "fig7b" => vec![figures::fig7b()],
         "ring" => vec![figures::ring_figure()],
         "fig-batch" => vec![figures::fig_batch()],
+        "fig-stripe" => vec![figures::fig_stripe()],
         "ablate-cl" => vec![figures::ablate_cmdlists()],
         "ablate-sync" => vec![figures::ablate_sync()],
         "all" => figures::all_figures(),
@@ -104,6 +114,43 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
     for f in &figs {
         emit(f, out)?;
     }
+    Ok(())
+}
+
+/// Run a short representative workload (every data path: load/store,
+/// striped copy-engine, NBI batch + quiet, AMOs) on a fresh machine and
+/// dump the metrics snapshot — `--json` for dashboard scraping, including
+/// the per-engine dispatch tables and the chunks-per-transfer histogram.
+fn cmd_metrics(args: &[String]) -> anyhow::Result<()> {
+    use rishmem::{Ishmem, IshmemConfig};
+    let (_, kv) = flags(args);
+    let json = kv.contains_key("json");
+    let pes: usize = kv.get("pes").map_or(Ok(12), |v| v.parse())?;
+    let ish = Ishmem::new(IshmemConfig::with_npes(pes))?;
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(4 << 20);
+        let word = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        let t = (ctx.pe() + 1) % ctx.npes();
+        // Small put → load/store; large put → striped copy engines.
+        ctx.put(buf, &[1u8; 64], t);
+        ctx.put(buf, &vec![2u8; 2 << 20], t);
+        // NBI burst riding one batched doorbell, drained by quiet.
+        let data = vec![3u8; 1024];
+        for i in 0..4 {
+            ctx.put_nbi(buf.slice(i * 1024, 1024), &data, t);
+        }
+        ctx.atomic_add(word, 1u64, t);
+        ctx.quiet();
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    if json {
+        println!("{}", snap.to_json());
+    } else {
+        println!("{}", snap.report());
+    }
+    ish.shutdown();
     Ok(())
 }
 

@@ -23,6 +23,15 @@ pub const DESC_SIZE: usize = 48;
 /// Same bit position for every op kind.
 pub const DESC_FLAG_STANDARD_CL: u16 = 1 << 9;
 
+/// Descriptor flag: this entry is one chunk of a striped transfer —
+/// `inline_val` carries the continuation fields (chunk index, chunk
+/// count, engine hint; see [`BatchDescriptor::with_chunk`]). Only set on
+/// Put/Get entries, whose `inline_val` is otherwise unused.
+pub const DESC_FLAG_CHUNKED: u16 = 1 << 10;
+
+/// Widest chunk index / chunk count the continuation field can carry.
+pub const CHUNK_FIELD_MAX: u32 = (1 << 24) - 1;
+
 /// One batched-operation descriptor. Offsets are symmetric-heap byte
 /// offsets: `src_off`/`dst_off` never carry raw pointers — raw-pointer
 /// payloads are staged through the slab before the descriptor is written,
@@ -71,6 +80,71 @@ impl BatchDescriptor {
     /// initiator-slab `dst_off`.
     pub fn get(pe: usize, dst_off: usize, src_off: usize, len: usize) -> Self {
         BatchDescriptor { op: RingOp::Get as u8, ..Self::put(pe, dst_off, src_off, len) }
+    }
+
+    /// A non-fetching AMO entry (fire-and-forget atomics batch through the
+    /// stream; fetching kinds gate their caller and ship their own
+    /// message). The kind rides in the low flag byte, mirroring
+    /// `Message::amo_kind`.
+    pub fn amo(pe: usize, dst_off: usize, dtype: u8, kind: u8, operand: u64, comparand: u64) -> Self {
+        BatchDescriptor {
+            op: RingOp::Amo as u8,
+            dtype,
+            flags: kind as u16,
+            pe: pe as u32,
+            dst_off: dst_off as u64,
+            src_off: 0,
+            len: 0,
+            inline_val: operand,
+            inline_val2: comparand,
+        }
+    }
+
+    /// Mark this entry as chunk `index` of `count` in a striped transfer,
+    /// bound for engine slot `engine` on the initiator's GPU. The
+    /// continuation fields pack into `inline_val` (bits 0–23 index,
+    /// 24–47 count, 48–55 engine), which Put/Get entries never use.
+    /// Un-striped engine-route entries use the degenerate `(0, 1, eng)`
+    /// shape purely to carry their engine placement to the proxy.
+    pub fn with_chunk(mut self, index: u32, count: u32, engine: u8) -> Self {
+        assert!(index <= CHUNK_FIELD_MAX && count <= CHUNK_FIELD_MAX, "chunk field overflow");
+        self.flags |= DESC_FLAG_CHUNKED;
+        self.inline_val =
+            index as u64 | ((count as u64) << 24) | ((engine as u64) << 48);
+        self
+    }
+
+    /// Whether this entry is one chunk of a striped transfer.
+    pub fn is_chunked(&self) -> bool {
+        self.flags & DESC_FLAG_CHUNKED != 0
+    }
+
+    /// Chunk index within the transfer (0 for un-chunked entries).
+    pub fn chunk_index(&self) -> u32 {
+        if self.is_chunked() {
+            (self.inline_val & CHUNK_FIELD_MAX as u64) as u32
+        } else {
+            0
+        }
+    }
+
+    /// Total chunks in the transfer (1 for un-chunked entries).
+    pub fn chunk_count(&self) -> u32 {
+        if self.is_chunked() {
+            ((self.inline_val >> 24) & CHUNK_FIELD_MAX as u64) as u32
+        } else {
+            1
+        }
+    }
+
+    /// Engine slot this chunk should dispatch on (0 when un-chunked —
+    /// the proxy's default standard command list).
+    pub fn engine_hint(&self) -> usize {
+        if self.is_chunked() {
+            ((self.inline_val >> 48) & 0xFF) as usize
+        } else {
+            0
+        }
     }
 
     /// Whether this entry asks for a standard command list.
@@ -185,6 +259,35 @@ mod tests {
         assert_eq!(bytes.len(), 5 * DESC_SIZE);
         assert_eq!(BatchDescriptor::decode_block(&bytes, 5), Some(descs));
         assert_eq!(BatchDescriptor::decode_block(&bytes[..40], 5), None);
+    }
+
+    #[test]
+    fn chunk_fields_pack_and_roundtrip() {
+        let d = BatchDescriptor::put(3, 4096, 8192, 1 << 20).with_chunk(5, 9, 6);
+        assert!(d.is_chunked());
+        assert_eq!(d.chunk_index(), 5);
+        assert_eq!(d.chunk_count(), 9);
+        assert_eq!(d.engine_hint(), 6);
+        assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
+        // Un-chunked entries report the identity shape.
+        let p = BatchDescriptor::put(3, 0, 0, 64);
+        assert!(!p.is_chunked());
+        assert_eq!((p.chunk_index(), p.chunk_count(), p.engine_hint()), (0, 1, 0));
+        // Extremes of the packed fields survive.
+        let d = BatchDescriptor::get(0, 0, 0, 8).with_chunk(CHUNK_FIELD_MAX, CHUNK_FIELD_MAX, 255);
+        assert_eq!(d.chunk_index(), CHUNK_FIELD_MAX);
+        assert_eq!(d.chunk_count(), CHUNK_FIELD_MAX);
+        assert_eq!(d.engine_hint(), 255);
+    }
+
+    #[test]
+    fn amo_descriptor_carries_kind_and_operands() {
+        use crate::ringbuf::message::AmoKind;
+        let d = BatchDescriptor::amo(4, 128, 7, AmoKind::Add as u8, 42, 9);
+        assert_eq!(d.ring_op(), Some(RingOp::Amo));
+        assert_eq!(d.flags & 0xFF, AmoKind::Add as u8 as u16);
+        assert_eq!((d.inline_val, d.inline_val2), (42, 9));
+        assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
     }
 
     #[test]

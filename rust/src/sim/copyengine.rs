@@ -1,14 +1,22 @@
 //! GPU copy-engine model (paper §III-B, §III-C).
 //!
 //! PVC blitter engines run Xe-Links at full speed while compute cores stay
-//! busy — but pay a startup latency per transfer. ishmem's cutover strategy
-//! exists precisely because of this trade-off: organic load/store wins for
-//! small messages, engines win for big ones (Fig 3–5).
+//! busy — but pay a startup latency per transfer, and a *single* engine
+//! sustains only a fraction of the path roofline (`single_engine_frac`).
+//! PVC exposes `engines_per_gpu` main copy engines: striping a large
+//! transfer's chunks across `k` engines sustains `min(k · engine_bw,
+//! path_bw)` — which is why the xfer planner pipelines chunked slabs over
+//! several engines (ISSUE 3) instead of parking everything on one queue.
 //!
-//! The model: `startup + doorbell + bytes / path_bw`. Engines are a per-GPU
-//! resource; concurrent users of one GPU's engines queue (modeled by an
-//! occupancy counter so collectives that fan out N transfers see
-//! serialization on the shared engine).
+//! ishmem's cutover strategy exists precisely because of the startup
+//! trade-off: organic load/store wins for small messages, engines win for
+//! big ones (Fig 3–5).
+//!
+//! The model: `startups + doorbell + bytes / striped_bw`. Engines are a
+//! per-GPU resource; each engine keeps its own byte backlog of
+//! accepted-but-incomplete work ([`EngineQueue`]), so the planner can both
+//! fold the total backlog into its engine-path estimate *and* place new
+//! chunks on the least-loaded engines.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -27,6 +35,16 @@ pub struct CopyEngineParams {
     pub host_doorbell_ns: f64,
     /// Number of main copy engines per GPU.
     pub engines_per_gpu: usize,
+    /// Sustained single-engine copy rate as a fraction of the path
+    /// roofline: one blitter cannot saturate the link on its own; striping
+    /// chunks across `k` engines sustains `min(k · frac, 1) · path_bw`.
+    pub single_engine_frac: f64,
+    /// Maximum engines one transfer may stripe across (planner knob; the
+    /// per-GPU engine count still caps it).
+    pub stripe_max_engines: usize,
+    /// Smallest chunk worth its own engine startup: transfers at or below
+    /// twice this size never stripe (planner knob).
+    pub chunk_min_bytes: usize,
 }
 
 impl Default for CopyEngineParams {
@@ -36,13 +54,17 @@ impl Default for CopyEngineParams {
             startup_standard_ns: 5_500.0,
             host_doorbell_ns: 900.0,
             engines_per_gpu: 8,
+            single_engine_frac: 0.25,
+            stripe_max_engines: 4,
+            chunk_min_bytes: 256 << 10,
         }
     }
 }
 
 impl CopyEngineParams {
-    /// Copy-engine path bandwidth — engines drive the same links as
-    /// load/store but sustain the full rate (plus faster same-tile blits).
+    /// Copy-engine path roofline — the engines drive the same links as
+    /// load/store and, striped wide enough, sustain the full rate (plus
+    /// faster same-tile blits).
     pub fn path_bw_gbs(&self, xe: &XeLinkParams, loc: Locality) -> f64 {
         match loc {
             Locality::SameTile => xe.hbm_bw_gbs / 2.0,
@@ -52,7 +74,18 @@ impl CopyEngineParams {
         }
     }
 
-    /// Modeled duration of one engine transfer (ns).
+    /// Sustained rate of one engine on this path.
+    pub fn engine_bw_gbs(&self, xe: &XeLinkParams, loc: Locality) -> f64 {
+        self.path_bw_gbs(xe, loc) * self.single_engine_frac.clamp(0.01, 1.0)
+    }
+
+    /// Aggregate rate of `width` engines striping one transfer, capped at
+    /// the path roofline (the physical link is still shared).
+    pub fn striped_bw_gbs(&self, xe: &XeLinkParams, loc: Locality, width: usize) -> f64 {
+        (width.max(1) as f64 * self.engine_bw_gbs(xe, loc)).min(self.path_bw_gbs(xe, loc))
+    }
+
+    /// Modeled duration of one *single-engine* transfer (ns).
     pub fn transfer_ns(
         &self,
         xe: &XeLinkParams,
@@ -61,40 +94,65 @@ impl CopyEngineParams {
         immediate_cl: bool,
         host_initiated: bool,
     ) -> f64 {
+        self.striped_transfer_ns(xe, loc, bytes, immediate_cl, host_initiated, 1, 1)
+    }
+
+    /// Modeled duration of `bytes` split into `chunks` chunks striped over
+    /// `width` engines (ns): each engine runs its chunks back-to-back
+    /// (`ceil(chunks / width)` startups on the critical path), the data
+    /// itself moves at the striped rate.
+    pub fn striped_transfer_ns(
+        &self,
+        xe: &XeLinkParams,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        host_initiated: bool,
+        width: usize,
+        chunks: usize,
+    ) -> f64 {
         assert!(loc != Locality::Remote, "engines cannot cross nodes");
-        let mut t = if immediate_cl {
+        let chunks = chunks.max(1);
+        let width = width.clamp(1, self.engines_per_gpu.max(1)).min(chunks);
+        let startup = if immediate_cl {
             self.startup_immediate_ns
         } else {
             self.startup_standard_ns
         };
+        let mut t = chunks.div_ceil(width) as f64 * startup;
         if host_initiated {
             t += self.host_doorbell_ns;
         }
-        t + bytes as f64 / self.path_bw_gbs(xe, loc)
+        t + bytes as f64 / self.striped_bw_gbs(xe, loc, width)
     }
 }
 
-/// Per-GPU engine occupancy: transfers queued beyond `engines_per_gpu`
-/// serialize. Tracked with a simple in-flight counter — enough to model the
-/// contention shape (fcollect fanning out N copies on one GPU) — plus an
-/// outstanding-bytes backlog that the planner folds into its engine-path
-/// estimate, so cutover decisions shift while the queue is loaded.
+/// Per-GPU engine state: an in-flight counter (transfers queued beyond
+/// `engines_per_gpu` serialize) plus a *per-engine* byte backlog of
+/// accepted-but-incomplete work (blocking ops hold their bytes for the
+/// call; NBI ops until quiet). The planner folds the total backlog into
+/// its engine-path estimate and places new chunks on the least-loaded
+/// engines.
 #[derive(Debug)]
 pub struct EngineQueue {
     in_flight: AtomicU64,
-    /// Bytes of copy-engine work accepted but not yet modeled complete
-    /// (blocking ops hold their bytes for the call; NBI ops until quiet).
-    queued_bytes: AtomicU64,
+    /// Outstanding bytes per engine (index = engine slot on this GPU).
+    per_engine_bytes: Vec<AtomicU64>,
     engines: u64,
 }
 
 impl EngineQueue {
     pub fn new(engines: usize) -> Self {
+        let engines = engines.max(1);
         EngineQueue {
             in_flight: AtomicU64::new(0),
-            queued_bytes: AtomicU64::new(0),
-            engines: engines.max(1) as u64,
+            per_engine_bytes: (0..engines).map(|_| AtomicU64::new(0)).collect(),
+            engines: engines as u64,
         }
+    }
+
+    pub fn engines(&self) -> usize {
+        self.per_engine_bytes.len()
     }
 
     /// Charge factor for a new transfer: 1.0 while engines are free, then
@@ -116,20 +174,59 @@ impl EngineQueue {
         self.in_flight.load(Ordering::Acquire)
     }
 
-    /// Register `bytes` of accepted-but-incomplete engine work.
-    pub fn reserve_bytes(&self, bytes: u64) {
-        self.queued_bytes.fetch_add(bytes, Ordering::AcqRel);
+    fn slot(&self, engine: usize) -> &AtomicU64 {
+        &self.per_engine_bytes[engine.min(self.per_engine_bytes.len() - 1)]
     }
 
-    /// Retire previously reserved engine work.
-    pub fn release_bytes(&self, bytes: u64) {
-        let prev = self.queued_bytes.fetch_sub(bytes, Ordering::AcqRel);
+    /// Register `bytes` of accepted-but-incomplete work on `engine`.
+    pub fn reserve_on(&self, engine: usize, bytes: u64) {
+        self.slot(engine).fetch_add(bytes, Ordering::AcqRel);
+    }
+
+    /// Retire work previously reserved on `engine`.
+    pub fn release_on(&self, engine: usize, bytes: u64) {
+        let prev = self.slot(engine).fetch_sub(bytes, Ordering::AcqRel);
         debug_assert!(prev >= bytes, "engine backlog underflow: {prev} - {bytes}");
     }
 
-    /// Current byte backlog on this GPU's engines.
+    /// Legacy single-queue view: reserve on engine 0.
+    pub fn reserve_bytes(&self, bytes: u64) {
+        self.reserve_on(0, bytes);
+    }
+
+    /// Legacy single-queue view: release from engine 0.
+    pub fn release_bytes(&self, bytes: u64) {
+        self.release_on(0, bytes);
+    }
+
+    /// Current byte backlog of one engine.
+    pub fn engine_bytes(&self, engine: usize) -> u64 {
+        self.slot(engine).load(Ordering::Acquire)
+    }
+
+    /// Total byte backlog across this GPU's engines.
     pub fn queued_bytes(&self) -> u64 {
-        self.queued_bytes.load(Ordering::Acquire)
+        self.per_engine_bytes
+            .iter()
+            .map(|b| b.load(Ordering::Acquire))
+            .sum()
+    }
+
+    /// The `width` least-loaded engine slots, lightest first (approximate
+    /// under concurrency — placement, not correctness, depends on it).
+    pub fn least_loaded(&self, width: usize) -> Vec<usize> {
+        let mut loads: Vec<(u64, usize)> = self
+            .per_engine_bytes
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.load(Ordering::Acquire), i))
+            .collect();
+        loads.sort_unstable();
+        loads
+            .into_iter()
+            .take(width.clamp(1, self.per_engine_bytes.len()))
+            .map(|(_, i)| i)
+            .collect()
     }
 }
 
@@ -159,7 +256,7 @@ mod tests {
     #[test]
     fn engine_beats_loadstore_for_large_only() {
         // The Fig 3 crossover: single-thread load/store wins below ~4KB,
-        // engine wins above.
+        // engine wins above (even at the single-engine rate).
         let ce = CopyEngineParams::default();
         let xe = XeLinkParams::default();
         let small = 1024;
@@ -172,6 +269,32 @@ mod tests {
             xe.loadstore_ns(Locality::SameNode, large, 1)
                 > ce.transfer_ns(&xe, Locality::SameNode, large, true, false)
         );
+    }
+
+    #[test]
+    fn striping_recovers_the_link_roofline() {
+        let ce = CopyEngineParams::default();
+        let xe = XeLinkParams::default();
+        let loc = Locality::SameNode;
+        // One engine is a fraction of the link; four reach the roofline.
+        assert!(ce.engine_bw_gbs(&xe, loc) < ce.path_bw_gbs(&xe, loc) / 2.0);
+        assert_eq!(ce.striped_bw_gbs(&xe, loc, 4), ce.path_bw_gbs(&xe, loc));
+        // Width never pushes past the physical link.
+        assert_eq!(ce.striped_bw_gbs(&xe, loc, 64), ce.path_bw_gbs(&xe, loc));
+        // A striped 4 MiB transfer beats the single-engine one ≥2×.
+        let bytes = 4 << 20;
+        let single = ce.striped_transfer_ns(&xe, loc, bytes, true, false, 1, 1);
+        let striped = ce.striped_transfer_ns(&xe, loc, bytes, true, false, 4, 4);
+        assert!(striped * 2.0 <= single, "striped {striped} !<= single {single}/2");
+    }
+
+    #[test]
+    fn striped_transfer_degenerates_to_single() {
+        let ce = CopyEngineParams::default();
+        let xe = XeLinkParams::default();
+        let a = ce.transfer_ns(&xe, Locality::SameGpu, 4096, true, true);
+        let b = ce.striped_transfer_ns(&xe, Locality::SameGpu, 4096, true, true, 1, 1);
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -196,5 +319,37 @@ mod tests {
         q.release_bytes(4096);
         q.release_bytes(1 << 20);
         assert_eq!(q.queued_bytes(), 0);
+    }
+
+    #[test]
+    fn per_engine_backlog_is_independent() {
+        let q = EngineQueue::new(4);
+        q.reserve_on(1, 100);
+        q.reserve_on(3, 50);
+        assert_eq!(q.engine_bytes(1), 100);
+        assert_eq!(q.engine_bytes(3), 50);
+        assert_eq!(q.engine_bytes(0), 0);
+        assert_eq!(q.queued_bytes(), 150);
+        // Out-of-range engine indices clamp to the last slot.
+        q.reserve_on(99, 7);
+        assert_eq!(q.engine_bytes(3), 57);
+        q.release_on(99, 7);
+        q.release_on(1, 100);
+        q.release_on(3, 50);
+        assert_eq!(q.queued_bytes(), 0);
+    }
+
+    #[test]
+    fn least_loaded_orders_by_backlog() {
+        let q = EngineQueue::new(4);
+        q.reserve_on(0, 300);
+        q.reserve_on(1, 100);
+        q.reserve_on(2, 200);
+        // Engine 3 is empty → lightest; then 1, 2, 0.
+        assert_eq!(q.least_loaded(4), vec![3, 1, 2, 0]);
+        assert_eq!(q.least_loaded(2), vec![3, 1]);
+        // Width clamps to the engine count and to ≥1.
+        assert_eq!(q.least_loaded(0).len(), 1);
+        assert_eq!(q.least_loaded(99).len(), 4);
     }
 }

@@ -107,24 +107,122 @@ impl CostModel {
         ring + base * factor
     }
 
-    /// Planning *estimate* of the device-initiated engine path: ring
-    /// round trip + one engine transfer at full link speed, no queueing.
-    /// The single copy of the cutover decision's engine-side formula —
-    /// shared by the xfer planner (configured CL flavour) and the
-    /// policy-level reference in `ishmem::cutover` (immediate CL).
-    pub fn p2p_engine_estimate_ns(&self, loc: Locality, bytes: usize, immediate_cl: bool) -> f64 {
+    /// Queue-aware charge for a device-initiated transfer of `bytes` in
+    /// `chunks` chunks striped over `width` engines (ring round trip +
+    /// striped engine pipeline, scaled by the live occupancy factor).
+    pub fn copy_engine_striped_ns(
+        &self,
+        src_gpu: usize,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        width: usize,
+        chunks: usize,
+    ) -> f64 {
+        let q = &self.engine_queues[src_gpu];
+        let factor = q.begin();
+        let base = self.params.ce.striped_transfer_ns(
+            &self.params.xe,
+            loc,
+            bytes,
+            immediate_cl,
+            false,
+            width,
+            chunks,
+        );
+        q.end();
+        self.ring_rtt_ns() + base * factor
+    }
+
+    // ------------------------------------------------- stripe planning ----
+
+    /// Pick a (chunk size, stripe width) for an engine-path transfer of
+    /// `bytes`: scan widths up to `stripe_max_engines`, charging each
+    /// candidate's startup amortization against its striped bandwidth, and
+    /// keep the modeled argmin. `chunk_cap` is the caller's slab ceiling
+    /// (the largest chunk the staging pipeline can double-buffer);
+    /// `usize::MAX` for policy-level references with no slab in the path.
+    /// `cl_immediate_max` is the per-op CL boundary: candidates whose
+    /// chunks fit it are scored with the immediate startup, larger ones
+    /// with the standard startup — the same flavor the estimate and the
+    /// executors will actually use (`usize::MAX` = all immediate, 0 = all
+    /// standard). A cap below `chunk_min_bytes` disables the chunk
+    /// pipeline entirely: the transfer stays a single un-striped unit.
+    pub fn stripe_for(
+        &self,
+        loc: Locality,
+        bytes: usize,
+        chunk_cap: usize,
+        cl_immediate_max: usize,
+    ) -> (usize, usize) {
+        let ce = &self.params.ce;
+        let chunk_min = ce.chunk_min_bytes.max(1);
+        if bytes == 0 || chunk_cap < chunk_min {
+            return (bytes.max(1), 1);
+        }
+        // Too small to amortize a second startup, and a single chunk
+        // fits. Strictly below 2·chunk_min: at exactly two minimum chunks
+        // striping must engage, or the modeled time would *drop* across
+        // the boundary (width scales with size, keeping per-pow2-step
+        // estimates monotone).
+        if bytes < 2 * chunk_min && bytes <= chunk_cap {
+            return (bytes, 1);
+        }
+        let w_max = ce.stripe_max_engines.clamp(1, ce.engines_per_gpu.max(1));
+        let mut best = (bytes.min(chunk_cap), 1usize);
+        let mut best_ns = f64::INFINITY;
+        for w in 1..=w_max {
+            let chunk = bytes.div_ceil(w).clamp(chunk_min, chunk_cap);
+            let n = bytes.div_ceil(chunk);
+            let eff_w = w.min(n);
+            let imm = chunk <= cl_immediate_max;
+            let ns = ce.striped_transfer_ns(&self.params.xe, loc, bytes, imm, false, eff_w, n);
+            if ns < best_ns {
+                best_ns = ns;
+                best = (chunk, eff_w);
+            }
+        }
+        best
+    }
+
+    /// Planning *estimate* of the device-initiated engine path: ring round
+    /// trip + the striped chunk pipeline (no queueing), with the stripe
+    /// shape chosen under `chunk_cap`. The single copy of the cutover
+    /// decision's engine-side formula — shared by the xfer planner
+    /// (slab-capped chunks, configured CL flavour) and the policy-level
+    /// reference in `ishmem::cutover` (uncapped, immediate CL).
+    pub fn p2p_engine_estimate_capped_ns(
+        &self,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        chunk_cap: usize,
+    ) -> f64 {
+        let cl_max = if immediate_cl { usize::MAX } else { 0 };
+        let (chunk, width) = self.stripe_for(loc, bytes, chunk_cap, cl_max);
+        let n = bytes.max(1).div_ceil(chunk.max(1));
         self.ring_rtt_ns()
-            + self
-                .params
-                .ce
-                .transfer_ns(&self.params.xe, loc, bytes, immediate_cl, false)
+            + self.params.ce.striped_transfer_ns(
+                &self.params.xe,
+                loc,
+                bytes,
+                immediate_cl,
+                false,
+                width,
+                n,
+            )
+    }
+
+    /// Uncapped reference estimate (see [`Self::p2p_engine_estimate_capped_ns`]).
+    pub fn p2p_engine_estimate_ns(&self, loc: Locality, bytes: usize, immediate_cl: bool) -> f64 {
+        self.p2p_engine_estimate_capped_ns(loc, bytes, immediate_cl, usize::MAX)
     }
 
     /// Occupancy-aware engine estimate: the pure estimate plus the time to
     /// drain `backlog_bytes` already queued on the source GPU's engines at
-    /// the path bandwidth. This is what makes cutover decisions shift
-    /// under load — a loaded engine queue makes the store path win at
-    /// sizes where an idle queue would pick the engines.
+    /// the aggregate engine rate. This is what makes cutover decisions
+    /// shift under load — a loaded engine queue makes the store path win
+    /// at sizes where an idle queue would pick the engines.
     pub fn p2p_engine_estimate_loaded_ns(
         &self,
         loc: Locality,
@@ -132,14 +230,41 @@ impl CostModel {
         immediate_cl: bool,
         backlog_bytes: u64,
     ) -> f64 {
-        let bw = self.params.ce.path_bw_gbs(&self.params.xe, loc);
-        let drain = if bw > 0.0 { backlog_bytes as f64 / bw } else { 0.0 };
-        self.p2p_engine_estimate_ns(loc, bytes, immediate_cl) + drain
+        self.p2p_engine_estimate_capped_loaded_ns(loc, bytes, immediate_cl, usize::MAX, backlog_bytes)
+    }
+
+    /// Slab-capped variant of the loaded estimate (the xfer planner's
+    /// live formula).
+    pub fn p2p_engine_estimate_capped_loaded_ns(
+        &self,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        chunk_cap: usize,
+        backlog_bytes: u64,
+    ) -> f64 {
+        self.p2p_engine_estimate_capped_ns(loc, bytes, immediate_cl, chunk_cap)
+            + self.engine_drain_ns(loc, backlog_bytes)
+    }
+
+    /// Time to drain `backlog_bytes` already queued on a GPU's engines at
+    /// the aggregate engine rate (the occupancy term of the loaded
+    /// estimates).
+    pub fn engine_drain_ns(&self, loc: Locality, backlog_bytes: u64) -> f64 {
+        let ce = &self.params.ce;
+        let bw = ce.striped_bw_gbs(&self.params.xe, loc, ce.engines_per_gpu);
+        if bw > 0.0 {
+            backlog_bytes as f64 / bw
+        } else {
+            0.0
+        }
     }
 
     // --------------------------------------------- engine-queue backlog ----
 
-    /// Register accepted-but-incomplete engine work on `gpu`.
+    /// Register accepted-but-incomplete engine work on `gpu` (engine 0 —
+    /// the legacy single-queue view; striped call sites use
+    /// [`Self::engine_reserve_on`]).
     pub fn engine_reserve(&self, gpu: usize, bytes: u64) {
         self.engine_queues[gpu].reserve_bytes(bytes);
     }
@@ -149,9 +274,30 @@ impl CostModel {
         self.engine_queues[gpu].release_bytes(bytes);
     }
 
-    /// Current copy-engine byte backlog on `gpu`.
+    /// Register accepted-but-incomplete work on one engine of `gpu`.
+    pub fn engine_reserve_on(&self, gpu: usize, engine: usize, bytes: u64) {
+        self.engine_queues[gpu].reserve_on(engine, bytes);
+    }
+
+    /// Retire work previously reserved with [`Self::engine_reserve_on`].
+    pub fn engine_release_on(&self, gpu: usize, engine: usize, bytes: u64) {
+        self.engine_queues[gpu].release_on(engine, bytes);
+    }
+
+    /// Total copy-engine byte backlog on `gpu` (sum over its engines).
     pub fn engine_backlog_bytes(&self, gpu: usize) -> u64 {
         self.engine_queues[gpu].queued_bytes()
+    }
+
+    /// Byte backlog of one engine of `gpu`.
+    pub fn engine_backlog_on(&self, gpu: usize, engine: usize) -> u64 {
+        self.engine_queues[gpu].engine_bytes(engine)
+    }
+
+    /// The `width` least-loaded engine slots of `gpu`, lightest first —
+    /// where the executor places the next stripe's chunks.
+    pub fn engine_pick(&self, gpu: usize, width: usize) -> Vec<usize> {
+        self.engine_queues[gpu].least_loaded(width)
     }
 
     /// Device-side cost of staging `bytes` through the symmetric-heap
@@ -245,6 +391,64 @@ mod tests {
         m.engine_reserve(0, 4096);
         assert_eq!(m.engine_backlog_bytes(0), 4096);
         m.engine_release(0, 4096);
+        assert_eq!(m.engine_backlog_bytes(0), 0);
+    }
+
+    #[test]
+    fn stripe_planner_balances_startup_against_bandwidth() {
+        let m = model();
+        let loc = Locality::SameNode;
+        let chunk_min = m.params.ce.chunk_min_bytes;
+        // Small transfers never stripe.
+        let (c, w) = m.stripe_for(loc, 4096, usize::MAX, usize::MAX);
+        assert_eq!((c, w), (4096, 1));
+        // Large transfers stripe wide and the estimate beats single-engine.
+        let big = 8 << 20;
+        let (c, w) = m.stripe_for(loc, big, usize::MAX, usize::MAX);
+        assert!(w >= 2, "no striping for {big}B: width {w}");
+        assert!(c >= chunk_min && c <= big);
+        let striped = m.p2p_engine_estimate_ns(loc, big, true);
+        let single = m.ring_rtt_ns()
+            + m.params
+                .ce
+                .striped_transfer_ns(&m.params.xe, loc, big, true, false, 1, 1);
+        assert!(striped * 2.0 <= single, "{striped} !<= {single}/2");
+        // A chunk cap below chunk_min disables the pipeline.
+        assert_eq!(m.stripe_for(loc, big, chunk_min - 1, usize::MAX), (big, 1));
+        // A slab-sized cap forces more, smaller chunks — never above cap.
+        let (c, w) = m.stripe_for(loc, big, 1 << 20, usize::MAX);
+        assert!(c <= 1 << 20 && w >= 2, "cap ignored: chunk {c} width {w}");
+        // The scan scores candidates at the flavor they will run with:
+        // an all-standard boundary never yields a cheaper shape than the
+        // estimate it feeds (both use the standard startup).
+        let (c_std, w_std) = m.stripe_for(loc, big, usize::MAX, 0);
+        assert!(w_std >= 2 && c_std >= chunk_min);
+    }
+
+    #[test]
+    fn capped_estimate_matches_uncapped_when_cap_is_loose() {
+        let m = model();
+        let loc = Locality::SameNode;
+        for bytes in [64usize, 4096, 1 << 20, 8 << 20] {
+            assert_eq!(
+                m.p2p_engine_estimate_ns(loc, bytes, true),
+                m.p2p_engine_estimate_capped_ns(loc, bytes, true, usize::MAX),
+            );
+        }
+    }
+
+    #[test]
+    fn per_engine_reserve_release_roundtrip() {
+        let m = model();
+        m.engine_reserve_on(0, 2, 4096);
+        m.engine_reserve_on(0, 5, 100);
+        assert_eq!(m.engine_backlog_on(0, 2), 4096);
+        assert_eq!(m.engine_backlog_bytes(0), 4196);
+        // The picker avoids the loaded engines.
+        let picked = m.engine_pick(0, 2);
+        assert!(!picked.contains(&2) && !picked.contains(&5), "{picked:?}");
+        m.engine_release_on(0, 2, 4096);
+        m.engine_release_on(0, 5, 100);
         assert_eq!(m.engine_backlog_bytes(0), 0);
     }
 

@@ -18,6 +18,7 @@ use std::sync::Mutex;
 
 use crate::ishmem::cutover::Path;
 use crate::sim::topology::Locality;
+use crate::util::rng::Rng;
 
 /// One learned-threshold cell key: (locality, log2 size, log2 items),
 /// split by op class — fan-out observations measure a whole one-to-many
@@ -115,23 +116,53 @@ pub struct AdaptiveTable {
     cells: Mutex<HashMap<BucketKey, CellState>>,
     /// EMA weight of a new observation (0 < alpha ≤ 1).
     alpha: f64,
+    /// ε-exploration rate: with probability `eps` a decision takes the
+    /// *losing* path so its EMA keeps seeing fresh observations. Without
+    /// it a mis-seeded cell can never recover the path it stopped trying
+    /// (0 = greedy, the default).
+    eps: f64,
+    /// Deterministic exploration stream (fixed seed — decisions replay).
+    rng: Mutex<Rng>,
 }
 
 impl AdaptiveTable {
     pub fn new(alpha: f64) -> Self {
         assert!(alpha > 0.0 && alpha <= 1.0, "EMA alpha out of (0, 1]");
-        AdaptiveTable { cells: Mutex::new(HashMap::new()), alpha }
+        AdaptiveTable {
+            cells: Mutex::new(HashMap::new()),
+            alpha,
+            eps: 0.0,
+            rng: Mutex::new(Rng::new(0xADA9_71CE)),
+        }
+    }
+
+    /// Enable ε-exploration (clamped to [0, 0.5]; 0 disables it).
+    pub fn with_exploration(mut self, eps: f64) -> Self {
+        self.eps = eps.clamp(0.0, 0.5);
+        self
     }
 
     /// Decide a path for `key`, seeding the cell from the model estimates
-    /// (`seed_loadstore_ns`, `seed_copy_engine_ns`) on first touch.
+    /// (`seed_loadstore_ns`, `seed_copy_engine_ns`) on first touch. With
+    /// ε-exploration enabled, an occasional decision deliberately takes
+    /// the losing path (its observation then refreshes that path's EMA —
+    /// how a poisoned seed recovers).
     pub fn decide(&self, key: BucketKey, seed_loadstore_ns: f64, seed_copy_engine_ns: f64) -> Path {
-        let mut cells = self.cells.lock().unwrap();
-        let cell = cells.entry(key).or_insert(CellState {
-            ema_ns: [seed_loadstore_ns, seed_copy_engine_ns],
-            samples: [0, 0],
-        });
-        argmin_path(cell.ema_ns[0], cell.ema_ns[1])
+        let greedy = {
+            let mut cells = self.cells.lock().unwrap();
+            let cell = cells.entry(key).or_insert(CellState {
+                ema_ns: [seed_loadstore_ns, seed_copy_engine_ns],
+                samples: [0, 0],
+            });
+            argmin_path(cell.ema_ns[0], cell.ema_ns[1])
+        };
+        if self.eps > 0.0 && self.rng.lock().unwrap().f64() < self.eps {
+            return match greedy {
+                Path::LoadStore => Path::CopyEngine,
+                Path::CopyEngine => Path::LoadStore,
+            };
+        }
+        greedy
     }
 
     /// Feed back the observed (modeled) cost of an executed transfer.
@@ -227,6 +258,23 @@ mod tests {
         assert!(!t.observe(k, Path::CopyEngine, 5.0));
         assert_eq!(t.peek(k), None);
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn exploration_occasionally_takes_the_losing_path() {
+        let t = AdaptiveTable::new(0.5).with_exploration(0.25);
+        let k = BucketKey::p2p(Locality::SameNode, 4096, 1);
+        let mut explored = 0;
+        for _ in 0..200 {
+            if t.decide(k, 100.0, 200.0) == Path::CopyEngine {
+                explored += 1;
+            }
+        }
+        // ~25% of 200 draws; deterministic RNG, loose bounds.
+        assert!(explored > 20 && explored < 90, "explored {explored}/200");
+        // Greedy tables never deviate.
+        let g = AdaptiveTable::new(0.5);
+        assert!((0..200).all(|_| g.decide(k, 100.0, 200.0) == Path::LoadStore));
     }
 
     #[test]

@@ -13,12 +13,22 @@
 //! * `Nic` — same stream, but the proxy forwards staged entries to the
 //!   OFI transport (inter-node, §III-D).
 //!
-//! Payloads too large for the staging slab fall back to the original
-//! one-message-per-op raw-pointer path (`FLAG_RAW_PTR`), which this
-//! module still composes. Executors feed observed (modeled) durations
-//! back to the planner so `CutoverMode::Adaptive` learns online, and
-//! reserve/release the per-GPU engine-queue byte backlog that makes the
-//! planner occupancy-aware.
+//! Large engine-route transfers run as a **striped chunk pipeline**
+//! (ISSUE 3): the planner picks a chunk size and stripe width, the
+//! executor slices the payload into slab-staged chunks carrying
+//! continuation fields (chunk id, count, engine hint — `ringbuf::batch`),
+//! and the proxy dispatches them onto the least-loaded engines with one
+//! standard command list per engine per batch. Slab pressure flushes
+//! earlier chunks fire-and-forget while later ones stage, so staging of
+//! chunk *k+1* overlaps engine execution of chunk *k*. Oversized payloads
+//! (> slab) therefore chunk *through* the slab; the original
+//! one-message-per-op raw-pointer path (`FLAG_RAW_PTR`) survives only
+//! when a single chunk cannot fit an empty slab.
+//!
+//! Executors feed observed (modeled) durations back to the planner so
+//! `CutoverMode::Adaptive` learns online, and reserve/release the
+//! per-engine byte backlog that makes the planner occupancy-aware and
+//! striped placement balanced.
 
 use crate::coordinator::metrics::{Metrics, PathIdx};
 use crate::ishmem::PeCtx;
@@ -36,6 +46,24 @@ pub(crate) const FLAG_RAW_PTR: u16 = 1 << 8;
 /// Completion payloads for non-fetching proxied ops.
 pub(crate) const PROXY_OK: u64 = 0;
 pub(crate) const PROXY_ERR_UNREGISTERED: u64 = 1;
+
+/// Chunk geometry of a striped transfer: yields `(idx, offset, len,
+/// engine)` for every chunk, cycling the engine hints over the picked
+/// slots. The single source of the slicing arithmetic shared by the
+/// striped put executors and the collectives fan-out (the windowed get
+/// keeps its own loop — its iteration is bounded by slab windows, not
+/// just geometry).
+pub(crate) fn chunk_iter<'a>(
+    bytes: usize,
+    chunk: usize,
+    engines: &'a [usize],
+) -> impl Iterator<Item = (usize, usize, usize, usize)> + 'a {
+    let chunk = chunk.max(1);
+    (0..bytes.div_ceil(chunk)).map(move |i| {
+        let off = i * chunk;
+        (i, off, chunk.min(bytes - off), engines[i % engines.len()])
+    })
+}
 
 /// Compose a reverse-offload RMA ring message (the raw-pointer fallback
 /// wire format shared by oversized put/get traffic).
@@ -126,21 +154,62 @@ impl PeCtx {
         !self.rt.xfer.cl_immediate_for(bytes)
     }
 
-    /// Queue-aware modeled duration of this plan's engine execution.
+    /// Queue-aware modeled duration of this plan's engine execution: the
+    /// striped chunk pipeline for chunked plans, the legacy single
+    /// transfer otherwise (the CL policy is per chunk either way).
     fn engine_exec_ns(&self, plan: &TransferPlan) -> f64 {
-        self.rt.cost.copy_engine_ns(
+        self.rt.cost.copy_engine_striped_ns(
+            self.my_gpu(),
+            plan.loc,
+            plan.bytes,
+            self.rt.xfer.cl_immediate_for(plan.chunk_bytes.min(plan.bytes)),
+            plan.stripe_width,
+            plan.chunks(),
+        )
+    }
+
+    /// Queue-aware single-engine charge for a chunked plan that degraded
+    /// entirely to the raw-pointer path (tiny-slab / depth-1 configs):
+    /// the transfer actually ran as one un-striped message, so charging
+    /// the striped pipeline would under-model it.
+    fn engine_exec_raw_ns(&self, plan: &TransferPlan) -> f64 {
+        self.rt.cost.copy_engine_striped_ns(
             self.my_gpu(),
             plan.loc,
             plan.bytes,
             self.rt.xfer.cl_immediate_for(plan.bytes),
-            false,
-            true,
+            1,
+            1,
         )
     }
 
     fn nic_exec_ns(&self, pe: usize, bytes: usize) -> f64 {
         let registered = self.rt.transport.is_registered(pe);
         self.rt.cost.internode_ns(bytes, registered, true)
+    }
+
+    /// Modeled duration of the whole striped chunk pipeline: staging of
+    /// chunk *k+1* overlaps engine execution of chunk *k* (slab
+    /// double-buffering), so the steady state runs at the slower of the
+    /// two chains. The pipeline fill — the first chunk's staging — hides
+    /// under the ring round trip except for its last `chunk_min` bytes:
+    /// at the HBM staging rate a slab-capped chunk stages in less than
+    /// the ~5 µs RTT, so one minimum-chunk staging bounds the serial
+    /// fill. (This also keeps the modeled charge continuous across the
+    /// un-chunked→chunked boundary, where the staged path charges one
+    /// full serial staging copy.)
+    fn striped_pipeline_ns(&self, plan: &TransferPlan) -> f64 {
+        let exec = self.engine_exec_ns(plan);
+        let staging = self.rt.cost.staging_copy_ns(plan.bytes);
+        let fill_bytes = self
+            .rt
+            .cost
+            .params
+            .ce
+            .chunk_min_bytes
+            .min(plan.chunk_bytes)
+            .min(plan.bytes);
+        exec.max(staging) + self.rt.cost.staging_copy_ns(fill_bytes)
     }
 
     // ------------------------------------------------- blocking executors --
@@ -177,19 +246,28 @@ impl PeCtx {
         &self,
         plan: &TransferPlan,
         pe: usize,
-        desc: BatchDescriptor,
+        mut desc: BatchDescriptor,
         after_flush: impl FnOnce(&Self),
     ) {
-        self.stream_append(desc, 1);
-        let reserve = plan.route == Route::CopyEngine;
-        if reserve {
-            self.rt.cost.engine_reserve(self.my_gpu(), plan.bytes as u64);
+        let engine = (plan.route == Route::CopyEngine).then(|| {
+            let gpu = self.my_gpu();
+            let eng = self.rt.cost.engine_pick(gpu, 1)[0];
+            self.rt.cost.engine_reserve_on(gpu, eng, plan.bytes as u64);
+            eng
+        });
+        if let Some(eng) = engine {
+            // Carry the picked engine as a 1-chunk hint so the proxy's
+            // dispatch and per-engine metrics agree with the reservation.
+            desc = desc.with_chunk(0, 1, eng as u8);
         }
+        self.stream_append(desc, 1);
         self.stream_flush_blocking();
         after_flush(self);
         self.charge_proxied_blocking(plan, pe);
-        if reserve {
-            self.rt.cost.engine_release(self.my_gpu(), plan.bytes as u64);
+        if let Some(eng) = engine {
+            self.rt
+                .cost
+                .engine_release_on(self.my_gpu(), eng, plan.bytes as u64);
         }
     }
 
@@ -223,6 +301,9 @@ impl PeCtx {
                     .metrics
                     .add_path_bytes(PathIdx::LoadStore, plan.loc, plan.bytes as u64);
             }
+            Route::CopyEngine if plan.chunks() > 1 => {
+                self.exec_put_chunked(plan, pe, dst_off, src)
+            }
             Route::CopyEngine | Route::Nic => match self.stream_stage_payload(src) {
                 Some(src_off) => {
                     let desc = BatchDescriptor::put(pe, dst_off, src_off, plan.bytes)
@@ -238,6 +319,72 @@ impl PeCtx {
                     src.as_ptr() as u64,
                 ),
             },
+        }
+    }
+
+    /// Blocking striped put: slice the payload into slab-staged chunks,
+    /// each descriptor carrying its chunk id and least-loaded-engine hint.
+    /// Slab pressure flushes earlier chunks fire-and-forget while later
+    /// ones stage (double-buffering), the final blocking flush retires the
+    /// whole pipeline, and one striped charge covers the transfer.
+    fn exec_put_chunked(&self, plan: &TransferPlan, pe: usize, dst_off: usize, src: &[u8]) {
+        let gpu = self.my_gpu();
+        let engines = self.rt.cost.engine_pick(gpu, plan.stripe_width);
+        let total = plan.chunks();
+        let mut reserved: Vec<(usize, u64)> = Vec::with_capacity(total);
+        let mut staged = 0usize; // bytes staged; chunks staged == reserved.len()
+        for (idx, off, len, eng) in chunk_iter(src.len(), plan.chunk_bytes, &engines) {
+            let Some(slab_off) = self.stream_stage_payload_uncharged(&src[off..off + len])
+            else {
+                break; // degenerate slab: ship the tail on the raw path below
+            };
+            let desc = BatchDescriptor::put(pe, dst_off + off, slab_off, len)
+                .with_standard_cl(self.standard_cl_for(len))
+                .with_chunk(idx as u32, total as u32, eng as u8);
+            self.stream_append(desc, 1);
+            self.rt.cost.engine_reserve_on(gpu, eng, len as u64);
+            reserved.push((eng, len as u64));
+            staged += len;
+        }
+        if staged < src.len() {
+            // A single chunk cannot fit an empty slab (tiny-slab config):
+            // the raw-pointer message delivers the tail, flushing any
+            // staged chunks ahead of it (per-PE FIFO).
+            let m = rma_message(
+                RingOp::Put,
+                pe,
+                (dst_off + staged) as u64,
+                src[staged..].as_ptr() as u64,
+                src.len() - staged,
+            );
+            let status = self.proxied_blocking(m);
+            self.check_proxy_status(status, "put", pe);
+        } else {
+            self.stream_flush_blocking();
+        }
+        self.charge_chunked(plan, reserved.len());
+        for (eng, bytes) in reserved {
+            self.rt.cost.engine_release_on(gpu, eng, bytes);
+        }
+    }
+
+    /// Charge + count a completed chunked engine transfer: the striped
+    /// pipeline when chunks actually flowed through the slab, the
+    /// single-engine raw model when the whole payload degraded to the
+    /// raw-pointer path — and only real stripes hit the stripe metrics.
+    fn charge_chunked(&self, plan: &TransferPlan, chunks_staged: usize) {
+        let ns = if chunks_staged == 0 {
+            self.engine_exec_raw_ns(plan)
+        } else {
+            self.striped_pipeline_ns(plan)
+        };
+        self.clock.advance(ns);
+        self.rt.xfer.record(plan, ns);
+        self.rt
+            .metrics
+            .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
+        if chunks_staged > 0 {
+            self.rt.metrics.add_stripe(chunks_staged);
         }
     }
 
@@ -257,6 +404,9 @@ impl PeCtx {
                 self.rt
                     .metrics
                     .add_path_bytes(PathIdx::LoadStore, plan.loc, plan.bytes as u64);
+            }
+            Route::CopyEngine if plan.chunks() > 1 => {
+                self.exec_get_chunked(plan, pe, src_off, dst)
             }
             Route::CopyEngine | Route::Nic => match self.stream_slab_alloc(plan.bytes) {
                 Some(slab_off) => {
@@ -283,6 +433,77 @@ impl PeCtx {
         }
     }
 
+    /// Blocking striped get: windows of chunk-sized slab claims. Each
+    /// window appends get descriptors (results land in the claimed slab
+    /// regions), flushes blocking, then copies the results out *before*
+    /// the next window can rewind the arena over them. Chunks carry ids
+    /// and engine hints exactly like striped puts.
+    fn exec_get_chunked(&self, plan: &TransferPlan, pe: usize, src_off: usize, dst: &mut [u8]) {
+        // Clean slate: a pending plan-group or in-flight batches would
+        // pin slab space the windows need (and must not be force-flushed
+        // mid-window).
+        self.stream_quiet_drain();
+        let gpu = self.my_gpu();
+        let engines = self.rt.cost.engine_pick(gpu, plan.stripe_width);
+        let chunk = plan.chunk_bytes.max(1);
+        let total = plan.chunks();
+        let mut off = 0usize;
+        let mut idx = 0usize;
+        'windows: while off < dst.len() {
+            let mut window: Vec<(usize, usize, usize)> = Vec::new(); // (slab, dst, len)
+            let mut reserved: Vec<(usize, u64)> = Vec::new();
+            while off < dst.len() {
+                // The window invariant — get descriptors stay *pending*
+                // until this window's copy-out — would be violated by
+                // stream_append's capacity fire-and-forget flush (a
+                // flushed-and-drained batch releases its slab claims and
+                // the rewound arena lets later chunks overwrite results
+                // not yet copied out). Stop one entry short of the
+                // trigger; at max_batch_depth 1 no window forms and the
+                // raw tail below carries the whole get (per-op mode).
+                if self.stream.pending_len() + 1 >= self.stream.max_depth() {
+                    break;
+                }
+                let len = chunk.min(dst.len() - off);
+                let Some(slab_off) = self.stream_slab_try_alloc(len) else { break };
+                let eng = engines[idx % engines.len()];
+                let desc = BatchDescriptor::get(pe, slab_off, src_off + off, len)
+                    .with_standard_cl(self.standard_cl_for(len))
+                    .with_chunk(idx as u32, total as u32, eng as u8);
+                self.stream_append(desc, 1);
+                self.rt.cost.engine_reserve_on(gpu, eng, len as u64);
+                reserved.push((eng, len as u64));
+                window.push((slab_off, off, len));
+                off += len;
+                idx += 1;
+            }
+            if window.is_empty() {
+                break 'windows; // tiny-slab config: raw tail below
+            }
+            self.stream_flush_blocking();
+            // Copy-outs are not charged per chunk: window k's copy-out
+            // overlaps window k+1's engine execution; the aggregate
+            // pipeline charge below covers the steady state + drain.
+            for &(slab_off, doff, len) in &window {
+                self.rt
+                    .heaps
+                    .heap(self.pe())
+                    .read(slab_off, &mut dst[doff..doff + len]);
+            }
+            for (eng, bytes) in reserved {
+                self.rt.cost.engine_release_on(gpu, eng, bytes);
+            }
+        }
+        if off < dst.len() {
+            let rest = dst.len() - off;
+            let tail_ptr = dst[off..].as_mut_ptr() as u64;
+            let m = rma_message(RingOp::Get, pe, tail_ptr, (src_off + off) as u64, rest);
+            let status = self.proxied_blocking(m);
+            self.check_proxy_status(status, "get", pe);
+        }
+        self.charge_chunked(plan, idx);
+    }
+
     // ---------------------------------------------------- NBI executors --
 
     /// Execute a planned non-blocking put. Batched routes stage the
@@ -302,17 +523,24 @@ impl PeCtx {
                 let done_at = self.clock.now_ns() + (plan.modeled_ns - issue).max(0.0);
                 self.track.defer(done_at);
             }
+            Route::CopyEngine if plan.chunks() > 1 => {
+                self.exec_put_nbi_chunked(plan, pe, dst_off, src)
+            }
             Route::CopyEngine | Route::Nic => match self.stream_stage_payload(src) {
                 Some(src_off) => {
-                    let desc = BatchDescriptor::put(pe, dst_off, src_off, plan.bytes)
+                    let mut desc = BatchDescriptor::put(pe, dst_off, src_off, plan.bytes)
                         .with_standard_cl(self.standard_cl_for(plan.bytes));
-                    self.stream_append(desc, 1);
                     let full = match plan.route {
                         Route::CopyEngine => {
                             // Backlog stays reserved until quiet collapses
                             // the horizon — the planner sees it meanwhile.
-                            self.rt.cost.engine_reserve(self.my_gpu(), plan.bytes as u64);
-                            self.track.note_engine_bytes(plan.bytes as u64);
+                            // The 1-chunk hint keeps proxy dispatch and
+                            // per-engine metrics on the reserved engine.
+                            let gpu = self.my_gpu();
+                            let eng = self.rt.cost.engine_pick(gpu, 1)[0];
+                            self.rt.cost.engine_reserve_on(gpu, eng, plan.bytes as u64);
+                            self.track.note_engine_bytes(eng, plan.bytes as u64);
+                            desc = desc.with_chunk(0, 1, eng as u8);
                             let ns = self.engine_exec_ns(plan);
                             self.rt.xfer.record(plan, ns);
                             self.rt.metrics.add_path_bytes(
@@ -332,11 +560,56 @@ impl PeCtx {
                         }
                         Route::LoadStore => unreachable!(),
                     };
+                    self.stream_append(desc, 1);
                     self.track.defer(self.clock.now_ns() + full);
                 }
                 None => self.exec_put_nbi_oversized(plan, pe, dst_off, src),
             },
         }
+    }
+
+    /// Non-blocking striped put: chunks stage and append exactly like the
+    /// blocking pipeline, but the per-engine reservations live in the
+    /// completion tracker until `quiet` releases them, and every chunk
+    /// aggregates into the one deferred completion (chunk ledger + a
+    /// single horizon entry).
+    fn exec_put_nbi_chunked(&self, plan: &TransferPlan, pe: usize, dst_off: usize, src: &[u8]) {
+        let gpu = self.my_gpu();
+        let engines = self.rt.cost.engine_pick(gpu, plan.stripe_width);
+        let total = plan.chunks();
+        let mut staged_chunks = 0usize;
+        let mut staged = 0usize;
+        for (idx, off, len, eng) in chunk_iter(src.len(), plan.chunk_bytes, &engines) {
+            let Some(slab_off) = self.stream_stage_payload_uncharged(&src[off..off + len])
+            else {
+                break; // tiny-slab tail handled below
+            };
+            let desc = BatchDescriptor::put(pe, dst_off + off, slab_off, len)
+                .with_standard_cl(self.standard_cl_for(len))
+                .with_chunk(idx as u32, total as u32, eng as u8);
+            self.stream_append(desc, 1);
+            self.rt.cost.engine_reserve_on(gpu, eng, len as u64);
+            self.track.note_engine_bytes(eng, len as u64);
+            staged_chunks += 1;
+            staged += len;
+        }
+        if staged < src.len() {
+            // Tiny-slab tail: eager movement (the pre-chunking oversized
+            // behavior), still one aggregated completion.
+            self.rt.heaps.heap(pe).write(dst_off + staged, &src[staged..]);
+        }
+        let ns = if staged_chunks == 0 {
+            self.engine_exec_raw_ns(plan)
+        } else {
+            self.track.note_chunks(staged_chunks as u64);
+            self.rt.metrics.add_stripe(staged_chunks);
+            self.striped_pipeline_ns(plan)
+        };
+        self.rt.xfer.record(plan, ns);
+        self.rt
+            .metrics
+            .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
+        self.track.defer(self.clock.now_ns() + ns);
     }
 
     /// Oversized-NBI-put fallback: eager movement (the slab cannot hold
@@ -457,11 +730,13 @@ impl PeCtx {
 
     // ------------------------------------------------- AMO / inline ops --
 
-    /// Proxied atomic: compose the `Amo` ring message, execute remotely,
-    /// and charge the fetch round trip or the fire-and-forget post.
-    /// Fetching AMOs cannot batch (the result gates the caller), so both
-    /// shapes ship their own message — behind a pending-stream flush.
-    /// Returns the fetched old value (0 for non-fetching kinds).
+    /// Proxied atomic. Fetching AMOs cannot batch (the result gates the
+    /// caller), so they ship their own `Amo` ring message behind a
+    /// pending-stream flush and block on the reply. Fire-and-forget kinds
+    /// join the batched command stream instead (the descriptor codec
+    /// carries them): one `Batch` doorbell amortizes a whole burst, the
+    /// stream keeps per-PE FIFO order, and `quiet`'s stream drain proves
+    /// delivery. Returns the fetched old value (0 for non-fetching kinds).
     pub(crate) fn proxied_amo(
         &self,
         pe: usize,
@@ -472,22 +747,26 @@ impl PeCtx {
         comparand: u64,
         fetching: bool,
     ) -> u64 {
-        let mut m = Message::nop();
-        m.op = RingOp::Amo as u8;
-        m.dtype = dtype;
-        m.flags = kind as u8 as u16;
-        m.pe = pe as u32;
-        m.dst_off = dst_off as u64;
-        m.inline_val = operand;
-        m.inline_val2 = comparand;
         if fetching {
+            let mut m = Message::nop();
+            m.op = RingOp::Amo as u8;
+            m.dtype = dtype;
+            m.flags = kind as u8 as u16;
+            m.pe = pe as u32;
+            m.dst_off = dst_off as u64;
+            m.inline_val = operand;
+            m.inline_val2 = comparand;
             let old = self.proxied_blocking(m);
             self.clock
                 .advance(self.rt.cost.fetch_atomic_ns(Locality::Remote));
             old
         } else {
-            self.proxied_ff(m);
-            self.clock.advance(self.rt.cost.ring_post_ns());
+            let desc =
+                BatchDescriptor::amo(pe, dst_off, dtype, kind as u8, operand, comparand);
+            self.stream_append(desc, 0);
+            // The descriptor write is charged by the append; the doorbell
+            // is one amortized ring post at flush time — the PR-2 win,
+            // extended to AMOs.
             0
         }
     }

@@ -72,9 +72,23 @@ pub struct TransferPlan {
     /// Modeled cost of the rejected intra-node path, ns (None on `Nic`:
     /// there was no alternative).
     pub alt_ns: Option<f64>,
+    /// Chunk size of the striped engine pipeline (= `bytes` when the
+    /// transfer ships as one unit). Chosen by the cost model's stripe
+    /// planner under the staging-slab chunk cap.
+    pub chunk_bytes: usize,
+    /// Engines the chunks stripe across (1 = un-striped).
+    pub stripe_width: usize,
 }
 
 impl TransferPlan {
+    /// Number of chunks this plan's executor slices the payload into.
+    pub fn chunks(&self) -> usize {
+        if self.chunk_bytes == 0 || self.chunk_bytes >= self.bytes {
+            1
+        } else {
+            self.bytes.div_ceil(self.chunk_bytes)
+        }
+    }
     /// Bucket key for the adaptive table (fan-outs learn in their own
     /// cells — their observations cover a whole one-to-many push).
     pub fn bucket(&self) -> BucketKey {
@@ -133,9 +147,18 @@ pub struct XferEngine {
     /// standard list (append → close → execute). `usize::MAX` reproduces
     /// the old global-immediate behavior.
     pub cl_immediate_max_bytes: usize,
+    /// Largest chunk the staging pipeline can double-buffer through the
+    /// slab (set from `staging_slab_bytes` at machine construction). The
+    /// stripe planner never picks chunks above this, so estimates and the
+    /// executor's slicing agree.
+    pub chunk_max_bytes: usize,
     adaptive: AdaptiveTable,
     metrics: Arc<Metrics>,
 }
+
+/// Default chunk cap mirroring `IshmemConfig`'s default staging slab
+/// (2 MiB double-buffered) for engines built without a machine.
+const DEFAULT_CHUNK_MAX_BYTES: usize = 1 << 20;
 
 impl XferEngine {
     pub fn new(
@@ -145,12 +168,14 @@ impl XferEngine {
         metrics: Arc<Metrics>,
     ) -> Self {
         let alpha = cutover.ema_alpha;
+        let eps = cutover.explore_eps;
         XferEngine {
             cost,
             cutover,
             immediate_cl,
             cl_immediate_max_bytes: usize::MAX,
-            adaptive: AdaptiveTable::new(alpha),
+            chunk_max_bytes: DEFAULT_CHUNK_MAX_BYTES,
+            adaptive: AdaptiveTable::new(alpha).with_exploration(eps),
             metrics,
         }
     }
@@ -170,13 +195,52 @@ impl XferEngine {
         self.cost.loadstore_ns(loc, bytes, items)
     }
 
-    /// Model the point-to-point engine path: ring round trip + one engine
-    /// transfer at full link speed (pure estimate, no queueing). The
-    /// formula itself lives on [`CostModel::p2p_engine_estimate_ns`] —
-    /// shared with the policy-level reference in `cutover.rs`.
-    pub fn est_copy_engine_ns(&self, loc: Locality, bytes: usize) -> f64 {
+    /// The per-op CL boundary as the stripe scanner sees it: descriptors
+    /// at or below this size run immediate command lists (0 when the
+    /// global immediate enable bit is off).
+    pub fn cl_immediate_boundary(&self) -> usize {
+        if self.immediate_cl {
+            self.cl_immediate_max_bytes
+        } else {
+            0
+        }
+    }
+
+    /// The (chunk size, stripe width) this engine's executor would use
+    /// for an engine-path transfer of `bytes` — the cost model's stripe
+    /// planner under this machine's staging-slab chunk cap and CL
+    /// boundary (candidates are scored at the startup flavor their
+    /// chunks will actually use).
+    pub fn stripe_for(&self, loc: Locality, bytes: usize) -> (usize, usize) {
         self.cost
-            .p2p_engine_estimate_ns(loc, bytes, self.cl_immediate_for(bytes))
+            .stripe_for(loc, bytes, self.chunk_max_bytes, self.cl_immediate_boundary())
+    }
+
+    /// Estimate of the engine path for an already-chosen stripe shape:
+    /// ring round trip + the striped chunk pipeline at this engine's CL
+    /// flavour (same formula as [`CostModel::p2p_engine_estimate_capped_ns`],
+    /// without re-running the width scan).
+    fn est_engine_striped_ns(&self, loc: Locality, bytes: usize, chunk: usize, width: usize) -> f64 {
+        let n = bytes.max(1).div_ceil(chunk.max(1));
+        self.cost.ring_rtt_ns()
+            + self.cost.params.ce.striped_transfer_ns(
+                &self.cost.params.xe,
+                loc,
+                bytes,
+                self.cl_immediate_for(chunk),
+                false,
+                width,
+                n,
+            )
+    }
+
+    /// Model the point-to-point engine path: ring round trip + the striped
+    /// chunk pipeline (pure estimate, no queueing). Shares the stripe
+    /// planner and formula with the policy-level reference in `cutover.rs`
+    /// (which probes uncapped).
+    pub fn est_copy_engine_ns(&self, loc: Locality, bytes: usize) -> f64 {
+        let (chunk, width) = self.stripe_for(loc, bytes);
+        self.est_engine_striped_ns(loc, bytes, chunk, width)
     }
 
     /// Occupancy-aware engine estimate: folds the source GPU's live
@@ -191,8 +255,9 @@ impl XferEngine {
         bytes: usize,
     ) -> f64 {
         let backlog = src_gpu.map_or(0, |g| self.cost.engine_backlog_bytes(g));
-        self.cost
-            .p2p_engine_estimate_loaded_ns(loc, bytes, self.cl_immediate_for(bytes), backlog)
+        let (chunk, width) = self.stripe_for(loc, bytes);
+        self.est_engine_striped_ns(loc, bytes, chunk, width)
+            + self.cost.engine_drain_ns(loc, backlog)
     }
 
     /// Model the inter-node path (registered-heap RDMA estimate).
@@ -238,14 +303,24 @@ impl XferEngine {
                 route: Route::Nic,
                 modeled_ns: self.est_nic_ns(bytes),
                 alt_ns: None,
+                chunk_bytes: bytes,
+                stripe_width: 1,
             };
             self.count_plan(plan.route);
             return plan;
         }
+        // One width scan serves the estimate *and* the bound stripe shape.
+        let (chunk, width) = self.stripe_for(loc, bytes);
+        let backlog = src_gpu.map_or(0, |g| self.cost.engine_backlog_bytes(g));
         let ls = self.est_loadstore_ns(loc, bytes, items);
-        let ce = self.est_copy_engine_loaded_ns(src_gpu, loc, bytes);
+        let ce = self.est_engine_striped_ns(loc, bytes, chunk, width)
+            + self.cost.engine_drain_ns(loc, backlog);
         let path = self.decide(BucketKey::p2p(loc, bytes, items), bytes, ls, ce);
-        let plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce);
+        let mut plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce);
+        if plan.route == Route::CopyEngine {
+            plan.chunk_bytes = chunk;
+            plan.stripe_width = width;
+        }
         self.count_plan(plan.route);
         plan
     }
@@ -284,10 +359,13 @@ impl XferEngine {
         let mut t: f64 = 0.0;
         for &(loc, link_bytes, transfers) in &shape.per_link {
             // Startup overlaps across engines; transfers on one link share
-            // its bandwidth.
+            // its bandwidth. The executor stripes each block's chunks over
+            // the engines, so the link runs at the aggregate engine rate
+            // (capped at the physical link).
             let startups = transfers.div_ceil(ce.engines_per_gpu) as f64;
             t = t.max(
-                startups * ce.startup_immediate_ns + link_bytes as f64 / ce.path_bw_gbs(xe, loc),
+                startups * ce.startup_immediate_ns
+                    + link_bytes as f64 / ce.striped_bw_gbs(xe, loc, ce.engines_per_gpu),
             );
         }
         if shape.nic_bytes > 0 {
@@ -372,12 +450,14 @@ impl XferEngine {
         backlog_bytes: u64,
     ) -> Option<usize> {
         (3..28).map(|p| 1usize << p).find(|&b| {
+            let (chunk, _) = self.stripe_for(loc, b);
             argmin_path(
                 self.est_loadstore_ns(loc, b, items),
-                self.cost.p2p_engine_estimate_loaded_ns(
+                self.cost.p2p_engine_estimate_capped_loaded_ns(
                     loc,
                     b,
-                    self.cl_immediate_for(b),
+                    self.cl_immediate_for(chunk),
+                    self.chunk_max_bytes,
                     backlog_bytes,
                 ),
             ) == Path::CopyEngine
@@ -497,6 +577,8 @@ impl XferEngine {
             route,
             modeled_ns: modeled,
             alt_ns: Some(alt),
+            chunk_bytes: bytes,
+            stripe_width: 1,
         }
     }
 
@@ -577,6 +659,24 @@ mod tests {
         e.cost.engine_release(0, 64 << 20);
         let p = e.plan_p2p_from(Some(0), OpKind::Put, true, Locality::SameNode, bytes, 1);
         assert_eq!(p.route, Route::CopyEngine, "idle queue lost engine route");
+    }
+
+    #[test]
+    fn large_engine_plans_stripe_across_engines() {
+        let e = engine(CutoverConfig::always());
+        let p = e.plan_p2p(OpKind::Put, true, Locality::SameNode, 8 << 20, 1);
+        assert_eq!(p.route, Route::CopyEngine);
+        assert!(p.stripe_width >= 2, "no striping: {p:?}");
+        assert!(p.chunks() >= p.stripe_width, "{p:?}");
+        assert!(p.chunk_bytes <= e.chunk_max_bytes, "{p:?}");
+        // Small transfers ship as one unit.
+        let s = e.plan_p2p(OpKind::Put, true, Locality::SameNode, 4096, 1);
+        assert_eq!((s.chunk_bytes, s.stripe_width, s.chunks()), (4096, 1, 1));
+        // Load/store plans never stripe.
+        let e = engine(CutoverConfig::never());
+        let p = e.plan_p2p(OpKind::Put, true, Locality::SameNode, 8 << 20, 1);
+        assert_eq!(p.stripe_width, 1);
+        assert_eq!(p.chunks(), 1);
     }
 
     #[test]

@@ -86,6 +86,14 @@ impl CmdStream {
     }
 }
 
+/// Slab headroom preserved above every payload claim so a descriptor
+/// block for a full plan-group can always be written at flush time —
+/// the single source for `stream_slab_alloc`/`stream_slab_try_alloc`
+/// and for `IshmemConfig::chunk_max_bytes()`'s double-buffer cap.
+pub(crate) fn slab_headroom_bytes(max_depth: usize) -> usize {
+    (max_depth + 1) * DESC_SIZE + 192
+}
+
 impl PeCtx {
     // ------------------------------------------------------ slab staging --
 
@@ -94,9 +102,7 @@ impl PeCtx {
     /// means the payload cannot fit the slab at all — the caller falls
     /// back to the raw-pointer path.
     pub(crate) fn stream_slab_alloc(&self, len: usize) -> Option<usize> {
-        // Every payload claim preserves enough headroom that a descriptor
-        // block for a full batch can always be written at flush time.
-        let headroom = (self.stream.max_depth() + 1) * DESC_SIZE + 192;
+        let headroom = slab_headroom_bytes(self.stream.max_depth());
         let need = len.checked_add(64 + headroom)?;
         if need > self.slab.capacity() {
             // Can never fit, even empty: take the raw-pointer fallback
@@ -118,13 +124,43 @@ impl PeCtx {
         self.slab.try_alloc(len)
     }
 
+    /// Claim `len` slab bytes *without* force-flushing the pending
+    /// plan-group: retires finished batches only. Used by the chunked-get
+    /// window builder, whose own pending descriptors must stay pending
+    /// (flushing them fire-and-forget would release their slab claims
+    /// before the single-threaded PE copies the results out). `None`
+    /// simply ends the current window.
+    pub(crate) fn stream_slab_try_alloc(&self, len: usize) -> Option<usize> {
+        let headroom = slab_headroom_bytes(self.stream.max_depth());
+        let need = len.checked_add(64 + headroom)?;
+        if need > self.slab.capacity() {
+            return None;
+        }
+        if self.slab.available() < need {
+            self.stream_drain_inflight();
+        }
+        if self.slab.available() < need {
+            return None;
+        }
+        self.slab.try_alloc(len)
+    }
+
     /// Stage a private (raw-pointer) payload into the slab: after this
     /// copy the transfer is heap-offset shaped and can execute on real
     /// `DeviceAddr` command lists. Charges the HBM-local staging copy.
     pub(crate) fn stream_stage_payload(&self, src: &[u8]) -> Option<usize> {
+        let off = self.stream_stage_payload_uncharged(src)?;
+        self.clock.advance(self.rt.cost.staging_copy_ns(src.len()));
+        Some(off)
+    }
+
+    /// Stage without the modeled charge — the striped chunk pipeline
+    /// overlaps staging of chunk *k+1* with engine execution of chunk
+    /// *k*, so chunked executors charge one aggregate pipeline time
+    /// instead of serial per-chunk copies.
+    pub(crate) fn stream_stage_payload_uncharged(&self, src: &[u8]) -> Option<usize> {
         let off = self.stream_slab_alloc(src.len())?;
         self.rt.heaps.heap(self.pe()).write(off, src);
-        self.clock.advance(self.rt.cost.staging_copy_ns(src.len()));
         Some(off)
     }
 
@@ -265,15 +301,18 @@ impl PeCtx {
     }
 
     /// Retire every outstanding batch *and* return this PE's reserved
-    /// engine-queue backlog to the shared `CostModel`. The cleanup half
-    /// of `quiet` (no modeled charges) — shared with launch exit so
-    /// per-PE state can never leak into the machine across launches.
+    /// per-engine backlog to the shared `CostModel` (each engine slot
+    /// releases exactly what striped NBI transfers reserved on it). The
+    /// cleanup half of `quiet` (no modeled charges) — shared with launch
+    /// exit so per-PE state can never leak into the machine across
+    /// launches.
     pub(crate) fn drain_outstanding(&self) -> bool {
         let drained = self.stream_quiet_drain();
-        let engine_bytes = self.track.take_engine_bytes();
-        if engine_bytes > 0 {
-            self.rt.cost.engine_release(self.my_gpu(), engine_bytes);
+        let gpu = self.my_gpu();
+        for (engine, bytes) in self.track.take_engine_bytes() {
+            self.rt.cost.engine_release_on(gpu, engine, bytes);
         }
+        self.track.take_chunks();
         drained
     }
 }

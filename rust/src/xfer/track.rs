@@ -1,21 +1,30 @@
 //! Unified completion tracking for one PE (plan→execute→**complete**).
 //!
 //! Replaces the ad-hoc `nbi_horizon_ns` / `outstanding_proxy_nbi` cells
-//! that used to live directly on `PeCtx`. Two kinds of outstanding state
-//! exist on the device-initiated path:
+//! that used to live directly on `PeCtx`. Outstanding state on the
+//! device-initiated path:
 //!
 //! * a **modeled completion horizon**: non-blocking transfers move data
 //!   eagerly (Rust borrow safety) but their modeled duration completes
 //!   later — `ishmem_quiet` collapses the horizon into the PE timeline;
-//! * a **fire-and-forget proxy count**: scalar `p`, non-fetching remote
-//!   AMOs and other posted-without-completion ring messages that `quiet`
-//!   must flush with one ring round trip (FIFO order makes one `Quiet`
-//!   message prove all earlier ones were serviced, paper §III-D).
+//! * a **fire-and-forget proxy count**: scalar `p` and other
+//!   posted-without-completion ring messages that `quiet` must flush with
+//!   one ring round trip (FIFO order makes one `Quiet` message prove all
+//!   earlier ones were serviced, paper §III-D);
+//! * the **per-engine byte backlog** this PE reserved on its GPU's copy
+//!   engines for still-outstanding NBI transfers (released engine-by-
+//!   engine at `quiet`) — what makes the planner occupancy-aware and
+//!   keeps striped placement balanced;
+//! * an **outstanding-chunk ledger**: a striped NBI transfer issues many
+//!   chunks but completes as *one* unit — every chunk defers into the
+//!   same horizon, and the ledger counts how many chunks that single
+//!   completion still covers (drained at `quiet`).
 //!
 //! The tracker is per-PE (`!Sync` like `PeCtx` itself), so plain `Cell`s
-//! suffice.
+//! and a `RefCell` map suffice.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
 
 /// Per-PE outstanding-completion state for the xfer engine.
 #[derive(Debug, Default)]
@@ -25,10 +34,12 @@ pub struct CompletionTracker {
     horizon_ns: Cell<f64>,
     /// Number of fire-and-forget proxied messages since the last flush.
     outstanding_ff: Cell<u64>,
-    /// Copy-engine bytes this PE has reserved on its GPU's engine queue
-    /// for still-outstanding NBI transfers (released at `quiet`, when the
-    /// horizon collapses). Feeds the planner's occupancy-aware estimate.
-    engine_bytes: Cell<u64>,
+    /// Copy-engine bytes this PE has reserved, per engine slot of its
+    /// GPU, for still-outstanding NBI transfers (released at `quiet`).
+    engine_bytes: RefCell<BTreeMap<usize, u64>>,
+    /// Chunks of striped NBI transfers whose single aggregated completion
+    /// is still outstanding.
+    outstanding_chunks: Cell<u64>,
 }
 
 impl CompletionTracker {
@@ -62,15 +73,40 @@ impl CompletionTracker {
         self.outstanding_ff.replace(0)
     }
 
-    /// Record `bytes` of engine-queue backlog reserved for an NBI transfer.
-    pub fn note_engine_bytes(&self, bytes: u64) {
-        self.engine_bytes.set(self.engine_bytes.get() + bytes);
+    /// Record `bytes` of engine-queue backlog reserved on `engine` for an
+    /// NBI transfer.
+    pub fn note_engine_bytes(&self, engine: usize, bytes: u64) {
+        *self.engine_bytes.borrow_mut().entry(engine).or_insert(0) += bytes;
     }
 
-    /// Take the reserved engine-backlog bytes (quiet releases them on the
-    /// owning GPU's queue), resetting to zero.
-    pub fn take_engine_bytes(&self) -> u64 {
-        self.engine_bytes.replace(0)
+    /// Total reserved engine backlog across engines (reports/tests).
+    pub fn engine_bytes_total(&self) -> u64 {
+        self.engine_bytes.borrow().values().sum()
+    }
+
+    /// Take the reserved backlog per engine (quiet releases each on the
+    /// owning GPU's queue), resetting the ledger.
+    pub fn take_engine_bytes(&self) -> Vec<(usize, u64)> {
+        std::mem::take(&mut *self.engine_bytes.borrow_mut())
+            .into_iter()
+            .collect()
+    }
+
+    /// Record `n` chunks of a striped NBI transfer whose aggregated
+    /// completion is still outstanding.
+    pub fn note_chunks(&self, n: u64) {
+        self.outstanding_chunks.set(self.outstanding_chunks.get() + n);
+    }
+
+    /// Chunks still covered by outstanding aggregated completions.
+    pub fn outstanding_chunks(&self) -> u64 {
+        self.outstanding_chunks.get()
+    }
+
+    /// Drain the chunk ledger (quiet), returning how many chunks the
+    /// collapsed horizon just completed.
+    pub fn take_chunks(&self) -> u64 {
+        self.outstanding_chunks.replace(0)
     }
 }
 
@@ -99,11 +135,25 @@ mod tests {
     }
 
     #[test]
-    fn engine_bytes_accumulate_and_drain() {
+    fn engine_bytes_accumulate_per_engine_and_drain() {
         let t = CompletionTracker::new();
-        t.note_engine_bytes(4096);
-        t.note_engine_bytes(100);
-        assert_eq!(t.take_engine_bytes(), 4196);
-        assert_eq!(t.take_engine_bytes(), 0);
+        t.note_engine_bytes(2, 4096);
+        t.note_engine_bytes(5, 100);
+        t.note_engine_bytes(2, 4);
+        assert_eq!(t.engine_bytes_total(), 4200);
+        let drained = t.take_engine_bytes();
+        assert_eq!(drained, vec![(2, 4100), (5, 100)]);
+        assert_eq!(t.engine_bytes_total(), 0);
+        assert!(t.take_engine_bytes().is_empty());
+    }
+
+    #[test]
+    fn chunk_ledger_aggregates_into_one_completion() {
+        let t = CompletionTracker::new();
+        t.note_chunks(5);
+        t.note_chunks(3);
+        assert_eq!(t.outstanding_chunks(), 8);
+        assert_eq!(t.take_chunks(), 8);
+        assert_eq!(t.outstanding_chunks(), 0);
     }
 }

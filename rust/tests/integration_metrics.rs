@@ -4,8 +4,9 @@
 //! feedback under the adaptive cutover mode; and batched submission
 //! populates the batch-depth and proxy service-time metrics.
 
-use rishmem::coordinator::metrics::{PathIdx, ServiceOp};
+use rishmem::coordinator::metrics::{PathIdx, ServiceOp, ENGINE_SLOTS};
 use rishmem::ishmem::CutoverConfig;
+use rishmem::util::json::Json;
 use rishmem::{Ishmem, IshmemConfig, Locality, Topology};
 
 #[test]
@@ -116,6 +117,62 @@ fn batch_and_service_metrics_populated() {
     // Batched ring traffic: 3 doorbells carried 9 ops — far fewer
     // messages than ops.
     assert!(snap.ring_messages < 9 + snap.xfer_batches, "{snap:?}");
+}
+
+#[test]
+fn stripe_and_engine_metrics_with_json_export() {
+    // One oversized engine put populates the stripe histogram and the
+    // per-engine dispatch tables, and the JSON export mirrors the
+    // snapshot (the `rishmem metrics --json` surface).
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(4 << 20);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            ctx.put(buf, &vec![9u8; 4 << 20], 2);
+        }
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+
+    assert!(snap.stripe_transfers >= 1, "{snap:?}");
+    assert!(snap.stripe_chunks >= 4, "{snap:?}");
+    assert_eq!(
+        snap.stripe_chunk_hist.iter().sum::<u64>(),
+        snap.stripe_transfers,
+        "{snap:?}"
+    );
+    let engines_used = snap.engine_bytes.iter().filter(|&&b| b > 0).count();
+    assert!(engines_used >= 2, "striping used {engines_used} engine(s): {snap:?}");
+    assert_eq!(snap.engine_bytes.iter().sum::<u64>(), 4 << 20, "{snap:?}");
+    assert_eq!(
+        snap.engine_ops.iter().sum::<u64>(),
+        snap.stripe_chunks,
+        "every chunk dispatches on exactly one engine: {snap:?}"
+    );
+
+    let j = Json::parse(&snap.to_json()).expect("metrics JSON parses");
+    assert_eq!(j.get("puts").unwrap().as_usize().unwrap() as u64, snap.puts);
+    assert_eq!(
+        j.get("stripe_chunks").unwrap().as_usize().unwrap() as u64,
+        snap.stripe_chunks
+    );
+    let eng = j.get("engine_bytes").unwrap().as_arr().unwrap();
+    assert_eq!(eng.len(), ENGINE_SLOTS);
+    let eng_sum: u64 = eng.iter().map(|v| v.as_usize().unwrap() as u64).sum();
+    assert_eq!(eng_sum, snap.engine_bytes.iter().sum::<u64>());
+    assert!(j.get("bytes_by_path_loc").unwrap().get("copy_engine").is_some());
+    assert_eq!(
+        j.get("xfer_batches").unwrap().as_usize().unwrap() as u64,
+        snap.xfer_batches
+    );
 }
 
 #[test]

@@ -245,6 +245,192 @@ fn nbi_completes_across_batch_boundary() {
 }
 
 #[test]
+fn oversized_put_chunks_through_slab_striped() {
+    // 8 MiB ≫ the 2 MiB staging slab: the payload must chunk *through*
+    // the slab (no raw-pointer fallback) and spread across ≥2 engines.
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let ok = ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(8 << 20);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            let payload: Vec<u8> = (0..8 << 20).map(|i| (i % 251) as u8).collect();
+            ctx.put(buf, &payload, 2);
+        }
+        ctx.barrier_all();
+        if ctx.pe() == 2 {
+            ctx.read_local_vec(buf)
+                .iter()
+                .enumerate()
+                .all(|(i, &v)| v == (i % 251) as u8)
+        } else {
+            true
+        }
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert!(ok.iter().all(|&b| b), "chunked oversized put corrupted data");
+    assert!(snap.stripe_transfers >= 1, "{snap:?}");
+    assert!(snap.stripe_chunks >= 8, "8MiB through a ~1MiB chunk cap: {snap:?}");
+    let engines_used = snap.engine_bytes.iter().filter(|&&b| b > 0).count();
+    assert!(engines_used >= 2, "chunks all on one engine: {:?}", snap.engine_bytes);
+    assert_eq!(
+        snap.engine_bytes.iter().sum::<u64>(),
+        8 << 20,
+        "per-engine bytes must cover the payload: {:?}",
+        snap.engine_bytes
+    );
+}
+
+#[test]
+fn quiet_drains_all_stripes_of_chunked_nbi_put() {
+    // A chunked NBI put reserves backlog across several engines and
+    // aggregates its chunks into one deferred completion; quiet must
+    // deliver every stripe and return every reserved byte.
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let ish2 = ish.clone();
+    let ok = ish.launch(move |ctx| {
+        let buf = ctx.calloc::<u8>(4 << 20);
+        let flag = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            let data = vec![0xC3u8; 4 << 20];
+            ctx.put_nbi(buf, &data, 2);
+            // The striped NBI put left live backlog on PE 0's GPU, and
+            // its chunks aggregate into one outstanding completion.
+            let loaded = ish2.cost.engine_backlog_bytes(0) >= (4 << 20) as u64
+                && ctx.outstanding_chunk_count() >= 4;
+            let before = ctx.clock.now_ns();
+            ctx.quiet();
+            let after = ctx.clock.now_ns();
+            let drained = ish2.cost.engine_backlog_bytes(0) == 0
+                && ctx.outstanding_chunk_count() == 0;
+            ctx.atomic_set(flag, 1u64, 2);
+            ctx.barrier_all();
+            loaded && drained && after > before
+        } else if ctx.pe() == 2 {
+            ctx.wait_until(flag, Cmp::Eq, 1u64);
+            let good = ctx.read_local_vec(buf).iter().all(|&v| v == 0xC3);
+            ctx.barrier_all();
+            good
+        } else {
+            ctx.barrier_all();
+            true
+        }
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert!(ok.iter().all(|&b| b), "quiet left stripes undelivered or backlog leaked");
+    assert!(snap.stripe_transfers >= 1 && snap.stripe_chunks >= 4, "{snap:?}");
+}
+
+#[test]
+fn chunked_transfers_correct_at_tiny_batch_depth() {
+    // max_batch_depth 1 and 2 shrink the get window below the chunk
+    // count: windows must never let a capacity flush release slab claims
+    // before copy-out (depth 1 degrades to the raw per-op path; depth 2
+    // runs one-chunk windows). Data must survive both ways.
+    for depth in [1usize, 2] {
+        let cfg = IshmemConfig {
+            topology: Topology::new(1, 2, 2),
+            heap_bytes: 48 << 20,
+            cutover: CutoverConfig::always(),
+            max_batch_depth: depth,
+            ..Default::default()
+        };
+        let ok = run_spmd(cfg, false, move |ctx| {
+            let len = 3 << 20;
+            let buf = ctx.calloc::<u8>(len);
+            let payload: Vec<u8> = (0..len).map(|i| (i % 239) as u8).collect();
+            let t = (ctx.pe() + 1) % ctx.npes();
+            ctx.put(buf, &payload, t);
+            ctx.barrier_all();
+            let mut back = vec![0u8; len];
+            ctx.get(&mut back, buf, t);
+            back == payload
+        })
+        .unwrap();
+        assert!(ok.iter().all(|&b| b), "depth {depth} corrupted chunked data");
+    }
+}
+
+#[test]
+fn fence_pushes_out_inflight_stripes() {
+    // fence must deliver every stripe of a chunked NBI put before later
+    // traffic (here: the flag store) can overtake it.
+    let cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        ..Default::default()
+    };
+    let ok = run_spmd(cfg, false, |ctx| {
+        let buf = ctx.calloc::<u8>(4 << 20);
+        let flag = ctx.calloc::<u64>(1);
+        if ctx.pe() == 0 {
+            ctx.put_nbi(buf, &vec![0x7Du8; 4 << 20], 2);
+            ctx.fence();
+            ctx.atomic_set(flag, 1u64, 2);
+            ctx.barrier_all();
+            true
+        } else if ctx.pe() == 2 {
+            ctx.wait_until(flag, Cmp::Eq, 1u64);
+            let good = ctx.read_local_vec(buf).iter().all(|&v| v == 0x7D);
+            ctx.barrier_all();
+            good
+        } else {
+            ctx.barrier_all();
+            true
+        }
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b), "fence let the flag overtake in-flight stripes");
+}
+
+#[test]
+fn fire_and_forget_amos_ride_the_batch_stream() {
+    // Non-fetching remote AMOs batch through the command stream: one
+    // doorbell carries the burst, quiet proves delivery, the values land.
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let vals = ish.launch(|ctx| {
+        let c = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            for _ in 0..10 {
+                ctx.atomic_add(c, 1u64, 6); // cross-node → proxied
+            }
+            ctx.quiet();
+        }
+        ctx.barrier_all();
+        if ctx.pe() == 6 {
+            ctx.atomic_fetch(c, 6)
+        } else {
+            0
+        }
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert_eq!(vals[6], 10, "batched AMOs lost updates");
+    // The burst rode batched descriptors, not ten ring messages.
+    assert!(snap.xfer_batch_entries >= 10, "{snap:?}");
+}
+
+#[test]
 fn iput_iget_strided() {
     let ok = run_npes(2, |ctx| {
         let buf = ctx.calloc::<i32>(64);

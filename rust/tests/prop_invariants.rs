@@ -7,11 +7,12 @@
 use rishmem::coordinator::metrics::Metrics;
 use rishmem::ishmem::cutover::{CutoverConfig, Path};
 use rishmem::ishmem::heap::SymAllocator;
-use rishmem::ringbuf::{BatchDescriptor, RingOp, DESC_SIZE};
+use rishmem::ringbuf::{BatchDescriptor, RingOp, CHUNK_FIELD_MAX, DESC_SIZE};
 use rishmem::sim::cost::{CostModel, CostParams};
 use rishmem::util::prop::prop_check;
-use rishmem::xfer::{OpKind, Route, XferEngine};
-use rishmem::{run_npes, Locality, ReduceOp, TeamId, Topology};
+use rishmem::util::rng::Rng;
+use rishmem::xfer::{AdaptiveTable, BucketKey, OpKind, Route, XferEngine};
+use rishmem::{run_npes, run_spmd, IshmemConfig, Locality, ReduceOp, TeamId, Topology};
 
 /// Every `RingOp`, including the batched-submission doorbell.
 const ALL_RING_OPS: [RingOp; 10] = [
@@ -70,6 +71,117 @@ fn prop_batch_descriptor_roundtrip() {
         let victim = rng.below(n as u64) as usize;
         bad[victim * DESC_SIZE] = 99;
         assert_eq!(BatchDescriptor::decode_block(&bad, n), None);
+    });
+}
+
+#[test]
+fn prop_chunk_continuation_fields_roundtrip() {
+    // The striped pipeline's continuation fields (chunk id, chunk count,
+    // engine hint) pack into the descriptor without disturbing the wire
+    // codec, and ids stay monotone in the order the executor assigns them.
+    prop_check("chunk fields pack, roundtrip, and stay monotone", 200, |rng| {
+        let count = rng.range(1, CHUNK_FIELD_MAX as u64) as u32;
+        let engine = rng.below(256) as u8;
+        let probe = rng.below(count as u64) as u32;
+        let d = BatchDescriptor::put(1, 64, 128, 4096).with_chunk(probe, count, engine);
+        assert!(d.is_chunked());
+        assert_eq!(
+            (d.chunk_index(), d.chunk_count(), d.engine_hint()),
+            (probe, count, engine as usize)
+        );
+        assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
+        // Ids assigned 0..n in issue order decode back monotone per stripe.
+        let n = rng.range(2, 32) as u32;
+        let width = rng.range(1, 8) as u32;
+        let descs: Vec<BatchDescriptor> = (0..n)
+            .map(|i| {
+                BatchDescriptor::put(0, (i as usize) * 4096, 0, 4096).with_chunk(
+                    i,
+                    n,
+                    (i % width) as u8,
+                )
+            })
+            .collect();
+        for lane in 0..width as usize {
+            let ids: Vec<u32> = descs
+                .iter()
+                .filter(|d| d.engine_hint() == lane)
+                .map(|d| d.chunk_index())
+                .collect();
+            assert!(ids.windows(2).all(|w| w[0] < w[1]), "lane {lane}: {ids:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_transfers_reassemble_exactly() {
+    // Arbitrary payload sizes — crossing the chunk-min, stripe and slab
+    // boundaries — must reassemble exactly through the striped pipeline
+    // (put) and the windowed chunked get.
+    prop_check("chunk split/reassembly is exact", 10, |rng| {
+        let len = rng.range(1, 6 << 20) as usize;
+        let seed = rng.next_u64();
+        let cfg = IshmemConfig {
+            topology: Topology::new(1, 2, 2),
+            heap_bytes: 48 << 20,
+            cutover: CutoverConfig::always(), // pin the engine route
+            ..Default::default()
+        };
+        let ok = run_spmd(cfg, false, move |ctx| {
+            let buf = ctx.calloc::<u8>(len);
+            let mut payload = vec![0u8; len];
+            Rng::new(seed ^ ctx.pe() as u64).fill_bytes(&mut payload);
+            let t = (ctx.pe() + 1) % ctx.npes();
+            ctx.put(buf, &payload, t);
+            ctx.barrier_all();
+            let mut back = vec![0u8; len];
+            ctx.get(&mut back, buf, t);
+            back == payload
+        })
+        .unwrap();
+        assert!(ok.iter().all(|&b| b), "chunked roundtrip corrupted {len}B");
+    });
+}
+
+#[test]
+fn prop_poisoned_adaptive_seed_recovers_with_exploration() {
+    // ε-exploration keeps the losing path's EMA fresh, so a cell seeded
+    // with a wildly wrong estimate converges back to the truly cheaper
+    // path — while a greedy table stays stuck forever.
+    prop_check("poisoned seed converges under ε-exploration", 20, |rng| {
+        let alpha = 0.2 + 0.6 * rng.f64();
+        let (true_ls, true_ce) = (100.0, 250.0);
+        let key = BucketKey::p2p(Locality::SameNode, 1usize << rng.range(6, 20), 1);
+
+        let observe_truth = |t: &AdaptiveTable| {
+            let p = t.decide(key, true_ls, true_ce); // re-seeding never resets
+            let obs = match p {
+                Path::LoadStore => true_ls,
+                Path::CopyEngine => true_ce,
+            };
+            t.observe(key, p, obs);
+        };
+
+        let explored = AdaptiveTable::new(alpha).with_exploration(0.15);
+        // Poison: the cell believes load/store is catastrophically slow.
+        explored.decide(key, 50_000.0, true_ce);
+        assert_eq!(explored.peek(key), Some(Path::CopyEngine));
+        for _ in 0..500 {
+            observe_truth(&explored);
+        }
+        assert_eq!(
+            explored.peek(key),
+            Some(Path::LoadStore),
+            "poisoned cell never recovered (alpha {alpha})"
+        );
+
+        // Control: without exploration the losing path is never retried.
+        let greedy = AdaptiveTable::new(alpha);
+        greedy.decide(key, 50_000.0, true_ce);
+        for _ in 0..500 {
+            observe_truth(&greedy);
+        }
+        assert_eq!(greedy.peek(key), Some(Path::CopyEngine), "greedy table escaped?");
     });
 }
 
