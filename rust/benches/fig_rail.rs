@@ -1,0 +1,80 @@
+//! Bench: multi-rail NIC striping on the remote path (ISSUE 4). Large
+//! cross-node puts slice into slab-staged chunks carrying rail hints and
+//! inject across 4 NIC rails; the acceptance bars are (a) ≥2× modeled
+//! throughput vs the same machine pinned to a single rail for every
+//! ≥1 MiB point, and (b) ramped first chunks (`stripe.ramp_factor`)
+//! strictly reduce modeled time-to-first-byte at equal total bytes, on
+//! both the rail and the engine stripe.
+//! `cargo bench --bench fig_rail` (`RISHMEM_SMOKE=1` shrinks the sweep).
+
+use rishmem::bench::figures::fig_rail;
+use rishmem::sim::cost::{CostModel, CostParams};
+use rishmem::sim::{Locality, Topology};
+
+fn main() {
+    let fig = fig_rail();
+    println!("{}", fig.render_ascii());
+
+    let single = fig
+        .series
+        .iter()
+        .find(|s| s.name == "single-rail")
+        .expect("single-rail series");
+    let striped = fig
+        .series
+        .iter()
+        .find(|s| s.name == "4-rail")
+        .expect("4-rail series");
+    let ramped = fig
+        .series
+        .iter()
+        .find(|s| s.name == "4-rail ramped")
+        .expect("4-rail ramped series");
+
+    for &(x, y) in &striped.points {
+        let base = single.y_at(x).expect("matching single-rail point");
+        let r = ramped.y_at(x).expect("matching ramped point");
+        println!(
+            "[fig_rail] {x:>10.0} B: 4-rail {y:6.2} GB/s (ramped {r:6.2}) vs single-rail \
+             {base:6.2} GB/s ({:.1}x)",
+            y / base
+        );
+        if x >= (1 << 20) as f64 {
+            assert!(
+                y >= base * 2.0,
+                "rail striping under 2x at {x}B: {y} vs {base} GB/s"
+            );
+        }
+    }
+
+    // Ramped first chunks strictly reduce modeled time-to-first-byte at
+    // equal total bytes — on the rail stripe *and* the engine stripe.
+    let mut params = CostParams::default();
+    params.nic.rails = 4;
+    let base = CostModel::new(Topology::new(2, 2, 2), params.clone());
+    params.stripe.ramp_factor = 0.25;
+    let ramp = CostModel::new(Topology::new(2, 2, 2), params);
+    let bytes = 4 << 20;
+    let (rail_chunk, rail_width) = base.rail_stripe_for(bytes, 1 << 20);
+    assert_eq!(
+        (rail_chunk, rail_width),
+        ramp.rail_stripe_for(bytes, 1 << 20),
+        "ramping must not change the planned stripe shape (equal total bytes)"
+    );
+    let (ttfb_base, ttfb_ramp) = (base.nic_ttfb_ns(rail_chunk), ramp.nic_ttfb_ns(rail_chunk));
+    println!(
+        "[fig_rail] rail TTFB at chunk {rail_chunk}B: {ttfb_ramp:.0}ns ramped vs \
+         {ttfb_base:.0}ns unramped"
+    );
+    assert!(
+        ttfb_ramp < ttfb_base,
+        "ramp did not reduce rail time-to-first-byte: {ttfb_ramp} !< {ttfb_base}"
+    );
+    let (eng_chunk, _) = base.stripe_for(Locality::SameNode, bytes, 1 << 20, usize::MAX);
+    assert!(
+        ramp.engine_ttfb_ns(eng_chunk, true) < base.engine_ttfb_ns(eng_chunk, true),
+        "ramp did not reduce engine time-to-first-byte"
+    );
+
+    println!("[fig_rail] 4-rail striping sustains >=2x single-rail remote throughput");
+}

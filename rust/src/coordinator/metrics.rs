@@ -31,6 +31,13 @@ pub const BATCH_DEPTH_BUCKETS: usize = 6;
 /// Per-engine metric slots (engine index within the source GPU; indices
 /// past the table clamp into the last slot).
 pub const ENGINE_SLOTS: usize = 8;
+/// Per-NIC-rail metric slots (rail index within the source node; indices
+/// past the table clamp into the last slot).
+pub const RAIL_SLOTS: usize = 8;
+/// Payload-size classes of the wall-vs-model service comparison
+/// (`rishmem figure service-delta`): ≤4KiB, ≤64KiB, ≤256KiB, ≤1MiB,
+/// ≤4MiB, larger.
+pub const SERVICE_SIZE_BUCKETS: usize = 6;
 /// Proxy service-time histogram: log2-ns buckets, 2^4 ns … ≥2^19 ns.
 pub const SERVICE_NS_BUCKETS: usize = 16;
 const SERVICE_NS_SHIFT: u32 = 4;
@@ -76,11 +83,23 @@ pub struct Metrics {
     // GPU): bytes moved and entries dispatched per engine.
     pub engine_bytes: [AtomicU64; ENGINE_SLOTS],
     pub engine_ops: [AtomicU64; ENGINE_SLOTS],
+    // Proxy-side per-rail dispatch tables (NIC rail slot on the source
+    // node): bytes injected and entries dispatched per rail.
+    pub rail_bytes: [AtomicU64; RAIL_SLOTS],
+    pub rail_ops: [AtomicU64; RAIL_SLOTS],
     // Proxy-side service time (wall clock) per op family: sums + counts
     // for averages, log2-ns histograms for the shape.
     pub proxy_service_ns: [AtomicU64; SERVICE_OPS],
     pub proxy_service_ops: [AtomicU64; SERVICE_OPS],
     pub proxy_service_hist: [[AtomicU64; SERVICE_NS_BUCKETS]; SERVICE_OPS],
+    // Wall-vs-model service comparison per (data path, payload-size
+    // class): the proxy fills the wall side per serviced put/get entry,
+    // executors the model side per charged transfer. `rishmem figure
+    // service-delta` diffs the sums and flags classes off by >2×.
+    pub service_wall_ns: [[AtomicU64; SERVICE_SIZE_BUCKETS]; 3],
+    pub service_wall_ops: [[AtomicU64; SERVICE_SIZE_BUCKETS]; 3],
+    pub service_model_ns: [[AtomicU64; SERVICE_SIZE_BUCKETS]; 3],
+    pub service_model_ops: [[AtomicU64; SERVICE_SIZE_BUCKETS]; 3],
     // XLA kernel invocations (reduce path).
     pub xla_reduce_calls: AtomicU64,
     pub xla_reduce_elems: AtomicU64,
@@ -104,6 +123,23 @@ pub fn batch_depth_bucket(depth: usize) -> usize {
 pub fn service_ns_bucket(ns: u64) -> usize {
     let log2 = 64 - u64::leading_zeros(ns.max(1)) as u32 - 1;
     (log2.saturating_sub(SERVICE_NS_SHIFT) as usize).min(SERVICE_NS_BUCKETS - 1)
+}
+
+/// Payload-size class of the wall-vs-model service tables.
+pub fn service_size_bucket(bytes: u64) -> usize {
+    match bytes {
+        0..=4_096 => 0,
+        4_097..=65_536 => 1,
+        65_537..=262_144 => 2,
+        262_145..=1_048_576 => 3,
+        1_048_577..=4_194_304 => 4,
+        _ => 5,
+    }
+}
+
+/// Human label of a [`service_size_bucket`] index.
+pub fn service_size_label(bucket: usize) -> &'static str {
+    ["<=4KiB", "<=64KiB", "<=256KiB", "<=1MiB", "<=4MiB", ">4MiB"][bucket.min(5)]
 }
 
 impl Metrics {
@@ -149,6 +185,32 @@ impl Metrics {
         Self::add(&self.engine_ops[i], 1);
     }
 
+    /// Record one proxy NIC injection of `bytes` on rail slot `rail`
+    /// (indices past the table clamp into the last slot).
+    pub fn add_rail_dispatch(&self, rail: usize, bytes: u64) {
+        let i = rail.min(RAIL_SLOTS - 1);
+        Self::add(&self.rail_bytes[i], bytes);
+        Self::add(&self.rail_ops[i], 1);
+    }
+
+    /// Record one proxy-side *wall-clock* put/get service of a
+    /// `bytes`-sized payload on `path` (the wall half of the
+    /// `service-delta` tables).
+    pub fn add_service_wall(&self, path: PathIdx, bytes: u64, ns: u64) {
+        let b = service_size_bucket(bytes);
+        Self::add(&self.service_wall_ns[path as usize][b], ns);
+        Self::add(&self.service_wall_ops[path as usize][b], 1);
+    }
+
+    /// Record one executor-side *modeled* transfer charge of a
+    /// `bytes`-sized payload on `path` (the model half of the
+    /// `service-delta` tables).
+    pub fn add_service_model(&self, path: PathIdx, bytes: u64, ns: u64) {
+        let b = service_size_bucket(bytes);
+        Self::add(&self.service_model_ns[path as usize][b], ns);
+        Self::add(&self.service_model_ops[path as usize][b], 1);
+    }
+
     /// Record one proxy service of `op` taking `ns` wall-clock nanoseconds.
     pub fn add_service(&self, op: ServiceOp, ns: u64) {
         let i = op as usize;
@@ -188,10 +250,24 @@ impl Metrics {
             stripe_chunk_hist: std::array::from_fn(|i| load(&self.stripe_chunk_hist[i])),
             engine_bytes: std::array::from_fn(|i| load(&self.engine_bytes[i])),
             engine_ops: std::array::from_fn(|i| load(&self.engine_ops[i])),
+            rail_bytes: std::array::from_fn(|i| load(&self.rail_bytes[i])),
+            rail_ops: std::array::from_fn(|i| load(&self.rail_ops[i])),
             proxy_service_ns: std::array::from_fn(|i| load(&self.proxy_service_ns[i])),
             proxy_service_ops: std::array::from_fn(|i| load(&self.proxy_service_ops[i])),
             proxy_service_hist: std::array::from_fn(|o| {
                 std::array::from_fn(|b| load(&self.proxy_service_hist[o][b]))
+            }),
+            service_wall_ns: std::array::from_fn(|p| {
+                std::array::from_fn(|b| load(&self.service_wall_ns[p][b]))
+            }),
+            service_wall_ops: std::array::from_fn(|p| {
+                std::array::from_fn(|b| load(&self.service_wall_ops[p][b]))
+            }),
+            service_model_ns: std::array::from_fn(|p| {
+                std::array::from_fn(|b| load(&self.service_model_ns[p][b]))
+            }),
+            service_model_ops: std::array::from_fn(|p| {
+                std::array::from_fn(|b| load(&self.service_model_ops[p][b]))
             }),
             xla_reduce_calls: load(&self.xla_reduce_calls),
             xla_reduce_elems: load(&self.xla_reduce_elems),
@@ -224,9 +300,15 @@ pub struct MetricsSnapshot {
     pub stripe_chunk_hist: [u64; BATCH_DEPTH_BUCKETS],
     pub engine_bytes: [u64; ENGINE_SLOTS],
     pub engine_ops: [u64; ENGINE_SLOTS],
+    pub rail_bytes: [u64; RAIL_SLOTS],
+    pub rail_ops: [u64; RAIL_SLOTS],
     pub proxy_service_ns: [u64; SERVICE_OPS],
     pub proxy_service_ops: [u64; SERVICE_OPS],
     pub proxy_service_hist: [[u64; SERVICE_NS_BUCKETS]; SERVICE_OPS],
+    pub service_wall_ns: [[u64; SERVICE_SIZE_BUCKETS]; 3],
+    pub service_wall_ops: [[u64; SERVICE_SIZE_BUCKETS]; 3],
+    pub service_model_ns: [[u64; SERVICE_SIZE_BUCKETS]; 3],
+    pub service_model_ops: [[u64; SERVICE_SIZE_BUCKETS]; 3],
     pub xla_reduce_calls: u64,
     pub xla_reduce_elems: u64,
     pub native_reduce_elems: u64,
@@ -325,16 +407,86 @@ impl MetricsSnapshot {
         put("stripe_chunk_hist", arr(&self.stripe_chunk_hist));
         put("engine_bytes", arr(&self.engine_bytes));
         put("engine_ops", arr(&self.engine_ops));
+        put("rail_bytes", arr(&self.rail_bytes));
+        put("rail_ops", arr(&self.rail_ops));
         put("proxy_service_ns", arr(&self.proxy_service_ns));
         put("proxy_service_ops", arr(&self.proxy_service_ops));
         put(
             "proxy_service_hist",
             Json::Arr(self.proxy_service_hist.iter().map(|row| arr(row)).collect()),
         );
+        put(
+            "service_wall_ns",
+            Json::Arr(self.service_wall_ns.iter().map(|row| arr(row)).collect()),
+        );
+        put(
+            "service_wall_ops",
+            Json::Arr(self.service_wall_ops.iter().map(|row| arr(row)).collect()),
+        );
+        put(
+            "service_model_ns",
+            Json::Arr(self.service_model_ns.iter().map(|row| arr(row)).collect()),
+        );
+        put(
+            "service_model_ops",
+            Json::Arr(self.service_model_ops.iter().map(|row| arr(row)).collect()),
+        );
         put("xla_reduce_calls", n(self.xla_reduce_calls));
         put("xla_reduce_elems", n(self.xla_reduce_elems));
         put("native_reduce_elems", n(self.native_reduce_elems));
         Json::Obj(o).to_string()
+    }
+
+    /// Wall-clock vs modeled service-time comparison per (path,
+    /// size-class): the proxy's measured wall sums next to the cost
+    /// model's charged sums, with classes whose totals disagree by more
+    /// than 2× flagged. Expected to flag heavily on this substrate (wall
+    /// clocks measure host memcpys, the model charges Aurora-class
+    /// hardware) — the report's purpose is making that gap visible per
+    /// regime instead of hiding it in aggregates. Caveats: a striped
+    /// transfer records one model charge but one wall charge *per chunk*
+    /// (all bucketed by the whole transfer's size, so the ns sums stay
+    /// comparable while the ops columns differ), and standard-CL batch
+    /// entries measure only the proxy's append — their deferred
+    /// per-engine execute time lands in `ServiceOp::Other`, not here.
+    pub fn service_delta_report(&self) -> String {
+        let mut out = String::from(
+            "service-delta: proxy wall-clock vs modeled service time by (path, size)\n\
+             path         size       wall-ops  wall-ns-sum   model-ops  model-ns-sum  wall/model\n",
+        );
+        let mut flagged = 0usize;
+        for (pi, name) in [(1usize, "copy-engine"), (2usize, "nic")] {
+            for b in 0..SERVICE_SIZE_BUCKETS {
+                let (wn, wo) = (self.service_wall_ns[pi][b], self.service_wall_ops[pi][b]);
+                let (mn, mo) = (self.service_model_ns[pi][b], self.service_model_ops[pi][b]);
+                if wo == 0 && mo == 0 {
+                    continue;
+                }
+                let (ratio, flag) = if wn > 0 && mn > 0 {
+                    let r = wn as f64 / mn as f64;
+                    let f = !(0.5..=2.0).contains(&r);
+                    (format!("{r:.3}"), f)
+                } else {
+                    ("-".to_string(), true)
+                };
+                if flag {
+                    flagged += 1;
+                }
+                out.push_str(&format!(
+                    "{:<12} {:<10} {:<9} {:<13} {:<10} {:<13} {}{}\n",
+                    name,
+                    service_size_label(b),
+                    wo,
+                    wn,
+                    mo,
+                    mn,
+                    ratio,
+                    if flag { "  DELTA>2x" } else { "" },
+                ));
+            }
+        }
+        out.push_str(&format!("classes off by >2x: {flagged}\n"));
+        out
     }
 
     pub fn report(&self) -> String {
@@ -356,6 +508,7 @@ impl MetricsSnapshot {
              ring: msgs={} completions={} batches={} batch-entries={} mean-depth={:.2}\n\
              stripes: transfers={} chunks={} mean-chunks={:.2}\n\
              engine bytes: [{}]\n\
+             rail bytes: [{}]\n\
              proxy service ns (mean): put={:.0} get={:.0} amo={:.0} other={:.0}\n\
              reduce: xla-calls={} xla-elems={} native-elems={}",
             self.puts,
@@ -381,6 +534,11 @@ impl MetricsSnapshot {
             self.stripe_chunks,
             self.mean_chunks_per_transfer(),
             self.engine_bytes
+                .iter()
+                .map(|&b| crate::util::fmt_bytes(b as usize))
+                .collect::<Vec<_>>()
+                .join(" "),
+            self.rail_bytes
                 .iter()
                 .map(|&b| crate::util::fmt_bytes(b as usize))
                 .collect::<Vec<_>>()
@@ -499,6 +657,42 @@ mod tests {
             Some(1)
         );
         assert!(j.get("bytes_by_path_loc").unwrap().get("nic").is_some());
+    }
+
+    #[test]
+    fn rail_tables_and_service_delta() {
+        assert_eq!(service_size_bucket(64), 0);
+        assert_eq!(service_size_bucket(4096), 0);
+        assert_eq!(service_size_bucket(4097), 1);
+        assert_eq!(service_size_bucket(1 << 20), 3);
+        assert_eq!(service_size_bucket(u64::MAX), SERVICE_SIZE_BUCKETS - 1);
+        assert_eq!(service_size_label(0), "<=4KiB");
+
+        let m = Metrics::new();
+        m.add_rail_dispatch(1, 1024);
+        m.add_rail_dispatch(1, 1024);
+        m.add_rail_dispatch(999, 8); // clamps into the last slot
+        m.add_service_wall(PathIdx::Nic, 1 << 20, 300);
+        m.add_service_model(PathIdx::Nic, 1 << 20, 90_000);
+        m.add_service_wall(PathIdx::CopyEngine, 512, 100);
+        m.add_service_model(PathIdx::CopyEngine, 512, 150);
+        let s = m.snapshot();
+        assert_eq!(s.rail_bytes[1], 2048);
+        assert_eq!(s.rail_ops[1], 2);
+        assert_eq!(s.rail_bytes[RAIL_SLOTS - 1], 8);
+        assert_eq!(s.service_wall_ns[PathIdx::Nic as usize][3], 300);
+        assert_eq!(s.service_model_ns[PathIdx::Nic as usize][3], 90_000);
+        let report = s.service_delta_report();
+        // The wildly-off NIC class is flagged, the close engine one not.
+        assert!(report.contains("nic") && report.contains("DELTA>2x"), "{report}");
+        assert!(report.contains("classes off by >2x: 1"), "{report}");
+        assert!(s.report().contains("rail bytes"), "{}", s.report());
+        // JSON export mirrors the new tables.
+        let j = crate::util::json::Json::parse(&s.to_json()).unwrap();
+        let rails = j.get("rail_bytes").unwrap().as_arr().unwrap();
+        assert_eq!(rails.len(), RAIL_SLOTS);
+        assert_eq!(rails[1].as_usize(), Some(2048));
+        assert!(j.get("service_wall_ns").unwrap().as_arr().is_some());
     }
 
     #[test]

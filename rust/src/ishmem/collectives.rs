@@ -220,9 +220,15 @@ impl PeCtx {
                 // too — per-transfer stripe width only sets chunk sizes.
                 let all_engines = self.rt.cost.params.ce.engines_per_gpu.max(1);
                 let engines = self.rt.cost.engine_pick(gpu, all_engines);
-                // One lane counter across the whole fan-out, so peers
-                // don't all pile their first chunk on the same engine.
+                // Remote members stripe their blocks across the node's
+                // NIC rails the same way (lightest rails first).
+                let all_rails = self.rt.cost.params.nic.rails.max(1);
+                let rails = self.rt.cost.rail_pick(self.node(), all_rails);
+                // One lane counter per lane kind across the whole
+                // fan-out, so peers don't all pile their first chunk on
+                // the same engine/rail.
                 let mut lane = 0usize;
+                let mut rail_lane = 0usize;
                 for &peer in peers {
                     if self.ipc.lookup(peer).is_some() {
                         let loc = self.loc_of(peer);
@@ -234,9 +240,7 @@ impl PeCtx {
                         );
                         let total = bytes.div_ceil(chunk.max(1));
                         let std_cl = !self.rt.xfer.cl_immediate_for(chunk.min(bytes));
-                        for (idx, off, len, _eng) in
-                            crate::xfer::exec::chunk_iter(bytes, chunk, &engines)
-                        {
+                        for (idx, off, len) in crate::xfer::exec::chunk_iter(bytes, chunk) {
                             let eng = engines[lane % engines.len()];
                             lane += 1;
                             let desc = crate::ringbuf::BatchDescriptor::put(
@@ -246,7 +250,8 @@ impl PeCtx {
                                 len,
                             )
                             .with_standard_cl(std_cl)
-                            .with_chunk(idx as u32, total as u32, eng as u8);
+                            .with_chunk(idx as u32, total as u32, eng as u8)
+                            .with_transfer_bytes(bytes as u64);
                             self.stream_append(desc, 0);
                         }
                         if total > 1 {
@@ -256,7 +261,35 @@ impl PeCtx {
                             .metrics
                             .add_path_bytes(PathIdx::CopyEngine, loc, bytes as u64);
                     } else {
-                        self.push_block(peer, src_off, dst_off, bytes, &wg);
+                        // Unreachable member: the block rides the same
+                        // batched doorbell as rail-hinted chunked Put
+                        // descriptors (source = my user heap, no staging
+                        // claim), so a cross-node block stripes across
+                        // the node's NIC rails like p2p remote puts do.
+                        let (chunk, _w) =
+                            self.rt.cost.rail_stripe_for(bytes, usize::MAX);
+                        let total = bytes.div_ceil(chunk.max(1));
+                        for (idx, off, len) in crate::xfer::exec::chunk_iter(bytes, chunk) {
+                            let rail = rails[rail_lane % rails.len()];
+                            rail_lane += 1;
+                            let desc = crate::ringbuf::BatchDescriptor::put(
+                                peer,
+                                dst_off + off,
+                                src_off + off,
+                                len,
+                            )
+                            .with_chunk(idx as u32, total as u32, rail as u8)
+                            .with_transfer_bytes(bytes as u64);
+                            self.stream_append(desc, 0);
+                        }
+                        if total > 1 {
+                            self.rt.metrics.add_stripe(total);
+                        }
+                        self.rt.metrics.add_path_bytes(
+                            PathIdx::Nic,
+                            Locality::Remote,
+                            bytes as u64,
+                        );
                     }
                 }
                 self.stream_flush_blocking();

@@ -37,6 +37,16 @@ pub struct IshmemConfig {
     /// Maximum descriptors per batched ring message (one `Batch` doorbell
     /// per plan-group); 1 reproduces per-op submission.
     pub max_batch_depth: usize,
+    /// Size-adaptive batch depth (`stream.large_flush_bytes`): a batched
+    /// descriptor whose payload is at or above this size flushes its
+    /// plan-group immediately, so a big chunk never waits behind a
+    /// filling batch of tiny entries. Tiny descriptors still batch up to
+    /// `max_batch_depth` deep; `usize::MAX` disables the auto-flush. The
+    /// default (1 MiB) sits *above* the default slab's chunk cap
+    /// (`chunk_max_bytes()`), so striped chunk pipelines keep batching
+    /// exactly as before — only genuinely large single descriptors (e.g.
+    /// collectives' un-staged multi-MiB blocks) ship at once.
+    pub large_flush_bytes: usize,
     /// Strict FI_HMEM: inter-node traffic to unregistered heaps errors out
     /// instead of bouncing (failure injection).
     pub strict_hmem: bool,
@@ -60,6 +70,7 @@ impl Default for IshmemConfig {
             cl_immediate_max_bytes: 64 << 10,
             staging_slab_bytes: 2 << 20,
             max_batch_depth: 16,
+            large_flush_bytes: 1 << 20,
             strict_hmem: false,
             xla_reduce_min_elems: 1024,
         }
@@ -113,6 +124,31 @@ impl IshmemConfig {
             self.cost.ce.single_engine_frac > 0.0 && self.cost.ce.single_engine_frac <= 1.0,
             "cost.ce.single_engine_frac must be in (0, 1]"
         );
+        anyhow::ensure!(self.cost.nic.rails >= 1, "cost.nic.rails must be at least 1");
+        anyhow::ensure!(
+            self.cost.nic.rails <= self.cost.nic.nics_per_node,
+            "cost.nic.rails cannot exceed cost.nic.nics_per_node"
+        );
+        anyhow::ensure!(
+            self.cost.nic.rail_bw_frac > 0.0 && self.cost.nic.rail_bw_frac <= 1.0,
+            "cost.nic.rail_bw_frac must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            self.cost.nic.rail_chunk_min_bytes >= 1024,
+            "cost.nic.rail_chunk_min_bytes below 1KB cannot amortize a rail startup"
+        );
+        anyhow::ensure!(
+            self.cost.stripe.ramp_factor > 0.0 && self.cost.stripe.ramp_factor <= 1.0,
+            "cost.stripe.ramp_factor must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            self.cost.stripe.ramp_chunks >= 1,
+            "cost.stripe.ramp_chunks must be at least 1"
+        );
+        anyhow::ensure!(
+            self.large_flush_bytes >= 1,
+            "large_flush_bytes must be at least 1"
+        );
         Ok(())
     }
 
@@ -161,6 +197,38 @@ mod tests {
         let cfg = IshmemConfig::default();
         let cap = cfg.chunk_max_bytes();
         assert!(cap > 1000 << 10 && cap <= 1 << 20, "chunk cap {cap}");
+    }
+
+    #[test]
+    fn rail_and_ramp_knobs_validated() {
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.nic.rails = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.nic.rails = cfg.cost.nic.nics_per_node + 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.nic.rail_bw_frac = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.nic.rail_chunk_min_bytes = 64;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.stripe.ramp_factor = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.stripe.ramp_chunks = 0;
+        assert!(cfg.validate().is_err());
+        let cfg = IshmemConfig { large_flush_bytes: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        // A degraded single-rail machine stays valid.
+        let mut cfg = IshmemConfig::default();
+        cfg.cost.nic.rails = 1;
+        assert!(cfg.validate().is_ok());
+        // The default auto-flush boundary sits above the slab's chunk cap,
+        // so default striped pipelines batch exactly as before.
+        let cfg = IshmemConfig::default();
+        assert!(cfg.large_flush_bytes > cfg.chunk_max_bytes());
     }
 
     #[test]

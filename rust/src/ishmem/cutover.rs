@@ -57,6 +57,11 @@ pub struct CutoverConfig {
     /// mis-seeded bucket can recover (0 = greedy, the default — benches
     /// that want recovery opt in via [`Self::with_exploration`]).
     pub explore_eps: f64,
+    /// `Adaptive` table persistence (`cutover.table_path`): when set, the
+    /// machine loads previously-learned cells from this JSON file at
+    /// construction (if it exists) and saves the refined table back at
+    /// shutdown, so learned crossovers survive across runs.
+    pub table_path: Option<String>,
 }
 
 impl Default for CutoverConfig {
@@ -66,6 +71,7 @@ impl Default for CutoverConfig {
             fixed_threshold: None,
             ema_alpha: 0.25,
             explore_eps: 0.0,
+            table_path: None,
         }
     }
 }
@@ -105,6 +111,12 @@ impl CutoverConfig {
     /// learned table).
     pub fn with_exploration(mut self, eps: f64) -> Self {
         self.explore_eps = eps;
+        self
+    }
+
+    /// Persist/load the `Adaptive` learned table at this JSON path.
+    pub fn with_table_path(mut self, path: impl Into<String>) -> Self {
+        self.table_path = Some(path.into());
         self
     }
 

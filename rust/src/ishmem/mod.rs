@@ -141,6 +141,16 @@ impl Ishmem {
         // the staging slab can double-buffer, so modeled stripes and the
         // executor's slicing agree.
         xfer.chunk_max_bytes = config.chunk_max_bytes();
+        // Adaptive-table persistence: pick up what a previous run learned
+        // (missing file = cold start; a malformed table is an error — a
+        // silently-ignored typo'd path would discard the learning).
+        if config.cutover.mode == CutoverMode::Adaptive {
+            if let Some(path) = &config.cutover.table_path {
+                if std::path::Path::new(path).exists() {
+                    xfer.adaptive_load(path)?;
+                }
+            }
+        }
 
         Ok(Arc::new(Ishmem {
             pmi: PmiWorld::new(npes),
@@ -252,16 +262,28 @@ impl Ishmem {
             team_rounds: RefCell::new(vec![0u64; heap::MAX_TEAMS]),
             track: CompletionTracker::new(),
             slab: StagingSlab::new(user_heap_bytes, self.config.staging_slab_bytes),
-            stream: CmdStream::new(self.config.max_batch_depth),
+            stream: CmdStream::new(self.config.max_batch_depth)
+                .with_large_flush_bytes(self.config.large_flush_bytes),
             team_seq: RefCell::new(HashMap::new()),
             sos: RefCell::new(sos),
         }
     }
 
-    /// Stop proxy threads. Called by `Drop`; idempotent.
+    /// Stop proxy threads. Called by `Drop`; idempotent. An `Adaptive`
+    /// machine with a `cutover.table_path` saves its learned table here,
+    /// so the next run starts from the refined crossovers (best-effort:
+    /// shutdown also runs from `Drop`, where failing is worse than
+    /// warning).
     pub fn shutdown(&self) {
         if self.shutdown.swap(true, Ordering::SeqCst) {
             return;
+        }
+        if self.config.cutover.mode == CutoverMode::Adaptive {
+            if let Some(path) = &self.config.cutover.table_path {
+                if let Err(e) = self.xfer.adaptive_save(path) {
+                    eprintln!("warning: {e:#}");
+                }
+            }
         }
         for ring in &self.rings {
             let mut m = Message::nop();

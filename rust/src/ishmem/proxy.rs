@@ -25,7 +25,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::metrics::{Metrics, ServiceOp};
+use crate::coordinator::metrics::{Metrics, PathIdx, ServiceOp};
 use crate::ringbuf::{
     BatchDescriptor, CompletionPool, Message, RingConsumer, RingOp, COMPLETION_NONE, DESC_SIZE,
 };
@@ -127,8 +127,17 @@ fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
             Some(op) => {
                 let t0 = Instant::now();
                 service(op, &msg, sh, &proxy_clock);
-                sh.metrics
-                    .add_service(service_family(op), t0.elapsed().as_nanos() as u64);
+                let elapsed = t0.elapsed().as_nanos() as u64;
+                sh.metrics.add_service(service_family(op), elapsed);
+                // Wall half of the service-delta tables (data ops only).
+                if matches!(op, RingOp::Put | RingOp::Get) {
+                    let path = if is_local(sh, msg.src_pe as usize, msg.pe as usize) {
+                        PathIdx::CopyEngine
+                    } else {
+                        PathIdx::Nic
+                    };
+                    sh.metrics.add_service_wall(path, msg.len, elapsed);
+                }
             }
             None => panic!("proxy received malformed message op={}", msg.op),
         }
@@ -153,9 +162,12 @@ fn is_local(sh: &ProxyShared, a: usize, b: usize) -> bool {
 /// accumulate on one staged command list *per engine hint* (striped
 /// chunks land on their assigned engines; un-chunked entries on engine
 /// 0's list), each executed once after the scan (append → close →
-/// execute); immediate entries run inline. One completion retires the
-/// whole plan-group — per-chunk completions aggregate into that single
-/// token on the initiator side.
+/// execute); immediate entries run inline. Inter-node entries accumulate
+/// on one in-flight command sequence *per rail hint* (a scratch clock per
+/// rail — the NICs inject concurrently, so the proxy clock advances by
+/// the slowest rail, not the sum). One completion retires the whole
+/// plan-group — per-chunk completions aggregate into that single token on
+/// the initiator side.
 fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     let src_pe = msg.src_pe as usize;
     let n = msg.len as usize;
@@ -167,14 +179,30 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
 
     let mut status = PROXY_OK;
     let mut staged_cls: BTreeMap<usize, CommandList> = BTreeMap::new();
+    let mut rail_clocks: BTreeMap<usize, SimClock> = BTreeMap::new();
     for d in &descs {
         let t0 = Instant::now();
         let op = d.ring_op().expect("validated by decode_block");
-        if !dispatch_batch_entry(sh, src_pe, d, op, &mut staged_cls, proxy_clock) {
+        if !dispatch_batch_entry(sh, src_pe, d, op, &mut staged_cls, &mut rail_clocks, proxy_clock)
+        {
             status = PROXY_ERR_UNREGISTERED;
         }
-        sh.metrics
-            .add_service(service_family(op), t0.elapsed().as_nanos() as u64);
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        sh.metrics.add_service(service_family(op), elapsed);
+        // Wall half of the service-delta tables (data ops only). Chunked
+        // entries carry their whole transfer's byte count in the
+        // descriptor (`transfer_bytes`), so every per-chunk wall charge
+        // lands in exactly the (path, size-class) row of the executor's
+        // one whole-transfer model charge — tail and ramped chunks
+        // included.
+        if matches!(op, RingOp::Put | RingOp::Get) {
+            let path = if is_local(sh, src_pe, d.pe as usize) {
+                PathIdx::CopyEngine
+            } else {
+                PathIdx::Nic
+            };
+            sh.metrics.add_service_wall(path, d.transfer_bytes(), elapsed);
+        }
     }
     // The per-engine lists run on *different* blitters concurrently:
     // execute each on its own scratch clock and advance the proxy clock
@@ -189,18 +217,24 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
         sh.metrics
             .add_service(ServiceOp::Other, t0.elapsed().as_nanos() as u64);
     }
+    // Likewise the per-rail sequences inject on different NICs.
+    for (_rail, clock) in rail_clocks {
+        slowest = slowest.max(clock.now_ns());
+    }
     proxy_clock.advance(slowest);
     complete(sh, msg, status);
 }
 
 /// Dispatch one batch entry; returns false on a transport failure (the
 /// whole batch completes with an error status).
+#[allow(clippy::too_many_arguments)]
 fn dispatch_batch_entry(
     sh: &ProxyShared,
     src_pe: usize,
     d: &BatchDescriptor,
     op: RingOp,
     staged_cls: &mut BTreeMap<usize, CommandList>,
+    rail_clocks: &mut BTreeMap<usize, SimClock>,
     proxy_clock: &SimClock,
 ) -> bool {
     let pe = d.pe as usize;
@@ -221,9 +255,14 @@ fn dispatch_batch_entry(
                 }
                 true
             } else {
-                let dummy = SimClock::new();
+                // Inter-node: the chunk's rail hint selects which NIC's
+                // in-flight command sequence carries it (hint 0 for
+                // un-chunked entries).
+                let rail = d.rail_hint();
+                sh.metrics.add_rail_dispatch(rail, len as u64);
+                let clock = rail_clocks.entry(rail).or_insert_with(SimClock::new);
                 sh.transport
-                    .put(src_pe, d.src_off as usize, pe, d.dst_off as usize, len, &dummy)
+                    .put(src_pe, d.src_off as usize, pe, d.dst_off as usize, len, clock)
                     .is_ok()
             }
         }
@@ -243,9 +282,11 @@ fn dispatch_batch_entry(
                 }
                 true
             } else {
-                let dummy = SimClock::new();
+                let rail = d.rail_hint();
+                sh.metrics.add_rail_dispatch(rail, len as u64);
+                let clock = rail_clocks.entry(rail).or_insert_with(SimClock::new);
                 sh.transport
-                    .get(pe, d.src_off as usize, src_pe, d.dst_off as usize, len, &dummy)
+                    .get(pe, d.src_off as usize, src_pe, d.dst_off as usize, len, clock)
                     .is_ok()
             }
         }

@@ -14,7 +14,12 @@ USAGE:
   rishmem figure <ID> [--out DIR]     regenerate a paper figure
         IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig5-adaptive
              fig6-4pe fig6-8pe fig6-12pe fig7a fig7b ring fig-batch
-             fig-stripe ablate-cl ablate-sync cutover-table all
+             fig-stripe fig-rail ablate-cl ablate-sync cutover-table
+             service-delta all
+        cutover-table [--load FILE] [--save FILE]: load a previously
+        saved adaptive table instead of warming up / save the table
+        service-delta: wall-clock vs modeled proxy service times per
+        (path, size class), classes off by >2x flagged
   rishmem metrics [--json] [--pes N]  run a representative workload and
                                       dump the metrics snapshot (text or
                                       JSON for dashboard scraping)
@@ -95,7 +100,13 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "fig5b" => vec![figures::fig5b()],
         "fig5-adaptive" => vec![figures::fig5_adaptive()],
         "cutover-table" => {
-            println!("{}", figures::adaptive_cutover_report());
+            let load = kv.get("load").filter(|v| !v.is_empty()).map(|s| s.as_str());
+            let save = kv.get("save").filter(|v| !v.is_empty()).map(|s| s.as_str());
+            println!("{}", figures::adaptive_cutover_report_with(load, save));
+            return Ok(());
+        }
+        "service-delta" => {
+            println!("{}", figures::service_delta_report());
             return Ok(());
         }
         "fig6-4pe" => vec![figures::fig6(4)],
@@ -106,6 +117,7 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "ring" => vec![figures::ring_figure()],
         "fig-batch" => vec![figures::fig_batch()],
         "fig-stripe" => vec![figures::fig_stripe()],
+        "fig-rail" => vec![figures::fig_rail()],
         "ablate-cl" => vec![figures::ablate_cmdlists()],
         "ablate-sync" => vec![figures::ablate_sync()],
         "all" => figures::all_figures(),

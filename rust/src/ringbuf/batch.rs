@@ -147,6 +147,33 @@ impl BatchDescriptor {
         }
     }
 
+    /// The same continuation field read as a NIC-rail slot: inter-node
+    /// chunks carry which rail's in-flight command sequence should inject
+    /// them (the proxy dispatches one sequence per rail per batch).
+    pub fn rail_hint(&self) -> usize {
+        self.engine_hint()
+    }
+
+    /// Stamp the whole transfer's byte count on a chunked Put/Get entry
+    /// (`inline_val2`, unused by those op kinds): the proxy's wall-clock
+    /// service ledger buckets every chunk by its transfer's size, exactly
+    /// matching the executor's one whole-transfer model charge.
+    pub fn with_transfer_bytes(mut self, bytes: u64) -> Self {
+        self.inline_val2 = bytes;
+        self
+    }
+
+    /// Byte count of the whole transfer this entry belongs to: the
+    /// stamped total for chunked entries, the entry's own length
+    /// otherwise.
+    pub fn transfer_bytes(&self) -> u64 {
+        if self.is_chunked() && self.inline_val2 > 0 {
+            self.inline_val2
+        } else {
+            self.len
+        }
+    }
+
     /// Whether this entry asks for a standard command list.
     pub fn standard_cl(&self) -> bool {
         self.flags & DESC_FLAG_STANDARD_CL != 0
@@ -263,11 +290,18 @@ mod tests {
 
     #[test]
     fn chunk_fields_pack_and_roundtrip() {
-        let d = BatchDescriptor::put(3, 4096, 8192, 1 << 20).with_chunk(5, 9, 6);
+        let d = BatchDescriptor::put(3, 4096, 8192, 1 << 20)
+            .with_chunk(5, 9, 6)
+            .with_transfer_bytes(9 << 20);
         assert!(d.is_chunked());
         assert_eq!(d.chunk_index(), 5);
         assert_eq!(d.chunk_count(), 9);
         assert_eq!(d.engine_hint(), 6);
+        assert_eq!(d.rail_hint(), 6);
+        assert_eq!(d.transfer_bytes(), 9 << 20);
+        // Un-stamped entries fall back to their own length.
+        let u = BatchDescriptor::put(3, 0, 0, 4096);
+        assert_eq!(u.transfer_bytes(), 4096);
         assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
         // Un-chunked entries report the identity shape.
         let p = BatchDescriptor::put(3, 0, 0, 64);

@@ -9,6 +9,7 @@ use std::sync::Arc;
 use super::copyengine::{CopyEngineParams, EngineQueue};
 use super::nic::NicParams;
 use super::pcie::PcieParams;
+use super::rail::RailSet;
 use super::topology::{Locality, Topology};
 use super::xelink::XeLinkParams;
 
@@ -18,7 +19,46 @@ pub struct CostParams {
     pub ce: CopyEngineParams,
     pub pcie: PcieParams,
     pub nic: NicParams,
+    pub stripe: StripeParams,
     pub overhead: OverheadParams,
+}
+
+/// Shared knobs of the chunked stripe pipelines (engine *and* rail): the
+/// ramped-first-chunk geometry. The pipeline's serial prefix is the
+/// staging of its first chunk; shrinking the first 1–2 fills starts the
+/// first engine/rail earlier at the price of one or two extra chunk
+/// startups later — a latency-for-startups trade the executors charge via
+/// `max(exec, staging) + first-fill` with the reduced fill term.
+#[derive(Clone, Debug)]
+pub struct StripeParams {
+    /// Fill-size factor of the leading ramped chunks, in (0, 1]. 1.0
+    /// disables ramping (every chunk uses the planned `chunk_bytes`).
+    pub ramp_factor: f64,
+    /// How many leading chunks use the ramped fill (1–2 typical).
+    pub ramp_chunks: usize,
+}
+
+impl Default for StripeParams {
+    fn default() -> Self {
+        StripeParams { ramp_factor: 1.0, ramp_chunks: 2 }
+    }
+}
+
+impl StripeParams {
+    /// Whether ramped first chunks are enabled.
+    pub fn ramp_enabled(&self) -> bool {
+        self.ramp_factor < 1.0
+    }
+
+    /// Fill size of the leading ramped chunks for a planned `chunk_bytes`
+    /// (= `chunk_bytes` when ramping is off).
+    pub fn first_fill_bytes(&self, chunk_bytes: usize) -> usize {
+        if self.ramp_enabled() {
+            ((chunk_bytes as f64 * self.ramp_factor) as usize).max(1)
+        } else {
+            chunk_bytes
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -47,6 +87,45 @@ impl Default for OverheadParams {
     }
 }
 
+/// Route-generic stripe scan: pick the (chunk size, lane width) whose
+/// modeled transfer is cheapest under `score(width, chunk, chunks)`, where
+/// the lane table behind `score` is either the copy-engine model
+/// ([`CostModel::stripe_for`]) or the NIC rail model
+/// ([`CostModel::rail_stripe_for`]). `chunk_cap` is the caller's slab
+/// ceiling; a cap below `chunk_min` disables the chunk pipeline entirely,
+/// and transfers strictly below `2 · chunk_min` that fit the cap ship as
+/// one un-striped unit (a second startup cannot amortize — and engaging at
+/// exactly two minimum chunks keeps per-pow2-step estimates monotone).
+fn stripe_scan(
+    bytes: usize,
+    chunk_cap: usize,
+    chunk_min: usize,
+    w_max: usize,
+    score: impl Fn(usize, usize, usize) -> f64,
+) -> (usize, usize) {
+    let chunk_min = chunk_min.max(1);
+    if bytes == 0 || chunk_cap < chunk_min {
+        return (bytes.max(1), 1);
+    }
+    if bytes < 2 * chunk_min && bytes <= chunk_cap {
+        return (bytes, 1);
+    }
+    let w_max = w_max.max(1);
+    let mut best = (bytes.min(chunk_cap), 1usize);
+    let mut best_ns = f64::INFINITY;
+    for w in 1..=w_max {
+        let chunk = bytes.div_ceil(w).clamp(chunk_min, chunk_cap);
+        let n = bytes.div_ceil(chunk);
+        let eff_w = w.min(n);
+        let ns = score(eff_w, chunk, n);
+        if ns < best_ns {
+            best_ns = ns;
+            best = (chunk, eff_w);
+        }
+    }
+    best
+}
+
 /// Shared, thread-safe cost model (one per launched machine).
 #[derive(Debug)]
 pub struct CostModel {
@@ -54,6 +133,8 @@ pub struct CostModel {
     pub topo: Topology,
     /// Per-GPU copy-engine occupancy (global GPU index).
     engine_queues: Vec<EngineQueue>,
+    /// Per-node NIC-rail occupancy (node index).
+    rail_sets: Vec<RailSet>,
 }
 
 impl CostModel {
@@ -63,6 +144,7 @@ impl CostModel {
             engine_queues: (0..gpus)
                 .map(|_| EngineQueue::new(params.ce.engines_per_gpu))
                 .collect(),
+            rail_sets: (0..topo.nodes).map(|_| RailSet::new(params.nic.rails)).collect(),
             params,
             topo,
         })
@@ -156,33 +238,27 @@ impl CostModel {
         cl_immediate_max: usize,
     ) -> (usize, usize) {
         let ce = &self.params.ce;
-        let chunk_min = ce.chunk_min_bytes.max(1);
-        if bytes == 0 || chunk_cap < chunk_min {
+        let w_max = ce.stripe_max_engines.clamp(1, ce.engines_per_gpu.max(1));
+        stripe_scan(bytes, chunk_cap, ce.chunk_min_bytes, w_max, |w, chunk, n| {
+            let imm = chunk <= cl_immediate_max;
+            ce.striped_transfer_ns(&self.params.xe, loc, bytes, imm, false, w, n)
+        })
+    }
+
+    /// Rail-table counterpart of [`Self::stripe_for`]: pick a (chunk size,
+    /// rail width) for an inter-node transfer of `bytes`, scoring
+    /// candidates against the NIC rail model (`nic.rails`,
+    /// `nic.rail_bw_frac`, `nic.rail_startup_ns`). A 1-rail configuration
+    /// never chunks — the transfer stays one RDMA, preserving the
+    /// pre-striping single-rail estimates exactly.
+    pub fn rail_stripe_for(&self, bytes: usize, chunk_cap: usize) -> (usize, usize) {
+        let nic = &self.params.nic;
+        if nic.rails <= 1 {
             return (bytes.max(1), 1);
         }
-        // Too small to amortize a second startup, and a single chunk
-        // fits. Strictly below 2·chunk_min: at exactly two minimum chunks
-        // striping must engage, or the modeled time would *drop* across
-        // the boundary (width scales with size, keeping per-pow2-step
-        // estimates monotone).
-        if bytes < 2 * chunk_min && bytes <= chunk_cap {
-            return (bytes, 1);
-        }
-        let w_max = ce.stripe_max_engines.clamp(1, ce.engines_per_gpu.max(1));
-        let mut best = (bytes.min(chunk_cap), 1usize);
-        let mut best_ns = f64::INFINITY;
-        for w in 1..=w_max {
-            let chunk = bytes.div_ceil(w).clamp(chunk_min, chunk_cap);
-            let n = bytes.div_ceil(chunk);
-            let eff_w = w.min(n);
-            let imm = chunk <= cl_immediate_max;
-            let ns = ce.striped_transfer_ns(&self.params.xe, loc, bytes, imm, false, eff_w, n);
-            if ns < best_ns {
-                best_ns = ns;
-                best = (chunk, eff_w);
-            }
-        }
-        best
+        stripe_scan(bytes, chunk_cap, nic.rail_chunk_min_bytes, nic.rails, |w, _chunk, n| {
+            nic.rdma_striped_ns(bytes, w, n)
+        })
     }
 
     /// Planning *estimate* of the device-initiated engine path: ring round
@@ -300,6 +376,47 @@ impl CostModel {
         self.engine_queues[gpu].least_loaded(width)
     }
 
+    // ----------------------------------------------- rail-queue backlog ----
+
+    /// Register accepted-but-incomplete remote work on one rail of `node`.
+    pub fn rail_reserve_on(&self, node: usize, rail: usize, bytes: u64) {
+        self.rail_sets[node].reserve_on(rail, bytes);
+    }
+
+    /// Retire work previously reserved with [`Self::rail_reserve_on`].
+    pub fn rail_release_on(&self, node: usize, rail: usize, bytes: u64) {
+        self.rail_sets[node].release_on(rail, bytes);
+    }
+
+    /// Total NIC-rail byte backlog on `node` (sum over its rails).
+    pub fn rail_backlog_bytes(&self, node: usize) -> u64 {
+        self.rail_sets[node].queued_bytes()
+    }
+
+    /// Byte backlog of one rail of `node`.
+    pub fn rail_backlog_on(&self, node: usize, rail: usize) -> u64 {
+        self.rail_sets[node].rail_bytes(rail)
+    }
+
+    /// The `width` least-loaded rail slots of `node`, lightest first —
+    /// where the executor places the next remote stripe's chunks.
+    pub fn rail_pick(&self, node: usize, width: usize) -> Vec<usize> {
+        self.rail_sets[node].least_loaded(width)
+    }
+
+    /// Time to drain `backlog_bytes` already queued on a node's rails at
+    /// the aggregate rail rate (the occupancy term of the loaded remote
+    /// estimate).
+    pub fn rail_drain_ns(&self, backlog_bytes: u64) -> f64 {
+        let nic = &self.params.nic;
+        let bw = nic.rail_striped_bw_gbs(nic.rails);
+        if bw > 0.0 {
+            backlog_bytes as f64 / bw
+        } else {
+            0.0
+        }
+    }
+
     /// Device-side cost of staging `bytes` through the symmetric-heap
     /// staging slab (an HBM-local copy by the issuing work-items; latency
     /// hides in pipelining, so pure bandwidth).
@@ -320,6 +437,59 @@ impl CostModel {
             self.params.nic.bounce_ns(bytes)
         };
         ring + self.params.overhead.host_issue_ns + wire
+    }
+
+    /// Inter-node transfer of `bytes` split into `chunks` chunks striped
+    /// over `width` NIC rails. Striping requires FI_HMEM registration —
+    /// an unregistered target bounces through host memory un-striped.
+    /// Degenerates to [`Self::internode_ns`] at `(width, chunks) = (1, 1)`
+    /// under the default `rail_bw_frac`.
+    pub fn internode_striped_ns(
+        &self,
+        bytes: usize,
+        registered_heap: bool,
+        via_ring: bool,
+        width: usize,
+        chunks: usize,
+    ) -> f64 {
+        if !registered_heap {
+            return self.internode_ns(bytes, false, via_ring);
+        }
+        let ring = if via_ring {
+            self.params.pcie.ring_round_trip_ns()
+        } else {
+            0.0
+        };
+        ring + self.params.overhead.host_issue_ns
+            + self.params.nic.rdma_striped_ns(bytes, width, chunks)
+    }
+
+    // --------------------------------------------------- time-to-first-byte
+
+    /// Modeled time until the first byte of a chunked *engine* transfer is
+    /// on an engine: ring hand-off + staging of the first (possibly
+    /// ramped) fill + the engine startup. Ramping (`stripe.ramp_factor` <
+    /// 1) strictly shrinks the fill term, so the first engine starts
+    /// earlier at equal total bytes.
+    pub fn engine_ttfb_ns(&self, chunk_bytes: usize, immediate_cl: bool) -> f64 {
+        let startup = if immediate_cl {
+            self.params.ce.startup_immediate_ns
+        } else {
+            self.params.ce.startup_standard_ns
+        };
+        self.ring_rtt_ns()
+            + self.staging_copy_ns(self.params.stripe.first_fill_bytes(chunk_bytes))
+            + startup
+    }
+
+    /// Modeled time until the first byte of a chunked *rail* transfer is
+    /// on the wire: ring hand-off + host proxy + staging of the first
+    /// (possibly ramped) fill + the NIC injection latency.
+    pub fn nic_ttfb_ns(&self, chunk_bytes: usize) -> f64 {
+        self.ring_rtt_ns()
+            + self.params.overhead.host_issue_ns
+            + self.staging_copy_ns(self.params.stripe.first_fill_bytes(chunk_bytes))
+            + self.params.nic.latency_ns
     }
 
     /// Pipelined remote atomics (push sync/broadcast primitives).
@@ -456,6 +626,81 @@ mod tests {
     fn internode_registration_matters() {
         let m = model();
         assert!(m.internode_ns(1 << 20, true, true) < m.internode_ns(1 << 20, false, true));
+    }
+
+    #[test]
+    fn rail_stripe_planner_mirrors_engine_planner() {
+        let m = model();
+        let chunk_min = m.params.nic.rail_chunk_min_bytes;
+        // Small remote transfers never stripe.
+        assert_eq!(m.rail_stripe_for(4096, usize::MAX), (4096, 1));
+        // Large remote transfers stripe across rails and beat one rail.
+        let big = 8 << 20;
+        let (c, w) = m.rail_stripe_for(big, usize::MAX);
+        assert!(w >= 2, "no rail striping for {big}B: width {w}");
+        assert!(c >= chunk_min && c <= big);
+        let n = big.div_ceil(c);
+        let striped = m.internode_striped_ns(big, true, true, w, n);
+        let single = m.internode_ns(big, true, true);
+        assert!(striped * 2.0 <= single, "{striped} !<= {single}/2");
+        // A cap below the rail chunk minimum disables the pipeline.
+        assert_eq!(m.rail_stripe_for(big, chunk_min - 1), (big, 1));
+        // A slab-sized cap forces more, smaller chunks — never above cap.
+        let (c, w) = m.rail_stripe_for(big, 1 << 20);
+        assert!(c <= 1 << 20 && w >= 2, "cap ignored: chunk {c} width {w}");
+    }
+
+    #[test]
+    fn one_rail_config_never_chunks_and_matches_plain_internode() {
+        let mut p = CostParams::default();
+        p.nic.rails = 1;
+        let m = CostModel::new(Topology::default(), p);
+        for bytes in [64usize, 4096, 1 << 20, 8 << 20] {
+            assert_eq!(m.rail_stripe_for(bytes, usize::MAX), (bytes.max(1), 1));
+            assert_eq!(
+                m.internode_striped_ns(bytes, true, true, 1, 1),
+                m.internode_ns(bytes, true, true),
+            );
+        }
+    }
+
+    #[test]
+    fn unregistered_targets_bounce_unstriped() {
+        let m = model();
+        assert_eq!(
+            m.internode_striped_ns(1 << 20, false, true, 4, 4),
+            m.internode_ns(1 << 20, false, true),
+        );
+    }
+
+    #[test]
+    fn per_rail_reserve_release_roundtrip() {
+        let m = model();
+        m.rail_reserve_on(0, 2, 4096);
+        m.rail_reserve_on(0, 3, 100);
+        assert_eq!(m.rail_backlog_on(0, 2), 4096);
+        assert_eq!(m.rail_backlog_bytes(0), 4196);
+        let picked = m.rail_pick(0, 2);
+        assert!(!picked.contains(&2) && !picked.contains(&3), "{picked:?}");
+        m.rail_release_on(0, 2, 4096);
+        m.rail_release_on(0, 3, 100);
+        assert_eq!(m.rail_backlog_bytes(0), 0);
+        assert!(m.rail_drain_ns(8 << 20) > 0.0);
+    }
+
+    #[test]
+    fn ramp_strictly_reduces_time_to_first_byte() {
+        let mut p = CostParams::default();
+        let base = CostModel::new(Topology::default(), p.clone());
+        p.stripe.ramp_factor = 0.25;
+        let ramped = CostModel::new(Topology::default(), p);
+        let chunk = 1 << 20;
+        assert!(ramped.nic_ttfb_ns(chunk) < base.nic_ttfb_ns(chunk));
+        assert!(ramped.engine_ttfb_ns(chunk, true) < base.engine_ttfb_ns(chunk, true));
+        assert!(ramped.engine_ttfb_ns(chunk, false) < base.engine_ttfb_ns(chunk, false));
+        // Ramp off is the identity fill.
+        assert_eq!(base.params.stripe.first_fill_bytes(chunk), chunk);
+        assert_eq!(ramped.params.stripe.first_fill_bytes(chunk), chunk / 4);
     }
 
     #[test]

@@ -17,10 +17,12 @@ pub mod cost;
 pub mod memory;
 pub mod nic;
 pub mod pcie;
+pub mod rail;
 pub mod topology;
 pub mod xelink;
 
 pub use clock::SimClock;
 pub use cost::{CostModel, CostParams};
 pub use memory::{HeapRegistry, SymHeap};
+pub use rail::RailSet;
 pub use topology::{Locality, PeId, Topology};

@@ -15,6 +15,21 @@ pub struct NicParams {
     pub bounce_penalty_ns: f64,
     /// NICs per node (traffic stripes across them).
     pub nics_per_node: usize,
+    /// NIC rails one transfer may stripe its chunks across (≤
+    /// `nics_per_node`; 1 disables the remote chunk pipeline entirely —
+    /// the pre-striping single-RDMA behavior).
+    pub rails: usize,
+    /// Sustained per-rail injection rate as a fraction of the nominal
+    /// per-NIC bandwidth (a proxy-driven command sequence may not saturate
+    /// its NIC; the remote twin of `ce.single_engine_frac`).
+    pub rail_bw_frac: f64,
+    /// Per-chunk injection startup on a rail: each additional back-to-back
+    /// chunk round on the critical path pays this (the first chunk's
+    /// startup is covered by `latency_ns`).
+    pub rail_startup_ns: f64,
+    /// Smallest chunk worth its own rail injection startup: remote
+    /// transfers at or below twice this size never stripe (planner knob).
+    pub rail_chunk_min_bytes: usize,
 }
 
 impl Default for NicParams {
@@ -24,6 +39,10 @@ impl Default for NicParams {
             latency_ns: 1_800.0,
             bounce_penalty_ns: 6_000.0,
             nics_per_node: 8,
+            rails: 4,
+            rail_bw_frac: 1.0,
+            rail_startup_ns: 500.0,
+            rail_chunk_min_bytes: 256 << 10,
         }
     }
 }
@@ -32,6 +51,32 @@ impl NicParams {
     /// RDMA put/get of `bytes` into a registered (FI_HMEM) heap, ns.
     pub fn rdma_ns(&self, bytes: usize) -> f64 {
         self.latency_ns + bytes as f64 / self.bw_gbs
+    }
+
+    /// Sustained rate of one rail.
+    pub fn rail_bw_gbs(&self) -> f64 {
+        self.bw_gbs * self.rail_bw_frac.clamp(0.01, 1.0)
+    }
+
+    /// Aggregate rate of `width` rails striping one transfer, capped at
+    /// the configured rail count (each rail is its own NIC; the node's
+    /// other NICs carry other traffic).
+    pub fn rail_striped_bw_gbs(&self, width: usize) -> f64 {
+        width.clamp(1, self.rails.max(1)) as f64 * self.rail_bw_gbs()
+    }
+
+    /// RDMA of `bytes` split into `chunks` chunks striped over `width`
+    /// rails, ns: one end-to-end latency, `ceil(chunks/width) - 1`
+    /// additional back-to-back injection startups on the critical path,
+    /// and the data at the striped rate. Degenerates to [`Self::rdma_ns`]
+    /// at `(width, chunks) = (1, 1)`.
+    pub fn rdma_striped_ns(&self, bytes: usize, width: usize, chunks: usize) -> f64 {
+        let chunks = chunks.max(1);
+        let width = width.clamp(1, self.rails.max(1)).min(chunks);
+        let rounds = chunks.div_ceil(width);
+        self.latency_ns
+            + (rounds - 1) as f64 * self.rail_startup_ns
+            + bytes as f64 / self.rail_striped_bw_gbs(width)
     }
 
     /// Same transfer when the heap is NOT registered for device RDMA:
@@ -54,6 +99,32 @@ mod tests {
     fn registered_beats_bounce() {
         let n = NicParams::default();
         assert!(n.rdma_ns(1 << 20) < n.bounce_ns(1 << 20));
+    }
+
+    #[test]
+    fn striped_rdma_degenerates_to_single_rail() {
+        let n = NicParams::default();
+        for bytes in [64usize, 1 << 20, 8 << 20] {
+            assert_eq!(n.rdma_striped_ns(bytes, 1, 1), n.rdma_ns(bytes));
+        }
+        // Width never exceeds the configured rail count.
+        let one_rail = NicParams { rails: 1, ..NicParams::default() };
+        assert_eq!(
+            one_rail.rdma_striped_ns(1 << 20, 4, 4),
+            one_rail.latency_ns
+                + 3.0 * one_rail.rail_startup_ns
+                + (1 << 20) as f64 / one_rail.rail_bw_gbs()
+        );
+    }
+
+    #[test]
+    fn rail_striping_recovers_aggregate_injection() {
+        let n = NicParams::default();
+        let bytes = 8 << 20;
+        let single = n.rdma_striped_ns(bytes, 1, 1);
+        let striped = n.rdma_striped_ns(bytes, 4, 4);
+        assert!(striped * 2.0 <= single, "striped {striped} !<= single {single}/2");
+        assert_eq!(n.rail_striped_bw_gbs(4), 4.0 * n.rail_bw_gbs());
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! NIC rail set: per-rail backlog state for multi-rail scale-out striping.
+//!
+//! The paper's testbed exposes 8 Slingshot NICs per node (§III-A); a
+//! single proxy-driven RDMA sequence rides exactly one of them, capping
+//! inter-node bandwidth at one rail's injection rate. Striping a large
+//! remote transfer's chunks across `nic.rails` rails recovers the node's
+//! aggregate injection bandwidth — the remote-path twin of the per-GPU
+//! copy-engine striping in [`super::copyengine`] ("Exploring Fully
+//! Offloaded GPU Stream-Aware Message Passing" and NVSHMEM's per-rail
+//! proxy channels do the same on other stacks).
+//!
+//! [`RailSet`] is the per-*node* mirror of [`super::copyengine::EngineQueue`]:
+//! each rail keeps a byte backlog of accepted-but-incomplete remote work
+//! (blocking transfers hold their bytes for the call; NBI transfers until
+//! `quiet`), so the planner can fold the node's remote backlog into its
+//! NIC estimate and executors can place new chunks on the least-loaded
+//! rails.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-node rail state: a byte backlog per NIC rail.
+#[derive(Debug)]
+pub struct RailSet {
+    /// Outstanding bytes per rail (index = rail slot on this node).
+    per_rail_bytes: Vec<AtomicU64>,
+}
+
+impl RailSet {
+    pub fn new(rails: usize) -> Self {
+        let rails = rails.max(1);
+        RailSet {
+            per_rail_bytes: (0..rails).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn rails(&self) -> usize {
+        self.per_rail_bytes.len()
+    }
+
+    fn slot(&self, rail: usize) -> &AtomicU64 {
+        &self.per_rail_bytes[rail.min(self.per_rail_bytes.len() - 1)]
+    }
+
+    /// Register `bytes` of accepted-but-incomplete remote work on `rail`.
+    pub fn reserve_on(&self, rail: usize, bytes: u64) {
+        self.slot(rail).fetch_add(bytes, Ordering::AcqRel);
+    }
+
+    /// Retire work previously reserved on `rail`.
+    pub fn release_on(&self, rail: usize, bytes: u64) {
+        let prev = self.slot(rail).fetch_sub(bytes, Ordering::AcqRel);
+        debug_assert!(prev >= bytes, "rail backlog underflow: {prev} - {bytes}");
+    }
+
+    /// Current byte backlog of one rail.
+    pub fn rail_bytes(&self, rail: usize) -> u64 {
+        self.slot(rail).load(Ordering::Acquire)
+    }
+
+    /// Total byte backlog across this node's rails.
+    pub fn queued_bytes(&self) -> u64 {
+        self.per_rail_bytes
+            .iter()
+            .map(|b| b.load(Ordering::Acquire))
+            .sum()
+    }
+
+    /// The `width` least-loaded rail slots, lightest first (approximate
+    /// under concurrency — placement, not correctness, depends on it).
+    pub fn least_loaded(&self, width: usize) -> Vec<usize> {
+        let mut loads: Vec<(u64, usize)> = self
+            .per_rail_bytes
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.load(Ordering::Acquire), i))
+            .collect();
+        loads.sort_unstable();
+        loads
+            .into_iter()
+            .take(width.clamp(1, self.per_rail_bytes.len()))
+            .map(|(_, i)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_rail_backlog_is_independent() {
+        let r = RailSet::new(4);
+        assert_eq!(r.rails(), 4);
+        r.reserve_on(1, 100);
+        r.reserve_on(3, 50);
+        assert_eq!(r.rail_bytes(1), 100);
+        assert_eq!(r.rail_bytes(3), 50);
+        assert_eq!(r.rail_bytes(0), 0);
+        assert_eq!(r.queued_bytes(), 150);
+        // Out-of-range rail indices clamp to the last slot.
+        r.reserve_on(99, 7);
+        assert_eq!(r.rail_bytes(3), 57);
+        r.release_on(99, 7);
+        r.release_on(1, 100);
+        r.release_on(3, 50);
+        assert_eq!(r.queued_bytes(), 0);
+    }
+
+    #[test]
+    fn least_loaded_orders_by_backlog() {
+        let r = RailSet::new(4);
+        r.reserve_on(0, 300);
+        r.reserve_on(1, 100);
+        r.reserve_on(2, 200);
+        assert_eq!(r.least_loaded(4), vec![3, 1, 2, 0]);
+        assert_eq!(r.least_loaded(2), vec![3, 1]);
+        // Width clamps to the rail count and to ≥1.
+        assert_eq!(r.least_loaded(0).len(), 1);
+        assert_eq!(r.least_loaded(99).len(), 4);
+    }
+
+    #[test]
+    fn zero_rail_request_still_builds_one_rail() {
+        let r = RailSet::new(0);
+        assert_eq!(r.rails(), 1);
+        r.reserve_on(0, 8);
+        assert_eq!(r.queued_bytes(), 8);
+        r.release_on(0, 8);
+    }
+}

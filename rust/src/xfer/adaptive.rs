@@ -35,6 +35,10 @@ pub struct BucketKey {
     pub fanout: bool,
     /// log2 destination-peer bucket (0 for point-to-point).
     pub peers_pow2: u8,
+    /// log2 NIC-rail-width bucket of remote cells (0 intra-node): a
+    /// 4-rail-striped remote observation must not alias the single-rail
+    /// cell of the same size.
+    pub rails_pow2: u8,
 }
 
 impl BucketKey {
@@ -46,6 +50,7 @@ impl BucketKey {
             items_pow2: log2_bucket(items),
             fanout: false,
             peers_pow2: 0,
+            rails_pow2: 0,
         }
     }
 
@@ -55,6 +60,15 @@ impl BucketKey {
             fanout: true,
             peers_pow2: log2_bucket(npeers),
             ..Self::p2p(loc, bytes, items)
+        }
+    }
+
+    /// Remote point-to-point cell: the rail width the transfer striped
+    /// across is its own bucket dimension.
+    pub fn remote(bytes: usize, items: usize, rail_width: usize) -> Self {
+        BucketKey {
+            rails_pow2: log2_bucket(rail_width),
+            ..Self::p2p(Locality::Remote, bytes, items)
         }
     }
 }
@@ -195,8 +209,8 @@ impl AdaptiveTable {
         self.len() == 0
     }
 
-    /// Snapshot of the whole table, sorted by (class, loc, peers, items,
-    /// size).
+    /// Snapshot of the whole table, sorted by (class, loc, peers, rails,
+    /// items, size).
     pub fn snapshot(&self) -> Vec<AdaptiveCell> {
         let cells = self.cells.lock().unwrap();
         let mut v: Vec<AdaptiveCell> = cells
@@ -214,11 +228,29 @@ impl AdaptiveTable {
                 c.key.fanout,
                 c.key.loc as u8,
                 c.key.peers_pow2,
+                c.key.rails_pow2,
                 c.key.items_pow2,
                 c.key.size_pow2,
             )
         });
         v
+    }
+
+    /// Install previously-learned cells (table persistence across runs):
+    /// each imported cell replaces any existing cell with the same key,
+    /// EMAs and sample counts included, so a loaded table decides exactly
+    /// like the run that saved it.
+    pub fn load_cells(&self, cells: &[AdaptiveCell]) {
+        let mut map = self.cells.lock().unwrap();
+        for c in cells {
+            map.insert(
+                c.key,
+                CellState {
+                    ema_ns: [c.ema_loadstore_ns, c.ema_copy_engine_ns],
+                    samples: [c.samples_loadstore, c.samples_copy_engine],
+                },
+            );
+        }
     }
 }
 
@@ -275,6 +307,41 @@ mod tests {
         // Greedy tables never deviate.
         let g = AdaptiveTable::new(0.5);
         assert!((0..200).all(|_| g.decide(k, 100.0, 200.0) == Path::LoadStore));
+    }
+
+    #[test]
+    fn remote_cells_are_disjoint_by_rail_width() {
+        let r1 = BucketKey::remote(1 << 20, 1, 1);
+        let r4 = BucketKey::remote(1 << 20, 1, 4);
+        assert_ne!(r1, r4);
+        assert_eq!(r1, BucketKey::p2p(Locality::Remote, 1 << 20, 1));
+        let t = AdaptiveTable::new(0.5);
+        t.decide(r1, 100.0, 200.0);
+        t.decide(r4, 100.0, 200.0);
+        for _ in 0..16 {
+            assert!(t.observe(r4, Path::LoadStore, 10_000.0));
+        }
+        assert_eq!(t.peek(r1), Some(Path::LoadStore));
+        assert_eq!(t.peek(r4), Some(Path::CopyEngine));
+    }
+
+    #[test]
+    fn loaded_cells_replace_and_decide_like_the_saver() {
+        let a = AdaptiveTable::new(0.5);
+        let k = BucketKey::p2p(Locality::SameNode, 4096, 16);
+        a.decide(k, 100.0, 200.0);
+        for _ in 0..8 {
+            a.observe(k, Path::LoadStore, 1000.0);
+        }
+        let cells = a.snapshot();
+        let b = AdaptiveTable::new(0.5);
+        b.load_cells(&cells);
+        assert_eq!(b.len(), a.len());
+        assert_eq!(b.peek(k), a.peek(k));
+        let bc = &b.snapshot()[0];
+        let ac = &cells[0];
+        assert_eq!(bc.samples_loadstore, ac.samples_loadstore);
+        assert_eq!(bc.ema_loadstore_ns, ac.ema_loadstore_ns);
     }
 
     #[test]

@@ -47,22 +47,69 @@ pub(crate) const FLAG_RAW_PTR: u16 = 1 << 8;
 pub(crate) const PROXY_OK: u64 = 0;
 pub(crate) const PROXY_ERR_UNREGISTERED: u64 = 1;
 
-/// Chunk geometry of a striped transfer: yields `(idx, offset, len,
-/// engine)` for every chunk, cycling the engine hints over the picked
-/// slots. The single source of the slicing arithmetic shared by the
-/// striped put executors and the collectives fan-out (the windowed get
-/// keeps its own loop — its iteration is bounded by slab windows, not
-/// just geometry).
-pub(crate) fn chunk_iter<'a>(
+/// Uniform chunk geometry of a striped transfer: yields `(idx, offset,
+/// len)` for every chunk. Used by the collectives fan-out, which assigns
+/// lanes with its own fan-out-wide counter; the p2p executors use the
+/// ramp-aware [`chunk_layout`] instead.
+pub(crate) fn chunk_iter(
     bytes: usize,
     chunk: usize,
-    engines: &'a [usize],
-) -> impl Iterator<Item = (usize, usize, usize, usize)> + 'a {
+) -> impl Iterator<Item = (usize, usize, usize)> {
     let chunk = chunk.max(1);
     (0..bytes.div_ceil(chunk)).map(move |i| {
         let off = i * chunk;
-        (i, off, chunk.min(bytes - off), engines[i % engines.len()])
+        (i, off, chunk.min(bytes - off))
     })
+}
+
+/// Ramped chunk geometry of a striped transfer: the first `ramp_chunks`
+/// chunks use the reduced `ramp_len` fill (so the first engine/rail
+/// starts earlier — `stripe.ramp_factor`), then geometry grows to the
+/// planned `chunk` size. Yields contiguous `(idx, offset, len)` triples
+/// with monotone ids covering `bytes` exactly; `ramp_len == chunk`
+/// reproduces the un-ramped slicing of [`chunk_iter`].
+pub fn chunk_layout(
+    bytes: usize,
+    chunk: usize,
+    ramp_len: usize,
+    ramp_chunks: usize,
+) -> Vec<(usize, usize, usize)> {
+    let chunk = chunk.max(1);
+    let ramp_len = ramp_len.clamp(1, chunk);
+    let mut out = Vec::with_capacity(bytes.div_ceil(chunk) + ramp_chunks);
+    let (mut off, mut idx) = (0usize, 0usize);
+    while off < bytes {
+        let full = if idx < ramp_chunks { ramp_len } else { chunk };
+        let len = full.min(bytes - off);
+        out.push((idx, off, len));
+        off += len;
+        idx += 1;
+    }
+    out
+}
+
+/// Chunk count of [`chunk_layout`] in O(1) — the charge model needs only
+/// the count, not the slices (property-tested to match the layout).
+pub fn chunk_layout_len(bytes: usize, chunk: usize, ramp_len: usize, ramp_chunks: usize) -> usize {
+    let chunk = chunk.max(1);
+    let ramp_len = ramp_len.clamp(1, chunk);
+    let ramp_span = ramp_chunks.saturating_mul(ramp_len);
+    if bytes <= ramp_span {
+        bytes.div_ceil(ramp_len)
+    } else {
+        ramp_chunks + (bytes - ramp_span).div_ceil(chunk)
+    }
+}
+
+/// Which backlog ledger a striped transfer's lanes live on: the source
+/// GPU's copy engines (intra-node, §III-C) or the source node's NIC rails
+/// (inter-node, §III-D). The lane index rides the descriptor continuation
+/// field either way (`BatchDescriptor::with_chunk`), and reserve/release
+/// and the NBI tracker ledger dispatch on the kind.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Lanes {
+    Engines { gpu: usize },
+    Rails { node: usize },
 }
 
 /// Compose a reverse-offload RMA ring message (the raw-pointer fallback
@@ -154,17 +201,95 @@ impl PeCtx {
         !self.rt.xfer.cl_immediate_for(bytes)
     }
 
+    /// The lane set a striped plan's chunks spread over: the `width`
+    /// least-loaded copy engines of this PE's GPU for engine routes, the
+    /// least-loaded NIC rails of its node for remote routes.
+    fn lanes_for(&self, plan: &TransferPlan) -> (Lanes, Vec<usize>) {
+        match plan.route {
+            Route::CopyEngine => {
+                let gpu = self.my_gpu();
+                (Lanes::Engines { gpu }, self.rt.cost.engine_pick(gpu, plan.stripe_width))
+            }
+            Route::Nic => {
+                let node = self.node();
+                (Lanes::Rails { node }, self.rt.cost.rail_pick(node, plan.stripe_width))
+            }
+            Route::LoadStore => unreachable!("load/store transfers never stripe"),
+        }
+    }
+
+    /// Register accepted-but-incomplete work on one lane of the shared
+    /// cost model (the planner's occupancy fold reads it).
+    fn lane_reserve(&self, lanes: Lanes, lane: usize, bytes: u64) {
+        match lanes {
+            Lanes::Engines { gpu } => self.rt.cost.engine_reserve_on(gpu, lane, bytes),
+            Lanes::Rails { node } => self.rt.cost.rail_reserve_on(node, lane, bytes),
+        }
+    }
+
+    /// Retire work previously reserved with [`Self::lane_reserve`].
+    fn lane_release(&self, lanes: Lanes, lane: usize, bytes: u64) {
+        match lanes {
+            Lanes::Engines { gpu } => self.rt.cost.engine_release_on(gpu, lane, bytes),
+            Lanes::Rails { node } => self.rt.cost.rail_release_on(node, lane, bytes),
+        }
+    }
+
+    /// Park an NBI reservation in the completion tracker's matching
+    /// per-lane ledger until `quiet` releases it.
+    fn lane_note_nbi(&self, lanes: Lanes, lane: usize, bytes: u64) {
+        match lanes {
+            Lanes::Engines { .. } => self.track.note_engine_bytes(lane, bytes),
+            Lanes::Rails { .. } => self.track.note_rail_bytes(lane, bytes),
+        }
+    }
+
+    /// Chunk geometry this plan's executor slices the payload into:
+    /// ramped first fills when `stripe.ramp_factor` < 1, the planner's
+    /// uniform `chunk_bytes` otherwise.
+    fn plan_layout(&self, plan: &TransferPlan) -> Vec<(usize, usize, usize)> {
+        let stripe = &self.rt.cost.params.stripe;
+        chunk_layout(
+            plan.bytes,
+            plan.chunk_bytes,
+            stripe.first_fill_bytes(plan.chunk_bytes),
+            stripe.ramp_chunks,
+        )
+    }
+
+    /// Chunk count of the executed geometry (= `plan.chunks()` unless the
+    /// ramp added leading sub-chunks).
+    fn chunk_total(&self, plan: &TransferPlan) -> usize {
+        let stripe = &self.rt.cost.params.stripe;
+        if plan.chunks() <= 1 || !stripe.ramp_enabled() {
+            plan.chunks()
+        } else {
+            chunk_layout_len(
+                plan.bytes,
+                plan.chunk_bytes,
+                stripe.first_fill_bytes(plan.chunk_bytes),
+                stripe.ramp_chunks,
+            )
+        }
+    }
+
     /// Queue-aware modeled duration of this plan's engine execution: the
     /// striped chunk pipeline for chunked plans, the legacy single
     /// transfer otherwise (the CL policy is per chunk either way).
     fn engine_exec_ns(&self, plan: &TransferPlan) -> f64 {
+        self.engine_exec_chunks_ns(plan, plan.chunks())
+    }
+
+    /// Engine execution charge at an explicit chunk count (the ramped
+    /// geometry can add chunks beyond the planner's uniform slicing).
+    fn engine_exec_chunks_ns(&self, plan: &TransferPlan, chunks: usize) -> f64 {
         self.rt.cost.copy_engine_striped_ns(
             self.my_gpu(),
             plan.loc,
             plan.bytes,
             self.rt.xfer.cl_immediate_for(plan.chunk_bytes.min(plan.bytes)),
             plan.stripe_width,
-            plan.chunks(),
+            chunks,
         )
     }
 
@@ -188,28 +313,54 @@ impl PeCtx {
         self.rt.cost.internode_ns(bytes, registered, true)
     }
 
-    /// Modeled duration of the whole striped chunk pipeline: staging of
-    /// chunk *k+1* overlaps engine execution of chunk *k* (slab
-    /// double-buffering), so the steady state runs at the slower of the
-    /// two chains. The pipeline fill — the first chunk's staging — hides
-    /// under the ring round trip except for its last `chunk_min` bytes:
-    /// at the HBM staging rate a slab-capped chunk stages in less than
-    /// the ~5 µs RTT, so one minimum-chunk staging bounds the serial
-    /// fill. (This also keeps the modeled charge continuous across the
-    /// un-chunked→chunked boundary, where the staged path charges one
-    /// full serial staging copy.)
-    fn striped_pipeline_ns(&self, plan: &TransferPlan) -> f64 {
-        let exec = self.engine_exec_ns(plan);
-        let staging = self.rt.cost.staging_copy_ns(plan.bytes);
-        let fill_bytes = self
-            .rt
+    /// Record a modeled service time for the wall-vs-model comparison
+    /// tables (`rishmem figure service-delta`): the executor-side half of
+    /// the per-(path, size-bucket) ledger the proxy fills with wall clocks.
+    fn note_model_service(&self, path: PathIdx, bytes: usize, ns: f64) {
+        self.rt.metrics.add_service_model(path, bytes as u64, ns as u64);
+    }
+
+    /// Queue-aware modeled duration of a chunked plan's rail execution:
+    /// the rail-striped RDMA at an explicit chunk count (unregistered
+    /// targets bounce un-striped).
+    fn nic_exec_striped_ns(&self, pe: usize, plan: &TransferPlan, chunks: usize) -> f64 {
+        let registered = self.rt.transport.is_registered(pe);
+        self.rt
             .cost
-            .params
-            .ce
-            .chunk_min_bytes
-            .min(plan.chunk_bytes)
-            .min(plan.bytes);
-        exec.max(staging) + self.rt.cost.staging_copy_ns(fill_bytes)
+            .internode_striped_ns(plan.bytes, registered, true, plan.stripe_width, chunks)
+    }
+
+    /// Modeled duration of the whole striped chunk pipeline (engine *or*
+    /// rail lanes): staging of chunk *k+1* overlaps engine/rail execution
+    /// of chunk *k* (slab double-buffering), so the steady state runs at
+    /// the slower of the two chains. The pipeline fill — the first
+    /// chunk's staging — hides under the ring round trip except for its
+    /// last `chunk_min` bytes (the route's own minimum): at the HBM
+    /// staging rate a slab-capped chunk stages in less than the ~5 µs
+    /// RTT, so one minimum-chunk staging bounds the serial fill. (This
+    /// also keeps the modeled charge continuous across the
+    /// un-chunked→chunked boundary, where the staged path charges one
+    /// full serial staging copy.) Ramped first chunks
+    /// (`stripe.ramp_factor` < 1) shrink the serial fill term — the first
+    /// lane starts earlier — at the price of the extra chunk startups
+    /// already inside `exec`.
+    fn chunk_pipeline_ns(&self, pe: usize, plan: &TransferPlan) -> f64 {
+        let chunks = self.chunk_total(plan);
+        let (exec, chunk_min) = match plan.route {
+            Route::CopyEngine => (
+                self.engine_exec_chunks_ns(plan, chunks),
+                self.rt.cost.params.ce.chunk_min_bytes,
+            ),
+            Route::Nic => (
+                self.nic_exec_striped_ns(pe, plan, chunks),
+                self.rt.cost.params.nic.rail_chunk_min_bytes,
+            ),
+            Route::LoadStore => unreachable!("load/store transfers never stripe"),
+        };
+        let staging = self.rt.cost.staging_copy_ns(plan.bytes);
+        let fill_bytes = chunk_min.min(plan.chunk_bytes).min(plan.bytes);
+        let fill = self.rt.cost.params.stripe.first_fill_bytes(fill_bytes);
+        exec.max(staging) + self.rt.cost.staging_copy_ns(fill)
     }
 
     // ------------------------------------------------- blocking executors --
@@ -222,12 +373,15 @@ impl PeCtx {
                 let ns = self.engine_exec_ns(plan);
                 self.clock.advance(ns);
                 self.rt.xfer.record(plan, ns);
+                self.note_model_service(PathIdx::CopyEngine, plan.bytes, ns);
                 self.rt
                     .metrics
                     .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
             }
             Route::Nic => {
-                self.clock.advance(self.nic_exec_ns(pe, plan.bytes));
+                let ns = self.nic_exec_ns(pe, plan.bytes);
+                self.clock.advance(ns);
+                self.note_model_service(PathIdx::Nic, plan.bytes, ns);
                 self.rt
                     .metrics
                     .add_path_bytes(PathIdx::Nic, Locality::Remote, plan.bytes as u64);
@@ -301,7 +455,7 @@ impl PeCtx {
                     .metrics
                     .add_path_bytes(PathIdx::LoadStore, plan.loc, plan.bytes as u64);
             }
-            Route::CopyEngine if plan.chunks() > 1 => {
+            Route::CopyEngine | Route::Nic if plan.chunks() > 1 => {
                 self.exec_put_chunked(plan, pe, dst_off, src)
             }
             Route::CopyEngine | Route::Nic => match self.stream_stage_payload(src) {
@@ -322,34 +476,39 @@ impl PeCtx {
         }
     }
 
-    /// Blocking striped put: slice the payload into slab-staged chunks,
-    /// each descriptor carrying its chunk id and least-loaded-engine hint.
-    /// Slab pressure flushes earlier chunks fire-and-forget while later
-    /// ones stage (double-buffering), the final blocking flush retires the
-    /// whole pipeline, and one striped charge covers the transfer.
+    /// Blocking striped put (engine *or* rail route): slice the payload
+    /// into slab-staged chunks, each descriptor carrying its chunk id and
+    /// least-loaded lane hint (engine slot intra-node, NIC rail slot
+    /// inter-node). Slab pressure flushes earlier chunks fire-and-forget
+    /// while later ones stage (double-buffering), the final blocking flush
+    /// retires the whole pipeline, and one striped charge covers the
+    /// transfer.
     fn exec_put_chunked(&self, plan: &TransferPlan, pe: usize, dst_off: usize, src: &[u8]) {
-        let gpu = self.my_gpu();
-        let engines = self.rt.cost.engine_pick(gpu, plan.stripe_width);
-        let total = plan.chunks();
+        let (lanes, slots) = self.lanes_for(plan);
+        let layout = self.plan_layout(plan);
+        let total = layout.len();
         let mut reserved: Vec<(usize, u64)> = Vec::with_capacity(total);
         let mut staged = 0usize; // bytes staged; chunks staged == reserved.len()
-        for (idx, off, len, eng) in chunk_iter(src.len(), plan.chunk_bytes, &engines) {
+        for (idx, off, len) in layout {
             let Some(slab_off) = self.stream_stage_payload_uncharged(&src[off..off + len])
             else {
                 break; // degenerate slab: ship the tail on the raw path below
             };
+            let lane = slots[idx % slots.len()];
             let desc = BatchDescriptor::put(pe, dst_off + off, slab_off, len)
                 .with_standard_cl(self.standard_cl_for(len))
-                .with_chunk(idx as u32, total as u32, eng as u8);
+                .with_chunk(idx as u32, total as u32, lane as u8)
+                .with_transfer_bytes(plan.bytes as u64);
             self.stream_append(desc, 1);
-            self.rt.cost.engine_reserve_on(gpu, eng, len as u64);
-            reserved.push((eng, len as u64));
+            self.lane_reserve(lanes, lane, len as u64);
+            reserved.push((lane, len as u64));
             staged += len;
         }
         if staged < src.len() {
             // A single chunk cannot fit an empty slab (tiny-slab config):
             // the raw-pointer message delivers the tail, flushing any
-            // staged chunks ahead of it (per-PE FIFO).
+            // staged chunks ahead of it (per-PE FIFO; the proxy routes it
+            // over the engines or the NIC by target locality).
             let m = rma_message(
                 RingOp::Put,
                 pe,
@@ -362,27 +521,41 @@ impl PeCtx {
         } else {
             self.stream_flush_blocking();
         }
-        self.charge_chunked(plan, reserved.len());
-        for (eng, bytes) in reserved {
-            self.rt.cost.engine_release_on(gpu, eng, bytes);
+        self.charge_chunked(plan, pe, reserved.len());
+        for (lane, bytes) in reserved {
+            self.lane_release(lanes, lane, bytes);
         }
     }
 
-    /// Charge + count a completed chunked engine transfer: the striped
-    /// pipeline when chunks actually flowed through the slab, the
-    /// single-engine raw model when the whole payload degraded to the
-    /// raw-pointer path — and only real stripes hit the stripe metrics.
-    fn charge_chunked(&self, plan: &TransferPlan, chunks_staged: usize) {
-        let ns = if chunks_staged == 0 {
-            self.engine_exec_raw_ns(plan)
-        } else {
-            self.striped_pipeline_ns(plan)
+    /// Charge + count a completed chunked transfer: the striped pipeline
+    /// (engine or rail flavour) when chunks actually flowed through the
+    /// slab, the un-striped single-transfer model when the whole payload
+    /// degraded to the raw-pointer path — and only real stripes hit the
+    /// stripe metrics.
+    fn charge_chunked(&self, plan: &TransferPlan, pe: usize, chunks_staged: usize) {
+        let (ns, path, loc) = match plan.route {
+            Route::CopyEngine => {
+                let ns = if chunks_staged == 0 {
+                    self.engine_exec_raw_ns(plan)
+                } else {
+                    self.chunk_pipeline_ns(pe, plan)
+                };
+                (ns, PathIdx::CopyEngine, plan.loc)
+            }
+            Route::Nic => {
+                let ns = if chunks_staged == 0 {
+                    self.nic_exec_ns(pe, plan.bytes)
+                } else {
+                    self.chunk_pipeline_ns(pe, plan)
+                };
+                (ns, PathIdx::Nic, Locality::Remote)
+            }
+            Route::LoadStore => unreachable!("load/store transfers never chunk"),
         };
         self.clock.advance(ns);
         self.rt.xfer.record(plan, ns);
-        self.rt
-            .metrics
-            .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
+        self.note_model_service(path, plan.bytes, ns);
+        self.rt.metrics.add_path_bytes(path, loc, plan.bytes as u64);
         if chunks_staged > 0 {
             self.rt.metrics.add_stripe(chunks_staged);
         }
@@ -405,7 +578,7 @@ impl PeCtx {
                     .metrics
                     .add_path_bytes(PathIdx::LoadStore, plan.loc, plan.bytes as u64);
             }
-            Route::CopyEngine if plan.chunks() > 1 => {
+            Route::CopyEngine | Route::Nic if plan.chunks() > 1 => {
                 self.exec_get_chunked(plan, pe, src_off, dst)
             }
             Route::CopyEngine | Route::Nic => match self.stream_slab_alloc(plan.bytes) {
@@ -433,26 +606,26 @@ impl PeCtx {
         }
     }
 
-    /// Blocking striped get: windows of chunk-sized slab claims. Each
-    /// window appends get descriptors (results land in the claimed slab
-    /// regions), flushes blocking, then copies the results out *before*
-    /// the next window can rewind the arena over them. Chunks carry ids
-    /// and engine hints exactly like striped puts.
+    /// Blocking striped get (engine *or* rail route): windows of
+    /// chunk-sized slab claims. Each window appends get descriptors
+    /// (results land in the claimed slab regions), flushes blocking, then
+    /// copies the results out *before* the next window can rewind the
+    /// arena over them. Chunks carry ids and lane hints exactly like
+    /// striped puts.
     fn exec_get_chunked(&self, plan: &TransferPlan, pe: usize, src_off: usize, dst: &mut [u8]) {
         // Clean slate: a pending plan-group or in-flight batches would
         // pin slab space the windows need (and must not be force-flushed
         // mid-window).
         self.stream_quiet_drain();
-        let gpu = self.my_gpu();
-        let engines = self.rt.cost.engine_pick(gpu, plan.stripe_width);
-        let chunk = plan.chunk_bytes.max(1);
-        let total = plan.chunks();
-        let mut off = 0usize;
-        let mut idx = 0usize;
-        'windows: while off < dst.len() {
+        let (lanes, slots) = self.lanes_for(plan);
+        let layout = self.plan_layout(plan);
+        let total = layout.len();
+        let mut done = 0usize; // bytes fully windowed
+        let mut idx = 0usize; // chunks windowed
+        'windows: while idx < total {
             let mut window: Vec<(usize, usize, usize)> = Vec::new(); // (slab, dst, len)
             let mut reserved: Vec<(usize, u64)> = Vec::new();
-            while off < dst.len() {
+            while idx < total {
                 // The window invariant — get descriptors stay *pending*
                 // until this window's copy-out — would be violated by
                 // stream_append's capacity fire-and-forget flush (a
@@ -464,25 +637,33 @@ impl PeCtx {
                 if self.stream.pending_len() + 1 >= self.stream.max_depth() {
                     break;
                 }
-                let len = chunk.min(dst.len() - off);
+                let (i, off, len) = layout[idx];
                 let Some(slab_off) = self.stream_slab_try_alloc(len) else { break };
-                let eng = engines[idx % engines.len()];
+                let lane = slots[i % slots.len()];
                 let desc = BatchDescriptor::get(pe, slab_off, src_off + off, len)
                     .with_standard_cl(self.standard_cl_for(len))
-                    .with_chunk(idx as u32, total as u32, eng as u8);
+                    .with_chunk(i as u32, total as u32, lane as u8)
+                    .with_transfer_bytes(plan.bytes as u64);
                 self.stream_append(desc, 1);
-                self.rt.cost.engine_reserve_on(gpu, eng, len as u64);
-                reserved.push((eng, len as u64));
+                self.lane_reserve(lanes, lane, len as u64);
+                reserved.push((lane, len as u64));
                 window.push((slab_off, off, len));
-                off += len;
+                done = off + len;
                 idx += 1;
+                // The size-adaptive flush can push a large get descriptor
+                // out fire-and-forget the moment it is appended; end the
+                // window before any further slab claim could drain that
+                // batch and release this window's results pre-copy-out.
+                if self.stream.pending_len() < window.len() {
+                    break;
+                }
             }
             if window.is_empty() {
                 break 'windows; // tiny-slab config: raw tail below
             }
             self.stream_flush_blocking();
             // Copy-outs are not charged per chunk: window k's copy-out
-            // overlaps window k+1's engine execution; the aggregate
+            // overlaps window k+1's engine/rail execution; the aggregate
             // pipeline charge below covers the steady state + drain.
             for &(slab_off, doff, len) in &window {
                 self.rt
@@ -490,18 +671,18 @@ impl PeCtx {
                     .heap(self.pe())
                     .read(slab_off, &mut dst[doff..doff + len]);
             }
-            for (eng, bytes) in reserved {
-                self.rt.cost.engine_release_on(gpu, eng, bytes);
+            for (lane, bytes) in reserved {
+                self.lane_release(lanes, lane, bytes);
             }
         }
-        if off < dst.len() {
-            let rest = dst.len() - off;
-            let tail_ptr = dst[off..].as_mut_ptr() as u64;
-            let m = rma_message(RingOp::Get, pe, tail_ptr, (src_off + off) as u64, rest);
+        if done < dst.len() {
+            let rest = dst.len() - done;
+            let tail_ptr = dst[done..].as_mut_ptr() as u64;
+            let m = rma_message(RingOp::Get, pe, tail_ptr, (src_off + done) as u64, rest);
             let status = self.proxied_blocking(m);
             self.check_proxy_status(status, "get", pe);
         }
-        self.charge_chunked(plan, idx);
+        self.charge_chunked(plan, pe, idx);
     }
 
     // ---------------------------------------------------- NBI executors --
@@ -523,7 +704,7 @@ impl PeCtx {
                 let done_at = self.clock.now_ns() + (plan.modeled_ns - issue).max(0.0);
                 self.track.defer(done_at);
             }
-            Route::CopyEngine if plan.chunks() > 1 => {
+            Route::CopyEngine | Route::Nic if plan.chunks() > 1 => {
                 self.exec_put_nbi_chunked(plan, pe, dst_off, src)
             }
             Route::CopyEngine | Route::Nic => match self.stream_stage_payload(src) {
@@ -543,6 +724,7 @@ impl PeCtx {
                             desc = desc.with_chunk(0, 1, eng as u8);
                             let ns = self.engine_exec_ns(plan);
                             self.rt.xfer.record(plan, ns);
+                            self.note_model_service(PathIdx::CopyEngine, plan.bytes, ns);
                             self.rt.metrics.add_path_bytes(
                                 PathIdx::CopyEngine,
                                 plan.loc,
@@ -556,7 +738,9 @@ impl PeCtx {
                                 Locality::Remote,
                                 plan.bytes as u64,
                             );
-                            self.nic_exec_ns(pe, plan.bytes)
+                            let ns = self.nic_exec_ns(pe, plan.bytes);
+                            self.note_model_service(PathIdx::Nic, plan.bytes, ns);
+                            ns
                         }
                         Route::LoadStore => unreachable!(),
                     };
@@ -568,47 +752,70 @@ impl PeCtx {
         }
     }
 
-    /// Non-blocking striped put: chunks stage and append exactly like the
-    /// blocking pipeline, but the per-engine reservations live in the
-    /// completion tracker until `quiet` releases them, and every chunk
-    /// aggregates into the one deferred completion (chunk ledger + a
-    /// single horizon entry).
+    /// Non-blocking striped put (engine *or* rail route): chunks stage and
+    /// append exactly like the blocking pipeline, but the per-lane
+    /// reservations live in the completion tracker until `quiet` releases
+    /// them, and every chunk aggregates into the one deferred completion
+    /// (chunk ledger + a single horizon entry).
     fn exec_put_nbi_chunked(&self, plan: &TransferPlan, pe: usize, dst_off: usize, src: &[u8]) {
-        let gpu = self.my_gpu();
-        let engines = self.rt.cost.engine_pick(gpu, plan.stripe_width);
-        let total = plan.chunks();
+        let (lanes, slots) = self.lanes_for(plan);
+        let layout = self.plan_layout(plan);
+        let total = layout.len();
         let mut staged_chunks = 0usize;
         let mut staged = 0usize;
-        for (idx, off, len, eng) in chunk_iter(src.len(), plan.chunk_bytes, &engines) {
+        for (idx, off, len) in layout {
             let Some(slab_off) = self.stream_stage_payload_uncharged(&src[off..off + len])
             else {
                 break; // tiny-slab tail handled below
             };
+            let lane = slots[idx % slots.len()];
             let desc = BatchDescriptor::put(pe, dst_off + off, slab_off, len)
                 .with_standard_cl(self.standard_cl_for(len))
-                .with_chunk(idx as u32, total as u32, eng as u8);
+                .with_chunk(idx as u32, total as u32, lane as u8)
+                .with_transfer_bytes(plan.bytes as u64);
             self.stream_append(desc, 1);
-            self.rt.cost.engine_reserve_on(gpu, eng, len as u64);
-            self.track.note_engine_bytes(eng, len as u64);
+            self.lane_reserve(lanes, lane, len as u64);
+            self.lane_note_nbi(lanes, lane, len as u64);
             staged_chunks += 1;
             staged += len;
         }
         if staged < src.len() {
             // Tiny-slab tail: eager movement (the pre-chunking oversized
             // behavior), still one aggregated completion.
-            self.rt.heaps.heap(pe).write(dst_off + staged, &src[staged..]);
+            match plan.route {
+                Route::Nic => {
+                    let dummy = SimClock::new();
+                    self.rt
+                        .transport
+                        .put_from_ptr(
+                            src[staged..].as_ptr() as u64,
+                            pe,
+                            dst_off + staged,
+                            src.len() - staged,
+                            &dummy,
+                        )
+                        .expect("put_nbi transport tail");
+                }
+                _ => self.rt.heaps.heap(pe).write(dst_off + staged, &src[staged..]),
+            }
         }
+        let (path, loc) = match plan.route {
+            Route::Nic => (PathIdx::Nic, Locality::Remote),
+            _ => (PathIdx::CopyEngine, plan.loc),
+        };
         let ns = if staged_chunks == 0 {
-            self.engine_exec_raw_ns(plan)
+            match plan.route {
+                Route::Nic => self.nic_exec_ns(pe, plan.bytes),
+                _ => self.engine_exec_raw_ns(plan),
+            }
         } else {
             self.track.note_chunks(staged_chunks as u64);
             self.rt.metrics.add_stripe(staged_chunks);
-            self.striped_pipeline_ns(plan)
+            self.chunk_pipeline_ns(pe, plan)
         };
         self.rt.xfer.record(plan, ns);
-        self.rt
-            .metrics
-            .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
+        self.note_model_service(path, plan.bytes, ns);
+        self.rt.metrics.add_path_bytes(path, loc, plan.bytes as u64);
         self.track.defer(self.clock.now_ns() + ns);
     }
 
@@ -625,6 +832,7 @@ impl PeCtx {
                     .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
                 let ns = self.engine_exec_ns(plan);
                 self.rt.xfer.record(plan, ns);
+                self.note_model_service(PathIdx::CopyEngine, plan.bytes, ns);
                 ns
             }
             Route::Nic => {
@@ -636,7 +844,9 @@ impl PeCtx {
                 self.rt
                     .metrics
                     .add_path_bytes(PathIdx::Nic, Locality::Remote, plan.bytes as u64);
-                self.nic_exec_ns(pe, plan.bytes)
+                let ns = self.nic_exec_ns(pe, plan.bytes);
+                self.note_model_service(PathIdx::Nic, plan.bytes, ns);
+                ns
             }
             Route::LoadStore => unreachable!("handled by exec_put_nbi"),
         };
@@ -673,6 +883,7 @@ impl PeCtx {
                     .add_path_bytes(PathIdx::CopyEngine, plan.loc, plan.bytes as u64);
                 let ns = self.engine_exec_ns(plan);
                 self.rt.xfer.record(plan, ns);
+                self.note_model_service(PathIdx::CopyEngine, plan.bytes, ns);
                 ns
             }
             Route::Nic => {
@@ -684,7 +895,15 @@ impl PeCtx {
                 self.rt
                     .metrics
                     .add_path_bytes(PathIdx::Nic, Locality::Remote, plan.bytes as u64);
-                self.nic_exec_ns(pe, plan.bytes)
+                // Movement is eager (borrow safety) but the modeled
+                // completion honours the planned rail stripe.
+                let ns = if plan.chunks() > 1 {
+                    self.nic_exec_striped_ns(pe, plan, self.chunk_total(plan))
+                } else {
+                    self.nic_exec_ns(pe, plan.bytes)
+                };
+                self.note_model_service(PathIdx::Nic, plan.bytes, ns);
+                ns
             }
         };
         self.clock.advance(issue);

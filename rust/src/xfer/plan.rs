@@ -90,10 +90,15 @@ impl TransferPlan {
         }
     }
     /// Bucket key for the adaptive table (fan-outs learn in their own
-    /// cells — their observations cover a whole one-to-many push).
+    /// cells — their observations cover a whole one-to-many push; remote
+    /// point-to-point cells carry the rail-width dimension so multi-rail
+    /// observations never alias single-rail ones).
     pub fn bucket(&self) -> BucketKey {
         match self.kind {
             OpKind::Fanout => BucketKey::fanout(self.loc, self.bytes, self.items, self.peers),
+            _ if self.loc == Locality::Remote => {
+                BucketKey::remote(self.bytes, self.items, self.stripe_width)
+            }
             _ => BucketKey::p2p(self.loc, self.bytes, self.items),
         }
     }
@@ -260,9 +265,28 @@ impl XferEngine {
             + self.cost.engine_drain_ns(loc, backlog)
     }
 
-    /// Model the inter-node path (registered-heap RDMA estimate).
+    /// The (chunk size, rail width) this engine's executor would use for
+    /// an inter-node transfer of `bytes` — the cost model's rail stripe
+    /// planner under this machine's staging-slab chunk cap (remote chunks
+    /// stage through the same slab the engine pipeline double-buffers).
+    pub fn rail_stripe_for(&self, bytes: usize) -> (usize, usize) {
+        self.cost.rail_stripe_for(bytes, self.chunk_max_bytes)
+    }
+
+    /// Estimate of the inter-node path for an already-chosen rail stripe
+    /// shape: ring round trip + host proxy + the rail-striped RDMA
+    /// (registered-heap assumption, like every planning estimate).
+    fn est_nic_striped_ns(&self, bytes: usize, chunk: usize, width: usize) -> f64 {
+        let n = bytes.max(1).div_ceil(chunk.max(1));
+        self.cost.internode_striped_ns(bytes, true, true, width, n)
+    }
+
+    /// Model the inter-node path (registered-heap RDMA estimate) at the
+    /// rail stripe shape the executor would use. A 1-rail configuration
+    /// reproduces the pre-striping single-RDMA estimate exactly.
     pub fn est_nic_ns(&self, bytes: usize) -> f64 {
-        self.cost.internode_ns(bytes, true, true)
+        let (chunk, width) = self.rail_stripe_for(bytes);
+        self.est_nic_striped_ns(bytes, chunk, width)
     }
 
     /// Plan a point-to-point transfer of `bytes` to a `loc`-distant PE by
@@ -294,6 +318,17 @@ impl XferEngine {
         items: usize,
     ) -> TransferPlan {
         if !reachable {
+            // Rail-striped remote shape: one width scan serves the
+            // estimate and the bound stripe geometry, and the source
+            // node's live rail backlog folds into the modeled cost (the
+            // remote twin of the engine-queue occupancy fold — there is
+            // no alternative route, but adaptive feedback and reports see
+            // the load).
+            let (chunk, width) = self.rail_stripe_for(bytes);
+            let rail_backlog = src_gpu.map_or(0, |g| {
+                self.cost
+                    .rail_backlog_bytes(g / self.cost.topo.gpus_per_node.max(1))
+            });
             let plan = TransferPlan {
                 kind,
                 loc: Locality::Remote,
@@ -301,10 +336,11 @@ impl XferEngine {
                 items,
                 peers: 1,
                 route: Route::Nic,
-                modeled_ns: self.est_nic_ns(bytes),
+                modeled_ns: self.est_nic_striped_ns(bytes, chunk, width)
+                    + self.cost.rail_drain_ns(rail_backlog),
                 alt_ns: None,
-                chunk_bytes: bytes,
-                stripe_width: 1,
+                chunk_bytes: chunk,
+                stripe_width: width,
             };
             self.count_plan(plan.route);
             return plan;
@@ -369,7 +405,12 @@ impl XferEngine {
             );
         }
         if shape.nic_bytes > 0 {
-            t = t.max(self.cost.internode_ns(shape.nic_bytes, true, false));
+            // Remote spill-over of an engine-branch fan-out chunks across
+            // the NIC rails (same stripe planner as p2p remote puts; a
+            // 1-rail config degenerates to the single-RDMA estimate).
+            let (chunk, width) = self.cost.rail_stripe_for(shape.nic_bytes, usize::MAX);
+            let n = shape.nic_bytes.div_ceil(chunk.max(1));
+            t = t.max(self.cost.internode_striped_ns(shape.nic_bytes, true, false, width, n));
         }
         self.cost.ring_rtt_ns() + t
     }
@@ -407,6 +448,107 @@ impl XferEngine {
     /// The learned table (reports / benches / tests).
     pub fn adaptive_snapshot(&self) -> Vec<AdaptiveCell> {
         self.adaptive.snapshot()
+    }
+
+    // ------------------------------------------------ table persistence --
+
+    /// Serialize the learned table as one JSON object (the
+    /// `cutover.table_path` persistence format; reuses the hand-rolled
+    /// Json writer behind `MetricsSnapshot::to_json`).
+    pub fn adaptive_save_json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let cells: Vec<Json> = self
+            .adaptive_snapshot()
+            .iter()
+            .map(|c| {
+                let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                let mut put = |k: &str, v: Json| o.insert(k.to_string(), v);
+                put("loc", Json::Num(c.key.loc as u8 as f64));
+                put("size_pow2", Json::Num(c.key.size_pow2 as f64));
+                put("items_pow2", Json::Num(c.key.items_pow2 as f64));
+                put("fanout", Json::Bool(c.key.fanout));
+                put("peers_pow2", Json::Num(c.key.peers_pow2 as f64));
+                put("rails_pow2", Json::Num(c.key.rails_pow2 as f64));
+                put("ema_loadstore_ns", Json::Num(c.ema_loadstore_ns));
+                put("ema_copy_engine_ns", Json::Num(c.ema_copy_engine_ns));
+                put("samples_loadstore", Json::Num(c.samples_loadstore as f64));
+                put("samples_copy_engine", Json::Num(c.samples_copy_engine as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top: BTreeMap<String, Json> = BTreeMap::new();
+        top.insert("ema_alpha".to_string(), Json::Num(self.cutover.ema_alpha));
+        top.insert("cells".to_string(), Json::Arr(cells));
+        Json::Obj(top).to_string()
+    }
+
+    /// Install learned cells from [`Self::adaptive_save_json`]'s format.
+    /// Returns how many cells were loaded. A table saved under a
+    /// different `ema_alpha` still installs (the EMAs are valid state,
+    /// just smoothed under another time constant) — but the mismatch is
+    /// surfaced, not swallowed.
+    pub fn adaptive_load_json(&self, text: &str) -> anyhow::Result<usize> {
+        use crate::util::json::Json;
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("adaptive table: {e}"))?;
+        if let Some(saved_alpha) = j.get("ema_alpha").and_then(|v| v.as_f64()) {
+            if (saved_alpha - self.cutover.ema_alpha).abs() > 1e-12 {
+                eprintln!(
+                    "warning: adaptive table was learned under ema_alpha {saved_alpha}, \
+                     this machine refines with {}",
+                    self.cutover.ema_alpha
+                );
+            }
+        }
+        let cells = j
+            .get("cells")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("adaptive table: missing cells array"))?;
+        let mut loaded = Vec::with_capacity(cells.len());
+        for c in cells {
+            let num = |k: &str| {
+                c.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("adaptive table: missing field {k}"))
+            };
+            let loc = match num("loc")? as u8 {
+                0 => Locality::SameTile,
+                1 => Locality::SameGpu,
+                2 => Locality::SameNode,
+                3 => Locality::Remote,
+                other => anyhow::bail!("adaptive table: bad locality tag {other}"),
+            };
+            let fanout = matches!(c.get("fanout"), Some(Json::Bool(true)));
+            loaded.push(AdaptiveCell {
+                key: BucketKey {
+                    loc,
+                    size_pow2: num("size_pow2")? as u8,
+                    items_pow2: num("items_pow2")? as u8,
+                    fanout,
+                    peers_pow2: num("peers_pow2")? as u8,
+                    rails_pow2: num("rails_pow2")? as u8,
+                },
+                ema_loadstore_ns: num("ema_loadstore_ns")?,
+                ema_copy_engine_ns: num("ema_copy_engine_ns")?,
+                samples_loadstore: num("samples_loadstore")? as u64,
+                samples_copy_engine: num("samples_copy_engine")? as u64,
+            });
+        }
+        self.adaptive.load_cells(&loaded);
+        Ok(loaded.len())
+    }
+
+    /// Save the learned table to `path` (`cutover.table_path`).
+    pub fn adaptive_save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.adaptive_save_json())
+            .map_err(|e| anyhow::anyhow!("saving adaptive table to {path}: {e}"))
+    }
+
+    /// Load a previously-saved table from `path`; returns the cell count.
+    pub fn adaptive_load(&self, path: &str) -> anyhow::Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("loading adaptive table from {path}: {e}"))?;
+        self.adaptive_load_json(&text)
     }
 
     /// Learned point-to-point crossover size for (loc, items): smallest
@@ -677,6 +819,51 @@ mod tests {
         let p = e.plan_p2p(OpKind::Put, true, Locality::SameNode, 8 << 20, 1);
         assert_eq!(p.stripe_width, 1);
         assert_eq!(p.chunks(), 1);
+    }
+
+    #[test]
+    fn remote_plans_stripe_across_rails() {
+        let e = engine(CutoverConfig::tuned());
+        let p = e.plan_p2p(OpKind::Put, false, Locality::Remote, 8 << 20, 1);
+        assert_eq!(p.route, Route::Nic);
+        assert!(p.stripe_width >= 2, "no rail striping: {p:?}");
+        assert!(p.chunk_bytes <= e.chunk_max_bytes, "{p:?}");
+        assert!(p.chunks() >= p.stripe_width, "{p:?}");
+        assert!(p.bucket().rails_pow2 >= 1, "{:?}", p.bucket());
+        // Small remote transfers ship as one RDMA, in the width-1 bucket.
+        let s = e.plan_p2p(OpKind::Put, false, Locality::Remote, 4096, 1);
+        assert_eq!((s.chunk_bytes, s.stripe_width, s.chunks()), (4096, 1, 1));
+        assert_eq!(s.bucket().rails_pow2, 0);
+        assert_eq!(s.modeled_ns, e.cost.internode_ns(4096, true, true));
+    }
+
+    #[test]
+    fn adaptive_table_json_roundtrips() {
+        let a = engine(CutoverConfig::adaptive());
+        for bytes in [4096usize, 1 << 20] {
+            for items in [1usize, 128] {
+                let p = a.plan_p2p(OpKind::Put, true, Locality::SameNode, bytes, items);
+                a.record(&p, p.modeled_ns * 1.1);
+            }
+        }
+        let sa = a.adaptive_snapshot();
+        assert!(sa.len() >= 4, "warmup learned too little: {sa:?}");
+        let b = engine(CutoverConfig::adaptive());
+        let n = b.adaptive_load_json(&a.adaptive_save_json()).unwrap();
+        assert_eq!(n, sa.len());
+        let sb = b.adaptive_snapshot();
+        assert_eq!(sa.len(), sb.len());
+        for (x, y) in sa.iter().zip(&sb) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.samples_loadstore, y.samples_loadstore);
+            assert_eq!(x.samples_copy_engine, y.samples_copy_engine);
+            let close = |p: f64, q: f64| (p - q).abs() <= 1e-9 * p.abs().max(1.0);
+            assert!(close(x.ema_loadstore_ns, y.ema_loadstore_ns), "{x:?} vs {y:?}");
+            assert!(close(x.ema_copy_engine_ns, y.ema_copy_engine_ns), "{x:?} vs {y:?}");
+        }
+        // Garbage rejects cleanly.
+        assert!(b.adaptive_load_json("{not json").is_err());
+        assert!(b.adaptive_load_json("{\"cells\": 5}").is_err());
     }
 
     #[test]

@@ -59,6 +59,12 @@ struct InflightBatch {
 #[derive(Debug)]
 pub struct CmdStream {
     max_depth: usize,
+    /// Size-adaptive batch depth: a descriptor whose payload is at or
+    /// above this size flushes its plan-group immediately after the
+    /// append, so a big chunk never waits behind a filling batch of tiny
+    /// entries (deep batches for small descriptors, shallow auto-flush
+    /// for large ones).
+    large_flush_bytes: usize,
     pending: RefCell<Vec<PendingEntry>>,
     inflight: RefCell<VecDeque<InflightBatch>>,
 }
@@ -68,13 +74,24 @@ impl CmdStream {
         assert!(max_depth >= 1, "batch depth must be at least 1");
         CmdStream {
             max_depth,
+            large_flush_bytes: usize::MAX,
             pending: RefCell::new(Vec::new()),
             inflight: RefCell::new(VecDeque::new()),
         }
     }
 
+    /// Set the size-adaptive flush boundary (`stream.large_flush_bytes`).
+    pub fn with_large_flush_bytes(mut self, bytes: usize) -> Self {
+        self.large_flush_bytes = bytes.max(1);
+        self
+    }
+
     pub fn max_depth(&self) -> usize {
         self.max_depth
+    }
+
+    pub fn large_flush_bytes(&self) -> usize {
+        self.large_flush_bytes
     }
 
     pub fn pending_len(&self) -> usize {
@@ -169,15 +186,18 @@ impl PeCtx {
     /// Append a descriptor to the stream (`slab_claims` = claims its
     /// payload holds; 0 for entries whose source already lives in the
     /// user heap). Charges the descriptor write; flushes fire-and-forget
-    /// when the plan-group reaches capacity.
+    /// when the plan-group reaches capacity *or* the entry's payload is
+    /// large (`stream.large_flush_bytes` — the size-adaptive depth: tiny
+    /// descriptors batch deep, a big chunk ships at once).
     pub(crate) fn stream_append(&self, desc: BatchDescriptor, slab_claims: usize) {
         self.clock.advance(self.rt.cost.staging_copy_ns(DESC_SIZE));
+        let large = desc.len as usize >= self.stream.large_flush_bytes();
         let depth = {
             let mut pending = self.stream.pending.borrow_mut();
             pending.push(PendingEntry { desc, slab_claims });
             pending.len()
         };
-        if depth >= self.stream.max_depth() {
+        if depth >= self.stream.max_depth() || large {
             self.stream_flush_ff();
         }
     }
@@ -301,16 +321,20 @@ impl PeCtx {
     }
 
     /// Retire every outstanding batch *and* return this PE's reserved
-    /// per-engine backlog to the shared `CostModel` (each engine slot
-    /// releases exactly what striped NBI transfers reserved on it). The
-    /// cleanup half of `quiet` (no modeled charges) — shared with launch
-    /// exit so per-PE state can never leak into the machine across
-    /// launches.
+    /// per-engine and per-rail backlog to the shared `CostModel` (each
+    /// engine/rail slot releases exactly what striped NBI transfers
+    /// reserved on it). The cleanup half of `quiet` (no modeled charges)
+    /// — shared with launch exit so per-PE state can never leak into the
+    /// machine across launches.
     pub(crate) fn drain_outstanding(&self) -> bool {
         let drained = self.stream_quiet_drain();
         let gpu = self.my_gpu();
         for (engine, bytes) in self.track.take_engine_bytes() {
             self.rt.cost.engine_release_on(gpu, engine, bytes);
+        }
+        let node = self.node();
+        for (rail, bytes) in self.track.take_rail_bytes() {
+            self.rt.cost.rail_release_on(node, rail, bytes);
         }
         self.track.take_chunks();
         drained
@@ -333,5 +357,16 @@ mod tests {
     #[should_panic(expected = "at least 1")]
     fn zero_depth_rejected() {
         CmdStream::new(0);
+    }
+
+    #[test]
+    fn large_flush_boundary_defaults_off_and_clamps() {
+        let s = CmdStream::new(8);
+        assert_eq!(s.large_flush_bytes(), usize::MAX);
+        let s = CmdStream::new(8).with_large_flush_bytes(256 << 10);
+        assert_eq!(s.large_flush_bytes(), 256 << 10);
+        // 0 would flush every append including empty AMOs; clamp to ≥1.
+        let s = CmdStream::new(8).with_large_flush_bytes(0);
+        assert_eq!(s.large_flush_bytes(), 1);
     }
 }

@@ -15,6 +15,9 @@
 //!   engines for still-outstanding NBI transfers (released engine-by-
 //!   engine at `quiet`) — what makes the planner occupancy-aware and
 //!   keeps striped placement balanced;
+//! * the **per-rail byte backlog** this PE reserved on its node's NIC
+//!   rails for still-outstanding remote NBI transfers (released rail-by-
+//!   rail at `quiet`) — the remote-path twin of the engine ledger;
 //! * an **outstanding-chunk ledger**: a striped NBI transfer issues many
 //!   chunks but completes as *one* unit — every chunk defers into the
 //!   same horizon, and the ledger counts how many chunks that single
@@ -37,6 +40,10 @@ pub struct CompletionTracker {
     /// Copy-engine bytes this PE has reserved, per engine slot of its
     /// GPU, for still-outstanding NBI transfers (released at `quiet`).
     engine_bytes: RefCell<BTreeMap<usize, u64>>,
+    /// NIC-rail bytes this PE has reserved, per rail slot of its node,
+    /// for still-outstanding remote NBI transfers (released at `quiet`) —
+    /// the remote-path twin of the per-engine ledger above.
+    rail_bytes: RefCell<BTreeMap<usize, u64>>,
     /// Chunks of striped NBI transfers whose single aggregated completion
     /// is still outstanding.
     outstanding_chunks: Cell<u64>,
@@ -88,6 +95,25 @@ impl CompletionTracker {
     /// owning GPU's queue), resetting the ledger.
     pub fn take_engine_bytes(&self) -> Vec<(usize, u64)> {
         std::mem::take(&mut *self.engine_bytes.borrow_mut())
+            .into_iter()
+            .collect()
+    }
+
+    /// Record `bytes` of NIC-rail backlog reserved on `rail` for a remote
+    /// NBI transfer.
+    pub fn note_rail_bytes(&self, rail: usize, bytes: u64) {
+        *self.rail_bytes.borrow_mut().entry(rail).or_insert(0) += bytes;
+    }
+
+    /// Total reserved rail backlog across rails (reports/tests).
+    pub fn rail_bytes_total(&self) -> u64 {
+        self.rail_bytes.borrow().values().sum()
+    }
+
+    /// Take the reserved backlog per rail (quiet releases each on the
+    /// owning node's rail set), resetting the ledger.
+    pub fn take_rail_bytes(&self) -> Vec<(usize, u64)> {
+        std::mem::take(&mut *self.rail_bytes.borrow_mut())
             .into_iter()
             .collect()
     }
@@ -145,6 +171,19 @@ mod tests {
         assert_eq!(drained, vec![(2, 4100), (5, 100)]);
         assert_eq!(t.engine_bytes_total(), 0);
         assert!(t.take_engine_bytes().is_empty());
+    }
+
+    #[test]
+    fn rail_bytes_accumulate_per_rail_and_drain() {
+        let t = CompletionTracker::new();
+        t.note_rail_bytes(1, 1 << 20);
+        t.note_rail_bytes(3, 100);
+        t.note_rail_bytes(1, 24);
+        assert_eq!(t.rail_bytes_total(), (1 << 20) + 124);
+        let drained = t.take_rail_bytes();
+        assert_eq!(drained, vec![(1, (1 << 20) + 24), (3, 100)]);
+        assert_eq!(t.rail_bytes_total(), 0);
+        assert!(t.take_rail_bytes().is_empty());
     }
 
     #[test]

@@ -176,6 +176,99 @@ fn stripe_and_engine_metrics_with_json_export() {
 }
 
 #[test]
+fn adaptive_table_persists_across_machines() {
+    // `cutover.table_path`: machine A learns and saves at shutdown;
+    // machine B starts warm with the identical table.
+    let path = std::env::temp_dir().join(format!(
+        "rishmem_adaptive_table_{}.json",
+        std::process::id()
+    ));
+    let path_s = path.to_str().unwrap().to_string();
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::adaptive().with_table_path(path_s.clone()),
+        ..IshmemConfig::with_npes(4)
+    };
+    let ish = Ishmem::new(cfg.clone()).unwrap();
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(1 << 20);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            for _ in 0..4 {
+                ctx.put(buf, &[7u8; 4096], 2);
+                ctx.put(buf, &vec![8u8; 1 << 20], 2);
+            }
+        }
+        ctx.barrier_all();
+    });
+    let learned = ish.xfer.adaptive_snapshot();
+    assert!(!learned.is_empty(), "nothing learned to persist");
+    ish.shutdown(); // writes the table
+    assert!(path.exists(), "shutdown did not save the table");
+
+    let warm = Ishmem::new(cfg).unwrap();
+    let loaded = warm.xfer.adaptive_snapshot();
+    warm.shutdown();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.len(), learned.len(), "loaded table diverged");
+    for (a, b) in learned.iter().zip(&loaded) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(
+            (a.samples_loadstore, a.samples_copy_engine),
+            (b.samples_loadstore, b.samples_copy_engine)
+        );
+    }
+}
+
+#[test]
+fn rail_and_service_delta_metrics_populated() {
+    // Cross-node striped traffic fills the per-rail dispatch tables and
+    // both halves of the wall-vs-model service-delta ledger; the JSON
+    // export mirrors them.
+    let mut cost = rishmem::sim::cost::CostParams::default();
+    cost.nic.rails = 4;
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        cost,
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(2 << 20);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            ctx.put(buf, &vec![5u8; 2 << 20], 4); // remote, rail-striped
+            ctx.put(buf, &vec![6u8; 512], 4); // remote, small
+        }
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+
+    assert!(snap.rail_ops.iter().sum::<u64>() >= 2, "{snap:?}");
+    assert!(
+        snap.rail_bytes.iter().sum::<u64>() >= (2 << 20) as u64,
+        "{:?}",
+        snap.rail_bytes
+    );
+    // Both halves of the NIC service-delta ledger saw the traffic.
+    let nic = rishmem::coordinator::metrics::PathIdx::Nic as usize;
+    assert!(snap.service_wall_ops[nic].iter().sum::<u64>() >= 2, "{snap:?}");
+    assert!(snap.service_model_ops[nic].iter().sum::<u64>() >= 2, "{snap:?}");
+    assert!(snap.service_model_ns[nic].iter().sum::<u64>() > 0, "{snap:?}");
+    let report = snap.service_delta_report();
+    assert!(report.contains("nic"), "{report}");
+
+    let j = Json::parse(&snap.to_json()).unwrap();
+    let rails = j.get("rail_bytes").unwrap().as_arr().unwrap();
+    assert_eq!(
+        rails.iter().map(|v| v.as_usize().unwrap() as u64).sum::<u64>(),
+        snap.rail_bytes.iter().sum::<u64>()
+    );
+    assert!(j.get("service_model_ns").unwrap().as_arr().is_some());
+}
+
+#[test]
 fn adaptive_mode_records_feedback() {
     let cfg = IshmemConfig {
         cutover: CutoverConfig::adaptive(),

@@ -399,6 +399,223 @@ fn fence_pushes_out_inflight_stripes() {
 }
 
 #[test]
+fn large_descriptors_auto_flush_their_batch() {
+    // Size-adaptive batch depth: with `large_flush_bytes` lowered, each
+    // big NBI put ships its plan-group immediately (one doorbell per
+    // large entry) while a burst of tiny puts still batches deep.
+    let cfg = IshmemConfig {
+        cutover: CutoverConfig::always(),
+        max_batch_depth: 16,
+        large_flush_bytes: 8 << 10,
+        ..IshmemConfig::with_npes(4)
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let ok = ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(3 * (16 << 10));
+        let big = ctx.calloc::<u8>(2 << 20);
+        ctx.barrier_all();
+        let mut good = true;
+        if ctx.pe() == 0 {
+            let data = vec![0x6Du8; 16 << 10];
+            for i in 0..3 {
+                // ≥ large_flush_bytes → flushed at append, no quiet yet.
+                ctx.put_nbi(buf.slice(i * (16 << 10), 16 << 10), &data, 2);
+            }
+            ctx.quiet();
+            // Chunked put + windowed get where every chunk auto-flushes:
+            // the get-window guard must close windows before a drained
+            // batch can release un-copied results.
+            let payload: Vec<u8> = (0..2 << 20).map(|i| (i % 241) as u8).collect();
+            ctx.put(big, &payload, 2);
+            let mut back = vec![0u8; 2 << 20];
+            ctx.get(&mut back, big, 2);
+            good = back == payload;
+        }
+        ctx.barrier_all();
+        if ctx.pe() == 2 {
+            good && ctx.read_local_vec(buf).iter().all(|&v| v == 0x6D)
+        } else {
+            good
+        }
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert!(ok.iter().all(|&b| b), "auto-flushed large puts corrupted data");
+    // Three large entries → three capacity-independent doorbells (depth
+    // 16 would have held all three in one group without the auto-flush).
+    assert!(snap.xfer_batches >= 3, "large entries did not auto-flush: {snap:?}");
+    assert!(snap.xfer_batch_depth_hist[0] >= 3, "batches not shallow: {snap:?}");
+}
+
+#[test]
+fn rail_striped_remote_put_spreads_across_rails() {
+    // A large cross-node put on a 4-rail machine must chunk through the
+    // slab and inject across ≥2 NIC rails, covering the payload exactly.
+    let mut cost = rishmem::sim::cost::CostParams::default();
+    cost.nic.rails = 4;
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        cost,
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let ok = ish.launch(|ctx| {
+        let len = 4 << 20;
+        let buf = ctx.calloc::<u8>(len);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            let payload: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+            ctx.put(buf, &payload, 4); // PE 4 = first PE of node 1
+        }
+        ctx.barrier_all();
+        if ctx.pe() == 4 {
+            ctx.read_local_vec(buf)
+                .iter()
+                .enumerate()
+                .all(|(i, &v)| v == (i % 251) as u8)
+        } else {
+            true
+        }
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert!(ok.iter().all(|&b| b), "rail-chunked remote put corrupted data");
+    assert!(snap.stripe_transfers >= 1, "{snap:?}");
+    let rails_used = snap.rail_bytes.iter().filter(|&&b| b > 0).count();
+    assert!(rails_used >= 2, "chunks all on one rail: {:?}", snap.rail_bytes);
+    assert!(
+        snap.rail_bytes.iter().sum::<u64>() >= (4 << 20) as u64,
+        "per-rail bytes must cover the payload: {:?}",
+        snap.rail_bytes
+    );
+}
+
+#[test]
+fn quiet_drains_rail_ledger_of_chunked_nbi_remote_put() {
+    // A rail-chunked NBI remote put reserves backlog across several NIC
+    // rails and aggregates its chunks into one deferred completion; quiet
+    // must deliver every chunk, return every reserved byte
+    // (`rail_backlog_bytes` → 0), and zero `outstanding_chunk_count`.
+    let mut cost = rishmem::sim::cost::CostParams::default();
+    cost.nic.rails = 4;
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        cost,
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let ish2 = ish.clone();
+    let ok = ish.launch(move |ctx| {
+        let buf = ctx.calloc::<u8>(4 << 20);
+        let flag = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            let data = vec![0xB7u8; 4 << 20];
+            ctx.put_nbi(buf, &data, 4);
+            // The chunked NBI put left live backlog on node 0's rails,
+            // and its chunks aggregate into one outstanding completion.
+            let loaded = ish2.cost.rail_backlog_bytes(0) >= (4 << 20) as u64
+                && ctx.outstanding_chunk_count() >= 4;
+            let before = ctx.clock.now_ns();
+            ctx.quiet();
+            let after = ctx.clock.now_ns();
+            let drained = ish2.cost.rail_backlog_bytes(0) == 0
+                && ctx.outstanding_chunk_count() == 0;
+            ctx.atomic_set(flag, 1u64, 4);
+            ctx.barrier_all();
+            loaded && drained && after > before
+        } else if ctx.pe() == 4 {
+            ctx.wait_until(flag, Cmp::Eq, 1u64);
+            let good = ctx.read_local_vec(buf).iter().all(|&v| v == 0xB7);
+            ctx.barrier_all();
+            good
+        } else {
+            ctx.barrier_all();
+            true
+        }
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert!(ok.iter().all(|&b| b), "quiet left rail chunks undelivered or backlog leaked");
+    assert!(snap.stripe_transfers >= 1 && snap.stripe_chunks >= 4, "{snap:?}");
+}
+
+#[test]
+fn fence_pushes_out_inflight_rail_stripes() {
+    // fence must deliver every rail chunk of a remote NBI put before
+    // later traffic (the flag atomic) can overtake it.
+    let mut cost = rishmem::sim::cost::CostParams::default();
+    cost.nic.rails = 4;
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        cost,
+        ..Default::default()
+    };
+    let ok = run_spmd(cfg, false, |ctx| {
+        let buf = ctx.calloc::<u8>(2 << 20);
+        let flag = ctx.calloc::<u64>(1);
+        if ctx.pe() == 0 {
+            ctx.put_nbi(buf, &vec![0x4Eu8; 2 << 20], 4);
+            ctx.fence();
+            ctx.atomic_set(flag, 1u64, 4);
+            ctx.barrier_all();
+            true
+        } else if ctx.pe() == 4 {
+            ctx.wait_until(flag, Cmp::Eq, 1u64);
+            let good = ctx.read_local_vec(buf).iter().all(|&v| v == 0x4E);
+            ctx.barrier_all();
+            good
+        } else {
+            ctx.barrier_all();
+            true
+        }
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b), "fence let the flag overtake in-flight rail stripes");
+}
+
+#[test]
+fn single_rail_config_matches_pre_striping_estimates() {
+    // The degraded 1-rail machine must plan every remote transfer as one
+    // un-chunked RDMA whose estimate equals the plain internode model —
+    // and a 4-rail machine must beat it at ≥1 MiB.
+    let mut cost = rishmem::sim::cost::CostParams::default();
+    cost.nic.rails = 1;
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        ..Default::default()
+    };
+    let one = Ishmem::new(IshmemConfig { cost, ..cfg.clone() }).unwrap();
+    let four = Ishmem::new(cfg).unwrap(); // default nic.rails = 4
+    for bytes in [64usize, 4096, 1 << 20, 8 << 20] {
+        assert_eq!(
+            one.xfer.est_nic_ns(bytes),
+            one.cost.internode_ns(bytes, true, true),
+            "single-rail estimate drifted at {bytes}B"
+        );
+        let plan = one.xfer.plan_p2p(
+            rishmem::xfer::OpKind::Put,
+            false,
+            rishmem::Locality::Remote,
+            bytes,
+            1,
+        );
+        assert_eq!((plan.chunk_bytes, plan.stripe_width, plan.chunks()), (bytes, 1, 1));
+        if bytes >= 1 << 20 {
+            assert!(
+                four.xfer.est_nic_ns(bytes) * 2.0 <= one.xfer.est_nic_ns(bytes),
+                "4 rails not ≥2x faster at {bytes}B"
+            );
+        }
+    }
+    one.shutdown();
+    four.shutdown();
+}
+
+#[test]
 fn fire_and_forget_amos_ride_the_batch_stream() {
     // Non-fetching remote AMOs batch through the command stream: one
     // doorbell carries the burst, quiet proves delivery, the values land.

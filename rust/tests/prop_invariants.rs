@@ -144,6 +144,94 @@ fn prop_chunked_transfers_reassemble_exactly() {
 }
 
 #[test]
+fn prop_ramped_chunk_layout_is_exact_and_monotone() {
+    // The ramped chunk geometry (smaller leading fills, then the planned
+    // chunk size) must cover the payload contiguously with monotone ids,
+    // for any (bytes, chunk, ramp) combination — and degenerate to the
+    // uniform slicing when ramping is off.
+    prop_check("ramped chunk layout covers bytes exactly", 300, |rng| {
+        let bytes = rng.range(1, 16 << 20) as usize;
+        // Keep the layout bounded (~1k entries) while still crossing the
+        // one-chunk / many-chunk and ramp boundaries.
+        let chunk = rng.range((bytes as u64 / 1024).max(1), bytes as u64) as usize;
+        let ramp_len = rng.range(1, chunk as u64) as usize;
+        let ramp_chunks = rng.range(0, 4) as usize;
+        let layout = rishmem::xfer::exec::chunk_layout(bytes, chunk, ramp_len, ramp_chunks);
+        assert!(!layout.is_empty());
+        let mut expect_off = 0usize;
+        for (i, &(idx, off, len)) in layout.iter().enumerate() {
+            assert_eq!(idx, i, "ids must be monotone from 0");
+            assert_eq!(off, expect_off, "chunks must be contiguous");
+            assert!(len >= 1);
+            let full = if idx < ramp_chunks { ramp_len } else { chunk };
+            assert!(len <= full, "chunk {idx} overshoots its fill: {len} > {full}");
+            expect_off += len;
+        }
+        assert_eq!(expect_off, bytes, "layout must cover the payload exactly");
+        // The O(1) count the charge model uses matches the real layout.
+        assert_eq!(
+            rishmem::xfer::exec::chunk_layout_len(bytes, chunk, ramp_len, ramp_chunks),
+            layout.len(),
+            "chunk_layout_len drifted from chunk_layout"
+        );
+        // Ramp off (or ramp_len == chunk) reproduces the uniform slicing.
+        let uniform = rishmem::xfer::exec::chunk_layout(bytes, chunk, chunk, ramp_chunks);
+        assert_eq!(uniform.len(), bytes.div_ceil(chunk));
+    });
+}
+
+#[test]
+fn prop_rail_chunked_remote_transfers_reassemble_exactly() {
+    // Arbitrary payload sizes through the *rail* stripe pipeline —
+    // crossing the rail chunk-min, rail width, and slab boundaries, with
+    // ramped first chunks enabled — must reassemble exactly on the remote
+    // node: blocking put, windowed chunked get, and NBI put + quiet.
+    prop_check("rail chunk split/reassembly is exact", 6, |rng| {
+        let len = rng.range(1, 5 << 20) as usize;
+        let seed = rng.next_u64();
+        let mut cost = CostParams::default();
+        cost.nic.rails = 4;
+        cost.stripe.ramp_factor = 0.5;
+        let cfg = IshmemConfig {
+            topology: Topology::new(2, 2, 2),
+            heap_bytes: 48 << 20,
+            cost,
+            ..Default::default()
+        };
+        let ok = run_spmd(cfg, false, move |ctx| {
+            let buf = ctx.calloc::<u8>(len);
+            let mut payload = vec![0u8; len];
+            Rng::new(seed ^ ctx.pe() as u64).fill_bytes(&mut payload);
+            // Cross-node partner: PE i on node 0 ↔ PE i on node 1.
+            let half = ctx.npes() / 2;
+            let t = (ctx.pe() + half) % ctx.npes();
+            ctx.put(buf, &payload, t);
+            ctx.barrier_all();
+            let mut back = vec![0u8; len];
+            ctx.get(&mut back, buf, t);
+            let blocking_ok = back == payload;
+            ctx.barrier_all();
+            // NBI flavour: delivery proven by quiet, then verified by the
+            // target itself after the barrier.
+            let mut nbi_payload = payload.clone();
+            nbi_payload.rotate_left(len / 2);
+            ctx.put_nbi(buf, &nbi_payload, t);
+            ctx.quiet();
+            ctx.barrier_all();
+            let mut mine = vec![0u8; len];
+            ctx.read_local(buf, &mut mine);
+            let mut expect = vec![0u8; len];
+            let src = (ctx.pe() + ctx.npes() - half) % ctx.npes();
+            Rng::new(seed ^ src as u64).fill_bytes(&mut expect);
+            expect.rotate_left(len / 2);
+            blocking_ok && mine == expect
+        })
+        .unwrap();
+        assert!(ok.iter().all(|&b| b), "rail chunked roundtrip corrupted {len}B");
+    });
+}
+
+#[test]
 fn prop_poisoned_adaptive_seed_recovers_with_exploration() {
     // ε-exploration keeps the losing path's EMA fresh, so a cell seeded
     // with a wildly wrong estimate converges back to the truly cheaper
