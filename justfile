@@ -12,18 +12,20 @@ bench:
     cargo bench --bench fig_batch
     cargo bench --bench fig_stripe
     cargo bench --bench fig_rail
+    cargo bench --bench fig_calib
     cargo bench --bench fig3_rma
     cargo bench --bench hot_path
 
 # CI smoke: the cutover + batched-submission + striped-pipeline +
-# rail-striping benches on tiny sweeps (RISHMEM_SMOKE shrinks the
-# size/nelem grids), so the figure benches and their embedded assertions
-# can't bit-rot.
+# rail-striping + calibration benches on tiny sweeps (RISHMEM_SMOKE
+# shrinks the size/nelem grids and the calibration round count), so the
+# figure benches and their embedded assertions can't bit-rot.
 bench-smoke:
     RISHMEM_SMOKE=1 cargo bench --bench fig5_cutover
     RISHMEM_SMOKE=1 cargo bench --bench fig_batch
     RISHMEM_SMOKE=1 cargo bench --bench fig_stripe
     RISHMEM_SMOKE=1 cargo bench --bench fig_rail
+    RISHMEM_SMOKE=1 cargo bench --bench fig_calib
 
 # Formatting gate (no writes).
 fmt-check:

@@ -1,0 +1,81 @@
+//! Bench: closed-loop cost-model calibration (ISSUE 5). A synthetic
+//! ground-truth hardware model (single-engine fraction 2× the config,
+//! rail fraction half, startups off by 25–50%) streams per-(lane,
+//! size-class) wall-time observations through the calibrator. Acceptance
+//! bars: (a) learned `single_engine_frac` and `rail_bw_frac` land within
+//! 10% of the planted truth, (b) the per-class residual wall-vs-model
+//! error shrinks (near-)monotonically round over round and ends far below
+//! the uncalibrated baseline, (c) a `calib.enable = false` machine's
+//! ModelParams never move.
+//! `cargo bench --bench fig_calib` (`RISHMEM_SMOKE=1` shrinks the sweep).
+
+use rishmem::bench::figures::{calibration_report, calibration_run};
+use rishmem::sim::cost::{CostModel, CostParams};
+use rishmem::sim::{Locality, Topology};
+use rishmem::xfer::{CalibConfig, Calibrator};
+
+fn main() {
+    println!("{}", calibration_report());
+    let run = calibration_run();
+
+    // (a) Learned fractions within 10% of the planted ground truth.
+    let frac_err = (run.learned.single_engine_frac - run.truth_engine_frac).abs()
+        / run.truth_engine_frac;
+    assert!(
+        frac_err < 0.10,
+        "learned single_engine_frac {} not within 10% of planted {}",
+        run.learned.single_engine_frac,
+        run.truth_engine_frac
+    );
+    let rail_err =
+        (run.learned.rail_bw_frac - run.truth_rail_frac).abs() / run.truth_rail_frac;
+    assert!(
+        rail_err < 0.10,
+        "learned rail_bw_frac {} not within 10% of planted {}",
+        run.learned.rail_bw_frac,
+        run.truth_rail_frac
+    );
+
+    // (b) Residuals shrink monotonically (tiny numerical slack) and end
+    // far below the uncalibrated baseline.
+    let r = &run.round_residuals;
+    assert!(r.len() >= 2, "need at least two rounds: {r:?}");
+    for w in r.windows(2) {
+        assert!(
+            w[1] <= w[0] * 1.01 + 1e-9,
+            "residual grew between rounds: {r:?}"
+        );
+    }
+    let last = *r.last().unwrap();
+    assert!(
+        last < run.baseline_residual * 0.5,
+        "calibrated residual {last} did not shrink vs uncalibrated baseline {}",
+        run.baseline_residual
+    );
+    assert!(last < 0.10, "calibrated residual did not converge: {r:?}");
+    println!(
+        "[fig_calib] residual {:.4} -> {:.4} (uncalibrated baseline {:.4})",
+        r[0], last, run.baseline_residual
+    );
+
+    // (c) The disabled-calibration discipline: observations are dropped,
+    // the version never moves, the params stay bit-identical.
+    let cost = CostModel::new(Topology::new(2, 2, 2), CostParams::default());
+    let before = cost.model.get();
+    let off = Calibrator::new(cost.clone(), CalibConfig::default());
+    for _ in 0..100 {
+        off.observe_engine(Locality::SameNode, 4 << 20, true, 1.0e6);
+        off.observe_rail(4 << 20, 1.0e6);
+    }
+    off.refine_cl_boundary();
+    assert_eq!(cost.model.version(), 0, "disabled calibration moved the model");
+    assert_eq!(
+        cost.model.get().single_engine_frac.to_bits(),
+        before.single_engine_frac.to_bits()
+    );
+
+    println!(
+        "[fig_calib] learned frac {:.4} / rail frac {:.4} within 10% of planted truth",
+        run.learned.single_engine_frac, run.learned.rail_bw_frac
+    );
+}

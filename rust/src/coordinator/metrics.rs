@@ -38,6 +38,14 @@ pub const RAIL_SLOTS: usize = 8;
 /// (`rishmem figure service-delta`): ≤4KiB, ≤64KiB, ≤256KiB, ≤1MiB,
 /// ≤4MiB, larger.
 pub const SERVICE_SIZE_BUCKETS: usize = 6;
+/// Upper byte bound of each size class but the last (class `i` holds
+/// payloads in `(BOUNDS[i-1], BOUNDS[i]]`; the last class is unbounded).
+/// The **single source of truth** for the size-class geometry: the
+/// service-delta tables, their labels, and the calibrator's observation
+/// buckets (`xfer::calibrate`) all derive from this array, so the
+/// classes can never drift apart.
+pub const SERVICE_SIZE_BOUNDS: [u64; SERVICE_SIZE_BUCKETS - 1] =
+    [4 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20];
 /// Proxy service-time histogram: log2-ns buckets, 2^4 ns … ≥2^19 ns.
 pub const SERVICE_NS_BUCKETS: usize = 16;
 const SERVICE_NS_SHIFT: u32 = 4;
@@ -95,7 +103,11 @@ pub struct Metrics {
     // Wall-vs-model service comparison per (data path, payload-size
     // class): the proxy fills the wall side per serviced put/get entry,
     // executors the model side per charged transfer. `rishmem figure
-    // service-delta` diffs the sums and flags classes off by >2×.
+    // service-delta` diffs the sums and flags classes off by >2×. The
+    // same proxy-side wall observations also feed the calibrator
+    // (`xfer::calibrate`, per-(path, lane, size-class)) when
+    // `calib.enable` is on — the flagged classes close the loop into
+    // ModelParams instead of dead-ending in the report.
     pub service_wall_ns: [[AtomicU64; SERVICE_SIZE_BUCKETS]; 3],
     pub service_wall_ops: [[AtomicU64; SERVICE_SIZE_BUCKETS]; 3],
     pub service_model_ns: [[AtomicU64; SERVICE_SIZE_BUCKETS]; 3],
@@ -125,16 +137,13 @@ pub fn service_ns_bucket(ns: u64) -> usize {
     (log2.saturating_sub(SERVICE_NS_SHIFT) as usize).min(SERVICE_NS_BUCKETS - 1)
 }
 
-/// Payload-size class of the wall-vs-model service tables.
+/// Payload-size class of the wall-vs-model service tables (and of the
+/// calibrator's observation buckets — shared geometry by construction).
 pub fn service_size_bucket(bytes: u64) -> usize {
-    match bytes {
-        0..=4_096 => 0,
-        4_097..=65_536 => 1,
-        65_537..=262_144 => 2,
-        262_145..=1_048_576 => 3,
-        1_048_577..=4_194_304 => 4,
-        _ => 5,
-    }
+    SERVICE_SIZE_BOUNDS
+        .iter()
+        .position(|&bound| bytes <= bound)
+        .unwrap_or(SERVICE_SIZE_BUCKETS - 1)
 }
 
 /// Human label of a [`service_size_bucket`] index.
@@ -367,6 +376,14 @@ impl MetricsSnapshot {
     /// value fits f64's 2^53 integer range long before the counters
     /// saturate a run.
     pub fn to_json(&self) -> String {
+        self.to_json_with(Vec::new())
+    }
+
+    /// [`Self::to_json`] with caller-provided extra top-level entries —
+    /// how `rishmem metrics --json` folds the calibration snapshot
+    /// (learned params, sample counts, residuals) into the same object
+    /// the dashboards already scrape.
+    pub fn to_json_with(&self, extra: Vec<(String, crate::util::json::Json)>) -> String {
         use crate::util::json::Json;
         use std::collections::BTreeMap;
         fn n(v: u64) -> Json {
@@ -434,6 +451,11 @@ impl MetricsSnapshot {
         put("xla_reduce_calls", n(self.xla_reduce_calls));
         put("xla_reduce_elems", n(self.xla_reduce_elems));
         put("native_reduce_elems", n(self.native_reduce_elems));
+        // Extras go in last so a caller-provided key takes precedence over
+        // a colliding built-in instead of silently vanishing.
+        for (k, v) in extra {
+            o.insert(k, v);
+        }
         Json::Obj(o).to_string()
     }
 
@@ -693,6 +715,40 @@ mod tests {
         assert_eq!(rails.len(), RAIL_SLOTS);
         assert_eq!(rails[1].as_usize(), Some(2048));
         assert!(j.get("service_wall_ns").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn size_class_bounds_are_the_single_source_of_truth() {
+        // Every bound is the inclusive top of its class and the exclusive
+        // floor of the next — the geometry the calibrator shares.
+        for (i, &bound) in SERVICE_SIZE_BOUNDS.iter().enumerate() {
+            assert_eq!(service_size_bucket(bound), i, "top of class {i}");
+            assert_eq!(service_size_bucket(bound + 1), i + 1, "floor of class {}", i + 1);
+        }
+        assert_eq!(service_size_bucket(0), 0);
+        assert_eq!(
+            service_size_bucket(*SERVICE_SIZE_BOUNDS.last().unwrap() * 2),
+            SERVICE_SIZE_BUCKETS - 1
+        );
+        // One label per class.
+        for b in 0..SERVICE_SIZE_BUCKETS {
+            assert!(!service_size_label(b).is_empty());
+        }
+    }
+
+    #[test]
+    fn json_with_extra_entries_merges_at_top_level() {
+        use crate::util::json::Json;
+        let m = Metrics::new();
+        Metrics::add(&m.puts, 2);
+        let s = m.snapshot();
+        let text = s.to_json_with(vec![(
+            "calibration".to_string(),
+            Json::Bool(true),
+        )]);
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("calibration"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("puts").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -441,7 +441,9 @@ impl PeCtx {
                     .add_path_bytes(PathIdx::Nic, Locality::Remote, bytes as u64);
             }
         }
-        let ce = &self.rt.cost.params.ce;
+        // Learnable constants (startup, single-engine fraction) read live
+        // through the calibrated overlay, like the device-initiated path.
+        let ce = self.rt.cost.ce_eff();
         let xe = &self.rt.cost.params.xe;
         let mut engine_time: f64 = 0.0;
         for (_link, (loc, link_bytes, transfers)) in per_link {

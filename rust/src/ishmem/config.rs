@@ -54,6 +54,13 @@ pub struct IshmemConfig {
     /// launch dominates); above, the AOT Pallas kernel path is used when
     /// the dtype is covered and a runtime is attached.
     pub xla_reduce_min_elems: usize,
+    /// Closed-loop cost-model calibration (`calib.enable`,
+    /// `calib.ema_alpha`, `calib.min_samples`, `calib.clamp_frac`): the
+    /// proxy's wall-time observations refine the learnable hardware
+    /// constants in the shared `ModelParams` store. Off by default — a
+    /// `calib.enable = false` machine reproduces today's estimates
+    /// bit-for-bit.
+    pub calib: crate::xfer::calibrate::CalibConfig,
 }
 
 impl Default for IshmemConfig {
@@ -73,6 +80,7 @@ impl Default for IshmemConfig {
             large_flush_bytes: 1 << 20,
             strict_hmem: false,
             xla_reduce_min_elems: 1024,
+            calib: crate::xfer::calibrate::CalibConfig::default(),
         }
     }
 }
@@ -148,6 +156,15 @@ impl IshmemConfig {
         anyhow::ensure!(
             self.large_flush_bytes >= 1,
             "large_flush_bytes must be at least 1"
+        );
+        anyhow::ensure!(
+            self.calib.ema_alpha > 0.0 && self.calib.ema_alpha <= 1.0,
+            "calib.ema_alpha must be in (0, 1]"
+        );
+        anyhow::ensure!(self.calib.min_samples >= 1, "calib.min_samples must be at least 1");
+        anyhow::ensure!(
+            self.calib.clamp_frac >= 1.0,
+            "calib.clamp_frac below 1 would forbid the configured seed itself"
         );
         Ok(())
     }
@@ -229,6 +246,27 @@ mod tests {
         // so default striped pipelines batch exactly as before.
         let cfg = IshmemConfig::default();
         assert!(cfg.large_flush_bytes > cfg.chunk_max_bytes());
+    }
+
+    #[test]
+    fn calib_knobs_validated() {
+        let mut cfg = IshmemConfig::default();
+        assert!(!cfg.calib.enable, "calibration must default off");
+        cfg.calib.ema_alpha = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.calib.ema_alpha = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.calib.min_samples = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.calib.clamp_frac = 0.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.calib.enable = true;
+        cfg.calib.clamp_frac = 1.0;
+        assert!(cfg.validate().is_ok(), "clamp 1.0 pins learning to the seed but is legal");
     }
 
     #[test]

@@ -60,7 +60,7 @@ use crate::sim::{CostModel, HeapRegistry, SimClock, Topology};
 use crate::sos::heap::{ExternalHeapKind, SosHeaps, StagingSlab, ThreadLevel};
 use crate::sos::pmi::PmiWorld;
 use crate::sos::transport::OfiTransport;
-use crate::xfer::{CmdStream, CompletionTracker, XferEngine};
+use crate::xfer::{Calibrator, CmdStream, CompletionTracker, XferEngine};
 use crate::ze::{IpcTable, ZeDriver};
 
 /// Job-wide runtime state (one per "machine").
@@ -73,6 +73,10 @@ pub struct Ishmem {
     /// The unified transfer-plan engine: every device-initiated path
     /// decision (RMA, signals, collectives) flows through here.
     pub xfer: XferEngine,
+    /// Closed-loop cost-model calibration: consumes the proxy's per-(path,
+    /// lane, size-class) wall-time observations and refines the learnable
+    /// constants in `cost.model` (no-op while `calib.enable` is false).
+    pub calib: Arc<Calibrator>,
     #[allow(dead_code)] // held so host-initiated paths can mint command lists
     pub(crate) driver: ZeDriver,
     /// One reverse-offload ring + completion pool per node.
@@ -103,6 +107,7 @@ impl Ishmem {
         });
         let driver = ZeDriver::new(heaps.clone(), cost.clone());
         let metrics = Metrics::new();
+        let calib = Arc::new(Calibrator::new(cost.clone(), config.calib.clone()));
 
         let mut rings = Vec::new();
         let mut completions = Vec::new();
@@ -121,6 +126,7 @@ impl Ishmem {
                     completions: pool.clone(),
                     metrics: metrics.clone(),
                     use_immediate_cl: config.use_immediate_cl,
+                    calib: calib.clone(),
                 },
             ));
             rings.push(ring);
@@ -135,8 +141,10 @@ impl Ishmem {
         );
         // Per-op command-list policy (§III-C): descriptors above this size
         // ask the proxy for standard lists; the planner's estimates use
-        // the same boundary so decisions and charges agree.
-        xfer.cl_immediate_max_bytes = config.cl_immediate_max_bytes;
+        // the same boundary so decisions and charges agree. The value
+        // seeds the shared ModelParams store — it is the third learned
+        // quantity when calibration is on.
+        xfer.set_cl_immediate_max_bytes(config.cl_immediate_max_bytes);
         // Striped chunk pipeline: the stripe planner's chunk cap is what
         // the staging slab can double-buffer, so modeled stripes and the
         // executor's slicing agree.
@@ -155,6 +163,7 @@ impl Ishmem {
         Ok(Arc::new(Ishmem {
             pmi: PmiWorld::new(npes),
             xfer,
+            calib,
             cost,
             heaps,
             transport,

@@ -50,6 +50,10 @@ pub(crate) struct ProxyShared {
     /// knob governs the raw-pointer fallback path and acts as the enable
     /// bit for immediate lists.
     pub use_immediate_cl: bool,
+    /// Closed-loop calibration sink: every serviced data entry is tagged
+    /// with its lane (engine slot / NIC rail) and observed wall-clock ns
+    /// and fed here (no-op while `calib.enable` is off).
+    pub calib: Arc<crate::xfer::Calibrator>,
 }
 
 /// Dispatch one intra-node engine copy on the requested command-list
@@ -86,8 +90,7 @@ fn raw_engine_charge(sh: &ProxyShared, src_pe: usize, dst_pe: usize, len: usize,
     let cost = &sh.driver.cost;
     let loc = cost.locality(src_pe, dst_pe);
     clock.advance(
-        cost.params
-            .ce
+        cost.ce_eff()
             .transfer_ns(&cost.params.xe, loc, len, sh.use_immediate_cl, false),
     );
 }
@@ -129,14 +132,22 @@ fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
                 service(op, &msg, sh, &proxy_clock);
                 let elapsed = t0.elapsed().as_nanos() as u64;
                 sh.metrics.add_service(service_family(op), elapsed);
-                // Wall half of the service-delta tables (data ops only).
+                // Wall half of the service-delta tables (data ops only),
+                // and the same observation feeds the calibrator.
                 if matches!(op, RingOp::Put | RingOp::Get) {
-                    let path = if is_local(sh, msg.src_pe as usize, msg.pe as usize) {
-                        PathIdx::CopyEngine
+                    let (src, dst) = (msg.src_pe as usize, msg.pe as usize);
+                    if is_local(sh, src, dst) {
+                        sh.metrics.add_service_wall(PathIdx::CopyEngine, msg.len, elapsed);
+                        sh.calib.observe_engine(
+                            sh.driver.cost.locality(src, dst),
+                            msg.len as usize,
+                            sh.use_immediate_cl,
+                            elapsed as f64,
+                        );
                     } else {
-                        PathIdx::Nic
-                    };
-                    sh.metrics.add_service_wall(path, msg.len, elapsed);
+                        sh.metrics.add_service_wall(PathIdx::Nic, msg.len, elapsed);
+                        sh.calib.observe_rail(msg.len as usize, elapsed as f64);
+                    }
                 }
             }
             None => panic!("proxy received malformed message op={}", msg.op),
@@ -180,11 +191,29 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     let mut status = PROXY_OK;
     let mut staged_cls: BTreeMap<usize, CommandList> = BTreeMap::new();
     let mut rail_clocks: BTreeMap<usize, SimClock> = BTreeMap::new();
+    // Calibration bookkeeping for the staged standard lists: the per-entry
+    // wall time of a standard-CL entry measures only the append, so the
+    // lane observation happens at execute time instead — per engine, over
+    // the bytes that list accumulated — while the append wall times are
+    // summed so the CL-*flavor* comparison can charge standard lists their
+    // full cost (append + execute), not the engine time alone. The
+    // locality and entry size of the list's first entry stand in for the
+    // whole list (chunked transfers target one peer with uniform chunks,
+    // so lists are homogeneous in practice).
+    struct StagedMeta {
+        bytes: u64,
+        entries: u64,
+        loc: crate::sim::topology::Locality,
+        append_ns: u64,
+        first_len: usize,
+    }
+    let mut staged_meta: BTreeMap<usize, StagedMeta> = BTreeMap::new();
     for d in &descs {
         let t0 = Instant::now();
         let op = d.ring_op().expect("validated by decode_block");
-        if !dispatch_batch_entry(sh, src_pe, d, op, &mut staged_cls, &mut rail_clocks, proxy_clock)
-        {
+        let ok =
+            dispatch_batch_entry(sh, src_pe, d, op, &mut staged_cls, &mut rail_clocks, proxy_clock);
+        if !ok {
             status = PROXY_ERR_UNREGISTERED;
         }
         let elapsed = t0.elapsed().as_nanos() as u64;
@@ -196,32 +225,87 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
         // one whole-transfer model charge — tail and ramped chunks
         // included.
         if matches!(op, RingOp::Put | RingOp::Get) {
-            let path = if is_local(sh, src_pe, d.pe as usize) {
-                PathIdx::CopyEngine
+            let len = d.len as usize;
+            if is_local(sh, src_pe, d.pe as usize) {
+                sh.metrics
+                    .add_service_wall(PathIdx::CopyEngine, d.transfer_bytes(), elapsed);
+                let loc = sh.driver.cost.locality(src_pe, d.pe as usize);
+                if d.standard_cl() {
+                    let m = staged_meta.entry(d.engine_hint()).or_insert(StagedMeta {
+                        bytes: 0,
+                        entries: 0,
+                        loc,
+                        append_ns: 0,
+                        first_len: len,
+                    });
+                    m.bytes += len as u64;
+                    m.entries += 1;
+                    m.append_ns += elapsed;
+                } else {
+                    // Immediate entries execute inline: this per-chunk
+                    // wall time is both a complete lane observation and
+                    // the immediate side of the CL-flavor comparison.
+                    sh.calib.observe_engine(loc, len, true, elapsed as f64);
+                    sh.calib
+                        .observe_cl_flavor(len, true, elapsed as f64 / len.max(1) as f64);
+                }
             } else {
-                PathIdx::Nic
-            };
-            sh.metrics.add_service_wall(path, d.transfer_bytes(), elapsed);
+                sh.metrics.add_service_wall(PathIdx::Nic, d.transfer_bytes(), elapsed);
+                // Remote entries inject inside the scan: one per-chunk
+                // rail observation each — but only for transfers that
+                // actually crossed the wire. A fast-failing unregistered
+                // put would otherwise teach the calibrator an absurdly
+                // fast rail.
+                if ok {
+                    sh.calib.observe_rail(len, elapsed as f64);
+                }
+            }
         }
     }
     // The per-engine lists run on *different* blitters concurrently:
     // execute each on its own scratch clock and advance the proxy clock
     // by the slowest engine's time, not the sum.
     let mut slowest = 0.0f64;
-    for (_engine, mut cl) in staged_cls {
+    for (engine, mut cl) in staged_cls {
         let t0 = Instant::now();
         cl.close();
         let scratch = SimClock::new();
         cl.execute(&CommandQueue::default(), &scratch);
         slowest = slowest.max(scratch.now_ns());
-        sh.metrics
-            .add_service(ServiceOp::Other, t0.elapsed().as_nanos() as u64);
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        sh.metrics.add_service(ServiceOp::Other, elapsed);
+        // Standard-CL lane observation: the list executes its N appended
+        // commands back-to-back on one engine and the engine model charges
+        // a startup *per command*, so the honest width-1 sample is the
+        // per-entry mean (T/N ≈ startup + (bytes/N)/lane_bw) — feeding the
+        // whole list as one chunk would inflate the learned startup by ~N×
+        // in small classes and drag the learned fraction low in large
+        // ones. The CL-flavor comparison charges the full service cost
+        // (appends + execute) per byte, bucketed at the per-entry size the
+        // boundary decision is about.
+        if let Some(m) = staged_meta.get(&engine) {
+            let n = m.entries.max(1);
+            sh.calib.observe_engine(
+                m.loc,
+                (m.bytes / n).max(1) as usize,
+                false,
+                elapsed as f64 / n as f64,
+            );
+            sh.calib.observe_cl_flavor(
+                m.first_len,
+                false,
+                (m.append_ns + elapsed) as f64 / m.bytes.max(1) as f64,
+            );
+        }
     }
     // Likewise the per-rail sequences inject on different NICs.
     for (_rail, clock) in rail_clocks {
         slowest = slowest.max(clock.now_ns());
     }
     proxy_clock.advance(slowest);
+    // Every few batches worth of flavor evidence may move the learned CL
+    // boundary (no-op while calibration is off or evidence is thin).
+    sh.calib.refine_cl_boundary();
     complete(sh, msg, status);
 }
 

@@ -15,14 +15,17 @@ USAGE:
         IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig5-adaptive
              fig6-4pe fig6-8pe fig6-12pe fig7a fig7b ring fig-batch
              fig-stripe fig-rail ablate-cl ablate-sync cutover-table
-             service-delta all
+             service-delta calibration all
         cutover-table [--load FILE] [--save FILE]: load a previously
         saved adaptive table instead of warming up / save the table
         service-delta: wall-clock vs modeled proxy service times per
         (path, size class), classes off by >2x flagged
+        calibration: closed-loop calibration against a planted ground
+        truth — learned vs configured params + per-class residuals
   rishmem metrics [--json] [--pes N]  run a representative workload and
                                       dump the metrics snapshot (text or
-                                      JSON for dashboard scraping)
+                                      JSON for dashboard scraping),
+                                      including the calibration snapshot
   rishmem train [--model M] [--pes N] [--steps S] [--lr F] [--seed K]
                                       data-parallel training (e2e driver)
   rishmem ze-peer                     raw Level-Zero copy-engine baseline
@@ -109,6 +112,10 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
             println!("{}", figures::service_delta_report());
             return Ok(());
         }
+        "calibration" => {
+            println!("{}", figures::calibration_report());
+            return Ok(());
+        }
         "fig6-4pe" => vec![figures::fig6(4)],
         "fig6-8pe" => vec![figures::fig6(8)],
         "fig6-12pe" => vec![figures::fig6(12)],
@@ -138,6 +145,12 @@ fn cmd_metrics(args: &[String]) -> anyhow::Result<()> {
     let (_, kv) = flags(args);
     let json = kv.contains_key("json");
     let pes: usize = kv.get("pes").map_or(Ok(12), |v| v.parse())?;
+    // Default config — the routing/plan metrics must reflect what a
+    // default deployment does, so calibration stays at its configured
+    // default (off): learning against this host's wall clocks mid-run
+    // would make the reported tables nondeterministic. The calibration
+    // snapshot is still embedded (seed params, zero samples when off);
+    // `rishmem figure calibration` shows the closed loop converging.
     let ish = Ishmem::new(IshmemConfig::with_npes(pes))?;
     ish.launch(|ctx| {
         let buf = ctx.calloc::<u8>(4 << 20);
@@ -157,10 +170,16 @@ fn cmd_metrics(args: &[String]) -> anyhow::Result<()> {
         ctx.barrier_all();
     });
     let snap = ish.metrics.snapshot();
+    let calib = ish.calib.snapshot();
     if json {
-        println!("{}", snap.to_json());
+        println!(
+            "{}",
+            snap.to_json_with(vec![("calibration".to_string(), calib.to_json())])
+        );
     } else {
         println!("{}", snap.report());
+        println!();
+        println!("{}", calib.report());
     }
     ish.shutdown();
     Ok(())

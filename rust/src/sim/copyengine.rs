@@ -62,6 +62,22 @@ impl Default for CopyEngineParams {
 }
 
 impl CopyEngineParams {
+    /// Overlay the live learned constants (closed-loop calibration,
+    /// `sim::params`) onto this configured param set: the calibrated
+    /// fraction and startup terms replace the config values, the
+    /// structural knobs (engine count, stripe limits, chunk minimum,
+    /// doorbell) stay configured. An un-calibrated store hands back the
+    /// identical f64 bits, so every downstream estimate is bit-identical
+    /// to the pre-calibration formula.
+    pub fn with_learned(&self, learned: &crate::sim::params::LearnedParams) -> Self {
+        CopyEngineParams {
+            single_engine_frac: learned.single_engine_frac,
+            startup_immediate_ns: learned.startup_immediate_ns,
+            startup_standard_ns: learned.startup_standard_ns,
+            ..self.clone()
+        }
+    }
+
     /// Copy-engine path roofline — the engines drive the same links as
     /// load/store and, striped wide enough, sustain the full rate (plus
     /// faster same-tile blits).
@@ -295,6 +311,31 @@ mod tests {
         let a = ce.transfer_ns(&xe, Locality::SameGpu, 4096, true, true);
         let b = ce.striped_transfer_ns(&xe, Locality::SameGpu, 4096, true, true, 1, 1);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn with_learned_overlays_only_the_learnable_fields() {
+        let ce = CopyEngineParams::default();
+        let mut learned = crate::sim::params::LearnedParams::from_cost(
+            &crate::sim::cost::CostParams::default(),
+        );
+        // Un-learned overlay is the identity (bit-for-bit).
+        let same = ce.with_learned(&learned);
+        assert_eq!(same.single_engine_frac.to_bits(), ce.single_engine_frac.to_bits());
+        assert_eq!(same.startup_immediate_ns.to_bits(), ce.startup_immediate_ns.to_bits());
+        // Learned values replace the fractions/startups; structure stays.
+        learned.single_engine_frac = 0.5;
+        learned.startup_standard_ns = 9_000.0;
+        let eff = ce.with_learned(&learned);
+        assert_eq!(eff.single_engine_frac, 0.5);
+        assert_eq!(eff.startup_standard_ns, 9_000.0);
+        assert_eq!(eff.engines_per_gpu, ce.engines_per_gpu);
+        assert_eq!(eff.chunk_min_bytes, ce.chunk_min_bytes);
+        let xe = XeLinkParams::default();
+        assert_eq!(
+            eff.engine_bw_gbs(&xe, Locality::SameNode),
+            2.0 * ce.engine_bw_gbs(&xe, Locality::SameNode),
+        );
     }
 
     #[test]

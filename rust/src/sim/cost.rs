@@ -8,6 +8,7 @@ use std::sync::Arc;
 
 use super::copyengine::{CopyEngineParams, EngineQueue};
 use super::nic::NicParams;
+use super::params::ModelParams;
 use super::pcie::PcieParams;
 use super::rail::RailSet;
 use super::topology::{Locality, Topology};
@@ -129,7 +130,17 @@ fn stripe_scan(
 /// Shared, thread-safe cost model (one per launched machine).
 #[derive(Debug)]
 pub struct CostModel {
+    /// Configured hardware constants (the calibration *seed*). Structural
+    /// knobs (engine/rail counts, chunk minimums, rooflines) are read from
+    /// here directly; the learnable constants are read through
+    /// [`Self::ce_eff`]/[`Self::nic_eff`] so calibration updates reach
+    /// every estimate.
     pub params: CostParams,
+    /// Mutable, versioned store of the learnable constants
+    /// (`single_engine_frac`, `rail_bw_frac`, startup terms, the CL
+    /// boundary), seeded bit-for-bit from `params` — the write side of
+    /// the closed calibration loop (`xfer::calibrate`).
+    pub model: ModelParams,
     pub topo: Topology,
     /// Per-GPU copy-engine occupancy (global GPU index).
     engine_queues: Vec<EngineQueue>,
@@ -145,6 +156,7 @@ impl CostModel {
                 .map(|_| EngineQueue::new(params.ce.engines_per_gpu))
                 .collect(),
             rail_sets: (0..topo.nodes).map(|_| RailSet::new(params.nic.rails)).collect(),
+            model: ModelParams::new(&params),
             params,
             topo,
         })
@@ -152,6 +164,19 @@ impl CostModel {
 
     pub fn locality(&self, from: usize, to: usize) -> Locality {
         self.topo.classify(from, to)
+    }
+
+    /// The *effective* copy-engine params: configured structure with the
+    /// live learned constants overlaid. Recompute-on-update is automatic —
+    /// every estimate fetches this per call, so a calibration write is
+    /// visible to the very next plan.
+    pub fn ce_eff(&self) -> CopyEngineParams {
+        self.params.ce.with_learned(&self.model.get())
+    }
+
+    /// The *effective* NIC params (see [`Self::ce_eff`]).
+    pub fn nic_eff(&self) -> NicParams {
+        self.params.nic.with_learned(&self.model.get())
     }
 
     // ----------------------------------------------------------- paths ----
@@ -177,8 +202,7 @@ impl CostModel {
         let q = &self.engine_queues[src_gpu];
         let factor = q.begin();
         let base = self
-            .params
-            .ce
+            .ce_eff()
             .transfer_ns(&self.params.xe, loc, bytes, immediate_cl, host_initiated);
         q.end();
         let ring = if via_ring {
@@ -203,7 +227,7 @@ impl CostModel {
     ) -> f64 {
         let q = &self.engine_queues[src_gpu];
         let factor = q.begin();
-        let base = self.params.ce.striped_transfer_ns(
+        let base = self.ce_eff().striped_transfer_ns(
             &self.params.xe,
             loc,
             bytes,
@@ -237,7 +261,7 @@ impl CostModel {
         chunk_cap: usize,
         cl_immediate_max: usize,
     ) -> (usize, usize) {
-        let ce = &self.params.ce;
+        let ce = self.ce_eff();
         let w_max = ce.stripe_max_engines.clamp(1, ce.engines_per_gpu.max(1));
         stripe_scan(bytes, chunk_cap, ce.chunk_min_bytes, w_max, |w, chunk, n| {
             let imm = chunk <= cl_immediate_max;
@@ -252,7 +276,7 @@ impl CostModel {
     /// never chunks — the transfer stays one RDMA, preserving the
     /// pre-striping single-rail estimates exactly.
     pub fn rail_stripe_for(&self, bytes: usize, chunk_cap: usize) -> (usize, usize) {
-        let nic = &self.params.nic;
+        let nic = self.nic_eff();
         if nic.rails <= 1 {
             return (bytes.max(1), 1);
         }
@@ -278,7 +302,7 @@ impl CostModel {
         let (chunk, width) = self.stripe_for(loc, bytes, chunk_cap, cl_max);
         let n = bytes.max(1).div_ceil(chunk.max(1));
         self.ring_rtt_ns()
-            + self.params.ce.striped_transfer_ns(
+            + self.ce_eff().striped_transfer_ns(
                 &self.params.xe,
                 loc,
                 bytes,
@@ -327,7 +351,7 @@ impl CostModel {
     /// the aggregate engine rate (the occupancy term of the loaded
     /// estimates).
     pub fn engine_drain_ns(&self, loc: Locality, backlog_bytes: u64) -> f64 {
-        let ce = &self.params.ce;
+        let ce = self.ce_eff();
         let bw = ce.striped_bw_gbs(&self.params.xe, loc, ce.engines_per_gpu);
         if bw > 0.0 {
             backlog_bytes as f64 / bw
@@ -408,7 +432,7 @@ impl CostModel {
     /// the aggregate rail rate (the occupancy term of the loaded remote
     /// estimate).
     pub fn rail_drain_ns(&self, backlog_bytes: u64) -> f64 {
-        let nic = &self.params.nic;
+        let nic = self.nic_eff();
         let bw = nic.rail_striped_bw_gbs(nic.rails);
         if bw > 0.0 {
             backlog_bytes as f64 / bw
@@ -461,7 +485,7 @@ impl CostModel {
             0.0
         };
         ring + self.params.overhead.host_issue_ns
-            + self.params.nic.rdma_striped_ns(bytes, width, chunks)
+            + self.nic_eff().rdma_striped_ns(bytes, width, chunks)
     }
 
     // --------------------------------------------------- time-to-first-byte
@@ -472,10 +496,11 @@ impl CostModel {
     /// 1) strictly shrinks the fill term, so the first engine starts
     /// earlier at equal total bytes.
     pub fn engine_ttfb_ns(&self, chunk_bytes: usize, immediate_cl: bool) -> f64 {
+        let ce = self.ce_eff();
         let startup = if immediate_cl {
-            self.params.ce.startup_immediate_ns
+            ce.startup_immediate_ns
         } else {
-            self.params.ce.startup_standard_ns
+            ce.startup_standard_ns
         };
         self.ring_rtt_ns()
             + self.staging_copy_ns(self.params.stripe.first_fill_bytes(chunk_bytes))
@@ -701,6 +726,92 @@ mod tests {
         // Ramp off is the identity fill.
         assert_eq!(base.params.stripe.first_fill_bytes(chunk), chunk);
         assert_eq!(ramped.params.stripe.first_fill_bytes(chunk), chunk / 4);
+    }
+
+    #[test]
+    fn uncalibrated_estimates_are_bit_identical_to_seed_formulas() {
+        // The `calib.enable = false` acceptance bar: with nothing learned,
+        // every estimate that now reads through the ModelParams overlay
+        // must produce the identical f64 bits the raw configured-param
+        // formulas produce (the pre-calibration code path).
+        let m = model();
+        assert_eq!(m.model.version(), 0);
+        for loc in [Locality::SameTile, Locality::SameGpu, Locality::SameNode] {
+            for bytes in [64usize, 4096, 256 << 10, 1 << 20, 8 << 20] {
+                let (chunk, width) = m.stripe_for(loc, bytes, usize::MAX, usize::MAX);
+                let n = bytes.div_ceil(chunk.max(1));
+                let seed = m.ring_rtt_ns()
+                    + m.params
+                        .ce
+                        .striped_transfer_ns(&m.params.xe, loc, bytes, true, false, width, n);
+                assert_eq!(
+                    m.p2p_engine_estimate_ns(loc, bytes, true).to_bits(),
+                    seed.to_bits(),
+                    "engine estimate drifted at {loc:?}/{bytes}B"
+                );
+            }
+        }
+        for bytes in [4096usize, 1 << 20, 8 << 20] {
+            let (chunk, width) = m.rail_stripe_for(bytes, usize::MAX);
+            let n = bytes.div_ceil(chunk.max(1));
+            let seed = m.ring_rtt_ns()
+                + m.params.overhead.host_issue_ns
+                + m.params.nic.rdma_striped_ns(bytes, width, n);
+            assert_eq!(
+                m.internode_striped_ns(bytes, true, true, width, n).to_bits(),
+                seed.to_bits(),
+                "rail estimate drifted at {bytes}B"
+            );
+        }
+        assert_eq!(
+            m.engine_ttfb_ns(1 << 20, true).to_bits(),
+            (m.ring_rtt_ns()
+                + m.staging_copy_ns(1 << 20)
+                + m.params.ce.startup_immediate_ns)
+                .to_bits(),
+        );
+    }
+
+    #[test]
+    fn model_update_recomputes_every_estimate_and_bumps_version() {
+        let m = model();
+        let loc = Locality::SameNode;
+        let big = 8 << 20;
+        let before_engine = m.p2p_engine_estimate_ns(loc, big, true);
+        let before_drain = m.engine_drain_ns(loc, 64 << 20);
+        let (c, w) = m.rail_stripe_for(big, usize::MAX);
+        let before_rail = m.internode_striped_ns(big, true, true, w, big.div_ceil(c));
+        // Calibration doubles the single-engine fraction and halves the
+        // per-rail fraction: engine transfers get faster, rail transfers
+        // slower — with no re-construction of anything.
+        let v = m.model.update(|l| {
+            l.single_engine_frac = 0.5;
+            l.rail_bw_frac = 0.5;
+        });
+        assert_eq!(v, 1);
+        assert_eq!(m.model.version(), 1);
+        assert!(
+            m.p2p_engine_estimate_ns(loc, big, true) < before_engine,
+            "faster learned engines must shrink the estimate"
+        );
+        assert!(
+            m.engine_drain_ns(loc, 64 << 20) < before_drain,
+            "faster learned engines must drain backlog faster"
+        );
+        let (c2, w2) = m.rail_stripe_for(big, usize::MAX);
+        assert!(
+            m.internode_striped_ns(big, true, true, w2, big.div_ceil(c2)) > before_rail,
+            "slower learned rails must grow the remote estimate"
+        );
+        // ce_eff/nic_eff expose the live values.
+        assert_eq!(m.ce_eff().single_engine_frac, 0.5);
+        assert_eq!(m.nic_eff().rail_bw_frac, 0.5);
+        // Resetting restores the seed estimates bit-for-bit.
+        m.model.reset();
+        assert_eq!(
+            m.p2p_engine_estimate_ns(loc, big, true).to_bits(),
+            before_engine.to_bits()
+        );
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod copyengine;
 pub mod cost;
 pub mod memory;
 pub mod nic;
+pub mod params;
 pub mod pcie;
 pub mod rail;
 pub mod topology;
@@ -24,5 +25,6 @@ pub mod xelink;
 pub use clock::SimClock;
 pub use cost::{CostModel, CostParams};
 pub use memory::{HeapRegistry, SymHeap};
+pub use params::{LearnedParams, ModelParams};
 pub use rail::RailSet;
 pub use topology::{Locality, PeId, Topology};

@@ -48,6 +48,20 @@ impl Default for NicParams {
 }
 
 impl NicParams {
+    /// Overlay the live learned constants (closed-loop calibration,
+    /// `sim::params`) onto this configured param set: the calibrated
+    /// per-rail fraction and injection startup replace the config values,
+    /// the structural knobs (NIC count, rail count, latency, chunk
+    /// minimum) stay configured. An un-calibrated store hands back the
+    /// identical f64 bits — estimates stay bit-identical.
+    pub fn with_learned(&self, learned: &crate::sim::params::LearnedParams) -> Self {
+        NicParams {
+            rail_bw_frac: learned.rail_bw_frac,
+            rail_startup_ns: learned.rail_startup_ns,
+            ..self.clone()
+        }
+    }
+
     /// RDMA put/get of `bytes` into a registered (FI_HMEM) heap, ns.
     pub fn rdma_ns(&self, bytes: usize) -> f64 {
         self.latency_ns + bytes as f64 / self.bw_gbs
@@ -125,6 +139,25 @@ mod tests {
         let striped = n.rdma_striped_ns(bytes, 4, 4);
         assert!(striped * 2.0 <= single, "striped {striped} !<= single {single}/2");
         assert_eq!(n.rail_striped_bw_gbs(4), 4.0 * n.rail_bw_gbs());
+    }
+
+    #[test]
+    fn with_learned_overlays_only_the_learnable_fields() {
+        let n = NicParams::default();
+        let mut learned = crate::sim::params::LearnedParams::from_cost(
+            &crate::sim::cost::CostParams::default(),
+        );
+        let same = n.with_learned(&learned);
+        assert_eq!(same.rail_bw_frac.to_bits(), n.rail_bw_frac.to_bits());
+        assert_eq!(same.rail_startup_ns.to_bits(), n.rail_startup_ns.to_bits());
+        learned.rail_bw_frac = 0.5;
+        learned.rail_startup_ns = 750.0;
+        let eff = n.with_learned(&learned);
+        assert_eq!(eff.rail_bw_frac, 0.5);
+        assert_eq!(eff.rail_startup_ns, 750.0);
+        assert_eq!(eff.rails, n.rails);
+        assert_eq!(eff.latency_ns, n.latency_ns);
+        assert_eq!(eff.rail_bw_gbs(), n.bw_gbs * 0.5);
     }
 
     #[test]

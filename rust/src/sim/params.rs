@@ -1,0 +1,221 @@
+//! Versioned store of the *learnable* hardware constants (closed-loop
+//! cost-model calibration, ISSUE 5).
+//!
+//! The cost model's first-order constants come from `CostParams` — config
+//! defaults calibrated against public PVC/Slingshot figures, not measured
+//! silicon. PR 4's wall-vs-model ledgers measure exactly how wrong those
+//! constants are on the machine actually running, and the ROADMAP names
+//! the feedback loop from four directions ("learn `single_engine_frac`
+//! from observed ze_peer runs", "learn `rail_bw_frac` from observed wire
+//! times", "feed flagged classes back into cost-model calibration",
+//! "learn the CL boundary online").
+//!
+//! [`ModelParams`] closes that loop's state side: the learnable subset of
+//! the constants lives here as a **mutable, versioned** store shared by
+//! every reader of the cost model. Planners read the *live* values
+//! ([`CostModel::ce_eff`]/[`CostModel::nic_eff`] overlay them onto the
+//! structural params), the calibrator (`xfer::calibrate`) writes refined
+//! values through [`ModelParams::update`], and the version counter bumps
+//! only when a value actually changes — so transfer plans and adaptive-
+//! table cells stamped with the version can age out exactly when the
+//! hardware model moved, and never spuriously.
+//!
+//! Seeding discipline: the store is seeded bit-for-bit from the configured
+//! `CostParams`, and a machine whose calibrator never applies an update
+//! (`calib.enable = false`) reads back the identical f64 bits — every
+//! estimate stays bit-identical to the pre-calibration formulas (tested
+//! here and in `sim::cost`).
+//!
+//! [`CostModel::ce_eff`]: super::cost::CostModel::ce_eff
+//! [`CostModel::nic_eff`]: super::cost::CostModel::nic_eff
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use super::cost::CostParams;
+
+/// The learnable subset of the hardware constants: the fractions and
+/// startup terms the calibrator refines from observed wall times, plus
+/// the per-op command-list boundary (the third learned quantity — the
+/// calibrator nudges it toward the observed immediate-vs-standard
+/// crossover the way `Adaptive` learns the cutover).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LearnedParams {
+    /// Live value of `ce.single_engine_frac` (sustained single-blitter
+    /// rate as a fraction of the path roofline).
+    pub single_engine_frac: f64,
+    /// Live value of `ce.startup_immediate_ns`.
+    pub startup_immediate_ns: f64,
+    /// Live value of `ce.startup_standard_ns`.
+    pub startup_standard_ns: f64,
+    /// Live value of `nic.rail_bw_frac` (sustained per-rail injection as
+    /// a fraction of nominal NIC bandwidth).
+    pub rail_bw_frac: f64,
+    /// Live value of `nic.rail_startup_ns` (per-chunk rail injection
+    /// startup).
+    pub rail_startup_ns: f64,
+    /// Live per-op command-list boundary (`cl_immediate_max_bytes`):
+    /// descriptors at or below run immediate lists. Seeded to
+    /// `usize::MAX` for cost models built without a machine config;
+    /// `Ishmem::new` re-seeds it from `IshmemConfig`.
+    pub cl_immediate_max_bytes: usize,
+}
+
+impl LearnedParams {
+    /// Extract the learnable constants from the configured params
+    /// (bit-for-bit — no arithmetic on the way in or out).
+    pub fn from_cost(params: &CostParams) -> Self {
+        LearnedParams {
+            single_engine_frac: params.ce.single_engine_frac,
+            startup_immediate_ns: params.ce.startup_immediate_ns,
+            startup_standard_ns: params.ce.startup_standard_ns,
+            rail_bw_frac: params.nic.rail_bw_frac,
+            rail_startup_ns: params.nic.rail_startup_ns,
+            cl_immediate_max_bytes: usize::MAX,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// The configured seed — the calibrator's clamp anchor
+    /// (`calib.clamp_frac` bounds how far live values may drift from it).
+    seed: LearnedParams,
+    /// The live values every estimate reads.
+    live: LearnedParams,
+}
+
+/// Mutable, versioned store of [`LearnedParams`], shared machine-wide via
+/// the `CostModel`. Reads are a cheap copy under an uncontended RwLock;
+/// writes go through [`Self::update`], which bumps the version counter
+/// *only* when a value actually changed — the version is the staleness
+/// token plans and adaptive cells carry.
+#[derive(Debug)]
+pub struct ModelParams {
+    inner: RwLock<Inner>,
+    version: AtomicU64,
+}
+
+impl ModelParams {
+    /// Seed the store from the configured cost params (version 0; live ==
+    /// seed bit-for-bit).
+    pub fn new(params: &CostParams) -> Self {
+        let seed = LearnedParams::from_cost(params);
+        ModelParams {
+            inner: RwLock::new(Inner { seed, live: seed }),
+            version: AtomicU64::new(0),
+        }
+    }
+
+    /// The live learned values (what every estimate uses).
+    pub fn get(&self) -> LearnedParams {
+        self.inner.read().unwrap().live
+    }
+
+    /// The configured seed values (the calibrator's clamp anchor).
+    pub fn seed(&self) -> LearnedParams {
+        self.inner.read().unwrap().seed
+    }
+
+    /// Current model version. 0 = never recalibrated (pure config).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Apply a calibration update. The version bumps once per call *iff*
+    /// any live value changed; a no-op closure leaves the version (and
+    /// therefore every stamped plan and adaptive cell) untouched.
+    /// Returns the version after the call.
+    pub fn update(&self, f: impl FnOnce(&mut LearnedParams)) -> u64 {
+        let mut inner = self.inner.write().unwrap();
+        let before = inner.live;
+        f(&mut inner.live);
+        if inner.live != before {
+            self.version.fetch_add(1, Ordering::AcqRel) + 1
+        } else {
+            self.version.load(Ordering::Acquire)
+        }
+    }
+
+    /// Re-seed the per-op CL boundary at machine construction (this is
+    /// configuration, not a calibration event: seed *and* live move, the
+    /// version does not).
+    pub fn seed_cl_boundary(&self, bytes: usize) {
+        let mut inner = self.inner.write().unwrap();
+        inner.seed.cl_immediate_max_bytes = bytes;
+        inner.live.cl_immediate_max_bytes = bytes;
+    }
+
+    /// Discard everything learned: live returns to the seed. Bumps the
+    /// version iff anything had been learned (so dependent state ages out
+    /// exactly once).
+    pub fn reset(&self) -> u64 {
+        let mut inner = self.inner.write().unwrap();
+        if inner.live != inner.seed {
+            inner.live = inner.seed;
+            self.version.fetch_add(1, Ordering::AcqRel) + 1
+        } else {
+            self.version.load(Ordering::Acquire)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_bit_for_bit_from_cost_params() {
+        let p = CostParams::default();
+        let m = ModelParams::new(&p);
+        let l = m.get();
+        assert_eq!(l.single_engine_frac.to_bits(), p.ce.single_engine_frac.to_bits());
+        assert_eq!(l.startup_immediate_ns.to_bits(), p.ce.startup_immediate_ns.to_bits());
+        assert_eq!(l.startup_standard_ns.to_bits(), p.ce.startup_standard_ns.to_bits());
+        assert_eq!(l.rail_bw_frac.to_bits(), p.nic.rail_bw_frac.to_bits());
+        assert_eq!(l.rail_startup_ns.to_bits(), p.nic.rail_startup_ns.to_bits());
+        assert_eq!(l.cl_immediate_max_bytes, usize::MAX);
+        assert_eq!(m.version(), 0);
+        assert_eq!(m.get(), m.seed());
+    }
+
+    #[test]
+    fn update_bumps_version_only_on_real_change() {
+        let m = ModelParams::new(&CostParams::default());
+        // A no-op update never bumps.
+        assert_eq!(m.update(|_| {}), 0);
+        // Writing the identical value never bumps.
+        let frac = m.get().single_engine_frac;
+        assert_eq!(m.update(|l| l.single_engine_frac = frac), 0);
+        // A real change bumps exactly once.
+        assert_eq!(m.update(|l| l.single_engine_frac = 0.5), 1);
+        assert_eq!(m.get().single_engine_frac, 0.5);
+        assert_eq!(m.version(), 1);
+        // The seed is untouched by updates.
+        assert_eq!(m.seed().single_engine_frac, CostParams::default().ce.single_engine_frac);
+    }
+
+    #[test]
+    fn seed_cl_boundary_moves_seed_and_live_without_versioning() {
+        let m = ModelParams::new(&CostParams::default());
+        m.seed_cl_boundary(64 << 10);
+        assert_eq!(m.get().cl_immediate_max_bytes, 64 << 10);
+        assert_eq!(m.seed().cl_immediate_max_bytes, 64 << 10);
+        assert_eq!(m.version(), 0);
+    }
+
+    #[test]
+    fn reset_returns_to_seed_and_bumps_once() {
+        let m = ModelParams::new(&CostParams::default());
+        assert_eq!(m.reset(), 0, "resetting a pristine store must not bump");
+        m.update(|l| {
+            l.rail_bw_frac = 0.5;
+            l.rail_startup_ns = 900.0;
+        });
+        assert_eq!(m.version(), 1);
+        let v = m.reset();
+        assert_eq!(v, 2);
+        assert_eq!(m.get(), m.seed());
+        assert_eq!(m.reset(), 2, "second reset is a no-op");
+    }
+}

@@ -15,6 +15,12 @@
 //! `quiet`), so the planner can fold the node's remote backlog into its
 //! NIC estimate and executors can place new chunks on the least-loaded
 //! rails.
+//!
+//! The rail *count* here is structural (one slot per physical NIC rail);
+//! the sustained per-rail rate the backlog drains at is the learnable
+//! `nic.rail_bw_frac`, read live through [`super::cost::CostModel::nic_eff`]
+//! — a calibration update re-prices every drain estimate without touching
+//! this state.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -88,6 +88,12 @@ struct CellState {
     ema_ns: [f64; 2],
     /// Observation count per path.
     samples: [u64; 2],
+    /// `ModelParams` version this cell's seed (and every observation
+    /// since) was taken under. A recalibration bumps the live version, so
+    /// the next decision on a stale cell re-seeds it from the *current*
+    /// model estimates instead of trusting EMAs learned against the old
+    /// hardware model — the ROADMAP's "age out stale cells" item.
+    model_version: u64,
 }
 
 fn path_index(path: Path) -> usize {
@@ -116,6 +122,8 @@ pub struct AdaptiveCell {
     pub ema_copy_engine_ns: f64,
     pub samples_loadstore: u64,
     pub samples_copy_engine: u64,
+    /// `ModelParams` version the cell was seeded under (staleness token).
+    pub model_version: u64,
 }
 
 impl AdaptiveCell {
@@ -161,13 +169,35 @@ impl AdaptiveTable {
     /// ε-exploration enabled, an occasional decision deliberately takes
     /// the losing path (its observation then refreshes that path's EMA —
     /// how a poisoned seed recovers).
-    pub fn decide(&self, key: BucketKey, seed_loadstore_ns: f64, seed_copy_engine_ns: f64) -> Path {
+    ///
+    /// `model_version` is the live `ModelParams` version the seeds were
+    /// computed under: a cell seeded under an older version is **stale**
+    /// (its EMAs mix observations priced against a hardware model that no
+    /// longer exists) and is re-seeded from the fresh estimates before
+    /// deciding — recalibration ages the learned table out cell-by-cell
+    /// as traffic touches it. Callers without a versioned model pass 0
+    /// (the never-recalibrated version).
+    pub fn decide(
+        &self,
+        key: BucketKey,
+        seed_loadstore_ns: f64,
+        seed_copy_engine_ns: f64,
+        model_version: u64,
+    ) -> Path {
         let greedy = {
             let mut cells = self.cells.lock().unwrap();
             let cell = cells.entry(key).or_insert(CellState {
                 ema_ns: [seed_loadstore_ns, seed_copy_engine_ns],
                 samples: [0, 0],
+                model_version,
             });
+            if cell.model_version != model_version {
+                *cell = CellState {
+                    ema_ns: [seed_loadstore_ns, seed_copy_engine_ns],
+                    samples: [0, 0],
+                    model_version,
+                };
+            }
             argmin_path(cell.ema_ns[0], cell.ema_ns[1])
         };
         if self.eps > 0.0 && self.rng.lock().unwrap().f64() < self.eps {
@@ -182,9 +212,17 @@ impl AdaptiveTable {
     /// Feed back the observed (modeled) cost of an executed transfer.
     /// Returns whether a cell was actually refined (observations for
     /// never-decided cells are dropped — there is no seed to refine).
-    pub fn observe(&self, key: BucketKey, path: Path, observed_ns: f64) -> bool {
+    ///
+    /// `model_version` is the version the *plan* was priced under
+    /// (`TransferPlan::model_version`): an observation from a plan issued
+    /// before a recalibration must not pollute a cell that has since been
+    /// re-seeded for the new model — it is dropped instead.
+    pub fn observe(&self, key: BucketKey, path: Path, observed_ns: f64, model_version: u64) -> bool {
         let mut cells = self.cells.lock().unwrap();
         if let Some(cell) = cells.get_mut(&key) {
+            if cell.model_version != model_version {
+                return false;
+            }
             let i = path_index(path);
             cell.ema_ns[i] = (1.0 - self.alpha) * cell.ema_ns[i] + self.alpha * observed_ns;
             cell.samples[i] += 1;
@@ -221,6 +259,7 @@ impl AdaptiveTable {
                 ema_copy_engine_ns: c.ema_ns[1],
                 samples_loadstore: c.samples[0],
                 samples_copy_engine: c.samples[1],
+                model_version: c.model_version,
             })
             .collect();
         v.sort_by_key(|c| {
@@ -248,6 +287,7 @@ impl AdaptiveTable {
                 CellState {
                     ema_ns: [c.ema_loadstore_ns, c.ema_copy_engine_ns],
                     samples: [c.samples_loadstore, c.samples_copy_engine],
+                    model_version: c.model_version,
                 },
             );
         }
@@ -273,21 +313,21 @@ mod tests {
         let t = AdaptiveTable::new(0.5);
         let k = BucketKey::p2p(Locality::SameNode, 4096, 16);
         // Seed says load/store is cheaper.
-        assert_eq!(t.decide(k, 100.0, 200.0), Path::LoadStore);
+        assert_eq!(t.decide(k, 100.0, 200.0, 0), Path::LoadStore);
         // Observations say the store path is actually much slower.
         for _ in 0..16 {
-            t.observe(k, Path::LoadStore, 1000.0);
+            t.observe(k, Path::LoadStore, 1000.0, 0);
         }
         assert_eq!(t.peek(k), Some(Path::CopyEngine));
         // Re-seeding an existing cell does not reset what was learned.
-        assert_eq!(t.decide(k, 100.0, 200.0), Path::CopyEngine);
+        assert_eq!(t.decide(k, 100.0, 200.0, 0), Path::CopyEngine);
     }
 
     #[test]
     fn observe_without_cell_is_noop() {
         let t = AdaptiveTable::new(0.25);
         let k = BucketKey::p2p(Locality::SameGpu, 64, 1);
-        assert!(!t.observe(k, Path::CopyEngine, 5.0));
+        assert!(!t.observe(k, Path::CopyEngine, 5.0, 0));
         assert_eq!(t.peek(k), None);
         assert!(t.is_empty());
     }
@@ -298,7 +338,7 @@ mod tests {
         let k = BucketKey::p2p(Locality::SameNode, 4096, 1);
         let mut explored = 0;
         for _ in 0..200 {
-            if t.decide(k, 100.0, 200.0) == Path::CopyEngine {
+            if t.decide(k, 100.0, 200.0, 0) == Path::CopyEngine {
                 explored += 1;
             }
         }
@@ -306,7 +346,7 @@ mod tests {
         assert!(explored > 20 && explored < 90, "explored {explored}/200");
         // Greedy tables never deviate.
         let g = AdaptiveTable::new(0.5);
-        assert!((0..200).all(|_| g.decide(k, 100.0, 200.0) == Path::LoadStore));
+        assert!((0..200).all(|_| g.decide(k, 100.0, 200.0, 0) == Path::LoadStore));
     }
 
     #[test]
@@ -316,22 +356,46 @@ mod tests {
         assert_ne!(r1, r4);
         assert_eq!(r1, BucketKey::p2p(Locality::Remote, 1 << 20, 1));
         let t = AdaptiveTable::new(0.5);
-        t.decide(r1, 100.0, 200.0);
-        t.decide(r4, 100.0, 200.0);
+        t.decide(r1, 100.0, 200.0, 0);
+        t.decide(r4, 100.0, 200.0, 0);
         for _ in 0..16 {
-            assert!(t.observe(r4, Path::LoadStore, 10_000.0));
+            assert!(t.observe(r4, Path::LoadStore, 10_000.0, 0));
         }
         assert_eq!(t.peek(r1), Some(Path::LoadStore));
         assert_eq!(t.peek(r4), Some(Path::CopyEngine));
     }
 
     #[test]
+    fn recalibration_reseeds_stale_cells_on_next_touch() {
+        let t = AdaptiveTable::new(0.5);
+        let k = BucketKey::p2p(Locality::SameNode, 4096, 16);
+        // Learn something under model version 0 that flips the seed.
+        assert_eq!(t.decide(k, 100.0, 200.0, 0), Path::LoadStore);
+        for _ in 0..16 {
+            t.observe(k, Path::LoadStore, 1000.0, 0);
+        }
+        assert_eq!(t.peek(k), Some(Path::CopyEngine));
+        // Same version: the learned state stands.
+        assert_eq!(t.decide(k, 100.0, 200.0, 0), Path::CopyEngine);
+        // A recalibrated model (version 3) ages the cell out: fresh seeds
+        // win, samples reset, and the cell carries the new version.
+        assert_eq!(t.decide(k, 100.0, 200.0, 3), Path::LoadStore);
+        let c = t.snapshot()[0];
+        assert_eq!(c.model_version, 3);
+        assert_eq!((c.samples_loadstore, c.samples_copy_engine), (0, 0));
+        assert_eq!(c.ema_loadstore_ns, 100.0);
+        // Untouched keys under the new version seed normally.
+        let k2 = BucketKey::p2p(Locality::SameNode, 8192, 16);
+        assert_eq!(t.decide(k2, 300.0, 200.0, 3), Path::CopyEngine);
+    }
+
+    #[test]
     fn loaded_cells_replace_and_decide_like_the_saver() {
         let a = AdaptiveTable::new(0.5);
         let k = BucketKey::p2p(Locality::SameNode, 4096, 16);
-        a.decide(k, 100.0, 200.0);
+        a.decide(k, 100.0, 200.0, 0);
         for _ in 0..8 {
-            a.observe(k, Path::LoadStore, 1000.0);
+            a.observe(k, Path::LoadStore, 1000.0, 0);
         }
         let cells = a.snapshot();
         let b = AdaptiveTable::new(0.5);
@@ -354,11 +418,11 @@ mod tests {
         assert_ne!(fan2, fan12);
         // A huge whole-push observation on the wide fan-out must not
         // flip the narrow fan-out's (or the p2p) decision.
-        t.decide(p2p, 100.0, 200.0);
-        t.decide(fan2, 100.0, 200.0);
-        t.decide(fan12, 100.0, 200.0);
+        t.decide(p2p, 100.0, 200.0, 0);
+        t.decide(fan2, 100.0, 200.0, 0);
+        t.decide(fan12, 100.0, 200.0, 0);
         for _ in 0..16 {
-            assert!(t.observe(fan12, Path::LoadStore, 10_000.0));
+            assert!(t.observe(fan12, Path::LoadStore, 10_000.0, 0));
         }
         assert_eq!(t.peek(p2p), Some(Path::LoadStore));
         assert_eq!(t.peek(fan2), Some(Path::LoadStore));

@@ -1,0 +1,978 @@
+//! Closed-loop cost-model calibration (ISSUE 5).
+//!
+//! The planner scores candidate paths against hardware constants that are
+//! config defaults, not measured silicon — and PR 4's wall-vs-model
+//! ledgers measure exactly how wrong they are, per (path, size-class).
+//! The [`Calibrator`] closes that loop: it consumes the proxy's
+//! per-(path, lane, size-class) wall-time observations, *inverts* the
+//! cost-model formula on each observation to get the implied value of a
+//! learnable constant, EMA-refines the implication streams, and writes
+//! refined values into the shared [`ModelParams`] store — so the stripe
+//! planner, the rail planner, and the per-op CL policy all re-score
+//! against observed hardware behavior instead of config defaults.
+//!
+//! ## Observation → parameter attribution
+//!
+//! Observations arrive at *chunk* granularity (one command-list dispatch
+//! on one engine, or one RDMA injection on one rail), so every
+//! observation is a width-1 sample — the cleanest thing to invert:
+//!
+//! * **small classes** (≤ 64 KiB, where `T ≈ startup`): solve
+//!   `startup = T − bytes / lane_bw` for the startup term of the
+//!   observed flavor (`startup_immediate_ns` / `startup_standard_ns` /
+//!   `rail_startup_ns`);
+//! * **large classes** (> 256 KiB, where `T ≈ bytes / lane_bw`): solve
+//!   `frac = bytes / ((T − startup) · roofline)` for the bandwidth
+//!   fraction (`single_engine_frac` / `rail_bw_frac`);
+//! * the **middle class** feeds only the residual ledgers (its signal is
+//!   ambiguous between the two terms).
+//!
+//! The two inversions use each other's current learned value, so they
+//! converge jointly (the startup bias shrinks as the fraction converges
+//! and vice versa — property-tested against planted ground truth).
+//!
+//! The **CL boundary** is the third learned quantity: per size class the
+//! calibrator tracks the observed per-byte cost of immediate-flagged vs
+//! standard-flagged engine dispatches, estimates the crossover class
+//! where standard starts winning, and nudges `cl_immediate_max_bytes`
+//! toward that boundary — mirroring how `Adaptive` learns the cutover.
+//!
+//! ## Safety rails
+//!
+//! * `calib.enable = false` (the default) makes every observation a no-op:
+//!   [`ModelParams`] never moves, its version stays 0, and all plan
+//!   estimates are bit-identical to the pre-calibration code (tested in
+//!   `sim::cost` and here).
+//! * `calib.min_samples` gates the first apply of each quantity.
+//! * `calib.clamp_frac` bounds the multiplicative drift of every learned
+//!   value from its configured seed (wall clocks on a foreign substrate
+//!   can be wildly off; the clamp keeps a garbage stream from driving the
+//!   model into nonsense). Fractions are additionally capped at 1.0.
+//! * Updates apply only when the learned value moved ≥ 1% from the live
+//!   value, so the `ModelParams` version — the staleness token plans and
+//!   adaptive cells carry — bumps on *material* recalibrations, not on
+//!   every EMA tick.
+//!
+//! Size classes are the **shared** service-delta classes
+//! ([`SERVICE_SIZE_BOUNDS`]) — the calibrator's buckets and the
+//! `figure service-delta` rows can never drift apart.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::{
+    service_size_bucket, service_size_label, SERVICE_SIZE_BOUNDS, SERVICE_SIZE_BUCKETS,
+};
+use crate::sim::topology::Locality;
+use crate::sim::CostModel;
+use crate::util::json::Json;
+
+/// Calibration knobs (`IshmemConfig::calib`).
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    /// Master switch. Off (the default) = today's behavior bit-for-bit:
+    /// observations are dropped and `ModelParams` never moves.
+    pub enable: bool,
+    /// EMA weight of one implied-value observation (0 < α ≤ 1).
+    pub ema_alpha: f64,
+    /// Observations a quantity needs before its first apply.
+    pub min_samples: u64,
+    /// Maximum multiplicative drift of a learned value from its
+    /// configured seed: live ∈ [seed / clamp, seed · clamp] (≥ 1).
+    pub clamp_frac: f64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig {
+            enable: false,
+            ema_alpha: 0.25,
+            min_samples: 32,
+            clamp_frac: 4.0,
+        }
+    }
+}
+
+/// Learned-quantity slots.
+const Q_ENGINE_FRAC: usize = 0;
+const Q_STARTUP_IMM: usize = 1;
+const Q_STARTUP_STD: usize = 2;
+const Q_RAIL_FRAC: usize = 3;
+const Q_RAIL_STARTUP: usize = 4;
+const Q_CL_BOUNDARY: usize = 5;
+const QUANTITIES: usize = 6;
+
+const QUANTITY_NAMES: [&str; QUANTITIES] = [
+    "ce.single_engine_frac",
+    "ce.startup_immediate_ns",
+    "ce.startup_standard_ns",
+    "nic.rail_bw_frac",
+    "nic.rail_startup_ns",
+    "cl_immediate_max_bytes",
+];
+
+/// Residual-ledger rows: the lane flavors whose predictions differ.
+const PATH_ENGINE_IMM: usize = 0;
+const PATH_ENGINE_STD: usize = 1;
+const PATH_RAIL: usize = 2;
+const CALIB_PATHS: usize = 3;
+const PATH_NAMES: [&str; CALIB_PATHS] = ["engine-imm", "engine-std", "rail"];
+
+/// Classes at or below this index (≤ 64 KiB) refine startup terms.
+const STARTUP_CLASS_MAX: usize = 1;
+/// Classes at or above this index (> 256 KiB) refine bandwidth fractions.
+const FRAC_CLASS_MIN: usize = 3;
+/// Minimum relative move of a learned value before it applies to
+/// `ModelParams` (keeps the version counter on material changes).
+const APPLY_REL_EPS: f64 = 0.01;
+
+/// EMA of a stream of implied parameter values.
+#[derive(Clone, Copy, Debug, Default)]
+struct Learn {
+    ema: f64,
+    samples: u64,
+}
+
+impl Learn {
+    fn push(&mut self, alpha: f64, v: f64) {
+        if self.samples == 0 {
+            self.ema = v;
+        } else {
+            self.ema = (1.0 - alpha) * self.ema + alpha * v;
+        }
+        self.samples += 1;
+    }
+}
+
+/// Per-(path, size-class) observation ledger (the calibration twin of the
+/// metrics service-delta tables — same class geometry by construction).
+#[derive(Clone, Copy, Debug, Default)]
+struct ClassLedger {
+    samples: u64,
+    wall_ns: f64,
+    bytes: u64,
+}
+
+#[derive(Debug, Default)]
+struct CalibState {
+    learn: [Learn; QUANTITIES],
+    ledger: [[ClassLedger; SERVICE_SIZE_BUCKETS]; CALIB_PATHS],
+    /// Observed per-byte cost EMA per (CL flavor, class): the crossover
+    /// evidence for the learned CL boundary. [0] = immediate, [1] =
+    /// standard.
+    cl_cost: [[Learn; SERVICE_SIZE_BUCKETS]; 2],
+    /// Observations since the last apply attempt — the apply pass (six
+    /// clamp/target computations + two ModelParams reads) runs once per
+    /// `min_samples` observations, not per serviced descriptor.
+    obs_since_apply: u64,
+    /// `refine_cl_boundary` calls since the last boundary nudge — the
+    /// proxy invokes it once per serviced batch, but the nudge (and its
+    /// apply pass) runs once per `min_samples` calls so boundary motion
+    /// paces with evidence, not doorbell frequency.
+    cl_refine_ticks: u64,
+}
+
+/// The closed-loop calibrator: proxy observations in, refined
+/// [`ModelParams`] out. One per machine, shared with the proxy threads.
+#[derive(Debug)]
+pub struct Calibrator {
+    cost: Arc<CostModel>,
+    cfg: CalibConfig,
+    state: Mutex<CalibState>,
+}
+
+impl Calibrator {
+    pub fn new(cost: Arc<CostModel>, cfg: CalibConfig) -> Self {
+        Calibrator {
+            cost,
+            cfg,
+            state: Mutex::new(CalibState::default()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enable
+    }
+
+    pub fn config(&self) -> &CalibConfig {
+        &self.cfg
+    }
+
+    // ------------------------------------------------------ observations --
+
+    /// One observed intra-node engine dispatch: `bytes` moved on one
+    /// engine lane under the given CL flavor in `wall_ns` wall-clock
+    /// nanoseconds (the proxy tags each serviced entry / staged-list
+    /// execute with its lane and elapsed time).
+    pub fn observe_engine(&self, loc: Locality, bytes: usize, immediate_cl: bool, wall_ns: f64) {
+        if !self.cfg.enable || bytes == 0 || !(wall_ns > 0.0) || loc == Locality::Remote {
+            return;
+        }
+        let roofline = self.cost.params.ce.path_bw_gbs(&self.cost.params.xe, loc);
+        if roofline <= 0.0 {
+            return;
+        }
+        let live = self.cost.model.get();
+        let class = service_size_bucket(bytes as u64);
+        let alpha = self.cfg.ema_alpha;
+        let do_apply = {
+            let mut st = self.state.lock().unwrap();
+            let row = if immediate_cl { PATH_ENGINE_IMM } else { PATH_ENGINE_STD };
+            let l = &mut st.ledger[row][class];
+            l.samples += 1;
+            l.wall_ns += wall_ns;
+            l.bytes += bytes as u64;
+            let lane_bw = roofline * live.single_engine_frac.clamp(0.01, 1.0);
+            if class <= STARTUP_CLASS_MAX {
+                // T ≈ startup + bytes/lane_bw ⇒ startup = T − data term.
+                let implied = wall_ns - bytes as f64 / lane_bw;
+                if implied > 0.0 {
+                    let q = if immediate_cl { Q_STARTUP_IMM } else { Q_STARTUP_STD };
+                    st.learn[q].push(alpha, implied);
+                }
+            } else if class >= FRAC_CLASS_MIN {
+                // T ≈ startup + bytes/(frac·roofline) ⇒ solve for frac.
+                let startup = if immediate_cl {
+                    live.startup_immediate_ns
+                } else {
+                    live.startup_standard_ns
+                };
+                let data_ns = wall_ns - startup;
+                if data_ns > 0.0 {
+                    let implied = (bytes as f64 / (data_ns * roofline)).clamp(1e-3, 1.0);
+                    st.learn[Q_ENGINE_FRAC].push(alpha, implied);
+                }
+            }
+            self.tick_apply(&mut st)
+        };
+        if do_apply {
+            self.maybe_apply();
+        }
+    }
+
+    /// One *comparable* CL-flavor cost observation for the learned
+    /// boundary: `chunk_bytes` is the per-descriptor payload size the
+    /// boundary decision applies to, `per_byte_ns` the **total** per-byte
+    /// cost of serving it under that flavor — for standard lists the
+    /// caller must fold the append cost in with the amortized execute
+    /// (append + execute over the list's bytes), for immediate lists the
+    /// inline service time. This is deliberately separate from
+    /// [`Self::observe_engine`]: the lane learners want pure engine time
+    /// (a staged list's append is not engine time), but comparing flavors
+    /// on engine time alone would make standard lists look cheaper than
+    /// they are and drive the boundary toward zero.
+    pub fn observe_cl_flavor(&self, chunk_bytes: usize, immediate_cl: bool, per_byte_ns: f64) {
+        if !self.cfg.enable || chunk_bytes == 0 || !(per_byte_ns > 0.0) {
+            return;
+        }
+        let class = service_size_bucket(chunk_bytes as u64);
+        let mut st = self.state.lock().unwrap();
+        st.cl_cost[if immediate_cl { 0 } else { 1 }][class].push(self.cfg.ema_alpha, per_byte_ns);
+    }
+
+    /// One observed inter-node rail injection: `bytes` on one NIC rail in
+    /// `wall_ns` wall-clock nanoseconds.
+    pub fn observe_rail(&self, bytes: usize, wall_ns: f64) {
+        if !self.cfg.enable || bytes == 0 || !(wall_ns > 0.0) {
+            return;
+        }
+        let roofline = self.cost.params.nic.bw_gbs;
+        if roofline <= 0.0 {
+            return;
+        }
+        let live = self.cost.model.get();
+        let class = service_size_bucket(bytes as u64);
+        let alpha = self.cfg.ema_alpha;
+        let do_apply = {
+            let mut st = self.state.lock().unwrap();
+            let l = &mut st.ledger[PATH_RAIL][class];
+            l.samples += 1;
+            l.wall_ns += wall_ns;
+            l.bytes += bytes as u64;
+            let lane_bw = roofline * live.rail_bw_frac.clamp(0.01, 1.0);
+            if class <= STARTUP_CLASS_MAX {
+                let implied = wall_ns - bytes as f64 / lane_bw;
+                if implied > 0.0 {
+                    st.learn[Q_RAIL_STARTUP].push(alpha, implied);
+                }
+            } else if class >= FRAC_CLASS_MIN {
+                let data_ns = wall_ns - live.rail_startup_ns;
+                if data_ns > 0.0 {
+                    let implied = (bytes as f64 / (data_ns * roofline)).clamp(1e-3, 1.0);
+                    st.learn[Q_RAIL_FRAC].push(alpha, implied);
+                }
+            }
+            self.tick_apply(&mut st)
+        };
+        if do_apply {
+            self.maybe_apply();
+        }
+    }
+
+    /// Count one observation toward the periodic apply pass; returns true
+    /// once per `min_samples` observations.
+    fn tick_apply(&self, st: &mut CalibState) -> bool {
+        st.obs_since_apply += 1;
+        if st.obs_since_apply >= self.cfg.min_samples.max(1) {
+            st.obs_since_apply = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    // ------------------------------------------------------------ apply --
+
+    /// Push sufficiently-sampled learned values into the shared
+    /// `ModelParams`, clamped around the configured seed; the store bumps
+    /// its version (aging out plans and adaptive cells) only when a value
+    /// moved materially.
+    fn maybe_apply(&self) {
+        let seed = self.cost.model.seed();
+        let live = self.cost.model.get();
+        let mut target = live;
+        {
+            let st = self.state.lock().unwrap();
+            let clamp = |seed_v: f64, v: f64| {
+                v.clamp(seed_v / self.cfg.clamp_frac, seed_v * self.cfg.clamp_frac)
+            };
+            let ready = |q: usize| st.learn[q].samples >= self.cfg.min_samples;
+            if ready(Q_ENGINE_FRAC) {
+                target.single_engine_frac =
+                    clamp(seed.single_engine_frac, st.learn[Q_ENGINE_FRAC].ema).min(1.0);
+            }
+            if ready(Q_STARTUP_IMM) {
+                target.startup_immediate_ns =
+                    clamp(seed.startup_immediate_ns, st.learn[Q_STARTUP_IMM].ema);
+            }
+            if ready(Q_STARTUP_STD) {
+                target.startup_standard_ns =
+                    clamp(seed.startup_standard_ns, st.learn[Q_STARTUP_STD].ema);
+            }
+            if ready(Q_RAIL_FRAC) {
+                target.rail_bw_frac =
+                    clamp(seed.rail_bw_frac, st.learn[Q_RAIL_FRAC].ema).min(1.0);
+            }
+            if ready(Q_RAIL_STARTUP) {
+                target.rail_startup_ns =
+                    clamp(seed.rail_startup_ns, st.learn[Q_RAIL_STARTUP].ema);
+            }
+            // The boundary learner is gated upstream (per-flavor-class
+            // min_samples evidence + the refine tick pacing), so it only
+            // needs the seed push plus one nudge here — re-gating it at
+            // min_samples would starve it under the paced nudges.
+            if st.learn[Q_CL_BOUNDARY].samples >= 2 {
+                // The CL boundary is an integer byte count; clamp around
+                // the configured seed like every other quantity. A seed
+                // of usize::MAX (no machine config) saturates and never
+                // moves — there is nothing to learn against.
+                if seed.cl_immediate_max_bytes != usize::MAX {
+                    let s = seed.cl_immediate_max_bytes as f64;
+                    target.cl_immediate_max_bytes =
+                        clamp(s, st.learn[Q_CL_BOUNDARY].ema).round() as usize;
+                }
+            }
+        }
+        // Material-change gate: apply only fields that moved ≥ 1% — and
+        // merge them **field by field** inside the model's own write lock,
+        // never `*l = snapshot`: a wholesale overwrite would revert a
+        // concurrent proxy thread's freshly-applied field to the stale
+        // value this thread read before the lock.
+        let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-12);
+        let changed = |cur: f64, tgt: f64| -> Option<f64> {
+            (rel(cur, tgt) >= APPLY_REL_EPS).then_some(tgt)
+        };
+        let engine_frac = changed(live.single_engine_frac, target.single_engine_frac);
+        let s_imm = changed(live.startup_immediate_ns, target.startup_immediate_ns);
+        let s_std = changed(live.startup_standard_ns, target.startup_standard_ns);
+        let rail_frac = changed(live.rail_bw_frac, target.rail_bw_frac);
+        let rail_startup = changed(live.rail_startup_ns, target.rail_startup_ns);
+        let cl = (live.cl_immediate_max_bytes != target.cl_immediate_max_bytes
+            && rel(
+                live.cl_immediate_max_bytes as f64,
+                target.cl_immediate_max_bytes as f64,
+            ) >= APPLY_REL_EPS)
+            .then_some(target.cl_immediate_max_bytes);
+        if [engine_frac, s_imm, s_std, rail_frac, rail_startup].iter().any(Option::is_some)
+            || cl.is_some()
+        {
+            self.cost.model.update(|l| {
+                if let Some(v) = engine_frac {
+                    l.single_engine_frac = v;
+                }
+                if let Some(v) = s_imm {
+                    l.startup_immediate_ns = v;
+                }
+                if let Some(v) = s_std {
+                    l.startup_standard_ns = v;
+                }
+                if let Some(v) = rail_frac {
+                    l.rail_bw_frac = v;
+                }
+                if let Some(v) = rail_startup {
+                    l.rail_startup_ns = v;
+                }
+                if let Some(v) = cl {
+                    l.cl_immediate_max_bytes = v;
+                }
+            });
+        }
+    }
+
+    /// Feed the CL-boundary learner from the per-class flavor costs: the
+    /// crossover is the floor of the smallest class where the standard
+    /// flavor's observed per-byte cost is at least as cheap as the
+    /// immediate flavor's. Called from `maybe_apply` indirectly via the
+    /// crossover estimate below — exposed for the boundary nudge.
+    fn crossover_target_bytes(&self, st: &CalibState) -> Option<f64> {
+        let min = self.cfg.min_samples;
+        let mut saw_comparable = false;
+        for c in 0..SERVICE_SIZE_BUCKETS {
+            let imm = st.cl_cost[0][c];
+            let std = st.cl_cost[1][c];
+            if imm.samples < min || std.samples < min {
+                continue;
+            }
+            saw_comparable = true;
+            if std.ema <= imm.ema {
+                // Standard wins from this class up: the boundary is the
+                // class floor (its predecessor's upper bound).
+                return Some(if c == 0 {
+                    1.0
+                } else {
+                    SERVICE_SIZE_BOUNDS[c - 1] as f64
+                });
+            }
+        }
+        if saw_comparable {
+            // Immediate won every comparable class: push the boundary to
+            // the top of the classed range (the clamp still anchors it).
+            return Some(*SERVICE_SIZE_BOUNDS.last().unwrap() as f64 * 4.0);
+        }
+        // Disjoint-evidence fallback: on live traffic the boundary itself
+        // decides each entry's flavor, so no class ever accumulates both
+        // flavors — same-class comparison alone would leave the boundary
+        // structurally inert. Instead compare the *frontier*: the most
+        // expensive sampled immediate class against the cheapest sampled
+        // standard class. Immediate still cheaper per byte at its frontier
+        // ⇒ grow the immediate window one class bound; standard cheaper ⇒
+        // concede the top immediate class. The EMA nudge plus the seed
+        // clamp turn this into a bounded hill-climb.
+        let hi_imm = (0..SERVICE_SIZE_BUCKETS).rev().find(|&c| st.cl_cost[0][c].samples >= min);
+        let lo_std = (0..SERVICE_SIZE_BUCKETS).find(|&c| st.cl_cost[1][c].samples >= min);
+        match (hi_imm, lo_std) {
+            (Some(ci), Some(cs)) if ci < cs => {
+                Some(if st.cl_cost[0][ci].ema <= st.cl_cost[1][cs].ema {
+                    if cs < SERVICE_SIZE_BOUNDS.len() {
+                        SERVICE_SIZE_BOUNDS[cs] as f64
+                    } else {
+                        *SERVICE_SIZE_BOUNDS.last().unwrap() as f64 * 4.0
+                    }
+                } else if ci == 0 {
+                    1.0
+                } else {
+                    SERVICE_SIZE_BOUNDS[ci - 1] as f64
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Run one CL-boundary refinement step from the accumulated flavor
+    /// costs (the per-observation hooks feed `cl_cost`; this nudges the
+    /// learned boundary toward the estimated crossover and applies it).
+    pub fn refine_cl_boundary(&self) {
+        if !self.cfg.enable {
+            return;
+        }
+        let alpha = self.cfg.ema_alpha;
+        {
+            let mut st = self.state.lock().unwrap();
+            st.cl_refine_ticks += 1;
+            if st.cl_refine_ticks < self.cfg.min_samples.max(1) {
+                return;
+            }
+            st.cl_refine_ticks = 0;
+            let Some(target) = self.crossover_target_bytes(&st) else {
+                return;
+            };
+            let seeded = st.learn[Q_CL_BOUNDARY].samples > 0;
+            if !seeded {
+                // Start the nudge from the currently-configured boundary,
+                // not from zero.
+                let cur = self.cost.model.get().cl_immediate_max_bytes;
+                if cur != usize::MAX {
+                    st.learn[Q_CL_BOUNDARY].push(1.0, cur as f64);
+                }
+            }
+            st.learn[Q_CL_BOUNDARY].push(alpha, target);
+        }
+        self.maybe_apply();
+    }
+
+    // -------------------------------------------------------- prediction --
+
+    /// Current-model prediction of one engine-lane dispatch (what the
+    /// residual ledgers compare observed wall times against).
+    pub fn predict_engine_ns(&self, loc: Locality, bytes: usize, immediate_cl: bool) -> f64 {
+        let live = self.cost.model.get();
+        let roofline = self.cost.params.ce.path_bw_gbs(&self.cost.params.xe, loc);
+        let startup = if immediate_cl {
+            live.startup_immediate_ns
+        } else {
+            live.startup_standard_ns
+        };
+        startup + bytes as f64 / (roofline * live.single_engine_frac.clamp(0.01, 1.0))
+    }
+
+    /// Current-model prediction of one rail injection.
+    pub fn predict_rail_ns(&self, bytes: usize) -> f64 {
+        let live = self.cost.model.get();
+        live.rail_startup_ns
+            + bytes as f64 / (self.cost.params.nic.bw_gbs * live.rail_bw_frac.clamp(0.01, 1.0))
+    }
+
+    // ---------------------------------------------------------- snapshot --
+
+    /// Full calibration snapshot: learned vs configured params with sample
+    /// counts, and per-(path, size-class) residuals of observed wall time
+    /// against the *current* learned model (so the residuals shrink as the
+    /// model converges — the `figure calibration` convergence signal).
+    pub fn snapshot(&self) -> CalibrationSnapshot {
+        let st = self.state.lock().unwrap();
+        let seed = self.cost.model.seed();
+        let live = self.cost.model.get();
+        let seed_vals = [
+            seed.single_engine_frac,
+            seed.startup_immediate_ns,
+            seed.startup_standard_ns,
+            seed.rail_bw_frac,
+            seed.rail_startup_ns,
+            seed.cl_immediate_max_bytes as f64,
+        ];
+        let live_vals = [
+            live.single_engine_frac,
+            live.startup_immediate_ns,
+            live.startup_standard_ns,
+            live.rail_bw_frac,
+            live.rail_startup_ns,
+            live.cl_immediate_max_bytes as f64,
+        ];
+        let params = (0..QUANTITIES)
+            .map(|q| ParamRow {
+                name: QUANTITY_NAMES[q],
+                configured: seed_vals[q],
+                learned: live_vals[q],
+                samples: st.learn[q].samples,
+            })
+            .collect();
+        let mut classes = Vec::new();
+        for (p, row) in st.ledger.iter().enumerate() {
+            for (c, l) in row.iter().enumerate() {
+                if l.samples == 0 {
+                    continue;
+                }
+                let mean_bytes = (l.bytes / l.samples) as usize;
+                let mean_wall = l.wall_ns / l.samples as f64;
+                // Engine residuals are priced at the SameNode roofline —
+                // the locality where the cutover decision lives; the
+                // synthetic calibration sweep feeds SameNode observations
+                // so its residuals are exact.
+                let predicted = match p {
+                    PATH_ENGINE_IMM => self.predict_engine_ns(Locality::SameNode, mean_bytes, true),
+                    PATH_ENGINE_STD => {
+                        self.predict_engine_ns(Locality::SameNode, mean_bytes, false)
+                    }
+                    _ => self.predict_rail_ns(mean_bytes),
+                };
+                classes.push(ClassRow {
+                    path: PATH_NAMES[p],
+                    class: service_size_label(c),
+                    samples: l.samples,
+                    mean_wall_ns: mean_wall,
+                    predicted_ns: predicted,
+                    residual: (mean_wall - predicted).abs() / mean_wall.abs().max(1e-12),
+                });
+            }
+        }
+        CalibrationSnapshot {
+            enabled: self.cfg.enable,
+            model_version: self.cost.model.version(),
+            params,
+            classes,
+        }
+    }
+}
+
+/// One learned-quantity row of the calibration snapshot.
+#[derive(Clone, Debug)]
+pub struct ParamRow {
+    pub name: &'static str,
+    pub configured: f64,
+    pub learned: f64,
+    /// Implied-value observations this quantity has absorbed.
+    pub samples: u64,
+}
+
+/// One (path, size-class) residual row of the calibration snapshot.
+#[derive(Clone, Debug)]
+pub struct ClassRow {
+    pub path: &'static str,
+    pub class: &'static str,
+    pub samples: u64,
+    pub mean_wall_ns: f64,
+    pub predicted_ns: f64,
+    /// |observed − predicted| / observed at the current learned params.
+    pub residual: f64,
+}
+
+/// Snapshot of the calibration state: learned vs configured params and
+/// per-class residuals (report + `rishmem metrics --json`).
+#[derive(Clone, Debug)]
+pub struct CalibrationSnapshot {
+    pub enabled: bool,
+    pub model_version: u64,
+    pub params: Vec<ParamRow>,
+    pub classes: Vec<ClassRow>,
+}
+
+impl CalibrationSnapshot {
+    /// Mean residual over the populated (path, class) rows — the single
+    /// convergence number `fig_calib` tracks per round.
+    pub fn mean_residual(&self) -> f64 {
+        if self.classes.is_empty() {
+            return 0.0;
+        }
+        self.classes.iter().map(|c| c.residual).sum::<f64>() / self.classes.len() as f64
+    }
+
+    /// Human-readable report (`rishmem figure calibration` body).
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "calibration: learned vs configured params (enabled={}, model-version={})\n\
+             param                      configured    learned       samples\n",
+            self.enabled, self.model_version
+        );
+        for p in &self.params {
+            out.push_str(&format!(
+                "{:<26} {:<13.6} {:<13.6} {}\n",
+                p.name, p.configured, p.learned, p.samples
+            ));
+        }
+        out.push_str(
+            "\nper-class residual |wall - model| / wall at the learned params\n\
+             path         size       samples   mean-wall-ns   predicted-ns   residual\n",
+        );
+        for c in &self.classes {
+            out.push_str(&format!(
+                "{:<12} {:<10} {:<9} {:<14.0} {:<14.0} {:.4}\n",
+                c.path, c.class, c.samples, c.mean_wall_ns, c.predicted_ns, c.residual
+            ));
+        }
+        out.push_str(&format!("mean residual: {:.4}\n", self.mean_residual()));
+        out
+    }
+
+    /// JSON value for `rishmem metrics --json` (merged into the metrics
+    /// snapshot object under the "calibration" key).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let params = self
+            .params
+            .iter()
+            .map(|p| {
+                let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                o.insert("name".into(), Json::Str(p.name.into()));
+                o.insert("configured".into(), Json::Num(p.configured));
+                o.insert("learned".into(), Json::Num(p.learned));
+                o.insert("samples".into(), Json::Num(p.samples as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let classes = self
+            .classes
+            .iter()
+            .map(|c| {
+                let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                o.insert("path".into(), Json::Str(c.path.into()));
+                o.insert("class".into(), Json::Str(c.class.into()));
+                o.insert("samples".into(), Json::Num(c.samples as f64));
+                o.insert("mean_wall_ns".into(), Json::Num(c.mean_wall_ns));
+                o.insert("predicted_ns".into(), Json::Num(c.predicted_ns));
+                o.insert("residual".into(), Json::Num(c.residual));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top: BTreeMap<String, Json> = BTreeMap::new();
+        top.insert("enabled".into(), Json::Bool(self.enabled));
+        top.insert("model_version".into(), Json::Num(self.model_version as f64));
+        top.insert("mean_residual".into(), Json::Num(self.mean_residual()));
+        top.insert("params".into(), Json::Arr(params));
+        top.insert("classes".into(), Json::Arr(classes));
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{CostParams, Topology};
+
+    fn enabled_cfg() -> CalibConfig {
+        CalibConfig {
+            enable: true,
+            ema_alpha: 0.25,
+            min_samples: 16,
+            clamp_frac: 4.0,
+        }
+    }
+
+    fn calibrator(cfg: CalibConfig) -> Calibrator {
+        let cost = CostModel::new(Topology::default(), CostParams::default());
+        Calibrator::new(cost, cfg)
+    }
+
+    /// Ground-truth engine dispatch time under planted params.
+    fn truth_engine_ns(
+        cal: &Calibrator,
+        bytes: usize,
+        immediate: bool,
+        frac: f64,
+        s_imm: f64,
+        s_std: f64,
+    ) -> f64 {
+        let roofline = cal
+            .cost
+            .params
+            .ce
+            .path_bw_gbs(&cal.cost.params.xe, Locality::SameNode);
+        (if immediate { s_imm } else { s_std }) + bytes as f64 / (roofline * frac)
+    }
+
+    fn truth_rail_ns(cal: &Calibrator, bytes: usize, frac: f64, startup: f64) -> f64 {
+        startup + bytes as f64 / (cal.cost.params.nic.bw_gbs * frac)
+    }
+
+    /// Feed `rounds` of a consistent truth stream across the startup and
+    /// bandwidth classes.
+    fn feed_truth(cal: &Calibrator, rounds: usize, frac: f64, s_imm: f64, s_std: f64) {
+        for _ in 0..rounds {
+            for &bytes in &[2 << 10, 16 << 10, 512 << 10, 1 << 20, 4 << 20] {
+                for &imm in &[true, false] {
+                    let t = truth_engine_ns(cal, bytes, imm, frac, s_imm, s_std);
+                    cal.observe_engine(Locality::SameNode, bytes, imm, t);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn converges_to_planted_engine_ground_truth() {
+        // Acceptance bar: learned single_engine_frac lands within 10% of
+        // a planted ground truth fed through a synthetic observation
+        // stream (seed 0.25, truth 0.5 — a 2× error the clamp permits).
+        let cal = calibrator(enabled_cfg());
+        let (frac_t, s_imm_t, s_std_t) = (0.5, 4_000.0, 7_000.0);
+        feed_truth(&cal, 60, frac_t, s_imm_t, s_std_t);
+        let live = cal.cost.model.get();
+        assert!(
+            (live.single_engine_frac - frac_t).abs() / frac_t < 0.10,
+            "learned frac {} not within 10% of {frac_t}",
+            live.single_engine_frac
+        );
+        assert!(
+            (live.startup_immediate_ns - s_imm_t).abs() / s_imm_t < 0.10,
+            "learned imm startup {} not within 10% of {s_imm_t}",
+            live.startup_immediate_ns
+        );
+        assert!(
+            (live.startup_standard_ns - s_std_t).abs() / s_std_t < 0.10,
+            "learned std startup {} not within 10% of {s_std_t}",
+            live.startup_standard_ns
+        );
+        assert!(cal.cost.model.version() > 0, "convergence must bump the version");
+        // The residuals at the learned params are small.
+        assert!(cal.snapshot().mean_residual() < 0.05, "{}", cal.snapshot().report());
+    }
+
+    #[test]
+    fn converges_to_planted_rail_ground_truth() {
+        let cal = calibrator(enabled_cfg());
+        let (frac_t, startup_t) = (0.5, 900.0);
+        for _ in 0..60 {
+            for &bytes in &[2 << 10, 16 << 10, 512 << 10, 2 << 20, 8 << 20] {
+                let t = truth_rail_ns(&cal, bytes, frac_t, startup_t);
+                cal.observe_rail(bytes, t);
+            }
+        }
+        let live = cal.cost.model.get();
+        assert!(
+            (live.rail_bw_frac - frac_t).abs() / frac_t < 0.10,
+            "learned rail frac {} not within 10% of {frac_t}",
+            live.rail_bw_frac
+        );
+        assert!(
+            (live.rail_startup_ns - startup_t).abs() / startup_t < 0.10,
+            "learned rail startup {} not within 10% of {startup_t}",
+            live.rail_startup_ns
+        );
+    }
+
+    #[test]
+    fn poisoned_initial_guess_recovers() {
+        // Mirror of the PR-3 epsilon-exploration property test: a stream
+        // that starts with wildly wrong observations (implying a frac
+        // near the clamp floor) recovers once honest observations flow.
+        let cal = calibrator(enabled_cfg());
+        let truth = 0.5;
+        // Poison: large transfers reported 10× slower than even a
+        // floor-fraction engine would run.
+        for _ in 0..40 {
+            let honest = truth_engine_ns(&cal, 4 << 20, true, truth, 4_000.0, 7_000.0);
+            cal.observe_engine(Locality::SameNode, 4 << 20, true, honest * 10.0);
+        }
+        let poisoned = cal.cost.model.get().single_engine_frac;
+        assert!(poisoned < 0.1, "poison did not take: {poisoned}");
+        // Recovery: honest stream.
+        feed_truth(&cal, 80, truth, 4_000.0, 7_000.0);
+        let recovered = cal.cost.model.get().single_engine_frac;
+        assert!(
+            (recovered - truth).abs() / truth < 0.10,
+            "poisoned guess never recovered: {recovered} vs {truth}"
+        );
+    }
+
+    #[test]
+    fn disabled_calibrator_never_touches_the_model() {
+        let cal = calibrator(CalibConfig::default());
+        assert!(!cal.enabled());
+        let before = cal.cost.model.get();
+        feed_truth(&cal, 50, 0.9, 100.0, 100.0);
+        cal.observe_rail(8 << 20, 1.0);
+        cal.refine_cl_boundary();
+        assert_eq!(cal.cost.model.version(), 0);
+        let after = cal.cost.model.get();
+        assert_eq!(after.single_engine_frac.to_bits(), before.single_engine_frac.to_bits());
+        assert_eq!(after.rail_bw_frac.to_bits(), before.rail_bw_frac.to_bits());
+        let snap = cal.snapshot();
+        assert!(!snap.enabled);
+        assert!(snap.classes.is_empty(), "disabled ledgers must stay empty");
+    }
+
+    #[test]
+    fn clamp_bounds_learned_values_around_the_seed() {
+        let cal = calibrator(enabled_cfg());
+        // Absurd truth: startups 100× the seed. The learner clamps at
+        // seed × clamp_frac.
+        for _ in 0..60 {
+            cal.observe_engine(Locality::SameNode, 2 << 10, true, 320_000.0);
+        }
+        let live = cal.cost.model.get();
+        let seed = cal.cost.model.seed();
+        assert!(
+            live.startup_immediate_ns <= seed.startup_immediate_ns * 4.0 + 1e-9,
+            "clamp violated: {} vs seed {}",
+            live.startup_immediate_ns,
+            seed.startup_immediate_ns
+        );
+        // Fractions additionally cap at 1.0 no matter the stream.
+        for _ in 0..60 {
+            // Implausibly fast large transfers (implying frac > 1 before
+            // the per-observation clamp).
+            cal.observe_engine(Locality::SameNode, 8 << 20, true, 1.0);
+        }
+        assert!(cal.cost.model.get().single_engine_frac <= 1.0);
+    }
+
+    #[test]
+    fn cl_boundary_nudges_toward_observed_crossover() {
+        let cal = calibrator(enabled_cfg());
+        cal.cost.model.seed_cl_boundary(64 << 10);
+        // Synthetic per-byte flavor costs: immediate is cheaper up through
+        // the ≤256KiB class, standard wins from the ≤1MiB class up — the
+        // observed crossover sits at the 256KiB boundary.
+        for _ in 0..20 {
+            for (c, &bytes) in [2 << 10, 16 << 10, 128 << 10, 512 << 10, 2 << 20, 8 << 20]
+                .iter()
+                .enumerate()
+            {
+                let (imm_pb, std_pb) = if c < 3 { (1.0, 2.0) } else { (2.0, 1.0) };
+                cal.observe_cl_flavor(bytes, true, imm_pb);
+                cal.observe_cl_flavor(bytes, false, std_pb);
+            }
+        }
+        for _ in 0..40 {
+            cal.refine_cl_boundary();
+        }
+        let learned = cal.cost.model.get().cl_immediate_max_bytes;
+        assert_ne!(learned, 64 << 10, "boundary never moved");
+        assert!(
+            learned > 64 << 10 && learned <= 256 << 10,
+            "boundary {learned} did not move toward the 256KiB crossover"
+        );
+        // The seed clamp still anchors it.
+        assert!(learned <= (64 << 10) * 4);
+    }
+
+    #[test]
+    fn cl_boundary_learns_from_disjoint_flavor_evidence() {
+        // The live shape: the boundary itself decides each entry's
+        // flavor, so immediate evidence lives strictly below the boundary
+        // class and standard evidence strictly above — the frontier
+        // comparison must still move the boundary.
+        let cal = calibrator(enabled_cfg());
+        cal.cost.model.seed_cl_boundary(64 << 10);
+        // Immediate cheap in classes 0–1, standard expensive in 2+:
+        // immediate wins its frontier → the window grows.
+        for _ in 0..20 {
+            for &bytes in &[2 << 10, 16 << 10] {
+                cal.observe_cl_flavor(bytes, true, 1.0);
+            }
+            for &bytes in &[128 << 10, 512 << 10] {
+                cal.observe_cl_flavor(bytes, false, 3.0);
+            }
+        }
+        for _ in 0..64 {
+            cal.refine_cl_boundary();
+        }
+        let grown = cal.cost.model.get().cl_immediate_max_bytes;
+        assert!(grown > 64 << 10, "boundary did not grow: {grown}");
+        // Flip the evidence (standard now cheap at the frontier): the
+        // window shrinks back down, still clamped around the seed.
+        let cal = calibrator(enabled_cfg());
+        cal.cost.model.seed_cl_boundary(64 << 10);
+        for _ in 0..20 {
+            for &bytes in &[2 << 10, 16 << 10] {
+                cal.observe_cl_flavor(bytes, true, 3.0);
+            }
+            for &bytes in &[128 << 10, 512 << 10] {
+                cal.observe_cl_flavor(bytes, false, 1.0);
+            }
+        }
+        for _ in 0..64 {
+            cal.refine_cl_boundary();
+        }
+        let shrunk = cal.cost.model.get().cl_immediate_max_bytes;
+        assert!(shrunk < 64 << 10, "boundary did not shrink: {shrunk}");
+        assert!(shrunk >= (64 << 10) / 4, "clamp floor violated: {shrunk}");
+    }
+
+    #[test]
+    fn snapshot_reports_and_serializes() {
+        let cal = calibrator(enabled_cfg());
+        feed_truth(&cal, 20, 0.5, 4_000.0, 7_000.0);
+        cal.observe_rail(2 << 20, truth_rail_ns(&cal, 2 << 20, 0.5, 900.0));
+        let snap = cal.snapshot();
+        assert!(snap.enabled);
+        assert_eq!(snap.params.len(), QUANTITIES);
+        assert!(!snap.classes.is_empty());
+        let report = snap.report();
+        assert!(report.contains("ce.single_engine_frac"), "{report}");
+        assert!(report.contains("engine-imm"), "{report}");
+        assert!(report.contains("mean residual"), "{report}");
+        // JSON round-trips through the hand-rolled parser.
+        let j = Json::parse(&snap.to_json().to_string()).unwrap();
+        assert_eq!(j.get("enabled"), Some(&Json::Bool(true)));
+        assert!(j.get("params").unwrap().as_arr().unwrap().len() == QUANTITIES);
+        assert!(j.get("mean_residual").unwrap().as_f64().is_some());
+    }
+}

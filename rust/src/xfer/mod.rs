@@ -39,14 +39,24 @@
 //! semantics (`fence`/`quiet`). Fig 5's tuned crossover can be compared
 //! against the learned table through
 //! [`plan::XferEngine::adaptive_report`] and the `fig5_cutover` bench.
+//!
+//! A fourth stage closes the loop behind all three: **calibrate**
+//! ([`calibrate::Calibrator`]) consumes the proxy's per-(path, lane,
+//! size-class) wall-time observations and EMA-refines the learnable
+//! hardware constants in the shared, versioned
+//! [`crate::sim::params::ModelParams`] store — so plans, adaptive cells,
+//! and the per-op CL policy all re-score against *observed* hardware
+//! behavior (`calib.*` knobs; `rishmem figure calibration`).
 
 pub mod adaptive;
+pub mod calibrate;
 pub mod exec;
 pub mod plan;
 pub mod stream;
 pub mod track;
 
 pub use adaptive::{AdaptiveCell, AdaptiveTable, BucketKey};
+pub use calibrate::{CalibConfig, CalibrationSnapshot, Calibrator};
 pub use plan::{FanoutShape, OpKind, Route, TransferPlan, XferEngine};
 pub use stream::CmdStream;
 pub use track::CompletionTracker;

@@ -78,6 +78,11 @@ pub struct TransferPlan {
     pub chunk_bytes: usize,
     /// Engines the chunks stripe across (1 = un-striped).
     pub stripe_width: usize,
+    /// `ModelParams` version the estimates were priced under (closed-loop
+    /// calibration): a plan stamped before a recalibration carries modeled
+    /// costs from the old hardware model, and downstream consumers
+    /// (reports, persisted tables) can tell.
+    pub model_version: u64,
 }
 
 impl TransferPlan {
@@ -147,11 +152,6 @@ pub struct XferEngine {
     /// per-op CL policy below this is the *enable* bit: false forces
     /// standard lists everywhere (the ablation knob).
     pub immediate_cl: bool,
-    /// Per-op command-list policy (§III-C): batched descriptors at or
-    /// below this size use an immediate list (low latency), larger ones a
-    /// standard list (append → close → execute). `usize::MAX` reproduces
-    /// the old global-immediate behavior.
-    pub cl_immediate_max_bytes: usize,
     /// Largest chunk the staging pipeline can double-buffer through the
     /// slab (set from `staging_slab_bytes` at machine construction). The
     /// stripe planner never picks chunks above this, so estimates and the
@@ -178,7 +178,6 @@ impl XferEngine {
             cost,
             cutover,
             immediate_cl,
-            cl_immediate_max_bytes: usize::MAX,
             chunk_max_bytes: DEFAULT_CHUNK_MAX_BYTES,
             adaptive: AdaptiveTable::new(alpha).with_exploration(eps),
             metrics,
@@ -187,12 +186,29 @@ impl XferEngine {
 
     // ------------------------------------------------------ p2p planning --
 
+    /// The live per-op command-list boundary (§III-C): batched descriptors
+    /// at or below this size use an immediate list (low latency), larger
+    /// ones a standard list (append → close → execute). `usize::MAX`
+    /// reproduces the old global-immediate behavior. The value lives in
+    /// the shared `ModelParams` store — it is the *third learned quantity*
+    /// of the calibration loop, nudged toward the observed immediate-vs-
+    /// standard crossover.
+    pub fn cl_immediate_max_bytes(&self) -> usize {
+        self.cost.model.get().cl_immediate_max_bytes
+    }
+
+    /// Configure (re-seed) the CL boundary at machine construction. Not a
+    /// calibration event: the `ModelParams` version does not move.
+    pub fn set_cl_immediate_max_bytes(&self, bytes: usize) {
+        self.cost.model.seed_cl_boundary(bytes);
+    }
+
     /// Per-op command-list choice for a `bytes`-sized engine transfer —
     /// the single policy point shared by the planner's estimates and the
     /// executors' descriptor flags (so modeled decisions and charges use
     /// the same startup constant).
     pub fn cl_immediate_for(&self, bytes: usize) -> bool {
-        self.immediate_cl && bytes <= self.cl_immediate_max_bytes
+        self.immediate_cl && bytes <= self.cl_immediate_max_bytes()
     }
 
     /// Model the point-to-point load/store path (pure estimate).
@@ -205,7 +221,7 @@ impl XferEngine {
     /// global immediate enable bit is off).
     pub fn cl_immediate_boundary(&self) -> usize {
         if self.immediate_cl {
-            self.cl_immediate_max_bytes
+            self.cl_immediate_max_bytes()
         } else {
             0
         }
@@ -228,7 +244,7 @@ impl XferEngine {
     fn est_engine_striped_ns(&self, loc: Locality, bytes: usize, chunk: usize, width: usize) -> f64 {
         let n = bytes.max(1).div_ceil(chunk.max(1));
         self.cost.ring_rtt_ns()
-            + self.cost.params.ce.striped_transfer_ns(
+            + self.cost.ce_eff().striped_transfer_ns(
                 &self.cost.params.xe,
                 loc,
                 bytes,
@@ -317,6 +333,12 @@ impl XferEngine {
         bytes: usize,
         items: usize,
     ) -> TransferPlan {
+        // One version read covers the whole plan: the decision's cell
+        // aging and the plan stamp must agree even if a calibration lands
+        // mid-plan. (Estimates priced a recalibration later than this
+        // read self-heal: the next decision at the newer version re-seeds
+        // the touched cell.)
+        let model_version = self.cost.model.version();
         if !reachable {
             // Rail-striped remote shape: one width scan serves the
             // estimate and the bound stripe geometry, and the source
@@ -341,6 +363,7 @@ impl XferEngine {
                 alt_ns: None,
                 chunk_bytes: chunk,
                 stripe_width: width,
+                model_version,
             };
             self.count_plan(plan.route);
             return plan;
@@ -351,8 +374,8 @@ impl XferEngine {
         let ls = self.est_loadstore_ns(loc, bytes, items);
         let ce = self.est_engine_striped_ns(loc, bytes, chunk, width)
             + self.cost.engine_drain_ns(loc, backlog);
-        let path = self.decide(BucketKey::p2p(loc, bytes, items), bytes, ls, ce);
-        let mut plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce);
+        let path = self.decide(BucketKey::p2p(loc, bytes, items), bytes, ls, ce, model_version);
+        let mut plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce, model_version);
         if plan.route == Route::CopyEngine {
             plan.chunk_bytes = chunk;
             plan.stripe_width = width;
@@ -390,7 +413,7 @@ impl XferEngine {
         if shape.npeers == 0 || shape.total_bytes() == 0 {
             return 0.0;
         }
-        let ce = &self.cost.params.ce;
+        let ce = self.cost.ce_eff();
         let xe = &self.cost.params.xe;
         let mut t: f64 = 0.0;
         for &(loc, link_bytes, transfers) in &shape.per_link {
@@ -419,11 +442,22 @@ impl XferEngine {
     /// (paper Fig 6: the decision depends on nelems, work-items *and* the
     /// PE count — all captured by the shape).
     pub fn plan_fanout(&self, shape: &FanoutShape, bytes: usize, items: usize) -> TransferPlan {
+        let model_version = self.cost.model.version();
         let ls = self.fanout_store_ns(shape, items);
         let ce = self.fanout_engine_ns(shape);
         let key = BucketKey::fanout(shape.loc, bytes, items, shape.npeers);
-        let path = self.decide(key, bytes, ls, ce);
-        let plan = self.bind(OpKind::Fanout, shape.loc, bytes, items, shape.npeers, path, ls, ce);
+        let path = self.decide(key, bytes, ls, ce, model_version);
+        let plan = self.bind(
+            OpKind::Fanout,
+            shape.loc,
+            bytes,
+            items,
+            shape.npeers,
+            path,
+            ls,
+            ce,
+            model_version,
+        );
         self.count_plan(plan.route);
         plan
     }
@@ -439,7 +473,10 @@ impl XferEngine {
             return;
         }
         if let Some(path) = plan.route.as_path() {
-            if self.adaptive.observe(plan.bucket(), path, observed_ns) {
+            // The plan's own version guards the feedback: an observation
+            // priced under a pre-recalibration model never refines a cell
+            // that was re-seeded since.
+            if self.adaptive.observe(plan.bucket(), path, observed_ns, plan.model_version) {
                 Metrics::add(&self.metrics.adaptive_updates, 1);
             }
         }
@@ -479,6 +516,28 @@ impl XferEngine {
             .collect();
         let mut top: BTreeMap<String, Json> = BTreeMap::new();
         top.insert("ema_alpha".to_string(), Json::Num(self.cutover.ema_alpha));
+        // ModelParams staleness header: the cells' EMAs were learned
+        // against *these* hardware constants. The fingerprint is the
+        // learned values themselves — the version counter is process-local
+        // (every process starts at 0) and is stored only as information.
+        // A loader whose live params differ discards the cells instead of
+        // trusting EMAs priced under a hardware model it does not have.
+        let live = self.cost.model.get();
+        let mut fp: BTreeMap<String, Json> = BTreeMap::new();
+        fp.insert("single_engine_frac".to_string(), Json::Num(live.single_engine_frac));
+        fp.insert("startup_immediate_ns".to_string(), Json::Num(live.startup_immediate_ns));
+        fp.insert("startup_standard_ns".to_string(), Json::Num(live.startup_standard_ns));
+        fp.insert("rail_bw_frac".to_string(), Json::Num(live.rail_bw_frac));
+        fp.insert("rail_startup_ns".to_string(), Json::Num(live.rail_startup_ns));
+        fp.insert(
+            "cl_immediate_max_bytes".to_string(),
+            Json::Num(live.cl_immediate_max_bytes as f64),
+        );
+        top.insert("model_params".to_string(), Json::Obj(fp));
+        top.insert(
+            "model_version".to_string(),
+            Json::Num(self.cost.model.version() as f64),
+        );
         top.insert("cells".to_string(), Json::Arr(cells));
         Json::Obj(top).to_string()
     }
@@ -487,10 +546,42 @@ impl XferEngine {
     /// Returns how many cells were loaded. A table saved under a
     /// different `ema_alpha` still installs (the EMAs are valid state,
     /// just smoothed under another time constant) — but the mismatch is
-    /// surfaced, not swallowed.
+    /// surfaced, not swallowed. A table saved under **different
+    /// `ModelParams`**, however, is *stale*: its EMAs were learned against
+    /// another hardware model, so its cells are discarded (with a warning)
+    /// and the load reports 0 cells — the cold-start seeds are more
+    /// trustworthy than confidently-wrong learned state. The comparison is
+    /// the `model_params` fingerprint (the learned values themselves, which
+    /// survive process restarts), not the process-local version counter.
+    /// Tables from before the calibration era carry no fingerprint and are
+    /// trusted only by a machine whose live params still equal its seed
+    /// (i.e. one that has not itself recalibrated).
     pub fn adaptive_load_json(&self, text: &str) -> anyhow::Result<usize> {
         use crate::util::json::Json;
         let j = Json::parse(text).map_err(|e| anyhow::anyhow!("adaptive table: {e}"))?;
+        let current = self.cost.model.version();
+        let live = self.cost.model.get();
+        let params_match = match j.get("model_params") {
+            Some(fp) => {
+                // f64 Display round-trips exactly, so bit-equality of the
+                // re-parsed values is the right comparison.
+                let f = |k: &str| fp.get(k).and_then(|v| v.as_f64());
+                f("single_engine_frac") == Some(live.single_engine_frac)
+                    && f("startup_immediate_ns") == Some(live.startup_immediate_ns)
+                    && f("startup_standard_ns") == Some(live.startup_standard_ns)
+                    && f("rail_bw_frac") == Some(live.rail_bw_frac)
+                    && f("rail_startup_ns") == Some(live.rail_startup_ns)
+                    && f("cl_immediate_max_bytes") == Some(live.cl_immediate_max_bytes as f64)
+            }
+            None => live == self.cost.model.seed(),
+        };
+        if !params_match {
+            eprintln!(
+                "warning: adaptive table was learned under different ModelParams than \
+                 this machine's live values — discarding stale cells"
+            );
+            return Ok(0);
+        }
         if let Some(saved_alpha) = j.get("ema_alpha").and_then(|v| v.as_f64()) {
             if (saved_alpha - self.cutover.ema_alpha).abs() > 1e-12 {
                 eprintln!(
@@ -532,6 +623,9 @@ impl XferEngine {
                 ema_copy_engine_ns: num("ema_copy_engine_ns")?,
                 samples_loadstore: num("samples_loadstore")? as u64,
                 samples_copy_engine: num("samples_copy_engine")? as u64,
+                // The fingerprint matched this machine's live params, so
+                // the cells install as current-model cells.
+                model_version: current,
             });
         }
         self.adaptive.load_cells(&loaded);
@@ -674,8 +768,18 @@ impl XferEngine {
     // ---------------------------------------------------------- internals --
 
     /// Mode dispatch over pre-computed path estimates. This is the single
-    /// cutover branch point for the whole library.
-    fn decide(&self, key: BucketKey, bytes: usize, ls_ns: f64, ce_ns: f64) -> Path {
+    /// cutover branch point for the whole library. The adaptive arm passes
+    /// the live `ModelParams` version, so cells seeded before a
+    /// recalibration age out (re-seed from the fresh estimates) the next
+    /// time traffic touches them.
+    fn decide(
+        &self,
+        key: BucketKey,
+        bytes: usize,
+        ls_ns: f64,
+        ce_ns: f64,
+        model_version: u64,
+    ) -> Path {
         match self.cutover.mode {
             CutoverMode::Never => Path::LoadStore,
             CutoverMode::Always => Path::CopyEngine,
@@ -689,7 +793,7 @@ impl XferEngine {
                 if let Some(t) = self.cutover.fixed_threshold {
                     return if bytes < t { Path::LoadStore } else { Path::CopyEngine };
                 }
-                self.adaptive.decide(key, ls_ns, ce_ns)
+                self.adaptive.decide(key, ls_ns, ce_ns, model_version)
             }
         }
     }
@@ -705,6 +809,7 @@ impl XferEngine {
         path: Path,
         ls_ns: f64,
         ce_ns: f64,
+        model_version: u64,
     ) -> TransferPlan {
         let (route, modeled, alt) = match path {
             Path::LoadStore => (Route::LoadStore, ls_ns, ce_ns),
@@ -721,6 +826,7 @@ impl XferEngine {
             alt_ns: Some(alt),
             chunk_bytes: bytes,
             stripe_width: 1,
+            model_version,
         }
     }
 
@@ -868,15 +974,97 @@ mod tests {
 
     #[test]
     fn per_op_cl_policy_switches_startup_constant() {
-        let mut e = engine(CutoverConfig::tuned());
+        let e = engine(CutoverConfig::tuned());
         let loc = Locality::SameNode;
         let all_imm = e.est_copy_engine_ns(loc, 1 << 20);
-        e.cl_immediate_max_bytes = 64 << 10;
+        e.set_cl_immediate_max_bytes(64 << 10);
+        assert_eq!(e.cl_immediate_max_bytes(), 64 << 10);
+        assert_eq!(e.cost.model.version(), 0, "re-seeding the boundary is not a calibration");
         let std_cl = e.est_copy_engine_ns(loc, 1 << 20);
         let small = e.est_copy_engine_ns(loc, 4 << 10);
         assert!(std_cl > all_imm, "standard CL must charge the larger startup");
         assert!(e.cl_immediate_for(4 << 10) && !e.cl_immediate_for(1 << 20));
         assert_eq!(small, e.cost.p2p_engine_estimate_ns(loc, 4 << 10, true));
+    }
+
+    #[test]
+    fn plans_are_stamped_with_the_model_version() {
+        let e = engine(CutoverConfig::tuned());
+        let p = e.plan_p2p(OpKind::Put, true, Locality::SameNode, 4096, 1);
+        assert_eq!(p.model_version, 0);
+        let r = e.plan_p2p(OpKind::Put, false, Locality::Remote, 4096, 1);
+        assert_eq!(r.model_version, 0);
+        e.cost.model.update(|l| l.single_engine_frac = 0.5);
+        let p = e.plan_p2p(OpKind::Put, true, Locality::SameNode, 4096, 1);
+        assert_eq!(p.model_version, 1);
+        let f = e.plan_fanout(&FanoutShape::default(), 4096, 1);
+        assert_eq!(f.model_version, 1);
+    }
+
+    #[test]
+    fn recalibration_ages_out_learned_adaptive_cells() {
+        let e = engine(CutoverConfig::adaptive());
+        let (loc, bytes) = (Locality::SameNode, 4096);
+        // Warm a cell and poison it so the learned choice diverges from
+        // the seed choice.
+        let seed_route = e.plan_p2p(OpKind::Put, true, loc, bytes, 1).route;
+        assert_eq!(seed_route, Route::LoadStore, "4KiB single-item seeds load/store");
+        let p = e.plan_p2p(OpKind::Put, true, loc, bytes, 1);
+        for _ in 0..32 {
+            e.record(&p, 1e9); // "observed" load/store catastrophically slow
+        }
+        let poisoned = e.plan_p2p(OpKind::Put, true, loc, bytes, 1);
+        assert_eq!(poisoned.route, Route::CopyEngine, "poisoning must flip the cell");
+        // A recalibration bumps the model version; the stale cell re-seeds
+        // from the fresh estimates and the poison is gone.
+        e.cost.model.update(|l| l.startup_standard_ns += 1.0);
+        let fresh = e.plan_p2p(OpKind::Put, true, loc, bytes, 1);
+        assert_eq!(fresh.route, Route::LoadStore, "stale cell must re-seed");
+        let cell = e
+            .adaptive_snapshot()
+            .into_iter()
+            .find(|c| c.key == fresh.bucket())
+            .expect("cell exists");
+        assert_eq!(cell.model_version, 1);
+        assert_eq!(cell.samples_loadstore, 0, "re-seed resets samples");
+    }
+
+    #[test]
+    fn persisted_table_with_mismatched_model_params_is_discarded() {
+        use crate::util::json::Json;
+        let a = engine(CutoverConfig::adaptive());
+        let p = a.plan_p2p(OpKind::Put, true, Locality::SameNode, 4096, 1);
+        a.record(&p, p.modeled_ns * 1.1);
+        let saved = a.adaptive_save_json();
+        // A fresh machine with the same (seed) params: loads — this is
+        // the cross-process case, where version counters restart at 0 but
+        // the fingerprint still matches.
+        let b = engine(CutoverConfig::adaptive());
+        assert!(b.adaptive_load_json(&saved).unwrap() >= 1);
+        // A loader that recalibrated since: the saved cells were learned
+        // under different hardware constants — discarded, not trusted.
+        let c = engine(CutoverConfig::adaptive());
+        c.cost.model.update(|l| l.single_engine_frac = 0.5);
+        assert_eq!(c.adaptive_load_json(&saved).unwrap(), 0);
+        assert!(c.adaptive_snapshot().is_empty());
+        // The reverse cross-process case: a table saved by the calibrated
+        // machine never fools a fresh (seed-params) process.
+        let saved_calibrated = c.adaptive_save_json();
+        let d = engine(CutoverConfig::adaptive());
+        assert_eq!(d.adaptive_load_json(&saved_calibrated).unwrap(), 0);
+        // A pre-calibration-era table (no fingerprint) is trusted only by
+        // a machine still at its seed params.
+        let mut obj = match Json::parse(&saved).unwrap() {
+            Json::Obj(m) => m,
+            other => panic!("table is not an object: {other:?}"),
+        };
+        obj.remove("model_params").expect("fingerprint present in saves");
+        obj.remove("model_version");
+        let legacy = Json::Obj(obj).to_string();
+        assert!(b.adaptive_load_json(&legacy).unwrap() >= 1);
+        assert_eq!(c.adaptive_load_json(&legacy).unwrap(), 0);
+        // The saver stamps its (informational) local version too.
+        assert!(saved_calibrated.contains("\"model_version\":1"), "{saved_calibrated}");
     }
 
     #[test]

@@ -298,3 +298,100 @@ fn adaptive_mode_records_feedback() {
         .sum();
     assert!(observed >= 8, "table cells saw no samples: {cells:?}");
 }
+
+#[test]
+fn live_calibration_populates_ledgers_and_snapshot_json() {
+    // A calib-enabled machine run through every proxied path: the proxy
+    // tags serviced entries with lane + wall ns and the calibrator's
+    // ledgers populate. Wall clocks on this substrate are nondeterministic
+    // garbage relative to the modeled Aurora hardware, so the test asserts
+    // plumbing (samples flow, clamps hold, JSON parses) — convergence is
+    // property-tested against synthetic streams in xfer::calibrate and
+    // asserted end-to-end by the fig_calib bench.
+    let mut cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        ..Default::default()
+    };
+    cfg.calib.enable = true;
+    let ish = Ishmem::new(cfg).unwrap();
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(4 << 20);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            for size in [2 << 10, 128 << 10, 2 << 20] {
+                ctx.put(buf, &vec![1u8; size], 2); // same-node → engine lanes
+                ctx.put(buf, &vec![2u8; size], 4); // cross-node → rail lanes
+            }
+            ctx.quiet();
+        }
+        ctx.barrier_all();
+    });
+    let calib = ish.calib.snapshot();
+    let seed = ish.cost.model.seed();
+    let live = ish.cost.model.get();
+    ish.shutdown();
+
+    assert!(calib.enabled);
+    assert!(
+        !calib.classes.is_empty(),
+        "proxy observations never reached the calibrator"
+    );
+    let total: u64 = calib.classes.iter().map(|c| c.samples).sum();
+    assert!(total >= 6, "too few tagged observations: {calib:?}");
+    // Whatever the wall clocks said, the clamp keeps learned values
+    // within clamp_frac of the seed (fractions additionally ≤ 1).
+    let cfg_clamp = ish.config.calib.clamp_frac;
+    assert!(live.single_engine_frac <= (seed.single_engine_frac * cfg_clamp).min(1.0) + 1e-12);
+    assert!(live.single_engine_frac >= seed.single_engine_frac / cfg_clamp - 1e-12);
+    assert!(live.rail_bw_frac <= 1.0 + 1e-12);
+    // The metrics JSON carries the calibration snapshot at the top level.
+    let text = ish
+        .metrics
+        .snapshot()
+        .to_json_with(vec![("calibration".to_string(), calib.to_json())]);
+    let j = Json::parse(&text).unwrap();
+    let c = j.get("calibration").expect("calibration key");
+    assert_eq!(c.get("enabled"), Some(&Json::Bool(true)));
+    assert!(c.get("params").unwrap().as_arr().unwrap().len() >= 6);
+    assert!(c.get("mean_residual").unwrap().as_f64().is_some());
+}
+
+#[test]
+fn disabled_calibration_is_bit_identical_to_the_seed_model() {
+    // The other half of the acceptance bar, end-to-end: a default
+    // (calib.enable = false) machine services real traffic and the
+    // ModelParams store never moves — version 0, seed bits intact, so
+    // every plan estimate is bit-identical to the pre-calibration code.
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    let est_before = ish.xfer.est_copy_engine_ns(Locality::SameNode, 1 << 20);
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(1 << 20);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            ctx.put(buf, &vec![5u8; 1 << 20], 2);
+            ctx.put(buf, &[6u8; 512], 7);
+            ctx.quiet();
+        }
+        ctx.barrier_all();
+    });
+    assert_eq!(ish.cost.model.version(), 0, "traffic must not move a disabled model");
+    assert_eq!(
+        ish.cost.model.get().single_engine_frac.to_bits(),
+        ish.cost.model.seed().single_engine_frac.to_bits()
+    );
+    assert_eq!(
+        ish.xfer.est_copy_engine_ns(Locality::SameNode, 1 << 20).to_bits(),
+        est_before.to_bits(),
+        "estimates drifted without calibration"
+    );
+    let calib = ish.calib.snapshot();
+    ish.shutdown();
+    assert!(!calib.enabled);
+    assert!(calib.classes.is_empty(), "disabled calibrator accumulated state");
+}

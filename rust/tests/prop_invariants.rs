@@ -242,17 +242,17 @@ fn prop_poisoned_adaptive_seed_recovers_with_exploration() {
         let key = BucketKey::p2p(Locality::SameNode, 1usize << rng.range(6, 20), 1);
 
         let observe_truth = |t: &AdaptiveTable| {
-            let p = t.decide(key, true_ls, true_ce); // re-seeding never resets
+            let p = t.decide(key, true_ls, true_ce, 0); // re-seeding never resets
             let obs = match p {
                 Path::LoadStore => true_ls,
                 Path::CopyEngine => true_ce,
             };
-            t.observe(key, p, obs);
+            t.observe(key, p, obs, 0);
         };
 
         let explored = AdaptiveTable::new(alpha).with_exploration(0.15);
         // Poison: the cell believes load/store is catastrophically slow.
-        explored.decide(key, 50_000.0, true_ce);
+        explored.decide(key, 50_000.0, true_ce, 0);
         assert_eq!(explored.peek(key), Some(Path::CopyEngine));
         for _ in 0..500 {
             observe_truth(&explored);
@@ -265,7 +265,7 @@ fn prop_poisoned_adaptive_seed_recovers_with_exploration() {
 
         // Control: without exploration the losing path is never retried.
         let greedy = AdaptiveTable::new(alpha);
-        greedy.decide(key, 50_000.0, true_ce);
+        greedy.decide(key, 50_000.0, true_ce, 0);
         for _ in 0..500 {
             observe_truth(&greedy);
         }
