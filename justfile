@@ -17,15 +17,18 @@ bench:
     cargo bench --bench hot_path
 
 # CI smoke: the cutover + batched-submission + striped-pipeline +
-# rail-striping + calibration benches on tiny sweeps (RISHMEM_SMOKE
-# shrinks the size/nelem grids and the calibration round count), so the
-# figure benches and their embedded assertions can't bit-rot.
+# rail-striping + calibration + hot-path benches on tiny sweeps
+# (RISHMEM_SMOKE shrinks the size/nelem grids, the calibration round
+# count, and the plans/sec iteration counts), so the figure benches and
+# their embedded assertions (including the plan-cache speedup and
+# zero-drift checks) can't bit-rot.
 bench-smoke:
     RISHMEM_SMOKE=1 cargo bench --bench fig5_cutover
     RISHMEM_SMOKE=1 cargo bench --bench fig_batch
     RISHMEM_SMOKE=1 cargo bench --bench fig_stripe
     RISHMEM_SMOKE=1 cargo bench --bench fig_rail
     RISHMEM_SMOKE=1 cargo bench --bench fig_calib
+    RISHMEM_SMOKE=1 cargo bench --bench hot_path
 
 # Formatting gate (no writes).
 fmt-check:

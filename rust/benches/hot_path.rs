@@ -1,14 +1,132 @@
 //! Bench: wall-clock cost of the L3 hot paths (the library's own
 //! overhead, independent of the modeled hardware time) — put issue path,
-//! AMO path, sync, and the proxy round trip. This is the profile target
-//! for the §Perf optimization pass.
-//! `cargo bench --bench hot_path`
+//! AMO path, sync, and the proxy round trip — plus the planner's
+//! plans/sec microbench (cached vs uncached, single- and multi-threaded).
+//! This is the profile target for the §Perf optimization pass.
+//! `cargo bench --bench hot_path` (`RISHMEM_SMOKE=1` shrinks the sweeps)
+
+use std::sync::Arc;
 
 use rishmem::bench::measure_wall;
+use rishmem::coordinator::metrics::Metrics;
 use rishmem::ishmem::CutoverConfig;
-use rishmem::{Ishmem, IshmemConfig, ReduceOp, TeamId};
+use rishmem::sim::{CostModel, CostParams, Topology};
+use rishmem::xfer::{OpKind, PlanCacheConfig, XferEngine};
+use rishmem::{Ishmem, IshmemConfig, Locality, ReduceOp, TeamId};
+
+/// The repeated shape set the planner sweeps: all three routes, sizes
+/// straddling the cutover and striping regimes.
+fn plan_shapes() -> Vec<(bool, Locality, usize, usize)> {
+    let mut v = Vec::new();
+    for &bytes in &[64usize, 4096, 64 << 10, 1 << 20, 8 << 20] {
+        for &loc in &[Locality::SameTile, Locality::SameNode] {
+            v.push((true, loc, bytes, 1));
+        }
+        v.push((false, Locality::Remote, bytes, 1));
+    }
+    v
+}
+
+fn plan_engine(cache_on: bool) -> XferEngine {
+    let cost = CostModel::new(Topology::default(), CostParams::default());
+    let mut e = XferEngine::new(cost, CutoverConfig::tuned(), true, Metrics::new());
+    e.set_plan_cache(PlanCacheConfig { enable: cache_on, capacity: 4096 });
+    e
+}
+
+/// Plans/sec over `iters` plans cycling the shape set; the modeled-ns
+/// sum is folded into a sink so the planning work cannot be elided.
+fn plans_per_sec(e: &XferEngine, shapes: &[(bool, Locality, usize, usize)], iters: usize) -> f64 {
+    let t0 = std::time::Instant::now();
+    let mut sink = 0.0f64;
+    for i in 0..iters {
+        let (reach, loc, bytes, items) = shapes[i % shapes.len()];
+        sink += e.plan_p2p(OpKind::Put, reach, loc, bytes, items).modeled_ns;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+    iters as f64 / dt.max(1e-9)
+}
+
+fn plans_per_sec_mt(
+    e: &Arc<XferEngine>,
+    shapes: &[(bool, Locality, usize, usize)],
+    iters: usize,
+    threads: usize,
+) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let e = Arc::clone(e);
+            let shapes = shapes.to_vec();
+            s.spawn(move || {
+                let mut sink = 0.0f64;
+                for i in 0..iters / threads {
+                    let (reach, loc, bytes, items) = shapes[i % shapes.len()];
+                    sink += e.plan_p2p(OpKind::Put, reach, loc, bytes, items).modeled_ns;
+                }
+                std::hint::black_box(sink);
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    (iters - iters % threads) as f64 / dt.max(1e-9)
+}
+
+fn bench_planner(smoke: bool) {
+    let shapes = plan_shapes();
+    let iters = if smoke { 20_000 } else { 200_000 };
+    let cached = plan_engine(true);
+    let uncached = plan_engine(false);
+
+    // Warm the cache, and hold the zero-drift property while at it:
+    // every cached plan must be bit-identical to the cache-off plan.
+    for &(reach, loc, bytes, items) in &shapes {
+        let c = cached.plan_p2p(OpKind::Put, reach, loc, bytes, items);
+        let u = uncached.plan_p2p(OpKind::Put, reach, loc, bytes, items);
+        assert_eq!(c, u, "cold cached plan drifted from uncached");
+    }
+    for &(reach, loc, bytes, items) in &shapes {
+        let c = cached.plan_p2p(OpKind::Put, reach, loc, bytes, items); // warm hit
+        let u = uncached.plan_p2p(OpKind::Put, reach, loc, bytes, items);
+        assert_eq!(c, u, "warm cached plan drifted from uncached");
+    }
+
+    let warm = plans_per_sec(&cached, &shapes, iters);
+    let cold = plans_per_sec(&uncached, &shapes, iters);
+    let ratio = warm / cold;
+    println!("\n== planner plans/sec (single thread) ==");
+    println!("  cache-warm : {warm:12.0} plans/s");
+    println!("  uncached   : {cold:12.0} plans/s   (snapshot-refactor baseline)");
+    println!("  speedup    : {ratio:12.2}x");
+    let floor = if smoke { 2.0 } else { 5.0 };
+    assert!(
+        ratio >= floor,
+        "cache-warm planning must be at least {floor}x uncached, got {ratio:.2}x"
+    );
+
+    let threads = 4;
+    let cached = Arc::new(plan_engine(true));
+    for &(reach, loc, bytes, items) in &shapes {
+        cached.plan_p2p(OpKind::Put, reach, loc, bytes, items); // pre-warm
+    }
+    let uncached = Arc::new(plan_engine(false));
+    let warm_mt = plans_per_sec_mt(&cached, &shapes, iters, threads);
+    let cold_mt = plans_per_sec_mt(&uncached, &shapes, iters, threads);
+    let ratio_mt = warm_mt / cold_mt;
+    println!("== planner plans/sec ({threads} threads) ==");
+    println!("  cache-warm : {warm_mt:12.0} plans/s");
+    println!("  uncached   : {cold_mt:12.0} plans/s");
+    println!("  speedup    : {ratio_mt:12.2}x");
+    let floor_mt = if smoke { 1.2 } else { 2.0 };
+    assert!(
+        ratio_mt >= floor_mt,
+        "concurrent cache-warm planning must be at least {floor_mt}x uncached, got {ratio_mt:.2}x"
+    );
+}
 
 fn main() {
+    let smoke = std::env::var("RISHMEM_SMOKE").is_ok();
     let cfg = IshmemConfig {
         cutover: CutoverConfig::never(),
         ..IshmemConfig::with_npes(2)
@@ -81,4 +199,6 @@ fn main() {
         println!("  {name:34} {ns:10.0} ns");
     }
     println!("\nmetrics after run:\n{}", snap.report());
+
+    bench_planner(smoke);
 }

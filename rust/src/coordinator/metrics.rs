@@ -74,6 +74,13 @@ pub struct Metrics {
     pub xfer_plans_copy_engine: AtomicU64,
     pub xfer_plans_nic: AtomicU64,
     pub adaptive_updates: AtomicU64,
+    // Plan cache (memoized structural plans): hits and misses count only
+    // while the cache is enabled; invalidations count entries dropped by
+    // model-version/CL-boundary generation flushes, per-entry stale
+    // evictions, and capacity resets.
+    pub plan_cache_hits: AtomicU64,
+    pub plan_cache_misses: AtomicU64,
+    pub plan_cache_invalidations: AtomicU64,
     // Reverse-offload ring.
     pub ring_messages: AtomicU64,
     pub ring_completions: AtomicU64,
@@ -247,6 +254,9 @@ impl Metrics {
             xfer_plans_copy_engine: load(&self.xfer_plans_copy_engine),
             xfer_plans_nic: load(&self.xfer_plans_nic),
             adaptive_updates: load(&self.adaptive_updates),
+            plan_cache_hits: load(&self.plan_cache_hits),
+            plan_cache_misses: load(&self.plan_cache_misses),
+            plan_cache_invalidations: load(&self.plan_cache_invalidations),
             ring_messages: load(&self.ring_messages),
             ring_completions: load(&self.ring_completions),
             xfer_batches: load(&self.xfer_batches),
@@ -299,6 +309,9 @@ pub struct MetricsSnapshot {
     pub xfer_plans_copy_engine: u64,
     pub xfer_plans_nic: u64,
     pub adaptive_updates: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    pub plan_cache_invalidations: u64,
     pub ring_messages: u64,
     pub ring_completions: u64,
     pub xfer_batches: u64,
@@ -414,6 +427,9 @@ impl MetricsSnapshot {
         put("xfer_plans_copy_engine", n(self.xfer_plans_copy_engine));
         put("xfer_plans_nic", n(self.xfer_plans_nic));
         put("adaptive_updates", n(self.adaptive_updates));
+        put("plan_cache_hits", n(self.plan_cache_hits));
+        put("plan_cache_misses", n(self.plan_cache_misses));
+        put("plan_cache_invalidations", n(self.plan_cache_invalidations));
         put("ring_messages", n(self.ring_messages));
         put("ring_completions", n(self.ring_completions));
         put("xfer_batches", n(self.xfer_batches));
@@ -527,6 +543,7 @@ impl MetricsSnapshot {
              bytes: load/store={} copy-engine={} nic={}\n\
              bytes by locality: load/store [{}] | copy-engine [{}] | nic [{}]\n\
              plans: load/store={} copy-engine={} nic={} adaptive-updates={}\n\
+             plan cache: hits={} misses={} invalidations={}\n\
              ring: msgs={} completions={} batches={} batch-entries={} mean-depth={:.2}\n\
              stripes: transfers={} chunks={} mean-chunks={:.2}\n\
              engine bytes: [{}]\n\
@@ -547,6 +564,9 @@ impl MetricsSnapshot {
             self.xfer_plans_copy_engine,
             self.xfer_plans_nic,
             self.adaptive_updates,
+            self.plan_cache_hits,
+            self.plan_cache_misses,
+            self.plan_cache_invalidations,
             self.ring_messages,
             self.ring_completions,
             self.xfer_batches,
@@ -598,10 +618,22 @@ mod tests {
         Metrics::add(&m.xfer_plans_copy_engine, 1);
         Metrics::add(&m.xfer_plans_nic, 4);
         Metrics::add(&m.adaptive_updates, 5);
+        Metrics::add(&m.plan_cache_hits, 9);
+        Metrics::add(&m.plan_cache_misses, 3);
+        Metrics::add(&m.plan_cache_invalidations, 2);
         let s = m.snapshot();
         assert_eq!(s.total_xfer_plans(), 7);
         assert_eq!(s.adaptive_updates, 5);
         assert!(s.report().contains("adaptive-updates=5"));
+        assert_eq!(
+            (s.plan_cache_hits, s.plan_cache_misses, s.plan_cache_invalidations),
+            (9, 3, 2)
+        );
+        assert!(s.report().contains("plan cache: hits=9 misses=3 invalidations=2"));
+        let j = crate::util::json::Json::parse(&s.to_json()).unwrap();
+        assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(9));
+        assert_eq!(j.get("plan_cache_misses").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("plan_cache_invalidations").unwrap().as_usize(), Some(2));
     }
 
     #[test]

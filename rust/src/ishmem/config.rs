@@ -61,6 +61,12 @@ pub struct IshmemConfig {
     /// `calib.enable = false` machine reproduces today's estimates
     /// bit-for-bit.
     pub calib: crate::xfer::calibrate::CalibConfig,
+    /// Planner memoization (`plan_cache.enable`, `plan_cache.capacity`):
+    /// structural plan shapes (width scans + pure estimates) cached per
+    /// learned-params generation. Occupancy terms and route decisions are
+    /// re-applied live on every hit, so a `plan_cache.enable = false`
+    /// machine plans bit-for-bit identically — just slower.
+    pub plan_cache: crate::xfer::plan::PlanCacheConfig,
 }
 
 impl Default for IshmemConfig {
@@ -81,6 +87,7 @@ impl Default for IshmemConfig {
             strict_hmem: false,
             xla_reduce_min_elems: 1024,
             calib: crate::xfer::calibrate::CalibConfig::default(),
+            plan_cache: crate::xfer::plan::PlanCacheConfig::default(),
         }
     }
 }
@@ -165,6 +172,10 @@ impl IshmemConfig {
         anyhow::ensure!(
             self.calib.clamp_frac >= 1.0,
             "calib.clamp_frac below 1 would forbid the configured seed itself"
+        );
+        anyhow::ensure!(
+            !self.plan_cache.enable || self.plan_cache.capacity >= 1,
+            "plan_cache.capacity must be at least 1 when the cache is enabled"
         );
         Ok(())
     }
@@ -267,6 +278,19 @@ mod tests {
         cfg.calib.enable = true;
         cfg.calib.clamp_frac = 1.0;
         assert!(cfg.validate().is_ok(), "clamp 1.0 pins learning to the seed but is legal");
+    }
+
+    #[test]
+    fn plan_cache_knobs_validated() {
+        let cfg = IshmemConfig::default();
+        assert!(cfg.plan_cache.enable, "plan cache must default on");
+        assert!(cfg.plan_cache.capacity >= 1024, "default capacity covers a real working set");
+        let mut cfg = IshmemConfig::default();
+        cfg.plan_cache.capacity = 0;
+        assert!(cfg.validate().is_err());
+        // Capacity is irrelevant when the cache is off.
+        cfg.plan_cache.enable = false;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

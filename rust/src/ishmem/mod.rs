@@ -149,6 +149,10 @@ impl Ishmem {
         // the staging slab can double-buffer, so modeled stripes and the
         // executor's slicing agree.
         xfer.chunk_max_bytes = config.chunk_max_bytes();
+        // Plan cache: memoized structural plans, keyed per learned-params
+        // generation (`plan_cache.enable = false` plans identically,
+        // recomputing every shape).
+        xfer.set_plan_cache(config.plan_cache.clone());
         // Adaptive-table persistence: pick up what a previous run learned
         // (missing file = cold start; a malformed table is an error — a
         // silently-ignored typo'd path would discard the learning).

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use super::copyengine::{CopyEngineParams, EngineQueue};
 use super::nic::NicParams;
-use super::params::ModelParams;
+use super::params::{LearnedParams, ModelParams};
 use super::pcie::PcieParams;
 use super::rail::RailSet;
 use super::topology::{Locality, Topology};
@@ -171,12 +171,25 @@ impl CostModel {
     /// every estimate fetches this per call, so a calibration write is
     /// visible to the very next plan.
     pub fn ce_eff(&self) -> CopyEngineParams {
-        self.params.ce.with_learned(&self.model.get())
+        self.ce_eff_at(&self.model.get())
+    }
+
+    /// [`Self::ce_eff`] against one caller-held learned-params snapshot —
+    /// the building block of tear-free multi-term estimates: grab the
+    /// snapshot once, thread it through every term.
+    pub fn ce_eff_at(&self, l: &LearnedParams) -> CopyEngineParams {
+        self.params.ce.with_learned(l)
     }
 
     /// The *effective* NIC params (see [`Self::ce_eff`]).
     pub fn nic_eff(&self) -> NicParams {
-        self.params.nic.with_learned(&self.model.get())
+        self.nic_eff_at(&self.model.get())
+    }
+
+    /// [`Self::nic_eff`] against one caller-held snapshot (see
+    /// [`Self::ce_eff_at`]).
+    pub fn nic_eff_at(&self, l: &LearnedParams) -> NicParams {
+        self.params.nic.with_learned(l)
     }
 
     // ----------------------------------------------------------- paths ----
@@ -261,7 +274,19 @@ impl CostModel {
         chunk_cap: usize,
         cl_immediate_max: usize,
     ) -> (usize, usize) {
-        let ce = self.ce_eff();
+        self.stripe_for_at(&self.model.get(), loc, bytes, chunk_cap, cl_immediate_max)
+    }
+
+    /// [`Self::stripe_for`] against one caller-held snapshot.
+    pub fn stripe_for_at(
+        &self,
+        l: &LearnedParams,
+        loc: Locality,
+        bytes: usize,
+        chunk_cap: usize,
+        cl_immediate_max: usize,
+    ) -> (usize, usize) {
+        let ce = self.ce_eff_at(l);
         let w_max = ce.stripe_max_engines.clamp(1, ce.engines_per_gpu.max(1));
         stripe_scan(bytes, chunk_cap, ce.chunk_min_bytes, w_max, |w, chunk, n| {
             let imm = chunk <= cl_immediate_max;
@@ -276,7 +301,17 @@ impl CostModel {
     /// never chunks — the transfer stays one RDMA, preserving the
     /// pre-striping single-rail estimates exactly.
     pub fn rail_stripe_for(&self, bytes: usize, chunk_cap: usize) -> (usize, usize) {
-        let nic = self.nic_eff();
+        self.rail_stripe_for_at(&self.model.get(), bytes, chunk_cap)
+    }
+
+    /// [`Self::rail_stripe_for`] against one caller-held snapshot.
+    pub fn rail_stripe_for_at(
+        &self,
+        l: &LearnedParams,
+        bytes: usize,
+        chunk_cap: usize,
+    ) -> (usize, usize) {
+        let nic = self.nic_eff_at(l);
         if nic.rails <= 1 {
             return (bytes.max(1), 1);
         }
@@ -298,11 +333,27 @@ impl CostModel {
         immediate_cl: bool,
         chunk_cap: usize,
     ) -> f64 {
+        self.p2p_engine_estimate_capped_ns_at(&self.model.get(), loc, bytes, immediate_cl, chunk_cap)
+    }
+
+    /// [`Self::p2p_engine_estimate_capped_ns`] against one caller-held
+    /// snapshot. Both terms (the stripe scan and the striped pipeline)
+    /// price against the same generation — this estimate used to read the
+    /// live params twice and could tear across a concurrent calibration
+    /// apply.
+    pub fn p2p_engine_estimate_capped_ns_at(
+        &self,
+        l: &LearnedParams,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        chunk_cap: usize,
+    ) -> f64 {
         let cl_max = if immediate_cl { usize::MAX } else { 0 };
-        let (chunk, width) = self.stripe_for(loc, bytes, chunk_cap, cl_max);
+        let (chunk, width) = self.stripe_for_at(l, loc, bytes, chunk_cap, cl_max);
         let n = bytes.max(1).div_ceil(chunk.max(1));
         self.ring_rtt_ns()
-            + self.ce_eff().striped_transfer_ns(
+            + self.ce_eff_at(l).striped_transfer_ns(
                 &self.params.xe,
                 loc,
                 bytes,
@@ -343,15 +394,43 @@ impl CostModel {
         chunk_cap: usize,
         backlog_bytes: u64,
     ) -> f64 {
-        self.p2p_engine_estimate_capped_ns(loc, bytes, immediate_cl, chunk_cap)
-            + self.engine_drain_ns(loc, backlog_bytes)
+        self.p2p_engine_estimate_capped_loaded_ns_at(
+            &self.model.get(),
+            loc,
+            bytes,
+            immediate_cl,
+            chunk_cap,
+            backlog_bytes,
+        )
+    }
+
+    /// [`Self::p2p_engine_estimate_capped_loaded_ns`] against one
+    /// caller-held snapshot (the pure estimate *and* the drain term price
+    /// against the same generation — this formula used to read the live
+    /// params three times).
+    pub fn p2p_engine_estimate_capped_loaded_ns_at(
+        &self,
+        l: &LearnedParams,
+        loc: Locality,
+        bytes: usize,
+        immediate_cl: bool,
+        chunk_cap: usize,
+        backlog_bytes: u64,
+    ) -> f64 {
+        self.p2p_engine_estimate_capped_ns_at(l, loc, bytes, immediate_cl, chunk_cap)
+            + self.engine_drain_ns_at(l, loc, backlog_bytes)
     }
 
     /// Time to drain `backlog_bytes` already queued on a GPU's engines at
     /// the aggregate engine rate (the occupancy term of the loaded
     /// estimates).
     pub fn engine_drain_ns(&self, loc: Locality, backlog_bytes: u64) -> f64 {
-        let ce = self.ce_eff();
+        self.engine_drain_ns_at(&self.model.get(), loc, backlog_bytes)
+    }
+
+    /// [`Self::engine_drain_ns`] against one caller-held snapshot.
+    pub fn engine_drain_ns_at(&self, l: &LearnedParams, loc: Locality, backlog_bytes: u64) -> f64 {
+        let ce = self.ce_eff_at(l);
         let bw = ce.striped_bw_gbs(&self.params.xe, loc, ce.engines_per_gpu);
         if bw > 0.0 {
             backlog_bytes as f64 / bw
@@ -432,7 +511,12 @@ impl CostModel {
     /// the aggregate rail rate (the occupancy term of the loaded remote
     /// estimate).
     pub fn rail_drain_ns(&self, backlog_bytes: u64) -> f64 {
-        let nic = self.nic_eff();
+        self.rail_drain_ns_at(&self.model.get(), backlog_bytes)
+    }
+
+    /// [`Self::rail_drain_ns`] against one caller-held snapshot.
+    pub fn rail_drain_ns_at(&self, l: &LearnedParams, backlog_bytes: u64) -> f64 {
+        let nic = self.nic_eff_at(l);
         let bw = nic.rail_striped_bw_gbs(nic.rails);
         if bw > 0.0 {
             backlog_bytes as f64 / bw
@@ -476,6 +560,26 @@ impl CostModel {
         width: usize,
         chunks: usize,
     ) -> f64 {
+        self.internode_striped_ns_at(
+            &self.model.get(),
+            bytes,
+            registered_heap,
+            via_ring,
+            width,
+            chunks,
+        )
+    }
+
+    /// [`Self::internode_striped_ns`] against one caller-held snapshot.
+    pub fn internode_striped_ns_at(
+        &self,
+        l: &LearnedParams,
+        bytes: usize,
+        registered_heap: bool,
+        via_ring: bool,
+        width: usize,
+        chunks: usize,
+    ) -> f64 {
         if !registered_heap {
             return self.internode_ns(bytes, false, via_ring);
         }
@@ -485,7 +589,7 @@ impl CostModel {
             0.0
         };
         ring + self.params.overhead.host_issue_ns
-            + self.nic_eff().rdma_striped_ns(bytes, width, chunks)
+            + self.nic_eff_at(l).rdma_striped_ns(bytes, width, chunks)
     }
 
     // --------------------------------------------------- time-to-first-byte
@@ -496,7 +600,17 @@ impl CostModel {
     /// 1) strictly shrinks the fill term, so the first engine starts
     /// earlier at equal total bytes.
     pub fn engine_ttfb_ns(&self, chunk_bytes: usize, immediate_cl: bool) -> f64 {
-        let ce = self.ce_eff();
+        self.engine_ttfb_ns_at(&self.model.get(), chunk_bytes, immediate_cl)
+    }
+
+    /// [`Self::engine_ttfb_ns`] against one caller-held snapshot.
+    pub fn engine_ttfb_ns_at(
+        &self,
+        l: &LearnedParams,
+        chunk_bytes: usize,
+        immediate_cl: bool,
+    ) -> f64 {
+        let ce = self.ce_eff_at(l);
         let startup = if immediate_cl {
             ce.startup_immediate_ns
         } else {
@@ -812,6 +926,70 @@ mod tests {
             m.p2p_engine_estimate_ns(loc, big, true).to_bits(),
             before_engine.to_bits()
         );
+    }
+
+    #[test]
+    fn snapshot_threaded_estimates_match_the_public_wrappers() {
+        // The `_at` variants against the current generation are the same
+        // formulas the no-snapshot entry points compute — bit-for-bit,
+        // before and after a calibration apply.
+        let m = model();
+        for pass in 0..2 {
+            let l = m.model.get();
+            for loc in [Locality::SameTile, Locality::SameGpu, Locality::SameNode] {
+                for bytes in [64usize, 4096, 1 << 20, 8 << 20] {
+                    assert_eq!(
+                        m.p2p_engine_estimate_capped_ns_at(&l, loc, bytes, true, 1 << 20)
+                            .to_bits(),
+                        m.p2p_engine_estimate_capped_ns(loc, bytes, true, 1 << 20).to_bits(),
+                        "pass {pass} {loc:?}/{bytes}B"
+                    );
+                    assert_eq!(
+                        m.p2p_engine_estimate_capped_loaded_ns_at(
+                            &l, loc, bytes, false, 1 << 20, 8 << 20
+                        )
+                        .to_bits(),
+                        m.p2p_engine_estimate_capped_loaded_ns(loc, bytes, false, 1 << 20, 8 << 20)
+                            .to_bits(),
+                    );
+                    assert_eq!(
+                        m.stripe_for_at(&l, loc, bytes, 1 << 20, 64 << 10),
+                        m.stripe_for(loc, bytes, 1 << 20, 64 << 10),
+                    );
+                }
+            }
+            for bytes in [4096usize, 1 << 20, 8 << 20] {
+                assert_eq!(
+                    m.rail_stripe_for_at(&l, bytes, 1 << 20),
+                    m.rail_stripe_for(bytes, 1 << 20),
+                );
+                let (c, w) = m.rail_stripe_for(bytes, usize::MAX);
+                let n = bytes.div_ceil(c.max(1));
+                assert_eq!(
+                    m.internode_striped_ns_at(&l, bytes, true, true, w, n).to_bits(),
+                    m.internode_striped_ns(bytes, true, true, w, n).to_bits(),
+                );
+            }
+            assert_eq!(
+                m.engine_drain_ns_at(&l, Locality::SameNode, 64 << 20).to_bits(),
+                m.engine_drain_ns(Locality::SameNode, 64 << 20).to_bits(),
+            );
+            assert_eq!(
+                m.rail_drain_ns_at(&l, 64 << 20).to_bits(),
+                m.rail_drain_ns(64 << 20).to_bits(),
+            );
+            assert_eq!(
+                m.engine_ttfb_ns_at(&l, 1 << 20, true).to_bits(),
+                m.engine_ttfb_ns(1 << 20, true).to_bits(),
+            );
+            if pass == 0 {
+                m.model.update(|l| {
+                    l.single_engine_frac = 0.5;
+                    l.rail_bw_frac = 0.5;
+                    l.startup_standard_ns = 9_000.0;
+                });
+            }
+        }
     }
 
     #[test]

@@ -25,6 +25,6 @@ pub mod xelink;
 pub use clock::SimClock;
 pub use cost::{CostModel, CostParams};
 pub use memory::{HeapRegistry, SymHeap};
-pub use params::{LearnedParams, ModelParams};
+pub use params::{LearnedParams, ModelParams, ParamsSnapshot};
 pub use rail::RailSet;
 pub use topology::{Locality, PeId, Topology};

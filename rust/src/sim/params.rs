@@ -29,8 +29,7 @@
 //! [`CostModel::ce_eff`]: super::cost::CostModel::ce_eff
 //! [`CostModel::nic_eff`]: super::cost::CostModel::nic_eff
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use super::cost::CostParams;
 
@@ -76,24 +75,42 @@ impl LearnedParams {
     }
 }
 
-#[derive(Debug)]
-struct Inner {
-    /// The configured seed — the calibrator's clamp anchor
-    /// (`calib.clamp_frac` bounds how far live values may drift from it).
-    seed: LearnedParams,
-    /// The live values every estimate reads.
-    live: LearnedParams,
+/// One immutable published generation of the learned params: the live
+/// values *and* the version that produced them, bound together so a
+/// reader can never observe params from one generation stamped with
+/// another generation's version (the param-tearing class of bug).
+///
+/// A planning pass grabs one snapshot up front and threads the same
+/// `Arc` through every estimate term — mid-pass calibration applies
+/// publish a *new* snapshot and never mutate this one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParamsSnapshot {
+    /// The live learned values at publication time.
+    pub params: LearnedParams,
+    /// The model version these values belong to. 0 = pure config.
+    pub version: u64,
 }
 
 /// Mutable, versioned store of [`LearnedParams`], shared machine-wide via
-/// the `CostModel`. Reads are a cheap copy under an uncontended RwLock;
-/// writes go through [`Self::update`], which bumps the version counter
-/// *only* when a value actually changed — the version is the staleness
-/// token plans and adaptive cells carry.
+/// the `CostModel`.
+///
+/// Publication is arc-swap style: the current generation lives in one
+/// immutable [`ParamsSnapshot`] behind an `Arc`, and the calibrator's
+/// apply path replaces the whole `Arc` atomically — readers clone the
+/// `Arc` (one refcount bump under a read lock held for nanoseconds) and
+/// then read params + version lock-free for the rest of the planning
+/// pass. The version lives *inside* the snapshot, so (params, version)
+/// can never tear. Writes go through [`Self::update`], which bumps the
+/// version *only* when a value actually changed — the version is the
+/// staleness token plans and adaptive cells carry.
 #[derive(Debug)]
 pub struct ModelParams {
-    inner: RwLock<Inner>,
-    version: AtomicU64,
+    /// The configured seed — the calibrator's clamp anchor
+    /// (`calib.clamp_frac` bounds how far live values may drift from it).
+    seed: RwLock<LearnedParams>,
+    /// The published generation. The lock guards only the `Arc` swap
+    /// itself (a refcount op), never the params behind it.
+    snap: RwLock<Arc<ParamsSnapshot>>,
 }
 
 impl ModelParams {
@@ -102,38 +119,49 @@ impl ModelParams {
     pub fn new(params: &CostParams) -> Self {
         let seed = LearnedParams::from_cost(params);
         ModelParams {
-            inner: RwLock::new(Inner { seed, live: seed }),
-            version: AtomicU64::new(0),
+            seed: RwLock::new(seed),
+            snap: RwLock::new(Arc::new(ParamsSnapshot { params: seed, version: 0 })),
         }
+    }
+
+    /// The current published generation: live params + their version as
+    /// one immutable unit. Cheap (one `Arc` clone); hold it across a
+    /// whole planning pass so every term prices against one generation.
+    pub fn snapshot(&self) -> Arc<ParamsSnapshot> {
+        Arc::clone(&self.snap.read().unwrap())
     }
 
     /// The live learned values (what every estimate uses).
     pub fn get(&self) -> LearnedParams {
-        self.inner.read().unwrap().live
+        self.snap.read().unwrap().params
     }
 
     /// The configured seed values (the calibrator's clamp anchor).
     pub fn seed(&self) -> LearnedParams {
-        self.inner.read().unwrap().seed
+        *self.seed.read().unwrap()
     }
 
     /// Current model version. 0 = never recalibrated (pure config).
     pub fn version(&self) -> u64 {
-        self.version.load(Ordering::Acquire)
+        self.snap.read().unwrap().version
     }
 
-    /// Apply a calibration update. The version bumps once per call *iff*
-    /// any live value changed; a no-op closure leaves the version (and
-    /// therefore every stamped plan and adaptive cell) untouched.
-    /// Returns the version after the call.
+    /// Apply a calibration update. The closure mutates a copy of the live
+    /// values; if anything actually changed a new snapshot (params +
+    /// bumped version) is published atomically — in-flight readers keep
+    /// their old generation untouched. A no-op closure publishes nothing
+    /// and leaves the version (and therefore every stamped plan and
+    /// adaptive cell) untouched. Returns the version after the call.
     pub fn update(&self, f: impl FnOnce(&mut LearnedParams)) -> u64 {
-        let mut inner = self.inner.write().unwrap();
-        let before = inner.live;
-        f(&mut inner.live);
-        if inner.live != before {
-            self.version.fetch_add(1, Ordering::AcqRel) + 1
+        let mut snap = self.snap.write().unwrap();
+        let mut live = snap.params;
+        f(&mut live);
+        if live != snap.params {
+            let version = snap.version + 1;
+            *snap = Arc::new(ParamsSnapshot { params: live, version });
+            version
         } else {
-            self.version.load(Ordering::Acquire)
+            snap.version
         }
     }
 
@@ -141,21 +169,25 @@ impl ModelParams {
     /// configuration, not a calibration event: seed *and* live move, the
     /// version does not).
     pub fn seed_cl_boundary(&self, bytes: usize) {
-        let mut inner = self.inner.write().unwrap();
-        inner.seed.cl_immediate_max_bytes = bytes;
-        inner.live.cl_immediate_max_bytes = bytes;
+        self.seed.write().unwrap().cl_immediate_max_bytes = bytes;
+        let mut snap = self.snap.write().unwrap();
+        let mut params = snap.params;
+        params.cl_immediate_max_bytes = bytes;
+        *snap = Arc::new(ParamsSnapshot { params, version: snap.version });
     }
 
     /// Discard everything learned: live returns to the seed. Bumps the
     /// version iff anything had been learned (so dependent state ages out
     /// exactly once).
     pub fn reset(&self) -> u64 {
-        let mut inner = self.inner.write().unwrap();
-        if inner.live != inner.seed {
-            inner.live = inner.seed;
-            self.version.fetch_add(1, Ordering::AcqRel) + 1
+        let seed = *self.seed.read().unwrap();
+        let mut snap = self.snap.write().unwrap();
+        if snap.params != seed {
+            let version = snap.version + 1;
+            *snap = Arc::new(ParamsSnapshot { params: seed, version });
+            version
         } else {
-            self.version.load(Ordering::Acquire)
+            snap.version
         }
     }
 }
@@ -202,6 +234,32 @@ mod tests {
         assert_eq!(m.get().cl_immediate_max_bytes, 64 << 10);
         assert_eq!(m.seed().cl_immediate_max_bytes, 64 << 10);
         assert_eq!(m.version(), 0);
+    }
+
+    #[test]
+    fn snapshot_binds_params_and_version_immutably() {
+        let m = ModelParams::new(&CostParams::default());
+        let s0 = m.snapshot();
+        assert_eq!(s0.version, 0);
+        assert_eq!(s0.params, m.get());
+        // Publishing a new generation leaves the held snapshot untouched.
+        let v = m.update(|l| l.single_engine_frac = 0.5);
+        assert_eq!(v, 1);
+        assert_eq!(s0.version, 0, "held snapshot keeps its generation");
+        assert_eq!(
+            s0.params.single_engine_frac,
+            CostParams::default().ce.single_engine_frac
+        );
+        let s1 = m.snapshot();
+        assert_eq!(s1.version, 1);
+        assert_eq!(s1.params.single_engine_frac, 0.5);
+        // seed_cl_boundary re-publishes (same version, new boundary) so a
+        // fresh snapshot sees the boundary without a calibration event.
+        m.seed_cl_boundary(64 << 10);
+        let s2 = m.snapshot();
+        assert_eq!(s2.version, 1);
+        assert_eq!(s2.params.cl_immediate_max_bytes, 64 << 10);
+        assert_eq!(s1.params.cl_immediate_max_bytes, usize::MAX);
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! A tiny non-cryptographic hasher for hot-path hash maps.
+//!
+//! `std`'s default `SipHash` is DoS-resistant but costs real nanoseconds
+//! per lookup — too much for the plan cache and the sharded adaptive
+//! table, which sit on the per-op issue path and hash only small
+//! fixed-shape keys built from trusted internal state (no attacker-
+//! controlled strings). This is the FxHash construction (rustc's own
+//! internal hasher): fold the input in 8-byte words through a rotate,
+//! xor, multiply. No vendored crates in the offline set, so it lives
+//! here, from scratch.
+
+use std::hash::{BuildHasher, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash-style word-at-a-time hasher. Implements the generic
+/// `write(&[u8])`, so every derived `Hash` impl (structs, enums, the
+/// discriminant writes) funnels through the same fold.
+#[derive(Clone, Debug, Default)]
+pub struct FastHasher {
+    state: u64,
+}
+
+impl FastHasher {
+    #[inline]
+    fn fold(&mut self, word: u64) {
+        self.state = (self.state.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.fold(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            // Length in the pad byte keeps "ab" and "ab\0" distinct.
+            buf[7] = buf[7].wrapping_add(rem.len() as u8);
+            self.fold(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.fold(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.fold(v as u64);
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.fold(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.fold(v as u64);
+    }
+}
+
+/// `BuildHasher` plugging [`FastHasher`] into `HashMap`:
+/// `HashMap::with_hasher(FastState)`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FastState;
+
+impl BuildHasher for FastState {
+    type Hasher = FastHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FastHasher {
+        FastHasher::default()
+    }
+}
+
+/// Hash one value with [`FastHasher`] (shard selection).
+#[inline]
+pub fn fast_hash<T: std::hash::Hash>(v: &T) -> u64 {
+    let mut h = FastHasher::default();
+    v.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn equal_keys_hash_equal_and_maps_work() {
+        #[derive(Hash, PartialEq, Eq, Clone, Copy, Debug)]
+        struct Key {
+            a: usize,
+            b: u64,
+            c: bool,
+        }
+        let k1 = Key { a: 7, b: 1 << 40, c: true };
+        let k2 = Key { a: 7, b: 1 << 40, c: true };
+        assert_eq!(fast_hash(&k1), fast_hash(&k2));
+        let mut m: HashMap<Key, u32, FastState> = HashMap::with_hasher(FastState);
+        m.insert(k1, 99);
+        assert_eq!(m.get(&k2), Some(&99));
+    }
+
+    #[test]
+    fn nearby_keys_spread() {
+        // Not a statistical test — just catch a degenerate fold that maps
+        // small consecutive keys onto a handful of buckets.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0u64..1000 {
+            seen.insert(fast_hash(&i) % 64);
+        }
+        assert!(seen.len() >= 48, "spread over {}/64 buckets", seen.len());
+    }
+
+    #[test]
+    fn byte_slices_of_different_length_differ() {
+        assert_ne!(fast_hash(&[1u8, 2, 3][..]), fast_hash(&[1u8, 2, 3, 0][..]));
+        assert_ne!(fast_hash(&"ab"), fast_hash(&"ab\0"));
+    }
+}

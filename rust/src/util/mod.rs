@@ -4,6 +4,7 @@
 //! so a few things that would normally be dependencies (JSON, RNG, a
 //! property-test driver) are implemented here from scratch and unit-tested.
 
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -18,7 +18,8 @@ use std::sync::Mutex;
 
 use crate::ishmem::cutover::Path;
 use crate::sim::topology::Locality;
-use crate::util::rng::Rng;
+use crate::util::hash::{fast_hash, FastState};
+use crate::util::rng::AtomicRng;
 
 /// One learned-threshold cell key: (locality, log2 size, log2 items),
 /// split by op class — fan-out observations measure a whole one-to-many
@@ -132,10 +133,21 @@ impl AdaptiveCell {
     }
 }
 
+/// How many independent cell shards the table splits into: concurrent
+/// planners touching different buckets lock different shards, so the
+/// issue path never funnels every decision through one global `Mutex`.
+const SHARDS: usize = 8;
+
 /// Learned per-bucket path costs, shared by every PE of a machine.
+///
+/// The cell map is sharded by key hash and the ε-exploration stream is a
+/// lock-free [`AtomicRng`], so concurrent planners only contend when they
+/// hash into the same shard — the table never serializes the whole issue
+/// path the way the former single `Mutex<HashMap>` + `Mutex<Rng>` pair
+/// did.
 #[derive(Debug)]
 pub struct AdaptiveTable {
-    cells: Mutex<HashMap<BucketKey, CellState>>,
+    shards: Vec<Mutex<HashMap<BucketKey, CellState, FastState>>>,
     /// EMA weight of a new observation (0 < alpha ≤ 1).
     alpha: f64,
     /// ε-exploration rate: with probability `eps` a decision takes the
@@ -143,19 +155,26 @@ pub struct AdaptiveTable {
     /// it a mis-seeded cell can never recover the path it stopped trying
     /// (0 = greedy, the default).
     eps: f64,
-    /// Deterministic exploration stream (fixed seed — decisions replay).
-    rng: Mutex<Rng>,
+    /// Deterministic exploration stream (fixed seed — single-threaded
+    /// decisions replay the exact pre-sharding `Mutex<Rng>` sequence).
+    rng: AtomicRng,
 }
 
 impl AdaptiveTable {
     pub fn new(alpha: f64) -> Self {
         assert!(alpha > 0.0 && alpha <= 1.0, "EMA alpha out of (0, 1]");
         AdaptiveTable {
-            cells: Mutex::new(HashMap::new()),
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::with_hasher(FastState))).collect(),
             alpha,
             eps: 0.0,
-            rng: Mutex::new(Rng::new(0xADA9_71CE)),
+            rng: AtomicRng::new(0xADA9_71CE),
         }
+    }
+
+    /// The shard holding `key`'s cell.
+    #[inline]
+    fn shard(&self, key: &BucketKey) -> &Mutex<HashMap<BucketKey, CellState, FastState>> {
+        &self.shards[(fast_hash(key) as usize) % SHARDS]
     }
 
     /// Enable ε-exploration (clamped to [0, 0.5]; 0 disables it).
@@ -185,7 +204,7 @@ impl AdaptiveTable {
         model_version: u64,
     ) -> Path {
         let greedy = {
-            let mut cells = self.cells.lock().unwrap();
+            let mut cells = self.shard(&key).lock().unwrap();
             let cell = cells.entry(key).or_insert(CellState {
                 ema_ns: [seed_loadstore_ns, seed_copy_engine_ns],
                 samples: [0, 0],
@@ -200,7 +219,7 @@ impl AdaptiveTable {
             }
             argmin_path(cell.ema_ns[0], cell.ema_ns[1])
         };
-        if self.eps > 0.0 && self.rng.lock().unwrap().f64() < self.eps {
+        if self.eps > 0.0 && self.rng.f64() < self.eps {
             return match greedy {
                 Path::LoadStore => Path::CopyEngine,
                 Path::CopyEngine => Path::LoadStore,
@@ -218,7 +237,7 @@ impl AdaptiveTable {
     /// before a recalibration must not pollute a cell that has since been
     /// re-seeded for the new model — it is dropped instead.
     pub fn observe(&self, key: BucketKey, path: Path, observed_ns: f64, model_version: u64) -> bool {
-        let mut cells = self.cells.lock().unwrap();
+        let mut cells = self.shard(&key).lock().unwrap();
         if let Some(cell) = cells.get_mut(&key) {
             if cell.model_version != model_version {
                 return false;
@@ -234,13 +253,13 @@ impl AdaptiveTable {
 
     /// Read a cell's current choice without creating/seeding it.
     pub fn peek(&self, key: BucketKey) -> Option<Path> {
-        let cells = self.cells.lock().unwrap();
+        let cells = self.shard(&key).lock().unwrap();
         cells.get(&key).map(|c| argmin_path(c.ema_ns[0], c.ema_ns[1]))
     }
 
     /// Number of learned cells.
     pub fn len(&self) -> usize {
-        self.cells.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -250,18 +269,18 @@ impl AdaptiveTable {
     /// Snapshot of the whole table, sorted by (class, loc, peers, rails,
     /// items, size).
     pub fn snapshot(&self) -> Vec<AdaptiveCell> {
-        let cells = self.cells.lock().unwrap();
-        let mut v: Vec<AdaptiveCell> = cells
-            .iter()
-            .map(|(k, c)| AdaptiveCell {
+        let mut v: Vec<AdaptiveCell> = Vec::new();
+        for shard in &self.shards {
+            let cells = shard.lock().unwrap();
+            v.extend(cells.iter().map(|(k, c)| AdaptiveCell {
                 key: *k,
                 ema_loadstore_ns: c.ema_ns[0],
                 ema_copy_engine_ns: c.ema_ns[1],
                 samples_loadstore: c.samples[0],
                 samples_copy_engine: c.samples[1],
                 model_version: c.model_version,
-            })
-            .collect();
+            }));
+        }
         v.sort_by_key(|c| {
             (
                 c.key.fanout,
@@ -280,9 +299,8 @@ impl AdaptiveTable {
     /// EMAs and sample counts included, so a loaded table decides exactly
     /// like the run that saved it.
     pub fn load_cells(&self, cells: &[AdaptiveCell]) {
-        let mut map = self.cells.lock().unwrap();
         for c in cells {
-            map.insert(
+            self.shard(&c.key).lock().unwrap().insert(
                 c.key,
                 CellState {
                     ema_ns: [c.ema_loadstore_ns, c.ema_copy_engine_ns],
@@ -406,6 +424,29 @@ mod tests {
         let ac = &cells[0];
         assert_eq!(bc.samples_loadstore, ac.samples_loadstore);
         assert_eq!(bc.ema_loadstore_ns, ac.ema_loadstore_ns);
+    }
+
+    #[test]
+    fn concurrent_planners_learn_without_losing_updates() {
+        // 4 threads × 64 keys spread across the shards: every decide
+        // seeds its cell and every observe lands — the sharded table is
+        // a drop-in for the old globally-locked map.
+        let t = AdaptiveTable::new(0.5).with_exploration(0.1);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for i in 0..64usize {
+                        let k = BucketKey::p2p(Locality::SameNode, 1 << (i % 16), i);
+                        t.decide(k, 100.0, 200.0, 0);
+                        assert!(t.observe(k, Path::LoadStore, 150.0, 0));
+                    }
+                });
+            }
+        });
+        let cells = t.snapshot();
+        assert_eq!(cells.len(), t.len());
+        let total: u64 = cells.iter().map(|c| c.samples_loadstore).sum();
+        assert_eq!(total, 4 * 64, "every concurrent observation landed");
     }
 
     #[test]

@@ -57,6 +57,6 @@ pub mod track;
 
 pub use adaptive::{AdaptiveCell, AdaptiveTable, BucketKey};
 pub use calibrate::{CalibConfig, CalibrationSnapshot, Calibrator};
-pub use plan::{FanoutShape, OpKind, Route, TransferPlan, XferEngine};
+pub use plan::{FanoutShape, OpKind, PlanCacheConfig, Route, TransferPlan, XferEngine};
 pub use stream::CmdStream;
 pub use track::CompletionTracker;

@@ -7,12 +7,16 @@
 //! queue-aware actual costs and feed them back via [`XferEngine::record`]
 //! so `CutoverMode::Adaptive` learns online.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::metrics::Metrics;
 use crate::ishmem::cutover::{CutoverConfig, CutoverMode, Path};
+use crate::sim::params::ParamsSnapshot;
 use crate::sim::topology::Locality;
 use crate::sim::CostModel;
+use crate::util::hash::{fast_hash, FastState};
 
 use super::adaptive::{argmin_path, AdaptiveCell, AdaptiveTable, BucketKey};
 
@@ -55,7 +59,7 @@ impl Route {
 /// A planned device-initiated transfer: everything the executor and the
 /// completion tracker need, plus the modeled costs that justified the
 /// choice (kept for adaptive feedback and reports).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TransferPlan {
     pub kind: OpKind,
     pub loc: Locality,
@@ -142,6 +146,186 @@ impl Default for FanoutShape {
     }
 }
 
+// ------------------------------------------------------- plan cache ------
+
+/// Knobs for the planner's memoized structural plans (`plan_cache.*` in
+/// `IshmemConfig`): `enable` turns the cache off entirely (planning is
+/// then recomputed from the model on every op — bit-for-bit the same
+/// plans, just slower), `capacity` bounds the total cached entries
+/// across all shards.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanCacheConfig {
+    pub enable: bool,
+    pub capacity: usize,
+}
+
+impl Default for PlanCacheConfig {
+    fn default() -> Self {
+        PlanCacheConfig { enable: true, capacity: 4096 }
+    }
+}
+
+/// Cache key: everything the *structural* part of a point-to-point plan
+/// depends on besides the learned params. Exact `bytes` (not a size
+/// class) so a hit reproduces the uncached plan bitwise. `OpKind` is
+/// deliberately absent — it never enters the estimates. The learned-param
+/// generation is stamped on the entry, not the key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    reachable: bool,
+    loc: Locality,
+    bytes: usize,
+    items: usize,
+}
+
+/// The memoized pure portion of a plan: stripe geometry plus zero-backlog
+/// estimates. Everything occupancy- or adaptive-dependent (engine/rail
+/// drain terms, the route decision itself, ε-exploration draws) is
+/// re-applied live on every hit, so cached and uncached planning agree
+/// exactly — including side effects on the adaptive table.
+#[derive(Clone, Copy, Debug)]
+struct CachedShape {
+    chunk: usize,
+    width: usize,
+    /// Load/store path estimate (0.0 for unreachable targets, which have
+    /// no intra-node alternative).
+    ls_ns: f64,
+    /// Chosen-lane pure estimate: the striped engine pipeline for
+    /// reachable targets, the rail-striped RDMA for remote ones. No
+    /// occupancy terms.
+    pure_ns: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct CacheEntry {
+    shape: CachedShape,
+    /// Learned-params generation the shape was priced under.
+    model_version: u64,
+    /// The CL boundary is re-seedable *without* a version bump
+    /// (`seed_cl_boundary`), so it stamps separately.
+    cl_boundary: usize,
+}
+
+/// Sharded memo of structural plans. Lock-light: 8 shards keyed by
+/// [`fast_hash`], each a small mutexed map; generation churn is detected
+/// by relaxed stamps and flushes wholesale, with a per-entry stamp check
+/// as the backstop for racing writers holding older snapshots.
+#[derive(Debug)]
+struct PlanCache {
+    cfg: PlanCacheConfig,
+    shards: Vec<Mutex<HashMap<PlanKey, CacheEntry, FastState>>>,
+    /// Per-shard entry cap derived from `cfg.capacity`.
+    shard_cap: usize,
+    /// Generation the cached population was priced under (relaxed — the
+    /// per-entry stamps make any race benign).
+    stamp_version: AtomicU64,
+    stamp_boundary: AtomicU64,
+}
+
+const CACHE_SHARDS: usize = 8;
+
+impl PlanCache {
+    fn new(cfg: PlanCacheConfig) -> Self {
+        let shard_cap = cfg.capacity.div_ceil(CACHE_SHARDS).max(1);
+        PlanCache {
+            cfg,
+            shards: (0..CACHE_SHARDS)
+                .map(|_| Mutex::new(HashMap::with_hasher(FastState)))
+                .collect(),
+            shard_cap,
+            stamp_version: AtomicU64::new(0),
+            stamp_boundary: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &PlanKey) -> &Mutex<HashMap<PlanKey, CacheEntry, FastState>> {
+        &self.shards[(fast_hash(key) as usize) % CACHE_SHARDS]
+    }
+
+    /// Flush the whole population when the learned-params generation (or
+    /// the separately re-seedable CL boundary) moved since the cache was
+    /// filled. Two planners racing with different snapshots at worst
+    /// flush twice; a stale writer that sneaks an old-generation entry in
+    /// afterwards is caught by the per-entry stamp on its next lookup.
+    fn sync_generation(&self, snap: &ParamsSnapshot, metrics: &Metrics) {
+        let v = snap.version;
+        let b = snap.params.cl_immediate_max_bytes as u64;
+        if self.stamp_version.load(Ordering::Relaxed) == v
+            && self.stamp_boundary.load(Ordering::Relaxed) == b
+        {
+            return;
+        }
+        let mut dropped = 0u64;
+        for shard in &self.shards {
+            let mut m = shard.lock().unwrap();
+            dropped += m.len() as u64;
+            m.clear();
+        }
+        self.stamp_version.store(v, Ordering::Relaxed);
+        self.stamp_boundary.store(b, Ordering::Relaxed);
+        if dropped > 0 {
+            Metrics::add(&metrics.plan_cache_invalidations, dropped);
+        }
+    }
+
+    fn lookup(&self, snap: &ParamsSnapshot, key: &PlanKey, metrics: &Metrics) -> Option<CachedShape> {
+        if !self.cfg.enable {
+            return None;
+        }
+        self.sync_generation(snap, metrics);
+        let boundary = snap.params.cl_immediate_max_bytes;
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.get(key) {
+            Some(e) if e.model_version == snap.version && e.cl_boundary == boundary => {
+                let s = e.shape;
+                drop(shard);
+                Metrics::add(&metrics.plan_cache_hits, 1);
+                Some(s)
+            }
+            Some(_) => {
+                shard.remove(key);
+                drop(shard);
+                Metrics::add(&metrics.plan_cache_invalidations, 1);
+                Metrics::add(&metrics.plan_cache_misses, 1);
+                None
+            }
+            None => {
+                drop(shard);
+                Metrics::add(&metrics.plan_cache_misses, 1);
+                None
+            }
+        }
+    }
+
+    fn insert(&self, snap: &ParamsSnapshot, key: PlanKey, shape: CachedShape, metrics: &Metrics) {
+        if !self.cfg.enable {
+            return;
+        }
+        let mut shard = self.shard(&key).lock().unwrap();
+        if shard.len() >= self.shard_cap {
+            // Wholesale shard reset beats LRU bookkeeping on this path:
+            // the steady-state working set (distinct transfer shapes) is
+            // tiny next to the default capacity, so this fires ~never.
+            let dropped = shard.len() as u64;
+            shard.clear();
+            Metrics::add(&metrics.plan_cache_invalidations, dropped);
+        }
+        shard.insert(
+            key,
+            CacheEntry {
+                shape,
+                model_version: snap.version,
+                cl_boundary: snap.params.cl_immediate_max_bytes,
+            },
+        );
+    }
+
+    /// Live entry count (tests / reports).
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
 /// The unified transfer-plan engine: one per machine, shared by all PEs.
 #[derive(Debug)]
 pub struct XferEngine {
@@ -158,6 +342,7 @@ pub struct XferEngine {
     /// executor's slicing agree.
     pub chunk_max_bytes: usize,
     adaptive: AdaptiveTable,
+    cache: PlanCache,
     metrics: Arc<Metrics>,
 }
 
@@ -180,8 +365,20 @@ impl XferEngine {
             immediate_cl,
             chunk_max_bytes: DEFAULT_CHUNK_MAX_BYTES,
             adaptive: AdaptiveTable::new(alpha).with_exploration(eps),
+            cache: PlanCache::new(PlanCacheConfig::default()),
             metrics,
         }
+    }
+
+    /// Install the plan-cache knobs (`plan_cache.*`). Rebuilds the cache
+    /// empty — machine construction time only.
+    pub fn set_plan_cache(&mut self, cfg: PlanCacheConfig) {
+        self.cache = PlanCache::new(cfg);
+    }
+
+    /// Live cached-entry count (tests / reports).
+    pub fn plan_cache_len(&self) -> usize {
+        self.cache.len()
     }
 
     // ------------------------------------------------------ p2p planning --
@@ -208,10 +405,16 @@ impl XferEngine {
     /// executors' descriptor flags (so modeled decisions and charges use
     /// the same startup constant).
     pub fn cl_immediate_for(&self, bytes: usize) -> bool {
-        self.immediate_cl && bytes <= self.cl_immediate_max_bytes()
+        self.cl_immediate_for_at(&self.cost.model.snapshot(), bytes)
     }
 
-    /// Model the point-to-point load/store path (pure estimate).
+    /// [`Self::cl_immediate_for`] against one caller-held snapshot.
+    pub fn cl_immediate_for_at(&self, snap: &ParamsSnapshot, bytes: usize) -> bool {
+        self.immediate_cl && bytes <= snap.params.cl_immediate_max_bytes
+    }
+
+    /// Model the point-to-point load/store path (pure estimate; touches
+    /// no learned params, so there is no `_at` flavour).
     pub fn est_loadstore_ns(&self, loc: Locality, bytes: usize, items: usize) -> f64 {
         self.cost.loadstore_ns(loc, bytes, items)
     }
@@ -220,8 +423,13 @@ impl XferEngine {
     /// at or below this size run immediate command lists (0 when the
     /// global immediate enable bit is off).
     pub fn cl_immediate_boundary(&self) -> usize {
+        self.cl_immediate_boundary_at(&self.cost.model.snapshot())
+    }
+
+    /// [`Self::cl_immediate_boundary`] against one caller-held snapshot.
+    pub fn cl_immediate_boundary_at(&self, snap: &ParamsSnapshot) -> usize {
         if self.immediate_cl {
-            self.cl_immediate_max_bytes()
+            snap.params.cl_immediate_max_bytes
         } else {
             0
         }
@@ -233,22 +441,41 @@ impl XferEngine {
     /// boundary (candidates are scored at the startup flavor their
     /// chunks will actually use).
     pub fn stripe_for(&self, loc: Locality, bytes: usize) -> (usize, usize) {
-        self.cost
-            .stripe_for(loc, bytes, self.chunk_max_bytes, self.cl_immediate_boundary())
+        self.stripe_for_at(&self.cost.model.snapshot(), loc, bytes)
+    }
+
+    /// [`Self::stripe_for`] against one caller-held snapshot.
+    pub fn stripe_for_at(&self, snap: &ParamsSnapshot, loc: Locality, bytes: usize) -> (usize, usize) {
+        self.cost.stripe_for_at(
+            &snap.params,
+            loc,
+            bytes,
+            self.chunk_max_bytes,
+            self.cl_immediate_boundary_at(snap),
+        )
     }
 
     /// Estimate of the engine path for an already-chosen stripe shape:
     /// ring round trip + the striped chunk pipeline at this engine's CL
     /// flavour (same formula as [`CostModel::p2p_engine_estimate_capped_ns`],
-    /// without re-running the width scan).
-    fn est_engine_striped_ns(&self, loc: Locality, bytes: usize, chunk: usize, width: usize) -> f64 {
+    /// without re-running the width scan). Snapshot-threaded: the CL
+    /// choice and the effective engine params come from the same learned
+    /// generation, so a calibration landing mid-estimate cannot tear it.
+    fn est_engine_striped_ns_at(
+        &self,
+        snap: &ParamsSnapshot,
+        loc: Locality,
+        bytes: usize,
+        chunk: usize,
+        width: usize,
+    ) -> f64 {
         let n = bytes.max(1).div_ceil(chunk.max(1));
         self.cost.ring_rtt_ns()
-            + self.cost.ce_eff().striped_transfer_ns(
+            + self.cost.ce_eff_at(&snap.params).striped_transfer_ns(
                 &self.cost.params.xe,
                 loc,
                 bytes,
-                self.cl_immediate_for(chunk),
+                self.cl_immediate_for_at(snap, chunk),
                 false,
                 width,
                 n,
@@ -260,8 +487,9 @@ impl XferEngine {
     /// planner and formula with the policy-level reference in `cutover.rs`
     /// (which probes uncapped).
     pub fn est_copy_engine_ns(&self, loc: Locality, bytes: usize) -> f64 {
-        let (chunk, width) = self.stripe_for(loc, bytes);
-        self.est_engine_striped_ns(loc, bytes, chunk, width)
+        let snap = self.cost.model.snapshot();
+        let (chunk, width) = self.stripe_for_at(&snap, loc, bytes);
+        self.est_engine_striped_ns_at(&snap, loc, bytes, chunk, width)
     }
 
     /// Occupancy-aware engine estimate: folds the source GPU's live
@@ -275,10 +503,11 @@ impl XferEngine {
         loc: Locality,
         bytes: usize,
     ) -> f64 {
+        let snap = self.cost.model.snapshot();
         let backlog = src_gpu.map_or(0, |g| self.cost.engine_backlog_bytes(g));
-        let (chunk, width) = self.stripe_for(loc, bytes);
-        self.est_engine_striped_ns(loc, bytes, chunk, width)
-            + self.cost.engine_drain_ns(loc, backlog)
+        let (chunk, width) = self.stripe_for_at(&snap, loc, bytes);
+        self.est_engine_striped_ns_at(&snap, loc, bytes, chunk, width)
+            + self.cost.engine_drain_ns_at(&snap.params, loc, backlog)
     }
 
     /// The (chunk size, rail width) this engine's executor would use for
@@ -286,23 +515,85 @@ impl XferEngine {
     /// planner under this machine's staging-slab chunk cap (remote chunks
     /// stage through the same slab the engine pipeline double-buffers).
     pub fn rail_stripe_for(&self, bytes: usize) -> (usize, usize) {
-        self.cost.rail_stripe_for(bytes, self.chunk_max_bytes)
+        self.rail_stripe_for_at(&self.cost.model.snapshot(), bytes)
+    }
+
+    /// [`Self::rail_stripe_for`] against one caller-held snapshot.
+    pub fn rail_stripe_for_at(&self, snap: &ParamsSnapshot, bytes: usize) -> (usize, usize) {
+        self.cost.rail_stripe_for_at(&snap.params, bytes, self.chunk_max_bytes)
     }
 
     /// Estimate of the inter-node path for an already-chosen rail stripe
     /// shape: ring round trip + host proxy + the rail-striped RDMA
     /// (registered-heap assumption, like every planning estimate).
-    fn est_nic_striped_ns(&self, bytes: usize, chunk: usize, width: usize) -> f64 {
+    fn est_nic_striped_ns_at(
+        &self,
+        snap: &ParamsSnapshot,
+        bytes: usize,
+        chunk: usize,
+        width: usize,
+    ) -> f64 {
         let n = bytes.max(1).div_ceil(chunk.max(1));
-        self.cost.internode_striped_ns(bytes, true, true, width, n)
+        self.cost
+            .internode_striped_ns_at(&snap.params, bytes, true, true, width, n)
     }
 
     /// Model the inter-node path (registered-heap RDMA estimate) at the
     /// rail stripe shape the executor would use. A 1-rail configuration
     /// reproduces the pre-striping single-RDMA estimate exactly.
     pub fn est_nic_ns(&self, bytes: usize) -> f64 {
-        let (chunk, width) = self.rail_stripe_for(bytes);
-        self.est_nic_striped_ns(bytes, chunk, width)
+        let snap = self.cost.model.snapshot();
+        let (chunk, width) = self.rail_stripe_for_at(&snap, bytes);
+        self.est_nic_striped_ns_at(&snap, bytes, chunk, width)
+    }
+
+    /// The structural (pure, learned-generation-determined) portion of a
+    /// point-to-point plan: cache hit, or compute-and-fill.
+    fn shape_for(
+        &self,
+        snap: &ParamsSnapshot,
+        reachable: bool,
+        loc: Locality,
+        bytes: usize,
+        items: usize,
+    ) -> CachedShape {
+        let key = PlanKey { reachable, loc, bytes, items };
+        if let Some(s) = self.cache.lookup(snap, &key, &self.metrics) {
+            return s;
+        }
+        let s = self.compute_shape(snap, reachable, loc, bytes, items);
+        self.cache.insert(snap, key, s, &self.metrics);
+        s
+    }
+
+    /// One width scan + the pure path estimates, all against one snapshot.
+    /// This is the uncached planning body *and* the cache-fill path — a
+    /// single function, so cached and uncached plans cannot diverge.
+    fn compute_shape(
+        &self,
+        snap: &ParamsSnapshot,
+        reachable: bool,
+        loc: Locality,
+        bytes: usize,
+        items: usize,
+    ) -> CachedShape {
+        if !reachable {
+            let (chunk, width) = self.rail_stripe_for_at(snap, bytes);
+            CachedShape {
+                chunk,
+                width,
+                ls_ns: 0.0,
+                pure_ns: self.est_nic_striped_ns_at(snap, bytes, chunk, width),
+            }
+        } else {
+            let (chunk, width) = self.stripe_for_at(snap, loc, bytes);
+            CachedShape {
+                chunk,
+                width,
+                ls_ns: self.est_loadstore_ns(loc, bytes, items),
+                pure_ns: self.est_engine_striped_ns_at(snap, loc, bytes, chunk, width),
+            }
+        }
     }
 
     /// Plan a point-to-point transfer of `bytes` to a `loc`-distant PE by
@@ -333,20 +624,22 @@ impl XferEngine {
         bytes: usize,
         items: usize,
     ) -> TransferPlan {
-        // One version read covers the whole plan: the decision's cell
-        // aging and the plan stamp must agree even if a calibration lands
-        // mid-plan. (Estimates priced a recalibration later than this
-        // read self-heal: the next decision at the newer version re-seeds
-        // the touched cell.)
-        let model_version = self.cost.model.version();
+        // One snapshot covers the whole plan: every estimate term, the
+        // decision's cell aging and the plan stamp are priced under the
+        // same learned generation even if a calibration lands mid-plan.
+        // (Estimates priced a recalibration later than this read
+        // self-heal: the next decision at the newer version re-seeds the
+        // touched cell.) The structural portion — width scans and pure
+        // estimates, a pure function of (key, snapshot) — comes from the
+        // plan cache; the occupancy terms and the route decision are
+        // always re-applied live, so a hit is bitwise the uncached plan.
+        let snap = self.cost.model.snapshot();
+        let shape = self.shape_for(&snap, reachable, loc, bytes, items);
         if !reachable {
-            // Rail-striped remote shape: one width scan serves the
-            // estimate and the bound stripe geometry, and the source
-            // node's live rail backlog folds into the modeled cost (the
-            // remote twin of the engine-queue occupancy fold — there is
-            // no alternative route, but adaptive feedback and reports see
-            // the load).
-            let (chunk, width) = self.rail_stripe_for(bytes);
+            // Rail-striped remote shape: the source node's live rail
+            // backlog folds into the modeled cost (the remote twin of the
+            // engine-queue occupancy fold — there is no alternative
+            // route, but adaptive feedback and reports see the load).
             let rail_backlog = src_gpu.map_or(0, |g| {
                 self.cost
                     .rail_backlog_bytes(g / self.cost.topo.gpus_per_node.max(1))
@@ -358,27 +651,24 @@ impl XferEngine {
                 items,
                 peers: 1,
                 route: Route::Nic,
-                modeled_ns: self.est_nic_striped_ns(bytes, chunk, width)
-                    + self.cost.rail_drain_ns(rail_backlog),
+                modeled_ns: shape.pure_ns
+                    + self.cost.rail_drain_ns_at(&snap.params, rail_backlog),
                 alt_ns: None,
-                chunk_bytes: chunk,
-                stripe_width: width,
-                model_version,
+                chunk_bytes: shape.chunk,
+                stripe_width: shape.width,
+                model_version: snap.version,
             };
             self.count_plan(plan.route);
             return plan;
         }
-        // One width scan serves the estimate *and* the bound stripe shape.
-        let (chunk, width) = self.stripe_for(loc, bytes);
         let backlog = src_gpu.map_or(0, |g| self.cost.engine_backlog_bytes(g));
-        let ls = self.est_loadstore_ns(loc, bytes, items);
-        let ce = self.est_engine_striped_ns(loc, bytes, chunk, width)
-            + self.cost.engine_drain_ns(loc, backlog);
-        let path = self.decide(BucketKey::p2p(loc, bytes, items), bytes, ls, ce, model_version);
-        let mut plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce, model_version);
+        let ls = shape.ls_ns;
+        let ce = shape.pure_ns + self.cost.engine_drain_ns_at(&snap.params, loc, backlog);
+        let path = self.decide(BucketKey::p2p(loc, bytes, items), bytes, ls, ce, snap.version);
+        let mut plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce, snap.version);
         if plan.route == Route::CopyEngine {
-            plan.chunk_bytes = chunk;
-            plan.stripe_width = width;
+            plan.chunk_bytes = shape.chunk;
+            plan.stripe_width = shape.width;
         }
         self.count_plan(plan.route);
         plan
@@ -410,10 +700,19 @@ impl XferEngine {
     /// single reverse-offload up-call: engines run in parallel up to the
     /// per-GPU engine count, links still share bandwidth.
     pub fn fanout_engine_ns(&self, shape: &FanoutShape) -> f64 {
+        self.fanout_engine_ns_at(&self.cost.model.snapshot(), shape)
+    }
+
+    /// [`Self::fanout_engine_ns`] against one caller-held snapshot: the
+    /// engine constants and the rail-spillover terms all price under the
+    /// same learned generation. (Fan-out shapes carry a heap-allocated
+    /// per-link vector and collectives are orders of magnitude rarer than
+    /// point-to-point ops, so fan-out plans are not memoized.)
+    fn fanout_engine_ns_at(&self, snap: &ParamsSnapshot, shape: &FanoutShape) -> f64 {
         if shape.npeers == 0 || shape.total_bytes() == 0 {
             return 0.0;
         }
-        let ce = self.cost.ce_eff();
+        let ce = self.cost.ce_eff_at(&snap.params);
         let xe = &self.cost.params.xe;
         let mut t: f64 = 0.0;
         for &(loc, link_bytes, transfers) in &shape.per_link {
@@ -431,9 +730,18 @@ impl XferEngine {
             // Remote spill-over of an engine-branch fan-out chunks across
             // the NIC rails (same stripe planner as p2p remote puts; a
             // 1-rail config degenerates to the single-RDMA estimate).
-            let (chunk, width) = self.cost.rail_stripe_for(shape.nic_bytes, usize::MAX);
+            let (chunk, width) = self
+                .cost
+                .rail_stripe_for_at(&snap.params, shape.nic_bytes, usize::MAX);
             let n = shape.nic_bytes.div_ceil(chunk.max(1));
-            t = t.max(self.cost.internode_striped_ns(shape.nic_bytes, true, false, width, n));
+            t = t.max(self.cost.internode_striped_ns_at(
+                &snap.params,
+                shape.nic_bytes,
+                true,
+                false,
+                width,
+                n,
+            ));
         }
         self.cost.ring_rtt_ns() + t
     }
@@ -442,11 +750,11 @@ impl XferEngine {
     /// (paper Fig 6: the decision depends on nelems, work-items *and* the
     /// PE count — all captured by the shape).
     pub fn plan_fanout(&self, shape: &FanoutShape, bytes: usize, items: usize) -> TransferPlan {
-        let model_version = self.cost.model.version();
+        let snap = self.cost.model.snapshot();
         let ls = self.fanout_store_ns(shape, items);
-        let ce = self.fanout_engine_ns(shape);
+        let ce = self.fanout_engine_ns_at(&snap, shape);
         let key = BucketKey::fanout(shape.loc, bytes, items, shape.npeers);
-        let path = self.decide(key, bytes, ls, ce, model_version);
+        let path = self.decide(key, bytes, ls, ce, snap.version);
         let plan = self.bind(
             OpKind::Fanout,
             shape.loc,
@@ -456,7 +764,7 @@ impl XferEngine {
             path,
             ls,
             ce,
-            model_version,
+            snap.version,
         );
         self.count_plan(plan.route);
         plan
@@ -685,14 +993,16 @@ impl XferEngine {
         items: usize,
         backlog_bytes: u64,
     ) -> Option<usize> {
+        let snap = self.cost.model.snapshot();
         (3..28).map(|p| 1usize << p).find(|&b| {
-            let (chunk, _) = self.stripe_for(loc, b);
+            let (chunk, _) = self.stripe_for_at(&snap, loc, b);
             argmin_path(
                 self.est_loadstore_ns(loc, b, items),
-                self.cost.p2p_engine_estimate_capped_loaded_ns(
+                self.cost.p2p_engine_estimate_capped_loaded_ns_at(
+                    &snap.params,
                     loc,
                     b,
-                    self.cl_immediate_for(chunk),
+                    self.cl_immediate_for_at(&snap, chunk),
                     self.chunk_max_bytes,
                     backlog_bytes,
                 ),
@@ -1083,5 +1393,196 @@ mod tests {
         let empty = FanoutShape::default();
         assert_eq!(e.fanout_store_ns(&empty, 4), 0.0);
         assert_eq!(e.fanout_engine_ns(&empty), 0.0);
+    }
+
+    // ------------------------------------------------- plan-cache tests --
+
+    fn engine_with_cache(cfg: CutoverConfig, cache: PlanCacheConfig) -> XferEngine {
+        let mut e = engine(cfg);
+        e.set_plan_cache(cache);
+        e
+    }
+
+    /// Every (route, locality, size, items) worth sweeping in the drift
+    /// properties: reachable shapes across all intra-node localities plus
+    /// unreachable (NIC) shapes, sizes straddling every cutover and
+    /// striping regime.
+    fn sweep_shapes() -> Vec<(bool, Locality, usize, usize)> {
+        let mut v = Vec::new();
+        for &bytes in &[8usize, 512, 4096, 64 << 10, 1 << 20, 8 << 20] {
+            for &items in &[1usize, 16, 1024] {
+                for &loc in &[Locality::SameTile, Locality::SameGpu, Locality::SameNode] {
+                    v.push((true, loc, bytes, items));
+                }
+                v.push((false, Locality::Remote, bytes, items));
+            }
+        }
+        v
+    }
+
+    fn sweep(e: &XferEngine) -> Vec<TransferPlan> {
+        sweep_shapes()
+            .iter()
+            .map(|&(reach, loc, bytes, items)| {
+                e.plan_p2p(OpKind::Put, reach, loc, bytes, items)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cache_warm_plans_are_bit_identical_to_cache_off() {
+        let cached = engine(CutoverConfig::tuned()); // cache on by default
+        let off = engine_with_cache(
+            CutoverConfig::tuned(),
+            PlanCacheConfig { enable: false, capacity: 4096 },
+        );
+        let cold = sweep(&cached); // fills the cache
+        let warm = sweep(&cached); // pure hits
+        let reference = sweep(&off);
+        assert_eq!(cold, reference, "cold cached sweep drifted from cache-off");
+        assert_eq!(warm, reference, "warm cached sweep drifted from cache-off");
+        let n = sweep_shapes().len() as u64;
+        assert_eq!(cached.metrics.plan_cache_misses.load(Ordering::Relaxed), n);
+        assert_eq!(cached.metrics.plan_cache_hits.load(Ordering::Relaxed), n);
+        assert_eq!(cached.plan_cache_len(), n as usize);
+        // The disabled cache neither stores nor counts.
+        assert_eq!(off.plan_cache_len(), 0);
+        assert_eq!(off.metrics.plan_cache_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(off.metrics.plan_cache_misses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn version_bump_and_boundary_flip_never_serve_stale_plans() {
+        let calibrate = |e: &XferEngine| {
+            e.cost.model.update(|l| {
+                l.single_engine_frac = 0.5;
+                l.rail_bw_frac = 0.5;
+                l.startup_standard_ns = 9_000.0;
+            })
+        };
+        let cached = engine(CutoverConfig::tuned());
+        let _ = sweep(&cached); // fill under the seed generation
+        calibrate(&cached);
+        // A cache-off oracle that only ever saw the calibrated params.
+        let oracle = engine_with_cache(
+            CutoverConfig::tuned(),
+            PlanCacheConfig { enable: false, capacity: 4096 },
+        );
+        calibrate(&oracle);
+        let post = sweep(&cached);
+        assert_eq!(post, sweep(&oracle), "post-calibration sweep served stale plans");
+        assert!(post.iter().all(|p| p.model_version == 1));
+        // The version bump flushed the whole seed-generation population.
+        assert!(
+            cached.metrics.plan_cache_invalidations.load(Ordering::Relaxed)
+                >= sweep_shapes().len() as u64
+        );
+        // The CL boundary can move *without* a version bump
+        // (`seed_cl_boundary`) — the cache must still notice.
+        let inval_before = cached.metrics.plan_cache_invalidations.load(Ordering::Relaxed);
+        let _ = sweep(&cached); // re-fill at version 1
+        cached.set_cl_immediate_max_bytes(64 << 10);
+        oracle.set_cl_immediate_max_bytes(64 << 10);
+        assert_eq!(cached.cost.model.version(), 1, "boundary re-seed is not a calibration");
+        let post = sweep(&cached);
+        assert_eq!(post, sweep(&oracle), "boundary flip served stale plans");
+        assert!(
+            cached.metrics.plan_cache_invalidations.load(Ordering::Relaxed) > inval_before
+        );
+    }
+
+    #[test]
+    fn adaptive_flips_apply_even_on_cache_hits() {
+        let e = engine(CutoverConfig::adaptive());
+        let (loc, bytes) = (Locality::SameNode, 4096);
+        let p1 = e.plan_p2p(OpKind::Put, true, loc, bytes, 1);
+        assert_eq!(p1.route, Route::LoadStore, "4KiB single-item seeds load/store");
+        let p2 = e.plan_p2p(OpKind::Put, true, loc, bytes, 1); // cache hit
+        assert_eq!(p2.route, Route::LoadStore);
+        // Poison the cell: the learned route flips while the cached
+        // structural shape stays valid.
+        for _ in 0..32 {
+            e.record(&p2, 1e9);
+        }
+        let p3 = e.plan_p2p(OpKind::Put, true, loc, bytes, 1); // still a hit
+        assert_eq!(
+            p3.route,
+            Route::CopyEngine,
+            "cache hit served the pre-flip adaptive decision"
+        );
+        // All three post-fill plans really were hits — the decision is
+        // outside the cached portion, not cached-and-invalidated.
+        assert_eq!(e.metrics.plan_cache_hits.load(Ordering::Relaxed), 2);
+        assert_eq!(e.metrics.plan_cache_misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_recalibration_never_tears_plans() {
+        use crate::sim::params::LearnedParams;
+        use std::sync::atomic::AtomicBool;
+        fn set_a(l: &mut LearnedParams) {
+            l.single_engine_frac = 0.25;
+            l.rail_bw_frac = 0.8;
+            l.startup_standard_ns = 8_000.0;
+        }
+        fn set_b(l: &mut LearnedParams) {
+            l.single_engine_frac = 0.5;
+            l.rail_bw_frac = 0.4;
+            l.startup_standard_ns = 16_000.0;
+        }
+        let shapes = sweep_shapes();
+        // Oracle engine-side / NIC-side estimates under each param set:
+        // a torn plan (terms priced under a mix of generations) matches
+        // neither bitwise.
+        let oracle = |setter: &dyn Fn(&mut LearnedParams)| -> Vec<f64> {
+            let o = engine_with_cache(
+                CutoverConfig::tuned(),
+                PlanCacheConfig { enable: false, capacity: 4096 },
+            );
+            o.cost.model.update(setter);
+            shapes
+                .iter()
+                .map(|&(reach, loc, bytes, _)| {
+                    if reach {
+                        o.est_copy_engine_ns(loc, bytes)
+                    } else {
+                        o.est_nic_ns(bytes)
+                    }
+                })
+                .collect()
+        };
+        let exp_a = oracle(&set_a);
+        let exp_b = oracle(&set_b);
+        let e = engine(CutoverConfig::tuned());
+        e.cost.model.update(set_a); // start in a known generation
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..200 {
+                    e.cost.model.update(if i % 2 == 0 { set_b } else { set_a });
+                }
+                stop.store(true, Ordering::Relaxed);
+            });
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while !stop.load(Ordering::Relaxed) {
+                        for (i, &(reach, loc, bytes, items)) in shapes.iter().enumerate() {
+                            let p = e.plan_p2p(OpKind::Put, reach, loc, bytes, items);
+                            let got = match p.route {
+                                Route::CopyEngine | Route::Nic => p.modeled_ns,
+                                Route::LoadStore => p.alt_ns.unwrap(),
+                            };
+                            assert!(
+                                got == exp_a[i] || got == exp_b[i],
+                                "torn plan at {loc:?}/{bytes}B/{items}wi: \
+                                 {got} matches neither {} nor {}",
+                                exp_a[i],
+                                exp_b[i],
+                            );
+                        }
+                    }
+                });
+            }
+        });
     }
 }

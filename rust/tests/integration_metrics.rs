@@ -176,6 +176,60 @@ fn stripe_and_engine_metrics_with_json_export() {
 }
 
 #[test]
+fn plan_cache_counters_surface_in_text_and_json() {
+    // Repeated same-shape puts hit the plan cache; the counters surface
+    // in the `rishmem metrics` text report and the --json export. A
+    // cache-disabled machine moves the same traffic with every counter
+    // pinned at zero.
+    let run = |enable: bool| {
+        let mut cfg = IshmemConfig::with_npes(4);
+        cfg.plan_cache.enable = enable;
+        let ish = Ishmem::new(cfg).unwrap();
+        ish.launch(|ctx| {
+            let buf = ctx.calloc::<u8>(64 << 10);
+            ctx.barrier_all();
+            if ctx.pe() == 0 {
+                for _ in 0..8 {
+                    ctx.put(buf, &[7u8; 4096], 2);
+                }
+                ctx.quiet();
+            }
+            ctx.barrier_all();
+        });
+        let snap = ish.metrics.snapshot();
+        ish.shutdown();
+        snap
+    };
+
+    let snap = run(true);
+    assert!(snap.plan_cache_misses >= 1, "{snap:?}");
+    assert!(snap.plan_cache_hits >= 7, "repeated shapes must hit: {snap:?}");
+    assert_eq!(snap.plan_cache_invalidations, 0, "nothing recalibrated: {snap:?}");
+    let report = snap.report();
+    assert!(report.contains("plan cache: hits="), "{report}");
+    let j = Json::parse(&snap.to_json()).unwrap();
+    assert_eq!(
+        j.get("plan_cache_hits").unwrap().as_usize().unwrap() as u64,
+        snap.plan_cache_hits
+    );
+    assert_eq!(
+        j.get("plan_cache_misses").unwrap().as_usize().unwrap() as u64,
+        snap.plan_cache_misses
+    );
+    assert_eq!(
+        j.get("plan_cache_invalidations").unwrap().as_usize().unwrap() as u64,
+        snap.plan_cache_invalidations
+    );
+
+    let off = run(false);
+    assert_eq!(
+        (off.plan_cache_hits, off.plan_cache_misses, off.plan_cache_invalidations),
+        (0, 0, 0),
+        "disabled cache must not count: {off:?}"
+    );
+}
+
+#[test]
 fn adaptive_table_persists_across_machines() {
     // `cutover.table_path`: machine A learns and saves at shutdown;
     // machine B starts warm with the identical table.

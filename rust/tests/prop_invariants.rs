@@ -437,6 +437,68 @@ fn prop_adaptive_converges_to_tuned_after_warmup() {
 }
 
 #[test]
+fn prop_plan_cache_zero_drift_under_live_recalibration() {
+    // The plan cache must be pure memoization: across random routes,
+    // sizes, localities, work-item counts, calibration publishes, and CL
+    // boundary re-seeds, a cache-on planner and a cache-off planner fed
+    // the same probe/update sequence produce bit-for-bit identical plans.
+    // A stale entry surviving a version bump or boundary flip, or any
+    // cached-path arithmetic that differs from the uncached path, shows
+    // up as a plan mismatch here.
+    use rishmem::sim::LearnedParams;
+    use rishmem::xfer::PlanCacheConfig;
+    prop_check("cached plans bitwise match uncached", 20, |rng| {
+        let cached = XferEngine::new(
+            CostModel::new(Topology::default(), CostParams::default()),
+            CutoverConfig::tuned(),
+            true,
+            Metrics::new(),
+        );
+        let mut uncached = XferEngine::new(
+            CostModel::new(Topology::default(), CostParams::default()),
+            CutoverConfig::tuned(),
+            true,
+            Metrics::new(),
+        );
+        uncached.set_plan_cache(PlanCacheConfig { enable: false, capacity: 1 });
+
+        let reachable_locs = [Locality::SameTile, Locality::SameGpu, Locality::SameNode];
+        for step in 0..300u32 {
+            // Occasionally publish a calibration (version bump) or move
+            // the CL boundary (re-seed at the same version) on BOTH
+            // models, so the cached engine keeps chasing a moving target.
+            if rng.below(10) == 0 {
+                let sef = 0.2 + 0.6 * rng.f64();
+                let rbf = 0.2 + 0.6 * rng.f64();
+                let ssn = 4_000.0 + 20_000.0 * rng.f64();
+                let set = move |l: &mut LearnedParams| {
+                    l.single_engine_frac = sef;
+                    l.rail_bw_frac = rbf;
+                    l.startup_standard_ns = ssn;
+                };
+                cached.cost.model.update(set);
+                uncached.cost.model.update(set);
+            } else if rng.below(10) == 0 {
+                let boundary = 1usize << (10 + rng.below(9));
+                cached.set_cl_immediate_max_bytes(boundary);
+                uncached.set_cl_immediate_max_bytes(boundary);
+            }
+
+            let bytes = 1usize << (3 + rng.below(21));
+            let items = [1usize, 16, 1024][rng.below(3) as usize];
+            let (reach, loc) = if rng.below(4) == 0 {
+                (false, Locality::Remote)
+            } else {
+                (true, reachable_locs[rng.below(3) as usize])
+            };
+            let c = cached.plan_p2p(OpKind::Put, reach, loc, bytes, items);
+            let u = uncached.plan_p2p(OpKind::Put, reach, loc, bytes, items);
+            assert_eq!(c, u, "step {step}: {loc:?}/{bytes}B/{items}wi drifted");
+        }
+    });
+}
+
+#[test]
 fn prop_team_split_algebra() {
     prop_check("team ranks round-trip through world", 60, |rng| {
         let npes = (rng.range(2, 6) * 2) as usize; // even, 4..12
