@@ -1,0 +1,133 @@
+//! Bench: topology-aware hierarchical collectives (ISSUE 7). The cost
+//! model prices flat vs hierarchical-ring/tree broadcast, fcollect and
+//! allreduce across `Topology::multi_node_for` machines; acceptance bars:
+//!
+//! (a) the best hierarchical schedule beats flat by ≥2× on every ≥64-PE
+//!     machine at ≥1 MiB, and the advantage never shrinks as PE count
+//!     grows (and strictly grows for broadcast, whose flat wire term is
+//!     linear in remote peers);
+//! (b) a real 64-PE machine under `coll.algo = Auto` picks the hierarchy
+//!     and its modeled broadcast time beats the same machine forced flat;
+//! (c) single-node machines are untouched: the estimator returns
+//!     bit-identical times for all three algorithms, and a real
+//!     single-node run under Auto matches forced-flat bit for bit.
+//!
+//! `cargo bench --bench fig_coll_scale` (`RISHMEM_SMOKE=1` shrinks it).
+
+use rishmem::bench::figures::{coll_scale_sweep, fig_coll_scale};
+use rishmem::bench::measure_fixed;
+use rishmem::sim::cost::CostParams;
+use rishmem::sim::{CollOp, CollShape, CostModel};
+use rishmem::{CollAlgoMode, CollConfig, Ishmem, IshmemConfig, TeamId, Topology};
+
+/// Modeled best time of one 1 MiB broadcast on a real machine with the
+/// given algorithm mode (every PE participates; PE 0's clock reports).
+fn machine_broadcast_ns(topo: Topology, algo: CollAlgoMode) -> f64 {
+    let cfg = IshmemConfig {
+        topology: topo,
+        heap_bytes: 4 << 20,
+        coll: CollConfig { algo, leader_fanout: 4 },
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).expect("fig_coll_scale machine");
+    let times = ish.launch(|ctx| {
+        let dest = ctx.calloc::<u8>(1 << 20);
+        let src = ctx.calloc::<u8>(1 << 20);
+        ctx.barrier_all();
+        let m = measure_fixed(&ctx.clock, 1, 2, || {
+            ctx.broadcast(dest, src, 1 << 20, 0, TeamId::WORLD);
+        });
+        (ctx.pe() == 0).then_some(m.best_ns)
+    });
+    let hier = ish.metrics.snapshot().coll_hier;
+    ish.shutdown();
+    match algo {
+        CollAlgoMode::Flat => assert_eq!(hier, 0, "forced flat ran hierarchical"),
+        CollAlgoMode::Auto => {}
+        _ => assert!(hier > 0, "forced hierarchy ran flat"),
+    }
+    times.into_iter().flatten().next().expect("pe 0 measurement")
+}
+
+fn main() {
+    let fig = fig_coll_scale();
+    println!("{}", fig.render_ascii());
+
+    // (a) Estimator sweep: every op, ≥1 MiB, across the PE sweep.
+    let sweep = coll_scale_sweep();
+    for op in [CollOp::Broadcast, CollOp::Fcollect, CollOp::Reduce] {
+        for &bytes in &[1usize << 20, 4 << 20] {
+            let mut last_ratio = 0.0f64;
+            let mut first_ratio = f64::NAN;
+            for &npes in &sweep {
+                let topo = Topology::multi_node_for(npes);
+                let shape = CollShape::from_members(&topo, 0..npes);
+                let cost = CostModel::new(topo, CostParams::default());
+                let est = cost.coll_estimates(&shape, op, bytes, 4);
+                let (algo, hier_ns) = est.best_hier();
+                let ratio = est.flat_ns / hier_ns;
+                println!(
+                    "[fig_coll_scale] {op:?} {bytes:>8} B {npes:>5} PEs: flat \
+                     {:8.2} ms vs {algo:?} {:8.2} ms  ({ratio:.1}x)",
+                    est.flat_ns / 1e6,
+                    hier_ns / 1e6
+                );
+                assert!(
+                    ratio >= 2.0,
+                    "{op:?}: hierarchy under 2x at {npes} PEs / {bytes} B: {ratio:.2}x"
+                );
+                assert!(
+                    ratio >= last_ratio * 0.999,
+                    "{op:?}: advantage shrank at {npes} PEs / {bytes} B: \
+                     {ratio:.2}x after {last_ratio:.2}x"
+                );
+                if first_ratio.is_nan() {
+                    first_ratio = ratio;
+                }
+                last_ratio = ratio;
+            }
+            if op == CollOp::Broadcast {
+                assert!(
+                    last_ratio > first_ratio,
+                    "broadcast advantage must grow with PE count: \
+                     {first_ratio:.2}x -> {last_ratio:.2}x"
+                );
+            }
+        }
+    }
+
+    // (c) Single-node estimates: all three algorithms are bit-identical.
+    let topo = Topology::new(1, 4, 2);
+    let shape = CollShape::from_members(&topo, 0..topo.npes());
+    let cost = CostModel::new(topo, CostParams::default());
+    for op in [CollOp::Broadcast, CollOp::Fcollect, CollOp::Reduce] {
+        let est = cost.coll_estimates(&shape, op, 1 << 20, 4);
+        assert_eq!(est.flat_ns.to_bits(), est.ring_ns.to_bits(), "{op:?}");
+        assert_eq!(est.flat_ns.to_bits(), est.tree_ns.to_bits(), "{op:?}");
+    }
+    let auto1 = machine_broadcast_ns(Topology::new(1, 2, 2), CollAlgoMode::Auto);
+    let flat1 = machine_broadcast_ns(Topology::new(1, 2, 2), CollAlgoMode::Flat);
+    assert_eq!(
+        auto1.to_bits(),
+        flat1.to_bits(),
+        "single-node Auto must reproduce the flat schedule exactly: \
+         {auto1} vs {flat1} ns"
+    );
+    println!("[fig_coll_scale] single-node: Auto == forced-flat bitwise ({auto1:.0} ns)");
+
+    // (b) Real 64-PE machine: Auto picks the hierarchy and beats flat.
+    let auto64 = machine_broadcast_ns(Topology::multi_node_for(64), CollAlgoMode::Auto);
+    let flat64 = machine_broadcast_ns(Topology::multi_node_for(64), CollAlgoMode::Flat);
+    println!(
+        "[fig_coll_scale] 64-PE machine: auto {:.2} ms vs forced-flat {:.2} ms ({:.1}x)",
+        auto64 / 1e6,
+        flat64 / 1e6,
+        flat64 / auto64
+    );
+    assert!(
+        auto64 < flat64,
+        "hierarchical execution no faster than flat on 64 PEs: {auto64} vs {flat64} ns"
+    );
+
+    println!("[fig_coll_scale] hierarchical collectives >=2x flat from 64 PEs, growing with scale");
+}

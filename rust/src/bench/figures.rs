@@ -417,6 +417,50 @@ pub fn fig_rail() -> Figure {
     fig
 }
 
+/// Collective-scaling figure (ISSUE 7): modeled 1 MiB broadcast time
+/// across machine sizes — the flat per-peer fan-out against the
+/// hierarchical tile/GPU/node decomposition with ring and tree
+/// inter-node stages, priced by the cost model's collective estimator
+/// on [`Topology::multi_node_for`] machines. The fig_coll_scale bench
+/// asserts the acceptance bars (best hierarchical ≥2× flat from 64 PEs
+/// at ≥1 MiB, advantage non-decreasing in PE count) across all three
+/// ops and validates a real 64-PE machine end to end.
+pub fn fig_coll_scale() -> Figure {
+    let sweep = coll_scale_sweep();
+    let bytes = 1 << 20;
+    let mut fig = Figure::new(
+        "fig-coll-scale",
+        "hierarchical collectives: flat vs leader decomposition, 1 MiB broadcast",
+        "PEs",
+        "modeled ms",
+    );
+    let mut flat = Series::new("flat");
+    let mut ring = Series::new("hier-ring");
+    let mut tree = Series::new("hier-tree");
+    for &npes in &sweep {
+        let topo = Topology::multi_node_for(npes);
+        let shape = crate::sim::CollShape::from_members(&topo, 0..npes);
+        let cost = crate::sim::CostModel::new(topo, crate::sim::cost::CostParams::default());
+        let est = cost.coll_estimates(&shape, crate::sim::CollOp::Broadcast, bytes, 4);
+        flat.push(npes as f64, est.flat_ns / 1e6);
+        ring.push(npes as f64, est.ring_ns / 1e6);
+        tree.push(npes as f64, est.tree_ns / 1e6);
+    }
+    fig.series.push(flat);
+    fig.series.push(ring);
+    fig.series.push(tree);
+    fig
+}
+
+/// PE-count sweep shared by [`fig_coll_scale`] and its bench.
+pub fn coll_scale_sweep() -> Vec<usize> {
+    if super::smoke() {
+        vec![64, 256]
+    } else {
+        vec![64, 128, 256, 512, 1024]
+    }
+}
+
 /// Wall-clock vs modeled service-time comparison (`rishmem figure
 /// service-delta`): run every proxied path through the size classes and
 /// diff the proxy's wall sums against the cost model's charges per
@@ -950,5 +994,6 @@ pub fn all_figures() -> Vec<Figure> {
     v.push(fig_batch());
     v.push(fig_stripe());
     v.push(fig_rail());
+    v.push(fig_coll_scale());
     v
 }

@@ -25,6 +25,30 @@ pub enum ServiceOp {
     Other = 3,
 }
 
+/// Collective op families tracked by the per-op counters and the
+/// per-(op, stage) byte table. `Other` absorbs collect, alltoall and the
+/// host-side fcollect — ops without a hierarchical variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollOpIdx {
+    Broadcast = 0,
+    Fcollect = 1,
+    Reduce = 2,
+    Other = 3,
+}
+
+/// Stage of a collective's data movement: intra-node hops (load/store or
+/// striped copy engines) vs inter-node hops (NIC wire).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollStage {
+    Intra = 0,
+    Inter = 1,
+}
+
+/// Rows of the collective byte table (mirrors `CollOpIdx`).
+pub const COLL_OPS: usize = 4;
+/// Columns of the collective byte table (mirrors `CollStage`).
+pub const COLL_STAGES: usize = 2;
+
 /// Batch-depth histogram buckets: depth 1, 2, 3–4, 5–8, 9–16, ≥17.
 /// (Shared shape with the chunks-per-transfer histogram.)
 pub const BATCH_DEPTH_BUCKETS: usize = 6;
@@ -60,7 +84,20 @@ pub struct Metrics {
     pub puts: AtomicU64,
     pub gets: AtomicU64,
     pub amos: AtomicU64,
-    pub collectives: AtomicU64,
+    // Collectives, per op family: broadcast/fcollect/reduce each count
+    // one per team-wide call; `coll_sync` counts team syncs/barriers
+    // (including the syncs staged collectives issue internally);
+    // `coll_other` counts collect/alltoall/host-fcollect. `coll_hier`
+    // counts calls that took a hierarchical (leader-staged) algorithm,
+    // and `coll_stage_bytes` splits each op's payload bytes into
+    // intra-node vs inter-node hops.
+    pub coll_broadcast: AtomicU64,
+    pub coll_fcollect: AtomicU64,
+    pub coll_reduce: AtomicU64,
+    pub coll_sync: AtomicU64,
+    pub coll_other: AtomicU64,
+    pub coll_hier: AtomicU64,
+    pub coll_stage_bytes: [[AtomicU64; COLL_STAGES]; COLL_OPS],
     // Bytes by data path (the paper's three regimes).
     pub bytes_loadstore: AtomicU64,
     pub bytes_copy_engine: AtomicU64,
@@ -179,6 +216,11 @@ impl Metrics {
         Self::add(&self.bytes_by_path_loc[path as usize][loc as usize], bytes);
     }
 
+    /// Count `bytes` of collective payload moved by `op` during `stage`.
+    pub fn add_coll_bytes(&self, op: CollOpIdx, stage: CollStage, bytes: u64) {
+        Self::add(&self.coll_stage_bytes[op as usize][stage as usize], bytes);
+    }
+
     /// Record one serviced batch of `entries` descriptors.
     pub fn add_batch(&self, entries: usize) {
         Self::add(&self.xfer_batches, 1);
@@ -243,7 +285,15 @@ impl Metrics {
             puts: load(&self.puts),
             gets: load(&self.gets),
             amos: load(&self.amos),
-            collectives: load(&self.collectives),
+            coll_broadcast: load(&self.coll_broadcast),
+            coll_fcollect: load(&self.coll_fcollect),
+            coll_reduce: load(&self.coll_reduce),
+            coll_sync: load(&self.coll_sync),
+            coll_other: load(&self.coll_other),
+            coll_hier: load(&self.coll_hier),
+            coll_stage_bytes: std::array::from_fn(|o| {
+                std::array::from_fn(|s| load(&self.coll_stage_bytes[o][s]))
+            }),
             bytes_loadstore: load(&self.bytes_loadstore),
             bytes_copy_engine: load(&self.bytes_copy_engine),
             bytes_nic: load(&self.bytes_nic),
@@ -300,7 +350,13 @@ pub struct MetricsSnapshot {
     pub puts: u64,
     pub gets: u64,
     pub amos: u64,
-    pub collectives: u64,
+    pub coll_broadcast: u64,
+    pub coll_fcollect: u64,
+    pub coll_reduce: u64,
+    pub coll_sync: u64,
+    pub coll_other: u64,
+    pub coll_hier: u64,
+    pub coll_stage_bytes: [[u64; COLL_STAGES]; COLL_OPS],
     pub bytes_loadstore: u64,
     pub bytes_copy_engine: u64,
     pub bytes_nic: u64,
@@ -337,6 +393,26 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Total collective calls across all op families (syncs included) —
+    /// the pre-split `collectives` counter, preserved as a derived sum.
+    pub fn collectives(&self) -> u64 {
+        self.coll_broadcast
+            + self.coll_fcollect
+            + self.coll_reduce
+            + self.coll_sync
+            + self.coll_other
+    }
+
+    /// Collective payload bytes moved by `op` during `stage`.
+    pub fn coll_bytes(&self, op: CollOpIdx, stage: CollStage) -> u64 {
+        self.coll_stage_bytes[op as usize][stage as usize]
+    }
+
+    /// Collective payload bytes of `stage` summed over all op families.
+    pub fn coll_stage_total(&self, stage: CollStage) -> u64 {
+        self.coll_stage_bytes.iter().map(|row| row[stage as usize]).sum()
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.bytes_loadstore + self.bytes_copy_engine + self.bytes_nic
     }
@@ -410,7 +486,21 @@ impl MetricsSnapshot {
         put("puts", n(self.puts));
         put("gets", n(self.gets));
         put("amos", n(self.amos));
-        put("collectives", n(self.collectives));
+        put("collectives", n(self.collectives()));
+        put("coll_broadcast", n(self.coll_broadcast));
+        put("coll_fcollect", n(self.coll_fcollect));
+        put("coll_reduce", n(self.coll_reduce));
+        put("coll_sync", n(self.coll_sync));
+        put("coll_other", n(self.coll_other));
+        put("coll_hier", n(self.coll_hier));
+        let mut stages: BTreeMap<String, Json> = BTreeMap::new();
+        for (name, stage) in [("intra", CollStage::Intra), ("inter", CollStage::Inter)] {
+            let row: Vec<u64> = (0..COLL_OPS)
+                .map(|o| self.coll_stage_bytes[o][stage as usize])
+                .collect();
+            stages.insert(name.to_string(), arr(&row));
+        }
+        put("coll_stage_bytes", Json::Obj(stages));
         put("bytes_loadstore", n(self.bytes_loadstore));
         put("bytes_copy_engine", n(self.bytes_copy_engine));
         put("bytes_nic", n(self.bytes_nic));
@@ -538,8 +628,19 @@ impl MetricsSnapshot {
                 crate::util::fmt_bytes(r[3] as usize),
             )
         };
+        let coll_row = |s: CollStage| {
+            format!(
+                "bcast={} fcollect={} reduce={} other={}",
+                crate::util::fmt_bytes(self.coll_bytes(CollOpIdx::Broadcast, s) as usize),
+                crate::util::fmt_bytes(self.coll_bytes(CollOpIdx::Fcollect, s) as usize),
+                crate::util::fmt_bytes(self.coll_bytes(CollOpIdx::Reduce, s) as usize),
+                crate::util::fmt_bytes(self.coll_bytes(CollOpIdx::Other, s) as usize),
+            )
+        };
         format!(
             "ops: put={} get={} amo={} coll={}\n\
+             coll ops: bcast={} fcollect={} reduce={} sync={} other={} hier={}\n\
+             coll bytes: intra-node [{}] | inter-node [{}]\n\
              bytes: load/store={} copy-engine={} nic={}\n\
              bytes by locality: load/store [{}] | copy-engine [{}] | nic [{}]\n\
              plans: load/store={} copy-engine={} nic={} adaptive-updates={}\n\
@@ -553,7 +654,15 @@ impl MetricsSnapshot {
             self.puts,
             self.gets,
             self.amos,
-            self.collectives,
+            self.collectives(),
+            self.coll_broadcast,
+            self.coll_fcollect,
+            self.coll_reduce,
+            self.coll_sync,
+            self.coll_other,
+            self.coll_hier,
+            coll_row(CollStage::Intra),
+            coll_row(CollStage::Inter),
             crate::util::fmt_bytes(self.bytes_loadstore as usize),
             crate::util::fmt_bytes(self.bytes_copy_engine as usize),
             crate::util::fmt_bytes(self.bytes_nic as usize),
@@ -634,6 +743,35 @@ mod tests {
         assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(9));
         assert_eq!(j.get("plan_cache_misses").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("plan_cache_invalidations").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn coll_counters_and_stage_byte_table() {
+        let m = Metrics::new();
+        Metrics::add(&m.coll_broadcast, 2);
+        Metrics::add(&m.coll_reduce, 1);
+        Metrics::add(&m.coll_sync, 4);
+        Metrics::add(&m.coll_hier, 2);
+        m.add_coll_bytes(CollOpIdx::Broadcast, CollStage::Intra, 1000);
+        m.add_coll_bytes(CollOpIdx::Broadcast, CollStage::Inter, 250);
+        m.add_coll_bytes(CollOpIdx::Reduce, CollStage::Inter, 750);
+        let s = m.snapshot();
+        assert_eq!(s.collectives(), 7);
+        assert_eq!(s.coll_bytes(CollOpIdx::Broadcast, CollStage::Intra), 1000);
+        assert_eq!(s.coll_stage_total(CollStage::Inter), 1000);
+        assert_eq!(s.coll_stage_total(CollStage::Intra), 1000);
+        let r = s.report();
+        assert!(r.contains("coll=7"), "{r}");
+        assert!(r.contains("bcast=2 fcollect=0 reduce=1 sync=4 other=0 hier=2"), "{r}");
+        assert!(r.contains("intra-node ["), "{r}");
+        let j = crate::util::json::Json::parse(&s.to_json()).unwrap();
+        assert_eq!(j.get("collectives").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("coll_broadcast").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("coll_hier").unwrap().as_usize(), Some(2));
+        let stages = j.get("coll_stage_bytes").unwrap();
+        let inter = stages.get("inter").unwrap().as_arr().unwrap();
+        assert_eq!(inter.len(), COLL_OPS);
+        assert_eq!(inter[CollOpIdx::Reduce as usize].as_usize(), Some(750));
     }
 
     #[test]

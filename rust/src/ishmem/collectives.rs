@@ -24,15 +24,29 @@
 //! transfer-plan engine: this module digests the member list into a
 //! [`FanoutShape`] (it owns the IPC table) and the planner
 //! ([`crate::xfer::plan::XferEngine::plan_fanout`]) picks the path.
+//!
+//! Team-spanning broadcast/fcollect/reduce additionally choose an
+//! *algorithm*: the flat per-peer fan-out, or a hierarchical
+//! tile/GPU/node decomposition where only node leaders touch the NIC
+//! (inter-node hops composed as per-hop rail-striped [`TransferPlan`]s,
+//! intra-node redistribution on the striped copy-engine path). The choice
+//! runs through the same cost-model + adaptive-cutover machinery as p2p
+//! routing ([`crate::sim::CostModel::coll_estimates_at`],
+//! [`crate::xfer::plan::XferEngine::coll_decide`]); single-node teams
+//! always take the flat path, bit-for-bit the pre-hierarchy behavior.
+//!
+//! [`TransferPlan`]: crate::xfer::plan::TransferPlan
 
 use std::sync::atomic::Ordering;
 
-use crate::coordinator::metrics::{Metrics, PathIdx};
+use crate::coordinator::metrics::{CollOpIdx, CollStage, Metrics, PathIdx};
 use crate::device::{collaborative_copy, WorkGroup};
+use crate::sim::cost::tree_depth;
 use crate::sim::topology::Locality;
-use crate::sim::SimClock;
-use crate::xfer::plan::{FanoutShape, Route};
+use crate::sim::{CollAlgo, CollOp, CollShape, ParamsSnapshot, SimClock};
+use crate::xfer::plan::{FanoutShape, OpKind, Route};
 
+use super::config::CollAlgoMode;
 use super::cutover::Path;
 use super::heap::{team_sync_offset, MAX_TEAMS, RESERVED_BYTES};
 use super::types::{as_bytes, as_bytes_mut, ReduceElem, ReduceOp};
@@ -96,7 +110,7 @@ impl PeCtx {
         }
         self.clock
             .advance(self.rt.cost.params.xe.atomic_fetch_ns * 0.2);
-        Metrics::add(&self.rt.metrics.collectives, 1);
+        Metrics::add(&self.rt.metrics.coll_sync, 1);
     }
 
     /// `ishmem_sync_all`.
@@ -307,6 +321,204 @@ impl PeCtx {
         }
     }
 
+    // ---------------------------------------- hierarchical machinery ------
+    //
+    // ISSUE 7: team-spanning collectives decompose into tile/GPU/node
+    // stages with only node leaders on the wire. Real data still moves
+    // through the same substrate as the flat path (`fanout` collaborative
+    // stores / copy engines, `push_block` OFI), so results are bitwise
+    // identical; the hierarchy shows up in the modeled schedule (per-hop
+    // `TransferPlan`s on the striped NIC rails) and the per-stage byte
+    // table.
+
+    /// Pick the algorithm for one team collective: config-forced, or the
+    /// cost model's estimates fed through the same adaptive cutover
+    /// machinery as p2p routing (one cell per op/size/team-size bucket,
+    /// [`crate::xfer::plan::XferEngine::coll_decide`]). Single-node teams
+    /// always take the flat path — there is no inter-node stage, and the
+    /// pre-hierarchy behavior must reproduce exactly.
+    ///
+    /// Flat and hierarchical executions issue *different numbers of team
+    /// syncs*, so every member must take the same branch or the counting
+    /// barrier deadlocks — and per-member adaptive reads can diverge (a
+    /// concurrent observe may flip a close cell between two members'
+    /// reads). The team's lowest member therefore decides once and
+    /// publishes through `rt.coll_decisions`, keyed by the mirrored
+    /// per-team epoch; the rest wait (a real-time spin, like the sync
+    /// barrier — no modeled time). Returns the chosen algorithm and the
+    /// snapshot it was priced under (its version guards the feedback).
+    fn coll_select(
+        &self,
+        op: CollOp,
+        team: TeamId,
+        shape: &CollShape,
+        bytes: usize,
+    ) -> (CollAlgo, std::sync::Arc<ParamsSnapshot>) {
+        let snap = self.rt.cost.model.snapshot();
+        if shape.single_node() || bytes == 0 {
+            return (CollAlgo::Flat, snap);
+        }
+        let spec = self.team_spec(team);
+        let tid = team.index();
+        let epoch = {
+            let mut e = self.coll_epoch.borrow_mut();
+            e[tid] += 1;
+            e[tid]
+        };
+        if self.pe() == spec.start {
+            let algo = match self.rt.config.coll.algo {
+                CollAlgoMode::Flat => CollAlgo::Flat,
+                CollAlgoMode::HierRing => CollAlgo::HierRing,
+                CollAlgoMode::HierTree => CollAlgo::HierTree,
+                CollAlgoMode::Auto => {
+                    let est = self.rt.cost.coll_estimates_at(
+                        &snap.params,
+                        shape,
+                        op,
+                        bytes,
+                        self.rt.config.coll.leader_fanout,
+                    );
+                    let (hier, hier_ns) = est.best_hier();
+                    let take_hier = self.rt.xfer.coll_decide(
+                        op,
+                        bytes,
+                        shape.npes,
+                        est.flat_ns,
+                        hier_ns,
+                        snap.version,
+                    );
+                    if take_hier { hier } else { CollAlgo::Flat }
+                }
+            };
+            self.rt
+                .coll_decisions
+                .lock()
+                .unwrap()
+                .insert((tid, epoch), (algo, spec.size - 1));
+            (algo, snap)
+        } else {
+            let mut spins = 0u64;
+            loop {
+                {
+                    let mut map = self.rt.coll_decisions.lock().unwrap();
+                    if let Some(entry) = map.get_mut(&(tid, epoch)) {
+                        let algo = entry.0;
+                        entry.1 -= 1;
+                        if entry.1 == 0 {
+                            map.remove(&(tid, epoch));
+                        }
+                        return (algo, snap);
+                    }
+                }
+                spins += 1;
+                if spins > 64 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+
+    /// Flat-path stage accounting: a per-peer fan-out of `bytes` splits
+    /// into IPC-reachable (intra-node) and transport (inter-node) volume.
+    fn count_flat_coll_bytes(&self, op: CollOpIdx, peers: &[usize], bytes: usize) {
+        let local = peers
+            .iter()
+            .filter(|&&p| self.ipc.lookup(p).is_some())
+            .count();
+        let remote = peers.len() - local;
+        if local > 0 {
+            self.rt
+                .metrics
+                .add_coll_bytes(op, CollStage::Intra, (bytes * local) as u64);
+        }
+        if remote > 0 {
+            self.rt
+                .metrics
+                .add_coll_bytes(op, CollStage::Inter, (bytes * remote) as u64);
+        }
+    }
+
+    /// Charge (and feed back) one inter-node leader hop as a composed p2p
+    /// [`crate::xfer::plan::TransferPlan`] — hierarchical stages ride the
+    /// exact rail-striped machinery p2p remote puts plan with, so rail
+    /// calibration and occupancy reach collective schedules too.
+    fn coll_wire_hop(&self, bytes: usize) {
+        if bytes == 0 {
+            return;
+        }
+        let plan = self
+            .rt
+            .xfer
+            .plan_p2p(OpKind::Put, false, Locality::Remote, bytes, 1);
+        self.clock.advance(plan.modeled_ns);
+        self.rt.xfer.record(&plan, plan.modeled_ns);
+    }
+
+    /// Clamped inter-node tree arity + depth (mirrors the estimator's
+    /// clamping so executed schedules match priced ones).
+    fn coll_tree_arity(&self, nnodes: usize) -> (usize, usize) {
+        let k = self
+            .rt
+            .config
+            .coll
+            .leader_fanout
+            .clamp(2, nnodes.max(2))
+            .min(nnodes.saturating_sub(1).max(1));
+        (k, tree_depth(nnodes, k))
+    }
+
+    /// Inter-node broadcast schedule among `nnodes` leaders: the ring
+    /// forwards the full payload once plus one rail-chunk per extra hop
+    /// (pipelined chain); the tree serializes `k` children per level on
+    /// each parent's rails.
+    fn coll_bcast_wire_charge(&self, algo: CollAlgo, nnodes: usize, bytes: usize) {
+        match algo {
+            CollAlgo::Flat => {}
+            CollAlgo::HierRing => {
+                self.coll_wire_hop(bytes);
+                let (chunk, _w) = self.rt.cost.rail_stripe_for(bytes.max(1), usize::MAX);
+                for _ in 0..nnodes.saturating_sub(2) {
+                    self.coll_wire_hop(chunk.min(bytes));
+                }
+            }
+            CollAlgo::HierTree => {
+                let (k, depth) = self.coll_tree_arity(nnodes);
+                for _ in 0..depth * k {
+                    self.coll_wire_hop(bytes);
+                }
+            }
+        }
+    }
+
+    /// Inter-node exchange schedule among leaders (fcollect's slice
+    /// allgather, reduce's gathered-block exchange): the ring moves my
+    /// node's slice once per hop; the tree gathers to the root and
+    /// broadcasts the assembled result back down.
+    fn coll_exchange_wire_charge(
+        &self,
+        algo: CollAlgo,
+        nnodes: usize,
+        slice_bytes: usize,
+        total_bytes: usize,
+    ) {
+        match algo {
+            CollAlgo::Flat => {}
+            CollAlgo::HierRing => {
+                for _ in 0..nnodes.saturating_sub(1) {
+                    self.coll_wire_hop(slice_bytes);
+                }
+            }
+            CollAlgo::HierTree => {
+                let (k, depth) = self.coll_tree_arity(nnodes);
+                for _ in 0..2 * k * depth {
+                    self.coll_wire_hop(total_bytes / depth.max(1));
+                }
+            }
+        }
+    }
+
     // -------------------------------------------------------- broadcast ----
 
     /// `ishmem_broadcast` (single calling thread).
@@ -334,19 +546,137 @@ impl PeCtx {
         assert!(nelems <= dest.len() && nelems <= src.len());
         let spec = self.team_spec(team);
         let bytes = nelems * std::mem::size_of::<T>();
-        Metrics::add(&self.rt.metrics.collectives, 1);
-        if self.team_my_pe(team) == root {
-            // Push to every other member; self dest gets a local copy.
-            let peers: Vec<usize> =
-                spec.members().filter(|&p| p != self.pe()).collect();
-            self.rt.heaps.copy(
-                self.pe(),
+        Metrics::add(&self.rt.metrics.coll_broadcast, 1);
+        let shape = CollShape::from_members(self.rt.topo(), spec.members());
+        let (algo, snap) = self.coll_select(CollOp::Broadcast, team, &shape, bytes);
+        let t0 = self.clock.now_ns();
+        if algo == CollAlgo::Flat {
+            if self.team_my_pe(team) == root {
+                // Push to every other member; self dest gets a local copy.
+                let peers: Vec<usize> =
+                    spec.members().filter(|&p| p != self.pe()).collect();
+                self.rt.heaps.copy(
+                    self.pe(),
+                    src.byte_offset(),
+                    self.pe(),
+                    dest.byte_offset(),
+                    bytes,
+                );
+                self.count_flat_coll_bytes(CollOpIdx::Broadcast, &peers, bytes);
+                self.fanout(&peers, src.byte_offset(), dest.byte_offset(), bytes, items);
+            }
+            self.team_sync(team);
+        } else {
+            Metrics::add(&self.rt.metrics.coll_hier, 1);
+            self.broadcast_hier(
                 src.byte_offset(),
-                self.pe(),
                 dest.byte_offset(),
                 bytes,
+                root,
+                team,
+                items,
+                algo,
+                &shape,
             );
-            self.fanout(&peers, src.byte_offset(), dest.byte_offset(), bytes, items);
+        }
+        // The root saw the whole schedule — it feeds the algorithm cell.
+        if !shape.single_node() && self.team_my_pe(team) == root {
+            self.rt.xfer.coll_observe(
+                CollOp::Broadcast,
+                bytes,
+                spec.size,
+                algo != CollAlgo::Flat,
+                self.clock.now_ns() - t0,
+                snap.version,
+            );
+        }
+    }
+
+    /// Hierarchical broadcast: root → other node leaders on the wire
+    /// (stage 1), node leaders → their node's GPU leaders over Xe-Link
+    /// (stage 2), GPU leaders → remaining tile members over MDFI (stage
+    /// 3). Every stage moves real bytes over the same substrate as flat,
+    /// so results match bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    fn broadcast_hier(
+        &self,
+        src_off: usize,
+        dst_off: usize,
+        bytes: usize,
+        root: usize,
+        team: TeamId,
+        items: usize,
+        algo: CollAlgo,
+        shape: &CollShape,
+    ) {
+        let spec = self.team_spec(team);
+        let topo = self.rt.topo();
+        let me = self.pe();
+        let root_pe = spec.start + root * spec.stride;
+        let my_node = topo.node_of(me);
+        let root_node = topo.node_of(root_pe);
+        // The root leads its own node; elsewhere the lowest member leads.
+        let leader = if my_node == root_node {
+            root_pe
+        } else {
+            spec.node_leader(topo, me)
+        };
+
+        // Stage 1 — inter-node: root feeds every other node's leader.
+        if me == root_pe {
+            self.rt.heaps.copy(me, src_off, me, dst_off, bytes);
+            let wg = WorkGroup::new(items.max(1).min(WorkGroup::MAX_SIZE));
+            let leaders: Vec<usize> = spec
+                .node_groups(topo)
+                .into_iter()
+                .filter(|(n, _)| *n != root_node)
+                .map(|(_, g)| g[0])
+                .collect();
+            for &l in &leaders {
+                self.push_block(l, src_off, dst_off, bytes, &wg);
+            }
+            self.rt.metrics.add_coll_bytes(
+                CollOpIdx::Broadcast,
+                CollStage::Inter,
+                (bytes * leaders.len()) as u64,
+            );
+            self.coll_bcast_wire_charge(algo, shape.nnodes(), bytes);
+        }
+        self.team_sync(team);
+
+        // Stage 2 — node leaders feed their node's GPU leaders.
+        if me == leader {
+            let targets: Vec<usize> = spec
+                .gpu_leaders_on_node(topo, my_node)
+                .into_iter()
+                .filter(|&g| g != me)
+                .collect();
+            if !targets.is_empty() {
+                self.rt.metrics.add_coll_bytes(
+                    CollOpIdx::Broadcast,
+                    CollStage::Intra,
+                    (bytes * targets.len()) as u64,
+                );
+                self.fanout(&targets, dst_off, dst_off, bytes, items);
+            }
+        }
+        self.team_sync(team);
+
+        // Stage 3 — GPU leaders fan to their remaining tile members.
+        if spec.gpu_leader(topo, me) == me {
+            let my_gpu = topo.global_gpu_of(me);
+            let targets: Vec<usize> = spec
+                .members()
+                .filter(|&p| topo.global_gpu_of(p) == my_gpu && p != me && p != leader)
+                .collect();
+            if !targets.is_empty() {
+                self.rt.metrics.add_coll_bytes(
+                    CollOpIdx::Broadcast,
+                    CollStage::Intra,
+                    (bytes * targets.len()) as u64,
+                );
+                self.fanout(&targets, dst_off, dst_off, bytes, items);
+            }
         }
         self.team_sync(team);
     }
@@ -378,14 +708,148 @@ impl PeCtx {
         assert!(spec.size * nelems <= dest.len(), "fcollect dest too small");
         let bytes = nelems * std::mem::size_of::<T>();
         let my_rank = self.team_my_pe(team);
-        Metrics::add(&self.rt.metrics.collectives, 1);
+        Metrics::add(&self.rt.metrics.coll_fcollect, 1);
+        let shape = CollShape::from_members(self.rt.topo(), spec.members());
+        let (algo, snap) = self.coll_select(CollOp::Fcollect, team, &shape, bytes);
+        let t0 = self.clock.now_ns();
 
-        let dst_off = dest.byte_offset() + my_rank * bytes;
+        if algo == CollAlgo::Flat {
+            let dst_off = dest.byte_offset() + my_rank * bytes;
+            self.rt
+                .heaps
+                .copy(self.pe(), src.byte_offset(), self.pe(), dst_off, bytes);
+            let peers: Vec<usize> = spec.members().filter(|&p| p != self.pe()).collect();
+            self.count_flat_coll_bytes(CollOpIdx::Fcollect, &peers, bytes);
+            self.fanout(&peers, src.byte_offset(), dst_off, bytes, items);
+            self.team_sync(team);
+        } else {
+            Metrics::add(&self.rt.metrics.coll_hier, 1);
+            self.fcollect_hier(
+                src.byte_offset(),
+                dest.byte_offset(),
+                bytes,
+                team,
+                items,
+                algo,
+                &shape,
+            );
+        }
+        // Node leaders carry the wire schedule — they feed the cell.
+        if !shape.single_node()
+            && spec.node_leader(self.rt.topo(), self.pe()) == self.pe()
+        {
+            self.rt.xfer.coll_observe(
+                CollOp::Fcollect,
+                bytes,
+                spec.size,
+                algo != CollAlgo::Flat,
+                self.clock.now_ns() - t0,
+                snap.version,
+            );
+        }
+    }
+
+    /// Hierarchical fcollect: members gather their blocks to the node
+    /// leader (stage 1), leaders exchange whole node slices — contiguous
+    /// team-rank ranges, the [`TeamSpec`] monotone-node invariant — on
+    /// the wire (stage 2), then redistribute the assembled buffer down
+    /// the GPU-leader chain (stage 3).
+    ///
+    /// [`TeamSpec`]: super::teams::TeamSpec
+    fn fcollect_hier(
+        &self,
+        src_off: usize,
+        dst_base: usize,
+        bytes: usize,
+        team: TeamId,
+        items: usize,
+        algo: CollAlgo,
+        shape: &CollShape,
+    ) {
+        let spec = self.team_spec(team);
+        let topo = self.rt.topo();
+        let me = self.pe();
+        let my_rank = spec.rank_of(me).expect("not a member");
+        let my_node = topo.node_of(me);
+        let leader = spec.node_leader(topo, me);
+        let total = bytes * spec.size;
+
+        // Everyone parks their own block at rank offset first.
         self.rt
             .heaps
-            .copy(self.pe(), src.byte_offset(), self.pe(), dst_off, bytes);
-        let peers: Vec<usize> = spec.members().filter(|&p| p != self.pe()).collect();
-        self.fanout(&peers, src.byte_offset(), dst_off, bytes, items);
+            .copy(me, src_off, me, dst_base + my_rank * bytes, bytes);
+
+        // Stage 1 — intra gather to the node leader.
+        if me != leader {
+            self.rt
+                .metrics
+                .add_coll_bytes(CollOpIdx::Fcollect, CollStage::Intra, bytes as u64);
+            self.fanout(&[leader], src_off, dst_base + my_rank * bytes, bytes, items);
+        }
+        self.team_sync(team);
+
+        // Stage 2 — leaders exchange node slices.
+        if me == leader {
+            let group: Vec<usize> = spec
+                .members()
+                .filter(|&p| topo.node_of(p) == my_node)
+                .collect();
+            let first_rank = spec.rank_of(group[0]).expect("member");
+            let slice_off = dst_base + first_rank * bytes;
+            let slice_bytes = bytes * group.len();
+            let others: Vec<usize> = spec
+                .node_groups(topo)
+                .into_iter()
+                .filter(|(n, _)| *n != my_node)
+                .map(|(_, g)| g[0])
+                .collect();
+            let wg = WorkGroup::new(items.max(1).min(WorkGroup::MAX_SIZE));
+            for &l in &others {
+                self.push_block(l, slice_off, slice_off, slice_bytes, &wg);
+            }
+            self.rt.metrics.add_coll_bytes(
+                CollOpIdx::Fcollect,
+                CollStage::Inter,
+                (slice_bytes * others.len()) as u64,
+            );
+            self.coll_exchange_wire_charge(algo, shape.nnodes(), slice_bytes, total);
+        }
+        self.team_sync(team);
+
+        // Stage 3 — redistribute the assembled buffer: leader → GPU
+        // leaders over Xe-Link, then GPU leaders → their tiles over MDFI
+        // (the pipelined GPU-leader chain the estimator prices).
+        if me == leader {
+            let targets: Vec<usize> = spec
+                .gpu_leaders_on_node(topo, my_node)
+                .into_iter()
+                .filter(|&g| g != me)
+                .collect();
+            if !targets.is_empty() {
+                self.rt.metrics.add_coll_bytes(
+                    CollOpIdx::Fcollect,
+                    CollStage::Intra,
+                    (total * targets.len()) as u64,
+                );
+                self.fanout(&targets, dst_base, dst_base, total, items);
+            }
+        }
+        self.team_sync(team);
+        if spec.gpu_leader(topo, me) == me {
+            let my_gpu = topo.global_gpu_of(me);
+            let targets: Vec<usize> = spec
+                .members()
+                .filter(|&p| topo.global_gpu_of(p) == my_gpu && p != me && p != leader)
+                .collect();
+            if !targets.is_empty() {
+                self.rt.metrics.add_coll_bytes(
+                    CollOpIdx::Fcollect,
+                    CollStage::Intra,
+                    (total * targets.len()) as u64,
+                );
+                self.fanout(&targets, dst_base, dst_base, total, items);
+            }
+        }
         self.team_sync(team);
     }
 
@@ -402,7 +866,7 @@ impl PeCtx {
         let spec = self.team_spec(team);
         let bytes = nelems * std::mem::size_of::<T>();
         let my_rank = self.team_my_pe(team);
-        Metrics::add(&self.rt.metrics.collectives, 1);
+        Metrics::add(&self.rt.metrics.coll_other, 1);
         let dst_off = dest.byte_offset() + my_rank * bytes;
         // The host enqueues one copy per destination and the engines run
         // them concurrently (up to engines_per_gpu), so the modeled time
@@ -490,7 +954,7 @@ impl PeCtx {
             COLLECT_BASE + self.npes() * 8 <= RESERVED_BYTES,
             "too many PEs for collect size-exchange region"
         );
-        Metrics::add(&self.rt.metrics.collectives, 1);
+        Metrics::add(&self.rt.metrics.coll_other, 1);
 
         // Phase 1: publish my size into every member's slot[my_world_pe].
         for peer in spec.members() {
@@ -572,7 +1036,7 @@ impl PeCtx {
         let esz = std::mem::size_of::<T>();
         let bytes = nelems * esz;
         let my_rank = self.team_my_pe(team);
-        Metrics::add(&self.rt.metrics.collectives, 1);
+        Metrics::add(&self.rt.metrics.coll_other, 1);
 
         let wg = WorkGroup::new(1);
         for (j, peer) in spec.members().enumerate() {
@@ -626,12 +1090,24 @@ impl PeCtx {
         let spec = self.team_spec(team);
         let esz = std::mem::size_of::<T>();
         let bytes = nelems * esz;
-        Metrics::add(&self.rt.metrics.collectives, 1);
+        Metrics::add(&self.rt.metrics.coll_reduce, 1);
+        let topo = self.rt.topo();
+        let shape = CollShape::from_members(topo, spec.members());
+        let (algo, snap) = self.coll_select(CollOp::Reduce, team, &shape, bytes);
+        let hier = algo != CollAlgo::Flat;
+        if hier {
+            Metrics::add(&self.rt.metrics.coll_hier, 1);
+        }
+        let t0 = self.clock.now_ns();
 
         // Inputs must be globally ready before anyone reads them.
         self.team_sync(team);
 
-        // Gather + fold, duplicated on every PE (paper §III-G.2).
+        // Gather + fold, duplicated on every PE (paper §III-G.2). The
+        // duplicated gather is the bit contract: the fold order is my
+        // member order under BOTH algorithms, so hierarchical results
+        // match flat ones bit for bit — the hierarchy lives in the
+        // modeled schedule and the byte table, not in the arithmetic.
         let mut acc = vec![T::from_zeroed(); nelems];
         self.rt
             .heaps
@@ -670,11 +1146,62 @@ impl PeCtx {
             }
             self.fold(op, &mut acc, &tmp);
         }
-        // Loads from distinct peers pipeline across links; approximate
-        // with the max of per-peer times plus a per-peer issue charge.
-        let members = spec.size.saturating_sub(1) as f64;
-        self.clock
-            .advance(self.rt.cost.device_issue_ns() * members + gathered.max(0.0) / members.max(1.0) + self.reduce_compute_ns(bytes, spec.size));
+        if !hier {
+            // Flat charge + accounting (the pre-hierarchy behavior).
+            // Loads from distinct peers pipeline across links; approximate
+            // with the max of per-peer times plus a per-peer issue charge.
+            let peers: Vec<usize> = spec.members().filter(|&p| p != self.pe()).collect();
+            self.count_flat_coll_bytes(CollOpIdx::Reduce, &peers, bytes);
+            let members = spec.size.saturating_sub(1) as f64;
+            self.clock
+                .advance(self.rt.cost.device_issue_ns() * members + gathered.max(0.0) / members.max(1.0) + self.reduce_compute_ns(bytes, spec.size));
+        } else {
+            // Hierarchical charge: node-local gather, leader-only wire
+            // exchange (composed per-hop plans), duplicated compute, and
+            // the result fan-out down the GPU-leader chain. The modeled
+            // roles drive the byte table too: non-leaders account their
+            // gather push, leaders the slice exchange + result broadcast.
+            let me = self.pe();
+            let leader = spec.node_leader(topo, me);
+            let my_node = topo.node_of(me);
+            let group = spec
+                .members()
+                .filter(|&p| topo.node_of(p) == my_node)
+                .count();
+            let gpus = spec.gpu_leaders_on_node(topo, my_node).len().max(1);
+            let cost = &self.rt.cost;
+            let gather_ns =
+                cost.coll_intra_ns_at(&snap.params, bytes * group, group.saturating_sub(1), gpus);
+            let bcast_ns = cost.coll_intra_bcast_ns_at(&snap.params, bytes, group, gpus);
+            self.clock.advance(
+                cost.device_issue_ns() * group as f64
+                    + gather_ns
+                    + self.reduce_compute_ns(bytes, spec.size)
+                    + bcast_ns,
+            );
+            if me == leader {
+                self.rt.metrics.add_coll_bytes(
+                    CollOpIdx::Reduce,
+                    CollStage::Inter,
+                    (bytes * group * shape.nnodes().saturating_sub(1)) as u64,
+                );
+                self.rt.metrics.add_coll_bytes(
+                    CollOpIdx::Reduce,
+                    CollStage::Intra,
+                    (bytes * group.saturating_sub(1)) as u64,
+                );
+                self.coll_exchange_wire_charge(
+                    algo,
+                    shape.nnodes(),
+                    bytes * group,
+                    bytes * spec.size,
+                );
+            } else {
+                self.rt
+                    .metrics
+                    .add_coll_bytes(CollOpIdx::Reduce, CollStage::Intra, bytes as u64);
+            }
+        }
 
         // In-place reductions (dest == src, spec-legal) must not clobber a
         // source block a slower peer is still gathering: wait for everyone
@@ -685,6 +1212,18 @@ impl PeCtx {
             .heap(self.pe())
             .write(dest.byte_offset(), as_bytes(&acc));
         self.team_sync(team);
+
+        // Node leaders carry the wire schedule — they feed the cell.
+        if !shape.single_node() && spec.node_leader(topo, self.pe()) == self.pe() {
+            self.rt.xfer.coll_observe(
+                CollOp::Reduce,
+                bytes,
+                spec.size,
+                hier,
+                self.clock.now_ns() - t0,
+                snap.version,
+            );
+        }
     }
 
     /// Elementwise fold of `other` into `acc` — the compute lane.

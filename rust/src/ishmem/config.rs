@@ -5,6 +5,34 @@ use crate::sim::Topology;
 
 use super::cutover::CutoverConfig;
 
+/// Collective algorithm policy (`coll.algo`): `Auto` selects flat vs
+/// hierarchical per call through the cost model + adaptive table, the
+/// fixed variants force one shape (ablations / determinism).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollAlgoMode {
+    Auto,
+    Flat,
+    HierRing,
+    HierTree,
+}
+
+/// Collective knobs (`coll.*`): how broadcast/fcollect/reduce decompose
+/// into tile/GPU/node stages and how the inter-node algorithm is picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollConfig {
+    pub algo: CollAlgoMode,
+    /// Fan-out degree `k` of the inter-node tree stage
+    /// (`coll.leader_fanout`): each node leader forwards to up to `k`
+    /// children per level. Ignored by the ring variant.
+    pub leader_fanout: usize,
+}
+
+impl Default for CollConfig {
+    fn default() -> Self {
+        CollConfig { algo: CollAlgoMode::Auto, leader_fanout: 4 }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct IshmemConfig {
     pub topology: Topology,
@@ -67,6 +95,9 @@ pub struct IshmemConfig {
     /// re-applied live on every hit, so a `plan_cache.enable = false`
     /// machine plans bit-for-bit identically — just slower.
     pub plan_cache: crate::xfer::plan::PlanCacheConfig,
+    /// Hierarchical-collective knobs (`coll.algo`, `coll.leader_fanout`):
+    /// single-node teams always take the flat path regardless.
+    pub coll: CollConfig,
 }
 
 impl Default for IshmemConfig {
@@ -88,6 +119,7 @@ impl Default for IshmemConfig {
             xla_reduce_min_elems: 1024,
             calib: crate::xfer::calibrate::CalibConfig::default(),
             plan_cache: crate::xfer::plan::PlanCacheConfig::default(),
+            coll: CollConfig::default(),
         }
     }
 }
@@ -176,6 +208,10 @@ impl IshmemConfig {
         anyhow::ensure!(
             !self.plan_cache.enable || self.plan_cache.capacity >= 1,
             "plan_cache.capacity must be at least 1 when the cache is enabled"
+        );
+        anyhow::ensure!(
+            self.coll.leader_fanout >= 2,
+            "coll.leader_fanout below 2 cannot form a tree"
         );
         Ok(())
     }
@@ -290,6 +326,19 @@ mod tests {
         assert!(cfg.validate().is_err());
         // Capacity is irrelevant when the cache is off.
         cfg.plan_cache.enable = false;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn coll_knobs_validated() {
+        let cfg = IshmemConfig::default();
+        assert_eq!(cfg.coll.algo, CollAlgoMode::Auto, "collectives must default to Auto");
+        assert!(cfg.coll.leader_fanout >= 2);
+        let mut cfg = IshmemConfig::default();
+        cfg.coll.leader_fanout = 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.coll.algo = CollAlgoMode::Flat;
         assert!(cfg.validate().is_ok());
     }
 

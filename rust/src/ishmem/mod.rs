@@ -41,7 +41,7 @@ pub mod teams;
 pub mod types;
 pub mod workgroup;
 
-pub use config::IshmemConfig;
+pub use config::{CollAlgoMode, CollConfig, IshmemConfig};
 pub use cutover::{CutoverConfig, CutoverMode, Path};
 pub use heap::{SymAddr, SymAllocator};
 pub use sync::Cmp;
@@ -56,7 +56,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use crate::coordinator::metrics::Metrics;
 use crate::ringbuf::{CompletionPool, Message, Ring, RingOp};
 use crate::runtime::XlaRuntime;
-use crate::sim::{CostModel, HeapRegistry, SimClock, Topology};
+use crate::sim::{CollAlgo, CostModel, HeapRegistry, SimClock, Topology};
 use crate::sos::heap::{ExternalHeapKind, SosHeaps, StagingSlab, ThreadLevel};
 use crate::sos::pmi::PmiWorld;
 use crate::sos::transport::OfiTransport;
@@ -88,6 +88,12 @@ pub struct Ishmem {
     /// User teams (ids ≥ 2); WORLD=0 and SHARED=1 are implicit.
     pub(crate) teams: RwLock<Vec<teams::TeamSpec>>,
     pub(crate) team_index: Mutex<HashMap<teams::TeamKey, usize>>,
+    /// Published algorithm choices for in-flight hierarchical-capable
+    /// collectives, keyed by (team id, per-team collective epoch). The
+    /// team's lowest member decides (flat vs hier — the stage/sync
+    /// structure differs, so every member MUST agree) and publishes with
+    /// a waiter count; the entry retires when the last member reads it.
+    pub(crate) coll_decisions: Mutex<HashMap<(usize, u64), (CollAlgo, usize)>>,
     /// AOT kernel runtime (PJRT); optional — reductions fall back to the
     /// native combine when absent.
     pub(crate) xla: RwLock<Option<Arc<XlaRuntime>>>,
@@ -179,6 +185,7 @@ impl Ishmem {
             shutdown: AtomicBool::new(false),
             teams: RwLock::new(Vec::new()),
             team_index: Mutex::new(HashMap::new()),
+            coll_decisions: Mutex::new(HashMap::new()),
             xla: RwLock::new(None),
             config,
         }))
@@ -218,6 +225,9 @@ impl Ishmem {
         // Reset per-launch team registry (user teams don't outlive a job).
         self.teams.write().unwrap().clear();
         self.team_index.lock().unwrap().clear();
+        // Algorithm-decision slots drain by construction (the last waiter
+        // removes the entry), but a panicked launch may leak some.
+        self.coll_decisions.lock().unwrap().clear();
 
         let results: Vec<Mutex<Option<R>>> = (0..npes).map(|_| Mutex::new(None)).collect();
         std::thread::scope(|s| {
@@ -273,6 +283,7 @@ impl Ishmem {
             ipc,
             alloc: RefCell::new(SymAllocator::new(user_heap_bytes)),
             team_rounds: RefCell::new(vec![0u64; heap::MAX_TEAMS]),
+            coll_epoch: RefCell::new(vec![0u64; heap::MAX_TEAMS]),
             track: CompletionTracker::new(),
             slab: StagingSlab::new(user_heap_bytes, self.config.staging_slab_bytes),
             stream: CmdStream::new(self.config.max_batch_depth)
@@ -325,6 +336,9 @@ pub struct PeCtx {
     pub(crate) alloc: RefCell<SymAllocator>,
     /// Per-team sync round counters (push-barrier generations).
     pub(crate) team_rounds: RefCell<Vec<u64>>,
+    /// Per-team collective epochs (mirrored across members — collectives
+    /// are collective calls), keying the published algorithm decisions.
+    pub(crate) coll_epoch: RefCell<Vec<u64>>,
     /// Unified blocking/NBI completion state (xfer "complete" stage):
     /// modeled nbi horizon + outstanding fire-and-forget proxy posts +
     /// reserved engine-queue backlog bytes.

@@ -47,6 +47,63 @@ impl TeamSpec {
     pub fn rank_of(&self, pe: usize) -> Option<usize> {
         self.contains(pe).then(|| (pe - self.start) / self.stride)
     }
+
+    // ------------------------------- hierarchical-collective leaders --
+    //
+    // Members ascend in world rank and `node_of`/`global_gpu_of` are
+    // monotone over a node's PEs, so every node (and GPU) group covers a
+    // *contiguous* team-rank range — hierarchical fcollect exchanges
+    // whole node slices on the wire because of this invariant.
+
+    /// Members grouped by node, in member order: `(node, members)` for
+    /// every node holding at least one member.
+    pub fn node_groups(&self, topo: &crate::sim::Topology) -> Vec<(usize, Vec<usize>)> {
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for pe in self.members() {
+            let node = topo.node_of(pe);
+            match groups.last_mut() {
+                Some((n, g)) if *n == node => g.push(pe),
+                _ => groups.push((node, vec![pe])),
+            }
+        }
+        groups
+    }
+
+    /// Node leader of `pe`'s node within this team: the lowest member on
+    /// that node. Leaders are the only ranks on the wire in hierarchical
+    /// collectives. Panics if the node holds no member (callers pass a
+    /// member's own node).
+    pub fn node_leader(&self, topo: &crate::sim::Topology, pe: usize) -> usize {
+        let node = topo.node_of(pe);
+        self.members()
+            .find(|&m| topo.node_of(m) == node)
+            .unwrap_or_else(|| panic!("no team member on node {node}"))
+    }
+
+    /// GPU leader of `pe`'s GPU within this team: the lowest member on
+    /// the same global GPU (stages tile-level redistribution over MDFI).
+    pub fn gpu_leader(&self, topo: &crate::sim::Topology, pe: usize) -> usize {
+        let gpu = topo.global_gpu_of(pe);
+        self.members()
+            .find(|&m| topo.global_gpu_of(m) == gpu)
+            .unwrap_or_else(|| panic!("no team member on gpu {gpu}"))
+    }
+
+    /// GPU leaders of `node`'s member group, in member order — one per
+    /// global GPU holding members (monotone GPU ids within a node make
+    /// the single-pass dedup exact).
+    pub fn gpu_leaders_on_node(&self, topo: &crate::sim::Topology, node: usize) -> Vec<usize> {
+        let mut leaders: Vec<usize> = Vec::new();
+        let mut last_gpu = usize::MAX;
+        for m in self.members().filter(|&m| topo.node_of(m) == node) {
+            let gpu = topo.global_gpu_of(m);
+            if gpu != last_gpu {
+                leaders.push(m);
+                last_gpu = gpu;
+            }
+        }
+        leaders
+    }
 }
 
 /// Key identifying one collective team-creation call site (mirrored
@@ -179,5 +236,30 @@ mod tests {
         assert!(!s.contains(3) && !s.contains(14));
         assert_eq!(s.rank_of(8), Some(2));
         assert_eq!(s.members().collect::<Vec<_>>(), vec![2, 5, 8, 11]);
+    }
+
+    #[test]
+    fn leaders_and_node_groups() {
+        use crate::sim::Topology;
+        // 2 nodes × 2 GPUs × 2 tiles = 8 PEs; odd PEs: {1,3,5,7}.
+        let topo = Topology::new(2, 2, 2);
+        let s = TeamSpec { start: 1, stride: 2, size: 4 };
+        let groups = s.node_groups(&topo);
+        assert_eq!(groups, vec![(0, vec![1, 3]), (1, vec![5, 7])]);
+        // Node-group team ranks are contiguous (the slice invariant).
+        assert_eq!(s.rank_of(5), Some(2));
+        assert_eq!(s.rank_of(7), Some(3));
+        // Node leader = lowest member on the node.
+        assert_eq!(s.node_leader(&topo, 3), 1);
+        assert_eq!(s.node_leader(&topo, 7), 5);
+        // PEs 1 (gpu 0) and 3 (gpu 1) lead their own GPUs.
+        assert_eq!(s.gpu_leader(&topo, 1), 1);
+        assert_eq!(s.gpu_leader(&topo, 3), 3);
+        assert_eq!(s.gpu_leaders_on_node(&topo, 0), vec![1, 3]);
+        // A full-node team: tile peers share their GPU leader.
+        let w = TeamSpec { start: 0, stride: 1, size: 8 };
+        assert_eq!(w.gpu_leader(&topo, 1), 0);
+        assert_eq!(w.gpu_leaders_on_node(&topo, 1), vec![4, 6]);
+        assert_eq!(w.node_groups(&topo).len(), 2);
     }
 }

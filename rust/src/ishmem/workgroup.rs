@@ -73,7 +73,11 @@ impl PeCtx {
         self.get_nbi_items(dest, src, pe, wg.size());
     }
 
-    /// `ishmemx_broadcast_work_group`.
+    /// `ishmemx_broadcast_work_group`. Collective work-group variants
+    /// delegate to the shared `*_items` bodies, so the hierarchical
+    /// algorithm selection (and the published team-wide decision) applies
+    /// to device work-group launches exactly as to single-thread calls —
+    /// `wg.size()` feeds the cooperating-item count the planner prices.
     pub fn broadcast_work_group<T: ShmemType>(
         &self,
         dest: SymAddr<T>,

@@ -36,7 +36,8 @@ pub mod ze;
 pub use coordinator::launch::{run_npes, run_spmd, Machine};
 pub use device::WorkGroup;
 pub use ishmem::{
-    Cmp, CutoverConfig, CutoverMode, Ishmem, IshmemConfig, PeCtx, ReduceOp, SymAddr, TeamId,
+    Cmp, CollAlgoMode, CollConfig, CutoverConfig, CutoverMode, Ishmem, IshmemConfig, PeCtx,
+    ReduceOp, SymAddr, TeamId,
 };
 pub use runtime::{HostTensor, XlaRuntime};
 pub use sim::{Locality, Topology};

@@ -125,6 +125,7 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "fig-batch" => vec![figures::fig_batch()],
         "fig-stripe" => vec![figures::fig_stripe()],
         "fig-rail" => vec![figures::fig_rail()],
+        "fig-coll-scale" => vec![figures::fig_coll_scale()],
         "ablate-cl" => vec![figures::ablate_cmdlists()],
         "ablate-sync" => vec![figures::ablate_sync()],
         "all" => figures::all_figures(),

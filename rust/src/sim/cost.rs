@@ -127,6 +127,129 @@ fn stripe_scan(
     best
 }
 
+/// Collective algorithm a team-spanning op can run (ISSUE 7): the flat
+/// per-peer fan-out, or the hierarchical tile/GPU/node decomposition with
+/// a ring or tree inter-node stage among node leaders.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollAlgo {
+    Flat,
+    HierRing,
+    HierTree,
+}
+
+/// Which collective an estimate prices (they move different byte volumes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollOp {
+    Broadcast,
+    Fcollect,
+    Reduce,
+}
+
+/// Topology digest of one team as the collective estimators see it:
+/// member and distinct-GPU counts per participating node. Built once per
+/// op from the team spec ([`Self::from_members`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CollShape {
+    /// Team size.
+    pub npes: usize,
+    /// Members resident on each participating node.
+    pub node_members: Vec<usize>,
+    /// Distinct GPUs holding members, per participating node.
+    pub node_gpus: Vec<usize>,
+}
+
+impl CollShape {
+    /// Digest an ascending member list against the machine topology.
+    pub fn from_members(topo: &Topology, members: impl Iterator<Item = usize>) -> Self {
+        let mut npes = 0usize;
+        let mut nodes: Vec<(usize, usize, std::collections::BTreeSet<usize>)> = Vec::new();
+        for pe in members {
+            npes += 1;
+            let node = topo.node_of(pe);
+            let gpu = topo.global_gpu_of(pe);
+            match nodes.iter_mut().find(|(n, _, _)| *n == node) {
+                Some((_, count, gpus)) => {
+                    *count += 1;
+                    gpus.insert(gpu);
+                }
+                None => {
+                    let mut gpus = std::collections::BTreeSet::new();
+                    gpus.insert(gpu);
+                    nodes.push((node, 1, gpus));
+                }
+            }
+        }
+        CollShape {
+            npes,
+            node_members: nodes.iter().map(|(_, c, _)| *c).collect(),
+            node_gpus: nodes.iter().map(|(_, _, g)| g.len()).collect(),
+        }
+    }
+
+    /// Participating node count.
+    pub fn nnodes(&self) -> usize {
+        self.node_members.len()
+    }
+
+    /// A single-node team has no inter-node stage — it always takes the
+    /// flat path (bit-for-bit the pre-hierarchy behavior).
+    pub fn single_node(&self) -> bool {
+        self.nnodes() <= 1
+    }
+
+    /// (members, gpus) of the most populated node — the stage bottleneck.
+    pub fn max_node(&self) -> (usize, usize) {
+        self.node_members
+            .iter()
+            .zip(&self.node_gpus)
+            .map(|(&m, &g)| (m, g))
+            .max()
+            .unwrap_or((1, 1))
+    }
+}
+
+/// All three algorithm estimates for one collective, priced from one
+/// snapshot ([`CostModel::coll_estimates_at`]).
+#[derive(Clone, Copy, Debug)]
+pub struct CollEstimates {
+    pub flat_ns: f64,
+    pub ring_ns: f64,
+    pub tree_ns: f64,
+}
+
+impl CollEstimates {
+    /// The cheaper hierarchical variant.
+    pub fn best_hier(&self) -> (CollAlgo, f64) {
+        if self.tree_ns < self.ring_ns {
+            (CollAlgo::HierTree, self.tree_ns)
+        } else {
+            (CollAlgo::HierRing, self.ring_ns)
+        }
+    }
+
+    /// Model argmin over all three (ties favor flat — the simpler path).
+    pub fn best(&self) -> (CollAlgo, f64) {
+        let (hier, hier_ns) = self.best_hier();
+        if hier_ns < self.flat_ns {
+            (hier, hier_ns)
+        } else {
+            (CollAlgo::Flat, self.flat_ns)
+        }
+    }
+}
+
+/// Levels of a `k`-ary tree spanning `nodes` leaves.
+pub fn tree_depth(nodes: usize, k: usize) -> usize {
+    let k = k.max(2);
+    let mut depth = 0usize;
+    let mut span = 1usize;
+    while span < nodes {
+        span = span.saturating_mul(k);
+        depth += 1;
+    }
+    depth
+}
+
 /// Shared, thread-safe cost model (one per launched machine).
 #[derive(Debug)]
 pub struct CostModel {
@@ -648,6 +771,255 @@ impl CostModel {
         }
     }
 
+    // ------------------------------------------- collective estimators ----
+
+    /// One inter-node leader hop of `bytes` (rail-striped RDMA, shape
+    /// chosen by the rail planner) — the wire term every hierarchical
+    /// stage composes.
+    pub fn coll_wire_ns_at(&self, l: &LearnedParams, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let (chunk, width) = self.rail_stripe_for_at(l, bytes, usize::MAX);
+        let n = bytes.div_ceil(chunk.max(1));
+        self.internode_striped_ns_at(l, bytes, true, true, width, n)
+    }
+
+    /// Flat-collective wire term: `blocks` *independent* per-peer RDMA
+    /// blocks of `block_bytes` each, injected through one node's rails.
+    /// Unlike [`Self::coll_wire_ns_at`] the per-block injection startup is
+    /// charged for every block (that is what the flat execution does: one
+    /// `transport.put` per remote peer), so flat grows super-linearly in
+    /// team size while the aggregated hierarchical hops do not.
+    pub fn coll_wire_blocks_ns_at(
+        &self,
+        l: &LearnedParams,
+        block_bytes: usize,
+        blocks: usize,
+    ) -> f64 {
+        if block_bytes == 0 || blocks == 0 {
+            return 0.0;
+        }
+        let nic = self.nic_eff_at(l);
+        self.ring_rtt_ns()
+            + self.params.overhead.host_issue_ns
+            + nic.rdma_striped_ns(block_bytes * blocks, nic.rails.max(1), blocks)
+    }
+
+    /// One intra-node distribution (or gather) stage: a source pushing
+    /// `bytes` per peer to `peers` members spread over `gpus` Xe-Links,
+    /// each link running its GPU's engines at the striped rate. The links
+    /// run concurrently, so the stage costs the busiest link.
+    pub fn coll_intra_ns_at(
+        &self,
+        l: &LearnedParams,
+        bytes: usize,
+        peers: usize,
+        gpus: usize,
+    ) -> f64 {
+        if peers == 0 || bytes == 0 {
+            return 0.0;
+        }
+        let ce = self.ce_eff_at(l);
+        let links = gpus.clamp(1, self.topo.gpus_per_node.max(1));
+        let per_link_peers = peers.div_ceil(links);
+        let startups = per_link_peers.div_ceil(ce.engines_per_gpu.max(1)) as f64
+            * ce.startup_immediate_ns;
+        let bw = ce.striped_bw_gbs(
+            &self.params.xe,
+            Locality::SameNode,
+            ce.engines_per_gpu.max(1),
+        );
+        self.ring_rtt_ns() + startups + bytes as f64 * per_link_peers as f64 / bw
+    }
+
+    /// Intra-node distribution of ONE payload to every node member, the
+    /// way the hierarchical executor moves it: a pipelined GPU-leader
+    /// chain (the payload crosses each Xe-Link once, links run
+    /// concurrently) followed by an MDFI fan to the remaining tiles of
+    /// each GPU. Unlike [`Self::coll_intra_ns_at`] the cost is (nearly)
+    /// independent of the member count — that is the whole point of the
+    /// GPU-leader stage.
+    pub fn coll_intra_bcast_ns_at(
+        &self,
+        l: &LearnedParams,
+        bytes: usize,
+        members: usize,
+        gpus: usize,
+    ) -> f64 {
+        if members <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let ce = self.ce_eff_at(l);
+        let engines = ce.engines_per_gpu.max(1);
+        let gpus = gpus.clamp(1, self.topo.gpus_per_node.max(1));
+        let link = if gpus > 1 {
+            bytes as f64 / ce.striped_bw_gbs(&self.params.xe, Locality::SameNode, engines)
+        } else {
+            0.0
+        };
+        let tiles = members.div_ceil(gpus);
+        let mdfi = bytes as f64 * tiles.saturating_sub(1) as f64
+            / ce.striped_bw_gbs(&self.params.xe, Locality::SameGpu, engines);
+        self.ring_rtt_ns() + ce.startup_immediate_ns + link + mdfi
+    }
+
+    /// All three algorithm estimates for one collective, priced from ONE
+    /// caller-held snapshot (the p2p single-generation discipline).
+    /// `bytes` is the broadcast payload / fcollect block / reduce vector;
+    /// `leader_fanout` is the inter-node tree arity.
+    pub fn coll_estimates_at(
+        &self,
+        l: &LearnedParams,
+        shape: &CollShape,
+        op: CollOp,
+        bytes: usize,
+        leader_fanout: usize,
+    ) -> CollEstimates {
+        let npes = shape.npes.max(1);
+        let nnodes = shape.nnodes().max(1);
+        let (m_max, g_max) = shape.max_node();
+        if shape.single_node() {
+            // No inter-node stage exists: every algorithm IS the flat path
+            // (and the executor gates it there), so the estimates agree.
+            let flat = match op {
+                CollOp::Broadcast => {
+                    self.params.overhead.device_issue_ns
+                        + self.coll_intra_ns_at(l, bytes, m_max.saturating_sub(1), g_max)
+                }
+                CollOp::Fcollect => {
+                    self.params.overhead.device_issue_ns
+                        + self.coll_intra_ns_at(
+                            l,
+                            bytes * m_max,
+                            m_max.saturating_sub(1),
+                            g_max,
+                        )
+                }
+                CollOp::Reduce => {
+                    self.params.overhead.device_issue_ns * npes as f64
+                        + self.coll_intra_ns_at(
+                            l,
+                            bytes * m_max,
+                            m_max.saturating_sub(1),
+                            g_max,
+                        )
+                        + bytes as f64 * npes.saturating_sub(1) as f64
+                            / (self.params.xe.hbm_bw_gbs / 2.0)
+                }
+            };
+            return CollEstimates { flat_ns: flat, ring_ns: flat, tree_ns: flat };
+        }
+        let remote = npes - m_max.min(npes);
+        let issue = self.params.overhead.device_issue_ns;
+        let k = leader_fanout.clamp(2, nnodes.max(2)).min(nnodes.saturating_sub(1).max(1));
+        let depth = tree_depth(nnodes, k);
+        let (flat_ns, ring_ns, tree_ns) = match op {
+            CollOp::Broadcast => {
+                // Flat: the root pushes one block per member — remote
+                // blocks all serialize through the root node's rails.
+                let flat = issue
+                    + self.coll_intra_ns_at(l, bytes, m_max.saturating_sub(1), g_max)
+                    + self.coll_wire_blocks_ns_at(l, bytes, remote);
+                let intra = self.coll_intra_bcast_ns_at(l, bytes, m_max, g_max);
+                // Ring: pipelined chain over node leaders — the first full
+                // payload plus one chunk-time per extra hop.
+                let (chunk, _w) = self.rail_stripe_for_at(l, bytes.max(1), usize::MAX);
+                let ring = issue
+                    + self.coll_wire_ns_at(l, bytes)
+                    + nnodes.saturating_sub(2) as f64
+                        * self.coll_wire_ns_at(l, chunk.min(bytes))
+                    + intra;
+                // Tree: depth levels, each parent feeding ≤k children off
+                // its own rails (serialized per parent).
+                let tree = issue
+                    + depth as f64 * k as f64 * self.coll_wire_ns_at(l, bytes)
+                    + intra;
+                (flat, ring, tree)
+            }
+            CollOp::Fcollect => {
+                // Flat: every PE fans its block to all members; the
+                // busiest node's NIC moves block · m · (npes − m).
+                let flat = issue
+                    + self.coll_intra_ns_at(
+                        l,
+                        bytes * m_max,
+                        m_max.saturating_sub(1),
+                        g_max,
+                    )
+                    + self.coll_wire_blocks_ns_at(l, bytes, m_max * remote);
+                let total = bytes * npes;
+                let gather = self.coll_intra_ns_at(l, bytes, m_max.saturating_sub(1), g_max);
+                let bcast = self.coll_intra_bcast_ns_at(l, total, m_max, g_max);
+                // Ring allgather of node blocks among leaders.
+                let ring = issue
+                    + gather
+                    + nnodes.saturating_sub(1) as f64
+                        * self.coll_wire_ns_at(l, bytes * m_max)
+                    + bcast;
+                // Tree: gather node blocks to the root, broadcast the full
+                // result back down.
+                let tree = issue
+                    + gather
+                    + 2.0
+                        * k as f64
+                        * depth as f64
+                        * self.coll_wire_ns_at(l, total / depth.max(1))
+                    + bcast;
+                (flat, ring, tree)
+            }
+            CollOp::Reduce => {
+                // Shared compute: n−1 elementwise folds over the vector.
+                let compute = bytes as f64 * npes.saturating_sub(1) as f64
+                    / (self.params.xe.hbm_bw_gbs / 2.0);
+                // Flat mirrors the duplicated-gather execution: every PE
+                // pulls every remote block, so each node's NIC carries
+                // vector · m · (npes − m).
+                let flat = issue * npes as f64
+                    + self.coll_intra_ns_at(
+                        l,
+                        bytes * m_max,
+                        m_max.saturating_sub(1),
+                        g_max,
+                    )
+                    + self.coll_wire_blocks_ns_at(l, bytes, m_max * remote)
+                    + compute;
+                let gather = self.coll_intra_ns_at(l, bytes, m_max.saturating_sub(1), g_max);
+                let bcast = self.coll_intra_bcast_ns_at(l, bytes, m_max, g_max);
+                // Leaders exchange raw per-node gathered blocks (keeps the
+                // fold order — and therefore the bits — identical to flat).
+                let ring = issue
+                    + gather
+                    + nnodes.saturating_sub(1) as f64
+                        * self.coll_wire_ns_at(l, bytes * m_max)
+                    + compute
+                    + bcast;
+                let total = bytes * npes;
+                let tree = issue
+                    + gather
+                    + 2.0
+                        * k as f64
+                        * depth as f64
+                        * self.coll_wire_ns_at(l, total / depth.max(1))
+                    + compute
+                    + bcast;
+                (flat, ring, tree)
+            }
+        };
+        CollEstimates { flat_ns, ring_ns, tree_ns }
+    }
+
+    /// [`Self::coll_estimates_at`] against the current generation.
+    pub fn coll_estimates(
+        &self,
+        shape: &CollShape,
+        op: CollOp,
+        bytes: usize,
+        leader_fanout: usize,
+    ) -> CollEstimates {
+        self.coll_estimates_at(&self.model.get(), shape, op, bytes, leader_fanout)
+    }
+
     pub fn device_issue_ns(&self) -> f64 {
         self.params.overhead.device_issue_ns
     }
@@ -990,6 +1362,87 @@ mod tests {
                 });
             }
         }
+    }
+
+    fn shape_for(npes: usize) -> (Topology, CollShape) {
+        let topo = Topology::multi_node_for(npes);
+        let shape = CollShape::from_members(&topo, 0..npes);
+        (topo, shape)
+    }
+
+    #[test]
+    fn coll_shape_digests_members_per_node() {
+        let topo = Topology::new(2, 2, 2);
+        let shape = CollShape::from_members(&topo, 0..8);
+        assert_eq!(shape.npes, 8);
+        assert_eq!(shape.node_members, vec![4, 4]);
+        assert_eq!(shape.node_gpus, vec![2, 2]);
+        assert!(!shape.single_node());
+        // A node-local slice is single-node.
+        let local = CollShape::from_members(&topo, 0..4);
+        assert!(local.single_node());
+        // Strided teams land on both nodes.
+        let strided = CollShape::from_members(&topo, (0..8).step_by(2));
+        assert_eq!(strided.node_members, vec![2, 2]);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_at_scale_with_growing_ratio() {
+        // The fig_coll_scale acceptance shape at estimator level: ≥2× at
+        // 64 PEs / 1 MiB, ratio non-decreasing as the machine grows.
+        for op in [CollOp::Broadcast, CollOp::Fcollect, CollOp::Reduce] {
+            let mut last_ratio = 0.0f64;
+            for npes in [64usize, 256, 1024] {
+                let (topo, shape) = shape_for(npes);
+                let m = CostModel::new(topo, CostParams::default());
+                let est = m.coll_estimates(&shape, op, 1 << 20, 2);
+                let (_, hier_ns) = est.best_hier();
+                let ratio = est.flat_ns / hier_ns;
+                assert!(
+                    ratio >= 2.0,
+                    "{op:?} at {npes} PEs: flat/hier = {ratio} < 2"
+                );
+                assert!(
+                    ratio >= last_ratio * 0.999,
+                    "{op:?}: ratio fell {last_ratio} → {ratio} at {npes} PEs"
+                );
+                last_ratio = ratio;
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_teams_select_flat() {
+        let m = model();
+        let shape = CollShape::from_members(&m.topo, 0..12);
+        assert!(shape.single_node());
+        // The runtime gate short-circuits on single_node(); the estimator
+        // itself also never prefers a hierarchy with no wire stage to
+        // collapse (remote byte volume is zero → flat has no wire term).
+        let est = m.coll_estimates(&shape, CollOp::Broadcast, 1 << 20, 2);
+        assert_eq!(est.best().0, CollAlgo::Flat, "{est:?}");
+    }
+
+    #[test]
+    fn coll_estimates_snapshot_variant_matches_wrapper_and_recomputes() {
+        let (topo, shape) = shape_for(64);
+        let m = CostModel::new(topo, CostParams::default());
+        let l = m.model.get();
+        for op in [CollOp::Broadcast, CollOp::Fcollect, CollOp::Reduce] {
+            let a = m.coll_estimates_at(&l, &shape, op, 1 << 20, 4);
+            let b = m.coll_estimates(&shape, op, 1 << 20, 4);
+            assert_eq!(a.flat_ns.to_bits(), b.flat_ns.to_bits());
+            assert_eq!(a.ring_ns.to_bits(), b.ring_ns.to_bits());
+            assert_eq!(a.tree_ns.to_bits(), b.tree_ns.to_bits());
+        }
+        // A calibration apply that slows the rails moves every wire-bound
+        // estimate; the held snapshot keeps pricing the old generation.
+        let before = m.coll_estimates(&shape, CollOp::Broadcast, 1 << 20, 2);
+        m.model.update(|lp| lp.rail_bw_frac *= 0.5);
+        let after = m.coll_estimates(&shape, CollOp::Broadcast, 1 << 20, 2);
+        assert!(after.ring_ns > before.ring_ns);
+        let held = m.coll_estimates_at(&l, &shape, CollOp::Broadcast, 1 << 20, 2);
+        assert_eq!(held.ring_ns.to_bits(), before.ring_ns.to_bits());
     }
 
     #[test]

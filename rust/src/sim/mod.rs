@@ -23,7 +23,7 @@ pub mod topology;
 pub mod xelink;
 
 pub use clock::SimClock;
-pub use cost::{CostModel, CostParams};
+pub use cost::{CollAlgo, CollEstimates, CollOp, CollShape, CostModel, CostParams};
 pub use memory::{HeapRegistry, SymHeap};
 pub use params::{LearnedParams, ModelParams, ParamsSnapshot};
 pub use rail::RailSet;

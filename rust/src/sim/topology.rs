@@ -58,6 +58,28 @@ impl Topology {
         Topology::new(1, gpus, tiles)
     }
 
+    /// Multi-node topology hosting *exactly* `npes` PEs, preferring the
+    /// Aurora-like dense node shape (8 GPUs × 2 tiles = 16 PEs/node) and
+    /// degrading gracefully: benches and tests build 64–1024-PE machines
+    /// in one line. Falls back to `single_node_for` when one node fits.
+    pub fn multi_node_for(npes: usize) -> Self {
+        assert!(npes >= 1, "need at least one PE");
+        if npes <= 16 && (npes % 2 == 0 && npes / 2 <= 8 || npes <= 8) {
+            return Topology::single_node_for(npes);
+        }
+        // Prefer 2-tile GPUs and the widest Xe-Link fabric that divides
+        // evenly; node counts grow as shapes shrink.
+        for tiles in [2usize, 1] {
+            for gpus in (1..=8).rev() {
+                let per_node = gpus * tiles;
+                if npes % per_node == 0 {
+                    return Topology::new(npes / per_node, gpus, tiles);
+                }
+            }
+        }
+        unreachable!("gpus=1, tiles=1 always divides");
+    }
+
     pub fn pes_per_gpu(&self) -> usize {
         self.tiles_per_gpu
     }
@@ -168,5 +190,20 @@ mod tests {
     #[should_panic]
     fn rejects_9way() {
         Topology::new(1, 9, 2);
+    }
+
+    #[test]
+    fn multi_node_for_builds_exact_sizes() {
+        for npes in [1usize, 2, 6, 12, 16, 24, 48, 64, 96, 128, 256, 512, 1024] {
+            let t = Topology::multi_node_for(npes);
+            assert_eq!(t.npes(), npes, "npes {npes} → {t:?}");
+            assert!(t.gpus_per_node <= 8, "{t:?}");
+        }
+        // Dense shapes pick the 16-PE Aurora-like node.
+        let t = Topology::multi_node_for(1024);
+        assert_eq!((t.nodes, t.gpus_per_node, t.tiles_per_gpu), (64, 8, 2));
+        // Small even sizes stay single-node (pre-PR behavior).
+        let t = Topology::multi_node_for(12);
+        assert_eq!(t.nodes, 1);
     }
 }

@@ -17,6 +17,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::ishmem::cutover::Path;
+use crate::sim::cost::CollOp;
 use crate::sim::topology::Locality;
 use crate::util::hash::{fast_hash, FastState};
 use crate::util::rng::AtomicRng;
@@ -40,6 +41,13 @@ pub struct BucketKey {
     /// 4-rail-striped remote observation must not alias the single-rail
     /// cell of the same size.
     pub rails_pow2: u8,
+    /// Collective algorithm-selection class: 0 for transfer cells,
+    /// `1 + CollOp` for collective cells (broadcast/fcollect/reduce keep
+    /// separate crossovers). In a collective cell the two path slots hold
+    /// *algorithms* — slot 0 (LoadStore) the flat fan-out, slot 1
+    /// (CopyEngine) the best hierarchical variant — and `peers_pow2`
+    /// carries the team-size bucket (the crossover moves with team size).
+    pub coll_op: u8,
 }
 
 impl BucketKey {
@@ -52,6 +60,7 @@ impl BucketKey {
             fanout: false,
             peers_pow2: 0,
             rails_pow2: 0,
+            coll_op: 0,
         }
     }
 
@@ -70,6 +79,23 @@ impl BucketKey {
         BucketKey {
             rails_pow2: log2_bucket(rail_width),
             ..Self::p2p(Locality::Remote, bytes, items)
+        }
+    }
+
+    /// Collective algorithm-selection cell (per-PE payload bytes, team
+    /// size): the adaptive-cutover table's team-size bucket dimension.
+    /// Slot 0 prices the flat fan-out, slot 1 the best hierarchical
+    /// variant; calibration feedback re-seeds these cells exactly like
+    /// transfer cells, so algorithm choice tracks the learned model.
+    pub fn coll(op: CollOp, bytes: usize, team_size: usize) -> Self {
+        BucketKey {
+            loc: Locality::Remote,
+            size_pow2: log2_bucket(bytes),
+            items_pow2: 0,
+            fanout: false,
+            peers_pow2: log2_bucket(team_size),
+            rails_pow2: 0,
+            coll_op: 1 + op as u8,
         }
     }
 }
@@ -283,6 +309,7 @@ impl AdaptiveTable {
         }
         v.sort_by_key(|c| {
             (
+                c.key.coll_op,
                 c.key.fanout,
                 c.key.loc as u8,
                 c.key.peers_pow2,
@@ -447,6 +474,27 @@ mod tests {
         assert_eq!(cells.len(), t.len());
         let total: u64 = cells.iter().map(|c| c.samples_loadstore).sum();
         assert_eq!(total, 4 * 64, "every concurrent observation landed");
+    }
+
+    #[test]
+    fn coll_cells_are_disjoint_by_op_team_size_and_from_transfers() {
+        let b64 = BucketKey::coll(CollOp::Broadcast, 1 << 20, 64);
+        let b256 = BucketKey::coll(CollOp::Broadcast, 1 << 20, 256);
+        let r64 = BucketKey::coll(CollOp::Reduce, 1 << 20, 64);
+        assert_ne!(b64, b256, "team size is its own bucket dimension");
+        assert_ne!(b64, r64, "ops keep separate crossovers");
+        // Never collides with the transfer cells of the same geometry.
+        assert_ne!(b64, BucketKey::p2p(Locality::Remote, 1 << 20, 1));
+        assert_ne!(b64, BucketKey::fanout(Locality::Remote, 1 << 20, 0, 64));
+        // Learning flat-vs-hier on one team size leaves others alone.
+        let t = AdaptiveTable::new(0.5);
+        t.decide(b64, 100.0, 200.0, 0);
+        t.decide(b256, 100.0, 200.0, 0);
+        for _ in 0..16 {
+            assert!(t.observe(b64, Path::LoadStore, 10_000.0, 0));
+        }
+        assert_eq!(t.peek(b64), Some(Path::CopyEngine), "flat priced out");
+        assert_eq!(t.peek(b256), Some(Path::LoadStore));
     }
 
     #[test]

@@ -29,6 +29,13 @@
 //! `CutoverMode::Adaptive` learns online, and reserve/release the
 //! per-engine byte backlog that makes the planner occupancy-aware and
 //! striped placement balanced.
+//!
+//! Hierarchical collectives (ISSUE 7) compose onto the same machinery
+//! rather than adding a fourth route: intra-node stages are fan-outs
+//! whose engine-route blocks chunk through [`chunk_iter`] with
+//! engine/rail hints, and each inter-node leader hop is priced and
+//! recorded as a composed p2p `Nic` plan, so rail calibration and
+//! backlog occupancy reach collective schedules too.
 
 use crate::coordinator::metrics::{Metrics, PathIdx};
 use crate::ishmem::PeCtx;

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::metrics::Metrics;
 use crate::ishmem::cutover::{CutoverConfig, CutoverMode, Path};
+use crate::sim::cost::CollOp;
 use crate::sim::params::ParamsSnapshot;
 use crate::sim::topology::Locality;
 use crate::sim::CostModel;
@@ -176,6 +177,18 @@ struct PlanKey {
     loc: Locality,
     bytes: usize,
     items: usize,
+    /// Canonical-layout digest for fan-out plans (0 for point-to-point):
+    /// a [`fast_hash`] over the per-link `(loc, bytes, count)` tuples plus
+    /// the NIC spill-over and peer count. Two fan-outs with the same
+    /// digest share structural estimates; a 64-bit collision between two
+    /// *different* layouts of identical (loc, bytes, items) is the
+    /// accepted (astronomically unlikely) failure mode.
+    shape: u64,
+}
+
+/// [`PlanKey::shape`] digest of a fan-out's canonical layout.
+fn fanout_digest(shape: &FanoutShape) -> u64 {
+    fast_hash(&(&shape.per_link, shape.nic_bytes, shape.npeers)).max(1)
 }
 
 /// The memoized pure portion of a plan: stripe geometry plus zero-backlog
@@ -557,7 +570,7 @@ impl XferEngine {
         bytes: usize,
         items: usize,
     ) -> CachedShape {
-        let key = PlanKey { reachable, loc, bytes, items };
+        let key = PlanKey { reachable, loc, bytes, items, shape: 0 };
         if let Some(s) = self.cache.lookup(snap, &key, &self.metrics) {
             return s;
         }
@@ -705,9 +718,9 @@ impl XferEngine {
 
     /// [`Self::fanout_engine_ns`] against one caller-held snapshot: the
     /// engine constants and the rail-spillover terms all price under the
-    /// same learned generation. (Fan-out shapes carry a heap-allocated
-    /// per-link vector and collectives are orders of magnitude rarer than
-    /// point-to-point ops, so fan-out plans are not memoized.)
+    /// same learned generation. Memoized by [`Self::plan_fanout`] via the
+    /// plan cache (collectives loops replay the same layout every
+    /// iteration); this body is the cache-fill path.
     fn fanout_engine_ns_at(&self, snap: &ParamsSnapshot, shape: &FanoutShape) -> f64 {
         if shape.npeers == 0 || shape.total_bytes() == 0 {
             return 0.0;
@@ -751,8 +764,30 @@ impl XferEngine {
     /// PE count — all captured by the shape).
     pub fn plan_fanout(&self, shape: &FanoutShape, bytes: usize, items: usize) -> TransferPlan {
         let snap = self.cost.model.snapshot();
-        let ls = self.fanout_store_ns(shape, items);
-        let ce = self.fanout_engine_ns_at(&snap, shape);
+        // Fan-out layouts repeat heavily inside collectives loops (same
+        // team + same block size ⇒ same per-link vector every iteration),
+        // so the structural estimates memoize like p2p plans, keyed by the
+        // canonical-layout digest. Both sides are pure functions of
+        // (layout, items, snapshot); the route decision and its adaptive
+        // side effects stay live, so a hit plans bitwise like a miss.
+        let key = PlanKey {
+            reachable: true,
+            loc: shape.loc,
+            bytes,
+            items,
+            shape: fanout_digest(shape),
+        };
+        let s = self.cache.lookup(&snap, &key, &self.metrics).unwrap_or_else(|| {
+            let s = CachedShape {
+                chunk: bytes,
+                width: 1,
+                ls_ns: self.fanout_store_ns(shape, items),
+                pure_ns: self.fanout_engine_ns_at(&snap, shape),
+            };
+            self.cache.insert(&snap, key, s, &self.metrics);
+            s
+        });
+        let (ls, ce) = (s.ls_ns, s.pure_ns);
         let key = BucketKey::fanout(shape.loc, bytes, items, shape.npeers);
         let path = self.decide(key, bytes, ls, ce, snap.version);
         let plan = self.bind(
@@ -795,6 +830,57 @@ impl XferEngine {
         self.adaptive.snapshot()
     }
 
+    // ------------------------------------- collective algorithm choice --
+
+    /// Decide flat vs hierarchical for a collective through the same
+    /// cutover machinery as p2p routing: one adaptive cell per (op, size,
+    /// team-size bucket), slot 0 (`LoadStore`) pricing the flat fan-out
+    /// and slot 1 (`CopyEngine`) the chosen hierarchical variant, seeded
+    /// from the caller's snapshot-priced estimates so calibration feeds
+    /// back into algorithm choice. Non-adaptive modes take the model
+    /// argmin — `Never`/`Always`/`fixed_threshold` are load/store-vs-
+    /// engine *path* policies and do not constrain algorithm shape.
+    /// Returns true for hierarchical.
+    pub fn coll_decide(
+        &self,
+        op: CollOp,
+        bytes: usize,
+        team_size: usize,
+        flat_ns: f64,
+        hier_ns: f64,
+        model_version: u64,
+    ) -> bool {
+        let path = if self.cutover.mode == CutoverMode::Adaptive {
+            self.adaptive
+                .decide(BucketKey::coll(op, bytes, team_size), flat_ns, hier_ns, model_version)
+        } else {
+            argmin_path(flat_ns, hier_ns)
+        };
+        path == Path::CopyEngine
+    }
+
+    /// Feed back an executed collective's total modeled duration into its
+    /// algorithm cell (adaptive mode only) — the collective twin of
+    /// [`Self::record`].
+    pub fn coll_observe(
+        &self,
+        op: CollOp,
+        bytes: usize,
+        team_size: usize,
+        took_hier: bool,
+        observed_ns: f64,
+        model_version: u64,
+    ) {
+        if self.cutover.mode != CutoverMode::Adaptive {
+            return;
+        }
+        let path = if took_hier { Path::CopyEngine } else { Path::LoadStore };
+        let key = BucketKey::coll(op, bytes, team_size);
+        if self.adaptive.observe(key, path, observed_ns, model_version) {
+            Metrics::add(&self.metrics.adaptive_updates, 1);
+        }
+    }
+
     // ------------------------------------------------ table persistence --
 
     /// Serialize the learned table as one JSON object (the
@@ -815,6 +901,7 @@ impl XferEngine {
                 put("fanout", Json::Bool(c.key.fanout));
                 put("peers_pow2", Json::Num(c.key.peers_pow2 as f64));
                 put("rails_pow2", Json::Num(c.key.rails_pow2 as f64));
+                put("coll_op", Json::Num(c.key.coll_op as f64));
                 put("ema_loadstore_ns", Json::Num(c.ema_loadstore_ns));
                 put("ema_copy_engine_ns", Json::Num(c.ema_copy_engine_ns));
                 put("samples_loadstore", Json::Num(c.samples_loadstore as f64));
@@ -926,6 +1013,9 @@ impl XferEngine {
                     fanout,
                     peers_pow2: num("peers_pow2")? as u8,
                     rails_pow2: num("rails_pow2")? as u8,
+                    // Absent in pre-collective tables: those cells are all
+                    // transfer cells (class 0).
+                    coll_op: c.get("coll_op").and_then(|v| v.as_f64()).unwrap_or(0.0) as u8,
                 },
                 ema_loadstore_ns: num("ema_loadstore_ns")?,
                 ema_copy_engine_ns: num("ema_copy_engine_ns")?,
@@ -1514,6 +1604,72 @@ mod tests {
         // outside the cached portion, not cached-and-invalidated.
         assert_eq!(e.metrics.plan_cache_hits.load(Ordering::Relaxed), 2);
         assert_eq!(e.metrics.plan_cache_misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fanout_plans_memoize_by_layout_digest() {
+        let e = engine(CutoverConfig::tuned());
+        let shape = FanoutShape {
+            per_link: vec![(Locality::SameNode, 1 << 20, 2), (Locality::SameGpu, 512 << 10, 1)],
+            nic_bytes: 64 << 10,
+            npeers: 3,
+            loc: Locality::SameNode,
+        };
+        let off = engine_with_cache(
+            CutoverConfig::tuned(),
+            PlanCacheConfig { enable: false, capacity: 4096 },
+        );
+        let cold = e.plan_fanout(&shape, 512 << 10, 16);
+        let warm = e.plan_fanout(&shape, 512 << 10, 16);
+        let reference = off.plan_fanout(&shape, 512 << 10, 16);
+        assert_eq!(cold, reference, "cold fan-out plan drifted from cache-off");
+        assert_eq!(warm, reference, "warm fan-out plan drifted from cache-off");
+        assert_eq!(e.metrics.plan_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(e.metrics.plan_cache_hits.load(Ordering::Relaxed), 1);
+        // A different layout of the same (loc, bytes, items) is a distinct
+        // entry, not a false hit.
+        let other = FanoutShape {
+            per_link: vec![(Locality::SameNode, 2 << 20, 3)],
+            nic_bytes: 0,
+            npeers: 3,
+            loc: Locality::SameNode,
+        };
+        let p = e.plan_fanout(&other, 512 << 10, 16);
+        assert_eq!(p, off.plan_fanout(&other, 512 << 10, 16));
+        assert_eq!(e.metrics.plan_cache_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(e.plan_cache_len(), 2);
+        // Recalibration flushes fan-out entries like p2p ones.
+        e.cost.model.update(|l| l.single_engine_frac = 0.5);
+        off.cost.model.update(|l| l.single_engine_frac = 0.5);
+        let post = e.plan_fanout(&shape, 512 << 10, 16);
+        assert_eq!(post, off.plan_fanout(&shape, 512 << 10, 16));
+        assert_eq!(post.model_version, 1);
+    }
+
+    #[test]
+    fn coll_decide_selects_and_learns_per_team_size() {
+        use crate::sim::cost::CollOp;
+        // Non-adaptive modes: plain model argmin, no cells created.
+        let t = engine(CutoverConfig::tuned());
+        assert!(t.coll_decide(CollOp::Broadcast, 1 << 20, 64, 200.0, 100.0, 0));
+        assert!(!t.coll_decide(CollOp::Broadcast, 1 << 20, 64, 100.0, 200.0, 0));
+        assert!(!t.coll_decide(CollOp::Broadcast, 1 << 20, 64, 100.0, 100.0, 0), "ties → flat");
+        assert!(t.adaptive_snapshot().is_empty());
+        // Adaptive: the cell seeds from the estimates, then observations
+        // of the hierarchical algorithm move only its own team size.
+        let a = engine(CutoverConfig::adaptive());
+        assert!(a.coll_decide(CollOp::Reduce, 1 << 20, 64, 200.0, 100.0, 0));
+        assert!(a.coll_decide(CollOp::Reduce, 1 << 20, 256, 200.0, 100.0, 0));
+        for _ in 0..32 {
+            a.coll_observe(CollOp::Reduce, 1 << 20, 64, true, 1e9, 0);
+        }
+        assert!(!a.coll_decide(CollOp::Reduce, 1 << 20, 64, 200.0, 100.0, 0), "hier priced out");
+        assert!(a.coll_decide(CollOp::Reduce, 1 << 20, 256, 200.0, 100.0, 0));
+        assert!(a.metrics.adaptive_updates.load(Ordering::Relaxed) >= 32);
+        // Collective cells persist with their class tag.
+        let b = engine(CutoverConfig::adaptive());
+        b.adaptive_load_json(&a.adaptive_save_json()).unwrap();
+        assert!(!b.coll_decide(CollOp::Reduce, 1 << 20, 64, 200.0, 100.0, 0));
     }
 
     #[test]

@@ -1,8 +1,16 @@
 //! Integration: collectives (sync/barrier/broadcast/fcollect/collect/
-//! alltoall/reduce) across the simulated node with real threads.
+//! alltoall/reduce) across the simulated node with real threads — and
+//! the hierarchical/flat algorithm equivalence contract: every algorithm
+//! produces bitwise-identical results, single-node teams provably stay
+//! on the flat path, and forced-hierarchical runs fill both stages of
+//! the per-op byte table.
 
+use rishmem::coordinator::metrics::{CollOpIdx, CollStage};
 use rishmem::ishmem::CutoverConfig;
-use rishmem::{run_npes, run_spmd, IshmemConfig, ReduceOp, TeamId, Topology, WorkGroup};
+use rishmem::{
+    run_npes, run_spmd, CollAlgoMode, CollConfig, Ishmem, IshmemConfig, ReduceOp, TeamId,
+    Topology, WorkGroup,
+};
 
 #[test]
 fn sync_all_is_a_real_barrier() {
@@ -306,6 +314,240 @@ fn shared_team_is_node_scoped() {
     .unwrap();
     // Each node has 6 PEs; every PE contributed 1 within its node.
     assert!(sums.iter().all(|&s| s == 6), "{sums:?}");
+}
+
+// ------------------------------------------------- hierarchical algorithms --
+
+/// One fixed multi-node workload — world broadcast/fcollect/reduce plus a
+/// node-spanning strided team reduce — with every float buffer returned
+/// as raw bits so runs under different algorithms compare bitwise.
+fn coll_workload_results(
+    algo: CollAlgoMode,
+) -> Vec<(Vec<u64>, Vec<u32>, Vec<u64>, Vec<u64>)> {
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        coll: CollConfig { algo, leader_fanout: 2 },
+        ..Default::default()
+    };
+    run_spmd(cfg, false, |ctx| {
+        let n = ctx.npes();
+        // Broadcast from a root that is neither PE 0 nor its node's
+        // lowest member — the leader-election edge case.
+        let bdest = ctx.calloc::<f64>(257);
+        let bsrc = ctx.calloc::<f64>(257);
+        if ctx.pe() == 3 {
+            let data: Vec<f64> = (0..257).map(|i| 0.37 * i as f64 + 11.0).collect();
+            ctx.write_local(bsrc, &data);
+        }
+        ctx.barrier_all();
+        ctx.broadcast(bdest, bsrc, 257, 3, TeamId::WORLD);
+
+        let fdest = ctx.calloc::<u32>(96 * n);
+        let fsrc = ctx.calloc::<u32>(96);
+        let mine: Vec<u32> = (0..96).map(|i| (ctx.pe() * 1000 + i) as u32).collect();
+        ctx.write_local(fsrc, &mine);
+        ctx.barrier_all();
+        ctx.fcollect(fdest, fsrc, 96, TeamId::WORLD);
+
+        // Order-sensitive f64 sum: bitwise equality holds only if every
+        // algorithm folds in the same member order.
+        let rdest = ctx.calloc::<f64>(333);
+        let rsrc = ctx.calloc::<f64>(333);
+        let rdata: Vec<f64> = (0..333)
+            .map(|i| (ctx.pe() as f64 + 0.1) * (i as f64 + 0.01))
+            .collect();
+        ctx.write_local(rsrc, &rdata);
+        ctx.reduce(rdest, rsrc, 333, ReduceOp::Sum, TeamId::WORLD);
+
+        // Odd PEs {1,3,5,7}: a strided team spanning both nodes.
+        let team = ctx.team_split_strided(TeamId::WORLD, 1, 2, 4);
+        let tdest = ctx.calloc::<f64>(65);
+        let tsrc = ctx.calloc::<f64>(65);
+        let mut tres = vec![0.0f64; 65];
+        if ctx.pe() % 2 == 1 {
+            let tdata: Vec<f64> =
+                (0..65).map(|i| ctx.pe() as f64 - 0.25 * i as f64).collect();
+            ctx.write_local(tsrc, &tdata);
+            ctx.team_barrier(team);
+            ctx.reduce(tdest, tsrc, 65, ReduceOp::Sum, team);
+            tres = ctx.read_local_vec(tdest);
+        }
+        ctx.barrier_all();
+        (
+            ctx.read_local_vec(bdest).iter().map(|v| v.to_bits()).collect(),
+            ctx.read_local_vec(fdest),
+            ctx.read_local_vec(rdest).iter().map(|v| v.to_bits()).collect(),
+            tres.iter().map(|v| v.to_bits()).collect(),
+        )
+    })
+    .unwrap()
+}
+
+#[test]
+fn hierarchical_results_match_flat_bitwise() {
+    let flat = coll_workload_results(CollAlgoMode::Flat);
+    // The flat baseline itself must be right (not garbage == garbage).
+    let bdata: Vec<u64> = (0..257)
+        .map(|i| (0.37 * i as f64 + 11.0).to_bits())
+        .collect();
+    for (pe, (b, f, _, _)) in flat.iter().enumerate() {
+        assert_eq!(*b, bdata, "flat broadcast corrupt on pe {pe}");
+        assert!(
+            (0..8).all(|r| (0..96).all(|i| f[r * 96 + i] == (r * 1000 + i) as u32)),
+            "flat fcollect corrupt on pe {pe}"
+        );
+    }
+    for algo in [CollAlgoMode::HierRing, CollAlgoMode::HierTree, CollAlgoMode::Auto] {
+        let got = coll_workload_results(algo);
+        assert_eq!(got, flat, "results diverged under {algo:?}");
+    }
+}
+
+#[test]
+fn single_node_team_takes_flat_path_even_when_forced_hier() {
+    for algo in [CollAlgoMode::HierRing, CollAlgoMode::HierTree] {
+        let cfg = IshmemConfig {
+            topology: Topology::new(1, 2, 2),
+            coll: CollConfig { algo, leader_fanout: 2 },
+            ..Default::default()
+        };
+        let ish = Ishmem::new(cfg).unwrap();
+        ish.launch(|ctx| {
+            let n = ctx.npes();
+            let dest = ctx.calloc::<u32>(64 * n);
+            let src = ctx.calloc::<u32>(64);
+            ctx.write_local(src, &vec![ctx.pe() as u32; 64]);
+            ctx.barrier_all();
+            ctx.fcollect(dest, src, 64, TeamId::WORLD);
+            ctx.broadcast(dest, src, 64, 0, TeamId::WORLD);
+            let rd = ctx.calloc::<i64>(32);
+            let rs = ctx.calloc::<i64>(32);
+            ctx.write_local(rs, &vec![1i64; 32]);
+            ctx.reduce(rd, rs, 32, ReduceOp::Sum, TeamId::WORLD);
+            ctx.barrier_all();
+        });
+        let snap = ish.metrics.snapshot();
+        ish.shutdown();
+        assert_eq!(snap.coll_hier, 0, "single node must stay flat under {algo:?}");
+        assert!(snap.coll_broadcast >= 1 && snap.coll_fcollect >= 1);
+        assert!(snap.coll_reduce >= 1, "{snap:?}");
+        // No inter-node stage exists on one node.
+        assert_eq!(snap.coll_stage_total(CollStage::Inter), 0, "{snap:?}");
+        assert!(snap.coll_stage_total(CollStage::Intra) > 0, "{snap:?}");
+    }
+}
+
+#[test]
+fn forced_hierarchical_fills_both_stages_of_the_byte_table() {
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        coll: CollConfig { algo: CollAlgoMode::HierRing, leader_fanout: 2 },
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    ish.launch(|ctx| {
+        let n = ctx.npes();
+        let bd = ctx.calloc::<u64>(512);
+        let bs = ctx.calloc::<u64>(512);
+        let data: Vec<u64> = (0..512).map(|i| i as u64 * 3 + 1).collect();
+        if ctx.pe() == 0 {
+            ctx.write_local(bs, &data);
+        }
+        ctx.barrier_all();
+        ctx.broadcast(bd, bs, 512, 0, TeamId::WORLD);
+        assert_eq!(ctx.read_local_vec(bd), data, "hier broadcast corrupt");
+
+        let fd = ctx.calloc::<u32>(128 * n);
+        let fs = ctx.calloc::<u32>(128);
+        ctx.write_local(fs, &vec![ctx.pe() as u32 + 7; 128]);
+        ctx.barrier_all();
+        ctx.fcollect(fd, fs, 128, TeamId::WORLD);
+        let all = ctx.read_local_vec(fd);
+        assert!(
+            (0..n).all(|r| (0..128).all(|i| all[r * 128 + i] == r as u32 + 7)),
+            "hier fcollect corrupt"
+        );
+
+        let rd = ctx.calloc::<i32>(64);
+        let rs = ctx.calloc::<i32>(64);
+        ctx.write_local(rs, &vec![ctx.pe() as i32; 64]);
+        ctx.reduce(rd, rs, 64, ReduceOp::Max, TeamId::WORLD);
+        assert!(
+            ctx.read_local_vec(rd).iter().all(|&v| v == n as i32 - 1),
+            "hier reduce corrupt"
+        );
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    // 3 forced-hierarchical collectives × 8 PEs.
+    assert_eq!(snap.coll_hier, 24, "{snap:?}");
+    assert!(snap.collectives() >= 24, "{snap:?}");
+    for op in [CollOpIdx::Broadcast, CollOpIdx::Fcollect, CollOpIdx::Reduce] {
+        assert!(snap.coll_bytes(op, CollStage::Intra) > 0, "{op:?}: {snap:?}");
+        assert!(snap.coll_bytes(op, CollStage::Inter) > 0, "{op:?}: {snap:?}");
+    }
+}
+
+#[test]
+fn work_group_collectives_ride_the_hierarchy() {
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        coll: CollConfig { algo: CollAlgoMode::HierTree, leader_fanout: 2 },
+        ..Default::default()
+    };
+    let ok = run_spmd(cfg, false, |ctx| {
+        let n = ctx.npes();
+        let wg = WorkGroup::new(64);
+        let bd = ctx.calloc::<f32>(1024);
+        let bs = ctx.calloc::<f32>(1024);
+        let data: Vec<f32> = (0..1024).map(|i| i as f32 * 0.5).collect();
+        if ctx.pe() == 5 {
+            ctx.write_local(bs, &data);
+        }
+        ctx.barrier_all();
+        ctx.broadcast_work_group(bd, bs, 1024, 5, TeamId::WORLD, &wg);
+        let b_ok = ctx.read_local_vec(bd) == data;
+
+        let fd = ctx.calloc::<u64>(256 * n);
+        let fs = ctx.calloc::<u64>(256);
+        ctx.write_local(fs, &vec![ctx.pe() as u64 * 3; 256]);
+        ctx.barrier_all();
+        ctx.fcollect_work_group(fd, fs, 256, TeamId::WORLD, &wg);
+        let all = ctx.read_local_vec(fd);
+        b_ok && (0..n).all(|r| (0..256).all(|i| all[r * 256 + i] == r as u64 * 3))
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
+}
+
+#[test]
+fn adaptive_auto_collectives_stay_correct_across_nodes() {
+    // Auto + adaptive cutover on a 2-node machine: selection runs through
+    // the published-decision protocol and coll_observe feedback on real
+    // threads; repeated calls must stay correct whatever gets chosen.
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        cutover: CutoverConfig::adaptive(),
+        ..Default::default()
+    };
+    let ok = run_spmd(cfg, false, |ctx| {
+        let n = ctx.npes();
+        let fd = ctx.calloc::<u32>(256 * n);
+        let fs = ctx.calloc::<u32>(256);
+        ctx.write_local(fs, &vec![ctx.pe() as u32; 256]);
+        ctx.barrier_all();
+        let mut good = true;
+        for _ in 0..4 {
+            ctx.fcollect(fd, fs, 256, TeamId::WORLD);
+            let all = ctx.read_local_vec(fd);
+            good &= (0..n).all(|r| (0..256).all(|i| all[r * 256 + i] == r as u32));
+        }
+        ctx.barrier_all();
+        good
+    })
+    .unwrap();
+    assert!(ok.iter().all(|&b| b));
 }
 
 #[test]

@@ -7,7 +7,7 @@
 use rishmem::coordinator::metrics::{PathIdx, ServiceOp, ENGINE_SLOTS};
 use rishmem::ishmem::CutoverConfig;
 use rishmem::util::json::Json;
-use rishmem::{Ishmem, IshmemConfig, Locality, Topology};
+use rishmem::{Ishmem, IshmemConfig, Locality, TeamId, Topology};
 
 #[test]
 fn per_path_byte_counters_populated() {
@@ -227,6 +227,28 @@ fn plan_cache_counters_surface_in_text_and_json() {
         (0, 0, 0),
         "disabled cache must not count: {off:?}"
     );
+}
+
+#[test]
+fn collective_fanout_plans_ride_the_plan_cache() {
+    // A collective loop replays the same fan-out layout every iteration;
+    // plan_fanout memoizes through the p2p PlanCache, so the root's
+    // repeated broadcasts are one miss and the rest hits.
+    let cfg = IshmemConfig::with_npes(8);
+    let ish = Ishmem::new(cfg).unwrap();
+    ish.launch(|ctx| {
+        let dest = ctx.calloc::<u8>(32 << 10);
+        let src = ctx.calloc::<u8>(32 << 10);
+        ctx.barrier_all();
+        for _ in 0..8 {
+            ctx.broadcast(dest, src, 32 << 10, 0, TeamId::WORLD);
+        }
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+    assert!(snap.plan_cache_misses >= 1, "{snap:?}");
+    assert!(snap.plan_cache_hits >= 7, "repeated fan-outs must hit: {snap:?}");
 }
 
 #[test]
