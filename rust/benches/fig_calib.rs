@@ -65,7 +65,7 @@ fn main() {
     let off = Calibrator::new(cost.clone(), CalibConfig::default());
     for _ in 0..100 {
         off.observe_engine(Locality::SameNode, 4 << 20, true, 1.0e6);
-        off.observe_rail(4 << 20, 1.0e6);
+        off.observe_rail(0, 0, 4 << 20, 1.0e6);
     }
     off.refine_cl_boundary();
     assert_eq!(cost.model.version(), 0, "disabled calibration moved the model");

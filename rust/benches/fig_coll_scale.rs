@@ -26,7 +26,7 @@ fn machine_broadcast_ns(topo: Topology, algo: CollAlgoMode) -> f64 {
     let cfg = IshmemConfig {
         topology: topo,
         heap_bytes: 4 << 20,
-        coll: CollConfig { algo, leader_fanout: 4 },
+        coll: CollConfig { algo, leader_fanout: 4, ..CollConfig::default() },
         ..Default::default()
     };
     let ish = Ishmem::new(cfg).expect("fig_coll_scale machine");

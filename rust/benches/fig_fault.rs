@@ -1,0 +1,88 @@
+//! Bench: fault injection and degraded-mode re-striping (ISSUE 8). A
+//! 4-rail machine loses NIC rail (0, 1); new plans must re-stripe onto
+//! the 3 survivors so remote-put throughput converges to the model of a
+//! machine *configured* with 3 rails — and reviving the rail must
+//! restore the healthy series bit for bit. Acceptance bars:
+//! (a) degraded throughput within 2% of the (N−1)-rail model at every
+//! point, (b) strictly below healthy at the largest (width-limited)
+//! size, (c) recovery exactly equals healthy, (d) the cost model's
+//! stripe shapes and drain estimates under a kill are bit-for-bit the
+//! (N−1)-rail config's.
+//! `cargo bench --bench fig_fault` (`RISHMEM_SMOKE=1` shrinks the sweep).
+
+use rishmem::bench::figures::fig_fault;
+use rishmem::sim::cost::{CostModel, CostParams};
+use rishmem::sim::Topology;
+
+fn main() {
+    let fig = fig_fault();
+    println!("{}", fig.render_ascii());
+
+    let series = |name: &str| {
+        fig.series
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing series {name:?}"))
+    };
+    let healthy = series("healthy-4rail");
+    let degraded = series("degraded-3live");
+    let model = series("model-3rail");
+    let recovered = series("recovered");
+
+    let largest = healthy.points.last().expect("non-empty sweep").0;
+    for &(x, y) in &degraded.points {
+        let m = model.y_at(x).expect("matching model-3rail point");
+        let h = healthy.y_at(x).expect("matching healthy point");
+        println!(
+            "[fig_fault] {x:>10.0} B: degraded {y:6.2} GB/s vs (N-1)-model {m:6.2} GB/s \
+             (healthy {h:6.2})"
+        );
+        let rel = (y - m).abs() / m;
+        assert!(
+            rel <= 0.02,
+            "degraded throughput did not converge to the (N-1)-rail model at {x}B: \
+             {y} vs {m} GB/s ({:.1}% off)",
+            rel * 100.0
+        );
+        if x == largest {
+            assert!(
+                h > y,
+                "killing a rail did not cost throughput at the width-limited size {x}B: \
+                 healthy {h} !> degraded {y}"
+            );
+        }
+    }
+    for &(x, y) in &recovered.points {
+        let h = healthy.y_at(x).expect("matching healthy point");
+        assert!(
+            y == h,
+            "revival did not restore healthy throughput bit-for-bit at {x}B: {y} != {h}"
+        );
+    }
+
+    // Estimate-level bars: a 4-rail model with one rail dead prices
+    // stripes and backlog drains bit-for-bit like a 3-rail config.
+    let mut p = CostParams::default();
+    p.nic.rails = 4;
+    let four = CostModel::new(Topology::new(2, 2, 2), p.clone());
+    assert!(four.kill_rail(0, 1));
+    p.nic.rails = 3;
+    let three = CostModel::new(Topology::new(2, 2, 2), p);
+    for shift in [16usize, 20, 22, 23] {
+        let bytes = 1 << shift;
+        assert_eq!(
+            four.rail_stripe_for(bytes, usize::MAX),
+            three.rail_stripe_for(bytes, usize::MAX),
+            "stripe shape diverges from the (N-1)-rail config at {bytes}B"
+        );
+        let (a, b) = (four.rail_drain_ns(bytes as u64), three.rail_drain_ns(bytes as u64));
+        assert!(a == b, "drain estimate diverges at {bytes}B: {a} != {b}");
+    }
+    assert!(four.revive_rail(0, 1));
+    assert!(!four.degraded(), "revival left the model degraded");
+
+    println!(
+        "[fig_fault] rail kill converges to the (N-1)-rail model; revival restores \
+         healthy throughput bit-for-bit"
+    );
+}

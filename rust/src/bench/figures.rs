@@ -417,6 +417,76 @@ pub fn fig_rail() -> Figure {
     fig
 }
 
+/// One remote-put bandwidth sweep for the fault figure: a 2-node machine
+/// with `rails` configured NIC rails, optionally with rail (0, 1) killed
+/// (and revived again) at the cost-model health layer before the sweep.
+fn fault_put_series(name: &str, rails: usize, kill: bool, revive: bool, sizes: &[usize]) -> Series {
+    let mut cost = crate::sim::cost::CostParams::default();
+    cost.nic.rails = rails;
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        cost,
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).expect("fig_fault machine");
+    if kill {
+        assert!(ish.cost.kill_rail(0, 1), "rail (0,1) already dead");
+    }
+    if revive {
+        assert!(ish.cost.revive_rail(0, 1), "rail (0,1) already live");
+    }
+    let sizes2 = sizes.to_vec();
+    let name2 = name.to_string();
+    let series = ish.launch(move |ctx| {
+        let max = *sizes2.iter().max().unwrap();
+        let buf = ctx.calloc::<u8>(max);
+        let local = vec![0xCDu8; max];
+        ctx.barrier_all();
+        if ctx.pe() != 0 {
+            return None;
+        }
+        let target = ctx.topo().pes_per_node();
+        let mut s = Series::new(&name2);
+        for &size in &sizes2 {
+            let m = measure(&ctx.clock, || ctx.put(buf, &local[..size], target));
+            s.push(size as f64, m.bandwidth_gbs(size));
+        }
+        Some(s)
+    });
+    ish.shutdown();
+    series.into_iter().flatten().next().unwrap()
+}
+
+/// Fault-injection figure (ISSUE 8): large remote-put bandwidth on a
+/// 4-rail machine — healthy, after killing one NIC rail (plans re-stripe
+/// onto the 3 survivors), against a 3-rail-configured machine (the
+/// (N−1)-lane model the degraded machine must converge to), and after
+/// reviving the rail (must restore the healthy series bit for bit). The
+/// fig_fault bench asserts those bars.
+pub fn fig_fault() -> Figure {
+    let sizes: Vec<usize> = if super::smoke() {
+        vec![1 << 20, 4 << 20]
+    } else {
+        vec![1 << 20, 2 << 20, 4 << 20, 8 << 20]
+    };
+    let mut fig = Figure::new(
+        "fig-fault",
+        "degraded-mode re-striping: rail kill vs (N-1)-rail model",
+        "msg size",
+        "GB/s",
+    );
+    for (name, rails, kill, revive) in [
+        ("healthy-4rail", 4usize, false, false),
+        ("degraded-3live", 4, true, false),
+        ("model-3rail", 3, false, false),
+        ("recovered", 4, true, true),
+    ] {
+        fig.series.push(fault_put_series(name, rails, kill, revive, &sizes));
+    }
+    fig
+}
+
 /// Collective-scaling figure (ISSUE 7): modeled 1 MiB broadcast time
 /// across machine sizes — the flat per-peer fan-out against the
 /// hierarchical tile/GPU/node decomposition with ring and tree
@@ -586,7 +656,7 @@ pub fn calibration_run() -> CalibrationRun {
                 // per flavor — here the truth service times themselves).
                 cal.observe_cl_flavor(bytes, true, t_imm / bytes as f64);
                 cal.observe_cl_flavor(bytes, false, t_std / bytes as f64);
-                cal.observe_rail(bytes, truth_rail_ns(bytes));
+                cal.observe_rail(0, 0, bytes, truth_rail_ns(bytes));
             }
         }
         cal.refine_cl_boundary();
@@ -994,6 +1064,7 @@ pub fn all_figures() -> Vec<Figure> {
     v.push(fig_batch());
     v.push(fig_stripe());
     v.push(fig_rail());
+    v.push(fig_fault());
     v.push(fig_coll_scale());
     v
 }

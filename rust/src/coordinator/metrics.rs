@@ -161,6 +161,29 @@ pub struct Metrics {
     pub xla_reduce_elems: AtomicU64,
     // Native (non-kernel) reduce fallbacks.
     pub native_reduce_elems: AtomicU64,
+    // Fault injection & degraded mode (ISSUE 8). Counters: applied lane
+    // transitions (scripted or manual), calibrator-driven quarantines and
+    // revival probes, proxy chunks re-dispatched off a dead lane, and
+    // plans that hit a domain with zero live lanes and fell back to a
+    // single-lane shape. All zero on a fault-free run.
+    pub fault_rail_kills: AtomicU64,
+    pub fault_rail_revives: AtomicU64,
+    pub fault_engine_kills: AtomicU64,
+    pub fault_engine_revives: AtomicU64,
+    pub fault_quarantines: AtomicU64,
+    pub fault_probes: AtomicU64,
+    pub fault_redispatched_chunks: AtomicU64,
+    pub fault_last_lane_fallbacks: AtomicU64,
+    // Collective waits that hit their configured deadline instead of
+    // spinning forever (PE churn).
+    pub coll_decision_timeouts: AtomicU64,
+    pub coll_sync_timeouts: AtomicU64,
+    // Gauges: 1 while any lane anywhere is dead; per-slot counts of how
+    // many nodes/GPUs currently have that rail/engine slot dead (indices
+    // past the table clamp into the last slot, like the dispatch tables).
+    pub degraded_mode: AtomicU64,
+    pub rail_dead: [AtomicU64; RAIL_SLOTS],
+    pub engine_dead: [AtomicU64; ENGINE_SLOTS],
 }
 
 /// Bucket index for a serviced batch of `depth` entries.
@@ -269,6 +292,33 @@ impl Metrics {
         Self::add(&self.service_model_ops[path as usize][b], 1);
     }
 
+    /// Count one *applied* lane transition (fault injection — the caller
+    /// guarantees it was a real state change): the kill/revive counter
+    /// and the per-slot dead-lane gauge move together, and the degraded
+    /// flag is refreshed from the cost model's aggregate view.
+    pub fn count_fault_action(&self, action: crate::sim::fault::FaultAction, degraded: bool) {
+        use crate::sim::fault::FaultAction as A;
+        match action {
+            A::KillRail { rail, .. } => {
+                Self::add(&self.fault_rail_kills, 1);
+                Self::add(&self.rail_dead[rail.min(RAIL_SLOTS - 1)], 1);
+            }
+            A::ReviveRail { rail, .. } => {
+                Self::add(&self.fault_rail_revives, 1);
+                self.rail_dead[rail.min(RAIL_SLOTS - 1)].fetch_sub(1, Ordering::Relaxed);
+            }
+            A::KillEngine { engine, .. } => {
+                Self::add(&self.fault_engine_kills, 1);
+                Self::add(&self.engine_dead[engine.min(ENGINE_SLOTS - 1)], 1);
+            }
+            A::ReviveEngine { engine, .. } => {
+                Self::add(&self.fault_engine_revives, 1);
+                self.engine_dead[engine.min(ENGINE_SLOTS - 1)].fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        self.degraded_mode.store(degraded as u64, Ordering::Relaxed);
+    }
+
     /// Record one proxy service of `op` taking `ns` wall-clock nanoseconds.
     pub fn add_service(&self, op: ServiceOp, ns: u64) {
         let i = op as usize;
@@ -341,6 +391,19 @@ impl Metrics {
             xla_reduce_calls: load(&self.xla_reduce_calls),
             xla_reduce_elems: load(&self.xla_reduce_elems),
             native_reduce_elems: load(&self.native_reduce_elems),
+            fault_rail_kills: load(&self.fault_rail_kills),
+            fault_rail_revives: load(&self.fault_rail_revives),
+            fault_engine_kills: load(&self.fault_engine_kills),
+            fault_engine_revives: load(&self.fault_engine_revives),
+            fault_quarantines: load(&self.fault_quarantines),
+            fault_probes: load(&self.fault_probes),
+            fault_redispatched_chunks: load(&self.fault_redispatched_chunks),
+            fault_last_lane_fallbacks: load(&self.fault_last_lane_fallbacks),
+            coll_decision_timeouts: load(&self.coll_decision_timeouts),
+            coll_sync_timeouts: load(&self.coll_sync_timeouts),
+            degraded_mode: load(&self.degraded_mode),
+            rail_dead: std::array::from_fn(|i| load(&self.rail_dead[i])),
+            engine_dead: std::array::from_fn(|i| load(&self.engine_dead[i])),
         }
     }
 }
@@ -390,6 +453,19 @@ pub struct MetricsSnapshot {
     pub xla_reduce_calls: u64,
     pub xla_reduce_elems: u64,
     pub native_reduce_elems: u64,
+    pub fault_rail_kills: u64,
+    pub fault_rail_revives: u64,
+    pub fault_engine_kills: u64,
+    pub fault_engine_revives: u64,
+    pub fault_quarantines: u64,
+    pub fault_probes: u64,
+    pub fault_redispatched_chunks: u64,
+    pub fault_last_lane_fallbacks: u64,
+    pub coll_decision_timeouts: u64,
+    pub coll_sync_timeouts: u64,
+    pub degraded_mode: u64,
+    pub rail_dead: [u64; RAIL_SLOTS],
+    pub engine_dead: [u64; ENGINE_SLOTS],
 }
 
 impl MetricsSnapshot {
@@ -557,6 +633,19 @@ impl MetricsSnapshot {
         put("xla_reduce_calls", n(self.xla_reduce_calls));
         put("xla_reduce_elems", n(self.xla_reduce_elems));
         put("native_reduce_elems", n(self.native_reduce_elems));
+        put("fault_rail_kills", n(self.fault_rail_kills));
+        put("fault_rail_revives", n(self.fault_rail_revives));
+        put("fault_engine_kills", n(self.fault_engine_kills));
+        put("fault_engine_revives", n(self.fault_engine_revives));
+        put("fault_quarantines", n(self.fault_quarantines));
+        put("fault_probes", n(self.fault_probes));
+        put("fault_redispatched_chunks", n(self.fault_redispatched_chunks));
+        put("fault_last_lane_fallbacks", n(self.fault_last_lane_fallbacks));
+        put("coll_decision_timeouts", n(self.coll_decision_timeouts));
+        put("coll_sync_timeouts", n(self.coll_sync_timeouts));
+        put("degraded_mode", n(self.degraded_mode));
+        put("rail_dead", arr(&self.rail_dead));
+        put("engine_dead", arr(&self.engine_dead));
         // Extras go in last so a caller-provided key takes precedence over
         // a colliding built-in instead of silently vanishing.
         for (k, v) in extra {
@@ -650,6 +739,9 @@ impl MetricsSnapshot {
              engine bytes: [{}]\n\
              rail bytes: [{}]\n\
              proxy service ns (mean): put={:.0} get={:.0} amo={:.0} other={:.0}\n\
+             fault: rail-kills={} rail-revives={} engine-kills={} engine-revives={} \
+             quarantines={} probes={} redispatched={} last-lane-fallbacks={} \
+             decision-timeouts={} sync-timeouts={} degraded={}\n\
              reduce: xla-calls={} xla-elems={} native-elems={}",
             self.puts,
             self.gets,
@@ -698,6 +790,17 @@ impl MetricsSnapshot {
             self.mean_service_ns(ServiceOp::Get),
             self.mean_service_ns(ServiceOp::Amo),
             self.mean_service_ns(ServiceOp::Other),
+            self.fault_rail_kills,
+            self.fault_rail_revives,
+            self.fault_engine_kills,
+            self.fault_engine_revives,
+            self.fault_quarantines,
+            self.fault_probes,
+            self.fault_redispatched_chunks,
+            self.fault_last_lane_fallbacks,
+            self.coll_decision_timeouts,
+            self.coll_sync_timeouts,
+            self.degraded_mode,
             self.xla_reduce_calls,
             self.xla_reduce_elems,
             self.native_reduce_elems,
@@ -743,6 +846,51 @@ mod tests {
         assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(9));
         assert_eq!(j.get("plan_cache_misses").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("plan_cache_invalidations").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn fault_counters_and_lane_gauges() {
+        use crate::sim::fault::FaultAction;
+        let m = Metrics::new();
+        m.count_fault_action(FaultAction::KillRail { node: 0, rail: 2 }, true);
+        m.count_fault_action(FaultAction::KillEngine { gpu: 1, engine: 5 }, true);
+        // Out-of-range lane indices clamp into the last gauge slot.
+        m.count_fault_action(FaultAction::KillRail { node: 0, rail: 99 }, true);
+        Metrics::add(&m.fault_quarantines, 1);
+        Metrics::add(&m.fault_redispatched_chunks, 4);
+        Metrics::add(&m.fault_last_lane_fallbacks, 2);
+        Metrics::add(&m.coll_decision_timeouts, 1);
+        let s = m.snapshot();
+        assert_eq!(s.fault_rail_kills, 2);
+        assert_eq!(s.fault_engine_kills, 1);
+        assert_eq!(s.degraded_mode, 1);
+        assert_eq!(s.rail_dead[2], 1);
+        assert_eq!(s.rail_dead[RAIL_SLOTS - 1], 1);
+        assert_eq!(s.engine_dead[5], 1);
+        let r = s.report();
+        assert!(
+            r.contains(
+                "fault: rail-kills=2 rail-revives=0 engine-kills=1 engine-revives=0 \
+                 quarantines=1 probes=0 redispatched=4 last-lane-fallbacks=2 \
+                 decision-timeouts=1 sync-timeouts=0 degraded=1"
+            ),
+            "{r}"
+        );
+        let j = crate::util::json::Json::parse(&s.to_json()).unwrap();
+        assert_eq!(j.get("fault_rail_kills").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("fault_redispatched_chunks").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("degraded_mode").unwrap().as_usize(), Some(1));
+        let dead = j.get("rail_dead").unwrap().as_arr().unwrap();
+        assert_eq!(dead.len(), RAIL_SLOTS);
+        assert_eq!(dead[2].as_usize(), Some(1));
+        // Revival walks the gauges back down and clears the flag.
+        m.count_fault_action(FaultAction::ReviveRail { node: 0, rail: 2 }, false);
+        m.count_fault_action(FaultAction::ReviveEngine { gpu: 1, engine: 5 }, false);
+        let s = m.snapshot();
+        assert_eq!(s.fault_rail_revives, 1);
+        assert_eq!(s.rail_dead[2], 0);
+        assert_eq!(s.engine_dead[5], 0);
+        assert_eq!(s.degraded_mode, 0);
     }
 
     #[test]

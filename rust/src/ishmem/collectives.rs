@@ -38,12 +38,13 @@
 //! [`TransferPlan`]: crate::xfer::plan::TransferPlan
 
 use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::{CollOpIdx, CollStage, Metrics, PathIdx};
 use crate::device::{collaborative_copy, WorkGroup};
 use crate::sim::cost::tree_depth;
 use crate::sim::topology::Locality;
-use crate::sim::{CollAlgo, CollOp, CollShape, ParamsSnapshot, SimClock};
+use crate::sim::{CollAlgo, CollOp, CollShape, DegradedError, DegradedKind, ParamsSnapshot, SimClock};
 use crate::xfer::plan::{FanoutShape, OpKind, Route};
 
 use super::config::CollAlgoMode;
@@ -55,6 +56,47 @@ use super::{PeCtx, SymAddr, TeamId};
 /// Reserved-region base for collect's size-exchange slots (one u64 per
 /// world PE, above the team sync words).
 const COLLECT_BASE: usize = MAX_TEAMS * 16;
+
+/// Spin until `poll` yields a value, with the usual spin → yield
+/// escalation — bounded by `timeout_ms` when non-zero. `timeout_ms == 0`
+/// waits forever, bit-for-bit the pre-fault unbounded spin (the wall
+/// clock is never consulted on that path). On expiry the wait returns a
+/// structured [`DegradedError`] instead of hanging the thread on a peer
+/// that died or churned out mid-collective.
+fn bounded_wait<T>(
+    timeout_ms: u64,
+    kind: DegradedKind,
+    team: usize,
+    epoch: u64,
+    pe: usize,
+    mut poll: impl FnMut() -> Option<T>,
+) -> Result<T, DegradedError> {
+    let deadline = (timeout_ms != 0).then(|| (Instant::now(), Duration::from_millis(timeout_ms)));
+    let mut spins = 0u64;
+    loop {
+        if let Some(v) = poll() {
+            return Ok(v);
+        }
+        if let Some((start, limit)) = deadline {
+            let waited = start.elapsed();
+            if waited >= limit {
+                return Err(DegradedError {
+                    kind,
+                    team,
+                    epoch,
+                    pe,
+                    waited_ms: waited.as_millis() as u64,
+                });
+            }
+        }
+        spins += 1;
+        if spins > 64 {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
 
 impl PeCtx {
     // ------------------------------------------------------------- sync ----
@@ -96,17 +138,21 @@ impl PeCtx {
         }
 
         // Local wait: atomic compare on the GPU cache (paper: the local
-        // wait "can use the local GPU caches effectively").
+        // wait "can use the local GPU caches effectively"). Bounded by
+        // `coll.sync_timeout_ms` when set — a dead peer's missing
+        // increment surfaces as a structured error, not an infinite spin.
         let me = self.rt.heaps.heap(self.pe()).atomic_u64(off);
         let target = round * spec.size as u64;
-        let mut spins = 0u64;
-        while me.load(Ordering::Acquire) < target {
-            spins += 1;
-            if spins > 64 {
-                std::thread::yield_now();
-            } else {
-                std::hint::spin_loop();
-            }
+        if let Err(e) = bounded_wait(
+            self.rt.config.coll.sync_timeout_ms,
+            DegradedKind::SyncTimeout,
+            tid,
+            round,
+            self.pe(),
+            || (me.load(Ordering::Acquire) >= target).then_some(()),
+        ) {
+            Metrics::add(&self.rt.metrics.coll_sync_timeouts, 1);
+            panic!("{e}");
         }
         self.clock
             .advance(self.rt.cost.params.xe.atomic_fetch_ns * 0.2);
@@ -397,24 +443,30 @@ impl PeCtx {
                 .insert((tid, epoch), (algo, spec.size - 1));
             (algo, snap)
         } else {
-            let mut spins = 0u64;
-            loop {
-                {
+            // Bounded by `coll.decision_timeout_ms` when set: a leader
+            // that died before publishing surfaces as a structured
+            // error instead of spinning this member forever.
+            match bounded_wait(
+                self.rt.config.coll.decision_timeout_ms,
+                DegradedKind::DecisionTimeout,
+                tid,
+                epoch,
+                self.pe(),
+                || {
                     let mut map = self.rt.coll_decisions.lock().unwrap();
-                    if let Some(entry) = map.get_mut(&(tid, epoch)) {
-                        let algo = entry.0;
-                        entry.1 -= 1;
-                        if entry.1 == 0 {
-                            map.remove(&(tid, epoch));
-                        }
-                        return (algo, snap);
+                    let entry = map.get_mut(&(tid, epoch))?;
+                    let algo = entry.0;
+                    entry.1 -= 1;
+                    if entry.1 == 0 {
+                        map.remove(&(tid, epoch));
                     }
-                }
-                spins += 1;
-                if spins > 64 {
-                    std::thread::yield_now();
-                } else {
-                    std::hint::spin_loop();
+                    Some(algo)
+                },
+            ) {
+                Ok(algo) => (algo, snap),
+                Err(e) => {
+                    Metrics::add(&self.rt.metrics.coll_decision_timeouts, 1);
+                    panic!("{e}");
                 }
             }
         }
@@ -1292,5 +1344,40 @@ impl<T: super::ShmemType> FromZeroed for T {
     fn from_zeroed() -> T {
         // SAFETY: ShmemType contract — all-zero bytes are a valid value.
         unsafe { std::mem::zeroed() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_wait_returns_immediately_on_ready() {
+        let r = bounded_wait(1, DegradedKind::SyncTimeout, 0, 1, 0, || Some(42));
+        assert_eq!(r, Ok(42));
+    }
+
+    #[test]
+    fn bounded_wait_zero_timeout_waits_indefinitely() {
+        // timeout_ms = 0 is the pre-fault unbounded spin: a poll that
+        // only succeeds after many rounds (well past the yield
+        // escalation) still completes rather than erroring.
+        let mut calls = 0u64;
+        let r = bounded_wait(0, DegradedKind::DecisionTimeout, 3, 7, 2, || {
+            calls += 1;
+            (calls >= 500).then_some(calls)
+        });
+        assert_eq!(r, Ok(500));
+    }
+
+    #[test]
+    fn bounded_wait_expires_with_structured_error() {
+        let r: Result<(), DegradedError> =
+            bounded_wait(1, DegradedKind::DecisionTimeout, 5, 9, 4, || None);
+        let e = r.unwrap_err();
+        assert_eq!(e.kind, DegradedKind::DecisionTimeout);
+        assert_eq!((e.team, e.epoch, e.pe), (5, 9, 4));
+        assert!(e.waited_ms >= 1);
+        assert!(e.to_string().contains("collective decision"));
     }
 }

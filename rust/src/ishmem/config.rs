@@ -25,11 +25,26 @@ pub struct CollConfig {
     /// (`coll.leader_fanout`): each node leader forwards to up to `k`
     /// children per level. Ignored by the ring variant.
     pub leader_fanout: usize,
+    /// Deadline for the per-(team, epoch) decision registry wait
+    /// (`coll.decision_timeout_ms`): a non-leader that never sees the
+    /// leader's published algorithm within this many milliseconds gets a
+    /// structured `DegradedError` instead of spinning forever. 0 (the
+    /// default) preserves the pre-fault unbounded wait.
+    pub decision_timeout_ms: u64,
+    /// Deadline for a team sync round (`coll.sync_timeout_ms`): same
+    /// contract as `decision_timeout_ms` — a peer that never arrives
+    /// turns the spin into a `DegradedError`. 0 = wait forever.
+    pub sync_timeout_ms: u64,
 }
 
 impl Default for CollConfig {
     fn default() -> Self {
-        CollConfig { algo: CollAlgoMode::Auto, leader_fanout: 4 }
+        CollConfig {
+            algo: CollAlgoMode::Auto,
+            leader_fanout: 4,
+            decision_timeout_ms: 0,
+            sync_timeout_ms: 0,
+        }
     }
 }
 
@@ -98,6 +113,13 @@ pub struct IshmemConfig {
     /// Hierarchical-collective knobs (`coll.algo`, `coll.leader_fanout`):
     /// single-node teams always take the flat path regardless.
     pub coll: CollConfig,
+    /// Fault injection & degraded mode (`fault.enable`,
+    /// `fault.detect_frac`, `fault.detect_min_samples`,
+    /// `fault.probe_after`, `fault.events`): scripted rail/engine kills,
+    /// the calibrator-as-detector thresholds, and revival probing. Off by
+    /// default — a `fault.enable = false` machine plans bit-for-bit like
+    /// the pre-fault code.
+    pub fault: crate::sim::FaultConfig,
 }
 
 impl Default for IshmemConfig {
@@ -120,6 +142,7 @@ impl Default for IshmemConfig {
             calib: crate::xfer::calibrate::CalibConfig::default(),
             plan_cache: crate::xfer::plan::PlanCacheConfig::default(),
             coll: CollConfig::default(),
+            fault: crate::sim::FaultConfig::default(),
         }
     }
 }
@@ -212,6 +235,20 @@ impl IshmemConfig {
         anyhow::ensure!(
             self.coll.leader_fanout >= 2,
             "coll.leader_fanout below 2 cannot form a tree"
+        );
+        anyhow::ensure!(
+            self.fault.detect_frac > 0.0 && self.fault.detect_frac < 1.0,
+            "fault.detect_frac must be in (0, 1) exclusive: 0 never detects, \
+             1 would quarantine healthy rails on EMA noise"
+        );
+        anyhow::ensure!(
+            self.fault.detect_min_samples >= 1,
+            "fault.detect_min_samples must be at least 1"
+        );
+        anyhow::ensure!(
+            self.fault.probe_after >= 1,
+            "fault.probe_after must be at least 1 (a 0-observation probation \
+             would revive a quarantined rail on the very next observation)"
         );
         Ok(())
     }
@@ -339,6 +376,38 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = IshmemConfig::default();
         cfg.coll.algo = CollAlgoMode::Flat;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn fault_knobs_validated() {
+        let cfg = IshmemConfig::default();
+        assert!(!cfg.fault.enable, "fault injection must default off");
+        assert_eq!(cfg.coll.decision_timeout_ms, 0, "decision wait defaults unbounded");
+        assert_eq!(cfg.coll.sync_timeout_ms, 0, "sync wait defaults unbounded");
+        // detect_frac is (0, 1) *exclusive* at both ends.
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.detect_frac = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.detect_frac = 1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.detect_frac = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.detect_frac = 0.999;
+        assert!(cfg.validate().is_ok());
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.detect_min_samples = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.probe_after = 0;
+        assert!(cfg.validate().is_err());
+        // An enabled plane with a kill script validates like any other.
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.enable = true;
+        cfg.fault.events.push(crate::sim::FaultEvent::kill_rail(8, 0, 1));
         assert!(cfg.validate().is_ok());
     }
 

@@ -77,6 +77,10 @@ pub struct Ishmem {
     /// lane, size-class) wall-time observations and refines the learnable
     /// constants in `cost.model` (no-op while `calib.enable` is false).
     pub calib: Arc<Calibrator>,
+    /// Fault-injection plane (ISSUE 8): scripted lane kill/revive events
+    /// plus the calibrator's quarantine detector, all funneled through
+    /// the cost model's health masks. Inert while `fault.enable` is off.
+    pub fault: Arc<crate::sim::FaultPlane>,
     #[allow(dead_code)] // held so host-initiated paths can mint command lists
     pub(crate) driver: ZeDriver,
     /// One reverse-offload ring + completion pool per node.
@@ -114,6 +118,13 @@ impl Ishmem {
         let driver = ZeDriver::new(heaps.clone(), cost.clone());
         let metrics = Metrics::new();
         let calib = Arc::new(Calibrator::new(cost.clone(), config.calib.clone()));
+        // Fault-injection plane (ISSUE 8): scripted kill/revive events
+        // tick on the proxy's op clock; the calibrator's detector applies
+        // quarantine/probe transitions through the same plane. Disabled
+        // (the default) it never ticks and the machine is bit-for-bit the
+        // pre-fault build.
+        let fault = crate::sim::FaultPlane::new(cost.clone(), config.fault.clone());
+        calib.set_fault_plane(fault.clone());
 
         let mut rings = Vec::new();
         let mut completions = Vec::new();
@@ -133,6 +144,7 @@ impl Ishmem {
                     metrics: metrics.clone(),
                     use_immediate_cl: config.use_immediate_cl,
                     calib: calib.clone(),
+                    fault: fault.clone(),
                 },
             ));
             rings.push(ring);
@@ -174,6 +186,7 @@ impl Ishmem {
             pmi: PmiWorld::new(npes),
             xfer,
             calib,
+            fault,
             cost,
             heaps,
             transport,

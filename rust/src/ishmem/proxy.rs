@@ -29,7 +29,7 @@ use crate::coordinator::metrics::{Metrics, PathIdx, ServiceOp};
 use crate::ringbuf::{
     BatchDescriptor, CompletionPool, Message, RingConsumer, RingOp, COMPLETION_NONE, DESC_SIZE,
 };
-use crate::sim::{HeapRegistry, SimClock};
+use crate::sim::{FaultAction, FaultPlane, HeapRegistry, SimClock};
 use crate::sos::transport::OfiTransport;
 use crate::xfer::exec::{FLAG_RAW_PTR, PROXY_ERR_UNREGISTERED, PROXY_OK};
 use crate::ze::cmdlist::{CommandList, CommandQueue, DeviceAddr};
@@ -54,6 +54,36 @@ pub(crate) struct ProxyShared {
     /// with its lane (engine slot / NIC rail) and observed wall-clock ns
     /// and fed here (no-op while `calib.enable` is off).
     pub calib: Arc<crate::xfer::Calibrator>,
+    /// Fault-injection plane (ISSUE 8): the proxy ticks it once per
+    /// serviced descriptor so scripted kill/revive events fire at their
+    /// op counts, and re-dispatches in-flight chunks bound for lanes
+    /// that died. A disabled plane (`fault.enable = false`, the default)
+    /// never ticks and never re-routes.
+    pub fault: Arc<FaultPlane>,
+}
+
+/// Advance the fault plane's op clock by one serviced descriptor and
+/// count any scripted transitions it fired into the metrics (an empty
+/// vec — the disabled fast path — costs nothing).
+fn tick_fault(sh: &ProxyShared) {
+    for a in sh.fault.tick_op() {
+        sh.metrics.count_fault_action(a, sh.fault.cost().degraded());
+    }
+}
+
+/// Count a health transition the calibrator's detector applied: the
+/// quarantine/probe tallies plus the shared kill/revive counters and
+/// per-lane gauges.
+fn count_detector_action(sh: &ProxyShared, a: FaultAction) {
+    match a {
+        FaultAction::KillRail { .. } | FaultAction::KillEngine { .. } => {
+            Metrics::add(&sh.metrics.fault_quarantines, 1)
+        }
+        FaultAction::ReviveRail { .. } | FaultAction::ReviveEngine { .. } => {
+            Metrics::add(&sh.metrics.fault_probes, 1)
+        }
+    }
+    sh.metrics.count_fault_action(a, sh.fault.cost().degraded());
 }
 
 /// Dispatch one intra-node engine copy on the requested command-list
@@ -128,6 +158,7 @@ fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
             // Batches record per-entry service times inside the arm.
             Some(RingOp::Batch) => service_batch(&msg, sh, &proxy_clock),
             Some(op) => {
+                tick_fault(sh);
                 let t0 = Instant::now();
                 service(op, &msg, sh, &proxy_clock);
                 let elapsed = t0.elapsed().as_nanos() as u64;
@@ -146,7 +177,14 @@ fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
                         );
                     } else {
                         sh.metrics.add_service_wall(PathIdx::Nic, msg.len, elapsed);
-                        sh.calib.observe_rail(msg.len as usize, elapsed as f64);
+                        // Un-batched remote ops carry no rail hint: they
+                        // inject on rail 0 (the un-chunked default).
+                        let node = sh.driver.cost.topo.node_of(src);
+                        if let Some(a) =
+                            sh.calib.observe_rail(node, 0, msg.len as usize, elapsed as f64)
+                        {
+                            count_detector_action(sh, a);
+                        }
                     }
                 }
             }
@@ -167,6 +205,74 @@ fn is_local(sh: &ProxyShared, a: usize, b: usize) -> bool {
 }
 
 // --------------------------------------------------- batch service loop ---
+
+/// The lanes one batch entry actually runs on (normally the
+/// initiator-assigned hints).
+#[derive(Clone, Copy)]
+struct EntryLanes {
+    engine: usize,
+    rail: usize,
+}
+
+/// One tracker-reservation migration performed for a dead-lane
+/// re-dispatch, undone after the batch's lists execute (see
+/// [`effective_lanes`]).
+enum LaneMove {
+    Engine { gpu: usize, from: usize, to: usize, bytes: u64 },
+    Rail { node: usize, from: usize, to: usize, bytes: u64 },
+}
+
+/// Resolve the lanes one batch entry will run on: the initiator-assigned
+/// hints — unless the hinted lane died after the initiator placed the
+/// chunk. Then the least-loaded *live* lane takes over and the chunk's
+/// tracker reservation migrates with it (recorded in `moved`, counted as
+/// a re-dispatch). The initiator releases its reservation against the
+/// original hint at completion time, so `service_batch` migrates the
+/// bytes back once the lists have executed — the backlog sits on the
+/// live lane exactly while the chunk is in flight. With *every* lane
+/// dead there is nothing to migrate to: the hint stands (estimates stay
+/// sane via the lane-exclusion floor of 1) and the degenerate case is
+/// counted as a last-lane fallback instead.
+fn effective_lanes(
+    sh: &ProxyShared,
+    src_pe: usize,
+    d: &BatchDescriptor,
+    op: RingOp,
+    moved: &mut Vec<LaneMove>,
+) -> EntryLanes {
+    let mut lanes = EntryLanes { engine: d.engine_hint(), rail: d.rail_hint() };
+    let cost = &sh.driver.cost;
+    if !matches!(op, RingOp::Put | RingOp::Get) || !cost.degraded() {
+        return lanes;
+    }
+    let bytes = d.len as u64;
+    if is_local(sh, src_pe, d.pe as usize) {
+        let gpu = cost.topo.global_gpu_of(src_pe);
+        if !cost.engine_is_live(gpu, lanes.engine) {
+            if cost.engine_live_count(gpu) == 0 {
+                Metrics::add(&sh.metrics.fault_last_lane_fallbacks, 1);
+            } else if let Some(&to) = cost.engine_pick(gpu, 1).first() {
+                cost.engine_migrate(gpu, lanes.engine, to, bytes);
+                moved.push(LaneMove::Engine { gpu, from: lanes.engine, to, bytes });
+                Metrics::add(&sh.metrics.fault_redispatched_chunks, 1);
+                lanes.engine = to;
+            }
+        }
+    } else {
+        let node = cost.topo.node_of(src_pe);
+        if !cost.rail_is_live(node, lanes.rail) {
+            if cost.rail_live_count(node) == 0 {
+                Metrics::add(&sh.metrics.fault_last_lane_fallbacks, 1);
+            } else if let Some(&to) = cost.rail_pick(node, 1).first() {
+                cost.rail_migrate(node, lanes.rail, to, bytes);
+                moved.push(LaneMove::Rail { node, from: lanes.rail, to, bytes });
+                Metrics::add(&sh.metrics.fault_redispatched_chunks, 1);
+                lanes.rail = to;
+            }
+        }
+    }
+    lanes
+}
 
 /// Service one `Batch` doorbell: decode the descriptor block from the
 /// initiator's staging slab and dispatch every entry. Standard-CL entries
@@ -208,11 +314,24 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
         first_len: usize,
     }
     let mut staged_meta: BTreeMap<usize, StagedMeta> = BTreeMap::new();
+    // Dead-lane re-dispatches performed for this batch, migrated back
+    // after the lists execute (see `effective_lanes`).
+    let mut moved: Vec<LaneMove> = Vec::new();
     for d in &descs {
+        tick_fault(sh);
         let t0 = Instant::now();
         let op = d.ring_op().expect("validated by decode_block");
-        let ok =
-            dispatch_batch_entry(sh, src_pe, d, op, &mut staged_cls, &mut rail_clocks, proxy_clock);
+        let lanes = effective_lanes(sh, src_pe, d, op, &mut moved);
+        let ok = dispatch_batch_entry(
+            sh,
+            src_pe,
+            d,
+            op,
+            lanes,
+            &mut staged_cls,
+            &mut rail_clocks,
+            proxy_clock,
+        );
         if !ok {
             status = PROXY_ERR_UNREGISTERED;
         }
@@ -231,7 +350,7 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
                     .add_service_wall(PathIdx::CopyEngine, d.transfer_bytes(), elapsed);
                 let loc = sh.driver.cost.locality(src_pe, d.pe as usize);
                 if d.standard_cl() {
-                    let m = staged_meta.entry(d.engine_hint()).or_insert(StagedMeta {
+                    let m = staged_meta.entry(lanes.engine).or_insert(StagedMeta {
                         bytes: 0,
                         entries: 0,
                         loc,
@@ -257,7 +376,10 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
                 // put would otherwise teach the calibrator an absurdly
                 // fast rail.
                 if ok {
-                    sh.calib.observe_rail(len, elapsed as f64);
+                    let node = sh.driver.cost.topo.node_of(src_pe);
+                    if let Some(a) = sh.calib.observe_rail(node, lanes.rail, len, elapsed as f64) {
+                        count_detector_action(sh, a);
+                    }
                 }
             }
         }
@@ -303,6 +425,21 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
         slowest = slowest.max(clock.now_ns());
     }
     proxy_clock.advance(slowest);
+    // Undo the re-dispatch migrations now that the lists have executed:
+    // the initiator releases its tracker reservation against the
+    // *original* hint once the completion lands, so the bytes must be
+    // back on that lane for the release to balance — otherwise the live
+    // lane would accrue phantom backlog forever.
+    for m in moved {
+        match m {
+            LaneMove::Engine { gpu, from, to, bytes } => {
+                sh.driver.cost.engine_migrate(gpu, to, from, bytes)
+            }
+            LaneMove::Rail { node, from, to, bytes } => {
+                sh.driver.cost.rail_migrate(node, to, from, bytes)
+            }
+        }
+    }
     // Every few batches worth of flavor evidence may move the learned CL
     // boundary (no-op while calibration is off or evidence is thin).
     sh.calib.refine_cl_boundary();
@@ -317,6 +454,7 @@ fn dispatch_batch_entry(
     src_pe: usize,
     d: &BatchDescriptor,
     op: RingOp,
+    lanes: EntryLanes,
     staged_cls: &mut BTreeMap<usize, CommandList>,
     rail_clocks: &mut BTreeMap<usize, SimClock>,
     proxy_clock: &SimClock,
@@ -328,10 +466,10 @@ fn dispatch_batch_entry(
             if is_local(sh, src_pe, pe) {
                 let dst = DeviceAddr { pe, offset: d.dst_off as usize };
                 let src = DeviceAddr { pe: src_pe, offset: d.src_off as usize };
-                sh.metrics.add_engine_dispatch(d.engine_hint(), len as u64);
+                sh.metrics.add_engine_dispatch(lanes.engine, len as u64);
                 if d.standard_cl() {
                     staged_cls
-                        .entry(d.engine_hint())
+                        .entry(lanes.engine)
                         .or_insert_with(|| sh.driver.create_command_list(src_pe))
                         .append_memory_copy(dst, src, len, None);
                 } else {
@@ -342,7 +480,7 @@ fn dispatch_batch_entry(
                 // Inter-node: the chunk's rail hint selects which NIC's
                 // in-flight command sequence carries it (hint 0 for
                 // un-chunked entries).
-                let rail = d.rail_hint();
+                let rail = lanes.rail;
                 sh.metrics.add_rail_dispatch(rail, len as u64);
                 let clock = rail_clocks.entry(rail).or_insert_with(SimClock::new);
                 sh.transport
@@ -355,10 +493,10 @@ fn dispatch_batch_entry(
                 // Result lands in the initiator's staging slab.
                 let dst = DeviceAddr { pe: src_pe, offset: d.dst_off as usize };
                 let src = DeviceAddr { pe, offset: d.src_off as usize };
-                sh.metrics.add_engine_dispatch(d.engine_hint(), len as u64);
+                sh.metrics.add_engine_dispatch(lanes.engine, len as u64);
                 if d.standard_cl() {
                     staged_cls
-                        .entry(d.engine_hint())
+                        .entry(lanes.engine)
                         .or_insert_with(|| sh.driver.create_command_list(src_pe))
                         .append_memory_copy(dst, src, len, None);
                 } else {
@@ -366,7 +504,7 @@ fn dispatch_batch_entry(
                 }
                 true
             } else {
-                let rail = d.rail_hint();
+                let rail = lanes.rail;
                 sh.metrics.add_rail_dispatch(rail, len as u64);
                 let clock = rail_clocks.entry(rail).or_insert_with(SimClock::new);
                 sh.transport

@@ -14,8 +14,8 @@ USAGE:
   rishmem figure <ID> [--out DIR]     regenerate a paper figure
         IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig5-adaptive
              fig6-4pe fig6-8pe fig6-12pe fig7a fig7b ring fig-batch
-             fig-stripe fig-rail ablate-cl ablate-sync cutover-table
-             service-delta calibration all
+             fig-stripe fig-rail fig-fault ablate-cl ablate-sync
+             cutover-table service-delta calibration all
         cutover-table [--load FILE] [--save FILE]: load a previously
         saved adaptive table instead of warming up / save the table
         service-delta: wall-clock vs modeled proxy service times per
@@ -26,6 +26,11 @@ USAGE:
                                       dump the metrics snapshot (text or
                                       JSON for dashboard scraping),
                                       including the calibration snapshot
+  rishmem fault [--json] [--pes N] [--kill-at OP] [--revive-at OP]
+                                      fault-injection demo: kill a NIC
+                                      rail + a copy engine mid-workload,
+                                      revive them later, dump per-lane
+                                      health + degraded-mode metrics
   rishmem train [--model M] [--pes N] [--steps S] [--lr F] [--seed K]
                                       data-parallel training (e2e driver)
   rishmem ze-peer                     raw Level-Zero copy-engine baseline
@@ -38,6 +43,7 @@ fn main() {
     let code = match args.first().map(|s| s.as_str()) {
         Some("figure") => cmd_figure(&args[1..]),
         Some("metrics") => cmd_metrics(&args[1..]),
+        Some("fault") => cmd_fault(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
         Some("ze-peer") => cmd_zepeer(),
         Some("quickstart") => cmd_quickstart(),
@@ -125,6 +131,7 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "fig-batch" => vec![figures::fig_batch()],
         "fig-stripe" => vec![figures::fig_stripe()],
         "fig-rail" => vec![figures::fig_rail()],
+        "fig-fault" => vec![figures::fig_fault()],
         "fig-coll-scale" => vec![figures::fig_coll_scale()],
         "ablate-cl" => vec![figures::ablate_cmdlists()],
         "ablate-sync" => vec![figures::ablate_sync()],
@@ -181,6 +188,64 @@ fn cmd_metrics(args: &[String]) -> anyhow::Result<()> {
         println!("{}", snap.report());
         println!();
         println!("{}", calib.report());
+    }
+    ish.shutdown();
+    Ok(())
+}
+
+/// Scripted fault-injection demo: run a put-heavy workload with a fault
+/// plane that kills NIC rail (0,1) and copy engine (0,0) at `--kill-at`
+/// proxy ops and revives both at `--revive-at`, then dump the metrics
+/// snapshot — per-lane health gauges, kill/revive counters,
+/// re-dispatched chunks and the degraded-mode flag. `--json` for
+/// dashboard scraping.
+fn cmd_fault(args: &[String]) -> anyhow::Result<()> {
+    use rishmem::sim::FaultEvent;
+    use rishmem::{Ishmem, IshmemConfig};
+    let (_, kv) = flags(args);
+    let json = kv.contains_key("json");
+    let pes: usize = kv.get("pes").map_or(Ok(12), |v| v.parse())?;
+    let kill_at: u64 = kv.get("kill-at").map_or(Ok(16), |v| v.parse())?;
+    let revive_at: u64 = kv.get("revive-at").map_or(Ok(96), |v| v.parse())?;
+    anyhow::ensure!(kill_at < revive_at, "--kill-at must precede --revive-at");
+    let mut cfg = IshmemConfig::with_npes(pes);
+    cfg.fault.enable = true;
+    cfg.fault.events = vec![
+        FaultEvent::kill_rail(kill_at, 0, 1),
+        FaultEvent::kill_engine(kill_at, 0, 0),
+        FaultEvent::revive_rail(revive_at, 0, 1),
+        FaultEvent::revive_engine(revive_at, 0, 0),
+    ];
+    let ish = Ishmem::new(cfg)?;
+    if !json {
+        println!(
+            "fault demo: kill rail(0,1) + engine(0,0) @ op {kill_at}, revive @ op {revive_at}"
+        );
+    }
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(4 << 20);
+        ctx.barrier_all();
+        let t = (ctx.pe() + 1) % ctx.npes();
+        let data = vec![7u8; 1 << 20];
+        // Enough striped large puts that the proxy's op clock crosses both
+        // the kill and the revive thresholds while chunks are in flight.
+        for _ in 0..8 {
+            ctx.put(buf, &data, t);
+        }
+        ctx.quiet();
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    if json {
+        println!("{}", snap.to_json());
+    } else {
+        println!("{}", snap.report());
+        println!(
+            "\nfinal health: rail(0,1) live={} engine(0,0) live={} degraded={}",
+            ish.cost.rail_is_live(0, 1),
+            ish.cost.engine_is_live(0, 0),
+            ish.cost.degraded(),
+        );
     }
     ish.shutdown();
     Ok(())

@@ -18,7 +18,7 @@
 //! fold the total backlog into its engine-path estimate *and* place new
 //! chunks on the least-loaded engines.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use super::topology::Locality;
 use super::xelink::XeLinkParams;
@@ -154,6 +154,10 @@ pub struct EngineQueue {
     in_flight: AtomicU64,
     /// Outstanding bytes per engine (index = engine slot on this GPU).
     per_engine_bytes: Vec<AtomicU64>,
+    /// Liveness per engine: `false` = killed/quarantined (fault injection,
+    /// ISSUE 8). All-true at construction, so a machine that never injects
+    /// faults behaves bit-identically to the pre-fault code.
+    alive: Vec<AtomicBool>,
     engines: u64,
 }
 
@@ -163,6 +167,7 @@ impl EngineQueue {
         EngineQueue {
             in_flight: AtomicU64::new(0),
             per_engine_bytes: (0..engines).map(|_| AtomicU64::new(0)).collect(),
+            alive: (0..engines).map(|_| AtomicBool::new(true)).collect(),
             engines: engines as u64,
         }
     }
@@ -194,15 +199,75 @@ impl EngineQueue {
         &self.per_engine_bytes[engine.min(self.per_engine_bytes.len() - 1)]
     }
 
+    fn slot_idx(&self, engine: usize) -> usize {
+        engine.min(self.alive.len() - 1)
+    }
+
+    /// Mark `engine` dead. Returns `true` iff it was alive (a transition).
+    pub fn kill(&self, engine: usize) -> bool {
+        self.alive[self.slot_idx(engine)].swap(false, Ordering::AcqRel)
+    }
+
+    /// Mark `engine` live again. Returns `true` iff it was dead.
+    pub fn revive(&self, engine: usize) -> bool {
+        !self.alive[self.slot_idx(engine)].swap(true, Ordering::AcqRel)
+    }
+
+    /// Is `engine` currently live?
+    pub fn is_live(&self, engine: usize) -> bool {
+        self.alive[self.slot_idx(engine)].load(Ordering::Acquire)
+    }
+
+    /// Number of live engines (0 = every engine on this GPU is dead).
+    pub fn live_count(&self) -> usize {
+        self.alive
+            .iter()
+            .filter(|a| a.load(Ordering::Acquire))
+            .count()
+    }
+
     /// Register `bytes` of accepted-but-incomplete work on `engine`.
     pub fn reserve_on(&self, engine: usize, bytes: u64) {
         self.slot(engine).fetch_add(bytes, Ordering::AcqRel);
     }
 
-    /// Retire work previously reserved on `engine`.
+    /// Retire work previously reserved on `engine`. Saturating: a chunk
+    /// whose backlog was migrated off a dead engine by the proxy may be
+    /// released against its original slot later (the initiator's ledger
+    /// predates the migration), so under-releases floor at zero instead
+    /// of wrapping.
     pub fn release_on(&self, engine: usize, bytes: u64) {
-        let prev = self.slot(engine).fetch_sub(bytes, Ordering::AcqRel);
-        debug_assert!(prev >= bytes, "engine backlog underflow: {prev} - {bytes}");
+        let slot = self.slot(engine);
+        let mut cur = slot.load(Ordering::Acquire);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match slot.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Move up to `bytes` of backlog from `from` to `to` (proxy
+    /// re-dispatch of in-flight chunks off a dead engine). Saturates at
+    /// whatever `from` actually holds.
+    pub fn migrate(&self, from: usize, to: usize, bytes: u64) {
+        if self.slot_idx(from) == self.slot_idx(to) {
+            return;
+        }
+        let src = self.slot(from);
+        let mut cur = src.load(Ordering::Acquire);
+        let moved = loop {
+            let take = cur.min(bytes);
+            let next = cur - take;
+            match src.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => break take,
+                Err(now) => cur = now,
+            }
+        };
+        if moved > 0 {
+            self.slot(to).fetch_add(moved, Ordering::AcqRel);
+        }
     }
 
     /// Legacy single-queue view: reserve on engine 0.
@@ -228,19 +293,32 @@ impl EngineQueue {
             .sum()
     }
 
-    /// The `width` least-loaded engine slots, lightest first (approximate
-    /// under concurrency — placement, not correctness, depends on it).
+    /// The `width` least-loaded *live* engine slots, lightest first
+    /// (approximate under concurrency — placement, not correctness,
+    /// depends on it). Dead engines are excluded; if every engine is dead
+    /// the full set is returned unfiltered (last-lane fallback — the
+    /// caller counts the degradation, the transfer still has to move).
     pub fn least_loaded(&self, width: usize) -> Vec<usize> {
         let mut loads: Vec<(u64, usize)> = self
             .per_engine_bytes
             .iter()
             .enumerate()
+            .filter(|(i, _)| self.alive[*i].load(Ordering::Acquire))
             .map(|(i, b)| (b.load(Ordering::Acquire), i))
             .collect();
+        if loads.is_empty() {
+            loads = self
+                .per_engine_bytes
+                .iter()
+                .enumerate()
+                .map(|(i, b)| (b.load(Ordering::Acquire), i))
+                .collect();
+        }
         loads.sort_unstable();
+        let n = loads.len();
         loads
             .into_iter()
-            .take(width.clamp(1, self.per_engine_bytes.len()))
+            .take(width.clamp(1, n))
             .map(|(_, i)| i)
             .collect()
     }
@@ -392,5 +470,49 @@ mod tests {
         // Width clamps to the engine count and to ≥1.
         assert_eq!(q.least_loaded(0).len(), 1);
         assert_eq!(q.least_loaded(99).len(), 4);
+    }
+
+    #[test]
+    fn dead_engines_are_excluded_from_placement() {
+        let q = EngineQueue::new(4);
+        assert_eq!(q.live_count(), 4);
+        assert!(q.kill(2), "first kill is a transition");
+        assert!(!q.kill(2), "second kill is not");
+        assert!(!q.is_live(2));
+        assert_eq!(q.live_count(), 3);
+        let picked = q.least_loaded(4);
+        assert_eq!(picked.len(), 3);
+        assert!(!picked.contains(&2), "dead engine placed: {picked:?}");
+        assert!(q.revive(2), "revive of a dead engine is a transition");
+        assert!(!q.revive(2));
+        assert_eq!(q.live_count(), 4);
+        assert_eq!(q.least_loaded(4).len(), 4);
+    }
+
+    #[test]
+    fn all_dead_falls_back_to_the_full_set() {
+        let q = EngineQueue::new(2);
+        q.kill(0);
+        q.kill(1);
+        assert_eq!(q.live_count(), 0);
+        // Placement still answers — the caller counts the fallback.
+        assert_eq!(q.least_loaded(2).len(), 2);
+    }
+
+    #[test]
+    fn migrate_moves_backlog_and_release_saturates() {
+        let q = EngineQueue::new(4);
+        q.reserve_on(1, 100);
+        q.migrate(1, 3, 60);
+        assert_eq!(q.engine_bytes(1), 40);
+        assert_eq!(q.engine_bytes(3), 60);
+        // Migrating more than the slot holds saturates.
+        q.migrate(1, 0, 1000);
+        assert_eq!(q.engine_bytes(1), 0);
+        assert_eq!(q.engine_bytes(0), 40);
+        // A stale release against the drained slot floors at zero.
+        q.release_on(1, 100);
+        assert_eq!(q.engine_bytes(1), 0);
+        assert_eq!(q.queued_bytes(), 100);
     }
 }

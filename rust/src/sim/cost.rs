@@ -4,6 +4,7 @@
 //! lives in exactly one place (DESIGN.md §6) and ablations can swap params
 //! wholesale.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::copyengine::{CopyEngineParams, EngineQueue};
@@ -269,6 +270,14 @@ pub struct CostModel {
     engine_queues: Vec<EngineQueue>,
     /// Per-node NIC-rail occupancy (node index).
     rail_sets: Vec<RailSet>,
+    /// Bumped on every lane kill/revive transition — the health twin of
+    /// the `ModelParams` version: plan caches stamp it and flush when it
+    /// moves, so no cached shape outlives a lane's liveness.
+    health_gen: AtomicU64,
+    /// Count of currently-dead lanes across every rail set and engine
+    /// queue. Zero (the only state a fault-free run ever sees) lets the
+    /// per-plan health reads skip the per-lane scans entirely.
+    dead_lanes: AtomicU64,
 }
 
 impl CostModel {
@@ -279,6 +288,8 @@ impl CostModel {
                 .map(|_| EngineQueue::new(params.ce.engines_per_gpu))
                 .collect(),
             rail_sets: (0..topo.nodes).map(|_| RailSet::new(params.nic.rails)).collect(),
+            health_gen: AtomicU64::new(0),
+            dead_lanes: AtomicU64::new(0),
             model: ModelParams::new(&params),
             params,
             topo,
@@ -410,7 +421,10 @@ impl CostModel {
         cl_immediate_max: usize,
     ) -> (usize, usize) {
         let ce = self.ce_eff_at(l);
-        let w_max = ce.stripe_max_engines.clamp(1, ce.engines_per_gpu.max(1));
+        let w_max = ce
+            .stripe_max_engines
+            .clamp(1, ce.engines_per_gpu.max(1))
+            .min(self.min_live_engines());
         stripe_scan(bytes, chunk_cap, ce.chunk_min_bytes, w_max, |w, chunk, n| {
             let imm = chunk <= cl_immediate_max;
             ce.striped_transfer_ns(&self.params.xe, loc, bytes, imm, false, w, n)
@@ -435,10 +449,11 @@ impl CostModel {
         chunk_cap: usize,
     ) -> (usize, usize) {
         let nic = self.nic_eff_at(l);
-        if nic.rails <= 1 {
+        let rails_eff = nic.rails.min(self.min_live_rails());
+        if rails_eff <= 1 {
             return (bytes.max(1), 1);
         }
-        stripe_scan(bytes, chunk_cap, nic.rail_chunk_min_bytes, nic.rails, |w, _chunk, n| {
+        stripe_scan(bytes, chunk_cap, nic.rail_chunk_min_bytes, rails_eff, |w, _chunk, n| {
             nic.rdma_striped_ns(bytes, w, n)
         })
     }
@@ -554,7 +569,8 @@ impl CostModel {
     /// [`Self::engine_drain_ns`] against one caller-held snapshot.
     pub fn engine_drain_ns_at(&self, l: &LearnedParams, loc: Locality, backlog_bytes: u64) -> f64 {
         let ce = self.ce_eff_at(l);
-        let bw = ce.striped_bw_gbs(&self.params.xe, loc, ce.engines_per_gpu);
+        let width = ce.engines_per_gpu.min(self.min_live_engines());
+        let bw = ce.striped_bw_gbs(&self.params.xe, loc, width);
         if bw > 0.0 {
             backlog_bytes as f64 / bw
         } else {
@@ -640,12 +656,129 @@ impl CostModel {
     /// [`Self::rail_drain_ns`] against one caller-held snapshot.
     pub fn rail_drain_ns_at(&self, l: &LearnedParams, backlog_bytes: u64) -> f64 {
         let nic = self.nic_eff_at(l);
-        let bw = nic.rail_striped_bw_gbs(nic.rails);
+        let bw = nic.rail_striped_bw_gbs(nic.rails.min(self.min_live_rails()));
         if bw > 0.0 {
             backlog_bytes as f64 / bw
         } else {
             0.0
         }
+    }
+
+    // ------------------------------------------------------ lane health ----
+
+    /// Kill one NIC rail of `node` (fault injection / quarantine). Returns
+    /// `true` iff the rail was live — a real transition, which bumps the
+    /// health generation so plan caches age out shapes striped across it.
+    pub fn kill_rail(&self, node: usize, rail: usize) -> bool {
+        let t = self.rail_sets[node.min(self.rail_sets.len() - 1)].kill(rail);
+        if t {
+            self.dead_lanes.fetch_add(1, Ordering::AcqRel);
+            self.health_gen.fetch_add(1, Ordering::AcqRel);
+        }
+        t
+    }
+
+    /// Revive one NIC rail of `node`. Returns `true` iff it was dead.
+    pub fn revive_rail(&self, node: usize, rail: usize) -> bool {
+        let t = self.rail_sets[node.min(self.rail_sets.len() - 1)].revive(rail);
+        if t {
+            self.dead_lanes.fetch_sub(1, Ordering::AcqRel);
+            self.health_gen.fetch_add(1, Ordering::AcqRel);
+        }
+        t
+    }
+
+    /// Kill one copy engine of `gpu` (global GPU index).
+    pub fn kill_engine(&self, gpu: usize, engine: usize) -> bool {
+        let t = self.engine_queues[gpu.min(self.engine_queues.len() - 1)].kill(engine);
+        if t {
+            self.dead_lanes.fetch_add(1, Ordering::AcqRel);
+            self.health_gen.fetch_add(1, Ordering::AcqRel);
+        }
+        t
+    }
+
+    /// Revive one copy engine of `gpu`. Returns `true` iff it was dead.
+    pub fn revive_engine(&self, gpu: usize, engine: usize) -> bool {
+        let t = self.engine_queues[gpu.min(self.engine_queues.len() - 1)].revive(engine);
+        if t {
+            self.dead_lanes.fetch_sub(1, Ordering::AcqRel);
+            self.health_gen.fetch_add(1, Ordering::AcqRel);
+        }
+        t
+    }
+
+    /// Is this rail of `node` currently live?
+    pub fn rail_is_live(&self, node: usize, rail: usize) -> bool {
+        self.rail_sets[node.min(self.rail_sets.len() - 1)].is_live(rail)
+    }
+
+    /// Is this engine of `gpu` currently live?
+    pub fn engine_is_live(&self, gpu: usize, engine: usize) -> bool {
+        self.engine_queues[gpu.min(self.engine_queues.len() - 1)].is_live(engine)
+    }
+
+    /// Live rails on `node`.
+    pub fn rail_live_count(&self, node: usize) -> usize {
+        self.rail_sets[node.min(self.rail_sets.len() - 1)].live_count()
+    }
+
+    /// Live engines on `gpu`.
+    pub fn engine_live_count(&self, gpu: usize) -> usize {
+        self.engine_queues[gpu.min(self.engine_queues.len() - 1)].live_count()
+    }
+
+    /// Monotone counter of lane kill/revive transitions — the plan-cache
+    /// invalidation stamp (health twin of `ModelParams::version`).
+    pub fn health_generation(&self) -> u64 {
+        self.health_gen.load(Ordering::Acquire)
+    }
+
+    /// Any dead lane anywhere?
+    pub fn degraded(&self) -> bool {
+        self.dead_lanes.load(Ordering::Acquire) > 0
+    }
+
+    /// The worst-case live rail width across nodes — what a topology-blind
+    /// plan may safely stripe across. Full-width (and zero-cost) on a
+    /// healthy machine; floors at 1 so an all-dead node still gets a
+    /// single-lane plan (last-lane fallback) rather than a panic.
+    pub fn min_live_rails(&self) -> usize {
+        if self.dead_lanes.load(Ordering::Acquire) == 0 {
+            return self.params.nic.rails.max(1);
+        }
+        self.rail_sets
+            .iter()
+            .map(|r| r.live_count())
+            .min()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// The worst-case live engine width across GPUs (see
+    /// [`Self::min_live_rails`]).
+    pub fn min_live_engines(&self) -> usize {
+        if self.dead_lanes.load(Ordering::Acquire) == 0 {
+            return self.params.ce.engines_per_gpu.max(1);
+        }
+        self.engine_queues
+            .iter()
+            .map(|q| q.live_count())
+            .min()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// Move up to `bytes` of rail backlog between two rails of `node`
+    /// (proxy re-dispatch off a dead rail).
+    pub fn rail_migrate(&self, node: usize, from: usize, to: usize, bytes: u64) {
+        self.rail_sets[node.min(self.rail_sets.len() - 1)].migrate(from, to, bytes);
+    }
+
+    /// Move up to `bytes` of engine backlog between two engines of `gpu`
+    /// (proxy re-dispatch off a dead engine).
+    pub fn engine_migrate(&self, gpu: usize, from: usize, to: usize, bytes: u64) {
+        self.engine_queues[gpu.min(self.engine_queues.len() - 1)].migrate(from, to, bytes);
     }
 
     /// Device-side cost of staging `bytes` through the symmetric-heap
@@ -1173,6 +1306,163 @@ mod tests {
                 m.internode_ns(bytes, true, true),
             );
         }
+    }
+
+    #[test]
+    fn killing_all_but_one_rail_reproduces_one_rail_estimates() {
+        // Degraded-mode twin of the 1-rail config test above: with every
+        // rail but one dead, plans never chunk and match the plain
+        // internode estimate exactly.
+        let m = model();
+        for r in 1..m.params.nic.rails {
+            assert!(m.kill_rail(0, r));
+        }
+        assert_eq!(m.min_live_rails(), 1);
+        for bytes in [64usize, 4096, 1 << 20, 8 << 20] {
+            assert_eq!(m.rail_stripe_for(bytes, usize::MAX), (bytes.max(1), 1));
+            assert_eq!(
+                m.internode_striped_ns(bytes, true, true, 1, 1),
+                m.internode_ns(bytes, true, true),
+            );
+        }
+    }
+
+    #[test]
+    fn dead_rail_replans_to_the_n_minus_one_model_and_revival_restores() {
+        // The ISSUE 8 property: killing 1 of N rails makes every remote
+        // plan and estimate bit-identical to an (N-1)-rail machine, and
+        // revival restores the N-rail numbers bit-for-bit.
+        let m = model();
+        let rails = m.params.nic.rails;
+        assert!(rails >= 2);
+        let mut p = CostParams::default();
+        p.nic.rails = rails - 1;
+        let reduced = CostModel::new(Topology::default(), p);
+        let sizes = [4096usize, 512 << 10, 1 << 20, 8 << 20, 64 << 20];
+        let baseline: Vec<((usize, usize), u64)> = sizes
+            .iter()
+            .map(|&b| {
+                let (c, w) = m.rail_stripe_for(b, usize::MAX);
+                let n = b.div_ceil(c.max(1));
+                ((c, w), m.internode_striped_ns(b, true, true, w, n).to_bits())
+            })
+            .collect();
+
+        assert!(m.kill_rail(0, 2));
+        assert!(m.degraded());
+        assert_eq!(m.min_live_rails(), rails - 1);
+        for &bytes in &sizes {
+            let shape = m.rail_stripe_for(bytes, usize::MAX);
+            assert_eq!(
+                shape,
+                reduced.rail_stripe_for(bytes, usize::MAX),
+                "degraded shape diverges from the {}-rail model at {bytes}B",
+                rails - 1
+            );
+            let (c, w) = shape;
+            let n = bytes.div_ceil(c.max(1));
+            assert_eq!(
+                m.internode_striped_ns(bytes, true, true, w, n).to_bits(),
+                reduced.internode_striped_ns(bytes, true, true, w, n).to_bits(),
+                "degraded estimate diverges at {bytes}B"
+            );
+        }
+        assert_eq!(
+            m.rail_drain_ns(64 << 20).to_bits(),
+            reduced.rail_drain_ns(64 << 20).to_bits(),
+        );
+        // The degraded plan genuinely re-striped (not a vacuous pass).
+        assert!(baseline.iter().zip(&sizes).any(|(b, &bytes)| {
+            m.rail_stripe_for(bytes, usize::MAX) != b.0
+        }));
+
+        assert!(m.revive_rail(0, 2));
+        assert!(!m.degraded());
+        for (&bytes, b) in sizes.iter().zip(&baseline) {
+            let (c, w) = m.rail_stripe_for(bytes, usize::MAX);
+            assert_eq!((c, w), b.0, "revival did not restore the shape at {bytes}B");
+            let n = bytes.div_ceil(c.max(1));
+            assert_eq!(
+                m.internode_striped_ns(bytes, true, true, w, n).to_bits(),
+                b.1,
+                "revival did not restore the estimate at {bytes}B"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_engines_replan_to_the_reduced_engine_model_and_revival_restores() {
+        // Engine twin of the rail property: with only `live` engines left
+        // on the worst GPU, shapes, estimates, and drains are bit-identical
+        // to a machine configured with `live` engines per GPU.
+        let m = model();
+        let per_gpu = m.params.ce.engines_per_gpu;
+        let live = 2usize;
+        assert!(per_gpu > live);
+        let mut p = CostParams::default();
+        p.ce.engines_per_gpu = live;
+        let reduced = CostModel::new(Topology::default(), p);
+        let loc = Locality::SameNode;
+        let sizes = [4096usize, 1 << 20, 8 << 20];
+        let baseline: Vec<u64> = sizes
+            .iter()
+            .map(|&b| m.p2p_engine_estimate_ns(loc, b, true).to_bits())
+            .collect();
+
+        for e in live..per_gpu {
+            assert!(m.kill_engine(0, e));
+        }
+        assert_eq!(m.min_live_engines(), live);
+        for &bytes in &sizes {
+            assert_eq!(
+                m.stripe_for(loc, bytes, usize::MAX, usize::MAX),
+                reduced.stripe_for(loc, bytes, usize::MAX, usize::MAX),
+                "degraded shape diverges from the {live}-engine model at {bytes}B"
+            );
+            assert_eq!(
+                m.p2p_engine_estimate_ns(loc, bytes, true).to_bits(),
+                reduced.p2p_engine_estimate_ns(loc, bytes, true).to_bits(),
+                "degraded estimate diverges at {bytes}B"
+            );
+        }
+        assert_eq!(
+            m.engine_drain_ns(loc, 64 << 20).to_bits(),
+            reduced.engine_drain_ns(loc, 64 << 20).to_bits(),
+        );
+
+        for e in live..per_gpu {
+            assert!(m.revive_engine(0, e));
+        }
+        assert!(!m.degraded());
+        for (&bytes, &bits) in sizes.iter().zip(&baseline) {
+            assert_eq!(
+                m.p2p_engine_estimate_ns(loc, bytes, true).to_bits(),
+                bits,
+                "revival did not restore the engine estimate at {bytes}B"
+            );
+        }
+    }
+
+    #[test]
+    fn health_generation_bumps_on_transitions_only() {
+        let m = model();
+        assert_eq!(m.health_generation(), 0);
+        assert!(!m.degraded());
+        assert!(m.kill_rail(0, 1));
+        assert_eq!(m.health_generation(), 1);
+        assert!(!m.kill_rail(0, 1), "re-kill is not a transition");
+        assert_eq!(m.health_generation(), 1);
+        assert!(!m.rail_is_live(0, 1));
+        assert!(m.kill_engine(0, 0));
+        assert!(!m.engine_is_live(0, 0));
+        assert_eq!(m.health_generation(), 2);
+        assert!(m.degraded());
+        assert!(m.revive_rail(0, 1));
+        assert!(m.revive_engine(0, 0));
+        assert!(!m.revive_engine(0, 0), "re-revive is not a transition");
+        assert_eq!(m.health_generation(), 4);
+        assert!(!m.degraded());
+        assert!(m.rail_is_live(0, 1) && m.engine_is_live(0, 0));
     }
 
     #[test]

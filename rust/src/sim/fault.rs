@@ -1,0 +1,319 @@
+//! Fault injection & degraded mode (ISSUE 8).
+//!
+//! The cutover claim — pick load/store vs copy-engine vs NIC per
+//! configuration — silently assumes every lane stays healthy. A production
+//! machine loses NIC rails, copy engines, and whole PEs; without a health
+//! plane a single dead rail mis-prices every remote plan forever. This
+//! module is the injection side of that plane:
+//!
+//! * [`FaultConfig`] — the `fault.*` knob surface: a master `enable`
+//!   switch (default **off**: a disabled plane never touches the cost
+//!   model, so planning stays bit-for-bit identical to the pre-fault
+//!   code), detection thresholds for the calibrator-as-detector
+//!   (`xfer::calibrate`), and a script of [`FaultEvent`]s to fire at
+//!   given proxy op counts.
+//! * [`FaultPlane`] — applies the script: the proxy ticks it once per
+//!   serviced descriptor ([`FaultPlane::tick_op`]), due events flip lane
+//!   liveness in the [`super::cost::CostModel`] (which bumps its health
+//!   generation → plan caches flush → new plans re-stripe onto
+//!   survivors), and the applied-transition summary flows back so the
+//!   caller can count kills/revives into its metrics. `sim` stays
+//!   metrics-free; the layers that own `Metrics` do the counting.
+//! * [`DegradedError`] — the structured error the collective decision
+//!   registry and sync paths return when a peer never shows up within
+//!   the configured deadline, instead of spinning forever.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::cost::CostModel;
+
+/// One scripted lane transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    KillRail { node: usize, rail: usize },
+    ReviveRail { node: usize, rail: usize },
+    KillEngine { gpu: usize, engine: usize },
+    ReviveEngine { gpu: usize, engine: usize },
+}
+
+/// A scripted transition firing once the proxy has serviced `at_op`
+/// descriptors (0 = before the first op).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at_op: u64,
+    pub action: FaultAction,
+}
+
+impl FaultEvent {
+    pub fn kill_rail(at_op: u64, node: usize, rail: usize) -> Self {
+        FaultEvent { at_op, action: FaultAction::KillRail { node, rail } }
+    }
+
+    pub fn revive_rail(at_op: u64, node: usize, rail: usize) -> Self {
+        FaultEvent { at_op, action: FaultAction::ReviveRail { node, rail } }
+    }
+
+    pub fn kill_engine(at_op: u64, gpu: usize, engine: usize) -> Self {
+        FaultEvent { at_op, action: FaultAction::KillEngine { gpu, engine } }
+    }
+
+    pub fn revive_engine(at_op: u64, gpu: usize, engine: usize) -> Self {
+        FaultEvent { at_op, action: FaultAction::ReviveEngine { gpu, engine } }
+    }
+}
+
+/// The `fault.*` knob surface (validated in `ishmem::config`).
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Master switch. Off (the default) means the plane never ticks,
+    /// never applies events, and the calibrator never quarantines —
+    /// planning is bit-for-bit identical to the pre-fault code.
+    pub enable: bool,
+    /// Calibrator-as-detector threshold: a rail whose learned per-rail
+    /// bandwidth EMA collapses below `detect_frac` × the mean of its
+    /// peers is quarantined (killed). Must lie in (0, 1) exclusive.
+    pub detect_frac: f64,
+    /// Minimum per-rail observations before the detector may judge a
+    /// rail (both the suspect and its peers).
+    pub detect_min_samples: u64,
+    /// Revival probing: after this many further observations on the same
+    /// node, a quarantined rail is probationally revived — if it is
+    /// still collapsed the detector re-kills it on the next judgment.
+    pub probe_after: u64,
+    /// Scripted transitions, fired by proxy op count.
+    pub events: Vec<FaultEvent>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enable: false,
+            detect_frac: 0.35,
+            detect_min_samples: 48,
+            probe_after: 512,
+            events: Vec::new(),
+        }
+    }
+}
+
+/// The fault-injection plane: owns the event script, ticks with the
+/// proxy's serviced-op count, and flips lane liveness in the shared
+/// [`CostModel`].
+#[derive(Debug)]
+pub struct FaultPlane {
+    cost: Arc<CostModel>,
+    cfg: FaultConfig,
+    /// Serviced-op counter (only advanced while enabled).
+    ops: AtomicU64,
+    /// Cursor into the (sorted) event script; events are claimed by CAS
+    /// so concurrent proxy threads fire each exactly once.
+    next_event: AtomicUsize,
+}
+
+impl FaultPlane {
+    /// Build a plane over the shared cost model. The event script is
+    /// sorted by `at_op` (stable, so same-op events keep their written
+    /// order).
+    pub fn new(cost: Arc<CostModel>, mut cfg: FaultConfig) -> Arc<Self> {
+        cfg.events.sort_by_key(|e| e.at_op);
+        Arc::new(FaultPlane {
+            cost,
+            cfg,
+            ops: AtomicU64::new(0),
+            next_event: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enable
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn cost(&self) -> &Arc<CostModel> {
+        &self.cost
+    }
+
+    /// Ops ticked so far (0 forever while disabled).
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Acquire)
+    }
+
+    /// Tick one serviced op and fire any due scripted events. Returns the
+    /// applied transitions — lane indices included, so the caller can
+    /// maintain per-slot health gauges — empty when nothing changed
+    /// (including the fast path of a disabled plane, which does not even
+    /// count the op; `Vec::new` never allocates).
+    pub fn tick_op(&self) -> Vec<FaultAction> {
+        if !self.cfg.enable {
+            return Vec::new();
+        }
+        let op = self.ops.fetch_add(1, Ordering::AcqRel) + 1;
+        let mut applied = Vec::new();
+        loop {
+            let i = self.next_event.load(Ordering::Acquire);
+            if i >= self.cfg.events.len() || self.cfg.events[i].at_op > op {
+                break;
+            }
+            if self
+                .next_event
+                .compare_exchange(i, i + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                if let Some(a) = self.apply(self.cfg.events[i].action) {
+                    applied.push(a);
+                }
+            }
+        }
+        applied
+    }
+
+    /// Apply one action directly (CLI / tests / the detector's revival
+    /// probe). Returns the action iff it was a real transition.
+    pub fn apply(&self, action: FaultAction) -> Option<FaultAction> {
+        let t = match action {
+            FaultAction::KillRail { node, rail } => self.cost.kill_rail(node, rail),
+            FaultAction::ReviveRail { node, rail } => self.cost.revive_rail(node, rail),
+            FaultAction::KillEngine { gpu, engine } => self.cost.kill_engine(gpu, engine),
+            FaultAction::ReviveEngine { gpu, engine } => self.cost.revive_engine(gpu, engine),
+        };
+        t.then_some(action)
+    }
+}
+
+/// Why a collective wait gave up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradedKind {
+    /// The per-(team, epoch) decision registry never saw the leader's
+    /// published algorithm within the deadline.
+    DecisionTimeout,
+    /// A team sync round never saw every peer arrive within the deadline.
+    SyncTimeout,
+}
+
+/// Structured degraded-mode error: a collective wait exceeded its
+/// configured deadline (PE churn / a dead peer), instead of spinning the
+/// thread forever.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DegradedError {
+    pub kind: DegradedKind,
+    /// Team the wait belonged to.
+    pub team: usize,
+    /// Collective epoch (per-team op sequence number) of the wait.
+    pub epoch: u64,
+    /// PE that gave up waiting.
+    pub pe: usize,
+    /// How long it waited before giving up, ms.
+    pub waited_ms: u64,
+}
+
+impl fmt::Display for DegradedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let what = match self.kind {
+            DegradedKind::DecisionTimeout => "collective decision",
+            DegradedKind::SyncTimeout => "team sync",
+        };
+        write!(
+            f,
+            "degraded mode: {what} timed out after {}ms (team {}, epoch {}, pe {}) — \
+             a peer died or churned out mid-collective",
+            self.waited_ms, self.team, self.epoch, self.pe
+        )
+    }
+}
+
+impl std::error::Error for DegradedError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::CostParams;
+    use crate::sim::topology::Topology;
+
+    fn cost() -> Arc<CostModel> {
+        CostModel::new(Topology::default(), CostParams::default())
+    }
+
+    #[test]
+    fn disabled_plane_never_ticks_or_applies() {
+        let c = cost();
+        let cfg = FaultConfig {
+            events: vec![FaultEvent::kill_rail(0, 0, 1)],
+            ..FaultConfig::default()
+        };
+        assert!(!cfg.enable, "fault injection must default off");
+        let plane = FaultPlane::new(Arc::clone(&c), cfg);
+        for _ in 0..10 {
+            assert!(plane.tick_op().is_empty());
+        }
+        assert_eq!(plane.ops(), 0);
+        assert_eq!(c.health_generation(), 0);
+        assert!(c.rail_is_live(0, 1));
+    }
+
+    #[test]
+    fn scripted_events_fire_once_at_their_op() {
+        let c = cost();
+        let cfg = FaultConfig {
+            enable: true,
+            // Deliberately unsorted: revival at op 5, kills at 2 and 3.
+            events: vec![
+                FaultEvent::revive_rail(5, 0, 1),
+                FaultEvent::kill_engine(3, 0, 0),
+                FaultEvent::kill_rail(2, 0, 1),
+            ],
+            ..FaultConfig::default()
+        };
+        let plane = FaultPlane::new(Arc::clone(&c), cfg);
+        assert!(plane.tick_op().is_empty(), "op 1: nothing due");
+        let a = plane.tick_op();
+        assert_eq!(a, vec![FaultAction::KillRail { node: 0, rail: 1 }], "op 2");
+        assert!(!c.rail_is_live(0, 1));
+        let a = plane.tick_op();
+        assert_eq!(a, vec![FaultAction::KillEngine { gpu: 0, engine: 0 }], "op 3");
+        assert!(!c.engine_is_live(0, 0));
+        assert!(plane.tick_op().is_empty(), "op 4: nothing due");
+        let a = plane.tick_op();
+        assert_eq!(a, vec![FaultAction::ReviveRail { node: 0, rail: 1 }], "op 5");
+        assert!(c.rail_is_live(0, 1));
+        assert!(plane.tick_op().is_empty(), "script exhausted");
+        assert_eq!(plane.ops(), 6);
+        // Engine kill + rail kill + rail revive = 3 transitions.
+        assert_eq!(c.health_generation(), 3);
+    }
+
+    #[test]
+    fn direct_apply_reports_transitions_only() {
+        let c = cost();
+        let plane = FaultPlane::new(
+            Arc::clone(&c),
+            FaultConfig { enable: true, ..FaultConfig::default() },
+        );
+        let kill = FaultAction::KillRail { node: 0, rail: 2 };
+        assert_eq!(plane.apply(kill), Some(kill));
+        assert_eq!(plane.apply(kill), None, "re-kill is not a transition");
+        let revive = FaultAction::ReviveRail { node: 0, rail: 2 };
+        assert_eq!(plane.apply(revive), Some(revive));
+        assert_eq!(plane.apply(revive), None);
+    }
+
+    #[test]
+    fn degraded_error_is_structured_and_displayable() {
+        let e = DegradedError {
+            kind: DegradedKind::DecisionTimeout,
+            team: 3,
+            epoch: 17,
+            pe: 5,
+            waited_ms: 250,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("collective decision"), "{msg}");
+        assert!(msg.contains("team 3") && msg.contains("epoch 17"), "{msg}");
+        let s = DegradedError { kind: DegradedKind::SyncTimeout, ..e };
+        assert!(s.to_string().contains("team sync"));
+    }
+}

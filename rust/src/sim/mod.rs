@@ -14,6 +14,7 @@
 pub mod clock;
 pub mod copyengine;
 pub mod cost;
+pub mod fault;
 pub mod memory;
 pub mod nic;
 pub mod params;
@@ -24,6 +25,7 @@ pub mod xelink;
 
 pub use clock::SimClock;
 pub use cost::{CollAlgo, CollEstimates, CollOp, CollShape, CostModel, CostParams};
+pub use fault::{DegradedError, DegradedKind, FaultAction, FaultConfig, FaultEvent, FaultPlane};
 pub use memory::{HeapRegistry, SymHeap};
 pub use params::{LearnedParams, ModelParams, ParamsSnapshot};
 pub use rail::RailSet;

@@ -22,13 +22,19 @@
 //! — a calibration update re-prices every drain estimate without touching
 //! this state.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-/// Per-node rail state: a byte backlog per NIC rail.
+/// Per-node rail state: a byte backlog per NIC rail, plus a liveness bit
+/// per rail (fault injection, ISSUE 8 — a dead rail is excluded from
+/// placement and planning until revived).
 #[derive(Debug)]
 pub struct RailSet {
     /// Outstanding bytes per rail (index = rail slot on this node).
     per_rail_bytes: Vec<AtomicU64>,
+    /// Liveness per rail: `false` = killed/quarantined. All-true at
+    /// construction, so a machine that never injects faults behaves
+    /// bit-identically to the pre-fault code.
+    alive: Vec<AtomicBool>,
 }
 
 impl RailSet {
@@ -36,6 +42,7 @@ impl RailSet {
         let rails = rails.max(1);
         RailSet {
             per_rail_bytes: (0..rails).map(|_| AtomicU64::new(0)).collect(),
+            alive: (0..rails).map(|_| AtomicBool::new(true)).collect(),
         }
     }
 
@@ -47,15 +54,75 @@ impl RailSet {
         &self.per_rail_bytes[rail.min(self.per_rail_bytes.len() - 1)]
     }
 
+    fn slot_idx(&self, rail: usize) -> usize {
+        rail.min(self.alive.len() - 1)
+    }
+
+    /// Mark `rail` dead. Returns `true` iff it was alive (a transition).
+    pub fn kill(&self, rail: usize) -> bool {
+        self.alive[self.slot_idx(rail)].swap(false, Ordering::AcqRel)
+    }
+
+    /// Mark `rail` live again. Returns `true` iff it was dead.
+    pub fn revive(&self, rail: usize) -> bool {
+        !self.alive[self.slot_idx(rail)].swap(true, Ordering::AcqRel)
+    }
+
+    /// Is `rail` currently live?
+    pub fn is_live(&self, rail: usize) -> bool {
+        self.alive[self.slot_idx(rail)].load(Ordering::Acquire)
+    }
+
+    /// Number of live rails (0 = every rail on this node is dead).
+    pub fn live_count(&self) -> usize {
+        self.alive
+            .iter()
+            .filter(|a| a.load(Ordering::Acquire))
+            .count()
+    }
+
     /// Register `bytes` of accepted-but-incomplete remote work on `rail`.
     pub fn reserve_on(&self, rail: usize, bytes: u64) {
         self.slot(rail).fetch_add(bytes, Ordering::AcqRel);
     }
 
-    /// Retire work previously reserved on `rail`.
+    /// Retire work previously reserved on `rail`. Saturating: a chunk
+    /// whose backlog was migrated off a dead rail by the proxy may be
+    /// released against its original slot later (the initiator's ledger
+    /// predates the migration), so under-releases floor at zero instead
+    /// of wrapping.
     pub fn release_on(&self, rail: usize, bytes: u64) {
-        let prev = self.slot(rail).fetch_sub(bytes, Ordering::AcqRel);
-        debug_assert!(prev >= bytes, "rail backlog underflow: {prev} - {bytes}");
+        let slot = self.slot(rail);
+        let mut cur = slot.load(Ordering::Acquire);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match slot.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Move up to `bytes` of backlog from `from` to `to` (proxy
+    /// re-dispatch of in-flight chunks off a dead lane). Saturates at
+    /// whatever `from` actually holds.
+    pub fn migrate(&self, from: usize, to: usize, bytes: u64) {
+        if self.slot_idx(from) == self.slot_idx(to) {
+            return;
+        }
+        let src = self.slot(from);
+        let mut cur = src.load(Ordering::Acquire);
+        let moved = loop {
+            let take = cur.min(bytes);
+            let next = cur - take;
+            match src.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => break take,
+                Err(now) => cur = now,
+            }
+        };
+        if moved > 0 {
+            self.slot(to).fetch_add(moved, Ordering::AcqRel);
+        }
     }
 
     /// Current byte backlog of one rail.
@@ -71,19 +138,32 @@ impl RailSet {
             .sum()
     }
 
-    /// The `width` least-loaded rail slots, lightest first (approximate
-    /// under concurrency — placement, not correctness, depends on it).
+    /// The `width` least-loaded *live* rail slots, lightest first
+    /// (approximate under concurrency — placement, not correctness,
+    /// depends on it). Dead rails are excluded; if every rail is dead the
+    /// full set is returned unfiltered (last-lane fallback — the caller
+    /// counts the degradation, the transfer still has to move).
     pub fn least_loaded(&self, width: usize) -> Vec<usize> {
         let mut loads: Vec<(u64, usize)> = self
             .per_rail_bytes
             .iter()
             .enumerate()
+            .filter(|(i, _)| self.alive[*i].load(Ordering::Acquire))
             .map(|(i, b)| (b.load(Ordering::Acquire), i))
             .collect();
+        if loads.is_empty() {
+            loads = self
+                .per_rail_bytes
+                .iter()
+                .enumerate()
+                .map(|(i, b)| (b.load(Ordering::Acquire), i))
+                .collect();
+        }
         loads.sort_unstable();
+        let n = loads.len();
         loads
             .into_iter()
-            .take(width.clamp(1, self.per_rail_bytes.len()))
+            .take(width.clamp(1, n))
             .map(|(_, i)| i)
             .collect()
     }
@@ -132,5 +212,49 @@ mod tests {
         r.reserve_on(0, 8);
         assert_eq!(r.queued_bytes(), 8);
         r.release_on(0, 8);
+    }
+
+    #[test]
+    fn dead_rails_are_excluded_from_placement() {
+        let r = RailSet::new(4);
+        assert_eq!(r.live_count(), 4);
+        assert!(r.kill(2), "first kill is a transition");
+        assert!(!r.kill(2), "second kill is not");
+        assert!(!r.is_live(2));
+        assert_eq!(r.live_count(), 3);
+        let picked = r.least_loaded(4);
+        assert_eq!(picked.len(), 3);
+        assert!(!picked.contains(&2), "dead rail placed: {picked:?}");
+        assert!(r.revive(2), "revive of a dead rail is a transition");
+        assert!(!r.revive(2));
+        assert_eq!(r.live_count(), 4);
+        assert_eq!(r.least_loaded(4).len(), 4);
+    }
+
+    #[test]
+    fn all_dead_falls_back_to_the_full_set() {
+        let r = RailSet::new(2);
+        r.kill(0);
+        r.kill(1);
+        assert_eq!(r.live_count(), 0);
+        // Placement still answers — the caller counts the fallback.
+        assert_eq!(r.least_loaded(2).len(), 2);
+    }
+
+    #[test]
+    fn migrate_moves_backlog_and_release_saturates() {
+        let r = RailSet::new(4);
+        r.reserve_on(1, 100);
+        r.migrate(1, 3, 60);
+        assert_eq!(r.rail_bytes(1), 40);
+        assert_eq!(r.rail_bytes(3), 60);
+        // Migrating more than the slot holds saturates.
+        r.migrate(1, 0, 1000);
+        assert_eq!(r.rail_bytes(1), 0);
+        assert_eq!(r.rail_bytes(0), 40);
+        // A stale release against the drained slot floors at zero.
+        r.release_on(1, 100);
+        assert_eq!(r.rail_bytes(1), 0);
+        assert_eq!(r.queued_bytes(), 100);
     }
 }

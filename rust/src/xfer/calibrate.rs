@@ -57,11 +57,13 @@
 //! ([`SERVICE_SIZE_BOUNDS`]) — the calibrator's buckets and the
 //! `figure service-delta` rows can never drift apart.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::metrics::{
     service_size_bucket, service_size_label, SERVICE_SIZE_BOUNDS, SERVICE_SIZE_BUCKETS,
 };
+use crate::sim::fault::{FaultAction, FaultPlane};
 use crate::sim::topology::Locality;
 use crate::sim::CostModel;
 use crate::util::json::Json;
@@ -152,9 +154,25 @@ struct ClassLedger {
     bytes: u64,
 }
 
+/// Per-(node, rail) detector evidence: the implied bandwidth-fraction
+/// EMA of that one rail, plus quarantine bookkeeping (ISSUE 8).
+#[derive(Clone, Copy, Debug, Default)]
+struct RailHealth {
+    frac: Learn,
+    quarantined: bool,
+    /// Node-observation clock reading at quarantine time (the probation
+    /// timer compares against it).
+    quarantined_at_obs: u64,
+}
+
 #[derive(Debug, Default)]
 struct CalibState {
     learn: [Learn; QUANTITIES],
+    /// Calibrator-as-detector evidence, one row per observed (node, rail).
+    rail_health: HashMap<(usize, usize), RailHealth>,
+    /// Total rail observations per node — the probation clock for
+    /// quarantined-rail revival probes.
+    node_obs: HashMap<usize, u64>,
     ledger: [[ClassLedger; SERVICE_SIZE_BUCKETS]; CALIB_PATHS],
     /// Observed per-byte cost EMA per (CL flavor, class): the crossover
     /// evidence for the learned CL boundary. [0] = immediate, [1] =
@@ -177,6 +195,10 @@ struct CalibState {
 pub struct Calibrator {
     cost: Arc<CostModel>,
     cfg: CalibConfig,
+    /// Attached fault plane (ISSUE 8): present and enabled, rail
+    /// observations double as failure-detector evidence. Set once at
+    /// machine construction; `None` keeps the detector inert.
+    fault: Mutex<Option<Arc<FaultPlane>>>,
     state: Mutex<CalibState>,
 }
 
@@ -185,6 +207,7 @@ impl Calibrator {
         Calibrator {
             cost,
             cfg,
+            fault: Mutex::new(None),
             state: Mutex::new(CalibState::default()),
         }
     }
@@ -195,6 +218,14 @@ impl Calibrator {
 
     pub fn config(&self) -> &CalibConfig {
         &self.cfg
+    }
+
+    /// Attach the fault plane (machine construction). With an *enabled*
+    /// plane attached, [`Self::observe_rail`] runs the detector; without
+    /// one, rail observations only feed the learners — exactly the
+    /// pre-fault behavior.
+    pub fn set_fault_plane(&self, plane: Arc<FaultPlane>) {
+        *self.fault.lock().unwrap() = Some(plane);
     }
 
     // ------------------------------------------------------ observations --
@@ -269,26 +300,44 @@ impl Calibrator {
         st.cl_cost[if immediate_cl { 0 } else { 1 }][class].push(self.cfg.ema_alpha, per_byte_ns);
     }
 
-    /// One observed inter-node rail injection: `bytes` on one NIC rail in
-    /// `wall_ns` wall-clock nanoseconds.
-    pub fn observe_rail(&self, bytes: usize, wall_ns: f64) {
+    /// One observed inter-node rail injection: `bytes` on NIC rail `rail`
+    /// of `node` in `wall_ns` wall-clock nanoseconds.
+    ///
+    /// Doubles as the **failure detector** (ISSUE 8): per-(node, rail)
+    /// implied bandwidth fractions are EMA-tracked, and — when an enabled
+    /// [`FaultPlane`] is attached — a rail collapsing below
+    /// `fault.detect_frac` × the mean of its live peers is quarantined
+    /// (killed in the cost model: the health generation bumps, plan
+    /// caches flush, and new plans re-stripe onto the survivors), then
+    /// probationally revived `fault.probe_after` node observations later.
+    /// Returns the applied health transition, if any, so the caller can
+    /// count it into its metrics.
+    pub fn observe_rail(
+        &self,
+        node: usize,
+        rail: usize,
+        bytes: usize,
+        wall_ns: f64,
+    ) -> Option<FaultAction> {
         if !self.cfg.enable || bytes == 0 || !(wall_ns > 0.0) {
-            return;
+            return None;
         }
         let roofline = self.cost.params.nic.bw_gbs;
         if roofline <= 0.0 {
-            return;
+            return None;
         }
         let live = self.cost.model.get();
         let class = service_size_bucket(bytes as u64);
         let alpha = self.cfg.ema_alpha;
-        let do_apply = {
+        let plane = self.fault.lock().unwrap().clone();
+        let (do_apply, action) = {
             let mut st = self.state.lock().unwrap();
             let l = &mut st.ledger[PATH_RAIL][class];
             l.samples += 1;
             l.wall_ns += wall_ns;
             l.bytes += bytes as u64;
             let lane_bw = roofline * live.rail_bw_frac.clamp(0.01, 1.0);
+            let mut implied_frac = None;
             if class <= STARTUP_CLASS_MAX {
                 let implied = wall_ns - bytes as f64 / lane_bw;
                 if implied > 0.0 {
@@ -299,13 +348,97 @@ impl Calibrator {
                 if data_ns > 0.0 {
                     let implied = (bytes as f64 / (data_ns * roofline)).clamp(1e-3, 1.0);
                     st.learn[Q_RAIL_FRAC].push(alpha, implied);
+                    implied_frac = Some(implied);
                 }
             }
-            self.tick_apply(&mut st)
+            let action = match &plane {
+                Some(p) if p.enabled() => {
+                    self.rail_health_step(&mut st, p, node, rail, implied_frac)
+                }
+                _ => None,
+            };
+            (self.tick_apply(&mut st), action)
         };
         if do_apply {
             self.maybe_apply();
         }
+        action
+    }
+
+    /// One detector step (state lock held): advance the node's probation
+    /// clock, absorb the suspect's fresh implied fraction, fire a due
+    /// probation revival, then judge the suspect against its live peers.
+    /// At most one health transition per observation.
+    fn rail_health_step(
+        &self,
+        st: &mut CalibState,
+        plane: &Arc<FaultPlane>,
+        node: usize,
+        rail: usize,
+        implied_frac: Option<f64>,
+    ) -> Option<FaultAction> {
+        let fcfg = plane.config();
+        let clock = st.node_obs.entry(node).or_insert(0);
+        *clock += 1;
+        let now = *clock;
+        if let Some(f) = implied_frac {
+            let h = st.rail_health.entry((node, rail)).or_default();
+            if !h.quarantined {
+                h.frac.push(self.cfg.ema_alpha, f);
+            }
+        }
+        // Probation: revive the lowest-indexed quarantined rail on this
+        // node whose wait has reached `probe_after`. Its evidence resets,
+        // so re-judgment waits for fresh samples — a rail that is still
+        // collapsed drifts back under the threshold and is re-killed.
+        let due = st
+            .rail_health
+            .iter()
+            .filter(|((n, _), h)| {
+                *n == node
+                    && h.quarantined
+                    && now.saturating_sub(h.quarantined_at_obs) >= fcfg.probe_after
+            })
+            .map(|((_, r), _)| *r)
+            .min();
+        if let Some(r) = due {
+            let h = st.rail_health.get_mut(&(node, r)).unwrap();
+            h.quarantined = false;
+            h.frac = Learn::default();
+            if let Some(a) = plane.apply(FaultAction::ReviveRail { node, rail: r }) {
+                return Some(a);
+            }
+        }
+        // Judgment fires only on fresh suspect evidence.
+        implied_frac?;
+        let suspect = *st.rail_health.get(&(node, rail))?;
+        if suspect.quarantined || suspect.frac.samples < fcfg.detect_min_samples {
+            return None;
+        }
+        let peers: Vec<f64> = st
+            .rail_health
+            .iter()
+            .filter(|((n, r), h)| {
+                *n == node
+                    && *r != rail
+                    && !h.quarantined
+                    && h.frac.samples >= fcfg.detect_min_samples
+            })
+            .map(|(_, h)| h.frac.ema)
+            .collect();
+        if peers.is_empty() {
+            return None;
+        }
+        let peer_mean = peers.iter().sum::<f64>() / peers.len() as f64;
+        if suspect.frac.ema < fcfg.detect_frac * peer_mean {
+            if let Some(a) = plane.apply(FaultAction::KillRail { node, rail }) {
+                let h = st.rail_health.get_mut(&(node, rail)).unwrap();
+                h.quarantined = true;
+                h.quarantined_at_obs = now;
+                return Some(a);
+            }
+        }
+        None
     }
 
     /// Count one observation toward the periodic apply pass; returns true
@@ -715,6 +848,7 @@ impl CalibrationSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::fault::FaultConfig;
     use crate::sim::{CostParams, Topology};
 
     fn enabled_cfg() -> CalibConfig {
@@ -801,7 +935,7 @@ mod tests {
         for _ in 0..60 {
             for &bytes in &[2 << 10, 16 << 10, 512 << 10, 2 << 20, 8 << 20] {
                 let t = truth_rail_ns(&cal, bytes, frac_t, startup_t);
-                cal.observe_rail(bytes, t);
+                cal.observe_rail(0, 0, bytes, t);
             }
         }
         let live = cal.cost.model.get();
@@ -847,7 +981,7 @@ mod tests {
         assert!(!cal.enabled());
         let before = cal.cost.model.get();
         feed_truth(&cal, 50, 0.9, 100.0, 100.0);
-        cal.observe_rail(8 << 20, 1.0);
+        cal.observe_rail(0, 0, 8 << 20, 1.0);
         cal.refine_cl_boundary();
         assert_eq!(cal.cost.model.version(), 0);
         let after = cal.cost.model.get();
@@ -957,10 +1091,72 @@ mod tests {
     }
 
     #[test]
+    fn collapsed_rail_is_quarantined_and_probed_back() {
+        let cal = calibrator(enabled_cfg());
+        let plane = FaultPlane::new(
+            Arc::clone(&cal.cost),
+            FaultConfig {
+                enable: true,
+                detect_min_samples: 8,
+                probe_after: 24,
+                ..FaultConfig::default()
+            },
+        );
+        cal.set_fault_plane(Arc::clone(&plane));
+        let healthy = truth_rail_ns(&cal, 4 << 20, 0.5, 900.0);
+        let kill = FaultAction::KillRail { node: 0, rail: 2 };
+        let revive = FaultAction::ReviveRail { node: 0, rail: 2 };
+        let mut actions = Vec::new();
+        for _ in 0..40 {
+            for r in [0usize, 1, 3] {
+                actions.extend(cal.observe_rail(0, r, 4 << 20, healthy));
+            }
+            if !actions.contains(&kill) {
+                // Rail 2 runs 10× slower than its peers: its implied
+                // fraction collapses far below detect_frac × peer mean.
+                actions.extend(cal.observe_rail(0, 2, 4 << 20, healthy * 10.0));
+            }
+        }
+        let ki = actions.iter().position(|a| *a == kill).expect("rail 2 never quarantined");
+        let ri = actions
+            .iter()
+            .position(|a| *a == revive)
+            .expect("quarantined rail never probed back");
+        assert!(ki < ri, "probe before quarantine: {actions:?}");
+        assert_eq!(actions.len(), 2, "spurious transitions: {actions:?}");
+        // The probe revived it and no fresh evidence re-killed it.
+        assert!(cal.cost.rail_is_live(0, 2));
+        assert_eq!(cal.cost.health_generation(), 2, "kill + revive");
+        assert!(!cal.cost.degraded());
+    }
+
+    #[test]
+    fn detector_is_inert_without_an_enabled_plane() {
+        // No plane attached: collapsed evidence never kills anything.
+        let run = |cal: &Calibrator| {
+            let healthy = truth_rail_ns(cal, 4 << 20, 0.5, 900.0);
+            for _ in 0..40 {
+                for r in 0..3 {
+                    assert!(cal.observe_rail(0, r, 4 << 20, healthy).is_none());
+                }
+                assert!(cal.observe_rail(0, 3, 4 << 20, healthy * 10.0).is_none());
+            }
+            assert!(cal.cost.rail_is_live(0, 3));
+            assert_eq!(cal.cost.health_generation(), 0);
+        };
+        let cal = calibrator(enabled_cfg());
+        run(&cal);
+        // A *disabled* plane attached (the default config): still inert.
+        let cal = calibrator(enabled_cfg());
+        cal.set_fault_plane(FaultPlane::new(Arc::clone(&cal.cost), FaultConfig::default()));
+        run(&cal);
+    }
+
+    #[test]
     fn snapshot_reports_and_serializes() {
         let cal = calibrator(enabled_cfg());
         feed_truth(&cal, 20, 0.5, 4_000.0, 7_000.0);
-        cal.observe_rail(2 << 20, truth_rail_ns(&cal, 2 << 20, 0.5, 900.0));
+        cal.observe_rail(0, 0, 2 << 20, truth_rail_ns(&cal, 2 << 20, 0.5, 900.0));
         let snap = cal.snapshot();
         assert!(snap.enabled);
         assert_eq!(snap.params.len(), QUANTITIES);

@@ -217,6 +217,10 @@ struct CacheEntry {
     /// The CL boundary is re-seedable *without* a version bump
     /// (`seed_cl_boundary`), so it stamps separately.
     cl_boundary: usize,
+    /// Lane-health generation (dead/revived rails and engines) the shape
+    /// was priced under — a kill re-stripes new plans onto the survivors,
+    /// so cached widths from the healthy world must not be served.
+    health_gen: u64,
 }
 
 /// Sharded memo of structural plans. Lock-light: 8 shards keyed by
@@ -233,6 +237,7 @@ struct PlanCache {
     /// per-entry stamps make any race benign).
     stamp_version: AtomicU64,
     stamp_boundary: AtomicU64,
+    stamp_health: AtomicU64,
 }
 
 const CACHE_SHARDS: usize = 8;
@@ -248,6 +253,7 @@ impl PlanCache {
             shard_cap,
             stamp_version: AtomicU64::new(0),
             stamp_boundary: AtomicU64::new(0),
+            stamp_health: AtomicU64::new(0),
         }
     }
 
@@ -256,15 +262,17 @@ impl PlanCache {
     }
 
     /// Flush the whole population when the learned-params generation (or
-    /// the separately re-seedable CL boundary) moved since the cache was
-    /// filled. Two planners racing with different snapshots at worst
-    /// flush twice; a stale writer that sneaks an old-generation entry in
-    /// afterwards is caught by the per-entry stamp on its next lookup.
-    fn sync_generation(&self, snap: &ParamsSnapshot, metrics: &Metrics) {
+    /// the separately re-seedable CL boundary, or the lane-health
+    /// generation) moved since the cache was filled. Two planners racing
+    /// with different snapshots at worst flush twice; a stale writer that
+    /// sneaks an old-generation entry in afterwards is caught by the
+    /// per-entry stamp on its next lookup.
+    fn sync_generation(&self, snap: &ParamsSnapshot, health: u64, metrics: &Metrics) {
         let v = snap.version;
         let b = snap.params.cl_immediate_max_bytes as u64;
         if self.stamp_version.load(Ordering::Relaxed) == v
             && self.stamp_boundary.load(Ordering::Relaxed) == b
+            && self.stamp_health.load(Ordering::Relaxed) == health
         {
             return;
         }
@@ -276,20 +284,31 @@ impl PlanCache {
         }
         self.stamp_version.store(v, Ordering::Relaxed);
         self.stamp_boundary.store(b, Ordering::Relaxed);
+        self.stamp_health.store(health, Ordering::Relaxed);
         if dropped > 0 {
             Metrics::add(&metrics.plan_cache_invalidations, dropped);
         }
     }
 
-    fn lookup(&self, snap: &ParamsSnapshot, key: &PlanKey, metrics: &Metrics) -> Option<CachedShape> {
+    fn lookup(
+        &self,
+        snap: &ParamsSnapshot,
+        health: u64,
+        key: &PlanKey,
+        metrics: &Metrics,
+    ) -> Option<CachedShape> {
         if !self.cfg.enable {
             return None;
         }
-        self.sync_generation(snap, metrics);
+        self.sync_generation(snap, health, metrics);
         let boundary = snap.params.cl_immediate_max_bytes;
         let mut shard = self.shard(key).lock().unwrap();
         match shard.get(key) {
-            Some(e) if e.model_version == snap.version && e.cl_boundary == boundary => {
+            Some(e)
+                if e.model_version == snap.version
+                    && e.cl_boundary == boundary
+                    && e.health_gen == health =>
+            {
                 let s = e.shape;
                 drop(shard);
                 Metrics::add(&metrics.plan_cache_hits, 1);
@@ -310,7 +329,14 @@ impl PlanCache {
         }
     }
 
-    fn insert(&self, snap: &ParamsSnapshot, key: PlanKey, shape: CachedShape, metrics: &Metrics) {
+    fn insert(
+        &self,
+        snap: &ParamsSnapshot,
+        health: u64,
+        key: PlanKey,
+        shape: CachedShape,
+        metrics: &Metrics,
+    ) {
         if !self.cfg.enable {
             return;
         }
@@ -329,6 +355,7 @@ impl PlanCache {
                 shape,
                 model_version: snap.version,
                 cl_boundary: snap.params.cl_immediate_max_bytes,
+                health_gen: health,
             },
         );
     }
@@ -571,11 +598,12 @@ impl XferEngine {
         items: usize,
     ) -> CachedShape {
         let key = PlanKey { reachable, loc, bytes, items, shape: 0 };
-        if let Some(s) = self.cache.lookup(snap, &key, &self.metrics) {
+        let health = self.cost.health_generation();
+        if let Some(s) = self.cache.lookup(snap, health, &key, &self.metrics) {
             return s;
         }
         let s = self.compute_shape(snap, reachable, loc, bytes, items);
-        self.cache.insert(snap, key, s, &self.metrics);
+        self.cache.insert(snap, health, key, s, &self.metrics);
         s
     }
 
@@ -657,6 +685,17 @@ impl XferEngine {
                 self.cost
                     .rail_backlog_bytes(g / self.cost.topo.gpus_per_node.max(1))
             });
+            // Every rail on the source node dead: there is no alternative
+            // route for an unreachable peer, so the plan still ships over
+            // the (degenerate, width-1) NIC path — counted, not panicked.
+            if self.cost.degraded() {
+                if let Some(g) = src_gpu {
+                    let node = g / self.cost.topo.gpus_per_node.max(1);
+                    if self.cost.rail_live_count(node) == 0 {
+                        Metrics::add(&self.metrics.fault_last_lane_fallbacks, 1);
+                    }
+                }
+            }
             let plan = TransferPlan {
                 kind,
                 loc: Locality::Remote,
@@ -677,6 +716,19 @@ impl XferEngine {
         let backlog = src_gpu.map_or(0, |g| self.cost.engine_backlog_bytes(g));
         let ls = shape.ls_ns;
         let ce = shape.pure_ns + self.cost.engine_drain_ns_at(&snap.params, loc, backlog);
+        // Every copy engine on the source GPU dead: skip the cutover
+        // decision entirely and fall back to the raw-pointer load/store
+        // path (which needs no engines) — counted, not panicked.
+        if self.cost.degraded() {
+            if let Some(g) = src_gpu {
+                if self.cost.engine_live_count(g) == 0 {
+                    Metrics::add(&self.metrics.fault_last_lane_fallbacks, 1);
+                    let plan = self.bind(kind, loc, bytes, items, 1, Path::LoadStore, ls, ce, snap.version);
+                    self.count_plan(plan.route);
+                    return plan;
+                }
+            }
+        }
         let path = self.decide(BucketKey::p2p(loc, bytes, items), bytes, ls, ce, snap.version);
         let mut plan = self.bind(kind, loc, bytes, items, 1, path, ls, ce, snap.version);
         if plan.route == Route::CopyEngine {
@@ -727,16 +779,20 @@ impl XferEngine {
         }
         let ce = self.cost.ce_eff_at(&snap.params);
         let xe = &self.cost.params.xe;
+        // Dead copy engines shrink the fan-out's parallelism floor — the
+        // healthy fast path leaves the configured count untouched, so the
+        // fault-free estimate is bit-identical to the pre-fault code.
+        let engines = ce.engines_per_gpu.min(self.cost.min_live_engines());
         let mut t: f64 = 0.0;
         for &(loc, link_bytes, transfers) in &shape.per_link {
             // Startup overlaps across engines; transfers on one link share
             // its bandwidth. The executor stripes each block's chunks over
             // the engines, so the link runs at the aggregate engine rate
             // (capped at the physical link).
-            let startups = transfers.div_ceil(ce.engines_per_gpu) as f64;
+            let startups = transfers.div_ceil(engines) as f64;
             t = t.max(
                 startups * ce.startup_immediate_ns
-                    + link_bytes as f64 / ce.striped_bw_gbs(xe, loc, ce.engines_per_gpu),
+                    + link_bytes as f64 / ce.striped_bw_gbs(xe, loc, engines),
             );
         }
         if shape.nic_bytes > 0 {
@@ -777,14 +833,15 @@ impl XferEngine {
             items,
             shape: fanout_digest(shape),
         };
-        let s = self.cache.lookup(&snap, &key, &self.metrics).unwrap_or_else(|| {
+        let health = self.cost.health_generation();
+        let s = self.cache.lookup(&snap, health, &key, &self.metrics).unwrap_or_else(|| {
             let s = CachedShape {
                 chunk: bytes,
                 width: 1,
                 ls_ns: self.fanout_store_ns(shape, items),
                 pure_ns: self.fanout_engine_ns_at(&snap, shape),
             };
-            self.cache.insert(&snap, key, s, &self.metrics);
+            self.cache.insert(&snap, health, key, s, &self.metrics);
             s
         });
         let (ls, ce) = (s.ls_ns, s.pure_ns);
@@ -1579,6 +1636,69 @@ mod tests {
         assert!(
             cached.metrics.plan_cache_invalidations.load(Ordering::Relaxed) > inval_before
         );
+    }
+
+    #[test]
+    fn health_bump_never_serves_stale_plans() {
+        let cached = engine(CutoverConfig::tuned());
+        let baseline = sweep(&cached); // fill under full health
+        // Kill a rail (4 → 3 live) and enough engines to pull the stripe
+        // cap down (8 → 3 live): remote and engine-path shapes must
+        // re-price against the survivors, not the cached healthy widths.
+        let kill = |e: &XferEngine| {
+            assert!(e.cost.kill_rail(0, 1));
+            for eng in 3..8 {
+                assert!(e.cost.kill_engine(0, eng));
+            }
+        };
+        kill(&cached);
+        let oracle = engine_with_cache(
+            CutoverConfig::tuned(),
+            PlanCacheConfig { enable: false, capacity: 4096 },
+        );
+        kill(&oracle);
+        let degraded = sweep(&cached);
+        assert_eq!(degraded, sweep(&oracle), "health bump served stale plans");
+        assert_ne!(degraded, baseline, "kills must actually re-stripe the big plans");
+        assert!(
+            cached.metrics.plan_cache_invalidations.load(Ordering::Relaxed)
+                >= sweep_shapes().len() as u64
+        );
+        // Revival is a health transition too: the cache flushes again and
+        // the healed sweep is bit-identical to the pre-kill baseline.
+        assert!(cached.cost.revive_rail(0, 1));
+        for eng in 3..8 {
+            assert!(cached.cost.revive_engine(0, eng));
+        }
+        let healed = sweep(&cached);
+        assert_eq!(healed, baseline, "revival did not restore the healthy plans");
+    }
+
+    #[test]
+    fn last_lane_death_falls_back_and_counts() {
+        let e = engine(CutoverConfig::always());
+        // Kill every engine on GPU 0: even an `always` cutover must shed
+        // to the raw-pointer load/store path instead of planning onto a
+        // dead queue — counted, not panicked.
+        for eng in 0..e.cost.params.ce.engines_per_gpu {
+            assert!(e.cost.kill_engine(0, eng));
+        }
+        let p = e.plan_p2p_from(Some(0), OpKind::Put, true, Locality::SameNode, 8 << 20, 1);
+        assert_eq!(p.route, Route::LoadStore);
+        assert_eq!(e.metrics.fault_last_lane_fallbacks.load(Ordering::Relaxed), 1);
+        // A GPU with live engines keeps the engine route, no fallback.
+        let q = e.plan_p2p_from(Some(1), OpKind::Put, true, Locality::SameNode, 8 << 20, 1);
+        assert_eq!(q.route, Route::CopyEngine);
+        assert_eq!(e.metrics.fault_last_lane_fallbacks.load(Ordering::Relaxed), 1);
+        // Kill every rail on the node: unreachable peers still plan — a
+        // degenerate width-1 NIC route — and the fallback is counted.
+        for rail in 0..e.cost.params.nic.rails {
+            assert!(e.cost.kill_rail(0, rail));
+        }
+        let r = e.plan_p2p_from(Some(0), OpKind::Put, false, Locality::Remote, 8 << 20, 1);
+        assert_eq!(r.route, Route::Nic);
+        assert_eq!(r.stripe_width, 1);
+        assert_eq!(e.metrics.fault_last_lane_fallbacks.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -326,7 +326,7 @@ fn coll_workload_results(
 ) -> Vec<(Vec<u64>, Vec<u32>, Vec<u64>, Vec<u64>)> {
     let cfg = IshmemConfig {
         topology: Topology::new(2, 2, 2),
-        coll: CollConfig { algo, leader_fanout: 2 },
+        coll: CollConfig { algo, leader_fanout: 2, ..CollConfig::default() },
         ..Default::default()
     };
     run_spmd(cfg, false, |ctx| {
@@ -408,7 +408,7 @@ fn single_node_team_takes_flat_path_even_when_forced_hier() {
     for algo in [CollAlgoMode::HierRing, CollAlgoMode::HierTree] {
         let cfg = IshmemConfig {
             topology: Topology::new(1, 2, 2),
-            coll: CollConfig { algo, leader_fanout: 2 },
+            coll: CollConfig { algo, leader_fanout: 2, ..CollConfig::default() },
             ..Default::default()
         };
         let ish = Ishmem::new(cfg).unwrap();
@@ -441,7 +441,7 @@ fn single_node_team_takes_flat_path_even_when_forced_hier() {
 fn forced_hierarchical_fills_both_stages_of_the_byte_table() {
     let cfg = IshmemConfig {
         topology: Topology::new(2, 2, 2),
-        coll: CollConfig { algo: CollAlgoMode::HierRing, leader_fanout: 2 },
+        coll: CollConfig { algo: CollAlgoMode::HierRing, leader_fanout: 2, ..CollConfig::default() },
         ..Default::default()
     };
     let ish = Ishmem::new(cfg).unwrap();
@@ -493,7 +493,7 @@ fn forced_hierarchical_fills_both_stages_of_the_byte_table() {
 fn work_group_collectives_ride_the_hierarchy() {
     let cfg = IshmemConfig {
         topology: Topology::new(2, 2, 2),
-        coll: CollConfig { algo: CollAlgoMode::HierTree, leader_fanout: 2 },
+        coll: CollConfig { algo: CollAlgoMode::HierTree, leader_fanout: 2, ..CollConfig::default() },
         ..Default::default()
     };
     let ok = run_spmd(cfg, false, |ctx| {

@@ -4,7 +4,7 @@
 //! feedback under the adaptive cutover mode; and batched submission
 //! populates the batch-depth and proxy service-time metrics.
 
-use rishmem::coordinator::metrics::{PathIdx, ServiceOp, ENGINE_SLOTS};
+use rishmem::coordinator::metrics::{PathIdx, ServiceOp, ENGINE_SLOTS, RAIL_SLOTS};
 use rishmem::ishmem::CutoverConfig;
 use rishmem::util::json::Json;
 use rishmem::{Ishmem, IshmemConfig, Locality, TeamId, Topology};
@@ -432,6 +432,133 @@ fn live_calibration_populates_ledgers_and_snapshot_json() {
     assert_eq!(c.get("enabled"), Some(&Json::Bool(true)));
     assert!(c.get("params").unwrap().as_arr().unwrap().len() >= 6);
     assert!(c.get("mean_residual").unwrap().as_f64().is_some());
+}
+
+/// The traffic pattern both fault-metrics tests drive: alternating large
+/// same-node and cross-node puts from PE 0 so the proxy's op clock keeps
+/// advancing through engine-hinted batches and rail-hinted batches.
+fn fault_workload(ish: &std::sync::Arc<Ishmem>) {
+    ish.launch(|ctx| {
+        let buf = ctx.calloc::<u8>(2 << 20);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            let big = vec![7u8; 2 << 20];
+            for _ in 0..32 {
+                ctx.put(buf, &big, 2); // same-node → engine-hinted chunks
+                ctx.put(buf, &big, 4); // cross-node → rail-hinted chunks
+            }
+            ctx.quiet();
+        }
+        ctx.barrier_all();
+    });
+}
+
+#[test]
+fn fault_metrics_populated_and_json_exported() {
+    // Scripted total outage: every NIC rail on node 0 and every engine on
+    // GPU 0 dies at proxy op 12 and revives at op 24. While degraded, new
+    // same-node plans fall back to load/store and remote descriptors hit
+    // the dead-rail check — both count `fault_last_lane_fallbacks`. After
+    // the revives the machine must report fully healed (gauges at zero,
+    // degraded flag clear), and the JSON export mirrors every counter.
+    let mut cost = rishmem::sim::cost::CostParams::default();
+    cost.nic.rails = 4;
+    let rails = cost.nic.rails;
+    let engines = cost.ce.engines_per_gpu;
+    let mut cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        cost,
+        ..Default::default()
+    };
+    cfg.fault.enable = true;
+    for r in 0..rails {
+        cfg.fault.events.push(rishmem::sim::FaultEvent::kill_rail(12, 0, r));
+        cfg.fault.events.push(rishmem::sim::FaultEvent::revive_rail(24, 0, r));
+    }
+    for e in 0..engines {
+        cfg.fault.events.push(rishmem::sim::FaultEvent::kill_engine(12, 0, e));
+        cfg.fault.events.push(rishmem::sim::FaultEvent::revive_engine(24, 0, e));
+    }
+    let ish = Ishmem::new(cfg).unwrap();
+    fault_workload(&ish);
+    let snap = ish.metrics.snapshot();
+    let healed = !ish.cost.degraded();
+    ish.shutdown();
+
+    assert_eq!(snap.fault_rail_kills, rails as u64, "{snap:?}");
+    assert_eq!(snap.fault_rail_revives, rails as u64, "{snap:?}");
+    assert_eq!(snap.fault_engine_kills, engines as u64, "{snap:?}");
+    assert_eq!(snap.fault_engine_revives, engines as u64, "{snap:?}");
+    assert!(
+        snap.fault_last_lane_fallbacks >= 1,
+        "degraded window moved traffic without counting a fallback: {snap:?}"
+    );
+    assert!(healed, "revives did not clear the health masks");
+    assert_eq!(snap.degraded_mode, 0, "{snap:?}");
+    assert!(snap.rail_dead.iter().all(|&d| d == 0), "{:?}", snap.rail_dead);
+    assert!(snap.engine_dead.iter().all(|&d| d == 0), "{:?}", snap.engine_dead);
+
+    let report = snap.report();
+    assert!(report.contains("fault"), "{report}");
+    let j = Json::parse(&snap.to_json()).unwrap();
+    assert_eq!(
+        j.get("fault_rail_kills").unwrap().as_usize().unwrap(),
+        rails,
+    );
+    assert_eq!(
+        j.get("fault_engine_revives").unwrap().as_usize().unwrap(),
+        engines,
+    );
+    assert_eq!(
+        j.get("fault_last_lane_fallbacks").unwrap().as_usize().unwrap() as u64,
+        snap.fault_last_lane_fallbacks
+    );
+    assert_eq!(j.get("degraded_mode").unwrap().as_usize(), Some(0));
+    assert_eq!(j.get("rail_dead").unwrap().as_arr().unwrap().len(), RAIL_SLOTS);
+    assert_eq!(j.get("engine_dead").unwrap().as_arr().unwrap().len(), ENGINE_SLOTS);
+}
+
+#[test]
+fn disabled_fault_plane_counts_nothing() {
+    // Default config (fault.enable = false): the identical workload moves
+    // real traffic with every fault counter and lane gauge pinned at zero
+    // — the disabled plane never ticks and never re-routes.
+    let mut cost = rishmem::sim::cost::CostParams::default();
+    cost.nic.rails = 4;
+    let cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        cost,
+        ..Default::default()
+    };
+    let ish = Ishmem::new(cfg).unwrap();
+    assert!(!ish.fault.enabled());
+    fault_workload(&ish);
+    let snap = ish.metrics.snapshot();
+    let ops = ish.fault.ops();
+    ish.shutdown();
+
+    assert!(snap.puts >= 64, "workload did not run: {snap:?}");
+    assert_eq!(ops, 0, "disabled plane ticked its op clock");
+    assert_eq!(
+        (
+            snap.fault_rail_kills,
+            snap.fault_rail_revives,
+            snap.fault_engine_kills,
+            snap.fault_engine_revives,
+            snap.fault_quarantines,
+            snap.fault_probes,
+            snap.fault_redispatched_chunks,
+            snap.fault_last_lane_fallbacks,
+        ),
+        (0, 0, 0, 0, 0, 0, 0, 0),
+        "disabled fault plane counted: {snap:?}"
+    );
+    assert_eq!(snap.degraded_mode, 0, "{snap:?}");
+    assert!(snap.rail_dead.iter().chain(snap.engine_dead.iter()).all(|&d| d == 0));
 }
 
 #[test]
