@@ -15,12 +15,13 @@ bench:
     cargo bench --bench fig_coll_scale
     cargo bench --bench fig_calib
     cargo bench --bench fig_fault
+    cargo bench --bench fig_retry
     cargo bench --bench fig3_rma
     cargo bench --bench hot_path
 
 # CI smoke: the cutover + batched-submission + striped-pipeline +
 # rail-striping + collective-scaling + calibration + fault-injection +
-# hot-path benches on tiny sweeps
+# transfer-reliability + hot-path benches on tiny sweeps
 # (RISHMEM_SMOKE shrinks the size/nelem grids, the calibration round
 # count, and the plans/sec iteration counts), so the figure benches and
 # their embedded assertions (including the plan-cache speedup and
@@ -33,6 +34,7 @@ bench-smoke:
     RISHMEM_SMOKE=1 cargo bench --bench fig_coll_scale
     RISHMEM_SMOKE=1 cargo bench --bench fig_calib
     RISHMEM_SMOKE=1 cargo bench --bench fig_fault
+    RISHMEM_SMOKE=1 cargo bench --bench fig_retry
     RISHMEM_SMOKE=1 cargo bench --bench hot_path
 
 # Formatting gate (no writes).

@@ -487,6 +487,191 @@ pub fn fig_fault() -> Figure {
     fig
 }
 
+// ------------------------------------------------- retry reliability ---
+
+/// One reliability-sweep scenario for [`fig_retry`]: a 2-node machine
+/// running a fixed count of blocking remote puts per size plus a
+/// get-back verification pass, optionally under one scripted transient
+/// window. Beyond the goodput series the bench asserts the returned
+/// invariants: payload bit-identity, the attempt-histogram ↔
+/// backoff-metric identity, and the modeled retry-cost identity
+/// (`faulty − clean == Σbackoff + nacks × ring_post`).
+pub struct RetryScenario {
+    pub series: Series,
+    /// Total modeled ns across every put and get of the sweep.
+    pub modeled_ns: f64,
+    /// PE 0's per-attempt clean-completion histogram (index = attempt).
+    pub attempt_hist: [u64; 16],
+    /// Every get-back payload matched the pattern it put.
+    pub payloads_ok: bool,
+    /// Modeled cost of one ring doorbell post (the replay loop charges
+    /// one per NACK round, on top of the backoff).
+    pub ring_post_ns: f64,
+    pub snapshot: crate::coordinator::metrics::MetricsSnapshot,
+}
+
+/// Sizes swept by [`fig_retry`] and its bench.
+pub fn retry_sweep_sizes() -> Vec<usize> {
+    if super::smoke() {
+        vec![1 << 20]
+    } else {
+        vec![1 << 20, 4 << 20]
+    }
+}
+
+/// Blocking puts issued per size in a retry scenario. A fixed count, not
+/// the adaptive warm-up: the modeled totals feed exact cost identities.
+/// 24 ≥ the scripted transient period (20), and PE 0's chunks occupy
+/// consecutive proxy op-clock ticks after the opening barrier, so a
+/// period-20 window is guaranteed at least one hit regardless of how
+/// many op-clock ticks the barrier itself consumed.
+pub const RETRY_PUTS_PER_SIZE: usize = 24;
+
+/// Run one scenario (see [`RetryScenario`]). `transient` of `None` is a
+/// clean run; the window is scripted on a fresh fault plane otherwise.
+pub fn retry_scenario(
+    name: &str,
+    retry_on: bool,
+    transient: Option<crate::sim::TransientEvent>,
+) -> RetryScenario {
+    let sizes = retry_sweep_sizes();
+    let mut cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        ..Default::default()
+    };
+    cfg.retry.enable = retry_on;
+    if let Some(t) = transient {
+        cfg.fault.enable = true;
+        cfg.fault.transients = vec![t];
+    }
+    let ish = Ishmem::new(cfg).expect("fig_retry machine");
+    let ring_post_ns = ish.cost.ring_post_ns();
+    let name2 = name.to_string();
+    let sizes2 = sizes.clone();
+    let out = ish.launch(move |ctx| {
+        let max = *sizes2.iter().max().unwrap();
+        let buf = ctx.calloc::<u8>(max);
+        ctx.barrier_all();
+        if ctx.pe() != 0 {
+            return None;
+        }
+        let target = ctx.topo().pes_per_node();
+        let mut s = Series::new(&name2);
+        let mut total_ns = 0.0;
+        let mut ok = true;
+        let mut back = vec![0u8; max];
+        for &size in &sizes2 {
+            let pat: Vec<u8> = (0..size)
+                .map(|i| (i as u8).wrapping_mul(31).wrapping_add(size as u8))
+                .collect();
+            let (_, dt) = ctx.clock.time(|| {
+                for _ in 0..RETRY_PUTS_PER_SIZE {
+                    ctx.put(buf, &pat, target);
+                }
+            });
+            total_ns += dt;
+            // Bit-identity check rides the same (possibly faulty) lanes
+            // back: a silently lost chunk on either direction shows here.
+            let (_, dt_get) = ctx.clock.time(|| ctx.get(&mut back[..size], buf, target));
+            total_ns += dt_get;
+            ok &= back[..size] == pat[..];
+            s.push(size as f64, (RETRY_PUTS_PER_SIZE * size) as f64 / dt);
+        }
+        Some((s, total_ns, ctx.track.attempt_hist(), ok))
+    });
+    let snapshot = ish.metrics.snapshot();
+    ish.shutdown();
+    let (series, modeled_ns, attempt_hist, payloads_ok) =
+        out.into_iter().flatten().next().expect("PE 0 result");
+    RetryScenario { series, modeled_ns, attempt_hist, payloads_ok, ring_post_ns, snapshot }
+}
+
+/// Blocking put against a permanently-dropping lane: every chunk NACKs,
+/// every replay NACKs again, and after `retry.max_attempts` replays the
+/// op must unwind promptly with a structured [`DegradedError`] instead
+/// of hanging. Returns the caught error and the wall ms the op took to
+/// give up (the fig_retry bench asserts it beat `xfer.op_timeout_ms`).
+///
+/// [`DegradedError`]: crate::sim::DegradedError
+pub fn retry_exhaustion_probe() -> (Option<crate::sim::DegradedError>, u64) {
+    let mut cfg = IshmemConfig {
+        topology: Topology::new(2, 2, 2),
+        heap_bytes: 48 << 20,
+        ..Default::default()
+    };
+    cfg.retry.enable = true;
+    cfg.retry.max_attempts = 2;
+    cfg.retry.backoff_base_ns = 10_000;
+    cfg.fault.enable = true;
+    cfg.fault.transients = vec![crate::sim::TransientEvent::drop_chunk(1, u64::MAX, 1)];
+    cfg.xfer.op_timeout_ms = 2_000;
+    let ish = Ishmem::new(cfg).expect("retry probe machine");
+    let out = ish.launch(move |ctx| {
+        let buf = ctx.calloc::<u8>(1 << 20);
+        ctx.barrier_all();
+        if ctx.pe() != 0 {
+            return None;
+        }
+        let target = ctx.topo().pes_per_node();
+        let data = vec![0xA5u8; 1 << 20];
+        let t0 = std::time::Instant::now();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ctx.put(buf, &data, target)
+        }));
+        let waited_ms = t0.elapsed().as_millis() as u64;
+        let err = r
+            .err()
+            .and_then(|p| p.downcast::<crate::sim::DegradedError>().ok())
+            .map(|b| *b);
+        Some((err, waited_ms))
+    });
+    ish.shutdown();
+    out.into_iter().flatten().next().expect("PE 0 result")
+}
+
+/// Reliability figure (ISSUE 9): remote-put goodput with the retry layer
+/// off (the PR 8 baseline), on over clean lanes (must be bit-identical
+/// to off — checksums charge no modeled time), and on under scripted
+/// ~5% chunk drops and ~5% forced corruption (period-20 windows). The
+/// fig_retry bench asserts payload bit-identity, the backoff identities,
+/// and the exhaustion probe on top of these series.
+pub fn fig_retry() -> Figure {
+    let mut fig = Figure::new(
+        "fig-retry",
+        "transfer reliability: goodput under transient chunk faults",
+        "msg size",
+        "GB/s",
+    );
+    for sc in retry_scenarios() {
+        fig.series.push(sc.series);
+    }
+    fig
+}
+
+/// The four scenarios behind [`fig_retry`], with their full invariant
+/// payloads (the fig_retry bench asserts on these, not just the series):
+/// retry off over clean lanes (the PR 8 baseline), retry on over clean
+/// lanes (must be bit-identical — checksums charge no modeled time), and
+/// retry on under ~5% scripted chunk drops / forced corruption
+/// (period-20 transient windows, open-ended from op 1).
+pub fn retry_scenarios() -> Vec<RetryScenario> {
+    vec![
+        retry_scenario("retry-off-clean", false, None),
+        retry_scenario("retry-on-clean", true, None),
+        retry_scenario(
+            "drop-5pct",
+            true,
+            Some(crate::sim::TransientEvent::drop_chunk(1, u64::MAX, 20)),
+        ),
+        retry_scenario(
+            "corrupt-5pct",
+            true,
+            Some(crate::sim::TransientEvent::corrupt_chunk(1, u64::MAX, 20)),
+        ),
+    ]
+}
+
 /// Collective-scaling figure (ISSUE 7): modeled 1 MiB broadcast time
 /// across machine sizes — the flat per-peer fan-out against the
 /// hierarchical tile/GPU/node decomposition with ring and tree

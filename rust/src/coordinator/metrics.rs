@@ -178,6 +178,22 @@ pub struct Metrics {
     // spinning forever (PE churn).
     pub coll_decision_timeouts: AtomicU64,
     pub coll_sync_timeouts: AtomicU64,
+    // Transfer reliability (ISSUE 9): transient chunk faults the proxy
+    // applied (drop / detected-or-undetected corrupt / delay), checksum
+    // verification failures, NACKed batch completions, entries replayed,
+    // replay budgets exhausted, total modeled backoff charged, strike
+    // escalations into quarantine, and p2p op-deadline expiries. All zero
+    // while `retry.enable` is off and no transient events are scripted.
+    pub fault_dropped_chunks: AtomicU64,
+    pub fault_corrupted_chunks: AtomicU64,
+    pub fault_delayed_chunks: AtomicU64,
+    pub retry_checksum_fail: AtomicU64,
+    pub retry_nacks: AtomicU64,
+    pub retry_replays: AtomicU64,
+    pub retry_exhausted: AtomicU64,
+    pub retry_backoff_ns_total: AtomicU64,
+    pub retry_escalations: AtomicU64,
+    pub xfer_op_timeouts: AtomicU64,
     // Gauges: 1 while any lane anywhere is dead; per-slot counts of how
     // many nodes/GPUs currently have that rail/engine slot dead (indices
     // past the table clamp into the last slot, like the dispatch tables).
@@ -401,6 +417,16 @@ impl Metrics {
             fault_last_lane_fallbacks: load(&self.fault_last_lane_fallbacks),
             coll_decision_timeouts: load(&self.coll_decision_timeouts),
             coll_sync_timeouts: load(&self.coll_sync_timeouts),
+            fault_dropped_chunks: load(&self.fault_dropped_chunks),
+            fault_corrupted_chunks: load(&self.fault_corrupted_chunks),
+            fault_delayed_chunks: load(&self.fault_delayed_chunks),
+            retry_checksum_fail: load(&self.retry_checksum_fail),
+            retry_nacks: load(&self.retry_nacks),
+            retry_replays: load(&self.retry_replays),
+            retry_exhausted: load(&self.retry_exhausted),
+            retry_backoff_ns_total: load(&self.retry_backoff_ns_total),
+            retry_escalations: load(&self.retry_escalations),
+            xfer_op_timeouts: load(&self.xfer_op_timeouts),
             degraded_mode: load(&self.degraded_mode),
             rail_dead: std::array::from_fn(|i| load(&self.rail_dead[i])),
             engine_dead: std::array::from_fn(|i| load(&self.engine_dead[i])),
@@ -463,6 +489,16 @@ pub struct MetricsSnapshot {
     pub fault_last_lane_fallbacks: u64,
     pub coll_decision_timeouts: u64,
     pub coll_sync_timeouts: u64,
+    pub fault_dropped_chunks: u64,
+    pub fault_corrupted_chunks: u64,
+    pub fault_delayed_chunks: u64,
+    pub retry_checksum_fail: u64,
+    pub retry_nacks: u64,
+    pub retry_replays: u64,
+    pub retry_exhausted: u64,
+    pub retry_backoff_ns_total: u64,
+    pub retry_escalations: u64,
+    pub xfer_op_timeouts: u64,
     pub degraded_mode: u64,
     pub rail_dead: [u64; RAIL_SLOTS],
     pub engine_dead: [u64; ENGINE_SLOTS],
@@ -643,6 +679,16 @@ impl MetricsSnapshot {
         put("fault_last_lane_fallbacks", n(self.fault_last_lane_fallbacks));
         put("coll_decision_timeouts", n(self.coll_decision_timeouts));
         put("coll_sync_timeouts", n(self.coll_sync_timeouts));
+        put("fault_dropped_chunks", n(self.fault_dropped_chunks));
+        put("fault_corrupted_chunks", n(self.fault_corrupted_chunks));
+        put("fault_delayed_chunks", n(self.fault_delayed_chunks));
+        put("retry_checksum_fail", n(self.retry_checksum_fail));
+        put("retry_nacks", n(self.retry_nacks));
+        put("retry_replays", n(self.retry_replays));
+        put("retry_exhausted", n(self.retry_exhausted));
+        put("retry_backoff_ns_total", n(self.retry_backoff_ns_total));
+        put("retry_escalations", n(self.retry_escalations));
+        put("xfer_op_timeouts", n(self.xfer_op_timeouts));
         put("degraded_mode", n(self.degraded_mode));
         put("rail_dead", arr(&self.rail_dead));
         put("engine_dead", arr(&self.engine_dead));
@@ -742,6 +788,8 @@ impl MetricsSnapshot {
              fault: rail-kills={} rail-revives={} engine-kills={} engine-revives={} \
              quarantines={} probes={} redispatched={} last-lane-fallbacks={} \
              decision-timeouts={} sync-timeouts={} degraded={}\n\
+             retry: dropped={} corrupted={} delayed={} checksum-fail={} nacks={} \
+             replays={} exhausted={} backoff-ns={} escalations={} op-timeouts={}\n\
              reduce: xla-calls={} xla-elems={} native-elems={}",
             self.puts,
             self.gets,
@@ -801,6 +849,16 @@ impl MetricsSnapshot {
             self.coll_decision_timeouts,
             self.coll_sync_timeouts,
             self.degraded_mode,
+            self.fault_dropped_chunks,
+            self.fault_corrupted_chunks,
+            self.fault_delayed_chunks,
+            self.retry_checksum_fail,
+            self.retry_nacks,
+            self.retry_replays,
+            self.retry_exhausted,
+            self.retry_backoff_ns_total,
+            self.retry_escalations,
+            self.xfer_op_timeouts,
             self.xla_reduce_calls,
             self.xla_reduce_elems,
             self.native_reduce_elems,
@@ -846,6 +904,39 @@ mod tests {
         assert_eq!(j.get("plan_cache_hits").unwrap().as_usize(), Some(9));
         assert_eq!(j.get("plan_cache_misses").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("plan_cache_invalidations").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn retry_counters_roundtrip() {
+        let m = Metrics::new();
+        Metrics::add(&m.fault_dropped_chunks, 3);
+        Metrics::add(&m.fault_corrupted_chunks, 2);
+        Metrics::add(&m.fault_delayed_chunks, 1);
+        Metrics::add(&m.retry_checksum_fail, 2);
+        Metrics::add(&m.retry_nacks, 4);
+        Metrics::add(&m.retry_replays, 5);
+        Metrics::add(&m.retry_exhausted, 1);
+        Metrics::add(&m.retry_backoff_ns_total, 350_000);
+        Metrics::add(&m.retry_escalations, 1);
+        Metrics::add(&m.xfer_op_timeouts, 2);
+        let s = m.snapshot();
+        assert_eq!(
+            (s.fault_dropped_chunks, s.fault_corrupted_chunks, s.fault_delayed_chunks),
+            (3, 2, 1)
+        );
+        assert_eq!((s.retry_nacks, s.retry_replays, s.retry_exhausted), (4, 5, 1));
+        let r = s.report();
+        assert!(
+            r.contains(
+                "retry: dropped=3 corrupted=2 delayed=1 checksum-fail=2 nacks=4 \
+                 replays=5 exhausted=1 backoff-ns=350000 escalations=1 op-timeouts=2"
+            ),
+            "{r}"
+        );
+        let j = crate::util::json::Json::parse(&s.to_json()).unwrap();
+        assert_eq!(j.get("retry_replays").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("retry_backoff_ns_total").unwrap().as_usize(), Some(350_000));
+        assert_eq!(j.get("xfer_op_timeouts").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -38,7 +38,6 @@
 //! [`TransferPlan`]: crate::xfer::plan::TransferPlan
 
 use std::sync::atomic::Ordering;
-use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::{CollOpIdx, CollStage, Metrics, PathIdx};
 use crate::device::{collaborative_copy, WorkGroup};
@@ -69,33 +68,11 @@ fn bounded_wait<T>(
     team: usize,
     epoch: u64,
     pe: usize,
-    mut poll: impl FnMut() -> Option<T>,
+    poll: impl FnMut() -> Option<T>,
 ) -> Result<T, DegradedError> {
-    let deadline = (timeout_ms != 0).then(|| (Instant::now(), Duration::from_millis(timeout_ms)));
-    let mut spins = 0u64;
-    loop {
-        if let Some(v) = poll() {
-            return Ok(v);
-        }
-        if let Some((start, limit)) = deadline {
-            let waited = start.elapsed();
-            if waited >= limit {
-                return Err(DegradedError {
-                    kind,
-                    team,
-                    epoch,
-                    pe,
-                    waited_ms: waited.as_millis() as u64,
-                });
-            }
-        }
-        spins += 1;
-        if spins > 64 {
-            std::thread::yield_now();
-        } else {
-            std::hint::spin_loop();
-        }
-    }
+    crate::sim::bounded_poll(timeout_ms, poll, |waited_ms| {
+        DegradedError::collective(kind, team, epoch, pe, waited_ms)
+    })
 }
 
 impl PeCtx {
@@ -1376,7 +1353,11 @@ mod tests {
             bounded_wait(1, DegradedKind::DecisionTimeout, 5, 9, 4, || None);
         let e = r.unwrap_err();
         assert_eq!(e.kind, DegradedKind::DecisionTimeout);
-        assert_eq!((e.team, e.epoch, e.pe), (5, 9, 4));
+        assert_eq!(
+            e.scope,
+            crate::sim::DegradedScope::Collective { team: 5, epoch: 9 }
+        );
+        assert_eq!(e.pe, 4);
         assert!(e.waited_ms >= 1);
         assert!(e.to_string().contains("collective decision"));
     }

@@ -48,6 +48,59 @@ impl Default for CollConfig {
     }
 }
 
+/// Transfer-reliability knobs (`retry.*`): checksummed chunk replay with
+/// bounded exponential backoff. Off by default — a `retry.enable = false`
+/// machine stamps no checksums, never NACKs, and replays nothing, so the
+/// whole data path is bit-for-bit identical to the pre-reliability code
+/// (property-tested in `tests/prop_invariants.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryConfig {
+    /// Master switch for checksums + NACK replay.
+    pub enable: bool,
+    /// Replay budget per batch: a NACKed batch is re-posted at most this
+    /// many times before the op surfaces `DegradedError::RetryExhausted`.
+    /// Bounded by the descriptor's 4-bit attempt field (≤ 15).
+    pub max_attempts: u32,
+    /// Modeled backoff charged to the initiator clock before replay
+    /// attempt `n`: `backoff_base_ns × backoff_mult^(n-1)`.
+    pub backoff_base_ns: u64,
+    /// Exponential backoff multiplier (≥ 1.0; 1.0 = constant backoff).
+    pub backoff_mult: f64,
+    /// Consecutive transient faults on one lane before it escalates into
+    /// the PR 8 quarantine machinery (rails via the detector's probation
+    /// bookkeeping, engines as a direct kill). 0 = never escalate.
+    pub escalate_strikes: u32,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            enable: false,
+            max_attempts: 4,
+            backoff_base_ns: 50_000,
+            backoff_mult: 2.0,
+            escalate_strikes: 8,
+        }
+    }
+}
+
+/// P2p transfer knobs (`xfer.*`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct XferConfig {
+    /// Deadline for every p2p completion wait (`xfer.op_timeout_ms`):
+    /// blocking put/get, NBI quiet/fence drains, and slab-reclaim waits
+    /// poll at most this many milliseconds before surfacing a structured
+    /// `DegradedError::OpTimeout`. 0 (the default) preserves the
+    /// unbounded spin bit-for-bit.
+    pub op_timeout_ms: u64,
+}
+
+impl Default for XferConfig {
+    fn default() -> Self {
+        XferConfig { op_timeout_ms: 0 }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct IshmemConfig {
     pub topology: Topology,
@@ -120,6 +173,12 @@ pub struct IshmemConfig {
     /// default — a `fault.enable = false` machine plans bit-for-bit like
     /// the pre-fault code.
     pub fault: crate::sim::FaultConfig,
+    /// Transfer reliability (`retry.*`): payload checksums, NACK replay
+    /// with bounded exponential backoff, strike escalation into
+    /// quarantine. Off by default (bit-for-bit pre-reliability).
+    pub retry: RetryConfig,
+    /// P2p deadlines (`xfer.op_timeout_ms`). 0 = unbounded waits.
+    pub xfer: XferConfig,
 }
 
 impl Default for IshmemConfig {
@@ -143,6 +202,8 @@ impl Default for IshmemConfig {
             plan_cache: crate::xfer::plan::PlanCacheConfig::default(),
             coll: CollConfig::default(),
             fault: crate::sim::FaultConfig::default(),
+            retry: RetryConfig::default(),
+            xfer: XferConfig::default(),
         }
     }
 }
@@ -249,6 +310,32 @@ impl IshmemConfig {
             self.fault.probe_after >= 1,
             "fault.probe_after must be at least 1 (a 0-observation probation \
              would revive a quarantined rail on the very next observation)"
+        );
+        for t in &self.fault.transients {
+            anyhow::ensure!(t.period >= 1, "fault transient period must be at least 1");
+            anyhow::ensure!(
+                t.from_op <= t.until_op,
+                "fault transient window is empty (from_op > until_op)"
+            );
+            anyhow::ensure!(
+                t.min_bytes <= t.max_bytes,
+                "fault transient size filter is empty (min_bytes > max_bytes)"
+            );
+        }
+        anyhow::ensure!(
+            self.retry.max_attempts >= 1
+                && self.retry.max_attempts <= crate::ringbuf::batch::ATTEMPT_MAX as u32,
+            "retry.max_attempts must be in 1..=15 (the descriptor carries a \
+             4-bit attempt counter)"
+        );
+        anyhow::ensure!(
+            self.retry.backoff_mult >= 1.0,
+            "retry.backoff_mult below 1 would shrink the backoff per attempt"
+        );
+        anyhow::ensure!(
+            !self.retry.enable || self.max_batch_depth <= crate::xfer::stream::NACK_MASK_BITS,
+            "retry.enable needs max_batch_depth to fit the per-entry NACK mask \
+             (≤ 48 entries per batch)"
         );
         Ok(())
     }
@@ -408,6 +495,49 @@ mod tests {
         let mut cfg = IshmemConfig::default();
         cfg.fault.enable = true;
         cfg.fault.events.push(crate::sim::FaultEvent::kill_rail(8, 0, 1));
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn retry_and_xfer_knobs_validated() {
+        let cfg = IshmemConfig::default();
+        assert!(!cfg.retry.enable, "reliability layer must default off");
+        assert_eq!(cfg.xfer.op_timeout_ms, 0, "p2p waits default unbounded");
+        let mut cfg = IshmemConfig::default();
+        cfg.retry.max_attempts = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = IshmemConfig::default();
+        cfg.retry.max_attempts = 16;
+        assert!(cfg.validate().is_err(), "attempt counter is 4 bits");
+        let mut cfg = IshmemConfig::default();
+        cfg.retry.backoff_mult = 0.5;
+        assert!(cfg.validate().is_err());
+        // An enabled retry layer must fit the NACK mask.
+        let mut cfg = IshmemConfig::default();
+        cfg.retry.enable = true;
+        assert!(cfg.validate().is_ok());
+        cfg.max_batch_depth = crate::xfer::stream::NACK_MASK_BITS + 1;
+        assert!(cfg.validate().is_err());
+        // Disabled retry tolerates any legal batch depth.
+        let mut cfg = IshmemConfig::default();
+        cfg.max_batch_depth = 64;
+        cfg.staging_slab_bytes = 4 << 20;
+        assert!(cfg.validate().is_ok());
+        // Transient scripts are sanity-checked.
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.transients.push(crate::sim::TransientEvent::drop_chunk(10, 5, 1));
+        assert!(cfg.validate().is_err(), "empty op window");
+        let mut cfg = IshmemConfig::default();
+        cfg.fault
+            .transients
+            .push(crate::sim::TransientEvent::drop_chunk(0, 100, 20).with_bytes(4096, 1024));
+        assert!(cfg.validate().is_err(), "empty size filter");
+        let mut cfg = IshmemConfig::default();
+        cfg.fault.enable = true;
+        cfg.retry.enable = true;
+        cfg.fault.transients.push(
+            crate::sim::TransientEvent::corrupt_chunk(0, u64::MAX, 20).with_lane(1),
+        );
         assert!(cfg.validate().is_ok());
     }
 

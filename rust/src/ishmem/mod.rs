@@ -41,7 +41,7 @@ pub mod teams;
 pub mod types;
 pub mod workgroup;
 
-pub use config::{CollAlgoMode, CollConfig, IshmemConfig};
+pub use config::{CollAlgoMode, CollConfig, IshmemConfig, RetryConfig, XferConfig};
 pub use cutover::{CutoverConfig, CutoverMode, Path};
 pub use heap::{SymAddr, SymAllocator};
 pub use sync::Cmp;
@@ -145,6 +145,7 @@ impl Ishmem {
                     use_immediate_cl: config.use_immediate_cl,
                     calib: calib.clone(),
                     fault: fault.clone(),
+                    retry: config.retry,
                 },
             ));
             rings.push(ring);

@@ -29,9 +29,12 @@ use crate::coordinator::metrics::{Metrics, PathIdx, ServiceOp};
 use crate::ringbuf::{
     BatchDescriptor, CompletionPool, Message, RingConsumer, RingOp, COMPLETION_NONE, DESC_SIZE,
 };
-use crate::sim::{FaultAction, FaultPlane, HeapRegistry, SimClock};
+use crate::ringbuf::payload_checksum;
+use crate::sim::fault::LaneRef;
+use crate::sim::{FaultAction, FaultPlane, HeapRegistry, SimClock, TransientKind};
 use crate::sos::transport::OfiTransport;
 use crate::xfer::exec::{FLAG_RAW_PTR, PROXY_ERR_UNREGISTERED, PROXY_OK};
+use crate::xfer::stream::encode_nack;
 use crate::ze::cmdlist::{CommandList, CommandQueue, DeviceAddr};
 use crate::ze::ZeDriver;
 
@@ -60,15 +63,23 @@ pub(crate) struct ProxyShared {
     /// that died. A disabled plane (`fault.enable = false`, the default)
     /// never ticks and never re-routes.
     pub fault: Arc<FaultPlane>,
+    /// Reliability knobs (ISSUE 9): checksum verification fires only when
+    /// the initiator stamped a checksum, but the strike-escalation
+    /// threshold lives here so the proxy can quarantine repeat offenders.
+    pub retry: crate::ishmem::RetryConfig,
 }
 
 /// Advance the fault plane's op clock by one serviced descriptor and
 /// count any scripted transitions it fired into the metrics (an empty
-/// vec — the disabled fast path — costs nothing).
-fn tick_fault(sh: &ProxyShared) {
-    for a in sh.fault.tick_op() {
+/// vec — the disabled fast path — costs nothing). Returns the op number
+/// this descriptor was serviced as (0 while the plane is disabled), which
+/// keys the transient-event windows.
+fn tick_fault(sh: &ProxyShared) -> u64 {
+    let (op_no, actions) = sh.fault.tick_counted();
+    for a in actions {
         sh.metrics.count_fault_action(a, sh.fault.cost().degraded());
     }
+    op_no
 }
 
 /// Count a health transition the calibrator's detector applied: the
@@ -84,6 +95,31 @@ fn count_detector_action(sh: &ProxyShared, a: FaultAction) {
         }
     }
     sh.metrics.count_fault_action(a, sh.fault.cost().degraded());
+}
+
+/// Note one reliability strike against `lane` and, once
+/// `retry.escalate_strikes` *consecutive* strikes accumulate (0 = never),
+/// hand the repeat offender to the quarantine machinery: rails go through
+/// the calibrator's detector state so probation revival applies; engines
+/// are killed on the fault plane directly. The ledger resets on
+/// escalation and on any clean dispatch.
+fn strike_and_maybe_escalate(sh: &ProxyShared, lane: LaneRef) {
+    let count = sh.fault.note_strike(lane);
+    let limit = sh.retry.escalate_strikes;
+    if limit == 0 || count < limit {
+        return;
+    }
+    sh.fault.clear_strikes(lane);
+    let action = match lane {
+        LaneRef::Rail { node, rail } => sh.calib.escalate_rail(node, rail),
+        LaneRef::Engine { gpu, engine } => {
+            sh.fault.apply(FaultAction::KillEngine { gpu, engine })
+        }
+    };
+    if let Some(a) = action {
+        Metrics::add(&sh.metrics.retry_escalations, 1);
+        count_detector_action(sh, a);
+    }
 }
 
 /// Dispatch one intra-node engine copy on the requested command-list
@@ -317,23 +353,117 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     // Dead-lane re-dispatches performed for this batch, migrated back
     // after the lists execute (see `effective_lanes`).
     let mut moved: Vec<LaneMove> = Vec::new();
-    for d in &descs {
-        tick_fault(sh);
+    // Reliability layer (ISSUE 9): bit `i` of the NACK mask means entry
+    // `i` was dropped, corrupted, or failed checksum verification — it
+    // was never dispatched and the initiator replays it from the payload
+    // bytes still retained in its staging slab. Engines whose staged
+    // lists received any replayed/delayed entry are tainted: their
+    // execute-time wall observation would mix attempts, so it is
+    // discarded rather than fed to the calibrator.
+    let mut nack_mask: u64 = 0;
+    let mut tainted_engines: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+    let transients = sh.fault.has_transients();
+    for (i, d) in descs.iter().enumerate() {
+        let op_no = tick_fault(sh);
         let t0 = Instant::now();
         let op = d.ring_op().expect("validated by decode_block");
         let lanes = effective_lanes(sh, src_pe, d, op, &mut moved);
-        let ok = dispatch_batch_entry(
-            sh,
-            src_pe,
-            d,
-            op,
-            lanes,
-            &mut staged_cls,
-            &mut rail_clocks,
-            proxy_clock,
-        );
-        if !ok {
-            status = PROXY_ERR_UNREGISTERED;
+        let data = matches!(op, RingOp::Put | RingOp::Get);
+        let local = data && is_local(sh, src_pe, d.pe as usize);
+        let lane_ref = if local {
+            LaneRef::Engine {
+                gpu: sh.driver.cost.topo.global_gpu_of(src_pe),
+                engine: lanes.engine,
+            }
+        } else {
+            LaneRef::Rail { node: sh.driver.cost.topo.node_of(src_pe), rail: lanes.rail }
+        };
+        // Scripted transient events fire on the op clock, then stamped
+        // checksums are verified against the payload the proxy would
+        // dispatch (still held in the initiator's slab). Either failure
+        // NACKs the entry: no dispatch, replay from the retained bytes.
+        let mut nacked = false;
+        let mut delayed = false;
+        if data {
+            let mut forced_corrupt = false;
+            if transients {
+                let lane_slot = if local { lanes.engine } else { lanes.rail };
+                match sh.fault.transient_at(op_no, d.len, lane_slot) {
+                    Some(TransientKind::DropChunk) => {
+                        Metrics::add(&sh.metrics.fault_dropped_chunks, 1);
+                        nacked = true;
+                    }
+                    Some(TransientKind::CorruptChunk) => forced_corrupt = true,
+                    Some(TransientKind::DelayChunk { delay_ns }) => {
+                        Metrics::add(&sh.metrics.fault_delayed_chunks, 1);
+                        delayed = true;
+                        // The stall happens on the entry's lane, not the
+                        // proxy thread: remote delays push the rail's
+                        // in-flight sequence; local ones stall the engine
+                        // dispatch on the proxy clock.
+                        if local {
+                            proxy_clock.advance(delay_ns as f64);
+                        } else {
+                            rail_clocks
+                                .entry(lanes.rail)
+                                .or_insert_with(SimClock::new)
+                                .advance(delay_ns as f64);
+                        }
+                    }
+                    None => {}
+                }
+            }
+            if !nacked && d.has_checksum() {
+                // A CorruptChunk event forces the mismatch *without*
+                // mutating memory — the slab is also the replay source,
+                // so real corruption would poison every retry.
+                let sum_ok = !forced_corrupt && {
+                    let mut buf = vec![0u8; d.len as usize];
+                    sh.heaps.heap(src_pe).read(d.src_off as usize, &mut buf);
+                    Some(payload_checksum(&buf)) == d.checksum()
+                };
+                if !sum_ok {
+                    if forced_corrupt {
+                        Metrics::add(&sh.metrics.fault_corrupted_chunks, 1);
+                    }
+                    Metrics::add(&sh.metrics.retry_checksum_fail, 1);
+                    nacked = true;
+                }
+            } else if forced_corrupt {
+                // No stamped checksum to catch it: the corruption goes
+                // undetected and the entry dispatches as if clean (the
+                // simulated payload is never actually mutated).
+                Metrics::add(&sh.metrics.fault_corrupted_chunks, 1);
+            }
+            if nacked {
+                strike_and_maybe_escalate(sh, lane_ref);
+                if i < crate::xfer::stream::NACK_MASK_BITS {
+                    nack_mask |= 1u64 << i;
+                } else {
+                    // Beyond the mask's reach (only possible with retry
+                    // disabled, where depth is unconstrained): fall back
+                    // to the hard batch error.
+                    status = PROXY_ERR_UNREGISTERED;
+                }
+            }
+        }
+        let mut ok = true;
+        if !nacked {
+            ok = dispatch_batch_entry(
+                sh,
+                src_pe,
+                d,
+                op,
+                lanes,
+                &mut staged_cls,
+                &mut rail_clocks,
+                proxy_clock,
+            );
+            if !ok {
+                status = PROXY_ERR_UNREGISTERED;
+            } else if data && (transients || d.has_checksum()) {
+                sh.fault.clear_strikes(lane_ref);
+            }
         }
         let elapsed = t0.elapsed().as_nanos() as u64;
         sh.metrics.add_service(service_family(op), elapsed);
@@ -342,10 +472,15 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
         // descriptor (`transfer_bytes`), so every per-chunk wall charge
         // lands in exactly the (path, size-class) row of the executor's
         // one whole-transfer model charge — tail and ramped chunks
-        // included.
-        if matches!(op, RingOp::Put | RingOp::Get) {
+        // included. NACKed, delayed, and replayed (`attempt > 0`)
+        // entries are excluded outright: their wall times measure fault
+        // handling, not the lane, and feeding them to the service-delta
+        // tables or the calibrator's adaptive cells would teach the
+        // planner from garbage (ISSUE 9 satellite 1).
+        let clean = !nacked && !delayed && d.attempt() == 0;
+        if data && clean {
             let len = d.len as usize;
-            if is_local(sh, src_pe, d.pe as usize) {
+            if local {
                 sh.metrics
                     .add_service_wall(PathIdx::CopyEngine, d.transfer_bytes(), elapsed);
                 let loc = sh.driver.cost.locality(src_pe, d.pe as usize);
@@ -382,6 +517,11 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
                     }
                 }
             }
+        } else if data && local && !nacked && d.standard_cl() {
+            // The entry still executes on its staged list, but its wall
+            // time must not leak into that list's execute-time lane
+            // observation.
+            tainted_engines.insert(lanes.engine);
         }
     }
     // The per-engine lists run on *different* blitters concurrently:
@@ -406,18 +546,22 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
         // (appends + execute) per byte, bucketed at the per-entry size the
         // boundary decision is about.
         if let Some(m) = staged_meta.get(&engine) {
-            let n = m.entries.max(1);
-            sh.calib.observe_engine(
-                m.loc,
-                (m.bytes / n).max(1) as usize,
-                false,
-                elapsed as f64 / n as f64,
-            );
-            sh.calib.observe_cl_flavor(
-                m.first_len,
-                false,
-                (m.append_ns + elapsed) as f64 / m.bytes.max(1) as f64,
-            );
+            // A list that carried any replayed or delayed entry yields a
+            // mixed-attempt wall time: discard it (satellite 1).
+            if !tainted_engines.contains(&engine) {
+                let n = m.entries.max(1);
+                sh.calib.observe_engine(
+                    m.loc,
+                    (m.bytes / n).max(1) as usize,
+                    false,
+                    elapsed as f64 / n as f64,
+                );
+                sh.calib.observe_cl_flavor(
+                    m.first_len,
+                    false,
+                    (m.append_ns + elapsed) as f64 / m.bytes.max(1) as f64,
+                );
+            }
         }
     }
     // Likewise the per-rail sequences inject on different NICs.
@@ -443,6 +587,12 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     // Every few batches worth of flavor evidence may move the learned CL
     // boundary (no-op while calibration is off or evidence is thin).
     sh.calib.refine_cl_boundary();
+    // Hard errors outrank NACKs (an unregistered put can't be fixed by
+    // replaying it); otherwise a non-empty mask asks the initiator to
+    // replay exactly the failed entries.
+    if status == PROXY_OK && nack_mask != 0 {
+        status = encode_nack(nack_mask);
+    }
     complete(sh, msg, status);
 }
 

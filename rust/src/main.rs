@@ -14,8 +14,8 @@ USAGE:
   rishmem figure <ID> [--out DIR]     regenerate a paper figure
         IDs: fig3a fig3b fig4a fig4b fig5a fig5b fig5-adaptive
              fig6-4pe fig6-8pe fig6-12pe fig7a fig7b ring fig-batch
-             fig-stripe fig-rail fig-fault ablate-cl ablate-sync
-             cutover-table service-delta calibration all
+             fig-stripe fig-rail fig-fault fig-retry ablate-cl
+             ablate-sync cutover-table service-delta calibration all
         cutover-table [--load FILE] [--save FILE]: load a previously
         saved adaptive table instead of warming up / save the table
         service-delta: wall-clock vs modeled proxy service times per
@@ -27,10 +27,22 @@ USAGE:
                                       JSON for dashboard scraping),
                                       including the calibration snapshot
   rishmem fault [--json] [--pes N] [--kill-at OP] [--revive-at OP]
+                [--drop F:U:P] [--corrupt F:U:P] [--delay F:U:P:NS]
+                [--lane L] [--min-bytes N] [--max-bytes N] [--retry]
+                [--max-attempts N] [--backoff-base-ns N]
+                [--backoff-mult F] [--escalate-strikes N]
+                [--op-timeout-ms MS]
                                       fault-injection demo: kill a NIC
                                       rail + a copy engine mid-workload,
                                       revive them later, dump per-lane
-                                      health + degraded-mode metrics
+                                      health + degraded-mode metrics.
+                                      Transient windows (F:U:P = from-op,
+                                      until-op, period; U=0 means forever;
+                                      period 20 ~ 5% of chunks) drop,
+                                      corrupt or delay chunks; --lane /
+                                      --min-bytes / --max-bytes filter
+                                      them; --retry turns on checksummed
+                                      replay with bounded backoff
   rishmem train [--model M] [--pes N] [--steps S] [--lr F] [--seed K]
                                       data-parallel training (e2e driver)
   rishmem ze-peer                     raw Level-Zero copy-engine baseline
@@ -132,6 +144,7 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "fig-stripe" => vec![figures::fig_stripe()],
         "fig-rail" => vec![figures::fig_rail()],
         "fig-fault" => vec![figures::fig_fault()],
+        "fig-retry" => vec![figures::fig_retry()],
         "fig-coll-scale" => vec![figures::fig_coll_scale()],
         "ablate-cl" => vec![figures::ablate_cmdlists()],
         "ablate-sync" => vec![figures::ablate_sync()],
@@ -193,12 +206,41 @@ fn cmd_metrics(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a transient-window spec `FROM:UNTIL:PERIOD[:DELAY_NS]` (the
+/// CLI's mirror of `fault.transients`; `UNTIL = 0` means forever).
+fn parse_transient(kind: &str, spec: &str) -> anyhow::Result<rishmem::sim::TransientEvent> {
+    use rishmem::sim::TransientEvent;
+    let parts: Vec<&str> = spec.split(':').collect();
+    let want = if kind == "delay" { 4 } else { 3 };
+    anyhow::ensure!(
+        parts.len() == want,
+        "--{kind} expects {}, got {spec:?}",
+        if kind == "delay" { "FROM:UNTIL:PERIOD:DELAY_NS" } else { "FROM:UNTIL:PERIOD" }
+    );
+    let num = |i: usize| -> anyhow::Result<u64> {
+        parts[i]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{kind}: bad field {:?}: {e}", parts[i]))
+    };
+    let (from, until, period) = (num(0)?, num(1)?, num(2)?);
+    let until = if until == 0 { u64::MAX } else { until };
+    Ok(match kind {
+        "drop" => TransientEvent::drop_chunk(from, until, period),
+        "corrupt" => TransientEvent::corrupt_chunk(from, until, period),
+        "delay" => TransientEvent::delay_chunk(from, until, period, num(3)?),
+        _ => unreachable!(),
+    })
+}
+
 /// Scripted fault-injection demo: run a put-heavy workload with a fault
 /// plane that kills NIC rail (0,1) and copy engine (0,0) at `--kill-at`
 /// proxy ops and revives both at `--revive-at`, then dump the metrics
 /// snapshot — per-lane health gauges, kill/revive counters,
 /// re-dispatched chunks and the degraded-mode flag. `--json` for
-/// dashboard scraping.
+/// dashboard scraping. Transient windows (`--drop/--corrupt/--delay`,
+/// with `--lane`/`--min-bytes`/`--max-bytes` filters) exercise the
+/// ISSUE 9 reliability layer; pair them with `--retry` so dropped and
+/// corrupted chunks are replayed instead of failing the batch.
 fn cmd_fault(args: &[String]) -> anyhow::Result<()> {
     use rishmem::sim::FaultEvent;
     use rishmem::{Ishmem, IshmemConfig};
@@ -216,11 +258,62 @@ fn cmd_fault(args: &[String]) -> anyhow::Result<()> {
         FaultEvent::revive_rail(revive_at, 0, 1),
         FaultEvent::revive_engine(revive_at, 0, 0),
     ];
+    let mut transients = Vec::new();
+    for kind in ["drop", "corrupt", "delay"] {
+        if let Some(spec) = kv.get(kind).filter(|v| !v.is_empty()) {
+            transients.push(parse_transient(kind, spec)?);
+        }
+    }
+    if !transients.is_empty() {
+        let min: u64 = kv.get("min-bytes").map_or(Ok(0), |v| v.parse())?;
+        let max: u64 = kv.get("max-bytes").map_or(Ok(u64::MAX), |v| v.parse())?;
+        let lane: Option<usize> = match kv.get("lane").filter(|v| !v.is_empty()) {
+            Some(v) => Some(v.parse()?),
+            None => None,
+        };
+        transients = transients
+            .into_iter()
+            .map(|t| {
+                let t = t.with_bytes(min, max);
+                match lane {
+                    Some(l) => t.with_lane(l),
+                    None => t,
+                }
+            })
+            .collect();
+    }
+    cfg.fault.transients = transients;
+    if kv.contains_key("retry") {
+        cfg.retry.enable = true;
+    }
+    if let Some(v) = kv.get("max-attempts").filter(|v| !v.is_empty()) {
+        cfg.retry.max_attempts = v.parse()?;
+    }
+    if let Some(v) = kv.get("backoff-base-ns").filter(|v| !v.is_empty()) {
+        cfg.retry.backoff_base_ns = v.parse()?;
+    }
+    if let Some(v) = kv.get("backoff-mult").filter(|v| !v.is_empty()) {
+        cfg.retry.backoff_mult = v.parse()?;
+    }
+    if let Some(v) = kv.get("escalate-strikes").filter(|v| !v.is_empty()) {
+        cfg.retry.escalate_strikes = v.parse()?;
+    }
+    if let Some(v) = kv.get("op-timeout-ms").filter(|v| !v.is_empty()) {
+        cfg.xfer.op_timeout_ms = v.parse()?;
+    }
+    let n_transients = cfg.fault.transients.len();
+    let retry_on = cfg.retry.enable;
     let ish = Ishmem::new(cfg)?;
     if !json {
         println!(
             "fault demo: kill rail(0,1) + engine(0,0) @ op {kill_at}, revive @ op {revive_at}"
         );
+        if n_transients > 0 {
+            println!(
+                "  {n_transients} transient window(s), retry {}",
+                if retry_on { "on" } else { "off" }
+            );
+        }
     }
     ish.launch(|ctx| {
         let buf = ctx.calloc::<u8>(4 << 20);

@@ -32,6 +32,41 @@ pub const DESC_FLAG_CHUNKED: u16 = 1 << 10;
 /// Widest chunk index / chunk count the continuation field can carry.
 pub const CHUNK_FIELD_MAX: u32 = (1 << 24) - 1;
 
+/// Descriptor flag: this entry carries a payload checksum the proxy must
+/// verify before dispatch (reliability layer, `retry.enable`). Where the
+/// 16-bit sum lives depends on the entry shape — see
+/// [`BatchDescriptor::with_checksum`].
+pub const DESC_FLAG_CHECKSUM: u16 = 1 << 11;
+
+/// Bit position of the 4-bit replay-attempt counter inside `flags`
+/// (bits 12–15). Attempt 0 is the first transmission; replays stamp
+/// 1, 2, … so the proxy can tag its wall-time observations and the
+/// calibrator can discard retried samples.
+pub const ATTEMPT_SHIFT: u16 = 12;
+
+/// Widest replay attempt the flag field can carry (bounds
+/// `retry.max_attempts`).
+pub const ATTEMPT_MAX: u16 = 0xF;
+
+/// Low 48 bits of `inline_val2`: the whole-transfer byte count on
+/// chunked entries once a checksum occupies the top 16 bits.
+pub const TRANSFER_BYTES_MAX: u64 = (1 << 48) - 1;
+
+/// 16-bit payload checksum: 64-bit FNV-1a folded by XOR into 16 bits.
+/// Not cryptographic — it exists to catch staging/fabric corruption of a
+/// chunk's bytes, exactly like a NIC-level CRC would, and to give the
+/// fault plane a deterministic verification point to force-fail.
+pub fn payload_checksum(bytes: &[u8]) -> u16 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    (h ^ (h >> 16) ^ (h >> 32) ^ (h >> 48)) as u16
+}
+
 /// One batched-operation descriptor. Offsets are symmetric-heap byte
 /// offsets: `src_off`/`dst_off` never carry raw pointers — raw-pointer
 /// payloads are staged through the slab before the descriptor is written,
@@ -108,6 +143,10 @@ impl BatchDescriptor {
     /// shape purely to carry their engine placement to the proxy.
     pub fn with_chunk(mut self, index: u32, count: u32, engine: u8) -> Self {
         assert!(index <= CHUNK_FIELD_MAX && count <= CHUNK_FIELD_MAX, "chunk field overflow");
+        assert!(
+            self.flags & DESC_FLAG_CHECKSUM == 0,
+            "with_chunk overwrites inline_val: stamp the checksum last"
+        );
         self.flags |= DESC_FLAG_CHUNKED;
         self.inline_val =
             index as u64 | ((count as u64) << 24) | ((engine as u64) << 48);
@@ -159,19 +198,81 @@ impl BatchDescriptor {
     /// service ledger buckets every chunk by its transfer's size, exactly
     /// matching the executor's one whole-transfer model charge.
     pub fn with_transfer_bytes(mut self, bytes: u64) -> Self {
+        assert!(
+            self.flags & DESC_FLAG_CHECKSUM == 0,
+            "with_transfer_bytes overwrites inline_val2: stamp the checksum last"
+        );
         self.inline_val2 = bytes;
         self
     }
 
     /// Byte count of the whole transfer this entry belongs to: the
     /// stamped total for chunked entries, the entry's own length
-    /// otherwise.
+    /// otherwise. When a checksum occupies the top 16 bits of
+    /// `inline_val2` only the low 48 count (transfers above 256 TiB per
+    /// call do not exist in this machine).
     pub fn transfer_bytes(&self) -> u64 {
-        if self.is_chunked() && self.inline_val2 > 0 {
+        let stamped = if self.has_checksum() && self.is_chunked() {
+            self.inline_val2 & TRANSFER_BYTES_MAX
+        } else {
             self.inline_val2
+        };
+        if self.is_chunked() && stamped > 0 {
+            stamped
         } else {
             self.len
         }
+    }
+
+    /// Stamp a payload checksum on a Put-shaped entry. Must be applied
+    /// *after* `with_chunk`/`with_transfer_bytes` (those overwrite the
+    /// fields the sum packs into): chunked entries keep their
+    /// continuation word, so the sum rides the top 16 bits of
+    /// `inline_val2` (transfer bytes keep the low 48); un-chunked puts
+    /// park it in the low 16 bits of the otherwise-unused `inline_val`.
+    pub fn with_checksum(mut self, sum: u16) -> Self {
+        if self.is_chunked() {
+            assert!(
+                self.inline_val2 <= TRANSFER_BYTES_MAX,
+                "transfer_bytes overflows the 48-bit checksum layout"
+            );
+            self.inline_val2 |= (sum as u64) << 48;
+        } else {
+            self.inline_val = (self.inline_val & !0xFFFF) | sum as u64;
+        }
+        self.flags |= DESC_FLAG_CHECKSUM;
+        self
+    }
+
+    /// Whether a checksum is stamped on this entry.
+    pub fn has_checksum(&self) -> bool {
+        self.flags & DESC_FLAG_CHECKSUM != 0
+    }
+
+    /// The stamped payload checksum, if any.
+    pub fn checksum(&self) -> Option<u16> {
+        if !self.has_checksum() {
+            return None;
+        }
+        Some(if self.is_chunked() {
+            (self.inline_val2 >> 48) as u16
+        } else {
+            (self.inline_val & 0xFFFF) as u16
+        })
+    }
+
+    /// Stamp the replay-attempt counter (0 = first transmission). The
+    /// replay loop re-posts NACKed entries with 1, 2, …; saturates at
+    /// [`ATTEMPT_MAX`], which `retry.max_attempts` is validated against.
+    pub fn with_attempt(mut self, attempt: u16) -> Self {
+        assert!(attempt <= ATTEMPT_MAX, "attempt counter overflow");
+        self.flags = (self.flags & !(ATTEMPT_MAX << ATTEMPT_SHIFT)) | (attempt << ATTEMPT_SHIFT);
+        self
+    }
+
+    /// Replay attempt this entry is on (0 = first transmission).
+    pub fn attempt(&self) -> u16 {
+        (self.flags >> ATTEMPT_SHIFT) & ATTEMPT_MAX
     }
 
     /// Whether this entry asks for a standard command list.
@@ -322,6 +423,60 @@ mod tests {
         assert_eq!(d.flags & 0xFF, AmoKind::Add as u8 as u16);
         assert_eq!((d.inline_val, d.inline_val2), (42, 9));
         assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
+    }
+
+    #[test]
+    fn checksum_packs_without_disturbing_continuation_fields() {
+        // Chunked: sum rides inline_val2[48..64], transfer bytes keep 48.
+        let d = BatchDescriptor::put(3, 4096, 8192, 1 << 20)
+            .with_chunk(5, 9, 6)
+            .with_transfer_bytes(9 << 20)
+            .with_checksum(0xBEEF);
+        assert!(d.has_checksum());
+        assert_eq!(d.checksum(), Some(0xBEEF));
+        assert_eq!(d.chunk_index(), 5);
+        assert_eq!(d.chunk_count(), 9);
+        assert_eq!(d.engine_hint(), 6);
+        assert_eq!(d.transfer_bytes(), 9 << 20);
+        assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
+        // Un-chunked: sum parks in inline_val's low 16 bits.
+        let p = BatchDescriptor::put(1, 0, 0, 256).with_checksum(0x1234);
+        assert_eq!(p.checksum(), Some(0x1234));
+        assert_eq!(p.transfer_bytes(), 256);
+        // No flag → no sum, even with residue in the field.
+        let bare = BatchDescriptor::put(1, 0, 0, 8);
+        assert_eq!(bare.checksum(), None);
+    }
+
+    #[test]
+    fn attempt_counter_roundtrips_and_saturates_at_max() {
+        let d = BatchDescriptor::put(0, 0, 0, 64);
+        assert_eq!(d.attempt(), 0);
+        for a in 0..=ATTEMPT_MAX {
+            let r = d.with_attempt(a);
+            assert_eq!(r.attempt(), a);
+            assert_eq!(BatchDescriptor::from_bytes(&r.to_bytes()), Some(r));
+        }
+        // Re-stamping replaces, never accumulates.
+        assert_eq!(d.with_attempt(3).with_attempt(1).attempt(), 1);
+        // Attempt bits leave the CL/chunk/checksum flags alone.
+        let rich = BatchDescriptor::put(0, 0, 0, 64)
+            .with_standard_cl(true)
+            .with_checksum(0xFFFF)
+            .with_attempt(ATTEMPT_MAX);
+        assert!(rich.standard_cl() && rich.has_checksum());
+        assert_eq!(rich.checksum(), Some(0xFFFF));
+    }
+
+    #[test]
+    fn payload_checksum_detects_single_byte_flips() {
+        let payload: Vec<u8> = (0..4096u32).map(|i| (i * 31 + 7) as u8).collect();
+        let sum = payload_checksum(&payload);
+        assert_eq!(payload_checksum(&payload), sum, "deterministic");
+        let mut flipped = payload.clone();
+        flipped[1234] ^= 0x01;
+        assert_ne!(payload_checksum(&flipped), sum, "single bit flip must change the sum");
+        assert_ne!(payload_checksum(&[]), payload_checksum(&[0]), "length-extension aware");
     }
 
     #[test]

@@ -18,7 +18,10 @@ pub mod completion;
 pub mod message;
 pub mod ring;
 
-pub use batch::{BatchDescriptor, CHUNK_FIELD_MAX, DESC_FLAG_CHUNKED, DESC_FLAG_STANDARD_CL, DESC_SIZE};
+pub use batch::{
+    payload_checksum, BatchDescriptor, ATTEMPT_MAX, CHUNK_FIELD_MAX, DESC_FLAG_CHECKSUM,
+    DESC_FLAG_CHUNKED, DESC_FLAG_STANDARD_CL, DESC_SIZE,
+};
 pub use completion::{CompletionPool, CompletionToken, COMPLETION_NONE};
 pub use message::{Message, RingOp, MSG_SIZE};
 pub use ring::{Ring, RingConsumer};

@@ -22,10 +22,30 @@
 //! * [`DegradedError`] — the structured error the collective decision
 //!   registry and sync paths return when a peer never shows up within
 //!   the configured deadline, instead of spinning forever.
+//!
+//! ISSUE 9 widens the plane from *permanent* lane transitions to
+//! *transient* per-chunk anomalies:
+//!
+//! * [`TransientEvent`] — a scripted window `[from_op, until_op]` on the
+//!   same proxy op clock in which every `period`-th serviced data entry
+//!   (optionally filtered by payload size and lane) is dropped, corrupted,
+//!   or delayed ([`TransientKind`]). Drop/corrupt surface as proxy NACKs
+//!   that the initiator's replay loop retries from the retained staging
+//!   slab; delay charges extra nanoseconds to the lane clock.
+//! * Strike ledger — repeat transient offenders escalate: once a lane
+//!   accumulates `retry.escalate_strikes` consecutive faulted chunks it is
+//!   handed to the PR 8 quarantine machinery (rails through the
+//!   calibrator's probation bookkeeping, engines as a direct kill).
+//! * [`DegradedScope`]/[`bounded_poll`] — the deadline machinery grows a
+//!   p2p face: blocking ops, quiet/fence drains, and slab-reclaim waits
+//!   poll under `xfer.op_timeout_ms` and surface a structured
+//!   [`DegradedError`] naming the op, route, lane, and attempt count.
 
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::cost::CostModel;
 
@@ -64,6 +84,99 @@ impl FaultEvent {
     }
 }
 
+/// What a transient event does to the data entry it fires on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransientKind {
+    /// The proxy never dispatches the chunk: NACK, payload stays in the
+    /// initiator's staging slab for replay.
+    DropChunk,
+    /// The chunk's payload checksum verification is forced to fail (the
+    /// slab bytes themselves are left pristine — the slab *is* the replay
+    /// source, so real mutation would poison every retry): NACK + replay.
+    CorruptChunk,
+    /// The chunk dispatches, but its lane clock is charged `delay_ns`
+    /// extra (a fabric hiccup). No NACK; the wall-time observation is
+    /// discarded so the calibrator never learns the inflated sample.
+    DelayChunk { delay_ns: u64 },
+}
+
+/// A scripted *transient* anomaly window on the proxy op clock. Within
+/// `[from_op, until_op]` (inclusive; `u64::MAX` = forever), every
+/// `period`-th eligible data entry fires the kind — period 20 models a
+/// deterministic 5% loss rate. Size and lane filters narrow eligibility.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransientEvent {
+    pub kind: TransientKind,
+    pub from_op: u64,
+    pub until_op: u64,
+    /// Fire when `(op - from_op) % period == 0`; must be ≥ 1. Period 1
+    /// faults every eligible entry (a permanently-dropping lane).
+    pub period: u64,
+    /// Payload-size eligibility window, bytes (inclusive).
+    pub min_bytes: u64,
+    pub max_bytes: u64,
+    /// Restrict to one lane slot (engine hint / rail hint); `None` = any.
+    pub lane: Option<usize>,
+}
+
+impl TransientEvent {
+    fn new(kind: TransientKind, from_op: u64, until_op: u64, period: u64) -> Self {
+        TransientEvent {
+            kind,
+            from_op,
+            until_op,
+            period: period.max(1),
+            min_bytes: 0,
+            max_bytes: u64::MAX,
+            lane: None,
+        }
+    }
+
+    pub fn drop_chunk(from_op: u64, until_op: u64, period: u64) -> Self {
+        Self::new(TransientKind::DropChunk, from_op, until_op, period)
+    }
+
+    pub fn corrupt_chunk(from_op: u64, until_op: u64, period: u64) -> Self {
+        Self::new(TransientKind::CorruptChunk, from_op, until_op, period)
+    }
+
+    pub fn delay_chunk(from_op: u64, until_op: u64, period: u64, delay_ns: u64) -> Self {
+        Self::new(TransientKind::DelayChunk { delay_ns }, from_op, until_op, period)
+    }
+
+    /// Narrow eligibility to payloads in `[min, max]` bytes.
+    pub fn with_bytes(mut self, min: u64, max: u64) -> Self {
+        self.min_bytes = min;
+        self.max_bytes = max;
+        self
+    }
+
+    /// Narrow eligibility to one lane slot.
+    pub fn with_lane(mut self, lane: usize) -> Self {
+        self.lane = Some(lane);
+        self
+    }
+
+    /// Whether this event fires for a data entry serviced at proxy op
+    /// `op` with `bytes` payload on lane slot `lane`.
+    pub fn fires(&self, op: u64, bytes: u64, lane: usize) -> bool {
+        op >= self.from_op
+            && op <= self.until_op
+            && (op - self.from_op) % self.period == 0
+            && bytes >= self.min_bytes
+            && bytes <= self.max_bytes
+            && self.lane.map_or(true, |l| l == lane)
+    }
+}
+
+/// A lane identity for the strike ledger (which physical queue keeps
+/// eating transient faults).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LaneRef {
+    Rail { node: usize, rail: usize },
+    Engine { gpu: usize, engine: usize },
+}
+
 /// The `fault.*` knob surface (validated in `ishmem::config`).
 #[derive(Clone, Debug)]
 pub struct FaultConfig {
@@ -84,6 +197,9 @@ pub struct FaultConfig {
     pub probe_after: u64,
     /// Scripted transitions, fired by proxy op count.
     pub events: Vec<FaultEvent>,
+    /// Scripted transient anomaly windows (drop/corrupt/delay), matched
+    /// per serviced data entry by op count, payload size, and lane.
+    pub transients: Vec<TransientEvent>,
 }
 
 impl Default for FaultConfig {
@@ -94,6 +210,7 @@ impl Default for FaultConfig {
             detect_min_samples: 48,
             probe_after: 512,
             events: Vec::new(),
+            transients: Vec::new(),
         }
     }
 }
@@ -110,6 +227,10 @@ pub struct FaultPlane {
     /// Cursor into the (sorted) event script; events are claimed by CAS
     /// so concurrent proxy threads fire each exactly once.
     next_event: AtomicUsize,
+    /// Consecutive-transient-fault counts per lane. A clean dispatch
+    /// resets a lane's count; crossing `retry.escalate_strikes` hands
+    /// the lane to the quarantine machinery.
+    strikes: Mutex<HashMap<LaneRef, u32>>,
 }
 
 impl FaultPlane {
@@ -123,6 +244,7 @@ impl FaultPlane {
             cfg,
             ops: AtomicU64::new(0),
             next_event: AtomicUsize::new(0),
+            strikes: Mutex::new(HashMap::new()),
         })
     }
 
@@ -149,8 +271,16 @@ impl FaultPlane {
     /// (including the fast path of a disabled plane, which does not even
     /// count the op; `Vec::new` never allocates).
     pub fn tick_op(&self) -> Vec<FaultAction> {
+        self.tick_counted().1
+    }
+
+    /// [`Self::tick_op`], additionally returning the op number this tick
+    /// landed on (0 while disabled). The proxy threads the op number into
+    /// [`Self::transient_at`] so concurrent proxies can't mis-attribute
+    /// another thread's tick to their own descriptor.
+    pub fn tick_counted(&self) -> (u64, Vec<FaultAction>) {
         if !self.cfg.enable {
-            return Vec::new();
+            return (0, Vec::new());
         }
         let op = self.ops.fetch_add(1, Ordering::AcqRel) + 1;
         let mut applied = Vec::new();
@@ -169,7 +299,49 @@ impl FaultPlane {
                 }
             }
         }
-        applied
+        (op, applied)
+    }
+
+    /// The transient anomaly (if any) scripted for a data entry serviced
+    /// at proxy op `op` with `bytes` payload on lane slot `lane`. First
+    /// matching window wins (script order = priority). Never fires while
+    /// the plane is disabled or before the first real tick (`op == 0`).
+    pub fn transient_at(&self, op: u64, bytes: u64, lane: usize) -> Option<TransientKind> {
+        if !self.cfg.enable || op == 0 {
+            return None;
+        }
+        self.cfg
+            .transients
+            .iter()
+            .find(|t| t.fires(op, bytes, lane))
+            .map(|t| t.kind)
+    }
+
+    /// Whether any transient windows are scripted at all (lets the proxy
+    /// skip the per-entry scan on the common healthy path).
+    pub fn has_transients(&self) -> bool {
+        self.cfg.enable && !self.cfg.transients.is_empty()
+    }
+
+    /// Record one transient fault against `lane`; returns the lane's new
+    /// consecutive-strike count so the caller can compare it to
+    /// `retry.escalate_strikes` and escalate into quarantine.
+    pub fn note_strike(&self, lane: LaneRef) -> u32 {
+        let mut s = self.strikes.lock().unwrap();
+        let n = s.entry(lane).or_insert(0);
+        *n += 1;
+        *n
+    }
+
+    /// A clean dispatch on `lane`: forgive its accumulated strikes
+    /// (escalation is about *consecutive* failures, not lifetime totals).
+    pub fn clear_strikes(&self, lane: LaneRef) {
+        self.strikes.lock().unwrap().remove(&lane);
+    }
+
+    /// Current consecutive-strike count for `lane` (observability/tests).
+    pub fn strikes(&self, lane: LaneRef) -> u32 {
+        self.strikes.lock().unwrap().get(&lane).copied().unwrap_or(0)
     }
 
     /// Apply one action directly (CLI / tests / the detector's revival
@@ -185,7 +357,7 @@ impl FaultPlane {
     }
 }
 
-/// Why a collective wait gave up.
+/// Why a deadline-bounded wait gave up.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DegradedKind {
     /// The per-(team, epoch) decision registry never saw the leader's
@@ -193,40 +365,145 @@ pub enum DegradedKind {
     DecisionTimeout,
     /// A team sync round never saw every peer arrive within the deadline.
     SyncTimeout,
+    /// A p2p op's proxy completion never arrived within
+    /// `xfer.op_timeout_ms` (blocking put/get, quiet/fence drain, or a
+    /// slab-reclaim wait).
+    OpTimeout,
+    /// A NACKed batch burned through `retry.max_attempts` replays without
+    /// a clean completion.
+    RetryExhausted,
 }
 
-/// Structured degraded-mode error: a collective wait exceeded its
-/// configured deadline (PE churn / a dead peer), instead of spinning the
-/// thread forever.
+/// Where a degraded wait happened: the collective machinery (PR 8) or
+/// the p2p transfer path (ISSUE 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradedScope {
+    Collective {
+        /// Team the wait belonged to.
+        team: usize,
+        /// Collective epoch (per-team op sequence number) of the wait.
+        epoch: u64,
+    },
+    P2p {
+        /// Static op name ("put", "get", "quiet", "batch-flush", …).
+        op: &'static str,
+        /// Static route name ("engine", "rail", "proxy", …).
+        route: &'static str,
+        /// Lane slot the op was bound for (0 when unknown/any).
+        lane: usize,
+        /// Replay attempts consumed when the wait gave up (0 = first
+        /// transmission was still pending).
+        attempts: u32,
+    },
+}
+
+/// Structured degraded-mode error: a bounded wait exceeded its configured
+/// deadline (PE churn, a dead peer, or a lane that eats every replay),
+/// instead of spinning the thread forever.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DegradedError {
     pub kind: DegradedKind,
-    /// Team the wait belonged to.
-    pub team: usize,
-    /// Collective epoch (per-team op sequence number) of the wait.
-    pub epoch: u64,
+    pub scope: DegradedScope,
     /// PE that gave up waiting.
     pub pe: usize,
-    /// How long it waited before giving up, ms.
+    /// How long it waited before giving up, ms (modeled backoff total for
+    /// `RetryExhausted`).
     pub waited_ms: u64,
+}
+
+impl DegradedError {
+    /// Builder for the collective scope (keeps PR 8 call sites terse).
+    pub fn collective(kind: DegradedKind, team: usize, epoch: u64, pe: usize, waited_ms: u64) -> Self {
+        DegradedError { kind, scope: DegradedScope::Collective { team, epoch }, pe, waited_ms }
+    }
+
+    /// Builder for the p2p scope.
+    pub fn p2p(
+        kind: DegradedKind,
+        op: &'static str,
+        route: &'static str,
+        lane: usize,
+        attempts: u32,
+        pe: usize,
+        waited_ms: u64,
+    ) -> Self {
+        DegradedError { kind, scope: DegradedScope::P2p { op, route, lane, attempts }, pe, waited_ms }
+    }
 }
 
 impl fmt::Display for DegradedError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let what = match self.kind {
-            DegradedKind::DecisionTimeout => "collective decision",
-            DegradedKind::SyncTimeout => "team sync",
-        };
-        write!(
-            f,
-            "degraded mode: {what} timed out after {}ms (team {}, epoch {}, pe {}) — \
-             a peer died or churned out mid-collective",
-            self.waited_ms, self.team, self.epoch, self.pe
-        )
+        match (self.kind, self.scope) {
+            (kind, DegradedScope::Collective { team, epoch }) => {
+                let what = match kind {
+                    DegradedKind::DecisionTimeout => "collective decision",
+                    DegradedKind::SyncTimeout => "team sync",
+                    DegradedKind::OpTimeout => "collective wait",
+                    DegradedKind::RetryExhausted => "collective replay",
+                };
+                write!(
+                    f,
+                    "degraded mode: {what} timed out after {}ms (team {}, epoch {}, pe {}) — \
+                     a peer died or churned out mid-collective",
+                    self.waited_ms, team, epoch, self.pe
+                )
+            }
+            (DegradedKind::RetryExhausted, DegradedScope::P2p { op, route, lane, attempts }) => {
+                write!(
+                    f,
+                    "degraded mode: {op} on {route} lane {lane} exhausted its replay budget \
+                     ({attempts} attempts, ~{}ms modeled backoff, pe {}) — \
+                     the lane is eating every retry",
+                    self.waited_ms, self.pe
+                )
+            }
+            (_, DegradedScope::P2p { op, route, lane, attempts }) => {
+                write!(
+                    f,
+                    "degraded mode: {op} on {route} lane {lane} timed out after {}ms \
+                     (pe {}, {attempts} replay attempts) — \
+                     the proxy never completed the op",
+                    self.waited_ms, self.pe
+                )
+            }
+        }
     }
 }
 
 impl std::error::Error for DegradedError {}
+
+/// Poll `poll` until it yields a value or the deadline expires. Both
+/// paths escalate from busy spinning to `yield_now` after 64 empty polls
+/// (PE threads routinely outnumber cores; a pure spin could livelock a
+/// wait whose producer is scheduled out). `timeout_ms == 0` means
+/// *unbounded*: the wall clock is never consulted, preserving the
+/// bit-for-bit disabled-is-identical guarantee. On expiry, `err` builds
+/// the structured error from the measured wait in ms.
+pub fn bounded_poll<T>(
+    timeout_ms: u64,
+    mut poll: impl FnMut() -> Option<T>,
+    err: impl FnOnce(u64) -> DegradedError,
+) -> Result<T, DegradedError> {
+    let deadline =
+        (timeout_ms != 0).then(|| (Instant::now(), Duration::from_millis(timeout_ms)));
+    let mut spins = 0u32;
+    loop {
+        if let Some(v) = poll() {
+            return Ok(v);
+        }
+        if let Some((start, limit)) = deadline {
+            if start.elapsed() >= limit {
+                return Err(err(start.elapsed().as_millis() as u64));
+            }
+        }
+        spins += 1;
+        if spins < 64 {
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -303,17 +580,121 @@ mod tests {
 
     #[test]
     fn degraded_error_is_structured_and_displayable() {
-        let e = DegradedError {
-            kind: DegradedKind::DecisionTimeout,
-            team: 3,
-            epoch: 17,
-            pe: 5,
-            waited_ms: 250,
-        };
+        let e = DegradedError::collective(DegradedKind::DecisionTimeout, 3, 17, 5, 250);
         let msg = e.to_string();
         assert!(msg.contains("collective decision"), "{msg}");
         assert!(msg.contains("team 3") && msg.contains("epoch 17"), "{msg}");
         let s = DegradedError { kind: DegradedKind::SyncTimeout, ..e };
         assert!(s.to_string().contains("team sync"));
+        // P2p scope names the op, route, lane, and attempt count.
+        let p = DegradedError::p2p(DegradedKind::OpTimeout, "put", "rail", 2, 3, 7, 400);
+        assert_eq!(
+            p.scope,
+            DegradedScope::P2p { op: "put", route: "rail", lane: 2, attempts: 3 }
+        );
+        let msg = p.to_string();
+        assert!(msg.contains("put") && msg.contains("rail lane 2"), "{msg}");
+        assert!(msg.contains("3 replay attempts"), "{msg}");
+        let x = DegradedError::p2p(DegradedKind::RetryExhausted, "put", "rail", 1, 4, 0, 12);
+        let msg = x.to_string();
+        assert!(msg.contains("exhausted its replay budget"), "{msg}");
+        assert!(msg.contains("4 attempts"), "{msg}");
+    }
+
+    #[test]
+    fn transient_windows_fire_on_period_and_filters() {
+        let t = TransientEvent::drop_chunk(10, 20, 5);
+        // In-window period hits: 10, 15, 20.
+        assert!(t.fires(10, 64, 0) && t.fires(15, 64, 3) && t.fires(20, 64, 0));
+        // Off-period / out-of-window misses.
+        assert!(!t.fires(11, 64, 0) && !t.fires(9, 64, 0) && !t.fires(25, 64, 0));
+        // Size filter.
+        let big = TransientEvent::corrupt_chunk(0, u64::MAX, 1).with_bytes(1 << 20, u64::MAX);
+        assert!(big.fires(1, 1 << 20, 0) && !big.fires(1, 4096, 0));
+        // Lane filter.
+        let lane1 = TransientEvent::delay_chunk(0, u64::MAX, 1, 500).with_lane(1);
+        assert!(lane1.fires(1, 64, 1) && !lane1.fires(1, 64, 0));
+        assert_eq!(lane1.kind, TransientKind::DelayChunk { delay_ns: 500 });
+        // Period 0 is clamped to 1 (fires every eligible op).
+        assert_eq!(TransientEvent::drop_chunk(0, 10, 0).period, 1);
+    }
+
+    #[test]
+    fn plane_transient_lookup_respects_enable_and_order() {
+        let c = cost();
+        let cfg = FaultConfig {
+            enable: true,
+            transients: vec![
+                TransientEvent::drop_chunk(5, 10, 1).with_lane(0),
+                TransientEvent::corrupt_chunk(5, 10, 1),
+            ],
+            ..FaultConfig::default()
+        };
+        let plane = FaultPlane::new(Arc::clone(&c), cfg);
+        assert!(plane.has_transients());
+        // First matching window wins: lane 0 drops, other lanes corrupt.
+        assert_eq!(plane.transient_at(5, 64, 0), Some(TransientKind::DropChunk));
+        assert_eq!(plane.transient_at(5, 64, 1), Some(TransientKind::CorruptChunk));
+        assert_eq!(plane.transient_at(4, 64, 0), None);
+        assert_eq!(plane.transient_at(0, 64, 0), None, "op 0 = disabled tick");
+        // A disabled plane never fires transients.
+        let off = FaultPlane::new(
+            cost(),
+            FaultConfig {
+                transients: vec![TransientEvent::drop_chunk(0, u64::MAX, 1)],
+                ..FaultConfig::default()
+            },
+        );
+        assert!(!off.has_transients());
+        assert_eq!(off.transient_at(5, 64, 0), None);
+    }
+
+    #[test]
+    fn strike_ledger_counts_consecutive_and_forgives_on_success() {
+        let plane = FaultPlane::new(
+            cost(),
+            FaultConfig { enable: true, ..FaultConfig::default() },
+        );
+        let rail = LaneRef::Rail { node: 0, rail: 1 };
+        let engine = LaneRef::Engine { gpu: 0, engine: 0 };
+        assert_eq!(plane.note_strike(rail), 1);
+        assert_eq!(plane.note_strike(rail), 2);
+        assert_eq!(plane.note_strike(engine), 1, "lanes are independent");
+        plane.clear_strikes(rail);
+        assert_eq!(plane.strikes(rail), 0);
+        assert_eq!(plane.strikes(engine), 1);
+        assert_eq!(plane.note_strike(rail), 1, "count restarts after a clean dispatch");
+    }
+
+    #[test]
+    fn tick_counted_reports_the_op_number() {
+        let plane = FaultPlane::new(
+            cost(),
+            FaultConfig { enable: true, ..FaultConfig::default() },
+        );
+        assert_eq!(plane.tick_counted().0, 1);
+        assert_eq!(plane.tick_counted().0, 2);
+        let off = FaultPlane::new(cost(), FaultConfig::default());
+        assert_eq!(off.tick_counted(), (0, Vec::new()));
+    }
+
+    #[test]
+    fn bounded_poll_returns_value_or_structured_timeout() {
+        // Immediate value, bounded or not.
+        assert_eq!(bounded_poll(0, || Some(7), |_| unreachable!()).unwrap(), 7);
+        assert_eq!(bounded_poll(50, || Some(7), |_| unreachable!()).unwrap(), 7);
+        // A never-ready poll under a short deadline surfaces the error.
+        let e = bounded_poll::<()>(
+            1,
+            || None,
+            |ms| DegradedError::p2p(DegradedKind::OpTimeout, "put", "rail", 0, 0, 3, ms),
+        )
+        .unwrap_err();
+        assert_eq!(e.kind, DegradedKind::OpTimeout);
+        assert!(e.waited_ms >= 1);
+        // Eventually-ready polls succeed before the deadline.
+        let mut n = 0;
+        let v = bounded_poll(1_000, || { n += 1; (n > 10).then_some(n) }, |_| unreachable!());
+        assert_eq!(v.unwrap(), 11);
     }
 }

@@ -25,7 +25,10 @@ pub mod xelink;
 
 pub use clock::SimClock;
 pub use cost::{CollAlgo, CollEstimates, CollOp, CollShape, CostModel, CostParams};
-pub use fault::{DegradedError, DegradedKind, FaultAction, FaultConfig, FaultEvent, FaultPlane};
+pub use fault::{
+    bounded_poll, DegradedError, DegradedKind, DegradedScope, FaultAction, FaultConfig, FaultEvent,
+    FaultPlane, LaneRef, TransientEvent, TransientKind,
+};
 pub use memory::{HeapRegistry, SymHeap};
 pub use params::{LearnedParams, ModelParams, ParamsSnapshot};
 pub use rail::RailSet;

@@ -35,18 +35,33 @@ use crate::sim::memory::HeapRegistry;
 /// once nothing is outstanding the cursor rewinds to the base, so the
 /// arena never fragments. The slab is per-PE state (like `PeCtx` itself,
 /// `!Sync`), so plain `Cell`s suffice.
+///
+/// Reliability note (`retry.enable`): claims are released only when a
+/// batch's *completion* is acknowledged, never at staging — which is what
+/// makes a chunk's payload bytes still be in the slab, pristine, when a
+/// NACK demands an idempotent replay. The retention high-water mark below
+/// makes that hold-until-ack behavior observable to tests and benches.
 #[derive(Debug)]
 pub struct StagingSlab {
     base: usize,
     bytes: usize,
     cursor: Cell<usize>,
     live_allocs: Cell<usize>,
+    /// Deepest the bump cursor has ever reached (bytes): how much payload
+    /// the slab has had to retain at once awaiting completion-acks.
+    high_water: Cell<usize>,
 }
 
 impl StagingSlab {
     /// A slab covering `[base, base + bytes)` of the owning PE's heap.
     pub fn new(base: usize, bytes: usize) -> Self {
-        StagingSlab { base, bytes, cursor: Cell::new(0), live_allocs: Cell::new(0) }
+        StagingSlab {
+            base,
+            bytes,
+            cursor: Cell::new(0),
+            live_allocs: Cell::new(0),
+            high_water: Cell::new(0),
+        }
     }
 
     /// Total slab capacity, bytes.
@@ -76,7 +91,18 @@ impl StagingSlab {
         }
         self.cursor.set(end);
         self.live_allocs.set(self.live_allocs.get() + 1);
+        self.high_water.set(self.high_water.get().max(end));
         Some(self.base + start)
+    }
+
+    /// Bytes currently retained awaiting completion-acks (cursor depth).
+    pub fn retained_bytes(&self) -> usize {
+        self.cursor.get()
+    }
+
+    /// Deepest retention the slab has ever seen, bytes.
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water.get()
     }
 
     /// Release one claim from a retired batch. When nothing remains
@@ -328,11 +354,18 @@ mod tests {
         // Exhaustion: a claim that cannot fit fails without side effects.
         assert!(slab.try_alloc(4096).is_none());
         assert_eq!(slab.outstanding(), 2);
+        // Retention is observable while claims await their acks.
+        assert!(slab.retained_bytes() >= 200);
+        let deepest = slab.retained_bytes();
         // Full release rewinds the cursor: the arena is reusable.
         slab.release();
         slab.release();
         assert_eq!(slab.outstanding(), 0);
+        assert_eq!(slab.retained_bytes(), 0, "rewind empties retention");
         assert_eq!(slab.try_alloc(4096).unwrap(), 1 << 20);
+        // The high-water mark survives the rewind and tracks the deepest
+        // simultaneous retention ever seen.
+        assert_eq!(slab.high_water_bytes(), deepest.max(4096));
         slab.release();
     }
 

@@ -441,6 +441,26 @@ impl Calibrator {
         None
     }
 
+    /// Reliability-layer escalation hook (ISSUE 9): the proxy's strike
+    /// ledger hands a repeat-offender rail here once it crosses
+    /// `retry.escalate_strikes`. The rail is killed on the fault plane
+    /// *through* the detector's quarantine state — exactly as if the
+    /// implied-bandwidth judge had condemned it — so the normal
+    /// `fault.probe_after` probation revival applies while calibration
+    /// feeds observations. With `calib.enable` off the node's observation
+    /// clock never advances, so an escalated rail stays down until a
+    /// scripted `ReviveRail` event (documented in the xfer README).
+    pub fn escalate_rail(&self, node: usize, rail: usize) -> Option<FaultAction> {
+        let plane = self.fault.lock().unwrap().clone()?;
+        let mut st = self.state.lock().unwrap();
+        let now = st.node_obs.get(&node).copied().unwrap_or(0);
+        let a = plane.apply(FaultAction::KillRail { node, rail })?;
+        let h = st.rail_health.entry((node, rail)).or_default();
+        h.quarantined = true;
+        h.quarantined_at_obs = now;
+        Some(a)
+    }
+
     /// Count one observation toward the periodic apply pass; returns true
     /// once per `min_samples` observations.
     fn tick_apply(&self, st: &mut CalibState) -> bool {

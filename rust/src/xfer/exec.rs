@@ -50,9 +50,28 @@ use super::plan::{OpKind, Route, TransferPlan};
 /// initiator's private buffer), not a symmetric-heap offset.
 pub(crate) const FLAG_RAW_PTR: u16 = 1 << 8;
 
-/// Completion payloads for non-fetching proxied ops.
+/// Completion payloads for non-fetching proxied ops. `PROXY_NACK` is the
+/// reliability layer's "checksum verification failed / chunk dropped"
+/// status: the low byte is the code, the bits above it a per-entry
+/// failure mask (`stream::{encode_nack, decode_nack}`).
 pub(crate) const PROXY_OK: u64 = 0;
 pub(crate) const PROXY_ERR_UNREGISTERED: u64 = 1;
+pub(crate) const PROXY_NACK: u64 = 2;
+
+/// Static op name for a ring message byte (deadline error reporting).
+pub(crate) fn proxy_op_name(op: u8) -> &'static str {
+    match RingOp::from_u8(op) {
+        Some(RingOp::Put) => "put",
+        Some(RingOp::Get) => "get",
+        Some(RingOp::PutInline) => "put-inline",
+        Some(RingOp::Amo) => "amo",
+        Some(RingOp::Quiet) => "quiet",
+        Some(RingOp::PutSignal) => "put-signal",
+        Some(RingOp::Barrier) => "barrier",
+        Some(RingOp::Batch) => "batch",
+        _ => "proxied-op",
+    }
+}
 
 /// Uniform chunk geometry of a striped transfer: yields `(idx, offset,
 /// len)` for every chunk. Used by the collectives fan-out, which assigns
@@ -163,9 +182,12 @@ impl PeCtx {
         let token = pool.alloc();
         msg.completion = token.index;
         msg.src_pe = self.pe() as u32;
+        let what = proxy_op_name(msg.op);
         Metrics::add(&self.rt.metrics.ring_messages, 1);
         self.ring().send(msg);
-        pool.wait(token)
+        // Deadline-bounded under `xfer.op_timeout_ms` (0 = the original
+        // unbounded spin, bit-for-bit).
+        self.proxy_wait_completion(token, what, 0)
     }
 
     /// Post a fire-and-forget ring message (tracked so `quiet` flushes

@@ -24,18 +24,64 @@
 //! descriptor block is one slab claim; when a batch's completion arrives
 //! the claims are released and the arena rewinds once idle.
 //!
+//! **Reliability layer** (`retry.enable`, ISSUE 9): every Put-shaped
+//! entry is stamped with a payload checksum at append; the proxy verifies
+//! it before dispatch and answers a *NACK* status carrying a per-entry
+//! failure mask instead of panicking. Because slab claims are held until
+//! completion-ack, the NACKed entries' payload bytes are still in the
+//! slab, pristine — the retire loop charges a modeled exponential backoff
+//! (`retry.backoff_base_ns × retry.backoff_mult^(n−1)`), re-encodes just
+//! the failed descriptors with a bumped attempt counter, and re-posts
+//! them as a fresh batch, up to `retry.max_attempts` times before
+//! surfacing a structured [`DegradedError`]. Independently,
+//! `xfer.op_timeout_ms` bounds every completion wait on the p2p path
+//! (blocking flushes, quiet/fence drains, slab-reclaim retires) — both
+//! knobs default off, keeping the pre-reliability path bit-for-bit.
+//!
 //! [`TransferPlan`]: super::plan::TransferPlan
 //! [`BatchDescriptor`]: crate::ringbuf::BatchDescriptor
 //! [`StagingSlab`]: crate::sos::heap::StagingSlab
+//! [`DegradedError`]: crate::sim::fault::DegradedError
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
 
 use crate::coordinator::metrics::Metrics;
+use crate::ishmem::config::RetryConfig;
 use crate::ishmem::PeCtx;
-use crate::ringbuf::{BatchDescriptor, CompletionToken, Message, RingOp, DESC_SIZE};
+use crate::ringbuf::{payload_checksum, BatchDescriptor, CompletionToken, Message, RingOp, DESC_SIZE};
+use crate::sim::fault::{bounded_poll, DegradedError, DegradedKind};
 
-use super::exec::{PROXY_ERR_UNREGISTERED, PROXY_OK};
+use super::exec::{PROXY_ERR_UNREGISTERED, PROXY_NACK, PROXY_OK};
+
+/// Entries a batch NACK status can address: the completion value packs
+/// the status code in the low byte and a per-entry failure bitmask above
+/// it. `retry.enable` therefore requires `max_batch_depth ≤ 48`
+/// (validated in `ishmem::config`).
+pub const NACK_MASK_BITS: usize = 48;
+
+/// Compose a NACK completion status from a non-empty failure mask.
+pub(crate) fn encode_nack(mask: u64) -> u64 {
+    debug_assert!(mask != 0 && mask < 1 << NACK_MASK_BITS);
+    PROXY_NACK | (mask << 8)
+}
+
+/// Decode a completion status as a NACK mask, if it is one.
+pub(crate) fn decode_nack(status: u64) -> Option<u64> {
+    (status & 0xFF == PROXY_NACK).then(|| status >> 8)
+}
+
+/// Modeled backoff charged to the initiator clock before replay attempt
+/// `attempt` (1-based): `base × mult^(attempt−1)`. Repeated
+/// multiplication, not `powf`, so the figure benches can predict the
+/// metric total bit-exactly.
+pub fn retry_backoff_ns(cfg: &RetryConfig, attempt: u32) -> u64 {
+    let mut ns = cfg.backoff_base_ns as f64;
+    for _ in 1..attempt {
+        ns *= cfg.backoff_mult;
+    }
+    ns as u64
+}
 
 /// Pending (not yet flushed) batch entry: the wire descriptor plus the
 /// number of staging-slab claims its payload holds.
@@ -45,12 +91,17 @@ struct PendingEntry {
     slab_claims: usize,
 }
 
-/// A posted-but-unretired batch: its completion token and the slab claims
-/// (entries + descriptor block) to release when it completes.
+/// A posted-but-unretired batch: its completion token, the slab claims
+/// (entries + descriptor blocks) to release when it completes, the
+/// descriptors it carried (the replay loop re-posts NACKed ones — their
+/// payloads are still pinned in the slab by the unreleased claims), and
+/// which replay attempt this posting is (0 = first transmission).
 #[derive(Debug)]
 struct InflightBatch {
     token: CompletionToken,
     slab_claims: usize,
+    descs: Vec<BatchDescriptor>,
+    attempt: u32,
 }
 
 /// Per-(initiator, work-group) command stream. `PeCtx` is `!Sync` and all
@@ -190,6 +241,7 @@ impl PeCtx {
     /// large (`stream.large_flush_bytes` — the size-adaptive depth: tiny
     /// descriptors batch deep, a big chunk ships at once).
     pub(crate) fn stream_append(&self, desc: BatchDescriptor, slab_claims: usize) {
+        let desc = self.stream_stamp_checksum(desc);
         self.clock.advance(self.rt.cost.staging_copy_ns(DESC_SIZE));
         let large = desc.len as usize >= self.stream.large_flush_bytes();
         let depth = {
@@ -202,12 +254,29 @@ impl PeCtx {
         }
     }
 
+    /// Stamp a payload checksum on a Put-shaped entry (reliability layer).
+    /// The source is always an initiator-heap offset at this point (slab
+    /// stage or user heap — raw pointers never reach the batch path), so
+    /// the bytes the proxy will read are exactly the bytes summed here.
+    /// Gets are excluded (their payload doesn't exist yet); inline puts
+    /// and AMOs carry their payload in the descriptor itself. A disabled
+    /// `retry.enable` stamps nothing — descriptors stay bit-for-bit.
+    fn stream_stamp_checksum(&self, desc: BatchDescriptor) -> BatchDescriptor {
+        if !self.rt.config.retry.enable || desc.op != RingOp::Put as u8 || desc.len == 0 {
+            return desc;
+        }
+        let mut buf = vec![0u8; desc.len as usize];
+        self.rt.heaps.heap(self.pe()).read(desc.src_off as usize, &mut buf);
+        desc.with_checksum(payload_checksum(&buf))
+    }
+
     // ----------------------------------------------------------- flushes --
 
     /// Write the pending descriptors into a slab block and post the one
-    /// `Batch` doorbell. Returns the completion token and the batch's
-    /// total slab claims; `None` when nothing is pending.
-    fn stream_post_batch(&self) -> Option<(CompletionToken, usize)> {
+    /// `Batch` doorbell. Returns the completion token, the batch's total
+    /// slab claims, and its descriptors (kept for NACK replay); `None`
+    /// when nothing is pending.
+    fn stream_post_batch(&self) -> Option<(CompletionToken, usize, Vec<BatchDescriptor>)> {
         let entries: Vec<PendingEntry> = {
             let mut pending = self.stream.pending.borrow_mut();
             if pending.is_empty() {
@@ -246,18 +315,18 @@ impl PeCtx {
         m.completion = token.index;
         Metrics::add(&self.rt.metrics.ring_messages, 1);
         self.ring().send(m);
-        Some((token, claims))
+        Some((token, claims, descs))
     }
 
     /// Fire-and-forget flush: one doorbell for the pending plan-group;
     /// completion is tracked in-flight so `quiet` (or a later capacity
     /// squeeze) retires it. Charges one ring post for the whole group.
     pub(crate) fn stream_flush_ff(&self) {
-        if let Some((token, slab_claims)) = self.stream_post_batch() {
+        if let Some((token, slab_claims, descs)) = self.stream_post_batch() {
             self.stream
                 .inflight
                 .borrow_mut()
-                .push_back(InflightBatch { token, slab_claims });
+                .push_back(InflightBatch { token, slab_claims, descs, attempt: 0 });
             self.clock.advance(self.rt.cost.ring_post_ns());
         }
     }
@@ -277,18 +346,149 @@ impl PeCtx {
         }
     }
 
+    /// Wait on one proxy completion under the `xfer.op_timeout_ms`
+    /// deadline. Timeout 0 (the default) is the pre-deadline unbounded
+    /// spin, bit-for-bit. On expiry the op counts `xfer_op_timeouts` and
+    /// unwinds with a structured [`DegradedError`] (`panic_any`, so
+    /// harnesses can downcast it). The completion slot is deliberately
+    /// *leaked* on timeout: the proxy may still complete it later, and
+    /// freeing a pending slot would let a stale completion corrupt its
+    /// next user.
+    pub(crate) fn proxy_wait_completion(
+        &self,
+        token: CompletionToken,
+        what: &'static str,
+        attempts: u32,
+    ) -> u64 {
+        let timeout_ms = self.rt.config.xfer.op_timeout_ms;
+        if timeout_ms == 0 {
+            return self.completions().wait(token);
+        }
+        let pool = self.completions();
+        match bounded_poll(
+            timeout_ms,
+            || pool.try_wait(&token),
+            |ms| DegradedError::p2p(DegradedKind::OpTimeout, what, "proxy", 0, attempts, self.pe(), ms),
+        ) {
+            Ok(_) => pool.finish(token),
+            Err(e) => {
+                Metrics::add(&self.rt.metrics.xfer_op_timeouts, 1);
+                std::panic::panic_any(e);
+            }
+        }
+    }
+
+    /// Retire one posted batch: wait (deadline-bounded), and on a clean
+    /// status release its slab claims. A NACK status instead drives the
+    /// replay loop — charge the modeled backoff, re-encode exactly the
+    /// failed entries with a bumped attempt counter (their payloads are
+    /// still pinned in the slab), post them as a fresh batch, and wait
+    /// again — until the status is clean or `retry.max_attempts` replays
+    /// are spent, which unwinds with `DegradedError::RetryExhausted`.
+    fn stream_retire_batch(&self, mut batch: InflightBatch, what: &'static str) {
+        let mut backoff_total_ns = 0u64;
+        loop {
+            let status = self.proxy_wait_completion(batch.token, what, batch.attempt);
+            let mask = match decode_nack(status) {
+                None => {
+                    self.check_batch_status(status);
+                    if self.rt.config.retry.enable {
+                        self.track.note_attempt(batch.attempt);
+                    }
+                    for _ in 0..batch.slab_claims {
+                        self.slab.release();
+                    }
+                    return;
+                }
+                Some(mask) => mask,
+            };
+            let rcfg = self.rt.config.retry;
+            assert!(
+                rcfg.enable,
+                "proxy NACKed a batch while retry.enable is off — the checksum \
+                 machinery should be dormant (status {status:#x})"
+            );
+            let failed: Vec<BatchDescriptor> = batch
+                .descs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| (mask >> i) & 1 == 1)
+                .map(|(_, d)| *d)
+                .collect();
+            assert!(!failed.is_empty(), "NACK status carried an empty entry mask");
+            Metrics::add(&self.rt.metrics.retry_nacks, 1);
+            let attempt = batch.attempt + 1;
+            if attempt > rcfg.max_attempts {
+                Metrics::add(&self.rt.metrics.retry_exhausted, 1);
+                let d = failed[0];
+                let route = if self.rt.topo().node_of(d.pe as usize) == self.node() {
+                    "engine"
+                } else {
+                    "rail"
+                };
+                std::panic::panic_any(DegradedError::p2p(
+                    DegradedKind::RetryExhausted,
+                    what,
+                    route,
+                    d.engine_hint(),
+                    batch.attempt,
+                    self.pe(),
+                    backoff_total_ns / 1_000_000,
+                ));
+            }
+            let backoff = retry_backoff_ns(&rcfg, attempt);
+            backoff_total_ns += backoff;
+            self.clock.advance(backoff as f64);
+            Metrics::add(&self.rt.metrics.retry_backoff_ns_total, backoff);
+            Metrics::add(&self.rt.metrics.retry_replays, failed.len() as u64);
+            self.track.note_replayed(failed.len() as u64);
+            // Idempotent replay: the original payload claims were never
+            // released, so every failed entry's src_off still points at
+            // its pristine staged bytes. Only a fresh descriptor block is
+            // allocated (one more claim, released with the rest on the
+            // clean completion).
+            let descs: Vec<BatchDescriptor> =
+                failed.iter().map(|d| d.with_attempt(attempt as u16)).collect();
+            let block_len = descs.len() * DESC_SIZE;
+            let block_off = self
+                .slab
+                .try_alloc(block_len)
+                .expect("staging slab cannot hold a replay descriptor block");
+            self.rt
+                .heaps
+                .heap(self.pe())
+                .write(block_off, &BatchDescriptor::encode_block(&descs));
+            let pool = self.completions().clone();
+            let token = pool.alloc();
+            let mut m = Message::nop();
+            m.op = RingOp::Batch as u8;
+            m.src_pe = self.pe() as u32;
+            m.dst_off = block_off as u64;
+            m.len = descs.len() as u64;
+            m.completion = token.index;
+            Metrics::add(&self.rt.metrics.ring_messages, 1);
+            self.ring().send(m);
+            self.clock.advance(self.rt.cost.ring_post_ns());
+            batch = InflightBatch {
+                token,
+                slab_claims: batch.slab_claims + 1,
+                descs,
+                attempt,
+            };
+        }
+    }
+
     /// Blocking flush: retire everything in flight, post the pending
     /// plan-group, and wait for its completion. The ring is FIFO per
     /// node, so on return every earlier entry of this PE is serviced.
     /// Callers charge the modeled route cost themselves.
     pub(crate) fn stream_flush_blocking(&self) {
         self.stream_drain_inflight();
-        if let Some((token, slab_claims)) = self.stream_post_batch() {
-            let status = self.completions().wait(token);
-            self.check_batch_status(status);
-            for _ in 0..slab_claims {
-                self.slab.release();
-            }
+        if let Some((token, slab_claims, descs)) = self.stream_post_batch() {
+            self.stream_retire_batch(
+                InflightBatch { token, slab_claims, descs, attempt: 0 },
+                "batch-flush",
+            );
         }
     }
 
@@ -302,11 +502,7 @@ impl PeCtx {
                 Some(b) => b,
                 None => break,
             };
-            let status = self.completions().wait(batch.token);
-            self.check_batch_status(status);
-            for _ in 0..batch.slab_claims {
-                self.slab.release();
-            }
+            self.stream_retire_batch(batch, "batch-drain");
             drained += 1;
         }
         drained
@@ -357,6 +553,33 @@ mod tests {
     #[should_panic(expected = "at least 1")]
     fn zero_depth_rejected() {
         CmdStream::new(0);
+    }
+
+    #[test]
+    fn nack_status_codec_roundtrips() {
+        for mask in [1u64, 0b1010, 1 << 47, (1 << 48) - 1] {
+            let status = encode_nack(mask);
+            assert_eq!(decode_nack(status), Some(mask), "mask {mask:#x}");
+            assert_ne!(status & 0xFF, PROXY_OK, "NACK must not read as OK");
+            assert_ne!(status & 0xFF, PROXY_ERR_UNREGISTERED);
+        }
+        assert_eq!(decode_nack(PROXY_OK), None);
+        assert_eq!(decode_nack(PROXY_ERR_UNREGISTERED), None);
+    }
+
+    #[test]
+    fn backoff_schedule_is_exponential_and_deterministic() {
+        let cfg = RetryConfig {
+            backoff_base_ns: 1000,
+            backoff_mult: 2.0,
+            ..RetryConfig::default()
+        };
+        assert_eq!(retry_backoff_ns(&cfg, 1), 1000);
+        assert_eq!(retry_backoff_ns(&cfg, 2), 2000);
+        assert_eq!(retry_backoff_ns(&cfg, 4), 8000);
+        // mult 1.0 = constant backoff.
+        let flat = RetryConfig { backoff_mult: 1.0, ..cfg };
+        assert_eq!(retry_backoff_ns(&flat, 1), retry_backoff_ns(&flat, 7));
     }
 
     #[test]

@@ -47,6 +47,13 @@ pub struct CompletionTracker {
     /// Chunks of striped NBI transfers whose single aggregated completion
     /// is still outstanding.
     outstanding_chunks: Cell<u64>,
+    /// Replay ledger (reliability layer): entries re-posted after a NACK,
+    /// since the last drain.
+    replayed_entries: Cell<u64>,
+    /// Per-attempt completion histogram: `attempt_hist[a]` counts batches
+    /// that completed cleanly on attempt `a` (0 = first transmission).
+    /// Sized by the descriptor's 4-bit attempt field.
+    attempt_hist: RefCell<[u64; 16]>,
 }
 
 impl CompletionTracker {
@@ -134,6 +141,34 @@ impl CompletionTracker {
     pub fn take_chunks(&self) -> u64 {
         self.outstanding_chunks.replace(0)
     }
+
+    /// Record `n` entries re-posted after a NACK (replay loop).
+    pub fn note_replayed(&self, n: u64) {
+        self.replayed_entries.set(self.replayed_entries.get() + n);
+    }
+
+    /// Entries replayed since the last drain.
+    pub fn replayed_entries(&self) -> u64 {
+        self.replayed_entries.get()
+    }
+
+    /// Drain the replay counter.
+    pub fn take_replayed(&self) -> u64 {
+        self.replayed_entries.replace(0)
+    }
+
+    /// Record a batch completing cleanly on replay attempt `attempt`
+    /// (0 = first transmission; saturates into the last bucket).
+    pub fn note_attempt(&self, attempt: u32) {
+        let mut h = self.attempt_hist.borrow_mut();
+        let i = (attempt as usize).min(h.len() - 1);
+        h[i] += 1;
+    }
+
+    /// The per-attempt completion histogram (index = attempt number).
+    pub fn attempt_hist(&self) -> [u64; 16] {
+        *self.attempt_hist.borrow()
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +219,24 @@ mod tests {
         assert_eq!(drained, vec![(1, (1 << 20) + 24), (3, 100)]);
         assert_eq!(t.rail_bytes_total(), 0);
         assert!(t.take_rail_bytes().is_empty());
+    }
+
+    #[test]
+    fn replay_ledger_counts_and_histograms() {
+        let t = CompletionTracker::new();
+        assert_eq!(t.replayed_entries(), 0);
+        t.note_replayed(3);
+        t.note_replayed(1);
+        assert_eq!(t.replayed_entries(), 4);
+        assert_eq!(t.take_replayed(), 4);
+        assert_eq!(t.replayed_entries(), 0);
+        t.note_attempt(0);
+        t.note_attempt(0);
+        t.note_attempt(2);
+        t.note_attempt(99); // saturates into the last bucket
+        let h = t.attempt_hist();
+        assert_eq!((h[0], h[2], h[15]), (2, 1, 1));
+        assert_eq!(h.iter().sum::<u64>(), 4);
     }
 
     #[test]

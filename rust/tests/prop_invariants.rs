@@ -605,6 +605,131 @@ fn prop_reduce_matches_scalar_model() {
 }
 
 #[test]
+fn prop_checksum_attempt_fields_roundtrip() {
+    use rishmem::ringbuf::{payload_checksum, ATTEMPT_MAX, DESC_FLAG_CHECKSUM};
+    // Exhaustive over the whole 16-bit checksum domain on both entry
+    // shapes: the sum must survive the wire codec without disturbing the
+    // continuation fields it shares packing space with, and the 4-bit
+    // attempt counter must compose with every checksum value.
+    for sum in 0..=u16::MAX {
+        // Chunked shape: sum rides inline_val2's top 16 bits.
+        let c = BatchDescriptor::put(3, 4096, 8192, 1 << 20)
+            .with_chunk(5, 9, 6)
+            .with_transfer_bytes(9 << 20)
+            .with_checksum(sum);
+        assert_eq!(c.checksum(), Some(sum));
+        assert_eq!(c.transfer_bytes(), 9 << 20, "sum {sum:#06x} disturbed transfer bytes");
+        assert_eq!(
+            (c.chunk_index(), c.chunk_count(), c.engine_hint()),
+            (5, 9, 6),
+            "sum {sum:#06x} disturbed continuation fields"
+        );
+        assert_eq!(BatchDescriptor::from_bytes(&c.to_bytes()), Some(c));
+        // Un-chunked shape: sum parks in inline_val's low 16 bits.
+        let p = BatchDescriptor::put(1, 64, 128, 256).with_checksum(sum);
+        assert_eq!(p.checksum(), Some(sum));
+        assert_eq!(BatchDescriptor::from_bytes(&p.to_bytes()), Some(p));
+        // Attempt bits live in flags and never collide with the sum.
+        let a = (sum & ATTEMPT_MAX) % (ATTEMPT_MAX + 1);
+        let r = c.with_attempt(a);
+        assert_eq!((r.attempt(), r.checksum()), (a, Some(sum)));
+        assert_eq!(BatchDescriptor::from_bytes(&r.to_bytes()), Some(r));
+    }
+    // Random descriptor bodies: stamping is non-destructive and ordered
+    // (checksum last), and the flag alone decides whether a sum exists.
+    prop_check("checksum/attempt stamping is field-precise", 300, |rng| {
+        let payload_len = rng.range(1, 8192) as usize;
+        let mut payload = vec![0u8; payload_len];
+        Rng::new(rng.next_u64()).fill_bytes(&mut payload);
+        let sum = payload_checksum(&payload);
+        let attempt = rng.below(ATTEMPT_MAX as u64 + 1) as u16;
+        let d = BatchDescriptor::put(
+            rng.next_u64() as usize & 0xFFFF,
+            rng.next_u64() as usize >> 16,
+            rng.next_u64() as usize >> 16,
+            payload_len,
+        );
+        let chunked = rng.below(2) == 1;
+        let d = if chunked {
+            let count = rng.range(1, CHUNK_FIELD_MAX as u64) as u32;
+            d.with_chunk(rng.below(count as u64) as u32, count, rng.below(256) as u8)
+                .with_transfer_bytes(rng.next_u64() & ((1 << 48) - 1))
+        } else {
+            d
+        };
+        let bare = d;
+        let d = d.with_checksum(sum).with_attempt(attempt);
+        assert_eq!(d.checksum(), Some(sum));
+        assert_eq!(d.attempt(), attempt);
+        assert_eq!(d.is_chunked(), chunked);
+        assert_eq!(
+            (d.pe, d.dst_off, d.src_off, d.len),
+            (bare.pe, bare.dst_off, bare.src_off, bare.len),
+            "stamping touched an addressing field"
+        );
+        assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
+        // Without the flag there is no sum, whatever the field residue.
+        assert_eq!(bare.checksum(), None);
+        assert_eq!(bare.flags & DESC_FLAG_CHECKSUM, 0);
+        // Re-stamping the attempt replaces; the sum is untouched.
+        let r = d.with_attempt((attempt + 1) % (ATTEMPT_MAX + 1));
+        assert_eq!(r.attempt(), (attempt + 1) % (ATTEMPT_MAX + 1));
+        assert_eq!(r.checksum(), Some(sum));
+    });
+}
+
+#[test]
+fn prop_retry_disabled_is_bit_for_bit_baseline() {
+    // `retry.enable = false` (the default) must be bit-for-bit the
+    // pre-reliability machine, and enabling it over *clean* lanes must
+    // change nothing either: checksum stamping and verification charge
+    // zero modeled time, so every PE's modeled clock — and every payload —
+    // is identical across the two runs, for random shapes crossing the
+    // same-GPU, same-node, and cross-node (rail-striped) routes.
+    prop_check("retry.enable leaves clean-lane runs bit-for-bit unchanged", 5, |rng| {
+        let len = rng.range(1, 3 << 20) as usize;
+        let seed = rng.next_u64();
+        let run = |retry_on: bool| {
+            let mut cfg = IshmemConfig {
+                topology: Topology::new(2, 2, 2),
+                heap_bytes: 48 << 20,
+                ..Default::default()
+            };
+            cfg.retry.enable = retry_on;
+            run_spmd(cfg, false, move |ctx| {
+                let buf = ctx.calloc::<u8>(len);
+                let mut payload = vec![0u8; len];
+                Rng::new(seed ^ ctx.pe() as u64).fill_bytes(&mut payload);
+                let half = ctx.npes() / 2;
+                let t_remote = (ctx.pe() + half) % ctx.npes();
+                let t_local = ctx.pe() ^ 1;
+                // Cross-node blocking put (the checksummed batch path).
+                ctx.put(buf, &payload, t_remote);
+                ctx.barrier_all();
+                // Same-node put, then read my own writes back.
+                ctx.put(buf, &payload, t_local);
+                ctx.barrier_all();
+                let mut back = vec![0u8; len];
+                ctx.get(&mut back, buf, t_local);
+                // NBI flavour + quiet drain (the other bounded-wait path).
+                ctx.put_nbi(buf, &payload, t_remote);
+                ctx.quiet();
+                ctx.barrier_all();
+                (ctx.clock.now_ns().to_bits(), back == payload)
+            })
+            .unwrap()
+        };
+        let baseline = run(false);
+        let with_retry = run(true);
+        assert!(baseline.iter().all(|&(_, ok)| ok), "baseline run corrupted {len}B");
+        assert_eq!(
+            baseline, with_retry,
+            "retry.enable changed a clean-lane run ({len}B): modeled clocks or payloads drifted"
+        );
+    });
+}
+
+#[test]
 fn prop_fcollect_permutation_safety() {
     // fcollect output is identical on every PE and is exactly the
     // concatenation of inputs in rank order — for random sizes/teams.
