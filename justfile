@@ -1,9 +1,12 @@
 # Developer entry points (`just --list`). The make-style targets mirror
 # the ROADMAP's tier-1 verify command.
 
-# Tier-1 verify: build + full test suite.
+# Tier-1 verify: build + full test suite. `integration_runtime` and
+# `integration_train` skip gracefully unless `make artifacts` has been
+# run; everything else (including `integration_chain`) runs on the
+# simulated machine alone.
 verify:
-    cargo build --release
+    cargo build --workspace --release
     cargo test -q
 
 # Paper-figure benches (plain binaries, no libtest harness).
@@ -16,16 +19,18 @@ bench:
     cargo bench --bench fig_calib
     cargo bench --bench fig_fault
     cargo bench --bench fig_retry
+    cargo bench --bench fig_chain
     cargo bench --bench fig3_rma
     cargo bench --bench hot_path
 
 # CI smoke: the cutover + batched-submission + striped-pipeline +
 # rail-striping + collective-scaling + calibration + fault-injection +
-# transfer-reliability + hot-path benches on tiny sweeps
-# (RISHMEM_SMOKE shrinks the size/nelem grids, the calibration round
-# count, and the plans/sec iteration counts), so the figure benches and
-# their embedded assertions (including the plan-cache speedup and
-# zero-drift checks) can't bit-rot.
+# transfer-reliability + triggered-chain + hot-path benches on tiny
+# sweeps (RISHMEM_SMOKE shrinks the size/nelem grids, the calibration
+# round count, and the plans/sec iteration counts), so the figure
+# benches and their embedded assertions (including the plan-cache
+# speedup, zero-drift, and single-doorbell-per-chain checks) can't
+# bit-rot.
 bench-smoke:
     RISHMEM_SMOKE=1 cargo bench --bench fig5_cutover
     RISHMEM_SMOKE=1 cargo bench --bench fig_batch
@@ -35,6 +40,7 @@ bench-smoke:
     RISHMEM_SMOKE=1 cargo bench --bench fig_calib
     RISHMEM_SMOKE=1 cargo bench --bench fig_fault
     RISHMEM_SMOKE=1 cargo bench --bench fig_retry
+    RISHMEM_SMOKE=1 cargo bench --bench fig_chain
     RISHMEM_SMOKE=1 cargo bench --bench hot_path
 
 # Formatting gate (no writes).

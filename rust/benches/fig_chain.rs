@@ -1,0 +1,131 @@
+//! Bench: fully offloaded progress — stream-ordered triggered chains
+//! (ISSUE 10). Depth-*d* dependent programs (d−1 ordered puts then a
+//! signal add) run fused (`chain.enable`) and sequential (the default)
+//! against a zero-program control that measures the fixed launch
+//! overhead. Acceptance bars:
+//! (a) a fused depth-*d* chain is exactly ONE doorbell: the fused run's
+//!     ring-message count over the control equals the program count,
+//! (b) host crossings drop ≥2× vs the sequential spelling from depth 3,
+//! (c) landed payloads are bit-identical fused vs sequential (and match
+//!     the expected last-program pattern),
+//! (d) the chain metrics account exactly: one submission per program,
+//!     depth−1 reclaimed doorbells each, nothing flushed unfusable, and
+//!     a sequential machine counts no chains at all,
+//! (e) the fused program loop is modeled strictly cheaper than the
+//!     sequential one (the fuse-vs-flush pricing must be a real win).
+//! `cargo bench --bench fig_chain` (`RISHMEM_SMOKE=1` shrinks the sweep).
+
+use rishmem::bench::figures::{
+    chain_depth_sweep, chain_pattern, chain_scenarios, CHAIN_STAGE_BYTES,
+};
+use rishmem::bench::{Figure, Series};
+
+fn main() {
+    let scenarios = chain_scenarios();
+    let control = scenarios[0].ring_messages;
+
+    let mut fig = Figure::new(
+        "fig-chain",
+        "triggered chains: host crossings per dependent program vs depth",
+        "chain depth",
+        "ring msgs / program",
+    );
+    let mut fused_series = Series::new("fused");
+    let mut seq_series = Series::new("sequential");
+    for sc in &scenarios[1..] {
+        let per = sc.ring_messages.saturating_sub(control) as f64 / sc.programs.max(1) as f64;
+        if sc.name.starts_with("fused") {
+            fused_series.push(sc.depth as f64, per);
+        } else {
+            seq_series.push(sc.depth as f64, per);
+        }
+    }
+    fig.series.push(fused_series);
+    fig.series.push(seq_series);
+    println!("{}", fig.render_ascii());
+
+    let by_name = |name: &str| {
+        scenarios
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing scenario {name:?}"))
+    };
+
+    for d in chain_depth_sweep() {
+        let fused = by_name(&format!("fused-d{d}"));
+        let seq = by_name(&format!("seq-d{d}"));
+        let n = fused.programs as u64;
+        let fused_msgs = fused.ring_messages - control;
+        let seq_msgs = seq.ring_messages - control;
+        println!(
+            "[fig_chain] depth {d}: {n} programs — fused {fused_msgs} crossings, \
+             sequential {seq_msgs} crossings, modeled {:.0} vs {:.0} ns",
+            fused.modeled_ns, seq.modeled_ns
+        );
+
+        // (a) the single-doorbell identity, exact: one ring message per
+        // fused program beyond the fixed launch overhead.
+        assert_eq!(
+            fused_msgs, n,
+            "depth {d}: a fused chain must be exactly one doorbell"
+        );
+
+        // (b) host-crossing reduction: strictly fewer always, ≥2× from
+        // depth 3 (the sequential spelling pays ~one crossing per stage).
+        assert!(
+            fused_msgs < seq_msgs,
+            "depth {d}: fusion did not reduce host crossings ({fused_msgs} vs {seq_msgs})"
+        );
+        if d >= 3 {
+            assert!(
+                seq_msgs >= 2 * fused_msgs,
+                "depth {d}: expected ≥2× fewer host crossings, got {fused_msgs} vs {seq_msgs}"
+            );
+        }
+
+        // (c) bit-identical results, and they are the right bytes.
+        assert_eq!(
+            fused.landed, seq.landed,
+            "depth {d}: fused and sequential landed different bytes"
+        );
+        let len = CHAIN_STAGE_BYTES;
+        for s in 0..d - 1 {
+            assert_eq!(
+                fused.landed[s * len..(s + 1) * len],
+                chain_pattern(fused.programs - 1, s, len)[..],
+                "depth {d} stage {s}: landed bytes are not the last program's pattern"
+            );
+        }
+
+        // (d) exact chain accounting on both machines.
+        assert_eq!(fused.snapshot.chain_submitted, n, "depth {d}: {:?}", fused.snapshot);
+        assert_eq!(
+            fused.snapshot.chain_fused_doorbells,
+            n * (d as u64 - 1),
+            "depth {d}: reclaimed-doorbell ledger wrong"
+        );
+        assert_eq!(
+            fused.snapshot.chain_flushed_unfusable, 0,
+            "depth {d}: a fusable chain was flushed sequentially"
+        );
+        assert!(fused.snapshot.chain_triggered >= n * (d as u64 - 1), "depth {d}");
+        assert_eq!(
+            (seq.snapshot.chain_submitted, seq.snapshot.chain_fused_doorbells),
+            (0, 0),
+            "depth {d}: a chain-disabled machine counted chains"
+        );
+
+        // (e) fusion is a modeled win, not just a message-count win.
+        assert!(
+            fused.modeled_ns < seq.modeled_ns,
+            "depth {d}: fused program loop modeled no cheaper ({:.0} vs {:.0} ns)",
+            fused.modeled_ns,
+            seq.modeled_ns
+        );
+    }
+
+    println!(
+        "[fig_chain] every fused depth-d chain submitted with one doorbell; ≥2× fewer \
+         host crossings from depth 3; payloads bit-identical fused vs sequential"
+    );
+}

@@ -672,6 +672,180 @@ pub fn retry_scenarios() -> Vec<RetryScenario> {
     ]
 }
 
+// ------------------------------------------------- triggered chains ---
+
+/// One [`fig_chain`] scenario: a fixed count of depth-*d* dependent
+/// programs (d−1 ordered puts then a signal add) issued through the
+/// [`crate::ishmem::ChainBuilder`] on a machine with chains fused
+/// (`chain.enable`) or left sequential (the default). Beyond the series
+/// the bench asserts the returned invariants: the consumer's landed
+/// bytes (fused must be bit-identical to sequential), the exact
+/// host-crossing ledger (a fused depth-*d* chain is ONE doorbell), and
+/// the chain metrics.
+pub struct ChainScenario {
+    pub name: String,
+    /// Stages per program (puts + the trailing signal).
+    pub depth: usize,
+    /// Dependent programs issued by PE 0.
+    pub programs: usize,
+    /// Ring messages the whole run spent (machine total; subtract the
+    /// zero-program control scenario to isolate the programs).
+    pub ring_messages: u64,
+    /// PE 0's modeled ns across the program loop.
+    pub modeled_ns: f64,
+    /// The consumer's inbox after the run (the last program's bytes).
+    pub landed: Vec<u8>,
+    pub snapshot: crate::coordinator::metrics::MetricsSnapshot,
+}
+
+/// Bytes each chained put stage moves in a [`chain_scenario`].
+pub const CHAIN_STAGE_BYTES: usize = 16 << 10;
+
+/// Programs issued per scenario (shrunk under `RISHMEM_SMOKE=1`).
+pub fn chain_programs() -> usize {
+    if super::smoke() {
+        8
+    } else {
+        32
+    }
+}
+
+/// Deterministic per-(program, stage) payload pattern, so the landed
+/// bytes identify exactly which program and stage wrote them.
+pub fn chain_pattern(program: usize, stage: usize, len: usize) -> Vec<u8> {
+    (0..len)
+        .map(|i| {
+            (i as u8)
+                .wrapping_mul(31)
+                .wrapping_add(program as u8)
+                .wrapping_mul(2)
+                .wrapping_add(stage as u8 + 1)
+        })
+        .collect()
+}
+
+/// Run one chain scenario: `programs` depth-`depth` dependent programs
+/// from PE 0 to its cross-GPU neighbour (PE 2), engine route pinned so
+/// everything batches. `fused` flips `chain.enable`; `programs == 0` is
+/// the control run that measures the fixed launch overhead (barriers,
+/// handshakes) in ring messages.
+pub fn chain_scenario(name: &str, depth: usize, programs: usize, fused: bool) -> ChainScenario {
+    use crate::ishmem::signal::SignalOp;
+    use crate::ishmem::Cmp;
+    assert!(depth >= 2, "a chain needs a dependency");
+    let mut cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        ..Default::default()
+    };
+    cfg.chain.enable = fused;
+    cfg.chain.max_depth = depth.max(4);
+    let ish = Ishmem::new(cfg).expect("fig_chain machine");
+    let before = ish.metrics.snapshot().ring_messages;
+    let out = ish.launch(move |ctx| {
+        let len = CHAIN_STAGE_BYTES;
+        let inbox = ctx.calloc::<u8>((depth - 1) * len);
+        let sig = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        let mut modeled = 0.0;
+        if ctx.pe() == 0 {
+            let (_, dt) = ctx.clock.time(|| {
+                for p in 0..programs {
+                    let mut c = ctx.chain();
+                    for s in 0..depth - 1 {
+                        c = c.put(inbox.slice(s * len, len), &chain_pattern(p, s, len), 2);
+                        c = c.then();
+                    }
+                    c.signal(sig, 1, SignalOp::Add, 2).submit();
+                }
+            });
+            modeled = dt;
+        }
+        ctx.barrier_all();
+        if ctx.pe() == 2 {
+            ctx.wait_until::<u64>(sig, Cmp::Ge, programs as u64);
+            assert_eq!(ctx.signal_fetch(sig), programs as u64, "signal adds lost");
+            Some((modeled, ctx.read_local_vec(inbox)))
+        } else if ctx.pe() == 0 {
+            Some((modeled, Vec::new()))
+        } else {
+            None
+        }
+    });
+    let snapshot = ish.metrics.snapshot();
+    let ring_messages = snapshot.ring_messages - before;
+    ish.shutdown();
+    let mut modeled_ns = 0.0;
+    let mut landed = Vec::new();
+    for (m, l) in out.into_iter().flatten() {
+        modeled_ns = modeled_ns.max(m);
+        if !l.is_empty() {
+            landed = l;
+        }
+    }
+    ChainScenario {
+        name: name.to_string(),
+        depth,
+        programs,
+        ring_messages,
+        modeled_ns,
+        landed,
+        snapshot,
+    }
+}
+
+/// Depths swept by [`fig_chain`] (shrunk under `RISHMEM_SMOKE=1`).
+pub fn chain_depth_sweep() -> Vec<usize> {
+    if super::smoke() {
+        vec![2, 3]
+    } else {
+        vec![2, 3, 4, 6]
+    }
+}
+
+/// The scenarios behind [`fig_chain`]: one zero-program control (fixed
+/// launch overhead), then a fused and a sequential run per depth.
+pub fn chain_scenarios() -> Vec<ChainScenario> {
+    let mut out = vec![chain_scenario("control", 2, 0, true)];
+    for d in chain_depth_sweep() {
+        out.push(chain_scenario(&format!("fused-d{d}"), d, chain_programs(), true));
+        out.push(chain_scenario(&format!("seq-d{d}"), d, chain_programs(), false));
+    }
+    out
+}
+
+/// Fully offloaded progress figure (ISSUE 10): host crossings per
+/// dependent program vs chain depth — a fused depth-*d* chain submits
+/// with ONE doorbell while the sequential spelling pays roughly one
+/// crossing per stage. The fig_chain bench asserts the single-doorbell
+/// identity exactly (against the control run's fixed overhead), the
+/// ≥2× host-crossing reduction from depth 3, and fused-vs-sequential
+/// payload bit-identity on top of this series.
+pub fn fig_chain() -> Figure {
+    let mut fig = Figure::new(
+        "fig-chain",
+        "triggered chains: host crossings per dependent program vs depth",
+        "chain depth",
+        "ring msgs / program",
+    );
+    let scenarios = chain_scenarios();
+    let control = scenarios[0].ring_messages;
+    let mut fused = Series::new("fused");
+    let mut seq = Series::new("sequential");
+    for sc in &scenarios[1..] {
+        let per = sc.ring_messages.saturating_sub(control) as f64 / sc.programs.max(1) as f64;
+        if sc.name.starts_with("fused") {
+            fused.push(sc.depth as f64, per);
+        } else {
+            seq.push(sc.depth as f64, per);
+        }
+    }
+    fig.series.push(fused);
+    fig.series.push(seq);
+    fig
+}
+
 /// Collective-scaling figure (ISSUE 7): modeled 1 MiB broadcast time
 /// across machine sizes — the flat per-peer fan-out against the
 /// hierarchical tile/GPU/node decomposition with ring and tree

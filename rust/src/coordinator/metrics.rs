@@ -194,6 +194,18 @@ pub struct Metrics {
     pub retry_backoff_ns_total: AtomicU64,
     pub retry_escalations: AtomicU64,
     pub xfer_op_timeouts: AtomicU64,
+    // Triggered operation chains (ISSUE 10): fused chains submitted (one
+    // doorbell each), their stage-depth distribution, chained successors
+    // the proxy released on a met trigger without a new ring message,
+    // doorbells reclaimed by fusing ops that previously forced their own
+    // submission (put-signal), and chains the fuse-vs-flush decision
+    // declined (fell back to sequential submission). All zero while
+    // `chain.enable` is off.
+    pub chain_submitted: AtomicU64,
+    pub chain_triggered: AtomicU64,
+    pub chain_fused_doorbells: AtomicU64,
+    pub chain_flushed_unfusable: AtomicU64,
+    pub chain_depth_hist: [AtomicU64; BATCH_DEPTH_BUCKETS],
     // Gauges: 1 while any lane anywhere is dead; per-slot counts of how
     // many nodes/GPUs currently have that rail/engine slot dead (indices
     // past the table clamp into the last slot, like the dispatch tables).
@@ -265,6 +277,12 @@ impl Metrics {
         Self::add(&self.xfer_batches, 1);
         Self::add(&self.xfer_batch_entries, entries as u64);
         Self::add(&self.xfer_batch_depth_hist[batch_depth_bucket(entries)], 1);
+    }
+
+    /// Record one fused chain submission of `depth` dependent stages.
+    pub fn add_chain(&self, depth: usize) {
+        Self::add(&self.chain_submitted, 1);
+        Self::add(&self.chain_depth_hist[batch_depth_bucket(depth)], 1);
     }
 
     /// Record one striped transfer of `chunks` chunks.
@@ -427,6 +445,11 @@ impl Metrics {
             retry_backoff_ns_total: load(&self.retry_backoff_ns_total),
             retry_escalations: load(&self.retry_escalations),
             xfer_op_timeouts: load(&self.xfer_op_timeouts),
+            chain_submitted: load(&self.chain_submitted),
+            chain_triggered: load(&self.chain_triggered),
+            chain_fused_doorbells: load(&self.chain_fused_doorbells),
+            chain_flushed_unfusable: load(&self.chain_flushed_unfusable),
+            chain_depth_hist: std::array::from_fn(|i| load(&self.chain_depth_hist[i])),
             degraded_mode: load(&self.degraded_mode),
             rail_dead: std::array::from_fn(|i| load(&self.rail_dead[i])),
             engine_dead: std::array::from_fn(|i| load(&self.engine_dead[i])),
@@ -499,6 +522,11 @@ pub struct MetricsSnapshot {
     pub retry_backoff_ns_total: u64,
     pub retry_escalations: u64,
     pub xfer_op_timeouts: u64,
+    pub chain_submitted: u64,
+    pub chain_triggered: u64,
+    pub chain_fused_doorbells: u64,
+    pub chain_flushed_unfusable: u64,
+    pub chain_depth_hist: [u64; BATCH_DEPTH_BUCKETS],
     pub degraded_mode: u64,
     pub rail_dead: [u64; RAIL_SLOTS],
     pub engine_dead: [u64; ENGINE_SLOTS],
@@ -689,6 +717,11 @@ impl MetricsSnapshot {
         put("retry_backoff_ns_total", n(self.retry_backoff_ns_total));
         put("retry_escalations", n(self.retry_escalations));
         put("xfer_op_timeouts", n(self.xfer_op_timeouts));
+        put("chain_submitted", n(self.chain_submitted));
+        put("chain_triggered", n(self.chain_triggered));
+        put("chain_fused_doorbells", n(self.chain_fused_doorbells));
+        put("chain_flushed_unfusable", n(self.chain_flushed_unfusable));
+        put("chain_depth_hist", arr(&self.chain_depth_hist));
         put("degraded_mode", n(self.degraded_mode));
         put("rail_dead", arr(&self.rail_dead));
         put("engine_dead", arr(&self.engine_dead));
@@ -790,6 +823,7 @@ impl MetricsSnapshot {
              decision-timeouts={} sync-timeouts={} degraded={}\n\
              retry: dropped={} corrupted={} delayed={} checksum-fail={} nacks={} \
              replays={} exhausted={} backoff-ns={} escalations={} op-timeouts={}\n\
+             chain: submitted={} triggered={} fused-doorbells={} flushed-unfusable={}\n\
              reduce: xla-calls={} xla-elems={} native-elems={}",
             self.puts,
             self.gets,
@@ -859,6 +893,10 @@ impl MetricsSnapshot {
             self.retry_backoff_ns_total,
             self.retry_escalations,
             self.xfer_op_timeouts,
+            self.chain_submitted,
+            self.chain_triggered,
+            self.chain_fused_doorbells,
+            self.chain_flushed_unfusable,
             self.xla_reduce_calls,
             self.xla_reduce_elems,
             self.native_reduce_elems,
@@ -937,6 +975,36 @@ mod tests {
         assert_eq!(j.get("retry_replays").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("retry_backoff_ns_total").unwrap().as_usize(), Some(350_000));
         assert_eq!(j.get("xfer_op_timeouts").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn chain_counters_roundtrip() {
+        let m = Metrics::new();
+        m.add_chain(2);
+        m.add_chain(3);
+        m.add_chain(3);
+        Metrics::add(&m.chain_triggered, 4);
+        Metrics::add(&m.chain_fused_doorbells, 3);
+        Metrics::add(&m.chain_flushed_unfusable, 1);
+        let s = m.snapshot();
+        assert_eq!(s.chain_submitted, 3);
+        assert_eq!(s.chain_triggered, 4);
+        assert_eq!(s.chain_fused_doorbells, 3);
+        assert_eq!(s.chain_flushed_unfusable, 1);
+        assert_eq!(s.chain_depth_hist[batch_depth_bucket(2)], 1);
+        assert_eq!(s.chain_depth_hist[batch_depth_bucket(3)], 2);
+        assert_eq!(s.chain_depth_hist.iter().sum::<u64>(), s.chain_submitted);
+        let r = s.report();
+        assert!(
+            r.contains("chain: submitted=3 triggered=4 fused-doorbells=3 flushed-unfusable=1"),
+            "{r}"
+        );
+        let j = crate::util::json::Json::parse(&s.to_json()).unwrap();
+        assert_eq!(j.get("chain_submitted").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("chain_fused_doorbells").unwrap().as_usize(), Some(3));
+        let hist = j.get("chain_depth_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), BATCH_DEPTH_BUCKETS);
+        assert_eq!(hist[batch_depth_bucket(3)].as_usize(), Some(2));
     }
 
     #[test]

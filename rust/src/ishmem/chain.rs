@@ -1,0 +1,408 @@
+//! Triggered operation chains (ISSUE 10): the public face of fully
+//! offloaded progress.
+//!
+//! A *chain* is a stream-ordered sequence of dependent operations —
+//! put → signal, signal-gate → get, or an arbitrary put/signal/wait
+//! ladder — submitted as ONE `Batch` doorbell. Descriptors carry stage
+//! numbers (`BatchDescriptor::with_stage`); the proxy dispatches stage
+//! *s+1* only after every stage-*s* entry completes, and holds
+//! `WaitSignal` gates in its pending-trigger table until the watched
+//! signal word reaches its target. Dependency progress therefore lives
+//! entirely on the proxy: the initiator crosses the host boundary once
+//! per chain instead of once per dependent step.
+//!
+//! With `chain.enable` off (the default) everything here degrades to
+//! the chain-free program a caller would have written by hand —
+//! bit-for-bit: [`PeCtx::put_then_signal`] is `put_signal`,
+//! [`PeCtx::signal_then_get`] is `wait_until` + `get`, and
+//! [`ChainBuilder`] executes each step eagerly as it is recorded.
+//!
+//! Fusion is priced, not assumed: the planner compares the one-doorbell
+//! estimate against sequential submission under one parameter snapshot
+//! (`XferEngine::chain_fuse_wins`) and chains that cannot fuse — too
+//! deep, slab-starved, or model-priced slower — fall back and count
+//! `chain_flushed_unfusable`.
+
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::metrics::{Metrics, PathIdx};
+use crate::ringbuf::message::AmoKind;
+use crate::ringbuf::{BatchDescriptor, RingOp};
+use crate::sim::topology::Locality;
+use crate::xfer::plan::{ChainStage, OpKind};
+
+use super::signal::SignalOp;
+use super::sync::Cmp;
+use super::types::{as_bytes, as_bytes_mut, ShmemType, TypeTag};
+use super::{PeCtx, SymAddr};
+
+impl PeCtx {
+    /// `ishmemx_put_then_signal` — explicit chain spelling of
+    /// [`PeCtx::put_signal`]: payload then signal word, ordered. With
+    /// chains enabled this fuses into one triggered-chain doorbell; the
+    /// alias exists so call sites written against the chain API survive
+    /// a `chain.enable` flip in either direction.
+    pub fn put_then_signal<T: ShmemType>(
+        &self,
+        dest: SymAddr<T>,
+        src: &[T],
+        sig: SymAddr<u64>,
+        signal: u64,
+        sig_op: SignalOp,
+        pe: usize,
+    ) {
+        self.put_signal(dest, src, sig, signal, sig_op, pe);
+    }
+
+    /// `ishmemx_signal_then_get` — block until the **local** signal word
+    /// `sig` reaches `target` (a producer's put-signal lands it), then
+    /// get `dest.len()` elements from `src` on PE `pe`.
+    ///
+    /// With chains enabled the whole dependency offloads: a `WaitSignal`
+    /// gate plus the get chunks ship as one doorbell and the *proxy*
+    /// waits, re-checking parked gates between ring messages — the
+    /// initiator pays one host crossing instead of a host-side spin plus
+    /// a separately submitted get. Disabled (or unfusable), it is
+    /// exactly `wait_until(sig, >=, target)` followed by `get`.
+    pub fn signal_then_get<T: ShmemType>(
+        &self,
+        sig: SymAddr<u64>,
+        target: u64,
+        dest: &mut [T],
+        src: SymAddr<T>,
+        pe: usize,
+    ) {
+        assert!(dest.len() <= src.len(), "signal_then_get overflows source");
+        assert!(pe < self.npes(), "PE {pe} out of range");
+        let bytes = std::mem::size_of_val(dest);
+        if bytes > 0 {
+            let plan = self.plan_to(OpKind::Get, pe, bytes, 1);
+            if self.exec_signal_get_chain(
+                &plan,
+                self.pe(),
+                sig.byte_offset(),
+                target,
+                pe,
+                src.byte_offset(),
+                as_bytes_mut(dest),
+            ) {
+                Metrics::add(&self.rt.metrics.gets, 1);
+                return;
+            }
+        }
+        self.wait_until::<u64>(sig, Cmp::Ge, target);
+        self.get(dest, src, pe);
+    }
+
+    /// Open a [`ChainBuilder`] recording a dependent-operation chain on
+    /// this PE's stream.
+    pub fn chain(&self) -> ChainBuilder<'_> {
+        ChainBuilder {
+            ctx: self,
+            stage: 0,
+            entries: Vec::new(),
+            fused: self.rt.config.chain.enable,
+            submitted: false,
+        }
+    }
+}
+
+/// One recorded (not yet stage-stamped) chain entry plus the shape the
+/// pricing model needs.
+struct ChainEntry {
+    desc: BatchDescriptor,
+    stage: u8,
+    claims: usize,
+    reachable: bool,
+    loc: Locality,
+    bytes: usize,
+}
+
+/// Builder for an arbitrary put → signal → dependent-op chain
+/// ([`PeCtx::chain`]). Steps recorded in the same *stage* run
+/// concurrently; [`ChainBuilder::then`] starts a new stage that the
+/// proxy releases only after every earlier stage completes.
+///
+/// Two execution modes, chosen by `chain.enable`:
+/// * **fused** — steps record stage-tagged descriptors (put payloads
+///   stage into the slab eagerly so the source borrow can end);
+///   [`ChainBuilder::submit`] prices the chain and ships it as one
+///   doorbell, or flushes stage groups sequentially when fusion loses.
+///   A step the chain cannot absorb (depth cap, slab pressure) submits
+///   the recorded prefix as a chain and degrades the rest to eager
+///   execution — ordering holds either way because the prefix
+///   submission is blocking.
+/// * **eager** — every step executes immediately through the ordinary
+///   blocking API: the resulting machine history is bit-for-bit the
+///   chain-free program.
+///
+/// Dropping a builder without calling [`ChainBuilder::submit`] discards
+/// any recorded-but-unsubmitted steps (their slab claims are returned);
+/// eagerly executed steps have already happened.
+pub struct ChainBuilder<'a> {
+    ctx: &'a PeCtx,
+    stage: u8,
+    entries: Vec<ChainEntry>,
+    fused: bool,
+    submitted: bool,
+}
+
+impl ChainBuilder<'_> {
+    /// Start the next stage: steps recorded after this call depend on
+    /// the completion of *every* step recorded before it.
+    pub fn then(mut self) -> Self {
+        self.stage = self.stage.saturating_add(1);
+        self
+    }
+
+    /// Record a blocking put of `src` into PE `pe` at `dest` as a step
+    /// of the current stage.
+    pub fn put<T: ShmemType>(mut self, dest: SymAddr<T>, src: &[T], pe: usize) -> Self {
+        assert!(src.len() <= dest.len(), "chain put overflows destination");
+        assert!(pe < self.ctx.npes(), "PE {pe} out of range");
+        let bytes = as_bytes(src);
+        if self.fused && !bytes.is_empty() {
+            if self.has_room() {
+                if let Some(slab_off) = self.ctx.stream_stage_payload_uncharged(bytes) {
+                    Metrics::add(&self.ctx.rt.metrics.puts, 1);
+                    // Device-side staging copy is real work even before
+                    // submission; the execution charge waits for submit.
+                    self.ctx
+                        .clock
+                        .advance(self.ctx.rt.cost.staging_copy_ns(bytes.len()));
+                    let desc =
+                        BatchDescriptor::put(pe, dest.byte_offset(), slab_off, bytes.len())
+                            .with_standard_cl(!self.ctx.rt.xfer.cl_immediate_for(bytes.len()));
+                    self.push(desc, 1, pe, bytes.len());
+                    return self;
+                }
+            }
+            // Depth cap or slab pressure: run the prefix, go eager.
+            self.degrade();
+        }
+        self.ctx.put(dest, src, pe);
+        self
+    }
+
+    /// Record a signal-word update (`set`/`add`) on PE `pe` as a step of
+    /// the current stage.
+    pub fn signal(mut self, sig: SymAddr<u64>, value: u64, op: SignalOp, pe: usize) -> Self {
+        assert!(pe < self.ctx.npes(), "PE {pe} out of range");
+        if self.fused {
+            if self.has_room() {
+                Metrics::add(&self.ctx.rt.metrics.amos, 1);
+                let kind = match op {
+                    SignalOp::Set => AmoKind::Set,
+                    SignalOp::Add => AmoKind::Add,
+                };
+                let desc = BatchDescriptor::amo(
+                    pe,
+                    sig.byte_offset(),
+                    TypeTag::U64 as u8,
+                    kind as u8,
+                    value,
+                    0,
+                );
+                self.push(desc, 0, pe, 8);
+                return self;
+            }
+            self.degrade();
+        }
+        match op {
+            SignalOp::Set => self.ctx.atomic_set::<u64>(sig, value, pe),
+            SignalOp::Add => self.ctx.atomic_add::<u64>(sig, value, pe),
+        }
+        self
+    }
+
+    /// Record a gate: later steps of later stages wait until the signal
+    /// word `sig` on PE `pe` reaches `target` (`>=`, the put-signal
+    /// convention).
+    pub fn wait_signal(mut self, sig: SymAddr<u64>, target: u64, pe: usize) -> Self {
+        assert!(pe < self.ctx.npes(), "PE {pe} out of range");
+        if self.fused {
+            if self.has_room() {
+                let desc = BatchDescriptor::wait_signal(pe, sig.byte_offset(), target);
+                self.push(desc, 0, pe, 8);
+                return self;
+            }
+            self.degrade();
+        }
+        self.eager_wait(sig, target, pe);
+        self
+    }
+
+    /// Submit the chain. Fused chains that price ahead of sequential
+    /// submission ship as one doorbell; otherwise each stage group
+    /// flushes with its own doorbell (still stream-ordered, still
+    /// correct — just unfused, counted in `chain_flushed_unfusable`).
+    pub fn submit(mut self) {
+        self.submitted = true;
+        if self.entries.is_empty() {
+            return; // pure-eager chain: everything already happened
+        }
+        let stages = self.stage_shapes();
+        if self.ctx.rt.xfer.chain_fuse_wins(&stages) {
+            self.post_fused(&stages);
+        } else {
+            Metrics::add(&self.ctx.rt.metrics.chain_flushed_unfusable, 1);
+            self.flush_sequential(&stages);
+        }
+    }
+
+    // ------------------------------------------------------ internals --
+
+    /// Whether one more entry still fits under the chain depth cap.
+    fn has_room(&self) -> bool {
+        let cap = self
+            .ctx
+            .rt
+            .config
+            .chain
+            .max_depth
+            .min(self.ctx.stream.max_depth());
+        self.entries.len() < cap
+    }
+
+    fn push(&mut self, desc: BatchDescriptor, claims: usize, pe: usize, bytes: usize) {
+        self.entries.push(ChainEntry {
+            desc,
+            stage: self.stage,
+            claims,
+            reachable: self.ctx.ipc.lookup(pe).is_some(),
+            loc: self.ctx.loc_of(pe),
+            bytes,
+        });
+    }
+
+    /// The chain stopped being fusable mid-build: ship the recorded
+    /// prefix as a (blocking) chain so its effects land before the
+    /// offending step, then record nothing further — every later step
+    /// executes eagerly. Counted once per chain.
+    fn degrade(&mut self) {
+        self.fused = false;
+        Metrics::add(&self.ctx.rt.metrics.chain_flushed_unfusable, 1);
+        if !self.entries.is_empty() {
+            let stages = self.stage_shapes();
+            self.post_fused(&stages);
+        }
+    }
+
+    /// Collapse the recorded entries into per-stage pricing shapes: a
+    /// stage's bytes aggregate, its route pessimistically follows the
+    /// least-reachable member, and its locality follows the largest
+    /// member (the transfer that dominates the stage's execution).
+    fn stage_shapes(&self) -> Vec<ChainStage> {
+        let mut stages: Vec<ChainStage> = Vec::new();
+        let mut last: Option<u8> = None;
+        let mut max_b = 0usize;
+        for e in &self.entries {
+            if last == Some(e.stage) {
+                let shape = stages.last_mut().expect("stage group open");
+                shape.bytes += e.bytes;
+                shape.reachable &= e.reachable;
+                if e.bytes > max_b {
+                    max_b = e.bytes;
+                    shape.loc = e.loc;
+                }
+            } else {
+                last = Some(e.stage);
+                max_b = e.bytes;
+                stages.push(ChainStage {
+                    reachable: e.reachable,
+                    loc: e.loc,
+                    bytes: e.bytes,
+                });
+            }
+        }
+        stages
+    }
+
+    /// Ship the recorded entries as one stage-stamped doorbell and
+    /// charge the fused-chain estimate.
+    fn post_fused(&mut self, stages: &[ChainStage]) {
+        let drained = std::mem::take(&mut self.entries);
+        let mut entries: Vec<(BatchDescriptor, usize)> = Vec::with_capacity(drained.len());
+        for e in drained {
+            self.note_path_bytes(&e);
+            entries.push((e.desc.with_stage(e.stage), e.claims));
+        }
+        self.ctx
+            .track
+            .note_chain_links(entries.len().saturating_sub(1) as u64);
+        self.ctx.stream_post_chain(entries);
+        self.ctx.clock.advance(self.ctx.rt.xfer.est_chain_ns(stages));
+    }
+
+    /// Unfused fallback: flush each stage group behind its own doorbell
+    /// (blocking, so stage *s* completes before *s+1* posts) and charge
+    /// the sequential estimate. Descriptors stay unstamped — the proxy
+    /// sees ordinary all-stage-0 batches, exactly the pre-chain wire.
+    fn flush_sequential(&mut self, stages: &[ChainStage]) {
+        let drained = std::mem::take(&mut self.entries);
+        let mut cur: Option<u8> = None;
+        for e in drained {
+            if cur.is_some() && cur != Some(e.stage) {
+                self.ctx.stream_flush_blocking();
+            }
+            cur = Some(e.stage);
+            self.note_path_bytes(&e);
+            self.ctx.stream_append(e.desc, e.claims);
+        }
+        self.ctx.stream_flush_blocking();
+        self.ctx
+            .clock
+            .advance(self.ctx.rt.xfer.est_chain_sequential_ns(stages));
+    }
+
+    /// Path accounting for a recorded put: the proxy routes it over the
+    /// engines or the NIC by target reachability, exactly like dispatch.
+    fn note_path_bytes(&self, e: &ChainEntry) {
+        if e.desc.op == RingOp::Put as u8 {
+            let (path, loc) = if e.reachable {
+                (PathIdx::CopyEngine, e.loc)
+            } else {
+                (PathIdx::Nic, Locality::Remote)
+            };
+            self.ctx.rt.metrics.add_path_bytes(path, loc, e.bytes as u64);
+        }
+    }
+
+    /// Host-side gate for eager/degraded chains: spin until the signal
+    /// word on `pe` reaches `target`, charged like `wait_until`'s
+    /// cache-resident poll.
+    fn eager_wait(&self, sig: SymAddr<u64>, target: u64, pe: usize) {
+        if pe == self.ctx.pe() {
+            self.ctx.wait_until::<u64>(sig, Cmp::Ge, target);
+            return;
+        }
+        let heap = self.ctx.rt.heaps.heap(pe);
+        let word = heap.atomic_u64(sig.byte_offset());
+        let mut spins = 0u64;
+        while word.load(Ordering::Acquire) < target {
+            spins += 1;
+            if spins > 64 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        self.ctx
+            .clock
+            .advance(self.ctx.rt.cost.params.xe.atomic_fetch_ns * 0.2);
+    }
+}
+
+impl Drop for ChainBuilder<'_> {
+    fn drop(&mut self) {
+        if !self.submitted {
+            // Recorded-but-unsubmitted steps are discarded: return their
+            // slab claims so the arena can rewind.
+            for e in self.entries.drain(..) {
+                for _ in 0..e.claims {
+                    self.ctx.slab.release();
+                }
+            }
+        }
+    }
+}

@@ -84,6 +84,29 @@ impl Default for RetryConfig {
     }
 }
 
+/// Triggered-chain knobs (`chain.*`): stream-ordered dependent-operation
+/// chains fused into one doorbell (ISSUE 10). Off by default — a
+/// `chain.enable = false` machine never stamps stage fields, never emits
+/// `WaitSignal` gates, and keeps put-signal's forced flush, so the whole
+/// data path is bit-for-bit identical to the pre-chain code
+/// (property-tested in `tests/prop_invariants.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChainConfig {
+    /// Master switch for fused triggered chains.
+    pub enable: bool,
+    /// Deepest dependency chain (stage count) one doorbell may carry.
+    /// Chains past this depth — or whose entry count exceeds
+    /// `max_batch_depth` — fall back to sequential submission and count
+    /// `chain_flushed_unfusable`.
+    pub max_depth: usize,
+}
+
+impl Default for ChainConfig {
+    fn default() -> Self {
+        ChainConfig { enable: false, max_depth: 4 }
+    }
+}
+
 /// P2p transfer knobs (`xfer.*`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct XferConfig {
@@ -179,6 +202,10 @@ pub struct IshmemConfig {
     pub retry: RetryConfig,
     /// P2p deadlines (`xfer.op_timeout_ms`). 0 = unbounded waits.
     pub xfer: XferConfig,
+    /// Triggered chains (`chain.enable`, `chain.max_depth`): dependent
+    /// put→signal→op sequences fused into one doorbell with proxy-side
+    /// stage gating. Off by default (bit-for-bit pre-chain).
+    pub chain: ChainConfig,
 }
 
 impl Default for IshmemConfig {
@@ -204,6 +231,7 @@ impl Default for IshmemConfig {
             fault: crate::sim::FaultConfig::default(),
             retry: RetryConfig::default(),
             xfer: XferConfig::default(),
+            chain: ChainConfig::default(),
         }
     }
 }
@@ -336,6 +364,21 @@ impl IshmemConfig {
             !self.retry.enable || self.max_batch_depth <= crate::xfer::stream::NACK_MASK_BITS,
             "retry.enable needs max_batch_depth to fit the per-entry NACK mask \
              (≤ 48 entries per batch)"
+        );
+        anyhow::ensure!(
+            !self.chain.enable || self.chain.max_depth >= 2,
+            "chain.max_depth below 2 cannot express a dependent pair"
+        );
+        anyhow::ensure!(
+            !self.chain.enable || self.chain.max_depth <= self.max_batch_depth,
+            "chain.max_depth cannot exceed max_batch_depth (a fused chain is \
+             one descriptor block behind one doorbell)"
+        );
+        anyhow::ensure!(
+            !self.chain.enable
+                || self.max_batch_depth <= crate::xfer::stream::NACK_MASK_BITS,
+            "chain.enable needs max_batch_depth to fit the per-entry NACK mask \
+             (a NACKed predecessor stage suppresses successors by mask bit)"
         );
         Ok(())
     }
@@ -539,6 +582,31 @@ mod tests {
             crate::sim::TransientEvent::corrupt_chunk(0, u64::MAX, 20).with_lane(1),
         );
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn chain_knobs_validated() {
+        let cfg = IshmemConfig::default();
+        assert!(!cfg.chain.enable, "triggered chains must default off");
+        assert_eq!(cfg.chain.max_depth, 4);
+        // Depth limits only bind while chains are enabled.
+        let mut cfg = IshmemConfig::default();
+        cfg.chain.max_depth = 1;
+        assert!(cfg.validate().is_ok(), "disabled chains tolerate any depth");
+        cfg.chain.enable = true;
+        assert!(cfg.validate().is_err(), "depth 1 cannot express a dependent pair");
+        let mut cfg = IshmemConfig::default();
+        cfg.chain.enable = true;
+        assert!(cfg.validate().is_ok());
+        cfg.chain.max_depth = cfg.max_batch_depth + 1;
+        assert!(cfg.validate().is_err(), "a fused chain is one descriptor block");
+        // Enabled chains must fit the NACK mask like the retry layer.
+        let mut cfg = IshmemConfig::default();
+        cfg.chain.enable = true;
+        cfg.max_batch_depth = crate::xfer::stream::NACK_MASK_BITS + 1;
+        cfg.chain.max_depth = 4;
+        cfg.staging_slab_bytes = 4 << 20;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! lists / OFI transport directly, like the paper's host path.
 
 pub mod amo;
+pub mod chain;
 pub mod collectives;
 pub mod config;
 pub mod cutover;
@@ -41,7 +42,8 @@ pub mod teams;
 pub mod types;
 pub mod workgroup;
 
-pub use config::{CollAlgoMode, CollConfig, IshmemConfig, RetryConfig, XferConfig};
+pub use chain::ChainBuilder;
+pub use config::{ChainConfig, CollAlgoMode, CollConfig, IshmemConfig, RetryConfig, XferConfig};
 pub use cutover::{CutoverConfig, CutoverMode, Path};
 pub use heap::{SymAddr, SymAllocator};
 pub use sync::Cmp;

@@ -20,6 +20,23 @@
 //! real `DeviceAddr` command lists; the raw-pointer staging branch below
 //! survives only for payloads whose single chunk cannot fit an empty
 //! slab.
+//!
+//! **Triggered chains** (ISSUE 10, fully offloaded progress): a batch may
+//! carry stage-stamped descriptors (`DESC_FLAG_TRIGGERED`; see
+//! `BatchDescriptor::with_stage`). The proxy dispatches such a batch
+//! *stage by stage*: each stage's staged lists/rail sequences execute at
+//! the stage boundary — that execution IS the predecessor-completion
+//! event the next stage dispatches on, with no additional ring message.
+//! `RingOp::WaitSignal` entries are pure gates: the chain suffix
+//! dispatches only once the target signal word reaches its value;
+//! an unmet gate *parks* the suffix in the proxy's pending-trigger
+//! table, re-checked between ring messages (the proxy switches to a
+//! non-blocking poll while anything is parked). A NACKed predecessor
+//! stage mask-NACKs every later triggered entry un-dispatched — a
+//! successor never fires early — and the initiator's replay loop
+//! re-submits the failed suffix in stage order. A batch with no
+//! triggered descriptors is one implicit stage-0 group, dispatched
+//! bit-for-bit like the pre-chain code.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -187,12 +204,52 @@ fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
     // charges its own modeled wait (ring RTT + engine time), this clock
     // only keeps the EngineQueue occupancy honest.
     let proxy_clock = SimClock::new();
+    // Pending-trigger table: chain suffixes parked on unmet `WaitSignal`
+    // gates. While anything is parked the loop polls instead of blocking,
+    // re-evaluating gates between messages — another PE's op on this ring
+    // (or remote traffic landing in this node's heap) may satisfy them.
+    // Empty table → blocking `recv()`, the bit-for-bit pre-chain path.
+    let mut parked: Vec<ParkedChain> = Vec::new();
+    let mut spins = 0u32;
     loop {
-        let msg = consumer.recv();
+        let msg = if parked.is_empty() {
+            consumer.recv()
+        } else {
+            match consumer.try_recv() {
+                Some(m) => m,
+                None => {
+                    for p in std::mem::take(&mut parked) {
+                        if let Some(still) = resume_parked(p, sh, &proxy_clock) {
+                            parked.push(still);
+                        }
+                    }
+                    spins += 1;
+                    if spins < 128 {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                    continue;
+                }
+            }
+        };
+        spins = 0;
         match msg.ring_op() {
-            Some(RingOp::Shutdown) => return,
-            // Batches record per-entry service times inside the arm.
-            Some(RingOp::Batch) => service_batch(&msg, sh, &proxy_clock),
+            Some(RingOp::Shutdown) => {
+                // Fail-complete still-parked chains so no initiator blocks
+                // forever on a gate that can no longer fire.
+                for p in parked.drain(..) {
+                    complete(sh, &p.msg, PROXY_ERR_UNREGISTERED);
+                }
+                return;
+            }
+            // Batches record per-entry service times inside the arm; a
+            // batch returning a parked chain joins the trigger table.
+            Some(RingOp::Batch) => {
+                if let Some(p) = service_batch(&msg, sh, &proxy_clock) {
+                    parked.push(p);
+                }
+            }
             Some(op) => {
                 tick_fault(sh);
                 let t0 = Instant::now();
@@ -225,6 +282,16 @@ fn proxy_loop(consumer: &mut RingConsumer, sh: &ProxyShared) {
                 }
             }
             None => panic!("proxy received malformed message op={}", msg.op),
+        }
+        // The serviced message may have satisfied a parked gate (e.g. it
+        // wrote the very signal word a chain waits on): re-check now so
+        // chain latency tracks the triggering op, not the poll backoff.
+        if !parked.is_empty() {
+            for p in std::mem::take(&mut parked) {
+                if let Some(still) = resume_parked(p, sh, &proxy_clock) {
+                    parked.push(still);
+                }
+            }
         }
     }
 }
@@ -310,18 +377,129 @@ fn effective_lanes(
     lanes
 }
 
+/// Calibration bookkeeping for the staged standard lists: the per-entry
+/// wall time of a standard-CL entry measures only the append, so the
+/// lane observation happens at execute time instead — per engine, over
+/// the bytes that list accumulated — while the append wall times are
+/// summed so the CL-*flavor* comparison can charge standard lists their
+/// full cost (append + execute), not the engine time alone. The
+/// locality and entry size of the list's first entry stand in for the
+/// whole list (chunked transfers target one peer with uniform chunks,
+/// so lists are homogeneous in practice).
+struct StagedMeta {
+    bytes: u64,
+    entries: u64,
+    loc: crate::sim::topology::Locality,
+    append_ns: u64,
+    first_len: usize,
+}
+
+/// A chain suffix parked on an unmet `WaitSignal` gate: every entry
+/// before `next` has fully dispatched *and executed* (the gate arm runs
+/// `execute_stage` before reading the signal word), so no scratch state
+/// survives the park — only the remaining descriptors and the carried
+/// NACK/status ledger, whose mask bits keep their original entry indices
+/// so replay masks line up across park/resume.
+struct ParkedChain {
+    msg: Message,
+    descs: Vec<BatchDescriptor>,
+    next: usize,
+    nack_mask: u64,
+    status: u64,
+    nacked_stage: Option<u8>,
+}
+
+/// Execute everything the current stage accumulated: per-engine staged
+/// lists (close → execute, each on its own scratch clock — different
+/// blitters run concurrently, so the proxy clock advances by the slowest,
+/// not the sum), per-rail in-flight sequences (same max fold), and the
+/// migrate-back of any dead-lane re-dispatches now that the lists have
+/// run. For a chained batch this execution *is* the predecessor-completion
+/// event the next stage dispatches on; for an all-stage-0 batch the one
+/// call after the scan is exactly the pre-chain end-of-batch block.
+fn execute_stage(
+    sh: &ProxyShared,
+    proxy_clock: &SimClock,
+    staged_cls: &mut BTreeMap<usize, CommandList>,
+    rail_clocks: &mut BTreeMap<usize, SimClock>,
+    staged_meta: &mut BTreeMap<usize, StagedMeta>,
+    tainted_engines: &mut std::collections::BTreeSet<usize>,
+    moved: &mut Vec<LaneMove>,
+) {
+    let mut slowest = 0.0f64;
+    for (engine, mut cl) in std::mem::take(staged_cls) {
+        let t0 = Instant::now();
+        cl.close();
+        let scratch = SimClock::new();
+        cl.execute(&CommandQueue::default(), &scratch);
+        slowest = slowest.max(scratch.now_ns());
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        sh.metrics.add_service(ServiceOp::Other, elapsed);
+        // Standard-CL lane observation: the list executes its N appended
+        // commands back-to-back on one engine and the engine model charges
+        // a startup *per command*, so the honest width-1 sample is the
+        // per-entry mean (T/N ≈ startup + (bytes/N)/lane_bw) — feeding the
+        // whole list as one chunk would inflate the learned startup by ~N×
+        // in small classes and drag the learned fraction low in large
+        // ones. The CL-flavor comparison charges the full service cost
+        // (appends + execute) per byte, bucketed at the per-entry size the
+        // boundary decision is about.
+        if let Some(m) = staged_meta.get(&engine) {
+            // A list that carried any replayed or delayed entry yields a
+            // mixed-attempt wall time: discard it (satellite 1).
+            if !tainted_engines.contains(&engine) {
+                let n = m.entries.max(1);
+                sh.calib.observe_engine(
+                    m.loc,
+                    (m.bytes / n).max(1) as usize,
+                    false,
+                    elapsed as f64 / n as f64,
+                );
+                sh.calib.observe_cl_flavor(
+                    m.first_len,
+                    false,
+                    (m.append_ns + elapsed) as f64 / m.bytes.max(1) as f64,
+                );
+            }
+        }
+    }
+    // Likewise the per-rail sequences inject on different NICs.
+    for (_rail, clock) in std::mem::take(rail_clocks) {
+        slowest = slowest.max(clock.now_ns());
+    }
+    proxy_clock.advance(slowest);
+    // Undo the re-dispatch migrations now that the lists have executed:
+    // the initiator releases its tracker reservation against the
+    // *original* hint once the completion lands, so the bytes must be
+    // back on that lane for the release to balance — otherwise the live
+    // lane would accrue phantom backlog forever.
+    for m in moved.drain(..) {
+        match m {
+            LaneMove::Engine { gpu, from, to, bytes } => {
+                sh.driver.cost.engine_migrate(gpu, to, from, bytes)
+            }
+            LaneMove::Rail { node, from, to, bytes } => {
+                sh.driver.cost.rail_migrate(node, to, from, bytes)
+            }
+        }
+    }
+    staged_meta.clear();
+    tainted_engines.clear();
+}
+
 /// Service one `Batch` doorbell: decode the descriptor block from the
 /// initiator's staging slab and dispatch every entry. Standard-CL entries
 /// accumulate on one staged command list *per engine hint* (striped
 /// chunks land on their assigned engines; un-chunked entries on engine
-/// 0's list), each executed once after the scan (append → close →
-/// execute); immediate entries run inline. Inter-node entries accumulate
-/// on one in-flight command sequence *per rail hint* (a scratch clock per
-/// rail — the NICs inject concurrently, so the proxy clock advances by
-/// the slowest rail, not the sum). One completion retires the whole
+/// 0's list), each executed once per *stage* (append → close → execute);
+/// immediate entries run inline. Inter-node entries accumulate on one
+/// in-flight command sequence *per rail hint* (a scratch clock per rail —
+/// the NICs inject concurrently, so the proxy clock advances by the
+/// slowest rail, not the sum). One completion retires the whole
 /// plan-group — per-chunk completions aggregate into that single token on
-/// the initiator side.
-fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
+/// the initiator side. Returns a [`ParkedChain`] when a `WaitSignal` gate
+/// is not yet met; the caller re-checks it between ring messages.
+fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) -> Option<ParkedChain> {
     let src_pe = msg.src_pe as usize;
     let n = msg.len as usize;
     let mut block = vec![0u8; n * DESC_SIZE];
@@ -329,26 +507,33 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     let descs = BatchDescriptor::decode_block(&block, n)
         .unwrap_or_else(|| panic!("corrupt batch descriptor block from PE {src_pe}"));
     sh.metrics.add_batch(n);
+    run_batch_from(*msg, descs, 0, PROXY_OK, 0, None, sh, proxy_clock)
+}
 
-    let mut status = PROXY_OK;
+/// Re-evaluate a parked chain's gate and, once met, dispatch the suffix.
+fn resume_parked(p: ParkedChain, sh: &ProxyShared, proxy_clock: &SimClock) -> Option<ParkedChain> {
+    run_batch_from(p.msg, p.descs, p.next, p.status, p.nack_mask, p.nacked_stage, sh, proxy_clock)
+}
+
+/// The batch dispatch scan, resumable at any entry index. Entries are
+/// grouped by ascending chain stage (stage 0 for every non-chain entry);
+/// crossing a stage boundary executes the previous stage's staged
+/// lists/rail sequences first — stream order *within* the batch, one
+/// doorbell for the whole chain.
+#[allow(clippy::too_many_arguments)]
+fn run_batch_from(
+    msg: Message,
+    descs: Vec<BatchDescriptor>,
+    start: usize,
+    mut status: u64,
+    mut nack_mask: u64,
+    mut nacked_stage: Option<u8>,
+    sh: &ProxyShared,
+    proxy_clock: &SimClock,
+) -> Option<ParkedChain> {
+    let src_pe = msg.src_pe as usize;
     let mut staged_cls: BTreeMap<usize, CommandList> = BTreeMap::new();
     let mut rail_clocks: BTreeMap<usize, SimClock> = BTreeMap::new();
-    // Calibration bookkeeping for the staged standard lists: the per-entry
-    // wall time of a standard-CL entry measures only the append, so the
-    // lane observation happens at execute time instead — per engine, over
-    // the bytes that list accumulated — while the append wall times are
-    // summed so the CL-*flavor* comparison can charge standard lists their
-    // full cost (append + execute), not the engine time alone. The
-    // locality and entry size of the list's first entry stand in for the
-    // whole list (chunked transfers target one peer with uniform chunks,
-    // so lists are homogeneous in practice).
-    struct StagedMeta {
-        bytes: u64,
-        entries: u64,
-        loc: crate::sim::topology::Locality,
-        append_ns: u64,
-        first_len: usize,
-    }
     let mut staged_meta: BTreeMap<usize, StagedMeta> = BTreeMap::new();
     // Dead-lane re-dispatches performed for this batch, migrated back
     // after the lists execute (see `effective_lanes`).
@@ -360,14 +545,76 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     // lists received any replayed/delayed entry are tainted: their
     // execute-time wall observation would mix attempts, so it is
     // discarded rather than fed to the calibrator.
-    let mut nack_mask: u64 = 0;
     let mut tainted_engines: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
     let transients = sh.fault.has_transients();
-    for (i, d) in descs.iter().enumerate() {
+    let mut cur_stage = descs.get(start).map_or(0, |d| d.chain_stage());
+    for i in start..descs.len() {
+        let d = descs[i];
+        let op = d.ring_op().expect("validated by decode_block");
+        let stage = d.chain_stage();
+        if stage != cur_stage {
+            // Stage boundary: the predecessor stage's execution is the
+            // completion event this stage's dispatch was triggered on.
+            execute_stage(
+                sh,
+                proxy_clock,
+                &mut staged_cls,
+                &mut rail_clocks,
+                &mut staged_meta,
+                &mut tainted_engines,
+                &mut moved,
+            );
+            cur_stage = stage;
+        }
+        // A NACKed predecessor stage leaves every later-stage triggered
+        // entry un-dispatched — a successor must never fire early. The
+        // entries are mask-NACKed (no fault tick, no strike: the lane
+        // never saw them) so the initiator's replay re-submits the whole
+        // failed suffix, gates included, in stage order.
+        let suppressed = d.is_triggered() && nacked_stage.is_some_and(|ns| stage > ns);
+        if op == RingOp::WaitSignal {
+            // Flush same-stage staged work first so the gate observes
+            // memory its predecessor stage has actually written. Gates
+            // skip the fault/transient/checksum machinery: they move no
+            // payload and run on no lane.
+            execute_stage(
+                sh,
+                proxy_clock,
+                &mut staged_cls,
+                &mut rail_clocks,
+                &mut staged_meta,
+                &mut tainted_engines,
+                &mut moved,
+            );
+            if suppressed {
+                if i < crate::xfer::stream::NACK_MASK_BITS {
+                    nack_mask |= 1u64 << i;
+                } else {
+                    status = PROXY_ERR_UNREGISTERED;
+                }
+                continue;
+            }
+            let mut word = [0u8; 8];
+            sh.heaps.heap(d.pe as usize).read(d.dst_off as usize, &mut word);
+            if u64::from_le_bytes(word) >= d.inline_val {
+                Metrics::add(&sh.metrics.chain_triggered, 1);
+                continue;
+            }
+            // Unmet: park the suffix (gate included). Everything before
+            // `i` has fully executed, so nothing is lost across the park.
+            return Some(ParkedChain { msg, descs, next: i, nack_mask, status, nacked_stage });
+        }
+        if suppressed {
+            if i < crate::xfer::stream::NACK_MASK_BITS {
+                nack_mask |= 1u64 << i;
+            } else {
+                status = PROXY_ERR_UNREGISTERED;
+            }
+            continue;
+        }
         let op_no = tick_fault(sh);
         let t0 = Instant::now();
-        let op = d.ring_op().expect("validated by decode_block");
-        let lanes = effective_lanes(sh, src_pe, d, op, &mut moved);
+        let lanes = effective_lanes(sh, src_pe, &d, op, &mut moved);
         let data = matches!(op, RingOp::Put | RingOp::Get);
         let local = data && is_local(sh, src_pe, d.pe as usize);
         let lane_ref = if local {
@@ -437,6 +684,12 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
             }
             if nacked {
                 strike_and_maybe_escalate(sh, lane_ref);
+                if d.is_triggered() {
+                    // The failed entry's successors must not fire: record
+                    // the earliest NACKed stage so later-stage triggered
+                    // entries are suppressed (see above).
+                    nacked_stage = Some(nacked_stage.map_or(stage, |ns| ns.min(stage)));
+                }
                 if i < crate::xfer::stream::NACK_MASK_BITS {
                     nack_mask |= 1u64 << i;
                 } else {
@@ -452,7 +705,7 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
             ok = dispatch_batch_entry(
                 sh,
                 src_pe,
-                d,
+                &d,
                 op,
                 lanes,
                 &mut staged_cls,
@@ -461,8 +714,20 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
             );
             if !ok {
                 status = PROXY_ERR_UNREGISTERED;
-            } else if data && (transients || d.has_checksum()) {
-                sh.fault.clear_strikes(lane_ref);
+                if d.is_triggered() {
+                    // Even a hard-failed predecessor gates its successors.
+                    nacked_stage = Some(nacked_stage.map_or(stage, |ns| ns.min(stage)));
+                }
+            } else {
+                if data && (transients || d.has_checksum()) {
+                    sh.fault.clear_strikes(lane_ref);
+                }
+                if d.is_triggered() && stage > 0 {
+                    // A dependent entry dispatched on its predecessor
+                    // stage's completion — fully host-side progress, no
+                    // extra ring crossing.
+                    Metrics::add(&sh.metrics.chain_triggered, 1);
+                }
             }
         }
         let elapsed = t0.elapsed().as_nanos() as u64;
@@ -524,68 +789,21 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
             tainted_engines.insert(lanes.engine);
         }
     }
-    // The per-engine lists run on *different* blitters concurrently:
-    // execute each on its own scratch clock and advance the proxy clock
-    // by the slowest engine's time, not the sum.
-    let mut slowest = 0.0f64;
-    for (engine, mut cl) in staged_cls {
-        let t0 = Instant::now();
-        cl.close();
-        let scratch = SimClock::new();
-        cl.execute(&CommandQueue::default(), &scratch);
-        slowest = slowest.max(scratch.now_ns());
-        let elapsed = t0.elapsed().as_nanos() as u64;
-        sh.metrics.add_service(ServiceOp::Other, elapsed);
-        // Standard-CL lane observation: the list executes its N appended
-        // commands back-to-back on one engine and the engine model charges
-        // a startup *per command*, so the honest width-1 sample is the
-        // per-entry mean (T/N ≈ startup + (bytes/N)/lane_bw) — feeding the
-        // whole list as one chunk would inflate the learned startup by ~N×
-        // in small classes and drag the learned fraction low in large
-        // ones. The CL-flavor comparison charges the full service cost
-        // (appends + execute) per byte, bucketed at the per-entry size the
-        // boundary decision is about.
-        if let Some(m) = staged_meta.get(&engine) {
-            // A list that carried any replayed or delayed entry yields a
-            // mixed-attempt wall time: discard it (satellite 1).
-            if !tainted_engines.contains(&engine) {
-                let n = m.entries.max(1);
-                sh.calib.observe_engine(
-                    m.loc,
-                    (m.bytes / n).max(1) as usize,
-                    false,
-                    elapsed as f64 / n as f64,
-                );
-                sh.calib.observe_cl_flavor(
-                    m.first_len,
-                    false,
-                    (m.append_ns + elapsed) as f64 / m.bytes.max(1) as f64,
-                );
-            }
-        }
-    }
-    // Likewise the per-rail sequences inject on different NICs.
-    for (_rail, clock) in rail_clocks {
-        slowest = slowest.max(clock.now_ns());
-    }
-    proxy_clock.advance(slowest);
-    // Undo the re-dispatch migrations now that the lists have executed:
-    // the initiator releases its tracker reservation against the
-    // *original* hint once the completion lands, so the bytes must be
-    // back on that lane for the release to balance — otherwise the live
-    // lane would accrue phantom backlog forever.
-    for m in moved {
-        match m {
-            LaneMove::Engine { gpu, from, to, bytes } => {
-                sh.driver.cost.engine_migrate(gpu, to, from, bytes)
-            }
-            LaneMove::Rail { node, from, to, bytes } => {
-                sh.driver.cost.rail_migrate(node, to, from, bytes)
-            }
-        }
-    }
+    // Final stage boundary: execute whatever the last stage accumulated
+    // (for an all-stage-0 batch this is the only call — exactly the
+    // pre-chain end-of-batch execution, in the same BTreeMap order).
+    execute_stage(
+        sh,
+        proxy_clock,
+        &mut staged_cls,
+        &mut rail_clocks,
+        &mut staged_meta,
+        &mut tainted_engines,
+        &mut moved,
+    );
     // Every few batches worth of flavor evidence may move the learned CL
     // boundary (no-op while calibration is off or evidence is thin).
+    // Completion path only: a parked chain defers this to its resume.
     sh.calib.refine_cl_boundary();
     // Hard errors outrank NACKs (an unregistered put can't be fixed by
     // replaying it); otherwise a non-empty mask asks the initiator to
@@ -593,7 +811,8 @@ fn service_batch(msg: &Message, sh: &ProxyShared, proxy_clock: &SimClock) {
     if status == PROXY_OK && nack_mask != 0 {
         status = encode_nack(nack_mask);
     }
-    complete(sh, msg, status);
+    complete(sh, &msg, status);
+    None
 }
 
 /// Dispatch one batch entry; returns false on a transport failure (the

@@ -4,13 +4,20 @@
 //! A put-with-signal delivers the payload, *then* updates a signal word on
 //! the target with set/add semantics — the ordering is the API's whole
 //! point (the target spins on the signal and may then read the payload).
-//! The transfer itself plans through the unified xfer engine: reachable
+//! The transfer itself plans through the unified xfer engine.
+//!
+//! With triggered chains enabled (`chain.enable`, ISSUE 10), a batched
+//! put-signal fuses into ONE `Batch` doorbell: payload chunks at stage 0,
+//! the signal AMO as a stage-1 triggered descriptor the proxy releases
+//! only after every chunk completes. The paper's "put; fence; signal"
+//! ordering moves off the host entirely — no forced stream flush.
+//! Otherwise (the default) the pre-chain paths run bit-for-bit: reachable
 //! targets put via the planned path (a blocking batched flush on the
 //! engine route) then update the signal word; remote targets ship one
 //! `PutSignal` ring message through the xfer executor so the proxy can
-//! order payload and signal on the wire. `PutSignal` is its own ordering
-//! fence, so it never batches — posting it flushes the pending command
-//! stream first (per-PE FIFO).
+//! order payload and signal on the wire — that message is its own
+//! ordering fence, flushing the pending command stream first (per-PE
+//! FIFO).
 
 use crate::coordinator::metrics::Metrics;
 use crate::xfer::plan::{OpKind, Route};
@@ -42,6 +49,19 @@ impl PeCtx {
         let bytes = std::mem::size_of_val(src);
         Metrics::add(&self.rt.metrics.puts, 1);
         let plan = self.plan_to(OpKind::PutSignal, pe, bytes, 1);
+        // Fused triggered chain first (no-op unless `chain.enable`): one
+        // doorbell carries payload + triggered signal, ordered proxy-side.
+        if self.exec_put_signal_chain(
+            &plan,
+            pe,
+            dest.byte_offset(),
+            as_bytes(src),
+            sig.byte_offset(),
+            signal,
+            sig_op == SignalOp::Add,
+        ) {
+            return;
+        }
         if plan.route == Route::Nic {
             self.exec_put_signal_remote(
                 &plan,

@@ -145,6 +145,7 @@ fn cmd_figure(args: &[String]) -> anyhow::Result<()> {
         "fig-rail" => vec![figures::fig_rail()],
         "fig-fault" => vec![figures::fig_fault()],
         "fig-retry" => vec![figures::fig_retry()],
+        "fig-chain" => vec![figures::fig_chain()],
         "fig-coll-scale" => vec![figures::fig_coll_scale()],
         "ablate-cl" => vec![figures::ablate_cmdlists()],
         "ablate-sync" => vec![figures::ablate_sync()],

@@ -18,6 +18,15 @@ use super::message::RingOp;
 /// Encoded size of one descriptor, bytes.
 pub const DESC_SIZE: usize = 48;
 
+/// Descriptor flag: this entry is part of a *triggered chain* (ISSUE 10)
+/// and carries a stage number — see [`BatchDescriptor::with_stage`]. The
+/// proxy dispatches a batch stage by stage: every entry of stage `s`
+/// waits for all entries of stages `< s` to complete (the predecessor
+/// completion event), and a NACKed predecessor stage suppresses all later
+/// stages un-dispatched. Bit 8 is free on every descriptor kind (the
+/// Message-level `FLAG_RAW_PTR` never appears in descriptors).
+pub const DESC_FLAG_TRIGGERED: u16 = 1 << 8;
+
 /// Descriptor flag: this entry executes on a *standard* command list
 /// (append → close → execute on a queue); clear = immediate command list.
 /// Same bit position for every op kind.
@@ -132,6 +141,62 @@ impl BatchDescriptor {
             len: 0,
             inline_val: operand,
             inline_val2: comparand,
+        }
+    }
+
+    /// A chain-trigger gate (batch-only pseudo-op, never its own ring
+    /// message): wait until the u64 signal word at heap offset `sig_off`
+    /// on `pe` reaches (`>=`) `target`. Entries of the same and later
+    /// stages dispatch only once the condition holds; the proxy parks the
+    /// chain suffix in its pending-trigger table when it does not.
+    pub fn wait_signal(pe: usize, sig_off: usize, target: u64) -> Self {
+        BatchDescriptor {
+            op: RingOp::WaitSignal as u8,
+            dtype: 0,
+            flags: 0,
+            pe: pe as u32,
+            dst_off: sig_off as u64,
+            src_off: 0,
+            len: 0,
+            inline_val: target,
+            inline_val2: 0,
+        }
+    }
+
+    /// Stamp the chain-stage number on this entry and mark it triggered.
+    /// The stage rides the `dtype` byte for Put/Get/PutInline/WaitSignal
+    /// entries (which never use dtype) and the low byte of `src_off` for
+    /// Amo entries (whose source offset is always 0) — so the stage never
+    /// collides with the chunk/checksum/attempt packings in
+    /// `inline_val`/`inline_val2`/`flags`. Apply before `with_checksum`
+    /// by convention (stage fields are disjoint from the sum, but builder
+    /// chains read better stamped in wire order).
+    pub fn with_stage(mut self, stage: u8) -> Self {
+        self.flags |= DESC_FLAG_TRIGGERED;
+        if self.op == RingOp::Amo as u8 {
+            self.src_off = (self.src_off & !0xFF) | stage as u64;
+        } else {
+            self.dtype = stage;
+        }
+        self
+    }
+
+    /// Whether this entry is part of a triggered chain.
+    pub fn is_triggered(&self) -> bool {
+        self.flags & DESC_FLAG_TRIGGERED != 0
+    }
+
+    /// Chain stage of this entry (0 for every non-chain entry, so a batch
+    /// with no triggered descriptors is one all-stage-0 group — exactly
+    /// the pre-chain dispatch order).
+    pub fn chain_stage(&self) -> u8 {
+        if !self.is_triggered() {
+            return 0;
+        }
+        if self.op == RingOp::Amo as u8 {
+            (self.src_off & 0xFF) as u8
+        } else {
+            self.dtype
         }
     }
 
@@ -466,6 +531,62 @@ mod tests {
             .with_attempt(ATTEMPT_MAX);
         assert!(rich.standard_cl() && rich.has_checksum());
         assert_eq!(rich.checksum(), Some(0xFFFF));
+    }
+
+    #[test]
+    fn chain_stage_packs_and_roundtrips() {
+        // Put/Get: stage rides the dtype byte.
+        let d = BatchDescriptor::put(2, 512, 1024, 4096).with_stage(3);
+        assert!(d.is_triggered());
+        assert_eq!(d.chain_stage(), 3);
+        assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
+        let g = BatchDescriptor::get(1, 0, 64, 8).with_stage(255);
+        assert_eq!(g.chain_stage(), 255);
+        // Amo: stage rides the low byte of the always-zero src_off.
+        let a = BatchDescriptor::amo(4, 128, 7, 2, 42, 9).with_stage(5);
+        assert_eq!(a.chain_stage(), 5);
+        assert_eq!(a.dtype, 7, "AMO width dispatch byte untouched");
+        assert_eq!((a.inline_val, a.inline_val2), (42, 9));
+        assert_eq!(BatchDescriptor::from_bytes(&a.to_bytes()), Some(a));
+        // Non-chain entries always report stage 0, even with dtype residue.
+        let plain = BatchDescriptor::amo(4, 128, 7, 2, 42, 9);
+        assert!(!plain.is_triggered());
+        assert_eq!(plain.chain_stage(), 0);
+    }
+
+    #[test]
+    fn wait_signal_descriptor_roundtrips() {
+        let w = BatchDescriptor::wait_signal(6, 4096, 0xFEED_F00D).with_stage(2);
+        assert_eq!(w.ring_op(), Some(RingOp::WaitSignal));
+        assert_eq!(w.pe, 6);
+        assert_eq!(w.dst_off, 4096);
+        assert_eq!(w.inline_val, 0xFEED_F00D);
+        assert_eq!(w.len, 0, "trigger gates carry no payload");
+        assert_eq!(w.chain_stage(), 2);
+        assert_eq!(BatchDescriptor::from_bytes(&w.to_bytes()), Some(w));
+    }
+
+    #[test]
+    fn triggered_flag_is_disjoint_from_cl_chunk_checksum_attempt_bits() {
+        assert_eq!(DESC_FLAG_TRIGGERED & DESC_FLAG_STANDARD_CL, 0);
+        assert_eq!(DESC_FLAG_TRIGGERED & DESC_FLAG_CHUNKED, 0);
+        assert_eq!(DESC_FLAG_TRIGGERED & DESC_FLAG_CHECKSUM, 0);
+        assert_eq!(DESC_FLAG_TRIGGERED & (ATTEMPT_MAX << ATTEMPT_SHIFT), 0);
+        // A maximally-decorated chained chunk keeps every field readable.
+        let d = BatchDescriptor::put(3, 4096, 8192, 1 << 20)
+            .with_stage(2)
+            .with_standard_cl(true)
+            .with_chunk(5, 9, 6)
+            .with_transfer_bytes(9 << 20)
+            .with_checksum(0xBEEF)
+            .with_attempt(3);
+        assert!(d.is_triggered() && d.standard_cl() && d.is_chunked() && d.has_checksum());
+        assert_eq!(d.chain_stage(), 2);
+        assert_eq!((d.chunk_index(), d.chunk_count(), d.engine_hint()), (5, 9, 6));
+        assert_eq!(d.transfer_bytes(), 9 << 20);
+        assert_eq!(d.checksum(), Some(0xBEEF));
+        assert_eq!(d.attempt(), 3);
+        assert_eq!(BatchDescriptor::from_bytes(&d.to_bytes()), Some(d));
     }
 
     #[test]

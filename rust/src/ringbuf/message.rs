@@ -26,6 +26,12 @@ pub enum RingOp {
     /// symmetric heap (staging slab), `len` is the entry count; see
     /// [`crate::ringbuf::batch::BatchDescriptor`].
     Batch = 8,
+    /// Batch-only trigger pseudo-op (ISSUE 10): wait until the u64 signal
+    /// word at `dst_off` in `pe`'s heap reaches (`>=`) `inline_val`. Never
+    /// travels as its own ring message — it rides inside a batched chain
+    /// as a stage gate; the proxy parks the chain suffix until the
+    /// condition holds.
+    WaitSignal = 9,
     /// Proxy shutdown (host side only).
     Shutdown = 255,
 }
@@ -42,6 +48,7 @@ impl RingOp {
             6 => RingOp::PutSignal,
             7 => RingOp::Barrier,
             8 => RingOp::Batch,
+            9 => RingOp::WaitSignal,
             255 => RingOp::Shutdown,
             _ => return None,
         })
@@ -164,6 +171,7 @@ mod tests {
             RingOp::PutSignal,
             RingOp::Barrier,
             RingOp::Batch,
+            RingOp::WaitSignal,
             RingOp::Shutdown,
         ] {
             assert_eq!(RingOp::from_u8(op as u8), Some(op));

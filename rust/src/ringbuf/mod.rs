@@ -20,7 +20,7 @@ pub mod ring;
 
 pub use batch::{
     payload_checksum, BatchDescriptor, ATTEMPT_MAX, CHUNK_FIELD_MAX, DESC_FLAG_CHECKSUM,
-    DESC_FLAG_CHUNKED, DESC_FLAG_STANDARD_CL, DESC_SIZE,
+    DESC_FLAG_CHUNKED, DESC_FLAG_STANDARD_CL, DESC_FLAG_TRIGGERED, DESC_SIZE,
 };
 pub use completion::{CompletionPool, CompletionToken, COMPLETION_NONE};
 pub use message::{Message, RingOp, MSG_SIZE};

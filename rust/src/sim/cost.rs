@@ -89,6 +89,27 @@ impl Default for OverheadParams {
     }
 }
 
+/// Modeled price of one transient strike when the stripe scan scores a
+/// candidate shape (retry-aware planning, ISSUE 10 satellite): each chunk
+/// of a candidate is one more exposure to a flaky lane, so a shape with
+/// `n` chunks on a domain whose worst lane has `s` unexpired strikes pays
+/// `s × n × STRIKE_PENALTY_NS` on top of its modeled transfer. Small by
+/// design — roughly one ring post per strike-chunk — so it biases the
+/// argmin toward fewer chunks *before* the lane escalates into
+/// quarantine, without overriding genuine bandwidth differences.
+pub const STRIKE_PENALTY_NS: f64 = 400.0;
+
+/// The stripe scans' strike penalty term: exactly 0.0 at zero strikes
+/// (a strike-free machine scores — and therefore plans — bit-for-bit
+/// identically to the pre-penalty code).
+pub fn strike_penalty_ns(strikes: u64, chunks: usize) -> f64 {
+    if strikes == 0 {
+        0.0
+    } else {
+        strikes as f64 * chunks as f64 * STRIKE_PENALTY_NS
+    }
+}
+
 /// Route-generic stripe scan: pick the (chunk size, lane width) whose
 /// modeled transfer is cheapest under `score(width, chunk, chunks)`, where
 /// the lane table behind `score` is either the copy-engine model
@@ -278,6 +299,20 @@ pub struct CostModel {
     /// queue. Zero (the only state a fault-free run ever sees) lets the
     /// per-plan health reads skip the per-lane scans entirely.
     dead_lanes: AtomicU64,
+    /// Per-rail unexpired strike counts, `node × rails + rail` (transient
+    /// faults the reliability layer attributed to the lane; cleared on a
+    /// clean dispatch). Feeds the stripe scans' strike penalty so a flaky
+    /// lane prices worse *before* it escalates to quarantine.
+    rail_strikes: Vec<AtomicU64>,
+    /// Per-engine unexpired strike counts, `gpu × engines_per_gpu + engine`.
+    engine_strikes: Vec<AtomicU64>,
+    /// Bumped on every strike note/clear transition — folded with
+    /// `health_gen` into [`Self::planning_generation`] so plan caches age
+    /// out shapes priced under a stale strike picture.
+    strike_gen: AtomicU64,
+    /// Live strikes across all lanes (fast zero check: a strike-free run
+    /// never scans the per-lane vectors and its scores gain exactly 0.0).
+    strike_total: AtomicU64,
 }
 
 impl CostModel {
@@ -290,6 +325,14 @@ impl CostModel {
             rail_sets: (0..topo.nodes).map(|_| RailSet::new(params.nic.rails)).collect(),
             health_gen: AtomicU64::new(0),
             dead_lanes: AtomicU64::new(0),
+            rail_strikes: (0..topo.nodes * params.nic.rails.max(1))
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            engine_strikes: (0..gpus * params.ce.engines_per_gpu.max(1))
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            strike_gen: AtomicU64::new(0),
+            strike_total: AtomicU64::new(0),
             model: ModelParams::new(&params),
             params,
             topo,
@@ -425,9 +468,11 @@ impl CostModel {
             .stripe_max_engines
             .clamp(1, ce.engines_per_gpu.max(1))
             .min(self.min_live_engines());
+        let strikes = self.max_engine_strikes();
         stripe_scan(bytes, chunk_cap, ce.chunk_min_bytes, w_max, |w, chunk, n| {
             let imm = chunk <= cl_immediate_max;
             ce.striped_transfer_ns(&self.params.xe, loc, bytes, imm, false, w, n)
+                + strike_penalty_ns(strikes, n)
         })
     }
 
@@ -453,8 +498,9 @@ impl CostModel {
         if rails_eff <= 1 {
             return (bytes.max(1), 1);
         }
+        let strikes = self.max_rail_strikes();
         stripe_scan(bytes, chunk_cap, nic.rail_chunk_min_bytes, rails_eff, |w, _chunk, n| {
-            nic.rdma_striped_ns(bytes, w, n)
+            nic.rdma_striped_ns(bytes, w, n) + strike_penalty_ns(strikes, n)
         })
     }
 
@@ -732,6 +778,84 @@ impl CostModel {
     /// invalidation stamp (health twin of `ModelParams::version`).
     pub fn health_generation(&self) -> u64 {
         self.health_gen.load(Ordering::Acquire)
+    }
+
+    // -------------------------------------------------- strike ledger ----
+
+    /// Note one transient strike against a NIC rail (retry-aware
+    /// planning): the lane prices worse in the rail stripe scans until
+    /// cleared by a clean dispatch or quarantine.
+    pub fn note_rail_strike(&self, node: usize, rail: usize) {
+        let rails = self.params.nic.rails.max(1);
+        let i = (node * rails + rail.min(rails - 1)).min(self.rail_strikes.len() - 1);
+        self.rail_strikes[i].fetch_add(1, Ordering::AcqRel);
+        self.strike_total.fetch_add(1, Ordering::AcqRel);
+        self.strike_gen.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Note one transient strike against a copy engine (global GPU index).
+    pub fn note_engine_strike(&self, gpu: usize, engine: usize) {
+        let engines = self.params.ce.engines_per_gpu.max(1);
+        let i = (gpu * engines + engine.min(engines - 1)).min(self.engine_strikes.len() - 1);
+        self.engine_strikes[i].fetch_add(1, Ordering::AcqRel);
+        self.strike_total.fetch_add(1, Ordering::AcqRel);
+        self.strike_gen.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Forgive a rail's strikes (clean dispatch / quarantine absorbed the
+    /// lane). A no-op — and no generation bump — when the lane is clean.
+    pub fn clear_rail_strikes(&self, node: usize, rail: usize) {
+        let rails = self.params.nic.rails.max(1);
+        let i = (node * rails + rail.min(rails - 1)).min(self.rail_strikes.len() - 1);
+        let had = self.rail_strikes[i].swap(0, Ordering::AcqRel);
+        if had > 0 {
+            self.strike_total.fetch_sub(had, Ordering::AcqRel);
+            self.strike_gen.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Forgive an engine's strikes (see [`Self::clear_rail_strikes`]).
+    pub fn clear_engine_strikes(&self, gpu: usize, engine: usize) {
+        let engines = self.params.ce.engines_per_gpu.max(1);
+        let i = (gpu * engines + engine.min(engines - 1)).min(self.engine_strikes.len() - 1);
+        let had = self.engine_strikes[i].swap(0, Ordering::AcqRel);
+        if had > 0 {
+            self.strike_total.fetch_sub(had, Ordering::AcqRel);
+            self.strike_gen.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Worst unexpired strike count across every NIC rail (0 on a clean
+    /// machine without scanning).
+    pub fn max_rail_strikes(&self) -> u64 {
+        if self.strike_total.load(Ordering::Acquire) == 0 {
+            return 0;
+        }
+        self.rail_strikes.iter().map(|s| s.load(Ordering::Acquire)).max().unwrap_or(0)
+    }
+
+    /// Worst unexpired strike count across every copy engine.
+    pub fn max_engine_strikes(&self) -> u64 {
+        if self.strike_total.load(Ordering::Acquire) == 0 {
+            return 0;
+        }
+        self.engine_strikes.iter().map(|s| s.load(Ordering::Acquire)).max().unwrap_or(0)
+    }
+
+    /// Monotone counter of strike note/clear transitions.
+    pub fn strike_generation(&self) -> u64 {
+        self.strike_gen.load(Ordering::Acquire)
+    }
+
+    /// The planner's cache stamp: lane health *and* the strike picture
+    /// folded into one u64. Stays exactly `health_generation()` until the
+    /// first strike ever lands (fault-free runs never perturb cached
+    /// plans), then moves on every strike transition so no cached shape
+    /// outlives the penalty inputs it was priced under.
+    pub fn planning_generation(&self) -> u64 {
+        let h = self.health_gen.load(Ordering::Acquire);
+        let s = self.strike_gen.load(Ordering::Acquire);
+        h.wrapping_add(s.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
     /// Any dead lane anywhere?
@@ -1463,6 +1587,70 @@ mod tests {
         assert_eq!(m.health_generation(), 4);
         assert!(!m.degraded());
         assert!(m.rail_is_live(0, 1) && m.engine_is_live(0, 0));
+    }
+
+    #[test]
+    fn zero_strikes_is_bit_identical_and_strikes_bias_plans() {
+        let m = model();
+        let loc = Locality::SameNode;
+        let big = 8 << 20;
+        let base_engine = m.stripe_for(loc, big, usize::MAX, usize::MAX);
+        let base_rail = m.rail_stripe_for(big, usize::MAX);
+        assert_eq!(m.max_rail_strikes(), 0);
+        assert_eq!(m.max_engine_strikes(), 0);
+        assert_eq!(strike_penalty_ns(0, 1024), 0.0, "penalty must be exactly zero");
+
+        // Strikes raise the per-chunk price, biasing the scan toward fewer
+        // chunks (never more).
+        m.note_rail_strike(0, 1);
+        m.note_rail_strike(0, 1);
+        m.note_engine_strike(0, 0);
+        assert_eq!(m.max_rail_strikes(), 2);
+        assert_eq!(m.max_engine_strikes(), 1);
+        let struck_engine = m.stripe_for(loc, big, usize::MAX, usize::MAX);
+        let struck_rail = m.rail_stripe_for(big, usize::MAX);
+        assert!(
+            big.div_ceil(struck_engine.0) <= big.div_ceil(base_engine.0),
+            "strikes must not increase engine chunk count: {base_engine:?} -> {struck_engine:?}"
+        );
+        assert!(
+            big.div_ceil(struck_rail.0) <= big.div_ceil(base_rail.0),
+            "strikes must not increase rail chunk count: {base_rail:?} -> {struck_rail:?}"
+        );
+
+        // Clearing restores the exact strike-free shapes (bit-for-bit).
+        m.clear_rail_strikes(0, 1);
+        m.clear_engine_strikes(0, 0);
+        assert_eq!(m.max_rail_strikes(), 0);
+        assert_eq!(m.max_engine_strikes(), 0);
+        assert_eq!(m.stripe_for(loc, big, usize::MAX, usize::MAX), base_engine);
+        assert_eq!(m.rail_stripe_for(big, usize::MAX), base_rail);
+    }
+
+    #[test]
+    fn planning_generation_tracks_strike_and_health_transitions() {
+        let m = model();
+        let g0 = m.planning_generation();
+        assert_eq!(g0, m.health_generation(), "clean machine: pure health stamp");
+
+        m.note_rail_strike(0, 0);
+        let g1 = m.planning_generation();
+        assert_ne!(g1, g0, "a strike must move the planning stamp");
+        assert_eq!(m.strike_generation(), 1);
+
+        // Clearing a clean lane is not a transition.
+        m.clear_rail_strikes(0, 1);
+        assert_eq!(m.planning_generation(), g1);
+
+        m.clear_rail_strikes(0, 0);
+        let g2 = m.planning_generation();
+        assert_ne!(g2, g1, "forgiving a struck lane must move the stamp");
+        assert_eq!(m.max_rail_strikes(), 0);
+
+        // Health transitions still move the folded stamp.
+        assert!(m.kill_rail(0, 1));
+        assert_ne!(m.planning_generation(), g2);
+        assert!(m.revive_rail(0, 1));
     }
 
     #[test]

@@ -325,8 +325,16 @@ impl FaultPlane {
 
     /// Record one transient fault against `lane`; returns the lane's new
     /// consecutive-strike count so the caller can compare it to
-    /// `retry.escalate_strikes` and escalate into quarantine.
+    /// `retry.escalate_strikes` and escalate into quarantine. The strike
+    /// is mirrored into the shared [`CostModel`] ledger so the planner's
+    /// stripe scans price suspect lanes pessimistically (ISSUE 10
+    /// retry-aware planning) — and so the planning generation moves,
+    /// flushing cached shapes priced under the old strike picture.
     pub fn note_strike(&self, lane: LaneRef) -> u32 {
+        match lane {
+            LaneRef::Rail { node, rail } => self.cost.note_rail_strike(node, rail),
+            LaneRef::Engine { gpu, engine } => self.cost.note_engine_strike(gpu, engine),
+        }
         let mut s = self.strikes.lock().unwrap();
         let n = s.entry(lane).or_insert(0);
         *n += 1;
@@ -335,7 +343,13 @@ impl FaultPlane {
 
     /// A clean dispatch on `lane`: forgive its accumulated strikes
     /// (escalation is about *consecutive* failures, not lifetime totals).
+    /// Mirrored into the cost-model ledger; forgiving an already-clean
+    /// lane stays a planning no-op (no generation bump).
     pub fn clear_strikes(&self, lane: LaneRef) {
+        match lane {
+            LaneRef::Rail { node, rail } => self.cost.clear_rail_strikes(node, rail),
+            LaneRef::Engine { gpu, engine } => self.cost.clear_engine_strikes(gpu, engine),
+        }
         self.strikes.lock().unwrap().remove(&lane);
     }
 
@@ -651,8 +665,9 @@ mod tests {
 
     #[test]
     fn strike_ledger_counts_consecutive_and_forgives_on_success() {
+        let c = cost();
         let plane = FaultPlane::new(
-            cost(),
+            Arc::clone(&c),
             FaultConfig { enable: true, ..FaultConfig::default() },
         );
         let rail = LaneRef::Rail { node: 0, rail: 1 };
@@ -660,10 +675,19 @@ mod tests {
         assert_eq!(plane.note_strike(rail), 1);
         assert_eq!(plane.note_strike(rail), 2);
         assert_eq!(plane.note_strike(engine), 1, "lanes are independent");
+        // Strikes mirror into the planner's cost-model ledger.
+        assert_eq!(c.max_rail_strikes(), 2);
+        assert_eq!(c.max_engine_strikes(), 1);
+        let g = c.planning_generation();
         plane.clear_strikes(rail);
         assert_eq!(plane.strikes(rail), 0);
         assert_eq!(plane.strikes(engine), 1);
+        assert_eq!(c.max_rail_strikes(), 0, "forgiveness mirrors too");
+        assert_ne!(c.planning_generation(), g, "forgiving a struck lane reprices plans");
         assert_eq!(plane.note_strike(rail), 1, "count restarts after a clean dispatch");
+        plane.clear_strikes(rail);
+        plane.clear_strikes(engine);
+        assert_eq!(c.max_engine_strikes(), 0);
     }
 
     #[test]

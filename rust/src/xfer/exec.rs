@@ -44,7 +44,7 @@ use crate::ringbuf::{BatchDescriptor, Message, RingOp, COMPLETION_NONE};
 use crate::sim::topology::Locality;
 use crate::sim::SimClock;
 
-use super::plan::{OpKind, Route, TransferPlan};
+use super::plan::{ChainStage, OpKind, Route, TransferPlan};
 
 /// Message flag: `src_off`/`dst_off` is a raw in-process pointer (the
 /// initiator's private buffer), not a symmetric-heap offset.
@@ -974,6 +974,215 @@ impl PeCtx {
         self.rt
             .metrics
             .add_path_bytes(PathIdx::Nic, Locality::Remote, plan.bytes as u64 + 8);
+    }
+
+    // ------------------------------------------------ triggered chains ---
+
+    /// Stage list a fused put-signal chain is priced as: the payload
+    /// stage followed by the 8-byte signal update on the same target.
+    fn put_signal_stages(&self, plan: &TransferPlan, pe: usize) -> [ChainStage; 2] {
+        let reachable = self.ipc.lookup(pe).is_some();
+        [
+            ChainStage { reachable, loc: plan.loc, bytes: plan.bytes },
+            ChainStage { reachable, loc: plan.loc, bytes: 8 },
+        ]
+    }
+
+    /// Roll a partially staged chain back: return every slab claim taken
+    /// so far (the arena rewinds once the count drops to zero — nothing
+    /// was submitted, so nothing reads the staged bytes) and the lane
+    /// backlog reserved for it, then count the abandon.
+    fn chain_unstage(&self, claims: usize, lanes: Lanes, reserved: &[(usize, u64)]) {
+        for _ in 0..claims {
+            self.slab.release();
+        }
+        for &(lane, bytes) in reserved {
+            self.lane_release(lanes, lane, bytes);
+        }
+        Metrics::add(&self.rt.metrics.chain_flushed_unfusable, 1);
+    }
+
+    /// Try to execute a planned put-signal as a **fused triggered chain**
+    /// (ISSUE 10): payload chunks at stage 0 and the signal AMO at
+    /// stage 1, submitted as ONE `Batch` doorbell. The proxy holds the
+    /// signal descriptor in its pending-trigger table until every chunk's
+    /// engine/rail execution completes, so the paper's "put; fence;
+    /// signal" ordering moves off the host without the forced stream
+    /// flush the unfused path pays. Returns `false` (nothing happened)
+    /// when chains are disabled, the chain cannot fuse (depth cap, slab
+    /// pressure, or the model prices sequential submission cheaper), or
+    /// the route is `LoadStore` — the caller then takes the classic path.
+    pub(crate) fn exec_put_signal_chain(
+        &self,
+        plan: &TransferPlan,
+        pe: usize,
+        dst_off: usize,
+        src: &[u8],
+        sig_off: usize,
+        signal: u64,
+        sig_add: bool,
+    ) -> bool {
+        let ccfg = self.rt.config.chain;
+        if !ccfg.enable || plan.route == Route::LoadStore {
+            return false;
+        }
+        let layout = if plan.chunks() > 1 {
+            self.plan_layout(plan)
+        } else {
+            vec![(0usize, 0usize, plan.bytes)]
+        };
+        let depth = layout.len() + 1; // chunks + the signal stage
+        let cap = ccfg.max_depth.min(self.stream.max_depth());
+        if depth > cap || !self.rt.xfer.chain_fuse_wins(&self.put_signal_stages(plan, pe)) {
+            Metrics::add(&self.rt.metrics.chain_flushed_unfusable, 1);
+            return false;
+        }
+        // Clean slate: the chain must be alone in its batch so NACK-mask
+        // entry indices line up with chain stages, and a drained stream
+        // gives the slab its full capacity for the payload stage.
+        self.stream_quiet_drain();
+        let (lanes, slots) = self.lanes_for(plan);
+        let total = layout.len();
+        let mut entries: Vec<(BatchDescriptor, usize)> = Vec::with_capacity(depth);
+        let mut reserved: Vec<(usize, u64)> = Vec::with_capacity(total);
+        for (idx, off, len) in layout {
+            let Some(slab_off) = self.stream_stage_payload_uncharged(&src[off..off + len])
+            else {
+                // Slab cannot hold the fused payload: abandon the fusion
+                // (the raw-pointer tail of the classic path cannot ride a
+                // triggered batch) and let the caller flush sequentially.
+                self.chain_unstage(entries.len(), lanes, &reserved);
+                return false;
+            };
+            let lane = slots[idx % slots.len()];
+            let desc = BatchDescriptor::put(pe, dst_off + off, slab_off, len)
+                .with_standard_cl(self.standard_cl_for(len))
+                .with_chunk(idx as u32, total as u32, lane as u8)
+                .with_transfer_bytes(plan.bytes as u64)
+                .with_stage(0);
+            entries.push((desc, 1));
+            self.lane_reserve(lanes, lane, len as u64);
+            reserved.push((lane, len as u64));
+        }
+        let kind = if sig_add { AmoKind::Add } else { AmoKind::Set };
+        let sig = BatchDescriptor::amo(
+            pe,
+            sig_off,
+            crate::ishmem::types::TypeTag::U64 as u8,
+            kind as u8,
+            signal,
+            0,
+        )
+        .with_stage(1);
+        entries.push((sig, 0));
+        self.track.note_chain_links((depth - 1) as u64);
+        self.stream_post_chain(entries);
+        // One striped charge covers the payload pipeline; the signal is a
+        // pipelined fire-and-forget atomic riding the drained doorbell.
+        self.charge_chunked(plan, pe, total);
+        self.clock.advance(self.rt.cost.pipelined_atomics_ns(1));
+        let (path, loc) = match plan.route {
+            Route::Nic => (PathIdx::Nic, Locality::Remote),
+            _ => (PathIdx::CopyEngine, plan.loc),
+        };
+        self.rt.metrics.add_path_bytes(path, loc, 8);
+        for (lane, bytes) in reserved {
+            self.lane_release(lanes, lane, bytes);
+        }
+        true
+    }
+
+    /// Try to execute a signal-gated get as a fused triggered chain: a
+    /// `WaitSignal` gate at stage 0 (proxy-side wait until the signal
+    /// word at `sig_off` on `sig_pe` reaches `target`) releasing get
+    /// chunks at stage 1, one doorbell for the whole dependency. The
+    /// initiator blocks in the chain's retiring flush while the proxy
+    /// parks the chain; a producer's put-signal un-parks it. Returns
+    /// `false` when the chain cannot fuse — the caller then waits on the
+    /// signal word host-side and issues a plain get.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn exec_signal_get_chain(
+        &self,
+        plan: &TransferPlan,
+        sig_pe: usize,
+        sig_off: usize,
+        target: u64,
+        pe: usize,
+        src_off: usize,
+        dst: &mut [u8],
+    ) -> bool {
+        let ccfg = self.rt.config.chain;
+        if !ccfg.enable || plan.route == Route::LoadStore {
+            return false;
+        }
+        let layout = if plan.chunks() > 1 {
+            self.plan_layout(plan)
+        } else {
+            vec![(0usize, 0usize, plan.bytes)]
+        };
+        let depth = layout.len() + 1; // the gate + get chunks
+        let cap = ccfg.max_depth.min(self.stream.max_depth());
+        let stages = [
+            ChainStage {
+                reachable: self.ipc.lookup(sig_pe).is_some(),
+                loc: self.loc_of(sig_pe),
+                bytes: 8,
+            },
+            ChainStage {
+                reachable: self.ipc.lookup(pe).is_some(),
+                loc: plan.loc,
+                bytes: plan.bytes,
+            },
+        ];
+        if depth > cap || !self.rt.xfer.chain_fuse_wins(&stages) {
+            Metrics::add(&self.rt.metrics.chain_flushed_unfusable, 1);
+            return false;
+        }
+        // Drained stream: every get chunk's slab claim must live together
+        // until the one chain batch retires (no window recycling), so the
+        // chain needs the whole arena — and must be alone in its batch.
+        self.stream_quiet_drain();
+        let (lanes, slots) = self.lanes_for(plan);
+        let total = layout.len();
+        let mut entries: Vec<(BatchDescriptor, usize)> = Vec::with_capacity(depth);
+        entries.push((BatchDescriptor::wait_signal(sig_pe, sig_off, target).with_stage(0), 0));
+        let mut reserved: Vec<(usize, u64)> = Vec::with_capacity(total);
+        let mut window: Vec<(usize, usize, usize)> = Vec::with_capacity(total); // (slab, dst, len)
+        for (idx, off, len) in layout {
+            let Some(slab_off) = self.stream_slab_try_alloc(len) else {
+                // The whole result set cannot sit in the slab at once:
+                // abandon the fusion, host-side wait + plain get instead.
+                self.chain_unstage(window.len(), lanes, &reserved);
+                return false;
+            };
+            let lane = slots[idx % slots.len()];
+            let desc = BatchDescriptor::get(pe, slab_off, src_off + off, len)
+                .with_standard_cl(self.standard_cl_for(len))
+                .with_chunk(idx as u32, total as u32, lane as u8)
+                .with_transfer_bytes(plan.bytes as u64)
+                .with_stage(1);
+            entries.push((desc, 1));
+            self.lane_reserve(lanes, lane, len as u64);
+            reserved.push((lane, len as u64));
+            window.push((slab_off, off, len));
+        }
+        self.track.note_chain_links((depth - 1) as u64);
+        self.stream_post_chain(entries);
+        // The proxy landed the gated results in the slab; copy them out
+        // before anything else can rewind the arena over them (claims
+        // were released at retire, but this PE is single-threaded).
+        for &(slab_off, doff, len) in &window {
+            self.rt
+                .heaps
+                .heap(self.pe())
+                .read(slab_off, &mut dst[doff..doff + len]);
+        }
+        self.charge_chunked(plan, pe, total);
+        self.clock.advance(self.rt.cost.staging_copy_ns(plan.bytes));
+        for (lane, bytes) in reserved {
+            self.lane_release(lanes, lane, bytes);
+        }
+        true
     }
 
     // ------------------------------------------------- AMO / inline ops --

@@ -28,7 +28,11 @@
 //!    `RingOp::Batch` doorbell submits the whole plan-group (descriptor
 //!    wire format in [`crate::ringbuf::batch`]). The raw-pointer
 //!    one-message-per-op path survives only as the oversized-payload
-//!    fallback.
+//!    fallback. Dependent-operation *chains* (ISSUE 10, `chain.enable`)
+//!    fuse put→signal / signal-gate→get sequences into one stage-stamped
+//!    doorbell the proxy dispatches trigger-by-trigger
+//!    ([`stream`]::`stream_post_chain`, priced by
+//!    [`plan::XferEngine::chain_fuse_wins`]).
 //! 3. **Complete** ([`track::CompletionTracker`]) — unified blocking/NBI
 //!    completion state per PE: the modeled completion horizon of
 //!    outstanding non-blocking transfers plus the count of fire-and-forget
@@ -57,6 +61,6 @@ pub mod track;
 
 pub use adaptive::{AdaptiveCell, AdaptiveTable, BucketKey};
 pub use calibrate::{CalibConfig, CalibrationSnapshot, Calibrator};
-pub use plan::{FanoutShape, OpKind, PlanCacheConfig, Route, TransferPlan, XferEngine};
+pub use plan::{ChainStage, FanoutShape, OpKind, PlanCacheConfig, Route, TransferPlan, XferEngine};
 pub use stream::CmdStream;
 pub use track::CompletionTracker;

@@ -191,6 +191,24 @@ fn fanout_digest(shape: &FanoutShape) -> u64 {
     fast_hash(&(&shape.per_link, shape.nic_bytes, shape.npeers)).max(1)
 }
 
+/// One stage of a triggered chain, as the planner prices it: where the
+/// stage's payload goes and how big it is. Signal-update stages are one
+/// word (`bytes = 8`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ChainStage {
+    /// IPC-table verdict for the stage's target (false ⇒ NIC route).
+    pub reachable: bool,
+    pub loc: Locality,
+    pub bytes: usize,
+}
+
+/// [`PlanKey::shape`] digest of a triggered chain's stage list. The
+/// `"chain"` tag keeps the digest domain disjoint from fan-out layouts
+/// that could otherwise share a key.
+fn chain_digest(stages: &[ChainStage]) -> u64 {
+    fast_hash(&("chain", stages)).max(1)
+}
+
 /// The memoized pure portion of a plan: stripe geometry plus zero-backlog
 /// estimates. Everything occupancy- or adaptive-dependent (engine/rail
 /// drain terms, the route decision itself, ε-exploration draws) is
@@ -587,6 +605,93 @@ impl XferEngine {
         self.est_nic_striped_ns_at(&snap, bytes, chunk, width)
     }
 
+    // -------------------------------------------------- chain planning --
+
+    /// Pure exec estimate of one chain stage: the zero-backlog striped
+    /// pipeline for the stage's route, *without* the ring round trip —
+    /// a fused chain pays one doorbell for the whole chain, so the RTT
+    /// is accounted once by the caller, not per stage.
+    fn est_stage_exec_ns_at(&self, snap: &ParamsSnapshot, s: &ChainStage) -> f64 {
+        if !s.reachable {
+            let (chunk, width) = self.rail_stripe_for_at(snap, s.bytes);
+            let n = s.bytes.max(1).div_ceil(chunk.max(1));
+            self.cost
+                .internode_striped_ns_at(&snap.params, s.bytes, true, false, width, n)
+        } else {
+            let (chunk, width) = self.stripe_for_at(snap, s.loc, s.bytes);
+            let n = s.bytes.max(1).div_ceil(chunk.max(1));
+            self.cost.ce_eff_at(&snap.params).striped_transfer_ns(
+                &self.cost.params.xe,
+                s.loc,
+                s.bytes,
+                self.cl_immediate_for_at(snap, chunk),
+                false,
+                width,
+                n,
+            )
+        }
+    }
+
+    /// The memoized chain shape: `pure_ns` is the fused estimate (ONE
+    /// ring round trip + per-stage zero-backlog exec back-to-back on the
+    /// proxy), `ls_ns` the sequential one (each stage its own doorbell).
+    /// Keyed by the stage-list digest; the same cache stamps (params
+    /// version, CL boundary, planning generation) guard staleness.
+    fn chain_shape_at(&self, snap: &ParamsSnapshot, stages: &[ChainStage]) -> CachedShape {
+        let total: usize = stages.iter().map(|s| s.bytes).sum();
+        let key = PlanKey {
+            reachable: stages.iter().all(|s| s.reachable),
+            loc: stages.first().map_or(Locality::SameNode, |s| s.loc),
+            bytes: total,
+            items: stages.len(),
+            shape: chain_digest(stages),
+        };
+        let health = self.cost.planning_generation();
+        if let Some(s) = self.cache.lookup(snap, health, &key, &self.metrics) {
+            return s;
+        }
+        let rtt = self.cost.ring_rtt_ns();
+        let mut fused = rtt;
+        let mut seq = 0.0;
+        for st in stages {
+            let exec = self.est_stage_exec_ns_at(snap, st);
+            fused += exec;
+            seq += rtt + exec;
+        }
+        let s = CachedShape {
+            chunk: total,
+            width: stages.len().max(1),
+            ls_ns: seq,
+            pure_ns: fused,
+        };
+        self.cache.insert(snap, health, key, s, &self.metrics);
+        s
+    }
+
+    /// Model a depth-d triggered chain submitted as one fused batch: one
+    /// ring round trip, then the stages execute in dependency order on
+    /// the proxy with no further host crossings (ISSUE 10).
+    pub fn est_chain_ns(&self, stages: &[ChainStage]) -> f64 {
+        self.chain_shape_at(&self.cost.model.snapshot(), stages).pure_ns
+    }
+
+    /// Model the same stages submitted sequentially: every stage its own
+    /// doorbell (one ring round trip each) — the pre-chain baseline the
+    /// fused estimate is compared against.
+    pub fn est_chain_sequential_ns(&self, stages: &[ChainStage]) -> f64 {
+        self.chain_shape_at(&self.cost.model.snapshot(), stages).ls_ns
+    }
+
+    /// Fuse-vs-flush policy point for a chain: fuse when the one-doorbell
+    /// estimate is no worse than the sequential submission. Structurally
+    /// fusing saves `d-1` round trips so this is nearly always true, but
+    /// the decision stays a model comparison (and both sides are priced
+    /// under one snapshot), not an axiom.
+    pub fn chain_fuse_wins(&self, stages: &[ChainStage]) -> bool {
+        let s = self.chain_shape_at(&self.cost.model.snapshot(), stages);
+        s.pure_ns <= s.ls_ns
+    }
+
     /// The structural (pure, learned-generation-determined) portion of a
     /// point-to-point plan: cache hit, or compute-and-fill.
     fn shape_for(
@@ -597,8 +702,13 @@ impl XferEngine {
         bytes: usize,
         items: usize,
     ) -> CachedShape {
+        // The "health" stamp is the *planning* generation: lane liveness
+        // folded with the retry strike picture, so a strike (or a
+        // forgiveness) flushes cached shapes priced under the old
+        // penalties. Strike-free runs never move it past the pure health
+        // generation — zero extra invalidations on the happy path.
         let key = PlanKey { reachable, loc, bytes, items, shape: 0 };
-        let health = self.cost.health_generation();
+        let health = self.cost.planning_generation();
         if let Some(s) = self.cache.lookup(snap, health, &key, &self.metrics) {
             return s;
         }
@@ -833,7 +943,7 @@ impl XferEngine {
             items,
             shape: fanout_digest(shape),
         };
-        let health = self.cost.health_generation();
+        let health = self.cost.planning_generation();
         let s = self.cache.lookup(&snap, health, &key, &self.metrics).unwrap_or_else(|| {
             let s = CachedShape {
                 chunk: bytes,
@@ -1790,6 +1900,53 @@ mod tests {
         let b = engine(CutoverConfig::adaptive());
         b.adaptive_load_json(&a.adaptive_save_json()).unwrap();
         assert!(!b.coll_decide(CollOp::Reduce, 1 << 20, 64, 200.0, 100.0, 0));
+    }
+
+    #[test]
+    fn chain_estimates_save_round_trips_and_memoize() {
+        let e = engine(CutoverConfig::tuned());
+        let put = ChainStage { reachable: false, loc: Locality::Remote, bytes: 64 << 10 };
+        let sig = ChainStage { reachable: false, loc: Locality::Remote, bytes: 8 };
+        for depth in 2..=4usize {
+            let stages: Vec<ChainStage> =
+                std::iter::repeat(put).take(depth - 1).chain([sig]).collect();
+            let fused = e.est_chain_ns(&stages);
+            let seq = e.est_chain_sequential_ns(&stages);
+            let rtt = e.cost.ring_rtt_ns();
+            // Fusing saves exactly the d-1 extra round trips.
+            assert!(
+                (seq - fused - (depth as f64 - 1.0) * rtt).abs() < 1e-6,
+                "depth {depth}: fused {fused} vs seq {seq} (rtt {rtt})"
+            );
+            assert!(e.chain_fuse_wins(&stages), "depth {depth} must fuse");
+        }
+        // Warm calls are cache hits that reproduce the cold estimates.
+        let stages = [put, put, sig];
+        let cold = e.est_chain_ns(&stages);
+        let hits = e.metrics.plan_cache_hits.load(Ordering::Relaxed);
+        assert_eq!(e.est_chain_ns(&stages), cold);
+        assert!(e.metrics.plan_cache_hits.load(Ordering::Relaxed) > hits);
+        // Mixed local/remote chains price each stage at its own route.
+        let local = ChainStage { reachable: true, loc: Locality::SameNode, bytes: 1 << 20 };
+        let mixed = [local, sig];
+        assert!(e.est_chain_ns(&mixed) < e.est_chain_sequential_ns(&mixed));
+    }
+
+    #[test]
+    fn strike_notes_flush_cached_plans() {
+        let cached = engine(CutoverConfig::tuned());
+        let baseline = sweep(&cached); // fill under a strike-free ledger
+        cached.cost.note_rail_strike(0, 1);
+        let oracle = engine_with_cache(
+            CutoverConfig::tuned(),
+            PlanCacheConfig { enable: false, capacity: 4096 },
+        );
+        oracle.cost.note_rail_strike(0, 1);
+        let struck = sweep(&cached);
+        assert_eq!(struck, sweep(&oracle), "strike bump served stale plans");
+        // Forgiving the lane restores the strike-free plans bit-for-bit.
+        cached.cost.clear_rail_strikes(0, 1);
+        assert_eq!(sweep(&cached), baseline, "forgiveness did not restore plans");
     }
 
     #[test]

@@ -17,8 +17,14 @@
 //!   flushes synchronously (which also pushes out any pending NBI
 //!   entries, preserving per-PE FIFO order);
 //! * **non-batchable op** — anything that still ships its own ring
-//!   message (fetching AMOs, put-signal, quiet itself) flushes the
-//!   pending stream first so the ring stays FIFO-consistent.
+//!   message (fetching AMOs, quiet itself) flushes the pending stream
+//!   first so the ring stays FIFO-consistent. Put-signal used to be on
+//!   this list; with `chain.enable` it submits as a *triggered chain*
+//!   instead (ISSUE 10) and no longer forces a flush of its own;
+//! * **triggered chain** — [`PeCtx::stream_post_chain`] ships a whole
+//!   stage-stamped dependency chain as exactly ONE `Batch` doorbell
+//!   (pending NBI entries are pushed out first so the chain's batch
+//!   contains only the chain; the proxy dispatches it stage by stage).
 //!
 //! Slab reclamation is batch-granular: every payload stage and every
 //! descriptor block is one slab claim; when a batch's completion arrives
@@ -492,6 +498,40 @@ impl PeCtx {
         }
     }
 
+    /// Submit a triggered chain (ISSUE 10): stage-stamped descriptors
+    /// that ship as exactly ONE `Batch` doorbell; the proxy dispatches
+    /// them stage by stage, each stage gated on its predecessors'
+    /// completion (and on any `WaitSignal` gate entries). Unrelated
+    /// pending NBI entries are pushed out first with their own doorbell
+    /// so the chain's batch contains only the chain — entry indices and
+    /// NACK masks then line up with chain stages. Blocking: the chain
+    /// retires before return, so a later same-PE op can never overtake
+    /// a successor stage. Counts the chain depth histogram and the
+    /// `depth − 1` doorbells fusion reclaimed vs sequential submission.
+    pub(crate) fn stream_post_chain(&self, entries: Vec<(BatchDescriptor, usize)>) {
+        debug_assert!(!entries.is_empty(), "empty chain submission");
+        debug_assert!(
+            entries.len() <= self.stream.max_depth(),
+            "chain deeper than max_batch_depth"
+        );
+        self.stream_flush_ff();
+        let depth = entries.len();
+        {
+            let mut pending = self.stream.pending.borrow_mut();
+            for (desc, slab_claims) in entries {
+                let desc = self.stream_stamp_checksum(desc);
+                pending.push(PendingEntry { desc, slab_claims });
+            }
+        }
+        self.clock.advance(self.rt.cost.staging_copy_ns(depth * DESC_SIZE));
+        self.rt.metrics.add_chain(depth);
+        Metrics::add(
+            &self.rt.metrics.chain_fused_doorbells,
+            depth.saturating_sub(1) as u64,
+        );
+        self.stream_flush_blocking();
+    }
+
     /// Wait out all in-flight batches and release their slab claims.
     /// Returns how many batches were retired (no modeled charge here —
     /// `quiet` charges one ring round trip for the drain).
@@ -533,6 +573,7 @@ impl PeCtx {
             self.rt.cost.rail_release_on(node, rail, bytes);
         }
         self.track.take_chunks();
+        self.track.take_chain_links();
         drained
     }
 }

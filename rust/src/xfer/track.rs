@@ -54,6 +54,12 @@ pub struct CompletionTracker {
     /// that completed cleanly on attempt `a` (0 = first transmission).
     /// Sized by the descriptor's 4-bit attempt field.
     attempt_hist: RefCell<[u64; 16]>,
+    /// Dependency links of triggered chains (ISSUE 10) released via the
+    /// proxy's pending-trigger table since the last drain: a depth-*d*
+    /// chain contributes `d − 1` links. Chains retire blocking, so the
+    /// ledger is a released-work count, not an outstanding one — `quiet`
+    /// still drains it so per-launch accounting cannot leak.
+    chain_links: Cell<u64>,
 }
 
 impl CompletionTracker {
@@ -169,6 +175,22 @@ impl CompletionTracker {
     pub fn attempt_hist(&self) -> [u64; 16] {
         *self.attempt_hist.borrow()
     }
+
+    /// Record `n` dependency links of a submitted triggered chain
+    /// (depth − 1 for a depth-*d* chain).
+    pub fn note_chain_links(&self, n: u64) {
+        self.chain_links.set(self.chain_links.get() + n);
+    }
+
+    /// Chain links released since the last drain.
+    pub fn chain_links(&self) -> u64 {
+        self.chain_links.get()
+    }
+
+    /// Drain the chain-link ledger (quiet / launch exit).
+    pub fn take_chain_links(&self) -> u64 {
+        self.chain_links.replace(0)
+    }
 }
 
 #[cfg(test)]
@@ -237,6 +259,17 @@ mod tests {
         let h = t.attempt_hist();
         assert_eq!((h[0], h[2], h[15]), (2, 1, 1));
         assert_eq!(h.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn chain_link_ledger_counts_and_drains() {
+        let t = CompletionTracker::new();
+        assert_eq!(t.chain_links(), 0);
+        t.note_chain_links(3); // a depth-4 chain
+        t.note_chain_links(1); // a depth-2 chain
+        assert_eq!(t.chain_links(), 4);
+        assert_eq!(t.take_chain_links(), 4);
+        assert_eq!(t.chain_links(), 0);
     }
 
     #[test]

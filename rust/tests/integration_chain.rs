@@ -1,0 +1,242 @@
+//! Integration: triggered operation chains (ISSUE 10) — fused
+//! put-signal reclaims doorbells with payloads intact, a chain replayed
+//! around a dropped middle chunk never fires its successor early, the
+//! offloaded signal-gated get matches the eager spelling bit-for-bit,
+//! and a multi-stage `ChainBuilder` program fuses into one submission.
+//!
+//! Everything here runs on the simulated machine alone — unlike
+//! `integration_runtime.rs` / `integration_train.rs`, no `make
+//! artifacts` step is required and nothing is skipped.
+
+use rishmem::ishmem::signal::SignalOp;
+use rishmem::ishmem::{Cmp, CutoverConfig};
+use rishmem::{Ishmem, IshmemConfig, Topology};
+
+/// One node, two GPUs, two tiles: PE 0 → PE 2 is cross-GPU same-node,
+/// the proxied copy-engine route once the cutover is pinned.
+fn chain_cfg(enable: bool) -> IshmemConfig {
+    let mut cfg = IshmemConfig {
+        topology: Topology::new(1, 2, 2),
+        heap_bytes: 48 << 20,
+        cutover: CutoverConfig::always(),
+        ..Default::default()
+    };
+    cfg.chain.enable = enable;
+    cfg
+}
+
+/// Deterministic per-round payload so the consumer can verify exactly
+/// which round's bytes it is looking at.
+fn round_pattern(round: usize, len: usize) -> Vec<u8> {
+    (0..len)
+        .map(|i| (i as u8).wrapping_mul(31).wrapping_add(round as u8 + 1))
+        .collect()
+}
+
+#[test]
+fn fused_put_signal_reclaims_doorbells_and_stays_correct() {
+    // The same 8-op put-signal workload on a chain-enabled and a default
+    // machine: fused chains must spend strictly fewer host crossings
+    // (one doorbell per chain instead of a blocking put flush plus a
+    // separate signal update), count exactly one chain and one reclaimed
+    // doorbell per op, and land bit-identical payloads.
+    const ROUNDS: usize = 8;
+    const LEN: usize = 32 << 10;
+    let run = |enable: bool| {
+        let ish = Ishmem::new(chain_cfg(enable)).unwrap();
+        let out = ish.launch(|ctx| {
+            let inbox = ctx.calloc::<u8>(ROUNDS * LEN);
+            let sig = ctx.calloc::<u64>(1);
+            ctx.barrier_all();
+            if ctx.pe() == 0 {
+                for r in 0..ROUNDS {
+                    let pat = round_pattern(r, LEN);
+                    ctx.put_then_signal(
+                        inbox.slice(r * LEN, LEN),
+                        &pat,
+                        sig,
+                        1,
+                        SignalOp::Add,
+                        2,
+                    );
+                }
+            }
+            ctx.barrier_all();
+            if ctx.pe() == 2 {
+                assert_eq!(ctx.signal_fetch(sig), ROUNDS as u64, "signal adds lost");
+                Some(ctx.read_local_vec(inbox))
+            } else {
+                None
+            }
+        });
+        let snap = ish.metrics.snapshot();
+        ish.shutdown();
+        let landed = out.into_iter().flatten().next().expect("PE 2 result");
+        (snap, landed)
+    };
+
+    let (on, landed_on) = run(true);
+    let (off, landed_off) = run(false);
+
+    for r in 0..ROUNDS {
+        assert_eq!(
+            landed_on[r * LEN..(r + 1) * LEN],
+            round_pattern(r, LEN)[..],
+            "fused round {r} corrupted the payload"
+        );
+    }
+    assert_eq!(landed_on, landed_off, "fused and unfused payloads diverged");
+
+    // Each 32 KiB put is one chunk, so every chain is depth 2 (payload +
+    // triggered signal): one submission and one reclaimed doorbell per op.
+    assert_eq!(on.chain_submitted, ROUNDS as u64, "{on:?}");
+    assert_eq!(on.chain_fused_doorbells, ROUNDS as u64, "{on:?}");
+    assert!(on.chain_triggered >= ROUNDS as u64, "{on:?}");
+    assert_eq!((off.chain_submitted, off.chain_fused_doorbells), (0, 0), "{off:?}");
+    assert!(
+        on.ring_messages < off.ring_messages,
+        "fusion did not reduce host crossings: on={} off={}",
+        on.ring_messages,
+        off.ring_messages
+    );
+}
+
+#[test]
+fn chain_replay_with_dropped_chunk_never_fires_signal_early() {
+    // A scripted transient plane drops roughly every fifth data chunk
+    // while chained put-signals stream 2 MiB striped payloads. A dropped
+    // chunk NACKs its stage, which must suppress the stage-1 signal AMO
+    // until the replay re-lands the whole failed suffix — so whenever the
+    // consumer observes the signal, that round's payload is already
+    // bit-intact. Consumer-side verification happens under the signal,
+    // not after a barrier, so an early-fired successor would be caught.
+    const ROUNDS: usize = 4;
+    const LEN: usize = 2 << 20;
+    let mut cfg = chain_cfg(true);
+    // 2 MiB stripes into up to `stripe_max_engines` (4) chunks → depth 5
+    // with the triggered signal; the default cap of 4 would refuse to
+    // fuse exactly the chains this test is about.
+    cfg.chain.max_depth = 8;
+    cfg.retry.enable = true;
+    cfg.fault.enable = true;
+    cfg.fault.transients = vec![rishmem::sim::TransientEvent::drop_chunk(1, u64::MAX, 5)];
+    let ish = Ishmem::new(cfg).unwrap();
+    ish.launch(|ctx| {
+        let inbox = ctx.calloc::<u8>(ROUNDS * LEN);
+        let sig = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            for r in 0..ROUNDS {
+                let pat = round_pattern(r, LEN);
+                ctx.put_then_signal(inbox.slice(r * LEN, LEN), &pat, sig, 1, SignalOp::Add, 2);
+            }
+        }
+        if ctx.pe() == 2 {
+            for r in 0..ROUNDS {
+                ctx.wait_until::<u64>(sig, Cmp::Ge, r as u64 + 1);
+                let got = ctx.read_local_vec(inbox);
+                assert_eq!(
+                    got[r * LEN..(r + 1) * LEN],
+                    round_pattern(r, LEN)[..],
+                    "signal for round {r} fired before its payload replayed"
+                );
+            }
+        }
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+
+    assert!(snap.chain_submitted >= ROUNDS as u64, "{snap:?}");
+    assert!(
+        snap.fault_dropped_chunks >= 1,
+        "the transient plane never hit a chained chunk: {snap:?}"
+    );
+}
+
+#[test]
+fn signal_then_get_offloaded_matches_eager_spelling() {
+    // Producer publishes a block locally and signals the consumer with a
+    // fused put-signal; the consumer's signal_then_get offloads the wait
+    // (a parked WaitSignal gate the proxy resumes) plus the get into one
+    // doorbell. The pulled bytes must equal both the produced pattern and
+    // the eager wait-then-get spelling on a default machine.
+    const LEN: usize = 256 << 10;
+    let run = |enable: bool| {
+        let ish = Ishmem::new(chain_cfg(enable)).unwrap();
+        let out = ish.launch(|ctx| {
+            let data = ctx.calloc::<u8>(LEN);
+            let hdr = ctx.calloc::<u64>(1);
+            let sig = ctx.calloc::<u64>(1);
+            ctx.barrier_all();
+            if ctx.pe() == 0 {
+                let pat = round_pattern(0, LEN);
+                ctx.write_local(data, &pat);
+                ctx.put_then_signal(hdr, &[LEN as u64], sig, 1, SignalOp::Set, 2);
+            }
+            let r = if ctx.pe() == 2 {
+                let mut pulled = vec![0u8; LEN];
+                ctx.signal_then_get(sig, 1, &mut pulled, data, 0);
+                Some(pulled)
+            } else {
+                None
+            };
+            ctx.barrier_all();
+            r
+        });
+        let snap = ish.metrics.snapshot();
+        ish.shutdown();
+        (snap, out.into_iter().flatten().next().expect("PE 2 result"))
+    };
+
+    let (on, pulled_on) = run(true);
+    let (_, pulled_off) = run(false);
+    assert_eq!(pulled_on, round_pattern(0, LEN), "offloaded get pulled wrong bytes");
+    assert_eq!(pulled_on, pulled_off, "offloaded and eager spellings diverged");
+    // Both the producer's put-signal and the consumer's gated get fused.
+    assert!(on.chain_submitted >= 2, "{on:?}");
+    assert!(on.chain_triggered >= 2, "{on:?}");
+}
+
+#[test]
+fn chain_builder_multi_stage_program_fuses_once() {
+    // A recorded three-stage program — two ordered puts then a signal —
+    // submits as ONE chain: one submission counted, depth-1 reclaimed
+    // doorbells, and the consumer observes both blocks under the signal.
+    const LEN: usize = 8 << 10;
+    let ish = Ishmem::new(chain_cfg(true)).unwrap();
+    ish.launch(|ctx| {
+        let inbox = ctx.calloc::<u8>(2 * LEN);
+        let sig = ctx.calloc::<u64>(1);
+        ctx.barrier_all();
+        if ctx.pe() == 0 {
+            let a = round_pattern(0, LEN);
+            let b = round_pattern(1, LEN);
+            ctx.chain()
+                .put(inbox.slice(0, LEN), &a, 2)
+                .then()
+                .put(inbox.slice(LEN, LEN), &b, 2)
+                .then()
+                .signal(sig, 1, SignalOp::Set, 2)
+                .submit();
+        }
+        if ctx.pe() == 2 {
+            ctx.wait_until::<u64>(sig, Cmp::Ge, 1);
+            let got = ctx.read_local_vec(inbox);
+            assert_eq!(got[..LEN], round_pattern(0, LEN)[..], "stage-0 block");
+            assert_eq!(got[LEN..], round_pattern(1, LEN)[..], "stage-1 block");
+        }
+        ctx.barrier_all();
+    });
+    let snap = ish.metrics.snapshot();
+    ish.shutdown();
+
+    assert_eq!(snap.chain_submitted, 1, "{snap:?}");
+    assert_eq!(snap.chain_fused_doorbells, 2, "depth-3 chain reclaims 2: {snap:?}");
+    assert!(snap.chain_triggered >= 2, "{snap:?}");
+    assert_eq!(
+        snap.chain_depth_hist.iter().sum::<u64>(),
+        snap.chain_submitted,
+        "{snap:?}"
+    );
+}

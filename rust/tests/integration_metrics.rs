@@ -176,6 +176,86 @@ fn stripe_and_engine_metrics_with_json_export() {
 }
 
 #[test]
+fn chain_metrics_populated_and_disabled_counts_nothing() {
+    // Triggered chains (ISSUE 10): with `chain.enable` every fused
+    // put-signal counts one chain submission, its dependent stage is
+    // released host-side (`chain_triggered`), and the reclaimed doorbells
+    // are ledgered; the depth histogram accounts for every submitted
+    // chain and the text report + `rishmem metrics --json` surface all of
+    // it. The default (disabled) machine moves the same traffic with
+    // every chain counter pinned at zero.
+    use rishmem::ishmem::signal::SignalOp;
+    let run = |enable: bool| {
+        let mut cfg = IshmemConfig {
+            topology: Topology::new(1, 2, 2),
+            heap_bytes: 48 << 20,
+            cutover: CutoverConfig::always(),
+            ..Default::default()
+        };
+        cfg.chain.enable = enable;
+        let ish = Ishmem::new(cfg).unwrap();
+        ish.launch(|ctx| {
+            let inbox = ctx.calloc::<u8>(64 << 10);
+            let sig = ctx.calloc::<u64>(1);
+            ctx.barrier_all();
+            if ctx.pe() == 0 {
+                let payload = vec![9u8; 32 << 10];
+                for i in 0..4u64 {
+                    ctx.put_then_signal(inbox, &payload, sig, i + 1, SignalOp::Set, 2);
+                }
+            }
+            ctx.barrier_all();
+        });
+        let snap = ish.metrics.snapshot();
+        ish.shutdown();
+        snap
+    };
+
+    let on = run(true);
+    assert!(on.chain_submitted >= 4, "chains never fused: {on:?}");
+    assert!(on.chain_triggered >= 4, "successors never released: {on:?}");
+    assert!(on.chain_fused_doorbells >= 4, "no doorbells reclaimed: {on:?}");
+    assert_eq!(
+        on.chain_depth_hist.iter().sum::<u64>(),
+        on.chain_submitted,
+        "depth histogram must account for every chain: {on:?}"
+    );
+    let report = on.report();
+    assert!(report.contains("chain: submitted="), "{report}");
+    let j = Json::parse(&on.to_json()).unwrap();
+    assert_eq!(
+        j.get("chain_submitted").unwrap().as_usize().unwrap() as u64,
+        on.chain_submitted
+    );
+    assert_eq!(
+        j.get("chain_triggered").unwrap().as_usize().unwrap() as u64,
+        on.chain_triggered
+    );
+    assert_eq!(
+        j.get("chain_fused_doorbells").unwrap().as_usize().unwrap() as u64,
+        on.chain_fused_doorbells
+    );
+    assert_eq!(
+        j.get("chain_depth_hist").unwrap().as_arr().unwrap().len(),
+        on.chain_depth_hist.len()
+    );
+
+    let off = run(false);
+    assert!(off.puts >= 4, "disabled workload did not run: {off:?}");
+    assert_eq!(
+        (
+            off.chain_submitted,
+            off.chain_triggered,
+            off.chain_fused_doorbells,
+            off.chain_flushed_unfusable,
+        ),
+        (0, 0, 0, 0),
+        "disabled chains counted: {off:?}"
+    );
+    assert_eq!(off.chain_depth_hist.iter().sum::<u64>(), 0, "{off:?}");
+}
+
+#[test]
 fn plan_cache_counters_surface_in_text_and_json() {
     // Repeated same-shape puts hit the plan cache; the counters surface
     // in the `rishmem metrics` text report and the --json export. A

@@ -14,8 +14,9 @@ use rishmem::util::rng::Rng;
 use rishmem::xfer::{AdaptiveTable, BucketKey, OpKind, Route, XferEngine};
 use rishmem::{run_npes, run_spmd, IshmemConfig, Locality, ReduceOp, TeamId, Topology};
 
-/// Every `RingOp`, including the batched-submission doorbell.
-const ALL_RING_OPS: [RingOp; 10] = [
+/// Every `RingOp`, including the batched-submission doorbell and the
+/// batch-only `WaitSignal` trigger gate (ISSUE 10).
+const ALL_RING_OPS: [RingOp; 11] = [
     RingOp::Nop,
     RingOp::Put,
     RingOp::Get,
@@ -26,6 +27,7 @@ const ALL_RING_OPS: [RingOp; 10] = [
     RingOp::Barrier,
     RingOp::Batch,
     RingOp::Shutdown,
+    RingOp::WaitSignal,
 ];
 
 #[test]
@@ -725,6 +727,134 @@ fn prop_retry_disabled_is_bit_for_bit_baseline() {
         assert_eq!(
             baseline, with_retry,
             "retry.enable changed a clean-lane run ({len}B): modeled clocks or payloads drifted"
+        );
+    });
+}
+
+#[test]
+fn prop_chain_stage_fields_roundtrip() {
+    use rishmem::ringbuf::DESC_FLAG_TRIGGERED;
+    // Exhaustive over the whole stage byte on every chain-capable entry
+    // shape (ISSUE 10): the stage must survive the wire codec, never
+    // disturb the fields it shares packing space with, and read back 0
+    // the moment the triggered flag is absent.
+    for stage in 0..=255u8 {
+        // Put: stage rides dtype, composed under chunk continuation,
+        // transfer bytes, checksum, and attempt stamping.
+        let p = BatchDescriptor::put(3, 4096, 8192, 1 << 20)
+            .with_chunk(5, 9, 6)
+            .with_transfer_bytes(9 << 20)
+            .with_stage(stage)
+            .with_checksum(0xBEEF)
+            .with_attempt(7);
+        assert!(p.is_triggered());
+        assert_eq!(p.chain_stage(), stage);
+        assert_eq!(
+            (p.chunk_index(), p.chunk_count(), p.engine_hint()),
+            (5, 9, 6),
+            "stage {stage} disturbed continuation fields"
+        );
+        assert_eq!(p.checksum(), Some(0xBEEF));
+        assert_eq!(p.attempt(), 7);
+        assert_eq!(p.transfer_bytes(), 9 << 20);
+        assert_eq!(BatchDescriptor::from_bytes(&p.to_bytes()), Some(p));
+        // Get: same dtype packing.
+        let g = BatchDescriptor::get(1, 64, 128, 256).with_stage(stage);
+        assert_eq!((g.is_triggered(), g.chain_stage()), (true, stage));
+        assert_eq!(BatchDescriptor::from_bytes(&g.to_bytes()), Some(g));
+        // Amo: stage rides src_off's low byte (the amo builder zeroes
+        // src_off); operand and comparand are untouched.
+        let a = BatchDescriptor::amo(2, 512, 7, 2, u64::MAX, 0xABCD).with_stage(stage);
+        assert_eq!((a.is_triggered(), a.chain_stage()), (true, stage));
+        assert_eq!((a.inline_val, a.inline_val2), (u64::MAX, 0xABCD));
+        assert_eq!(BatchDescriptor::from_bytes(&a.to_bytes()), Some(a));
+        // WaitSignal gate: dtype packing, watch target untouched.
+        let w = BatchDescriptor::wait_signal(4, 2048, u64::MAX - 1).with_stage(stage);
+        assert_eq!((w.is_triggered(), w.chain_stage()), (true, stage));
+        assert_eq!(w.inline_val, u64::MAX - 1);
+        assert_eq!(BatchDescriptor::from_bytes(&w.to_bytes()), Some(w));
+    }
+    // Without the flag there is no stage, whatever the dtype residue:
+    // a batch of unstamped entries is one all-stage-0 dispatch group.
+    let bare = BatchDescriptor::put(1, 64, 128, 256);
+    assert!(!bare.is_triggered());
+    assert_eq!(bare.flags & DESC_FLAG_TRIGGERED, 0);
+    assert_eq!(bare.chain_stage(), 0);
+    // Whole-block decode of a stage-stamped chain preserves stage order.
+    let descs: Vec<BatchDescriptor> = (0..6u8)
+        .map(|s| BatchDescriptor::put(0, s as usize * 4096, 0, 4096).with_stage(s / 2))
+        .collect();
+    let block = BatchDescriptor::encode_block(&descs);
+    let back = BatchDescriptor::decode_block(&block, descs.len()).unwrap();
+    assert_eq!(back, descs);
+    assert!(back.windows(2).all(|w| w[0].chain_stage() <= w[1].chain_stage()));
+}
+
+#[test]
+fn prop_chain_disabled_is_bit_for_bit_baseline() {
+    use rishmem::ishmem::signal::SignalOp;
+    use rishmem::ishmem::Cmp;
+    // `chain.enable = false` (the default) must make every chain API an
+    // exact spelling of the chain-free program: same modeled clocks, same
+    // payloads, same machine history — put_then_signal vs put_signal,
+    // signal_then_get vs wait_until + get, and the builder ladder vs its
+    // hand-written sequence.
+    prop_check("disabled chain APIs are the chain-free program", 5, |rng| {
+        let len = rng.range(1, 200_000) as usize;
+        let seed = rng.next_u64();
+        let run = |via_chain_api: bool| {
+            let cfg = IshmemConfig {
+                topology: Topology::new(1, 2, 2),
+                heap_bytes: 48 << 20,
+                ..Default::default()
+            };
+            run_spmd(cfg, false, move |ctx| {
+                let data = ctx.calloc::<u8>(len);
+                let inbox = ctx.calloc::<u8>(len);
+                let sig = ctx.calloc::<u64>(1);
+                let mut payload = vec![0u8; len];
+                Rng::new(seed ^ ctx.pe() as u64).fill_bytes(&mut payload);
+                ctx.write_local(data, &payload);
+                ctx.barrier_all();
+                let partner = ctx.pe() ^ 1;
+                // Producer half: put + signal into the partner's inbox.
+                if via_chain_api {
+                    ctx.put_then_signal(inbox, &payload, sig, 1, SignalOp::Set, partner);
+                } else {
+                    ctx.put_signal(inbox, &payload, sig, 1, SignalOp::Set, partner);
+                }
+                // Consumer half: gate on my signal word, then pull the
+                // partner's `data` block.
+                let mut pulled = vec![0u8; len];
+                if via_chain_api {
+                    ctx.signal_then_get(sig, 1, &mut pulled, data, partner);
+                } else {
+                    ctx.wait_until::<u64>(sig, Cmp::Ge, 1);
+                    ctx.get(&mut pulled, data, partner);
+                }
+                ctx.barrier_all();
+                // Builder ladder vs its hand-written spelling.
+                if via_chain_api {
+                    ctx.chain()
+                        .put(data, &pulled, partner)
+                        .then()
+                        .signal(sig, 1, SignalOp::Add, partner)
+                        .submit();
+                } else {
+                    ctx.put(data, &pulled, partner);
+                    ctx.atomic_add::<u64>(sig, 1, partner);
+                }
+                ctx.wait_until::<u64>(sig, Cmp::Ge, 2);
+                ctx.barrier_all();
+                (ctx.clock.now_ns().to_bits(), pulled, ctx.read_local_vec(data))
+            })
+            .unwrap()
+        };
+        let manual = run(false);
+        let api = run(true);
+        assert_eq!(
+            manual, api,
+            "disabled chain APIs drifted from the chain-free program ({len}B)"
         );
     });
 }
